@@ -1,0 +1,116 @@
+//! Edge AR/VR scenario (paper §1): a VR headset runs hand-pose
+//! estimation, eye tracking and a voice-command RNN *concurrently* on one
+//! small (64×64) systolic array — the multi-DNN edge workload that
+//! motivates sharing a single accelerator.
+//!
+//! ```bash
+//! cargo run --release --example edge_arvr
+//! ```
+
+use mtsa::coordinator::baseline::SequentialBaseline;
+use mtsa::coordinator::{DynamicScheduler, SchedulerConfig};
+use mtsa::energy::components::{EnergyModel, Precision};
+use mtsa::report;
+use mtsa::sim::buffers::BufferConfig;
+use mtsa::sim::dataflow::ArrayGeometry;
+use mtsa::util::tablefmt::Table;
+use mtsa::workloads::dnng::{Dnn, Layer, WorkloadPool};
+use mtsa::workloads::shapes::{LayerKind, LayerShape};
+
+/// Hand-pose CNN: small MobileNet-ish stack over a 96x96 crop.
+fn hand_pose() -> Dnn {
+    let mut layers = vec![Layer::new(
+        "stem",
+        LayerKind::Conv,
+        LayerShape::conv(1, 3, 96, 96, 16, 3, 3, 2, 1),
+    )];
+    let mut c = 16;
+    let mut sp = 48;
+    for i in 0..4 {
+        let m = (c * 2).min(128);
+        layers.push(Layer::new(
+            &format!("conv{i}a"),
+            LayerKind::Conv,
+            LayerShape::conv(1, c, sp, sp, m, 3, 3, if i % 2 == 0 { 2 } else { 1 }, 1),
+        ));
+        if i % 2 == 0 {
+            sp /= 2;
+        }
+        c = m;
+    }
+    layers.push(Layer::new("kp_head", LayerKind::Fc, LayerShape::fc(1, c * sp * sp, 42)));
+    Dnn::chain("hand-pose", layers)
+}
+
+/// Eye tracker: tiny CNN over two 32x32 eye crops (batch 2).
+fn eye_tracker() -> Dnn {
+    Dnn::chain(
+        "eye-track",
+        vec![
+            Layer::new("conv1", LayerKind::Conv, LayerShape::conv(2, 1, 32, 32, 16, 5, 5, 2, 2)),
+            Layer::new("conv2", LayerKind::Conv, LayerShape::conv(2, 16, 16, 16, 32, 3, 3, 2, 1)),
+            Layer::new("gaze_fc", LayerKind::Fc, LayerShape::fc(2, 32 * 8 * 8, 4)),
+        ],
+    )
+}
+
+/// Voice-command GRU over a 50-frame window.
+fn voice_rnn() -> Dnn {
+    Dnn::chain(
+        "voice-cmd",
+        vec![
+            Layer::new("gru1", LayerKind::Recurrent, LayerShape::recurrent(50, 1, 40, 64, 3)),
+            Layer::new("gru2", LayerKind::Recurrent, LayerShape::recurrent(50, 1, 64, 64, 3)),
+            Layer::new("cmd_fc", LayerKind::Fc, LayerShape::fc(1, 64, 20)),
+        ],
+    )
+}
+
+fn main() {
+    // Edge-sized accelerator: 64x64 PEs, 2 MiB SRAM, int8.
+    let geom = ArrayGeometry::new(64, 64);
+    let buffers = BufferConfig {
+        weight_bytes: 512 << 10,
+        ifmap_bytes: 1024 << 10,
+        ofmap_bytes: 512 << 10,
+        dtype_bytes: 1,
+    };
+    let cfg = SchedulerConfig {
+        geom,
+        buffers,
+        min_width: 8,
+        ..SchedulerConfig::default()
+    };
+    let model = EnergyModel::build(geom, &buffers, Precision::Int8);
+
+    // One frame of AR/VR work: all three DNNs fire together at vsync.
+    let pool = WorkloadPool::new("arvr-frame", vec![hand_pose(), eye_tracker(), voice_rnn()]);
+
+    let dynamic = DynamicScheduler::new(cfg.clone()).run(&pool);
+    let sequential = SequentialBaseline::new(cfg.clone()).run(&pool);
+
+    println!("AR/VR frame on a 64x64 edge array ({} layers total)\n", pool.total_layers());
+    let mut t = Table::new(&["task", "sequential done@", "concurrent done@", "latency saving"]);
+    for (name, seq_done) in &sequential.completion {
+        t.row(&[
+            name.clone(),
+            seq_done.to_string(),
+            dynamic.completion[name].to_string(),
+            format!("{:+.1}%", report::saving_pct(*seq_done as f64, dynamic.completion[name] as f64)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let e_dyn = report::total_energy(&dynamic, &model);
+    let e_seq = report::total_energy(&sequential, &model);
+    println!("frame makespan: {} -> {} cycles ({:+.1}%)",
+        sequential.makespan, dynamic.makespan,
+        report::saving_pct(sequential.makespan as f64, dynamic.makespan as f64));
+    println!("frame energy:   {:.3} -> {:.3} mJ ({:+.1}%)",
+        e_seq.total_j() * 1e3, e_dyn.total_j() * 1e3,
+        report::saving_pct(e_seq.total_j(), e_dyn.total_j()));
+    // At 0.7 GHz, report the frame budget implications.
+    let ms = |cycles: u64| cycles as f64 / 0.7e9 * 1e3;
+    println!("at 0.7 GHz: {:.2} ms -> {:.2} ms (90 Hz budget is 11.1 ms)",
+        ms(sequential.makespan), ms(dynamic.makespan));
+}

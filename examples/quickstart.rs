@@ -1,0 +1,69 @@
+//! Quickstart: share one 128×128 weight-stationary array between two DNNs
+//! with the dynamic partitioning coordinator, and compare against the
+//! single-tenant sequential baseline.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use mtsa::coordinator::baseline::SequentialBaseline;
+use mtsa::coordinator::{DynamicScheduler, SchedulerConfig};
+use mtsa::energy::EnergyModel;
+use mtsa::report;
+use mtsa::workloads::dnng::{Dnn, Layer, WorkloadPool};
+use mtsa::workloads::shapes::{LayerKind, LayerShape};
+
+fn main() {
+    // 1. Describe the tenants as DNN graphs (paper §2.1).  Here: a small
+    //    CNN and a narrow recommendation MLP that arrives 3k cycles in.
+    let cnn = Dnn::chain(
+        "mini-cnn",
+        vec![
+            Layer::new("conv1", LayerKind::Conv, LayerShape::conv(1, 3, 64, 64, 32, 3, 3, 1, 1)),
+            Layer::new("conv2", LayerKind::Conv, LayerShape::conv(1, 32, 32, 32, 64, 3, 3, 2, 1)),
+            Layer::new("fc", LayerKind::Fc, LayerShape::fc(1, 64 * 16 * 16, 10)),
+        ],
+    );
+    let mlp = Dnn::chain(
+        "reco-mlp",
+        vec![
+            Layer::new("mlp1", LayerKind::Fc, LayerShape::fc(64, 128, 64)),
+            Layer::new("mlp2", LayerKind::Fc, LayerShape::fc(64, 64, 32)),
+            Layer::new("score", LayerKind::Fc, LayerShape::fc(64, 32, 1)),
+        ],
+    )
+    .arriving_at(3_000);
+    let pool = WorkloadPool::new("quickstart", vec![cnn, mlp]);
+
+    // 2. Run both schedulers on a TPU-like 128x128 config.
+    let cfg = SchedulerConfig::default();
+    let dynamic = DynamicScheduler::new(cfg.clone()).run(&pool);
+    let sequential = SequentialBaseline::new(cfg.clone()).run(&pool);
+
+    // 3. Inspect the dispatch log: which partition every layer ran on.
+    println!("dynamic dispatch log:");
+    for d in &dynamic.dispatches {
+        println!(
+            "  {:9} {:6}  cols [{:3}..{:3})  t {:>7}..{:>7}",
+            d.dnn_name,
+            d.layer_name,
+            d.slice.col0,
+            d.slice.end(),
+            d.t_start,
+            d.t_end
+        );
+    }
+
+    // 4. Headline comparison.
+    let model = EnergyModel::default_128();
+    let e_dyn = report::total_energy(&dynamic, &model);
+    let e_seq = report::total_energy(&sequential, &model);
+    println!("\nmakespan: sequential {}  dynamic {}  ({:+.1}%)",
+        sequential.makespan, dynamic.makespan,
+        report::saving_pct(sequential.makespan as f64, dynamic.makespan as f64));
+    println!("energy:   sequential {:.3} mJ  dynamic {:.3} mJ  ({:+.1}%)",
+        e_seq.total_j() * 1e3, e_dyn.total_j() * 1e3,
+        report::saving_pct(e_seq.total_j(), e_dyn.total_j()));
+    println!("reco-mlp completion: sequential {}  dynamic {}",
+        sequential.completion["reco-mlp"], dynamic.completion["reco-mlp"]);
+}

@@ -1,0 +1,88 @@
+"""AOT lowering: jax → HLO text artifacts for the rust PJRT runtime.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per variant in ``model.aot_variants()`` plus a
+``manifest.json`` describing the I/O signature of each artifact, which
+``rust/src/runtime`` parses to type-check calls.
+
+Interchange format is **HLO text**, not a serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  Lowered with ``return_tuple=True``;
+the rust side unwraps with ``to_tuple1()``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(name, fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", help="lower a single variant by name")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    variants = model.aot_variants()
+    if args.only:
+        variants = {args.only: variants[args.only]}
+
+    manifest = {
+        "schema": 1,
+        "array": {"s": model.ARRAY_S, "k": model.ARRAY_K, "c": model.ARRAY_C},
+        "artifacts": [],
+    }
+    for name, (fn, specs) in sorted(variants.items()):
+        text = lower_variant(name, fn, specs)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "sha256_16": digest,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+                ],
+                "num_outputs": 1,
+            }
+        )
+        print(f"  lowered {name:<16} -> {fname} ({len(text)} chars)")
+
+    if not args.only:
+        with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+        print(f"wrote {args.outdir}/manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,203 @@
+"""L1 — Partitioned weight-stationary matmul as a Pallas kernel.
+
+This is the compute hot-spot of the paper (Reshadi & Gregg, PDP'23): a single
+weight-stationary systolic array whose columns are *vertically partitioned*
+among P concurrent tenants.  The packed weight matrix ``w[K, C]`` holds every
+tenant's weight tile in its own contiguous column range; ``col_tenant[C]``
+says which tenant owns each column.  Each tenant streams its own IFMap rows
+``x[p, S, K]`` across the *whole* array (the feed wire passes through foreign
+partitions), and the per-PE ``Mul_En`` tri-state gate of Fig. 7 ensures a
+column only accumulates products of its owner's stream.
+
+Kernel semantics (the Mul_En gate written as a mask):
+
+    y[s, c] = acc[s, c] + sum_k x[col_tenant[c], s, k] * w[k, c]
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the paper's load/feed/drain
+SRAM buffers become VMEM blocks staged by BlockSpec; the weight tile is held
+in VMEM across the whole S-stream loop (weight-stationary by construction);
+the tri-state gate becomes a per-column tenant mask applied as a vector
+select on the MXU product — no gather, no scatter.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and correctness (vs ``ref.py``) is the build-time contract.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_up(n: int, b: int) -> int:
+    return ((n + b - 1) // b) * b
+
+
+def _pws_kernel(x_ref, w_ref, mask_ref, acc_ref, o_ref, *, num_partitions, k_blocks):
+    """One (S-block, C-block, K-block) grid step.
+
+    x_ref    [P, Sb, Kb]  every tenant's feed-stream block (same K range)
+    w_ref    [Kb, Cb]     packed stationary weight block
+    mask_ref [P, Cb]      Mul_En plane: 1.0 where tenant p owns the column
+    acc_ref  [Sb, Cb]     incoming partial sums (drain-chain input)
+    o_ref    [Sb, Cb]     output block, accumulated across the K grid dim
+    """
+    k = pl.program_id(2)
+
+    # First K step seeds the output with the incoming partial sums; later
+    # steps accumulate in place (the output block index map is constant in k,
+    # so the block stays resident in VMEM across the reduction).
+    @pl.when(k == 0)
+    def _seed():
+        o_ref[...] = acc_ref[...]
+
+    w = w_ref[...]
+    # Static unroll over partitions: P is tiny (<= 16).  Each step is an
+    # MXU-shaped matmul followed by the Mul_En column select.
+    for p in range(num_partitions):
+        xp = x_ref[p]
+        prod = jnp.dot(xp, w, preferred_element_type=jnp.float32)
+        o_ref[...] += prod * mask_ref[p][None, :]
+
+
+def partitioned_ws_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    mask: jax.Array,
+    acc: jax.Array,
+    *,
+    block_s: int = 128,
+    block_c: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Partitioned weight-stationary GEMM.
+
+    Args:
+      x:    [P, S, K] float32 — per-tenant feed streams.
+      w:    [K, C]    float32 — packed stationary weights (all partitions).
+      mask: [P, C]    float32 — one-hot Mul_En plane (mask[p, c] = 1.0 iff
+            column c belongs to tenant p).  Precomputed at L2 from the
+            integer ``col_tenant`` map so the kernel does no integer compare.
+      acc:  [S, C]    float32 — incoming partial sums (zeros for the first
+            K-fold; lets the rust coordinator chain folds).
+
+    Returns:
+      y: [S, C] float32 with y = acc + sum_p (x[p] @ w) * mask[p].
+    """
+    num_p, s, k = x.shape
+    k2, c = w.shape
+    assert k2 == k, f"K mismatch: x has {k}, w has {k2}"
+    assert mask.shape == (num_p, c), f"mask shape {mask.shape} != {(num_p, c)}"
+    assert acc.shape == (s, c), f"acc shape {acc.shape} != {(s, c)}"
+
+    block_s = min(block_s, s)
+    block_c = min(block_c, c)
+    block_k = min(block_k, k)
+
+    # Pad every operand up to a block multiple: interpret-mode Pallas fills
+    # out-of-bounds block reads with NaN (by design, to surface exactly this
+    # hazard), and a NaN entering the MXU product poisons valid rows.  The
+    # physical array does the same thing — ragged folds are zero-padded into
+    # the load registers (see sim::dataflow's ragged-fold handling).
+    sp, cp, kp = (_round_up(s, block_s), _round_up(c, block_c), _round_up(k, block_k))
+    if (sp, cp, kp) != (s, c, k):
+        x = jnp.pad(x, ((0, 0), (0, sp - s), (0, kp - k)))
+        w = jnp.pad(w, ((0, kp - k), (0, cp - c)))
+        mask = jnp.pad(mask, ((0, 0), (0, cp - c)))
+        acc = jnp.pad(acc, ((0, sp - s), (0, cp - c)))
+    grid = (pl.cdiv(sp, block_s), pl.cdiv(cp, block_c), pl.cdiv(kp, block_k))
+
+    kernel = functools.partial(
+        _pws_kernel, num_partitions=num_p, k_blocks=grid[2]
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # Every tenant's stream block for this (s, k) tile; P is not
+            # blocked (it is the static unroll dimension).
+            pl.BlockSpec((num_p, block_s, block_k), lambda i, j, kk: (0, i, kk)),
+            # Stationary weight block for this (k, c) tile.
+            pl.BlockSpec((block_k, block_c), lambda i, j, kk: (kk, j)),
+            # Mul_En plane depends only on the column block.
+            pl.BlockSpec((num_p, block_c), lambda i, j, kk: (0, j)),
+            # Incoming partial sums: only read at kk == 0 but staged per (i, j).
+            pl.BlockSpec((block_s, block_c), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_s, block_c), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((sp, cp), jnp.float32),
+        interpret=interpret,
+    )(x, w, mask, acc)[:s, :c]
+
+
+def _drain_kernel(y_ref, bias_ref, o_ref, *, activation):
+    """Drain-step post-processing: bias add + activation on the OFMap block."""
+    y = y_ref[...] + bias_ref[...][None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "gelu":
+        y = jax.nn.gelu(y)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    elif activation == "sigmoid":
+        y = jax.nn.sigmoid(y)
+    # "none" falls through
+    o_ref[...] = y
+
+
+def drain_postproc(
+    y: jax.Array,
+    bias: jax.Array,
+    *,
+    activation: str = "relu",
+    block_s: int = 128,
+    block_c: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused bias + activation applied as the OFMap drains to the drain buffer.
+
+    Args:
+      y:    [S, C] float32 — drained partial sums.
+      bias: [C]    float32 — per-column (i.e. per-output-channel) bias.
+      activation: one of "none", "relu", "gelu", "tanh", "sigmoid".
+
+    Returns: [S, C] float32.
+    """
+    s, c = y.shape
+    assert bias.shape == (c,), f"bias shape {bias.shape} != {(c,)}"
+    if activation not in ("none", "relu", "gelu", "tanh", "sigmoid"):
+        raise ValueError(f"unknown activation {activation!r}")
+
+    block_s = min(block_s, s)
+    block_c = min(block_c, c)
+    grid = (pl.cdiv(s, block_s), pl.cdiv(c, block_c))
+    kernel = functools.partial(_drain_kernel, activation=activation)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_s, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_c,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_s, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, c), jnp.float32),
+        interpret=interpret,
+    )(y, bias)
+
+
+def tenant_mask(col_tenant: jax.Array, num_partitions: int) -> jax.Array:
+    """Expand an integer column→tenant map into the float Mul_En plane.
+
+    mask[p, c] = 1.0 iff col_tenant[c] == p.  Columns with tenant id >= P
+    (e.g. -1 for *unassigned* columns of a partially-filled array) match no
+    partition and therefore stay zero — the drained value for those columns
+    is exactly ``acc``.
+    """
+    ids = jnp.arange(num_partitions, dtype=col_tenant.dtype)
+    return (col_tenant[None, :] == ids[:, None]).astype(jnp.float32)

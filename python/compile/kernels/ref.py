@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness contracts: ``test_kernel.py`` asserts the Pallas
+implementations (interpret=True) match these to float32 tolerance across a
+hypothesis sweep of shapes, partition counts and column→tenant maps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def partitioned_ws_ref(
+    x: jax.Array, w: jax.Array, col_tenant: jax.Array, acc: jax.Array
+) -> jax.Array:
+    """Reference partitioned weight-stationary GEMM.
+
+    y[s, c] = acc[s, c] + sum_k x[col_tenant[c], s, k] * w[k, c]
+
+    Columns whose tenant id is outside [0, P) contribute nothing (they model
+    unassigned columns; the Mul_En gate never fires for them).
+    """
+    num_p = x.shape[0]
+    # full[p, s, c] = (x[p] @ w)[s, c]
+    full = jnp.einsum("psk,kc->psc", x, w)
+    onehot = (col_tenant[None, :] == jnp.arange(num_p)[:, None]).astype(x.dtype)
+    return acc + jnp.einsum("psc,pc->sc", full, onehot)
+
+
+def drain_postproc_ref(y: jax.Array, bias: jax.Array, activation: str) -> jax.Array:
+    """Reference drain post-processing: bias + activation."""
+    out = y + bias[None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation == "gelu":
+        out = jax.nn.gelu(out)
+    elif activation == "tanh":
+        out = jnp.tanh(out)
+    elif activation == "sigmoid":
+        out = jax.nn.sigmoid(out)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out
+
+
+def single_tenant_ref(x: jax.Array, w: jax.Array, acc: jax.Array) -> jax.Array:
+    """Baseline (unpartitioned) weight-stationary GEMM: acc + x @ w."""
+    return acc + x @ w
+
+
+def im2col_ref(
+    ifmap: jax.Array, kh: int, kw: int, stride: int, pad: int
+) -> jax.Array:
+    """im2col for conv→GEMM lowering (NCHW ifmap → [N*P*Q, C*R*S]).
+
+    Matches ``model.conv2d_as_gemm``'s patch extraction; used as the oracle
+    for the conv path.
+    """
+    n, c, h, w = ifmap.shape
+    padded = jnp.pad(ifmap, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    out_h = (h + 2 * pad - kh) // stride + 1
+    out_w = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = padded[
+                :, :, i : i + stride * out_h : stride, j : j + stride * out_w : stride
+            ]
+            cols.append(patch.reshape(n, c, out_h * out_w))
+    # [N, C*KH*KW, P*Q] with (c, i, j) ordered c-major to match weight reshape
+    stacked = jnp.stack(cols, axis=2).reshape(n, c * kh * kw, out_h * out_w)
+    return stacked.transpose(0, 2, 1).reshape(n * out_h * out_w, c * kh * kw)

@@ -1,0 +1,194 @@
+"""L2 — JAX model of the multi-tenant partitioned systolic array.
+
+The rust coordinator (L3) schedules layers onto vertical partitions of a
+single weight-stationary array and executes the actual arithmetic through the
+AOT artifacts defined here.  One artifact = one fixed-shape jitted function,
+lowered once by ``aot.py`` to HLO text.
+
+The unit of execution is an **array tile step**: the array holds a packed
+``[K_tile, C_array]`` weight block (all co-resident tenants' weight columns),
+each tenant feeds an ``[S_tile, K_tile]`` stream block, and the step drains an
+``[S_tile, C_array]`` block of partial sums.  The rust side chains steps over
+K-folds by passing the previous drain back in as ``acc`` — exactly the
+fold-by-fold operation of the cycle simulator, so the functional path and the
+timing path walk the same schedule.
+
+Everything here calls the L1 Pallas kernels (interpret=True); Python runs
+only at build time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import partitioned_ws as k
+from .kernels import ref as ref
+
+
+# ---------------------------------------------------------------------------
+# Artifact-facing functions (fixed shapes, AOT-lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def pws_step(x, w, mask, acc):
+    """One partitioned weight-stationary array step (the hot path).
+
+    x    [P, S, K]  per-tenant feed streams
+    w    [K, C]     packed stationary weights
+    mask [P, C]     Mul_En plane (precomputed float one-hot)
+    acc  [S, C]     partial sums from the previous K-fold
+    →    [S, C]
+    """
+    return (k.partitioned_ws_matmul(x, w, mask, acc),)
+
+
+def gemm_baseline_step(x, w, acc):
+    """Single-tenant (unpartitioned) weight-stationary step: acc + x @ w.
+
+    This is the baseline datapath the paper compares against; keeping it a
+    separate artifact means the baseline run never pays the masking FLOPs.
+    """
+    return (acc + jnp.dot(x, w, preferred_element_type=jnp.float32),)
+
+
+def drain_step(y, bias, *, activation: str):
+    """Drain-buffer post-processing artifact: bias + activation."""
+    return (k.drain_postproc(y, bias, activation=activation),)
+
+
+def pws_fused_step(x, w, mask, acc, bias):
+    """Fused variant: partitioned step + relu drain in one artifact.
+
+    Used by the serving example for last-fold steps so the OFMap makes a
+    single trip through the drain buffer.
+    """
+    y = k.partitioned_ws_matmul(x, w, mask, acc)
+    return (k.drain_postproc(y, bias, activation="relu"),)
+
+
+# ---------------------------------------------------------------------------
+# Model-construction helpers (used by tests and by aot.py's example inputs)
+# ---------------------------------------------------------------------------
+
+
+def conv2d_as_gemm(ifmap, weights, stride: int = 1, pad: int = 0):
+    """Lower a conv layer to the GEMM the systolic array actually runs.
+
+    ifmap   [N, C, H, W]
+    weights [M, C, R, S]
+    Returns (x_gemm [N*P*Q, C*R*S], w_gemm [C*R*S, M], out_shape (N, M, P, Q)).
+    """
+    n, c, h, w_ = ifmap.shape
+    m, c2, r, s = weights.shape
+    assert c == c2, f"channel mismatch {c} vs {c2}"
+    x_gemm = ref.im2col_ref(ifmap, r, s, stride, pad)
+    w_gemm = weights.reshape(m, c * r * s).T
+    out_h = (h + 2 * pad - r) // stride + 1
+    out_w = (w_ + 2 * pad - s) // stride + 1
+    return x_gemm, w_gemm, (n, m, out_h, out_w)
+
+
+def run_layer_folds(x, w, *, array_k: int, num_partitions: int = 1):
+    """Execute a full [S, K] × [K, C] GEMM by chaining pws_step over K-folds.
+
+    Mirrors what the rust coordinator does with the artifact: split K into
+    array-height folds, run one step per fold, thread ``acc`` through.  Used
+    by tests to prove fold-chaining reproduces the monolithic matmul.
+    """
+    s, ktot = x.shape
+    kdim, c = w.shape
+    assert kdim == ktot
+    col_tenant = jnp.zeros((c,), dtype=jnp.int32)
+    mask = k.tenant_mask(col_tenant, num_partitions)
+    acc = jnp.zeros((s, c), dtype=jnp.float32)
+    for k0 in range(0, ktot, array_k):
+        k1 = min(k0 + array_k, ktot)
+        kw = k1 - k0
+        # Pad the ragged last fold up to the artifact's fixed K.
+        xf = jnp.zeros((num_partitions, s, array_k), dtype=jnp.float32)
+        xf = xf.at[0, :, :kw].set(x[:, k0:k1])
+        wf = jnp.zeros((array_k, c), dtype=jnp.float32)
+        wf = wf.at[:kw, :].set(w[k0:k1, :])
+        (acc,) = pws_step(xf, wf, mask, acc)
+    return acc
+
+
+def pack_tenants(tiles, c_array: int):
+    """Pack per-tenant (x_tile [S,K], w_tile [K,w_cols]) into array-wide operands.
+
+    Returns (x [P,S,K], w_packed [K,C], col_tenant [C]) with tenants laid out
+    left-to-right in contiguous column partitions, unused columns marked -1.
+    Mirrors rust ``runtime::packing``.
+    """
+    num_p = len(tiles)
+    s, kdim = tiles[0][0].shape
+    x = jnp.stack([t[0] for t in tiles])
+    w_packed = jnp.zeros((kdim, c_array), dtype=jnp.float32)
+    col_tenant = -jnp.ones((c_array,), dtype=jnp.int32)
+    c0 = 0
+    for p, (_, wt) in enumerate(tiles):
+        wc = wt.shape[1]
+        assert c0 + wc <= c_array, "tenant tiles overflow the array width"
+        w_packed = w_packed.at[:, c0 : c0 + wc].set(wt)
+        col_tenant = col_tenant.at[c0 : c0 + wc].set(p)
+        c0 += wc
+    return x, w_packed, col_tenant
+
+
+# ---------------------------------------------------------------------------
+# AOT variant table — the contract with rust/src/runtime (see manifest.json)
+# ---------------------------------------------------------------------------
+
+ARRAY_S = 128  # stream-block rows per step
+ARRAY_K = 128  # array height (K rows held stationary per fold)
+ARRAY_C = 128  # array width (columns, the partitioned dimension)
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def aot_variants():
+    """Every artifact to lower: name → (fn, example arg specs).
+
+    Partition counts cover the paper's observed partition ladder on a
+    128-wide array: 1 (whole array), 2 (64-col), 4 (32-col), 8 (16-col).
+    """
+    variants = {}
+    for p in (1, 2, 4, 8):
+        variants[f"pws_p{p}"] = (
+            pws_step,
+            (
+                _spec(p, ARRAY_S, ARRAY_K),
+                _spec(ARRAY_K, ARRAY_C),
+                _spec(p, ARRAY_C),
+                _spec(ARRAY_S, ARRAY_C),
+            ),
+        )
+    variants["pws_fused_p4"] = (
+        pws_fused_step,
+        (
+            _spec(4, ARRAY_S, ARRAY_K),
+            _spec(ARRAY_K, ARRAY_C),
+            _spec(4, ARRAY_C),
+            _spec(ARRAY_S, ARRAY_C),
+            _spec(ARRAY_C),
+        ),
+    )
+    variants["gemm_baseline"] = (
+        gemm_baseline_step,
+        (
+            _spec(ARRAY_S, ARRAY_K),
+            _spec(ARRAY_K, ARRAY_C),
+            _spec(ARRAY_S, ARRAY_C),
+        ),
+    )
+    for act in ("relu", "none"):
+        variants[f"drain_{act}"] = (
+            lambda y, b, _act=act: drain_step(y, b, activation=_act),
+            (_spec(ARRAY_S, ARRAY_C), _spec(ARRAY_C)),
+        )
+    return variants

@@ -1,0 +1,82 @@
+"""AOT emission sanity: HLO text is well-formed and manifest-consistent.
+
+These tests exercise the interchange contract with the rust runtime without
+needing the rust toolchain: the emitted text must be parseable HLO with an
+ENTRY computation, tuple return, and parameter shapes matching the manifest.
+"""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _lower(name):
+    fn, specs = model.aot_variants()[name]
+    return aot.lower_variant(name, fn, specs)
+
+
+class TestHloEmission:
+    def test_entry_and_tuple_return(self):
+        text = _lower("gemm_baseline")
+        assert "ENTRY" in text
+        assert re.search(r"ROOT\s+\S+\s*=\s*\(f32\[128,128\]", text), (
+            "entry must return a tuple of f32[128,128]"
+        )
+
+    def test_parameter_shapes_match_specs(self):
+        text = _lower("pws_p4")
+        # x[4,128,128], w[128,128], mask[4,128], acc[128,128]
+        for shape in ("f32[4,128,128]", "f32[128,128]", "f32[4,128]"):
+            assert shape in text, f"missing parameter shape {shape}"
+
+    def test_no_custom_calls(self):
+        """interpret=True pallas must lower to plain HLO (CPU-executable)."""
+        for name in ("pws_p1", "pws_p8", "drain_relu"):
+            text = _lower(name)
+            assert "custom-call" not in text.lower(), (
+                f"{name} contains a custom-call; CPU PJRT cannot run it"
+            )
+
+    def test_deterministic_lowering(self):
+        assert _lower("gemm_baseline") == _lower("gemm_baseline")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestManifest:
+    def _manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_every_artifact_file_exists(self):
+        m = self._manifest()
+        assert m["schema"] == 1
+        for a in m["artifacts"]:
+            assert os.path.exists(os.path.join(ARTIFACTS, a["file"])), a["file"]
+
+    def test_covers_all_variants(self):
+        m = self._manifest()
+        names = {a["name"] for a in m["artifacts"]}
+        assert names == set(model.aot_variants().keys())
+
+    def test_array_geometry(self):
+        m = self._manifest()
+        assert m["array"] == {"s": 128, "k": 128, "c": 128}
+
+    def test_input_signatures(self):
+        m = self._manifest()
+        variants = model.aot_variants()
+        for a in m["artifacts"]:
+            specs = variants[a["name"]][1]
+            assert len(a["inputs"]) == len(specs)
+            for got, spec in zip(a["inputs"], specs):
+                assert tuple(got["shape"]) == spec.shape
+                assert got["dtype"] == "float32"

@@ -1,0 +1,187 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+This is the CORE correctness signal for the compute layer.  Hypothesis
+sweeps shapes, partition counts, block sizes and column→tenant maps; a fixed
+battery covers the degenerate cases the sweep may under-sample.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import partitioned_ws as k
+from compile.kernels import ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def _check_pws(rng, num_p, s, kk, c, bs, bc, bk, tenant_map=None):
+    x = _rand(rng, num_p, s, kk)
+    w = _rand(rng, kk, c)
+    acc = _rand(rng, s, c)
+    if tenant_map is None:
+        tenant_map = rng.integers(-1, num_p, size=(c,))
+    ct = jnp.asarray(tenant_map, jnp.int32)
+    mask = k.tenant_mask(ct, num_p)
+    got = k.partitioned_ws_matmul(x, w, mask, acc, block_s=bs, block_c=bc, block_k=bk)
+    want = ref.partitioned_ws_ref(x, w, ct, acc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Fixed battery
+# ---------------------------------------------------------------------------
+
+
+class TestPartitionedWsFixed:
+    def test_single_partition_is_plain_gemm(self):
+        rng = np.random.default_rng(1)
+        x = _rand(rng, 1, 32, 48)
+        w = _rand(rng, 48, 64)
+        acc = jnp.zeros((32, 64), jnp.float32)
+        ct = jnp.zeros((64,), jnp.int32)
+        got = k.partitioned_ws_matmul(x, w, k.tenant_mask(ct, 1), acc)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(x[0] @ w), rtol=1e-4, atol=1e-4
+        )
+
+    def test_two_equal_partitions(self):
+        rng = np.random.default_rng(2)
+        ct = np.repeat([0, 1], 16)
+        _check_pws(rng, 2, 16, 16, 32, 8, 8, 8, tenant_map=ct)
+
+    def test_unassigned_columns_pass_acc_through(self):
+        """Columns owned by no tenant must drain exactly `acc` (Mul_En=0)."""
+        rng = np.random.default_rng(3)
+        x = _rand(rng, 2, 8, 8)
+        w = _rand(rng, 8, 16)
+        acc = _rand(rng, 8, 16)
+        ct = jnp.asarray([-1] * 16, jnp.int32)
+        got = k.partitioned_ws_matmul(x, w, k.tenant_mask(ct, 2), acc)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(acc), rtol=0, atol=0)
+
+    def test_acc_chaining_equals_monolithic(self):
+        """Two K-folds chained through acc == one full-K computation."""
+        rng = np.random.default_rng(4)
+        num_p, s, c = 2, 8, 16
+        ct = jnp.asarray(np.repeat([0, 1], 8), jnp.int32)
+        mask = k.tenant_mask(ct, num_p)
+        x = _rand(rng, num_p, s, 32)
+        w = _rand(rng, 32, c)
+        zero = jnp.zeros((s, c), jnp.float32)
+        y1 = k.partitioned_ws_matmul(x[:, :, :16], w[:16], mask, zero)
+        y2 = k.partitioned_ws_matmul(x[:, :, 16:], w[16:], mask, y1)
+        want = ref.partitioned_ws_ref(x, w, ct, zero)
+        np.testing.assert_allclose(np.asarray(y2), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_interleaved_tenant_map(self):
+        """Tenant ownership need not be contiguous for correctness."""
+        rng = np.random.default_rng(5)
+        ct = np.arange(32) % 4
+        _check_pws(rng, 4, 8, 8, 32, 8, 8, 8, tenant_map=ct)
+
+    def test_ragged_blocks(self):
+        """Shapes that do not divide the block sizes still work (padding)."""
+        rng = np.random.default_rng(6)
+        _check_pws(rng, 3, 10, 14, 22, 8, 8, 8)
+
+    def test_partition_isolation(self):
+        """Perturbing tenant B's stream must not change tenant A's columns."""
+        rng = np.random.default_rng(7)
+        num_p, s, kk, c = 2, 8, 8, 16
+        ct = jnp.asarray(np.repeat([0, 1], 8), jnp.int32)
+        mask = k.tenant_mask(ct, num_p)
+        w = _rand(rng, kk, c)
+        acc = jnp.zeros((s, c), jnp.float32)
+        x = _rand(rng, num_p, s, kk)
+        y_before = k.partitioned_ws_matmul(x, w, mask, acc)
+        x_perturbed = x.at[1].add(_rand(rng, s, kk))
+        y_after = k.partitioned_ws_matmul(x_perturbed, w, mask, acc)
+        # Tenant 0's columns (0..8) are bit-identical; tenant 1's moved.
+        np.testing.assert_array_equal(
+            np.asarray(y_before[:, :8]), np.asarray(y_after[:, :8])
+        )
+        assert not np.allclose(np.asarray(y_before[:, 8:]), np.asarray(y_after[:, 8:]))
+
+    def test_mxu_shaped_tile(self):
+        """The artifact shape itself: P=4, S=K=C=128, 128-blocks."""
+        rng = np.random.default_rng(8)
+        ct = np.repeat([0, 1, 2, 3], 32)
+        _check_pws(rng, 4, 128, 128, 128, 128, 128, 128, tenant_map=ct)
+
+
+class TestTenantMask:
+    def test_onehot(self):
+        ct = jnp.asarray([0, 0, 1, 2, -1], jnp.int32)
+        m = np.asarray(k.tenant_mask(ct, 3))
+        assert m.shape == (3, 5)
+        np.testing.assert_array_equal(m[0], [1, 1, 0, 0, 0])
+        np.testing.assert_array_equal(m[1], [0, 0, 1, 0, 0])
+        np.testing.assert_array_equal(m[2], [0, 0, 0, 1, 0])
+
+    def test_columns_sum_to_at_most_one(self):
+        rng = np.random.default_rng(9)
+        ct = jnp.asarray(rng.integers(-1, 4, size=64), jnp.int32)
+        m = np.asarray(k.tenant_mask(ct, 4))
+        assert (m.sum(axis=0) <= 1).all()
+
+
+class TestDrainPostproc:
+    @pytest.mark.parametrize("act", ["none", "relu", "gelu", "tanh", "sigmoid"])
+    def test_matches_ref(self, act):
+        rng = np.random.default_rng(10)
+        y = _rand(rng, 24, 40)
+        b = _rand(rng, 40)
+        got = k.drain_postproc(y, b, activation=act, block_s=8, block_c=16)
+        want = ref.drain_postproc_ref(y, b, act)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_rejects_unknown_activation(self):
+        y = jnp.zeros((4, 4), jnp.float32)
+        b = jnp.zeros((4,), jnp.float32)
+        with pytest.raises(ValueError):
+            k.drain_postproc(y, b, activation="swish?")
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep
+# ---------------------------------------------------------------------------
+
+_sizes = st.integers(min_value=1, max_value=40)
+_blocks = st.sampled_from([4, 8, 16, 32])
+
+
+class TestPartitionedWsHypothesis:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        num_p=st.integers(min_value=1, max_value=6),
+        s=_sizes,
+        kk=_sizes,
+        c=_sizes,
+        bs=_blocks,
+        bc=_blocks,
+        bk=_blocks,
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref(self, num_p, s, kk, c, bs, bc, bk, seed):
+        rng = np.random.default_rng(seed)
+        _check_pws(rng, num_p, s, kk, c, bs, bc, bk)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        s=_sizes,
+        c=_sizes,
+        act=st.sampled_from(["none", "relu", "tanh"]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_drain_matches_ref(self, s, c, act, seed):
+        rng = np.random.default_rng(seed)
+        y = _rand(rng, s, c)
+        b = _rand(rng, c)
+        got = k.drain_postproc(y, b, activation=act, block_s=8, block_c=8)
+        want = ref.drain_postproc_ref(y, b, act)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

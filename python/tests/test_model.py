@@ -1,0 +1,164 @@
+"""L2 correctness: model composition, fold chaining, packing, conv lowering."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import partitioned_ws as k
+from compile.kernels import ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+class TestFoldChaining:
+    @pytest.mark.parametrize("ktot", [16, 100, 128, 300, 400])
+    def test_matches_monolithic_gemm(self, ktot):
+        rng = np.random.default_rng(ktot)
+        x = _rand(rng, 24, ktot)
+        w = _rand(rng, ktot, 48)
+        got = model.run_layer_folds(x, w, array_k=128)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w), rtol=5e-4, atol=5e-4)
+
+    def test_ragged_last_fold_zero_padded(self):
+        """K=130 on a 128-tall array: 2-row ragged fold must not corrupt."""
+        rng = np.random.default_rng(99)
+        x = _rand(rng, 8, 130)
+        w = _rand(rng, 130, 16)
+        got = model.run_layer_folds(x, w, array_k=128)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w), rtol=5e-4, atol=5e-4)
+
+
+class TestPackTenants:
+    def test_two_tenant_pack_layout(self):
+        rng = np.random.default_rng(0)
+        a = (_rand(rng, 4, 8), _rand(rng, 8, 6))
+        b = (_rand(rng, 4, 8), _rand(rng, 8, 10))
+        x, w_packed, ct = model.pack_tenants([a, b], c_array=32)
+        assert x.shape == (2, 4, 8)
+        assert w_packed.shape == (8, 32)
+        np.testing.assert_array_equal(np.asarray(ct[:6]), 0)
+        np.testing.assert_array_equal(np.asarray(ct[6:16]), 1)
+        np.testing.assert_array_equal(np.asarray(ct[16:]), -1)
+        np.testing.assert_array_equal(np.asarray(w_packed[:, :6]), np.asarray(a[1]))
+        np.testing.assert_array_equal(np.asarray(w_packed[:, 6:16]), np.asarray(b[1]))
+
+    def test_packed_step_recovers_each_tenant_gemm(self):
+        """End-to-end L2 semantics: packed partitioned step == per-tenant GEMMs."""
+        rng = np.random.default_rng(1)
+        tiles = [
+            (_rand(rng, 8, 16), _rand(rng, 16, 12)),
+            (_rand(rng, 8, 16), _rand(rng, 16, 4)),
+            (_rand(rng, 8, 16), _rand(rng, 16, 8)),
+        ]
+        x, w_packed, ct = model.pack_tenants(tiles, c_array=32)
+        mask = k.tenant_mask(ct, 3)
+        acc = jnp.zeros((8, 32), jnp.float32)
+        (y,) = model.pws_step(x, w_packed, mask, acc)
+        c0 = 0
+        for p, (xt, wt) in enumerate(tiles):
+            wc = wt.shape[1]
+            np.testing.assert_allclose(
+                np.asarray(y[:, c0 : c0 + wc]),
+                np.asarray(xt @ wt),
+                rtol=2e-4,
+                atol=2e-4,
+            )
+            c0 += wc
+
+    def test_overflow_rejected(self):
+        rng = np.random.default_rng(2)
+        tiles = [(_rand(rng, 2, 4), _rand(rng, 4, 20))] * 2
+        with pytest.raises(AssertionError):
+            model.pack_tenants(tiles, c_array=32)
+
+
+class TestConvAsGemm:
+    @pytest.mark.parametrize(
+        "n,c,h,w,m,r,stride,pad",
+        [
+            (1, 3, 8, 8, 4, 3, 1, 1),
+            (2, 8, 16, 16, 8, 3, 2, 1),
+            (1, 1, 5, 5, 2, 5, 1, 0),
+            (1, 4, 7, 9, 3, 1, 1, 0),  # 1x1 conv
+            (2, 2, 11, 11, 6, 3, 3, 0),
+        ],
+    )
+    def test_matches_lax_conv(self, n, c, h, w, m, r, stride, pad):
+        rng = np.random.default_rng(h * w + m)
+        ifm = _rand(rng, n, c, h, w)
+        wt = _rand(rng, m, c, r, r)
+        xg, wg, oshape = model.conv2d_as_gemm(ifm, wt, stride=stride, pad=pad)
+        assert xg.shape == (oshape[0] * oshape[2] * oshape[3], c * r * r)
+        out = (
+            (xg @ wg)
+            .reshape(oshape[0], oshape[2], oshape[3], oshape[1])
+            .transpose(0, 3, 1, 2)
+        )
+        want = jax.lax.conv_general_dilated(
+            ifm, wt, (stride, stride), [(pad, pad), (pad, pad)]
+        )
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(1, 2),
+        c=st.integers(1, 6),
+        hw=st.integers(4, 12),
+        m=st.integers(1, 6),
+        r=st.sampled_from([1, 3]),
+        stride=st.sampled_from([1, 2]),
+        pad=st.sampled_from([0, 1]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_lax_conv(self, n, c, hw, m, r, stride, pad, seed):
+        rng = np.random.default_rng(seed)
+        ifm = _rand(rng, n, c, hw, hw)
+        wt = _rand(rng, m, c, r, r)
+        xg, wg, oshape = model.conv2d_as_gemm(ifm, wt, stride=stride, pad=pad)
+        out = (
+            (xg @ wg)
+            .reshape(oshape[0], oshape[2], oshape[3], oshape[1])
+            .transpose(0, 3, 1, 2)
+        )
+        want = jax.lax.conv_general_dilated(
+            ifm, wt, (stride, stride), [(pad, pad), (pad, pad)]
+        )
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+class TestArtifactFunctions:
+    def test_gemm_baseline_step(self):
+        rng = np.random.default_rng(3)
+        x, w, acc = _rand(rng, 8, 8), _rand(rng, 8, 8), _rand(rng, 8, 8)
+        (y,) = model.gemm_baseline_step(x, w, acc)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(acc + x @ w), rtol=1e-5, atol=1e-5)
+
+    def test_pws_fused_step(self):
+        rng = np.random.default_rng(4)
+        ct = jnp.asarray(np.repeat(np.arange(4), 8), jnp.int32)
+        mask = k.tenant_mask(ct, 4)
+        x = _rand(rng, 4, 8, 16)
+        w = _rand(rng, 16, 32)
+        acc = _rand(rng, 8, 32)
+        bias = _rand(rng, 32)
+        (y,) = model.pws_fused_step(x, w, mask, acc, bias)
+        want = ref.drain_postproc_ref(
+            ref.partitioned_ws_ref(x, w, ct, acc), bias, "relu"
+        )
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_variant_table_shapes(self):
+        variants = model.aot_variants()
+        assert set(variants) == {
+            "pws_p1", "pws_p2", "pws_p4", "pws_p8",
+            "pws_fused_p4", "gemm_baseline", "drain_relu", "drain_none",
+        }
+        for name, (fn, specs) in variants.items():
+            out = jax.eval_shape(fn, *specs)
+            assert isinstance(out, tuple) and len(out) == 1, name
+            assert out[0].shape == (model.ARRAY_S, model.ARRAY_C), name

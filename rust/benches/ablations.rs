@@ -1,0 +1,99 @@
+//! Ablations A1–A3 (DESIGN.md §7): what each design choice buys.
+//!
+//! - **A1 merging** — dynamic (merge-on-free) vs static equal partitions
+//!   vs sequential.
+//! - **A2 feed-bus policy** — independent per-partition feeds (paper
+//!   model) vs interleaved shared row wires (conservative physical model).
+//! - **A3 granularity** — minimum partition width 8/16/32/64.
+//! - **A4 allocation policy** — demand-aware widest-to-heaviest vs the
+//!   literal equal-share Partition_Calculation.
+//! - **A5 scale-out** — one partitioned array vs 2/4/8 independent chips
+//!   at equal silicon (the paper's §5 related-work alternative).
+
+use mtsa::benchkit::section;
+use mtsa::coordinator::baseline::SequentialBaseline;
+use mtsa::coordinator::multi_array::MultiArrayBank;
+use mtsa::coordinator::scheduler::{AllocPolicy, DynamicScheduler, FeedModel, SchedulerConfig};
+use mtsa::coordinator::static_part::StaticPartitioning;
+use mtsa::report;
+use mtsa::util::tablefmt::Table;
+use mtsa::workloads::models::{heavy_pool, light_pool};
+
+fn main() {
+    let pools = [heavy_pool(), light_pool()];
+    let base_cfg = SchedulerConfig::default();
+
+    section("A1: partition merging — sequential vs static-equal vs dynamic");
+    let mut t = Table::new(&["pool", "sequential", "static-equal", "dynamic", "dyn vs static"]);
+    for pool in &pools {
+        let seq = SequentialBaseline::new(base_cfg.clone()).run(pool);
+        let stat = StaticPartitioning::new(base_cfg.clone()).run(pool);
+        let dynm = DynamicScheduler::new(base_cfg.clone()).run(pool);
+        t.row(&[
+            pool.name.clone(),
+            seq.makespan.to_string(),
+            stat.makespan.to_string(),
+            dynm.makespan.to_string(),
+            format!("{:+.1}%", report::saving_pct(stat.makespan as f64, dynm.makespan as f64)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    section("A2: feed-bus model — independent (paper) vs interleaved (physical)");
+    let mut t = Table::new(&["pool", "independent", "interleaved", "penalty"]);
+    for pool in &pools {
+        let ind = DynamicScheduler::new(base_cfg.clone()).run(pool);
+        let il = DynamicScheduler::new(SchedulerConfig {
+            feed_model: FeedModel::Interleaved,
+            ..base_cfg.clone()
+        })
+        .run(pool);
+        t.row(&[
+            pool.name.clone(),
+            ind.makespan.to_string(),
+            il.makespan.to_string(),
+            format!("{:+.1}%", report::saving_pct(il.makespan as f64, ind.makespan as f64)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    section("A3: partition granularity — minimum width");
+    let mut t = Table::new(&["pool", "min 8", "min 16", "min 32", "min 64"]);
+    for pool in &pools {
+        let mut cells = vec![pool.name.clone()];
+        for mw in [8u64, 16, 32, 64] {
+            let m = DynamicScheduler::new(SchedulerConfig { min_width: mw, ..base_cfg.clone() })
+                .run(pool);
+            cells.push(m.makespan.to_string());
+        }
+        t.row(&cells);
+    }
+    println!("{}", t.render());
+
+    section("A5: intra-array partitioning vs chip-granularity scale-out (equal silicon)");
+    let mut t = Table::new(&["pool", "1x128x128 partitioned", "2x(128x64) chips", "4x(128x32) chips", "8x(128x16) chips"]);
+    for pool in &pools {
+        let mut cells = vec![pool.name.clone()];
+        cells.push(DynamicScheduler::new(base_cfg.clone()).run(pool).makespan.to_string());
+        for n in [2usize, 4, 8] {
+            cells.push(MultiArrayBank::split_of(&base_cfg, n).run(pool).makespan.to_string());
+        }
+        t.row(&cells);
+    }
+    println!("{}", t.render());
+
+    section("A4: allocation policy — widest-to-heaviest vs equal-share (makespan / mean completion)");
+    let mut t = Table::new(&["pool", "widest makespan", "equal makespan", "widest mean-compl", "equal mean-compl"]);
+    for pool in &pools {
+        let w = report::run_group_with_policy(pool, &base_cfg, AllocPolicy::WidestToHeaviest);
+        let e = report::run_group_with_policy(pool, &base_cfg, AllocPolicy::EqualShare);
+        t.row(&[
+            pool.name.clone(),
+            w.dynamic.makespan.to_string(),
+            e.dynamic.makespan.to_string(),
+            format!("{:.0}", report::mean_completion(&w.dynamic)),
+            format!("{:.0}", report::mean_completion(&e.dynamic)),
+        ]);
+    }
+    println!("{}", t.render());
+}

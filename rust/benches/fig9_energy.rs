@@ -1,0 +1,77 @@
+//! Fig. 9(e)(f) — per-DNN energy, baseline vs dynamic partitioning.
+//!
+//! Two accountings are printed (see DESIGN.md §5 / EXPERIMENTS.md):
+//!
+//! - **per-DNN bars** — the paper's figure structure: each DNN's dynamic
+//!   energy plus array static energy attributed to its residency windows
+//!   (full array when exclusive, width-fraction when partitioned);
+//! - **run totals** — dynamic + makespan-static, with the component
+//!   breakdown (MAC / SRAM / DRAM / static).
+
+use mtsa::benchkit::section;
+use mtsa::coordinator::scheduler::{AllocPolicy, SchedulerConfig};
+use mtsa::energy::EnergyModel;
+use mtsa::report;
+use mtsa::util::tablefmt::Table;
+use mtsa::workloads::models::{heavy_pool, light_pool};
+
+fn fig(pool: &mtsa::workloads::dnng::WorkloadPool, tag: &str, policy: AllocPolicy, pname: &str) {
+    let cfg = SchedulerConfig::default();
+    let model = EnergyModel::default_128();
+    let g = report::run_group_with_policy(pool, &cfg, policy);
+
+    section(&format!("Fig 9({tag}) energy — {} — policy {pname}", pool.name));
+    let bars_seq = report::per_dnn_energy_bars(&g.sequential, &model);
+    let bars_dyn = report::per_dnn_energy_bars(&g.dynamic, &model);
+    let mut t = Table::new(&["DNN", "baseline (mJ)", "partitioned (mJ)", "saving"]);
+    for (name, seq_j) in &bars_seq {
+        let dyn_j = bars_dyn[name];
+        t.row(&[
+            name.clone(),
+            format!("{:.3}", seq_j * 1e3),
+            format!("{:.3}", dyn_j * 1e3),
+            format!("{:+.1}%", report::saving_pct(*seq_j, dyn_j)),
+        ]);
+    }
+    let (ssum, dsum) = (bars_seq.values().sum::<f64>(), bars_dyn.values().sum::<f64>());
+    t.row(&[
+        "== sum of bars ==".into(),
+        format!("{:.3}", ssum * 1e3),
+        format!("{:.3}", dsum * 1e3),
+        format!("{:+.1}%", report::saving_pct(ssum, dsum)),
+    ]);
+    println!("{}", t.render());
+
+    let es = report::total_energy(&g.sequential, &model);
+    let ed = report::total_energy(&g.dynamic, &model);
+    let mut t = Table::new(&["component", "baseline (mJ)", "partitioned (mJ)"]);
+    for (name, seq_j) in &es.dynamic_by_component {
+        t.row(&[
+            name.to_string(),
+            format!("{:.3}", seq_j * 1e3),
+            format!("{:.3}", ed.dynamic_by_component[name] * 1e3),
+        ]);
+    }
+    t.row(&[
+        "static (makespan)".into(),
+        format!("{:.3}", es.static_j * 1e3),
+        format!("{:.3}", ed.static_j * 1e3),
+    ]);
+    t.row(&[
+        "== total ==".into(),
+        format!("{:.3}", es.total_j() * 1e3),
+        format!("{:.3}", ed.total_j() * 1e3),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "total-energy saving: {:+.1}%   (paper H1: 35% heavy / 62% light)",
+        report::saving_pct(es.total_j(), ed.total_j())
+    );
+}
+
+fn main() {
+    for (pool, tag) in [(heavy_pool(), "e"), (light_pool(), "f")] {
+        fig(&pool, tag, AllocPolicy::EqualShare, "equal(paper-literal)");
+        fig(&pool, tag, AllocPolicy::WidestToHeaviest, "widest(demand-aware)");
+    }
+}

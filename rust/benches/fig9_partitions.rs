@@ -1,0 +1,49 @@
+//! Fig. 9(c)(d) — per-DNN partition-size detail: which partition widths
+//! each DNN's layers executed on, with start/end cycles — the dispatch
+//! log behind the paper's stacked detail plots.  The expected shape: small
+//! DNNs live in 128×16/128×32 partitions; stragglers' final layers claim
+//! merged (up to full-width) partitions.
+
+use mtsa::benchkit::section;
+use mtsa::coordinator::scheduler::{AllocPolicy, SchedulerConfig};
+use mtsa::report;
+use mtsa::util::tablefmt::Table;
+use mtsa::workloads::models::{heavy_pool, light_pool};
+
+fn fig(pool: &mtsa::workloads::dnng::WorkloadPool, tag: &str, policy: AllocPolicy, pname: &str) {
+    let cfg = SchedulerConfig::default();
+    let g = report::run_group_with_policy(pool, &cfg, policy);
+    section(&format!("Fig 9({tag}) partition detail — {} — policy {pname}", pool.name));
+
+    // Per-DNN summary: widths used and the width of the final layer.
+    let mut t = Table::new(&["DNN", "layers", "widths used", "final-layer width", "done@"]);
+    for (name, done) in &g.dynamic.completion {
+        let trace = g.dynamic.partition_trace(name);
+        t.row(&[
+            name.clone(),
+            trace.len().to_string(),
+            format!("{:?}", g.dynamic.partition_widths(name)),
+            trace.last().unwrap().to_string(),
+            done.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Width histogram over dispatches (the ladder).
+    let mut hist = std::collections::BTreeMap::new();
+    for d in &g.dynamic.dispatches {
+        *hist.entry(d.slice.width).or_insert(0u64) += 1;
+    }
+    let mut t = Table::new(&["partition width", "layer dispatches"]);
+    for (w, n) in hist {
+        t.row(&[format!("128x{w}"), n.to_string()]);
+    }
+    println!("{}", t.render());
+}
+
+fn main() {
+    for (pool, tag) in [(heavy_pool(), "c"), (light_pool(), "d")] {
+        fig(&pool, tag, AllocPolicy::EqualShare, "equal(paper-literal)");
+        fig(&pool, tag, AllocPolicy::WidestToHeaviest, "widest(demand-aware)");
+    }
+}

@@ -1,0 +1,77 @@
+//! Fig. 9(a)(b) — per-DNN computation time, baseline (sequential single
+//! tenant) vs dynamic partitioning, for the heavy (multi-domain) and
+//! light (RNN) workload pools.  Prints both allocation policies: `equal`
+//! is the paper's literal Partition_Calculation; `widest` is the
+//! demand-aware variant (see DESIGN.md §7 and EXPERIMENTS.md).
+//!
+//! The headline H1 rows (time saving per pool) are printed last.
+
+use mtsa::benchkit::section;
+use mtsa::coordinator::scheduler::{AllocPolicy, SchedulerConfig};
+use mtsa::report;
+use mtsa::util::tablefmt::Table;
+use mtsa::workloads::models::{heavy_pool, light_pool};
+
+fn fig(pool: &mtsa::workloads::dnng::WorkloadPool, tag: &str) {
+    let cfg = SchedulerConfig::default();
+    for (pname, policy) in
+        [("widest(demand-aware)", AllocPolicy::WidestToHeaviest), ("equal(paper-literal)", AllocPolicy::EqualShare)]
+    {
+        let g = report::run_group_with_policy(pool, &cfg, policy);
+        section(&format!("Fig 9({tag}) computation time — {} — policy {pname}", pool.name));
+        let mut t = Table::new(&["DNN", "baseline done@", "partitioned done@", "saving"]);
+        for (name, seq_done) in &g.sequential.completion {
+            let dyn_done = g.dynamic.completion[name];
+            t.row(&[
+                name.clone(),
+                seq_done.to_string(),
+                dyn_done.to_string(),
+                format!("{:+.1}%", report::saving_pct(*seq_done as f64, dyn_done as f64)),
+            ]);
+        }
+        t.row(&[
+            "== makespan ==".into(),
+            g.sequential.makespan.to_string(),
+            g.dynamic.makespan.to_string(),
+            format!(
+                "{:+.1}%",
+                report::saving_pct(g.sequential.makespan as f64, g.dynamic.makespan as f64)
+            ),
+        ]);
+        t.row(&[
+            "== mean completion ==".into(),
+            format!("{:.0}", report::mean_completion(&g.sequential)),
+            format!("{:.0}", report::mean_completion(&g.dynamic)),
+            format!(
+                "{:+.1}%",
+                report::saving_pct(
+                    report::mean_completion(&g.sequential),
+                    report::mean_completion(&g.dynamic)
+                )
+            ),
+        ]);
+        println!("{}", t.render());
+    }
+}
+
+fn main() {
+    fig(&heavy_pool(), "a");
+    fig(&light_pool(), "b");
+
+    section("H1 summary (paper: 56% heavy / 44% light computation-time saving)");
+    let cfg = SchedulerConfig::default();
+    let model = mtsa::energy::EnergyModel::default_128();
+    for pool in [heavy_pool(), light_pool()] {
+        for (pname, policy) in
+            [("widest", AllocPolicy::WidestToHeaviest), ("equal", AllocPolicy::EqualShare)]
+        {
+            let g = report::run_group_with_policy(&pool, &cfg, policy);
+            let h = report::headline(&g, &model);
+            println!(
+                "{:24} policy={:6} makespan saving {:+6.1}%   mean-completion saving {:+6.1}%   util {:.1}% -> {:.1}%",
+                pool.name, pname, h.makespan_saving_pct, h.mean_completion_saving_pct,
+                100.0 * h.seq_utilization, 100.0 * h.dyn_utilization
+            );
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! P1 — hot-path micro-benchmarks (the §Perf targets of EXPERIMENTS.md):
+//!
+//! - analytic layer timing (the scheduler's inner-loop cost model),
+//! - a full dynamic-scheduler run over the heavy pool,
+//! - partition manager alloc/free churn,
+//! - PJRT artifact execution latency + packing (skipped if artifacts are
+//!   not built).
+
+use std::path::PathBuf;
+
+use mtsa::benchkit::{Bench, BenchOpts};
+use mtsa::coordinator::scheduler::{DynamicScheduler, SchedulerConfig};
+use mtsa::coordinator::PartitionManager;
+use mtsa::runtime::{pack_step, Engine, Tensor, TenantTile};
+use mtsa::sim::buffers::BufferConfig;
+use mtsa::sim::dataflow::ArrayGeometry;
+use mtsa::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
+use mtsa::util::rng::Rng;
+use mtsa::workloads::models::heavy_pool;
+use mtsa::workloads::shapes::GemmDims;
+
+fn main() {
+    let mut b = Bench::new("hotpath");
+
+    // Analytic timing model: the per-dispatch cost inside the scheduler.
+    let geom = ArrayGeometry::new(128, 128);
+    let bufs = BufferConfig::default();
+    let gemm = GemmDims { sr: 3025, k: 1152, m: 384 };
+    b.measure("slice_layer_timing (conv layer)", || {
+        std::hint::black_box(slice_layer_timing(
+            geom,
+            std::hint::black_box(gemm),
+            PartitionSlice::new(32, 32),
+            FeedPolicy::Independent,
+            &bufs,
+        ));
+    });
+
+    // Whole-pool scheduler run (the end-to-end simulation cost).
+    let pool = heavy_pool();
+    let sched = DynamicScheduler::new(SchedulerConfig::default());
+    b.measure("DynamicScheduler::run (heavy pool, 202 layers)", || {
+        std::hint::black_box(sched.run(&pool));
+    });
+
+    // Partition manager churn.
+    b.measure("PartitionManager alloc/free x64", || {
+        let mut pm = PartitionManager::new(128);
+        let mut rng = Rng::new(1);
+        let mut live = Vec::new();
+        for _ in 0..64 {
+            if live.is_empty() || rng.gen_bool(0.6) {
+                if let Some((id, _)) = pm.allocate(rng.gen_range_inclusive(8, 64)) {
+                    live.push(id);
+                }
+            } else {
+                let i = rng.gen_range(live.len() as u64) as usize;
+                pm.free(live.swap_remove(i));
+            }
+        }
+        for id in live {
+            pm.free(id);
+        }
+    });
+
+    // PJRT execution (requires artifacts).
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        let engine = Engine::load(&dir).expect("engine");
+        let mut rng = Rng::new(2);
+        let rand = |rng: &mut Rng, shape: Vec<usize>| {
+            let n: usize = shape.iter().product();
+            Tensor::new(shape, (0..n).map(|_| rng.gen_f32() - 0.5).collect())
+        };
+        let tiles: Vec<TenantTile> = (0..4)
+            .map(|t| TenantTile {
+                tenant: t,
+                x: rand(&mut rng, vec![128, 128]),
+                w: rand(&mut rng, vec![128, 32]),
+            })
+            .collect();
+        b.measure("pack_step (4 tenants, 128x128)", || {
+            std::hint::black_box(pack_step(&tiles, 128, 128, 128, 4).unwrap());
+        });
+        let step = pack_step(&tiles, 128, 128, 128, 4).unwrap();
+        let acc = Tensor::zeros(vec![128, 128]);
+        let opts = BenchOpts { min_iters: 20, ..Default::default() };
+        let mut b2 = Bench::new("pjrt").with_opts(opts);
+        b2.measure("engine.execute pws_p4 (one array step)", || {
+            std::hint::black_box(
+                engine
+                    .execute(
+                        "pws_p4",
+                        &[step.x.clone(), step.w.clone(), step.mask.clone(), acc.clone()],
+                    )
+                    .unwrap(),
+            );
+        });
+        let x0 = tiles[0].x.clone();
+        b2.measure("engine.execute gemm_baseline", || {
+            std::hint::black_box(
+                engine
+                    .execute("gemm_baseline", &[x0.clone(), step.w.clone(), acc.clone()])
+                    .unwrap(),
+            );
+        });
+        b2.finish();
+    } else {
+        eprintln!("(artifacts not built; skipping PJRT benches)");
+    }
+
+    b.finish();
+}

@@ -1,0 +1,26 @@
+//! Table 1 — the simulation workloads: model, domain, group, plus the
+//! derived layer counts and MAC totals the rest of the evaluation uses.
+
+use mtsa::benchkit::section;
+use mtsa::util::tablefmt::Table;
+use mtsa::workloads::models::ZOO;
+
+fn main() {
+    section("Table 1: simulation workloads (12 PyTorch-published networks)");
+    let mut t = Table::new(&["model", "domain", "group", "layers", "GMACs", "max GEMM M", "max GEMM K"]);
+    for e in ZOO {
+        let dnn = (e.build)();
+        let max_m = dnn.layers.iter().map(|l| l.shape.gemm().m).max().unwrap();
+        let max_k = dnn.layers.iter().map(|l| l.shape.gemm().k).max().unwrap();
+        t.row(&[
+            e.name.to_string(),
+            e.domain.to_string(),
+            e.group.tag().to_string(),
+            dnn.layers.len().to_string(),
+            format!("{:.3}", dnn.total_macs() as f64 / 1e9),
+            max_m.to_string(),
+            max_k.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,136 @@
+//! Bench harness (criterion replacement for the offline build).
+//!
+//! Bench targets are `[[bench]] harness = false` binaries; each calls
+//! [`Bench::new`] and registers closures with [`Bench::measure`] for
+//! timed micro-benchmarks, or prints figure tables directly.  Output goes
+//! to stdout so `cargo bench | tee bench_output.txt` captures the paper
+//! figures.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{fmt_ns, Summary};
+use crate::util::tablefmt::Table;
+
+/// Configuration for timed measurements.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            min_iters: 10,
+            max_iters: 100_000,
+        }
+    }
+}
+
+/// A bench section with a results table.
+pub struct Bench {
+    name: String,
+    opts: BenchOpts,
+    table: Table,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        println!("\n=== bench: {name} ===");
+        Bench {
+            name: name.to_string(),
+            opts: BenchOpts::default(),
+            table: Table::new(&["case", "iters", "mean", "p50", "p99", "rsd"]),
+        }
+    }
+
+    pub fn with_opts(mut self, opts: BenchOpts) -> Bench {
+        self.opts = opts;
+        self
+    }
+
+    /// Time `f` (called once per iteration) and record a row.
+    /// Returns the summary for programmatic assertions.
+    pub fn measure<F: FnMut()>(&mut self, case: &str, mut f: F) -> Summary {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.opts.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let t1 = Instant::now();
+        while (t1.elapsed() < self.opts.measure || samples.len() < self.opts.min_iters)
+            && samples.len() < self.opts.max_iters
+        {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+        }
+        let summary = Summary::from_samples(&samples).expect("at least one sample");
+        self.table.row(&[
+            case.to_string(),
+            summary.n.to_string(),
+            fmt_ns(summary.mean),
+            fmt_ns(summary.p50),
+            fmt_ns(summary.p99),
+            format!("{:.1}%", 100.0 * summary.rsd()),
+        ]);
+        summary
+    }
+
+    /// Print the accumulated table.
+    pub fn finish(self) {
+        if !self.table.is_empty() {
+            println!("{}", self.table.render());
+        }
+        println!("=== end bench: {} ===", self.name);
+    }
+}
+
+/// Print a figure/table section header (non-timed benches).
+pub fn section(title: &str) {
+    println!("\n--- {title} ---");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_produces_sane_stats() {
+        let mut b = Bench::new("test").with_opts(BenchOpts {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            min_iters: 5,
+            max_iters: 1000,
+        });
+        let mut acc = 0u64;
+        let s = b.measure("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(s.n >= 5);
+        assert!(s.mean > 0.0);
+        assert!(s.min <= s.p50 && s.p50 <= s.max);
+        b.finish();
+    }
+
+    #[test]
+    fn max_iters_caps_runtime() {
+        let mut b = Bench::new("cap").with_opts(BenchOpts {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_secs(60),
+            min_iters: 1,
+            max_iters: 50,
+        });
+        let s = b.measure("fast", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.n, 50);
+        b.finish();
+    }
+}

@@ -1,0 +1,139 @@
+//! Tiny typed argument parser: `command [positionals] [--flag[=| ]value]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ParsedArgs {
+    /// Subcommand (first non-flag token).
+    pub command: String,
+    /// Positional arguments after the subcommand.
+    pub positionals: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    options: BTreeMap<String, String>,
+    /// Bare `--switch` flags.
+    switches: Vec<String>,
+}
+
+impl ParsedArgs {
+    /// Parse argv (without the program name).
+    pub fn parse(argv: &[String]) -> Result<ParsedArgs> {
+        let mut out = ParsedArgs::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if flag.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.insert_option(k, v)?;
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.insert_option(flag, v)?;
+                } else {
+                    out.switches.push(flag.to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = tok.clone();
+            } else {
+                out.positionals.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    fn insert_option(&mut self, k: &str, v: &str) -> Result<()> {
+        if self.options.insert(k.to_string(), v.to_string()).is_some() {
+            bail!("duplicate option --{k}");
+        }
+        Ok(())
+    }
+
+    /// String option.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Integer option with default.
+    pub fn opt_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Bare switch presence.
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    /// Error out on unknown options (call after reading all known ones).
+    pub fn ensure_known(&self, opts: &[&str], switches: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !opts.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {opts:?})");
+            }
+        }
+        for s in &self.switches {
+            if !switches.contains(&s.as_str()) {
+                bail!("unknown switch --{s} (known: {switches:?})");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_command_positionals_options_switches() {
+        let p = ParsedArgs::parse(&argv("run heavy --policy widest --seed=7 --verbose")).unwrap();
+        assert_eq!(p.command, "run");
+        assert_eq!(p.positionals, vec!["heavy"]);
+        assert_eq!(p.opt("policy"), Some("widest"));
+        assert_eq!(p.opt_u64("seed", 0).unwrap(), 7);
+        assert!(p.has("verbose"));
+        assert!(!p.has("quiet"));
+    }
+
+    #[test]
+    fn option_value_styles_equivalent() {
+        let a = ParsedArgs::parse(&argv("x --k v")).unwrap();
+        let b = ParsedArgs::parse(&argv("x --k=v")).unwrap();
+        assert_eq!(a.opt("k"), b.opt("k"));
+    }
+
+    #[test]
+    fn rejects_duplicates_and_bad_ints() {
+        assert!(ParsedArgs::parse(&argv("x --a 1 --a 2")).is_err());
+        let p = ParsedArgs::parse(&argv("x --n abc")).unwrap();
+        assert!(p.opt_u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn ensure_known_catches_typos() {
+        let p = ParsedArgs::parse(&argv("run --plicy widest")).unwrap();
+        assert!(p.ensure_known(&["policy"], &[]).is_err());
+        let p = ParsedArgs::parse(&argv("run --policy widest")).unwrap();
+        assert!(p.ensure_known(&["policy"], &[]).is_ok());
+    }
+
+    #[test]
+    fn trailing_switch_before_positional() {
+        // `--flag` followed by a non-flag is consumed as its value.
+        let p = ParsedArgs::parse(&argv("run --seq heavy")).unwrap();
+        assert_eq!(p.opt("seq"), Some("heavy"));
+        // To pass a bare switch last, use `--seq` at the end.
+        let p = ParsedArgs::parse(&argv("run heavy --seq")).unwrap();
+        assert!(p.has("seq"));
+        assert_eq!(p.positionals, vec!["heavy"]);
+    }
+}

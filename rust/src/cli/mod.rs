@@ -1,0 +1,27 @@
+//! Command-line interface (offline build: no `clap`) — a small typed
+//! argument parser ([`args`]) plus the subcommand implementations
+//! ([`commands`]).
+
+pub mod args;
+pub mod commands;
+
+pub use args::ParsedArgs;
+
+/// CLI entry: parse argv and dispatch.  Returns a process exit code.
+pub fn main_with(argv: &[String]) -> i32 {
+    let parsed = match ParsedArgs::parse(argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{}", commands::USAGE);
+            return 2;
+        }
+    };
+    match commands::dispatch(&parsed) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

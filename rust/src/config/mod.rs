@@ -1,0 +1,8 @@
+//! Configuration system: a small TOML-subset parser ([`toml`]) and the
+//! typed accelerator/scheduler schema ([`schema`]) the CLI consumes.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::RunConfig;
+pub use toml::TomlDoc;

@@ -1,0 +1,221 @@
+//! Typed run configuration: TOML file → `SchedulerConfig` + energy model
+//! + workload selection, with validation and full-default fallback.
+//!
+//! Example (`configs/tpu128.toml`):
+//!
+//! ```toml
+//! [array]
+//! rows = 128
+//! cols = 128
+//!
+//! [buffers]
+//! weight_kib = 6144
+//! ifmap_kib = 12288
+//! ofmap_kib = 6144
+//! dtype_bytes = 1
+//!
+//! [scheduler]
+//! policy = "widest"        # widest | equal
+//! feed_model = "independent"  # independent | interleaved
+//! min_width = 16
+//! patience_divisor = 4
+//!
+//! [dram]
+//! enabled = false
+//! words_per_cycle = 64.0
+//! burst_latency = 100
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use super::toml::TomlDoc;
+use crate::coordinator::scheduler::{AllocPolicy, FeedModel, SchedulerConfig};
+use crate::energy::components::{EnergyModel, Precision};
+use crate::sim::dataflow::ArrayGeometry;
+use crate::sim::dram::DramConfig;
+
+/// Fully-resolved run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub scheduler: SchedulerConfig,
+    pub precision: Precision,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig { scheduler: SchedulerConfig::default(), precision: Precision::Int8 }
+    }
+}
+
+impl RunConfig {
+    /// Parse from TOML text; missing sections/keys keep defaults.
+    pub fn from_toml(text: &str) -> Result<RunConfig> {
+        let doc = TomlDoc::parse(text).context("parsing config")?;
+        let mut cfg = RunConfig::default();
+
+        let known = ["array", "buffers", "scheduler", "dram", "energy"];
+        for s in doc.section_names() {
+            if !known.contains(&s) {
+                bail!("unknown config section [{s}] (known: {known:?})");
+            }
+        }
+
+        let u64_of = |sec: &str, key: &str| -> Option<u64> {
+            doc.get(sec, key).and_then(|v| v.as_u64())
+        };
+        let f64_of = |sec: &str, key: &str| -> Option<f64> {
+            doc.get(sec, key).and_then(|v| v.as_f64())
+        };
+
+        let rows = u64_of("array", "rows").unwrap_or(cfg.scheduler.geom.rows);
+        let cols = u64_of("array", "cols").unwrap_or(cfg.scheduler.geom.cols);
+        if rows == 0 || cols == 0 {
+            bail!("array dims must be positive");
+        }
+        cfg.scheduler.geom = ArrayGeometry::new(rows, cols);
+
+        let b = &mut cfg.scheduler.buffers;
+        if let Some(k) = u64_of("buffers", "weight_kib") {
+            b.weight_bytes = k * 1024;
+        }
+        if let Some(k) = u64_of("buffers", "ifmap_kib") {
+            b.ifmap_bytes = k * 1024;
+        }
+        if let Some(k) = u64_of("buffers", "ofmap_kib") {
+            b.ofmap_bytes = k * 1024;
+        }
+        if let Some(d) = u64_of("buffers", "dtype_bytes") {
+            if ![1, 2, 4].contains(&d) {
+                bail!("dtype_bytes must be 1, 2 or 4");
+            }
+            b.dtype_bytes = d;
+            cfg.precision = match d {
+                1 => Precision::Int8,
+                2 => Precision::Fp16,
+                _ => Precision::Fp32,
+            };
+        }
+
+        if let Some(p) = doc.get("scheduler", "policy").and_then(|v| v.as_str()) {
+            cfg.scheduler.alloc_policy = match p {
+                "widest" => AllocPolicy::WidestToHeaviest,
+                "equal" => AllocPolicy::EqualShare,
+                _ => bail!("unknown scheduler.policy {p:?} (widest|equal)"),
+            };
+        }
+        if let Some(f) = doc.get("scheduler", "feed_model").and_then(|v| v.as_str()) {
+            cfg.scheduler.feed_model = match f {
+                "independent" => FeedModel::Independent,
+                "interleaved" => FeedModel::Interleaved,
+                _ => bail!("unknown scheduler.feed_model {f:?}"),
+            };
+        }
+        if let Some(w) = u64_of("scheduler", "min_width") {
+            if w == 0 || w > cols {
+                bail!("min_width must be in 1..=cols");
+            }
+            cfg.scheduler.min_width = w;
+        }
+        if let Some(p) = u64_of("scheduler", "patience_divisor") {
+            if p == 0 {
+                bail!("patience_divisor must be >= 1");
+            }
+            cfg.scheduler.patience_divisor = p;
+        }
+
+        if doc.get("dram", "enabled").and_then(|v| v.as_bool()).unwrap_or(false) {
+            let mut d = DramConfig::default();
+            if let Some(w) = f64_of("dram", "words_per_cycle") {
+                if w <= 0.0 {
+                    bail!("dram.words_per_cycle must be positive");
+                }
+                d.words_per_cycle = w;
+            }
+            if let Some(l) = u64_of("dram", "burst_latency") {
+                d.burst_latency = l;
+            }
+            cfg.scheduler.dram = Some(d);
+        }
+
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &std::path::Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    /// The energy model matching this configuration.
+    pub fn energy_model(&self) -> EnergyModel {
+        EnergyModel::build(self.scheduler.geom, &self.scheduler.buffers, self.precision)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_without_file() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.scheduler.geom.cols, 128);
+        assert_eq!(cfg.scheduler.min_width, 16);
+        assert!(cfg.scheduler.dram.is_none());
+    }
+
+    #[test]
+    fn full_round_trip() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            [array]
+            rows = 64
+            cols = 64
+            [buffers]
+            weight_kib = 1024
+            dtype_bytes = 2
+            [scheduler]
+            policy = "equal"
+            feed_model = "interleaved"
+            min_width = 8
+            patience_divisor = 2
+            [dram]
+            enabled = true
+            words_per_cycle = 32.0
+            burst_latency = 50
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.scheduler.geom, ArrayGeometry::new(64, 64));
+        assert_eq!(cfg.scheduler.buffers.weight_bytes, 1024 * 1024);
+        assert_eq!(cfg.precision, Precision::Fp16);
+        assert_eq!(cfg.scheduler.alloc_policy, AllocPolicy::EqualShare);
+        assert_eq!(cfg.scheduler.feed_model, FeedModel::Interleaved);
+        assert_eq!(cfg.scheduler.min_width, 8);
+        let d = cfg.scheduler.dram.unwrap();
+        assert_eq!(d.words_per_cycle, 32.0);
+        assert_eq!(d.burst_latency, 50);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        for bad in [
+            "[array]\nrows = 0",
+            "[scheduler]\npolicy = \"nope\"",
+            "[scheduler]\nmin_width = 0",
+            "[scheduler]\npatience_divisor = 0",
+            "[buffers]\ndtype_bytes = 3",
+            "[typo]\nx = 1",
+            "[dram]\nenabled = true\nwords_per_cycle = -1.0",
+        ] {
+            assert!(RunConfig::from_toml(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn energy_model_follows_geometry() {
+        let cfg = RunConfig::from_toml("[array]\nrows = 32\ncols = 32").unwrap();
+        assert_eq!(cfg.energy_model().geom.pes(), 1024);
+    }
+}

@@ -1,0 +1,245 @@
+//! Minimal TOML-subset parser (offline build: no `serde`/`toml` crates).
+//!
+//! Supported grammar — everything the config schema needs:
+//!
+//! ```toml
+//! # comment
+//! top_key = 1
+//! [section]
+//! int = 128
+//! float = 0.5
+//! string = "hello"
+//! boolean = true
+//! ```
+//!
+//! Unsupported (rejected loudly): arrays, inline tables, dotted keys,
+//! multi-line strings, dates.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// A parsed document: `section -> key -> value`; top-level keys live in
+/// the `""` section.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line_no = ln + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| TomlError { line: line_no, msg: "unterminated [section]".into() })?
+                    .trim();
+                if name.is_empty() || !is_bare_key(name) {
+                    return Err(TomlError { line: line_no, msg: format!("bad section name {name:?}") });
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| TomlError { line: line_no, msg: "expected key = value".into() })?;
+            let key = key.trim();
+            if !is_bare_key(key) {
+                return Err(TomlError { line: line_no, msg: format!("bad key {key:?}") });
+            }
+            let value = parse_value(value.trim(), line_no)?;
+            let prev = doc.sections.entry(section.clone()).or_default().insert(key.into(), value);
+            if prev.is_some() {
+                return Err(TomlError { line: line_no, msg: format!("duplicate key {key:?}") });
+            }
+        }
+        Ok(doc)
+    }
+
+    /// Look up `section.key` (empty section = top level).
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    /// Section names (excluding the implicit top level).
+    pub fn section_names(&self) -> Vec<&str> {
+        self.sections.keys().filter(|k| !k.is_empty()).map(String::as_str).collect()
+    }
+
+    /// Keys of a section.
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|s| s.keys().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string is preserved.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+fn parse_value(v: &str, line: usize) -> Result<TomlValue, TomlError> {
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = v.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| TomlError { line, msg: "unterminated string".into() })?;
+        if inner.contains('"') {
+            return Err(TomlError { line, msg: "embedded quote unsupported".into() });
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    let clean = v.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(TomlError { line, msg: format!("cannot parse value {v:?}") })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = TomlDoc::parse(
+            r#"
+            # accelerator geometry
+            seed = 42
+            [array]
+            rows = 128
+            cols = 128          # TPU-like
+            clock_ghz = 0.7
+            [scheduler]
+            policy = "widest"
+            merge = true
+            min_width = 16
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "seed").unwrap().as_u64(), Some(42));
+        assert_eq!(doc.get("array", "rows").unwrap().as_u64(), Some(128));
+        assert_eq!(doc.get("array", "clock_ghz").unwrap().as_f64(), Some(0.7));
+        assert_eq!(doc.get("scheduler", "policy").unwrap().as_str(), Some("widest"));
+        assert_eq!(doc.get("scheduler", "merge").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.section_names(), vec!["array", "scheduler"]);
+    }
+
+    #[test]
+    fn underscored_ints() {
+        let doc = TomlDoc::parse("big = 1_000_000").unwrap();
+        assert_eq!(doc.get("", "big").unwrap().as_u64(), Some(1_000_000));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "[unterminated",
+            "novalue",
+            "k = ",
+            "k = 'single'",
+            "k = \"open",
+            "[]\nk = 1",
+            "dup = 1\ndup = 2",
+        ] {
+            assert!(TomlDoc::parse(bad).is_err(), "should reject {bad:?}");
+        }
+    }
+
+    #[test]
+    fn value_type_accessors() {
+        assert_eq!(TomlValue::Int(5).as_f64(), Some(5.0));
+        assert_eq!(TomlValue::Int(-1).as_u64(), None);
+        assert_eq!(TomlValue::Bool(true).as_str(), None);
+    }
+}

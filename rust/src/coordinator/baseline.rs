@@ -1,0 +1,101 @@
+//! The single-tenant sequential baseline (paper §4.3, "baseline systolic
+//! array with no partitioning").
+//!
+//! DNNs execute one at a time in arrival order; every layer gets the whole
+//! array.  This is what the paper's Fig. 9(a)(b)(e)(f) bars labelled
+//! "baseline" measure.
+
+use super::metrics::{DispatchRecord, RunMetrics};
+use super::scheduler::SchedulerConfig;
+use crate::sim::dataflow::baseline_layer_timing;
+use crate::sim::partitioned::PartitionSlice;
+use crate::workloads::dnng::WorkloadPool;
+
+/// Sequential single-tenant executor.
+#[derive(Debug, Clone)]
+pub struct SequentialBaseline {
+    cfg: SchedulerConfig,
+}
+
+impl SequentialBaseline {
+    pub fn new(cfg: SchedulerConfig) -> SequentialBaseline {
+        SequentialBaseline { cfg }
+    }
+
+    /// Run the pool: DNNs in arrival order, layers in chain order, full
+    /// array each.
+    pub fn run(&self, pool: &WorkloadPool) -> RunMetrics {
+        let cfg = &self.cfg;
+        let mut metrics = RunMetrics::default();
+        let mut now = 0u64;
+        for dnn_id in pool.by_arrival() {
+            let dnn = &pool.dnns[dnn_id];
+            now = now.max(dnn.arrival_cycles);
+            for (li, layer) in dnn.layers.iter().enumerate() {
+                let t = baseline_layer_timing(cfg.geom, layer.shape.gemm(), &cfg.buffers);
+                let cycles = match &cfg.dram {
+                    Some(d) => d.bound_cycles(t.cycles, &t.activity),
+                    None => t.cycles,
+                };
+                metrics.record_dispatch(DispatchRecord {
+                    dnn: dnn_id,
+                    dnn_name: dnn.name.clone(),
+                    layer: li,
+                    layer_name: layer.name.clone(),
+                    slice: PartitionSlice::full(cfg.geom),
+                    t_start: now,
+                    t_end: now + cycles,
+                    activity: t.activity,
+                });
+                now += cycles;
+            }
+        }
+        metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::dnng::{Dnn, Layer};
+    use crate::workloads::shapes::{LayerKind, LayerShape};
+
+    fn pool() -> WorkloadPool {
+        let mk = |name: &str, n: usize, at: u64| {
+            let layers = (0..n)
+                .map(|i| Layer::new(&format!("l{i}"), LayerKind::Fc, LayerShape::fc(32, 128, 128)))
+                .collect();
+            Dnn::chain(name, layers).arriving_at(at)
+        };
+        WorkloadPool::new("t", vec![mk("a", 2, 0), mk("b", 1, 0)])
+    }
+
+    #[test]
+    fn strictly_sequential() {
+        let m = SequentialBaseline::new(SchedulerConfig::default()).run(&pool());
+        assert_eq!(m.dispatches.len(), 3);
+        for w in m.dispatches.windows(2) {
+            assert_eq!(w[0].t_end, w[1].t_start, "no overlap, no gap");
+        }
+        // Every layer used the full array.
+        assert!(m.dispatches.iter().all(|d| d.slice.width == 128));
+    }
+
+    #[test]
+    fn completion_order_is_arrival_order() {
+        let m = SequentialBaseline::new(SchedulerConfig::default()).run(&pool());
+        assert!(m.completion["a"] < m.completion["b"]);
+        assert_eq!(m.makespan, m.completion["b"]);
+    }
+
+    #[test]
+    fn waits_for_late_arrivals() {
+        let mk = |at| {
+            let l = vec![Layer::new("l0", LayerKind::Fc, LayerShape::fc(1, 8, 8))];
+            Dnn::chain("x", l).arriving_at(at)
+        };
+        let p = WorkloadPool::new("t", vec![mk(10_000)]);
+        let m = SequentialBaseline::new(SchedulerConfig::default()).run(&p);
+        assert!(m.dispatches[0].t_start >= 10_000);
+    }
+}

@@ -1,0 +1,129 @@
+//! Run metrics — everything the paper's Fig. 9 plots need.
+
+use std::collections::BTreeMap;
+
+use crate::sim::activity::Activity;
+use crate::sim::dataflow::ArrayGeometry;
+use crate::sim::partitioned::PartitionSlice;
+use crate::workloads::dnng::{DnnId, LayerId};
+
+/// One layer dispatch — a row of the Fig. 9(c)(d) detail plots.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchRecord {
+    pub dnn: DnnId,
+    pub dnn_name: String,
+    pub layer: LayerId,
+    pub layer_name: String,
+    pub slice: PartitionSlice,
+    pub t_start: u64,
+    pub t_end: u64,
+    pub activity: Activity,
+}
+
+impl DispatchRecord {
+    pub fn duration(&self) -> u64 {
+        self.t_end - self.t_start
+    }
+}
+
+/// Metrics of one complete run (one pool × one scheduler).
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// Total cycles until the last layer drains.
+    pub makespan: u64,
+    /// Per-DNN completion cycle (name → cycle).
+    pub completion: BTreeMap<String, u64>,
+    /// Per-DNN start cycle (first layer dispatch).
+    pub start: BTreeMap<String, u64>,
+    /// Full dispatch log, in dispatch order.
+    pub dispatches: Vec<DispatchRecord>,
+    /// Aggregate activity (for the energy estimator).
+    pub total_activity: Activity,
+}
+
+impl RunMetrics {
+    pub fn record_dispatch(&mut self, rec: DispatchRecord) {
+        self.start.entry(rec.dnn_name.clone()).or_insert(rec.t_start);
+        let done = self.completion.entry(rec.dnn_name.clone()).or_insert(0);
+        *done = (*done).max(rec.t_end);
+        self.makespan = self.makespan.max(rec.t_end);
+        self.total_activity.add(&rec.activity);
+        self.dispatches.push(rec);
+    }
+
+    /// Average PE utilization over the makespan: MACs / (makespan × PEs).
+    pub fn utilization(&self, geom: ArrayGeometry) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.total_activity.macs as f64 / (self.makespan as f64 * geom.pes() as f64)
+    }
+
+    /// Partition widths used by a DNN, in dispatch order (Fig. 9(c)(d)).
+    pub fn partition_trace(&self, dnn_name: &str) -> Vec<u64> {
+        self.dispatches
+            .iter()
+            .filter(|d| d.dnn_name == dnn_name)
+            .map(|d| d.slice.width)
+            .collect()
+    }
+
+    /// Distinct partition widths a DNN used, sorted.
+    pub fn partition_widths(&self, dnn_name: &str) -> Vec<u64> {
+        let mut w = self.partition_trace(dnn_name);
+        w.sort_unstable();
+        w.dedup();
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(dnn: &str, layer: LayerId, width: u64, t0: u64, t1: u64) -> DispatchRecord {
+        DispatchRecord {
+            dnn: 0,
+            dnn_name: dnn.to_string(),
+            layer,
+            layer_name: format!("l{layer}"),
+            slice: PartitionSlice::new(0, width),
+            t_start: t0,
+            t_end: t1,
+            activity: Activity { macs: 100, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn completion_tracks_max_end() {
+        let mut m = RunMetrics::default();
+        m.record_dispatch(rec("a", 0, 128, 0, 50));
+        m.record_dispatch(rec("a", 1, 64, 50, 80));
+        m.record_dispatch(rec("b", 0, 64, 10, 95));
+        assert_eq!(m.makespan, 95);
+        assert_eq!(m.completion["a"], 80);
+        assert_eq!(m.completion["b"], 95);
+        assert_eq!(m.start["a"], 0);
+        assert_eq!(m.start["b"], 10);
+        assert_eq!(m.total_activity.macs, 300);
+    }
+
+    #[test]
+    fn partition_traces() {
+        let mut m = RunMetrics::default();
+        m.record_dispatch(rec("a", 0, 128, 0, 10));
+        m.record_dispatch(rec("a", 1, 32, 10, 20));
+        m.record_dispatch(rec("a", 2, 32, 20, 30));
+        assert_eq!(m.partition_trace("a"), vec![128, 32, 32]);
+        assert_eq!(m.partition_widths("a"), vec![32, 128]);
+        assert!(m.partition_trace("nope").is_empty());
+    }
+
+    #[test]
+    fn utilization_formula() {
+        let mut m = RunMetrics::default();
+        m.record_dispatch(rec("a", 0, 128, 0, 100));
+        let geom = ArrayGeometry::new(10, 10);
+        assert!((m.utilization(geom) - 100.0 / (100.0 * 100.0)).abs() < 1e-12);
+    }
+}

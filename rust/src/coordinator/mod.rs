@@ -1,0 +1,32 @@
+//! The paper's contribution: the dynamic resource-partitioning coordinator
+//! (Algorithm 1, Fig. 5).
+//!
+//! - [`queue`] — the DNNG task queue: arrivals, per-DNN layer progress,
+//!   ready-layer extraction (DAG predecessors honored).
+//! - [`partition`] — the partition manager: vertical slices of the array,
+//!   allocation, freeing, and adjacent-free merging.
+//! - [`scheduler`] — the event-driven dynamic partitioning scheduler: the
+//!   `Partition_Calculation` / `Task_Assignment` / partitioned-WS loop of
+//!   the paper, producing a full dispatch log.
+//! - [`baseline`] — the single-tenant sequential baseline the paper
+//!   compares against (whole array per layer, DNNs back-to-back).
+//! - [`static_part`] — ablation: fixed equal partitions, no merging.
+//! - [`multi_array`] — comparator: the §5 related-work alternative of
+//!   allocating whole DNNs to separate chips (TPU-pod style).
+//! - [`metrics`] — run metrics: makespan, per-DNN completion, utilization,
+//!   the partition-size dispatch log behind Fig. 9(c)(d), energy hookup.
+//! - [`service`] — the multi-tenant serving loop that executes scheduler
+//!   decisions on the PJRT runtime (real numerics; used by `e2e_serve`).
+
+pub mod baseline;
+pub mod metrics;
+pub mod multi_array;
+pub mod partition;
+pub mod queue;
+pub mod scheduler;
+pub mod service;
+pub mod static_part;
+
+pub use metrics::{DispatchRecord, RunMetrics};
+pub use partition::PartitionManager;
+pub use scheduler::{DynamicScheduler, SchedulerConfig};

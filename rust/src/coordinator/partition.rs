@@ -1,0 +1,250 @@
+//! The partition manager — vertical slices of the PE array with
+//! allocate / free / merge-adjacent-free semantics (paper §3.1–3.3).
+//!
+//! Invariants (checked in debug builds and by property tests):
+//! - slices tile the array: disjoint, sorted, covering `[0, cols)`;
+//! - free neighbours are always merged (canonical form), so the number of
+//!   free slices is minimal;
+//! - allocation carves from one free slice, leaving the remainder free.
+
+use crate::sim::partitioned::PartitionSlice;
+
+/// Allocation handle: index into the live allocation table.
+pub type AllocId = usize;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Region {
+    slice: PartitionSlice,
+    /// `None` = free; `Some(id)` = allocated.
+    owner: Option<AllocId>,
+}
+
+/// Manages the vertical partitioning of an array `cols` wide.
+#[derive(Debug, Clone)]
+pub struct PartitionManager {
+    cols: u64,
+    regions: Vec<Region>,
+    next_id: AllocId,
+}
+
+impl PartitionManager {
+    pub fn new(cols: u64) -> PartitionManager {
+        assert!(cols > 0);
+        PartitionManager {
+            cols,
+            regions: vec![Region { slice: PartitionSlice::new(0, cols), owner: None }],
+            next_id: 0,
+        }
+    }
+
+    pub fn cols(&self) -> u64 {
+        self.cols
+    }
+
+    /// Widths of free slices, descending.
+    pub fn free_widths(&self) -> Vec<u64> {
+        let mut w: Vec<u64> =
+            self.regions.iter().filter(|r| r.owner.is_none()).map(|r| r.slice.width).collect();
+        w.sort_unstable_by(|a, b| b.cmp(a));
+        w
+    }
+
+    /// Total free columns.
+    pub fn free_cols(&self) -> u64 {
+        self.regions.iter().filter(|r| r.owner.is_none()).map(|r| r.slice.width).sum()
+    }
+
+    /// Number of live allocations.
+    pub fn allocated_count(&self) -> usize {
+        self.regions.iter().filter(|r| r.owner.is_some()).count()
+    }
+
+    /// Widest free slice, if any.
+    pub fn widest_free(&self) -> Option<PartitionSlice> {
+        self.regions
+            .iter()
+            .filter(|r| r.owner.is_none())
+            .map(|r| r.slice)
+            .max_by_key(|s| (s.width, u64::MAX - s.col0))
+    }
+
+    /// Allocate `width` columns from the widest free slice (carving from
+    /// its left edge).  Returns the allocation id and slice, or `None` if
+    /// no free slice is wide enough.
+    pub fn allocate(&mut self, width: u64) -> Option<(AllocId, PartitionSlice)> {
+        assert!(width > 0);
+        let idx = self
+            .regions
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.owner.is_none() && r.slice.width >= width)
+            .max_by_key(|(_, r)| r.slice.width)
+            .map(|(i, _)| i)?;
+
+        let id = self.next_id;
+        self.next_id += 1;
+        let old = self.regions[idx].slice;
+        let alloc = PartitionSlice::new(old.col0, width);
+        if old.width == width {
+            self.regions[idx].owner = Some(id);
+        } else {
+            self.regions[idx] = Region { slice: alloc, owner: Some(id) };
+            self.regions.insert(
+                idx + 1,
+                Region { slice: PartitionSlice::new(old.col0 + width, old.width - width), owner: None },
+            );
+        }
+        self.debug_check();
+        Some((id, alloc))
+    }
+
+    /// Free an allocation, merging with adjacent free slices (paper:
+    /// "these partitions may be merged if they are adjacent").
+    pub fn free(&mut self, id: AllocId) -> PartitionSlice {
+        let idx = self
+            .regions
+            .iter()
+            .position(|r| r.owner == Some(id))
+            .unwrap_or_else(|| panic!("free of unknown allocation {id}"));
+        self.regions[idx].owner = None;
+        // Merge right then left.
+        if idx + 1 < self.regions.len() && self.regions[idx + 1].owner.is_none() {
+            let right = self.regions.remove(idx + 1);
+            self.regions[idx].slice = self.regions[idx].slice.merge(&right.slice);
+        }
+        let mut idx = idx;
+        if idx > 0 && self.regions[idx - 1].owner.is_none() {
+            let cur = self.regions.remove(idx);
+            idx -= 1;
+            self.regions[idx].slice = self.regions[idx].slice.merge(&cur.slice);
+        }
+        self.debug_check();
+        self.regions[idx].slice
+    }
+
+    /// The slice of a live allocation.
+    pub fn slice_of(&self, id: AllocId) -> Option<PartitionSlice> {
+        self.regions.iter().find(|r| r.owner == Some(id)).map(|r| r.slice)
+    }
+
+    /// True when the whole array is one free slice.
+    pub fn fully_free(&self) -> bool {
+        self.regions.len() == 1 && self.regions[0].owner.is_none()
+    }
+
+    fn debug_check(&self) {
+        debug_assert!(self.check_invariants().is_ok(), "{:?}", self.check_invariants());
+    }
+
+    /// Validate tiling + canonical-merge invariants (used by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut expected_col = 0u64;
+        let mut prev_free = false;
+        for r in &self.regions {
+            if r.slice.col0 != expected_col {
+                return Err(format!("gap/overlap at col {expected_col}: {:?}", r.slice));
+            }
+            expected_col = r.slice.end();
+            let is_free = r.owner.is_none();
+            if is_free && prev_free {
+                return Err(format!("unmerged adjacent free slices at {:?}", r.slice));
+            }
+            prev_free = is_free;
+        }
+        if expected_col != self.cols {
+            return Err(format!("slices cover {expected_col} of {} cols", self.cols));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn starts_fully_free() {
+        let pm = PartitionManager::new(128);
+        assert!(pm.fully_free());
+        assert_eq!(pm.free_cols(), 128);
+        assert_eq!(pm.widest_free().unwrap().width, 128);
+    }
+
+    #[test]
+    fn allocate_carves_left_edge() {
+        let mut pm = PartitionManager::new(128);
+        let (a, sa) = pm.allocate(32).unwrap();
+        assert_eq!(sa, PartitionSlice::new(0, 32));
+        let (_b, sb) = pm.allocate(64).unwrap();
+        assert_eq!(sb, PartitionSlice::new(32, 64));
+        assert_eq!(pm.free_cols(), 32);
+        assert_eq!(pm.slice_of(a), Some(sa));
+    }
+
+    #[test]
+    fn free_merges_adjacent() {
+        let mut pm = PartitionManager::new(128);
+        let (a, _) = pm.allocate(32).unwrap();
+        let (b, _) = pm.allocate(32).unwrap();
+        let (c, _) = pm.allocate(32).unwrap();
+        // Free middle: no merge (neighbours busy).
+        pm.free(b);
+        assert_eq!(pm.free_widths(), vec![32, 32]);
+        // Free left: merges with the freed middle.
+        let merged = pm.free(a);
+        assert_eq!(merged, PartitionSlice::new(0, 64));
+        assert_eq!(pm.free_widths(), vec![64, 32]);
+        // Free right: merges everything.
+        pm.free(c);
+        assert!(pm.fully_free());
+    }
+
+    #[test]
+    fn allocation_failure_leaves_state_intact() {
+        let mut pm = PartitionManager::new(64);
+        let (_a, _) = pm.allocate(48).unwrap();
+        assert!(pm.allocate(32).is_none());
+        assert_eq!(pm.free_cols(), 16);
+        assert!(pm.allocate(16).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown allocation")]
+    fn double_free_panics() {
+        let mut pm = PartitionManager::new(64);
+        let (a, _) = pm.allocate(16).unwrap();
+        pm.free(a);
+        pm.free(a);
+    }
+
+    #[test]
+    fn random_alloc_free_preserves_invariants() {
+        prop::check("partition manager invariants", 200, |rng| {
+            let cols = *rng.choose(&[16u64, 64, 128, 256]);
+            let mut pm = PartitionManager::new(cols);
+            let mut live: Vec<AllocId> = Vec::new();
+            for _ in 0..64 {
+                if live.is_empty() || rng.gen_bool(0.55) {
+                    let w = rng.gen_range_inclusive(1, cols / 2);
+                    if let Some((id, s)) = pm.allocate(w) {
+                        prop::ensure_eq(s.width, w, "allocated width")?;
+                        live.push(id);
+                    }
+                } else {
+                    let i = rng.gen_range(live.len() as u64) as usize;
+                    pm.free(live.swap_remove(i));
+                }
+                pm.check_invariants()?;
+                let alloc_cols: u64 =
+                    live.iter().map(|&id| pm.slice_of(id).unwrap().width).sum();
+                prop::ensure_eq(alloc_cols + pm.free_cols(), cols, "conservation")?;
+            }
+            for id in live {
+                pm.free(id);
+                pm.check_invariants()?;
+            }
+            prop::ensure(pm.fully_free(), "all freed -> fully free")
+        });
+    }
+}

@@ -1,0 +1,232 @@
+//! The DNNG task queue — arrivals and ready-layer tracking.
+//!
+//! A layer is *ready* when its DNN has arrived, all its DAG predecessors
+//! have completed, and it is neither running nor completed.  For the
+//! chain-topology networks of the zoo this reduces to "the next layer",
+//! but the tracker honors arbitrary forward edges.
+
+use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
+
+/// Execution state of one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LayerState {
+    Waiting,
+    Running,
+    Done,
+}
+
+/// A ready-to-run layer reference with its sort key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadyLayer {
+    pub dnn: DnnId,
+    pub layer: LayerId,
+    /// `Opr(l)` — Eq. 2, the paper's priority key.
+    pub opr: u64,
+}
+
+/// Tracks the execution state of every layer in a pool.
+///
+/// Ready-set maintenance is incremental (indegree counting over the DAG
+/// edges) — `ready_at` is called at every scheduling point and a full
+/// layers×edges rescan dominated the scheduler's profile (see
+/// EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct TaskQueue<'a> {
+    pool: &'a WorkloadPool,
+    state: Vec<Vec<LayerState>>,
+    /// Unsatisfied-predecessor counts.
+    indeg: Vec<Vec<usize>>,
+    /// Successor adjacency (from the edge lists, built once).
+    succs: Vec<Vec<Vec<LayerId>>>,
+    /// Layers with indeg 0 that are still Waiting (arrival NOT yet
+    /// checked — `ready_at` filters by the DNN arrival time).
+    frontier: Vec<(DnnId, LayerId)>,
+    remaining: usize,
+}
+
+impl<'a> TaskQueue<'a> {
+    pub fn new(pool: &'a WorkloadPool) -> TaskQueue<'a> {
+        let state: Vec<Vec<LayerState>> =
+            pool.dnns.iter().map(|d| vec![LayerState::Waiting; d.layers.len()]).collect();
+        let mut indeg: Vec<Vec<usize>> =
+            pool.dnns.iter().map(|d| vec![0; d.layers.len()]).collect();
+        let mut succs: Vec<Vec<Vec<LayerId>>> =
+            pool.dnns.iter().map(|d| vec![Vec::new(); d.layers.len()]).collect();
+        let mut frontier = Vec::new();
+        for (di, dnn) in pool.dnns.iter().enumerate() {
+            for &(f, t) in &dnn.edges {
+                indeg[di][t] += 1;
+                succs[di][f].push(t);
+            }
+            for li in 0..dnn.layers.len() {
+                if indeg[di][li] == 0 {
+                    frontier.push((di, li));
+                }
+            }
+        }
+        let remaining = pool.total_layers();
+        TaskQueue { pool, state, indeg, succs, frontier, remaining }
+    }
+
+    /// Layers runnable at time `now`, sorted by `Opr` descending (the
+    /// paper's `Task_Assignment` order; ties broken by (dnn, layer) for
+    /// determinism).
+    pub fn ready_at(&self, now: u64) -> Vec<ReadyLayer> {
+        let mut ready: Vec<ReadyLayer> = self
+            .frontier
+            .iter()
+            .filter(|&&(di, li)| {
+                self.pool.dnns[di].arrival_cycles <= now
+                    && self.state[di][li] == LayerState::Waiting
+            })
+            .map(|&(di, li)| ReadyLayer {
+                dnn: di,
+                layer: li,
+                opr: self.pool.dnns[di].layers[li].shape.opr(),
+            })
+            .collect();
+        ready.sort_by(|a, b| b.opr.cmp(&a.opr).then(a.dnn.cmp(&b.dnn)).then(a.layer.cmp(&b.layer)));
+        ready
+    }
+
+    /// Earliest future arrival after `now`, if any (for event scheduling).
+    pub fn next_arrival_after(&self, now: u64) -> Option<u64> {
+        self.pool
+            .dnns
+            .iter()
+            .enumerate()
+            .filter(|(di, d)| {
+                d.arrival_cycles > now
+                    && self.state[*di].iter().any(|s| *s == LayerState::Waiting)
+            })
+            .map(|(_, d)| d.arrival_cycles)
+            .min()
+    }
+
+    pub fn mark_running(&mut self, dnn: DnnId, layer: LayerId) {
+        assert_eq!(self.state[dnn][layer], LayerState::Waiting, "double dispatch of {dnn}/{layer}");
+        self.state[dnn][layer] = LayerState::Running;
+        // Drop from the frontier (swap_remove keeps ready_at O(frontier)).
+        if let Some(pos) = self.frontier.iter().position(|&(d, l)| d == dnn && l == layer) {
+            self.frontier.swap_remove(pos);
+        }
+    }
+
+    pub fn mark_done(&mut self, dnn: DnnId, layer: LayerId) {
+        assert_eq!(self.state[dnn][layer], LayerState::Running, "completing non-running {dnn}/{layer}");
+        self.state[dnn][layer] = LayerState::Done;
+        self.remaining -= 1;
+        // Release successors whose last unsatisfied predecessor this was.
+        for si in 0..self.succs[dnn][layer].len() {
+            let succ = self.succs[dnn][layer][si];
+            self.indeg[dnn][succ] -= 1;
+            if self.indeg[dnn][succ] == 0 {
+                debug_assert_eq!(self.state[dnn][succ], LayerState::Waiting);
+                self.frontier.push((dnn, succ));
+            }
+        }
+    }
+
+    /// Layers not yet done.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.remaining == 0
+    }
+
+    /// True when every layer of `dnn` is done.
+    pub fn dnn_done(&self, dnn: DnnId) -> bool {
+        self.state[dnn].iter().all(|s| *s == LayerState::Done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::dnng::{Dnn, Layer};
+    use crate::workloads::shapes::{LayerKind, LayerShape};
+
+    fn pool() -> WorkloadPool {
+        let mk = |name: &str, sizes: &[u64], at: u64| {
+            let layers = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &m)| Layer::new(&format!("l{i}"), LayerKind::Fc, LayerShape::fc(1, 64, m)))
+                .collect();
+            Dnn::chain(name, layers).arriving_at(at)
+        };
+        WorkloadPool::new("t", vec![mk("a", &[100, 50], 0), mk("b", &[200], 10)])
+    }
+
+    #[test]
+    fn only_first_chain_layer_ready() {
+        let p = pool();
+        let q = TaskQueue::new(&p);
+        let r = q.ready_at(0);
+        assert_eq!(r.len(), 1);
+        assert_eq!((r[0].dnn, r[0].layer), (0, 0));
+    }
+
+    #[test]
+    fn arrival_gating() {
+        let p = pool();
+        let q = TaskQueue::new(&p);
+        assert_eq!(q.ready_at(9).len(), 1);
+        let r10 = q.ready_at(10);
+        assert_eq!(r10.len(), 2);
+        // Sorted by Opr desc: b/l0 (m=200) before a/l0 (m=100).
+        assert_eq!((r10[0].dnn, r10[0].layer), (1, 0));
+        assert_eq!(q.next_arrival_after(0), Some(10));
+        assert_eq!(q.next_arrival_after(10), None);
+    }
+
+    #[test]
+    fn chain_progression() {
+        let p = pool();
+        let mut q = TaskQueue::new(&p);
+        q.mark_running(0, 0);
+        assert!(q.ready_at(0).is_empty(), "layer 1 blocked by running layer 0");
+        q.mark_done(0, 0);
+        let r = q.ready_at(0);
+        assert_eq!((r[0].dnn, r[0].layer), (0, 1));
+        assert!(!q.dnn_done(0));
+        q.mark_running(0, 1);
+        q.mark_done(0, 1);
+        assert!(q.dnn_done(0));
+        assert_eq!(q.remaining(), 1);
+        assert!(!q.all_done());
+    }
+
+    #[test]
+    #[should_panic(expected = "double dispatch")]
+    fn double_dispatch_panics() {
+        let p = pool();
+        let mut q = TaskQueue::new(&p);
+        q.mark_running(0, 0);
+        q.mark_running(0, 0);
+    }
+
+    #[test]
+    fn dag_predecessors_honored() {
+        // Diamond: 0 -> {1, 2} -> 3.
+        let layers = (0..4)
+            .map(|i| Layer::new(&format!("l{i}"), LayerKind::Fc, LayerShape::fc(1, 8, 8 + i)))
+            .collect();
+        let mut d = Dnn::chain("diamond", layers);
+        d.edges = vec![(0, 1), (0, 2), (1, 3), (2, 3)];
+        let p = WorkloadPool::new("t", vec![d]);
+        let mut q = TaskQueue::new(&p);
+        q.mark_running(0, 0);
+        q.mark_done(0, 0);
+        let r = q.ready_at(0);
+        assert_eq!(r.len(), 2, "both branches ready");
+        q.mark_running(0, 1);
+        q.mark_done(0, 1);
+        assert!(q.ready_at(0).iter().all(|r| r.layer != 3), "join blocked on branch 2");
+        q.mark_running(0, 2);
+        q.mark_done(0, 2);
+        assert_eq!(q.ready_at(0)[0].layer, 3);
+    }
+}

@@ -1,0 +1,469 @@
+//! The dynamic resource-partitioning scheduler — Algorithm 1 (Fig. 5).
+//!
+//! Event-driven simulation over layer completions and DNN arrivals:
+//!
+//! 1. The first ready layer on an idle array takes **all** PEs (Line 6).
+//! 2. At every scheduling point (a completion or an arrival), the ready
+//!    layers are sorted by `Opr` (Eq. 2) descending (`Task_Assignment`,
+//!    Lines 20–27) and assigned heaviest-first to the widest free
+//!    partitions.
+//! 3. `Partition_Calculation` (Lines 15–19) sizes partitions as
+//!    `cols / n_available` — rounded down to a power of two so widths land
+//!    on the {16, 32, 64, 128} ladder of Fig. 9(c)(d) — clamped to
+//!    `min_width` (default `cols/8 = 16`).
+//! 4. Completed layers free their slice; adjacent free slices merge
+//!    (§3.3), so a late straggler can reclaim the whole array.
+//!
+//! Layer execution time comes from the partitioned-WS analytic model
+//! ([`crate::sim::partitioned`]), optionally DRAM-bandwidth-bounded.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::metrics::{DispatchRecord, RunMetrics};
+use super::partition::{AllocId, PartitionManager};
+use super::queue::TaskQueue;
+use crate::sim::buffers::BufferConfig;
+use crate::sim::dataflow::ArrayGeometry;
+use crate::sim::dram::DramConfig;
+use crate::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
+use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
+
+/// Feed-bus model selector for the scheduler (the per-dispatch slot/count
+/// is filled in from live occupancy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FeedModel {
+    /// Paper model: partitions stream independently.
+    #[default]
+    Independent,
+    /// Conservative physical model: row wires time-sliced among all
+    /// co-resident partitions at dispatch time.
+    Interleaved,
+}
+
+/// Partition-width allocation policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AllocPolicy {
+    /// `Task_Assignment` faithful: the heaviest ready layer takes the
+    /// widest free slice up to its demand; lighter layers take what
+    /// remains.  "Layers with higher dimensions are assigned to the
+    /// partitions with higher resources" (§3.3).
+    #[default]
+    WidestToHeaviest,
+    /// Literal `Partition_Calculation`: every ready layer gets
+    /// `cols / n_available` (power-of-two ladder), regardless of demand.
+    /// Kept as an ablation (`ablation_alloc_policy`).
+    EqualShare,
+}
+
+/// Scheduler configuration.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    pub geom: ArrayGeometry,
+    pub buffers: BufferConfig,
+    /// Narrowest partition the scheduler will create.
+    pub min_width: u64,
+    pub feed_model: FeedModel,
+    pub alloc_policy: AllocPolicy,
+    /// Patience: a layer dispatches only into a slice ≥ `demand /
+    /// patience_divisor`; otherwise it waits for merges (unless nothing is
+    /// running).  Folding a wide-M layer into a sliver multiplies its fold
+    /// count, so impatience costs far more than waiting.
+    pub patience_divisor: u64,
+    /// Apply the DRAM bandwidth bound to layer times.
+    pub dram: Option<DramConfig>,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        let geom = ArrayGeometry::new(128, 128);
+        SchedulerConfig {
+            geom,
+            buffers: BufferConfig::default(),
+            min_width: geom.cols / 8,
+            feed_model: FeedModel::Independent,
+            alloc_policy: AllocPolicy::WidestToHeaviest,
+            patience_divisor: 4,
+            dram: None,
+        }
+    }
+}
+
+/// Largest power of two ≤ `x` (x ≥ 1).
+fn floor_pow2(x: u64) -> u64 {
+    debug_assert!(x >= 1);
+    1 << (63 - x.leading_zeros() as u64)
+}
+
+/// Smallest power of two ≥ `x` (x ≥ 1).
+fn ceil_pow2(x: u64) -> u64 {
+    debug_assert!(x >= 1);
+    x.next_power_of_two()
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Completion {
+    t_end: u64,
+    dnn: DnnId,
+    layer: LayerId,
+    alloc: AllocId,
+    t_start: u64,
+}
+
+impl Ord for Completion {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.t_end, self.dnn, self.layer).cmp(&(other.t_end, other.dnn, other.layer))
+    }
+}
+impl PartialOrd for Completion {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The dynamic partitioning scheduler.
+#[derive(Debug, Clone)]
+pub struct DynamicScheduler {
+    cfg: SchedulerConfig,
+}
+
+impl DynamicScheduler {
+    pub fn new(cfg: SchedulerConfig) -> DynamicScheduler {
+        assert!(cfg.min_width >= 1 && cfg.min_width <= cfg.geom.cols);
+        DynamicScheduler { cfg }
+    }
+
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    /// Run a pool to completion; returns the full metrics.
+    pub fn run(&self, pool: &WorkloadPool) -> RunMetrics {
+        let cfg = &self.cfg;
+        let mut queue = TaskQueue::new(pool);
+        let mut pm = PartitionManager::new(cfg.geom.cols);
+        let mut metrics = RunMetrics::default();
+        let mut events: BinaryHeap<Reverse<Completion>> = BinaryHeap::new();
+        let mut now = 0u64;
+
+        loop {
+            // ---- dispatch phase at `now` -------------------------------
+            let ready = queue.ready_at(now);
+            if !ready.is_empty() {
+                // Partition_Calculation (Lines 15-19): divide the array by
+                // the number of available layers (running partitions keep
+                // their slices), on the power-of-two ladder.
+                let n_avail = ready.len() as u64 + pm.allocated_count() as u64;
+                let target = floor_pow2((cfg.geom.cols / n_avail).max(1))
+                    .clamp(cfg.min_width, cfg.geom.cols);
+
+                let mut dispatched_any = false;
+                for r in ready {
+                    // Width demand: a layer gains nothing beyond its GEMM
+                    // column count M (Task_Assignment's "layers with higher
+                    // dimensions to partitions with higher resources").
+                    let m_cols = pool.dnns[r.dnn].layers[r.layer].shape.gemm().m;
+                    let demand =
+                        ceil_pow2(m_cols).clamp(cfg.min_width, cfg.geom.cols);
+
+                    // First layer on a fully idle array: all PEs (Line 6).
+                    if pm.fully_free() && n_avail == 1 {
+                        let (alloc, slice) = pm.allocate(cfg.geom.cols).expect("full array free");
+                        queue.mark_running(r.dnn, r.layer);
+                        let cycles = self.layer_cycles(pool, r.dnn, r.layer, slice, 1);
+                        events.push(Reverse(Completion {
+                            t_end: now + cycles,
+                            dnn: r.dnn,
+                            layer: r.layer,
+                            alloc,
+                            t_start: now,
+                        }));
+                        dispatched_any = true;
+                        continue;
+                    }
+
+                    let widest = pm.widest_free().map(|s| s.width).unwrap_or(0);
+                    if widest < cfg.min_width {
+                        continue; // nothing usable free right now
+                    }
+                    let width = match cfg.alloc_policy {
+                        // Paper-literal Partition_Calculation: take the
+                        // equal share (capped by demand), no waiting.
+                        AllocPolicy::EqualShare => demand.min(target).min(floor_pow2(widest)),
+                        // Demand-aware: the heaviest ready layer takes the
+                        // widest free slice up to its demand.  Patience: a
+                        // layer whose demand cannot be reasonably met WAITS
+                        // for merges instead of exploding its fold count in
+                        // a sliver — unless nothing is running (progress
+                        // guarantee: take the best slice available).
+                        AllocPolicy::WidestToHeaviest => {
+                            let width = demand.min(floor_pow2(widest));
+                            let acceptable =
+                                (demand / cfg.patience_divisor).max(cfg.min_width);
+                            if width >= acceptable {
+                                width
+                            } else if pm.allocated_count() == 0 && !dispatched_any {
+                                floor_pow2(widest)
+                            } else {
+                                continue; // wait for a completion to merge space
+                            }
+                        }
+                    };
+                    let Some((alloc, slice)) = pm.allocate(width) else { continue };
+                    queue.mark_running(r.dnn, r.layer);
+                    dispatched_any = true;
+
+                    let coresident = pm.allocated_count() as u64;
+                    let cycles = self.layer_cycles(pool, r.dnn, r.layer, slice, coresident);
+                    events.push(Reverse(Completion {
+                        t_end: now + cycles,
+                        dnn: r.dnn,
+                        layer: r.layer,
+                        alloc,
+                        t_start: now,
+                    }));
+                }
+            }
+
+            // ---- advance time ------------------------------------------
+            let next_completion = events.peek().map(|Reverse(c)| c.t_end);
+            let next_arrival = queue.next_arrival_after(now);
+            match (next_completion, next_arrival) {
+                (None, None) => break,
+                (None, Some(t_arr)) => {
+                    // Idle until the next DNN arrives.
+                    now = t_arr;
+                }
+                (Some(t_done), t_arr) => {
+                    if let Some(t_arr) = t_arr {
+                        if t_arr < t_done {
+                            now = t_arr;
+                            continue; // dispatch newly arrived work first
+                        }
+                    }
+                    now = t_done;
+                    // Retire every completion at this timestamp.
+                    while let Some(Reverse(c)) = events.peek().copied() {
+                        if c.t_end != now {
+                            break;
+                        }
+                        events.pop();
+                        let slice = pm.slice_of(c.alloc).expect("completion of live alloc");
+                        pm.free(c.alloc);
+                        queue.mark_done(c.dnn, c.layer);
+                        let layer = &pool.dnns[c.dnn].layers[c.layer];
+                        let timing = slice_layer_timing(
+                            cfg.geom,
+                            layer.shape.gemm(),
+                            slice,
+                            FeedPolicy::Independent, // activity is policy-invariant
+                            &cfg.buffers,
+                        );
+                        metrics.record_dispatch(DispatchRecord {
+                            dnn: c.dnn,
+                            dnn_name: pool.dnns[c.dnn].name.clone(),
+                            layer: c.layer,
+                            layer_name: layer.name.clone(),
+                            slice,
+                            t_start: c.t_start,
+                            t_end: c.t_end,
+                            activity: timing.activity,
+                        });
+                    }
+                }
+            }
+            if queue.all_done() && events.is_empty() {
+                break;
+            }
+        }
+
+        debug_assert!(queue.all_done(), "scheduler exited with pending layers");
+        metrics
+    }
+
+    /// Cycles for one layer on `slice` with `coresident` live partitions.
+    fn layer_cycles(
+        &self,
+        pool: &WorkloadPool,
+        dnn: DnnId,
+        layer: LayerId,
+        slice: PartitionSlice,
+        coresident: u64,
+    ) -> u64 {
+        let cfg = &self.cfg;
+        let gemm = pool.dnns[dnn].layers[layer].shape.gemm();
+        let policy = match cfg.feed_model {
+            FeedModel::Independent => FeedPolicy::Independent,
+            FeedModel::Interleaved => FeedPolicy::Interleaved {
+                coresident: coresident.max(1),
+                slot: coresident.saturating_sub(1),
+            },
+        };
+        let t = slice_layer_timing(cfg.geom, gemm, slice, policy, &cfg.buffers);
+        match &cfg.dram {
+            Some(d) => d.bound_cycles(t.cycles, &t.activity),
+            None => t.cycles,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::baseline::SequentialBaseline;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+    use crate::workloads::dnng::{Dnn, Layer};
+    use crate::workloads::generator::{random_pool, GeneratorCfg};
+    use crate::workloads::shapes::{LayerKind, LayerShape};
+
+    fn fc_dnn(name: &str, ms: &[u64], at: u64) -> Dnn {
+        let layers = ms
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| {
+                Layer::new(&format!("l{i}"), LayerKind::Fc, LayerShape::fc(64, 128, m))
+            })
+            .collect();
+        Dnn::chain(name, layers).arriving_at(at)
+    }
+
+    #[test]
+    fn floor_pow2_ladder() {
+        assert_eq!(floor_pow2(128), 128);
+        assert_eq!(floor_pow2(64), 64);
+        assert_eq!(floor_pow2(42), 32);
+        assert_eq!(floor_pow2(17), 16);
+        assert_eq!(floor_pow2(1), 1);
+    }
+
+    #[test]
+    fn single_dnn_first_layer_gets_full_array() {
+        let pool = WorkloadPool::new("t", vec![fc_dnn("a", &[256, 128], 0)]);
+        let m = DynamicScheduler::new(SchedulerConfig::default()).run(&pool);
+        assert_eq!(m.dispatches[0].slice.width, 128, "first layer uses all PEs");
+        assert_eq!(m.partition_trace("a").len(), 2);
+    }
+
+    #[test]
+    fn two_dnns_split_under_contention() {
+        // Narrow-demand layers (m = 64): two can share the array.
+        let pool = WorkloadPool::new(
+            "t",
+            vec![fc_dnn("a", &[64, 64, 64], 0), fc_dnn("b", &[64, 64], 0)],
+        );
+        let m = DynamicScheduler::new(SchedulerConfig::default()).run(&pool);
+        // Two DNNs arrive together: Algorithm 1 splits immediately (the
+        // full-array rule only applies to a lone available layer).
+        let widths_a = m.partition_widths("a");
+        let widths_b = m.partition_widths("b");
+        assert!(
+            widths_a.iter().chain(&widths_b).any(|&w| w < 128),
+            "contention must produce sub-partitions: {widths_a:?} {widths_b:?}"
+        );
+        // Both DNNs make progress concurrently: b's first layer starts
+        // before a's last layer ends.
+        let a_last_end = m.dispatches.iter().filter(|d| d.dnn_name == "a").map(|d| d.t_end).max().unwrap();
+        let b_first_start = m.dispatches.iter().filter(|d| d.dnn_name == "b").map(|d| d.t_start).min().unwrap();
+        assert!(b_first_start < a_last_end);
+    }
+
+    #[test]
+    fn all_layers_execute_exactly_once() {
+        let pool = WorkloadPool::new(
+            "t",
+            vec![fc_dnn("a", &[100, 200, 300], 0), fc_dnn("b", &[400], 5000), fc_dnn("c", &[50, 60], 0)],
+        );
+        let m = DynamicScheduler::new(SchedulerConfig::default()).run(&pool);
+        assert_eq!(m.dispatches.len(), 6);
+        for d in &pool.dnns {
+            let trace = m.partition_trace(&d.name);
+            assert_eq!(trace.len(), d.layers.len(), "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn chain_order_preserved() {
+        let pool = WorkloadPool::new("t", vec![fc_dnn("a", &[64, 64, 64, 64], 0)]);
+        let m = DynamicScheduler::new(SchedulerConfig::default()).run(&pool);
+        let recs: Vec<_> = m.dispatches.iter().filter(|d| d.dnn_name == "a").collect();
+        for w in recs.windows(2) {
+            assert!(w[0].layer < w[1].layer);
+            assert!(w[0].t_end <= w[1].t_start, "layer i+1 cannot start before i ends");
+        }
+    }
+
+    #[test]
+    fn arrival_times_respected() {
+        let pool = WorkloadPool::new("t", vec![fc_dnn("late", &[64], 1_000_000)]);
+        let m = DynamicScheduler::new(SchedulerConfig::default()).run(&pool);
+        assert!(m.dispatches[0].t_start >= 1_000_000);
+    }
+
+    #[test]
+    fn min_width_respected() {
+        let mut dnns = Vec::new();
+        for i in 0..20 {
+            dnns.push(fc_dnn(&format!("d{i}"), &[64, 64], 0));
+        }
+        let pool = WorkloadPool::new("t", dnns);
+        let cfg = SchedulerConfig { min_width: 16, ..Default::default() };
+        let m = DynamicScheduler::new(cfg).run(&pool);
+        assert!(m.dispatches.iter().all(|d| d.slice.width >= 16));
+    }
+
+    #[test]
+    fn partitioned_bounded_vs_sequential_on_random_pools() {
+        // Makespan under dynamic partitioning is not a theorem — a pool of
+        // wide-M layers gains nothing from splitting (WS throughput is
+        // proportional to columns when M > width) — but the demand-aware
+        // policy must keep the downside tightly bounded while winning on
+        // average-completion latency is checked on the zoo pools in
+        // rust/tests/paper_experiments.rs.
+        prop::check("dynamic makespan <= 1.25x sequential", 15, |rng| {
+            let cfg = GeneratorCfg {
+                num_dnns: rng.gen_range_inclusive(2, 6) as usize,
+                layers_min: 2,
+                layers_max: 8,
+                mean_interarrival: 0.0,
+                dim_scale: 0.5 + rng.gen_f64(),
+            };
+            let pool = random_pool(rng, &cfg);
+            let dyn_m = DynamicScheduler::new(SchedulerConfig::default()).run(&pool);
+            let seq_m = SequentialBaseline::new(SchedulerConfig::default()).run(&pool);
+            prop::ensure(
+                dyn_m.makespan as f64 <= 1.25 * seq_m.makespan as f64,
+                &format!("dynamic {} > 1.25x sequential {}", dyn_m.makespan, seq_m.makespan),
+            )
+        });
+    }
+
+    #[test]
+    fn interleaved_model_never_faster() {
+        let mut rng = Rng::new(31);
+        let pool = random_pool(
+            &mut rng,
+            &GeneratorCfg { num_dnns: 4, layers_min: 2, layers_max: 6, ..Default::default() },
+        );
+        let ind = DynamicScheduler::new(SchedulerConfig::default()).run(&pool);
+        let il = DynamicScheduler::new(SchedulerConfig {
+            feed_model: FeedModel::Interleaved,
+            ..Default::default()
+        })
+        .run(&pool);
+        assert!(il.makespan >= ind.makespan);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let mut rng = Rng::new(77);
+        let pool = random_pool(&mut rng, &GeneratorCfg::default());
+        let a = DynamicScheduler::new(SchedulerConfig::default()).run(&pool);
+        let b = DynamicScheduler::new(SchedulerConfig::default()).run(&pool);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.dispatches.len(), b.dispatches.len());
+        for (x, y) in a.dispatches.iter().zip(&b.dispatches) {
+            assert_eq!(x, y);
+        }
+    }
+}

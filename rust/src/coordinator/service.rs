@@ -1,0 +1,252 @@
+//! The multi-tenant serving loop — scheduler decisions executed for real
+//! on the PJRT runtime.
+//!
+//! Tenants submit GEMM work (`y = x·w`, one layer tile); the service groups
+//! pending requests into co-resident sets, packs them into the vertical
+//! partitions of one physical array step (`runtime::packing`), executes the
+//! AOT `pws_p{P}` artifact fold-by-fold (chaining partial sums through
+//! `acc` exactly like the cycle model's K-folds), and returns each
+//! tenant's slice.  This is the datapath a deployed multi-tenant
+//! accelerator would run — Python is never involved.
+//!
+//! Threading: a [`ServiceHandle`] fronts a worker thread with mpsc
+//! channels; the synchronous core ([`Service::serve_group`]) is separately
+//! usable (and tested) without threads.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::packing::{pack_step, pick_variant, TenantTile};
+use crate::runtime::{Engine, Tensor};
+use crate::util::ceil_div;
+
+/// One tenant GEMM request: `y[sr, m] = x[sr, k] · w[k, m]`.
+#[derive(Debug, Clone)]
+pub struct GemmRequest {
+    pub tenant: usize,
+    pub x: Tensor,
+    pub w: Tensor,
+}
+
+/// A served response.
+#[derive(Debug)]
+pub struct GemmResponse {
+    pub tenant: usize,
+    pub y: Tensor,
+    /// Wall-clock service latency (grouping + PJRT execution).
+    pub latency: Duration,
+}
+
+/// Synchronous serving core over a PJRT engine.
+pub struct Service {
+    engine: Arc<Engine>,
+    array_s: usize,
+    array_k: usize,
+    array_c: usize,
+    variants: Vec<usize>,
+}
+
+impl Service {
+    pub fn new(engine: Arc<Engine>) -> Service {
+        let m = engine.manifest();
+        let (array_s, array_k, array_c) = (m.array_s, m.array_k, m.array_c);
+        let variants = m.pws_partition_counts();
+        Service { engine, array_s, array_k, array_c, variants }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Serve one co-resident group of requests in a single partitioned
+    /// array residency (multiple K-fold steps chained through `acc`).
+    ///
+    /// Constraints per request (one array residency): `sr ≤ S`, and all
+    /// tenants' output widths must fit the array side by side (`Σ m ≤ C`).
+    /// Wider/taller layers are tiled by the caller (see `e2e_serve`).
+    pub fn serve_group(&self, reqs: &[GemmRequest]) -> Result<Vec<Tensor>> {
+        if reqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let num_p = pick_variant(&self.variants, reqs.len())
+            .with_context(|| format!("no pws variant for {} tenants", reqs.len()))?;
+
+        // Validate and compute the shared fold count.
+        let mut max_k = 0usize;
+        let mut total_m = 0usize;
+        for (i, r) in reqs.iter().enumerate() {
+            let (sr, k) = (r.x.shape()[0], r.x.shape()[1]);
+            let (k2, m) = (r.w.shape()[0], r.w.shape()[1]);
+            if k != k2 {
+                bail!("request {i}: K mismatch {k} vs {k2}");
+            }
+            if sr > self.array_s {
+                bail!("request {i}: sr {sr} > array S {}", self.array_s);
+            }
+            max_k = max_k.max(k);
+            total_m += m;
+        }
+        if total_m > self.array_c {
+            bail!("group output width {total_m} > array C {}", self.array_c);
+        }
+
+        let folds = ceil_div(max_k as u64, self.array_k as u64) as usize;
+        let mut acc = Tensor::zeros(vec![self.array_s, self.array_c]);
+        let mut last_step = None;
+        for f in 0..folds {
+            let k0 = f * self.array_k;
+            // Build each tenant's tile for this K-fold (empty range -> zero
+            // tile: the tenant simply passes its acc through).
+            let tiles: Vec<TenantTile> = reqs
+                .iter()
+                .map(|r| {
+                    let k_total = r.x.shape()[1];
+                    let k1 = (k0 + self.array_k).min(k_total);
+                    let kw = k1.saturating_sub(k0);
+                    let sr = r.x.shape()[0];
+                    let m = r.w.shape()[1];
+                    // Row-contiguous slicing (hot path; see EXPERIMENTS.md §Perf).
+                    let x = if kw == 0 {
+                        Tensor::zeros(vec![sr, 1])
+                    } else {
+                        let mut t = Tensor::zeros(vec![sr, kw]);
+                        for row in 0..sr {
+                            t.data_mut()[row * kw..(row + 1) * kw].copy_from_slice(
+                                &r.x.data()[row * k_total + k0..row * k_total + k1],
+                            );
+                        }
+                        t
+                    };
+                    let w = if kw == 0 {
+                        Tensor::zeros(vec![1, m])
+                    } else {
+                        // Rows k0..k1 of r.w are contiguous.
+                        Tensor::new(vec![kw, m], r.w.data()[k0 * m..k1 * m].to_vec())
+                    };
+                    TenantTile { tenant: r.tenant, x, w }
+                })
+                .collect();
+            let step = pack_step(&tiles, self.array_s, self.array_k, self.array_c, num_p)?;
+            acc = self.engine.execute(
+                &format!("pws_p{num_p}"),
+                &[step.x.clone(), step.w.clone(), step.mask.clone(), acc],
+            )?;
+            last_step = Some(step);
+        }
+
+        let step = last_step.expect("at least one fold");
+        Ok((0..reqs.len()).map(|i| step.unpack(&acc, i)).collect())
+    }
+}
+
+/// Commands accepted by the worker thread.
+enum Command {
+    Submit(GemmRequest, mpsc::Sender<Result<GemmResponse>>),
+    Shutdown,
+}
+
+/// Handle to a running service worker.
+pub struct ServiceHandle {
+    tx: mpsc::Sender<Command>,
+    worker: Option<thread::JoinHandle<()>>,
+}
+
+impl ServiceHandle {
+    /// Spawn the worker.  `group_window` is how long the batcher waits to
+    /// accumulate co-resident tenants before serving a partial group —
+    /// the dynamic-batching knob.
+    pub fn spawn(service: Service, max_group: usize, group_window: Duration) -> ServiceHandle {
+        let (tx, rx) = mpsc::channel::<Command>();
+        let worker = thread::spawn(move || {
+            let mut pending: Vec<(GemmRequest, mpsc::Sender<Result<GemmResponse>>, Instant)> =
+                Vec::new();
+            loop {
+                // Block for the first request; then drain the window.
+                let first = if pending.is_empty() {
+                    match rx.recv() {
+                        Ok(cmd) => Some(cmd),
+                        Err(_) => break,
+                    }
+                } else {
+                    match rx.recv_timeout(group_window) {
+                        Ok(cmd) => Some(cmd),
+                        Err(mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                };
+                match first {
+                    Some(Command::Submit(req, resp_tx)) => {
+                        pending.push((req, resp_tx, Instant::now()));
+                        if pending.len() < max_group {
+                            continue; // keep batching within the window
+                        }
+                    }
+                    Some(Command::Shutdown) => {
+                        Self::flush(&service, &mut pending);
+                        break;
+                    }
+                    None => {} // window expired -> serve what we have
+                }
+                Self::flush(&service, &mut pending);
+            }
+        });
+        ServiceHandle { tx, worker: Some(worker) }
+    }
+
+    fn flush(
+        service: &Service,
+        pending: &mut Vec<(GemmRequest, mpsc::Sender<Result<GemmResponse>>, Instant)>,
+    ) {
+        if pending.is_empty() {
+            return;
+        }
+        let group: Vec<_> = pending.drain(..).collect();
+        let reqs: Vec<GemmRequest> = group.iter().map(|(r, _, _)| r.clone()).collect();
+        match service.serve_group(&reqs) {
+            Ok(results) => {
+                for ((req, tx, t0), y) in group.into_iter().zip(results) {
+                    let _ = tx.send(Ok(GemmResponse {
+                        tenant: req.tenant,
+                        y,
+                        latency: t0.elapsed(),
+                    }));
+                }
+            }
+            Err(e) => {
+                for (_, tx, _) in group {
+                    let _ = tx.send(Err(anyhow::anyhow!("group failed: {e:#}")));
+                }
+            }
+        }
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(&self, req: GemmRequest) -> mpsc::Receiver<Result<GemmResponse>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Command::Submit(req, tx)).expect("worker alive");
+        rx
+    }
+
+    /// Drain and stop the worker.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ServiceHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+// Tests needing artifacts live in rust/tests/service_e2e.rs.

@@ -1,0 +1,137 @@
+//! Ablation: static equal partitioning without merging.
+//!
+//! The array is divided into `n_dnns` equal vertical partitions up front;
+//! DNN `i` is pinned to partition `i` for its whole lifetime.  No merging,
+//! no reallocation — what a naive multi-tenant split would do.  The
+//! `ablation_merging` bench compares this against the dynamic scheduler to
+//! isolate the value of partition merging + Opr-sorted assignment.
+
+use super::metrics::{DispatchRecord, RunMetrics};
+use super::scheduler::SchedulerConfig;
+use crate::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
+use crate::workloads::dnng::WorkloadPool;
+
+/// Static equal-partition executor.
+#[derive(Debug, Clone)]
+pub struct StaticPartitioning {
+    cfg: SchedulerConfig,
+}
+
+impl StaticPartitioning {
+    pub fn new(cfg: SchedulerConfig) -> StaticPartitioning {
+        StaticPartitioning { cfg }
+    }
+
+    /// Run the pool with one fixed partition per DNN.
+    ///
+    /// Panics if the pool has more DNNs than `cols / min_width` partitions
+    /// can host.
+    pub fn run(&self, pool: &WorkloadPool) -> RunMetrics {
+        let cfg = &self.cfg;
+        let n = pool.dnns.len() as u64;
+        assert!(n >= 1);
+        let width = (cfg.geom.cols / n).max(1);
+        assert!(
+            width >= cfg.min_width,
+            "{} DNNs need width {width} < min {}",
+            n,
+            cfg.min_width
+        );
+
+        let mut metrics = RunMetrics::default();
+        for (di, dnn) in pool.dnns.iter().enumerate() {
+            let slice = PartitionSlice::new(di as u64 * width, width);
+            let mut now = dnn.arrival_cycles;
+            for (li, layer) in dnn.layers.iter().enumerate() {
+                let t = slice_layer_timing(
+                    cfg.geom,
+                    layer.shape.gemm(),
+                    slice,
+                    FeedPolicy::Independent,
+                    &cfg.buffers,
+                );
+                let cycles = match &cfg.dram {
+                    Some(d) => d.bound_cycles(t.cycles, &t.activity),
+                    None => t.cycles,
+                };
+                metrics.record_dispatch(DispatchRecord {
+                    dnn: di,
+                    dnn_name: dnn.name.clone(),
+                    layer: li,
+                    layer_name: layer.name.clone(),
+                    slice,
+                    t_start: now,
+                    t_end: now + cycles,
+                    activity: t.activity,
+                });
+                now += cycles;
+            }
+        }
+        metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::DynamicScheduler;
+    use crate::workloads::dnng::{Dnn, Layer};
+    use crate::workloads::shapes::{LayerKind, LayerShape};
+
+    fn pool(sizes: &[&[u64]]) -> WorkloadPool {
+        let dnns = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, ms)| {
+                let layers = ms
+                    .iter()
+                    .enumerate()
+                    .map(|(j, &m)| {
+                        Layer::new(&format!("l{j}"), LayerKind::Fc, LayerShape::fc(64, 128, m))
+                    })
+                    .collect();
+                Dnn::chain(&format!("d{i}"), layers)
+            })
+            .collect();
+        WorkloadPool::new("t", dnns)
+    }
+
+    #[test]
+    fn partitions_are_fixed_and_disjoint() {
+        let p = pool(&[&[128, 128], &[128], &[128, 128, 128], &[128]]);
+        let m = StaticPartitioning::new(SchedulerConfig::default()).run(&p);
+        for d in &m.dispatches {
+            assert_eq!(d.slice.width, 32);
+            assert_eq!(d.slice.col0, d.dnn as u64 * 32);
+        }
+    }
+
+    #[test]
+    fn dynamic_beats_static_on_skewed_pools() {
+        // One long DNN + three tiny ones: the static split strands 3/4 of
+        // the array idle while the long DNN grinds on 32 columns; the
+        // dynamic scheduler lets it reclaim freed partitions.
+        let p = pool(&[
+            &[2048, 2048, 2048, 2048, 2048, 2048, 2048, 2048],
+            &[64],
+            &[64],
+            &[64],
+        ]);
+        let stat = StaticPartitioning::new(SchedulerConfig::default()).run(&p);
+        let dynm = DynamicScheduler::new(SchedulerConfig::default()).run(&p);
+        assert!(
+            dynm.makespan < stat.makespan,
+            "dynamic {} vs static {}",
+            dynm.makespan,
+            stat.makespan
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "min")]
+    fn too_many_tenants_rejected() {
+        let sizes: Vec<&[u64]> = vec![&[8]; 20];
+        let p = pool(&sizes);
+        StaticPartitioning::new(SchedulerConfig::default()).run(&p);
+    }
+}

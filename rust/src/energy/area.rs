@@ -1,0 +1,96 @@
+//! Area model at 45 nm — the other half of Accelergy's output.
+//!
+//! Anchors (published 45 nm synthesis numbers): an int8 MAC + pipeline
+//! registers ≈ 1 700 µm²; SRAM ≈ 0.35 mm² per Mbit for large mats
+//! (density ~2.9 Mbit/mm² at 45 nm with peripheral overhead); control ≈
+//! 5% of the PE array.  Per-PE overhead of the paper's proposal — one
+//! tri-state gate + the `Mul_En` control wire — is ≈ 5 µm²/PE, i.e.
+//! ~0.3% of a PE: the "no expensive hardware costs" claim, quantified.
+
+use super::components::Precision;
+use crate::sim::buffers::BufferConfig;
+use crate::sim::dataflow::ArrayGeometry;
+
+/// Area breakdown in mm².
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AreaBreakdown {
+    pub pe_array_mm2: f64,
+    pub sram_mm2: f64,
+    pub control_mm2: f64,
+    /// The paper's added tri-state gates, totalled.
+    pub mul_en_gates_mm2: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total_mm2(&self) -> f64 {
+        self.pe_array_mm2 + self.sram_mm2 + self.control_mm2 + self.mul_en_gates_mm2
+    }
+
+    /// Fractional overhead of the proposal's hardware change.
+    pub fn mul_en_overhead_fraction(&self) -> f64 {
+        self.mul_en_gates_mm2 / self.total_mm2()
+    }
+}
+
+/// PE area in µm² by datapath precision (MAC + LR + pipeline regs).
+fn pe_um2(p: Precision) -> f64 {
+    match p {
+        Precision::Int8 => 1_700.0,
+        Precision::Fp16 => 5_500.0,
+        Precision::Fp32 => 14_000.0,
+    }
+}
+
+const SRAM_MM2_PER_MBIT: f64 = 0.35;
+const MUL_EN_GATE_UM2: f64 = 5.0;
+
+/// Estimate the accelerator's area.
+pub fn estimate(geom: ArrayGeometry, bufs: &BufferConfig, precision: Precision) -> AreaBreakdown {
+    let pes = geom.pes() as f64;
+    let pe_array_mm2 = pes * pe_um2(precision) * 1e-6;
+    let sram_bits = 8.0 * (bufs.weight_bytes + bufs.ifmap_bytes + bufs.ofmap_bytes) as f64;
+    let sram_mm2 = sram_bits / 1e6 * SRAM_MM2_PER_MBIT;
+    AreaBreakdown {
+        pe_array_mm2,
+        sram_mm2,
+        control_mm2: 0.05 * pe_array_mm2,
+        mul_en_gates_mm2: pes * MUL_EN_GATE_UM2 * 1e-6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tpu_like_config_plausible() {
+        // 128x128 int8 + 24 MiB SRAM at 45 nm: tens of mm², SRAM-dominated.
+        let a = estimate(ArrayGeometry::new(128, 128), &BufferConfig::default(), Precision::Int8);
+        assert!((20.0..150.0).contains(&a.total_mm2()), "{}", a.total_mm2());
+        assert!(a.sram_mm2 > a.pe_array_mm2);
+    }
+
+    #[test]
+    fn mul_en_overhead_is_negligible() {
+        // The paper's §1 claim ("a slight hardware modification"): < 0.5%.
+        let a = estimate(ArrayGeometry::new(128, 128), &BufferConfig::default(), Precision::Int8);
+        assert!(a.mul_en_overhead_fraction() < 0.005, "{}", a.mul_en_overhead_fraction());
+    }
+
+    #[test]
+    fn precision_scales_pe_area() {
+        let geom = ArrayGeometry::new(64, 64);
+        let b = BufferConfig::default();
+        let int8 = estimate(geom, &b, Precision::Int8);
+        let fp32 = estimate(geom, &b, Precision::Fp32);
+        assert!(fp32.pe_array_mm2 > 5.0 * int8.pe_array_mm2);
+        assert_eq!(int8.sram_mm2, fp32.sram_mm2);
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let a = estimate(ArrayGeometry::new(32, 32), &BufferConfig::default(), Precision::Int8);
+        let sum = a.pe_array_mm2 + a.sram_mm2 + a.control_mm2 + a.mul_en_gates_mm2;
+        assert!((a.total_mm2() - sum).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,103 @@
+//! CACTI-P-lite: analytic SRAM access-energy and leakage model at 45 nm.
+//!
+//! CACTI's detailed circuit model reduces, for the purposes of an
+//! architecture-level estimator, to well-known scaling laws:
+//!
+//! - dynamic energy per access grows ~√capacity (bitline/wordline length
+//!   scales with the side of the mat) and linearly with word width;
+//! - leakage power grows linearly with capacity.
+//!
+//! We anchor the curves to published 45 nm reference points (Eyeriss /
+//! Horowitz ISSCC'14): an 8 KiB scratchpad costs ~5 pJ per 16-bit access;
+//! a 64-bit register ~0.1 pJ; large SRAM leaks ~10 µW per KiB at 45 nm.
+//! Absolute joules are less important than *ratios* (DRAM ≈ 100–200× a
+//! small SRAM access, SRAM ≈ 5–25× a MAC), which set the shape of the
+//! paper's Fig. 9(e)(f).
+
+/// An SRAM buffer instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SramSpec {
+    pub capacity_bytes: u64,
+    /// Access word width in bytes.
+    pub word_bytes: u64,
+    /// Number of banks (accesses hit one bank; leakage sums over all).
+    pub banks: u64,
+}
+
+/// 45 nm anchor: pJ per access of an 8 KiB, 2-byte-word, single-bank mat.
+const ANCHOR_PJ: f64 = 5.0;
+const ANCHOR_BYTES: f64 = 8.0 * 1024.0;
+const ANCHOR_WORD: f64 = 2.0;
+
+/// 45 nm leakage: µW per KiB.  CACTI-P at 45 nm puts large low-ports SRAM
+/// leakage at 30–80 µW/KiB depending on cell flavor; 40 is mid-range.
+const LEAK_UW_PER_KIB: f64 = 40.0;
+
+impl SramSpec {
+    pub fn new(capacity_bytes: u64, word_bytes: u64, banks: u64) -> SramSpec {
+        assert!(capacity_bytes > 0 && word_bytes > 0 && banks > 0);
+        SramSpec { capacity_bytes, word_bytes, banks }
+    }
+
+    /// Dynamic energy per access in pJ.
+    ///
+    /// `e = ANCHOR · sqrt(bank_capacity / 8KiB) · (word / 2B)`
+    pub fn access_pj(&self) -> f64 {
+        let bank_bytes = self.capacity_bytes as f64 / self.banks as f64;
+        ANCHOR_PJ * (bank_bytes / ANCHOR_BYTES).sqrt() * (self.word_bytes as f64 / ANCHOR_WORD)
+    }
+
+    /// Leakage power in watts (all banks).
+    pub fn leakage_w(&self) -> f64 {
+        LEAK_UW_PER_KIB * 1e-6 * (self.capacity_bytes as f64 / 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchor_point() {
+        let s = SramSpec::new(8 * 1024, 2, 1);
+        assert!((s.access_pj() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sqrt_capacity_scaling() {
+        let small = SramSpec::new(8 * 1024, 2, 1);
+        let big = SramSpec::new(32 * 1024, 2, 1);
+        assert!((big.access_pj() / small.access_pj() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn banking_reduces_access_energy() {
+        let mono = SramSpec::new(1 << 20, 2, 1);
+        let banked = SramSpec::new(1 << 20, 2, 16);
+        assert!((mono.access_pj() / banked.access_pj() - 4.0).abs() < 1e-9);
+        // ...but not leakage.
+        assert!((mono.leakage_w() - banked.leakage_w()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn word_width_linear() {
+        let narrow = SramSpec::new(8 * 1024, 1, 1);
+        let wide = SramSpec::new(8 * 1024, 4, 1);
+        assert!((wide.access_pj() / narrow.access_pj() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn leakage_linear_in_capacity() {
+        let s = SramSpec::new(1024 * 1024, 2, 4);
+        assert!((s.leakage_w() - 40.0e-6 * 1024.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn plausible_45nm_magnitudes() {
+        // A 12 MiB feed buffer: access should land in the tens-of-pJ range
+        // (banked), leakage ~0.1 W.
+        let s = SramSpec::new(12 << 20, 1, 64);
+        assert!((1.0..60.0).contains(&s.access_pj()), "{}", s.access_pj());
+        assert!((0.2..1.2).contains(&s.leakage_w()), "{}", s.leakage_w());
+    }
+}

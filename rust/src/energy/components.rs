@@ -1,0 +1,195 @@
+//! 45 nm component energy table — the Accelergy component library of the
+//! paper's toolchain, anchored to standard published numbers:
+//!
+//! - int8 MAC ≈ 0.2 pJ, fp16 ≈ 1.0 pJ, fp32 ≈ 3.0 pJ (Horowitz ISSCC'14,
+//!   add+mul);
+//! - pipeline/load register write ≈ 0.06 pJ/byte;
+//! - DRAM ≈ 160 pJ per byte (LPDDR-class at 45 nm-era interfaces);
+//! - SRAM buffers from the CACTI-lite curves ([`super::cacti`]);
+//! - idle PE leakage + clock ≈ 50% of its active MAC energy per cycle (45 nm
+//!   leakage plus the always-running clock tree; measured accelerators are
+//!   idle-heavy — the TPU v1 paper reports 28 W idle vs 40 W busy, i.e.
+//!   ~70% — so 50% at the PE granularity is mid-range).
+
+use super::cacti::SramSpec;
+use crate::sim::activity::Activity;
+use crate::sim::buffers::BufferConfig;
+use crate::sim::dataflow::ArrayGeometry;
+
+/// Arithmetic precision of the PE datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Int8,
+    Fp16,
+    Fp32,
+}
+
+impl Precision {
+    /// MAC energy in pJ (multiply + accumulate).
+    pub fn mac_pj(&self) -> f64 {
+        match self {
+            Precision::Int8 => 0.2,
+            Precision::Fp16 => 1.0,
+            Precision::Fp32 => 3.0,
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Precision::Int8 => 1,
+            Precision::Fp16 => 2,
+            Precision::Fp32 => 4,
+        }
+    }
+}
+
+/// Per-event (pJ) and per-cycle (W) energy of every modeled component.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComponentEnergy {
+    pub mac_pj: f64,
+    pub lr_write_pj: f64,
+    pub weight_sram_pj: f64,
+    pub ifmap_sram_pj: f64,
+    pub ofmap_sram_pj: f64,
+    pub dram_pj_per_word: f64,
+    /// Leakage+clock of one *idle* PE per cycle, pJ.
+    pub pe_idle_pj_per_cycle: f64,
+    /// SRAM leakage power of all three buffers, W.
+    pub sram_leakage_w: f64,
+    /// Control/sequencer overhead per cycle, pJ.
+    pub control_pj_per_cycle: f64,
+}
+
+/// The assembled energy model for one accelerator configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyModel {
+    pub geom: ArrayGeometry,
+    pub precision: Precision,
+    pub clock_ghz: f64,
+    pub components: ComponentEnergy,
+}
+
+impl EnergyModel {
+    /// Build the 45 nm model for an array + buffer configuration.
+    pub fn build(geom: ArrayGeometry, bufs: &BufferConfig, precision: Precision) -> EnergyModel {
+        let word = precision.bytes();
+        // Bank the buffers by array edge: one bank per 2 columns/rows, the
+        // natural layout for edge-fed buffers.
+        let weight = SramSpec::new(bufs.weight_bytes.max(1024), word, (geom.cols / 2).max(1));
+        let ifmap = SramSpec::new(bufs.ifmap_bytes.max(1024), word, (geom.rows / 2).max(1));
+        // Drain holds f32 partials regardless of datapath precision.
+        let ofmap = SramSpec::new(bufs.ofmap_bytes.max(1024), word.max(4), (geom.cols / 2).max(1));
+
+        let mac_pj = precision.mac_pj();
+        let components = ComponentEnergy {
+            mac_pj,
+            lr_write_pj: 0.06 * word as f64,
+            weight_sram_pj: weight.access_pj(),
+            ifmap_sram_pj: ifmap.access_pj(),
+            ofmap_sram_pj: ofmap.access_pj(),
+            dram_pj_per_word: 160.0 * word as f64,
+            pe_idle_pj_per_cycle: 0.5 * mac_pj,
+            sram_leakage_w: weight.leakage_w() + ifmap.leakage_w() + ofmap.leakage_w(),
+            control_pj_per_cycle: 2.0,
+        };
+        EnergyModel { geom, precision, clock_ghz: 0.7, components }
+    }
+
+    /// Default TPU-like 128×128 int8 model.
+    pub fn default_128() -> EnergyModel {
+        EnergyModel::build(ArrayGeometry::new(128, 128), &BufferConfig::default(), Precision::Int8)
+    }
+
+    /// Whole-array static power as joules per cycle (all PEs idle): the
+    /// rate used for per-DNN static attribution (Fig. 9(e)(f) accounting).
+    pub fn static_rate_j_per_cycle(&self) -> f64 {
+        let c = &self.components;
+        1e-12 * (self.geom.pes() as f64 * c.pe_idle_pj_per_cycle + c.control_pj_per_cycle)
+            + c.sram_leakage_w / (self.clock_ghz * 1e9)
+    }
+
+    /// Dynamic energy of an activity record, in joules.
+    pub fn dynamic_j(&self, a: &Activity) -> f64 {
+        let c = &self.components;
+        1e-12
+            * (a.macs as f64 * c.mac_pj
+                + a.pe_lr_writes as f64 * c.lr_write_pj
+                + (a.weight_sram_reads + a.weight_sram_writes) as f64 * c.weight_sram_pj
+                + (a.ifmap_sram_reads + a.ifmap_sram_writes) as f64 * c.ifmap_sram_pj
+                + (a.ofmap_sram_reads + a.ofmap_sram_writes) as f64 * c.ofmap_sram_pj
+                + a.dram_accesses() as f64 * c.dram_pj_per_word)
+    }
+
+    /// Static/idle energy over a span of cycles, in joules.
+    ///
+    /// `busy_pe_cycles` = Σ MACs: a PE doing a MAC burns `mac_pj` (already
+    /// counted as dynamic); every *other* PE-cycle burns the idle
+    /// leakage+clock energy.  SRAM leakage and control run for the whole
+    /// span — this is the term makespan reduction saves, i.e. the paper's
+    /// multi-tenant energy win.
+    pub fn static_j(&self, span_cycles: u64, busy_pe_cycles: u64) -> f64 {
+        let total_pe_cycles = span_cycles.saturating_mul(self.geom.pes());
+        let idle_pe_cycles = total_pe_cycles.saturating_sub(busy_pe_cycles) as f64;
+        let c = &self.components;
+        let idle_j = 1e-12 * idle_pe_cycles * c.pe_idle_pj_per_cycle;
+        let control_j = 1e-12 * span_cycles as f64 * c.control_pj_per_cycle;
+        let seconds = span_cycles as f64 / (self.clock_ghz * 1e9);
+        idle_j + control_j + c.sram_leakage_w * seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_table() {
+        assert_eq!(Precision::Int8.bytes(), 1);
+        assert_eq!(Precision::Fp32.bytes(), 4);
+        assert!(Precision::Fp32.mac_pj() > Precision::Fp16.mac_pj());
+        assert!(Precision::Fp16.mac_pj() > Precision::Int8.mac_pj());
+    }
+
+    #[test]
+    fn hierarchy_ratios_sane() {
+        // DRAM >> SRAM >> MAC — the ordering all dataflow papers rely on.
+        let m = EnergyModel::default_128();
+        let c = m.components;
+        assert!(c.dram_pj_per_word > 10.0 * c.ifmap_sram_pj, "DRAM {} vs SRAM {}", c.dram_pj_per_word, c.ifmap_sram_pj);
+        assert!(c.ifmap_sram_pj > c.mac_pj, "SRAM {} vs MAC {}", c.ifmap_sram_pj, c.mac_pj);
+        assert!(c.mac_pj > c.lr_write_pj);
+    }
+
+    #[test]
+    fn dynamic_energy_additive() {
+        let m = EnergyModel::default_128();
+        let a = Activity { macs: 1000, ..Default::default() };
+        let b = Activity { dram_reads: 10, ..Default::default() };
+        let mut ab = a;
+        ab.add(&b);
+        let sum = m.dynamic_j(&a) + m.dynamic_j(&b);
+        assert!((m.dynamic_j(&ab) - sum).abs() < 1e-18);
+    }
+
+    #[test]
+    fn static_energy_shrinks_with_busy_pes() {
+        let m = EnergyModel::default_128();
+        let span = 1_000_000;
+        let idle_all = m.static_j(span, 0);
+        let busy_half = m.static_j(span, span * m.geom.pes() / 2);
+        let busy_all = m.static_j(span, span * m.geom.pes());
+        assert!(idle_all > busy_half && busy_half > busy_all);
+        // With every PE busy, only control + SRAM leakage remain.
+        assert!(busy_all > 0.0);
+    }
+
+    #[test]
+    fn makespan_reduction_saves_static_energy() {
+        // Same work (busy cycles), shorter span -> less static energy.
+        let m = EnergyModel::default_128();
+        let busy = 500_000 * 128; // some busy PE-cycles
+        let long = m.static_j(2_000_000, busy);
+        let short = m.static_j(1_000_000, busy);
+        assert!(short < long * 0.6);
+    }
+}

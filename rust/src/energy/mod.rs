@@ -1,0 +1,22 @@
+//! Accelergy-equivalent energy estimation (paper Fig. 8, §4.2).
+//!
+//! The paper feeds Scale-Sim component activities into Accelergy (with
+//! Cacti and Aladdin plug-ins) at 45 nm.  We rebuild the same pipeline:
+//!
+//! - [`cacti`] — a CACTI-P-lite analytic SRAM model: per-access energy and
+//!   leakage as functions of capacity and word width at 45 nm;
+//! - [`components`] — the 45 nm component table (MAC, registers, DRAM,
+//!   clock/control) from the standard literature numbers (Horowitz,
+//!   ISSCC'14; Eyeriss ratios), with the SRAM entries filled by `cacti`;
+//! - [`estimator`] — `E = Σ_c activity(c)·e_dyn(c) + cycles·P_static`,
+//!   with per-DNN and per-component breakdowns;
+//! - [`area`] — the 45 nm area side of Accelergy's output, including the
+//!   quantified (negligible) cost of the paper's added Mul_En gates.
+
+pub mod area;
+pub mod cacti;
+pub mod components;
+pub mod estimator;
+
+pub use components::{ComponentEnergy, EnergyModel};
+pub use estimator::{EnergyBreakdown, Estimator};

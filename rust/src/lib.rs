@@ -1,0 +1,40 @@
+//! `mtsa` — Multi-Tenant Systolic-Array accelerator with dynamic resource
+//! partitioning.
+//!
+//! A from-scratch reproduction of *Dynamic Resource Partitioning for
+//! Multi-Tenant Systolic Array Based DNN Accelerator* (Reshadi & Gregg,
+//! PDP 2023) as a three-layer rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the paper's contribution: the dynamic
+//!   partitioning coordinator ([`coordinator`]), plus every substrate the
+//!   evaluation depends on: a Scale-Sim-equivalent cycle model ([`sim`]),
+//!   an Accelergy-equivalent energy estimator ([`energy`]), the 12-network
+//!   workload zoo ([`workloads`]), and the PJRT runtime ([`runtime`]) that
+//!   executes the AOT-compiled partitioned-weight-stationary computation.
+//! - **L2 (jax, build time)** — `python/compile/model.py`.
+//! - **L1 (pallas, build time)** — `python/compile/kernels/`.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every figure of the paper to a bench target.
+
+pub mod util;
+
+pub mod runtime;
+
+pub mod workloads;
+
+pub mod sim;
+
+pub mod energy;
+
+pub mod coordinator;
+
+pub mod report;
+
+pub mod config;
+
+pub mod cli;
+
+pub mod benchkit;
+
+pub mod verify;

@@ -1,0 +1,8 @@
+//! `mtsa` CLI — the leader entrypoint.
+//!
+//! See `mtsa help` (or `cli::commands::USAGE`) for subcommands.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(mtsa::cli::main_with(&argv));
+}

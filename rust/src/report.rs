@@ -1,0 +1,189 @@
+//! Experiment drivers shared by the benches, the CLI and the integration
+//! tests — one implementation of every Fig. 9 series so the numbers in
+//! `cargo bench`, `mtsa run` and `EXPERIMENTS.md` cannot drift apart.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::baseline::SequentialBaseline;
+use crate::coordinator::scheduler::{AllocPolicy, DynamicScheduler, SchedulerConfig};
+use crate::coordinator::RunMetrics;
+use crate::energy::{EnergyBreakdown, EnergyModel, Estimator};
+use crate::workloads::dnng::WorkloadPool;
+
+/// Results of running one pool under both the baseline and the dynamic
+/// partitioning scheduler.
+#[derive(Debug, Clone)]
+pub struct GroupResults {
+    pub pool_name: String,
+    pub dynamic: RunMetrics,
+    pub sequential: RunMetrics,
+    pub cfg: SchedulerConfig,
+}
+
+/// Run a pool under sequential + dynamic scheduling.
+pub fn run_group(pool: &WorkloadPool, cfg: &SchedulerConfig) -> GroupResults {
+    GroupResults {
+        pool_name: pool.name.clone(),
+        dynamic: DynamicScheduler::new(cfg.clone()).run(pool),
+        sequential: SequentialBaseline::new(cfg.clone()).run(pool),
+        cfg: cfg.clone(),
+    }
+}
+
+/// Run with an explicit allocation policy (for the policy ablation).
+pub fn run_group_with_policy(
+    pool: &WorkloadPool,
+    cfg: &SchedulerConfig,
+    policy: AllocPolicy,
+) -> GroupResults {
+    let cfg = SchedulerConfig { alloc_policy: policy, ..cfg.clone() };
+    run_group(pool, &cfg)
+}
+
+/// Total-energy breakdown of a run (dynamic activity + makespan static).
+pub fn total_energy(m: &RunMetrics, model: &EnergyModel) -> EnergyBreakdown {
+    let mut est = Estimator::new(*model);
+    for d in &m.dispatches {
+        est.record(&d.dnn_name, &d.activity);
+    }
+    est.finish(m.makespan)
+}
+
+/// Per-DNN energy bars — the accounting of the paper's Fig. 9(e)(f):
+/// each DNN's bar is its own dynamic energy plus the array static energy
+/// attributed to its residency, weighted by the fraction of the array it
+/// occupied (`width/cols`).  Under the sequential baseline every layer
+/// occupies the full array, so a DNN is billed the whole static power for
+/// its whole execution window; under partitioning, co-residents split it.
+pub fn per_dnn_energy_bars(m: &RunMetrics, model: &EnergyModel) -> BTreeMap<String, f64> {
+    let rate = model.static_rate_j_per_cycle();
+    let cols = model.geom.cols as f64;
+    let mut bars: BTreeMap<String, f64> = BTreeMap::new();
+    let mut est = Estimator::new(*model);
+    for d in &m.dispatches {
+        est.record(&d.dnn_name, &d.activity);
+        *bars.entry(d.dnn_name.clone()).or_default() +=
+            rate * d.duration() as f64 * (d.slice.width as f64 / cols);
+    }
+    let bd = est.finish(m.makespan);
+    for (name, dyn_j) in bd.per_dnn_dynamic_j {
+        *bars.entry(name).or_default() += dyn_j;
+    }
+    bars
+}
+
+/// Percentage saving of `new` vs `base` (positive = improvement).
+pub fn saving_pct(base: f64, new: f64) -> f64 {
+    if base == 0.0 {
+        0.0
+    } else {
+        100.0 * (1.0 - new / base)
+    }
+}
+
+/// Mean completion cycle over DNNs.
+pub fn mean_completion(m: &RunMetrics) -> f64 {
+    if m.completion.is_empty() {
+        return 0.0;
+    }
+    m.completion.values().sum::<u64>() as f64 / m.completion.len() as f64
+}
+
+/// Headline summary of one group (the H1 row of DESIGN.md §7).
+#[derive(Debug, Clone)]
+pub struct Headline {
+    pub pool: String,
+    pub makespan_saving_pct: f64,
+    pub mean_completion_saving_pct: f64,
+    pub total_energy_saving_pct: f64,
+    pub mean_bar_energy_saving_pct: f64,
+    pub dyn_utilization: f64,
+    pub seq_utilization: f64,
+}
+
+/// Compute the headline metrics for a group result.
+pub fn headline(g: &GroupResults, model: &EnergyModel) -> Headline {
+    let e_dyn = total_energy(&g.dynamic, model);
+    let e_seq = total_energy(&g.sequential, model);
+    let bars_dyn = per_dnn_energy_bars(&g.dynamic, model);
+    let bars_seq = per_dnn_energy_bars(&g.sequential, model);
+    let mean = |b: &BTreeMap<String, f64>| b.values().sum::<f64>() / b.len().max(1) as f64;
+    Headline {
+        pool: g.pool_name.clone(),
+        makespan_saving_pct: saving_pct(g.sequential.makespan as f64, g.dynamic.makespan as f64),
+        mean_completion_saving_pct: saving_pct(
+            mean_completion(&g.sequential),
+            mean_completion(&g.dynamic),
+        ),
+        total_energy_saving_pct: saving_pct(e_seq.total_j(), e_dyn.total_j()),
+        mean_bar_energy_saving_pct: saving_pct(mean(&bars_seq), mean(&bars_dyn)),
+        dyn_utilization: g.dynamic.utilization(g.cfg.geom),
+        seq_utilization: g.sequential.utilization(g.cfg.geom),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::dnng::{Dnn, Layer};
+    use crate::workloads::shapes::{LayerKind, LayerShape};
+
+    fn small_pool() -> WorkloadPool {
+        let mk = |name: &str, m: u64, n_layers: usize| {
+            let layers = (0..n_layers)
+                .map(|i| Layer::new(&format!("l{i}"), LayerKind::Fc, LayerShape::fc(64, 128, m)))
+                .collect();
+            Dnn::chain(name, layers)
+        };
+        WorkloadPool::new("small", vec![mk("a", 64, 3), mk("b", 32, 2), mk("c", 16, 2)])
+    }
+
+    #[test]
+    fn group_runs_both_schedulers() {
+        let g = run_group(&small_pool(), &SchedulerConfig::default());
+        assert_eq!(g.dynamic.dispatches.len(), 7);
+        assert_eq!(g.sequential.dispatches.len(), 7);
+        assert!(g.dynamic.makespan <= g.sequential.makespan);
+    }
+
+    #[test]
+    fn bars_cover_every_dnn() {
+        let g = run_group(&small_pool(), &SchedulerConfig::default());
+        let model = EnergyModel::default_128();
+        let bars = per_dnn_energy_bars(&g.dynamic, &model);
+        assert_eq!(bars.len(), 3);
+        assert!(bars.values().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn shared_static_attribution_smaller_than_exclusive() {
+        // Under partitioning, a narrow-width DNN is billed a width fraction
+        // of the static power, so its bar must not exceed its sequential bar
+        // by more than its (possibly longer) runtime would explain.
+        let g = run_group(&small_pool(), &SchedulerConfig::default());
+        let model = EnergyModel::default_128();
+        let bars_dyn = per_dnn_energy_bars(&g.dynamic, &model);
+        let bars_seq = per_dnn_energy_bars(&g.sequential, &model);
+        let sum_dyn: f64 = bars_dyn.values().sum();
+        let sum_seq: f64 = bars_seq.values().sum();
+        // All layers here have m <= 64 (width-insensitive), so the shared
+        // accounting must strictly win in aggregate.
+        assert!(sum_dyn < sum_seq, "dyn {sum_dyn} vs seq {sum_seq}");
+    }
+
+    #[test]
+    fn saving_pct_signs() {
+        assert!((saving_pct(100.0, 50.0) - 50.0).abs() < 1e-12);
+        assert!(saving_pct(100.0, 120.0) < 0.0);
+        assert_eq!(saving_pct(0.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn headline_is_consistent() {
+        let g = run_group(&small_pool(), &SchedulerConfig::default());
+        let model = EnergyModel::default_128();
+        let h = headline(&g, &model);
+        assert!(h.makespan_saving_pct >= 0.0);
+        assert!(h.dyn_utilization >= h.seq_utilization);
+    }
+}

@@ -1,0 +1,168 @@
+//! PJRT engine: compiled-executable cache over the `xla` crate.
+//!
+//! One [`Engine`] per process.  At construction it parses the manifest,
+//! loads every HLO-text artifact (`HloModuleProto::from_text_file` — text is
+//! the interchange format, see `python/compile/aot.py`), compiles each on
+//! the PJRT CPU client **once**, and serves `execute` calls from the cache.
+//! Execution takes and returns host [`Tensor`]s; shape checking happens
+//! against the manifest signature before anything touches PJRT.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::Tensor;
+use crate::log_info;
+
+/// A compiled artifact plus its manifest signature.
+struct LoadedArtifact {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT client + compiled executables, keyed by artifact name.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, LoadedArtifact>,
+    manifest: Manifest,
+    /// Cumulative number of `execute` calls (hot-path metric).
+    exec_count: std::sync::atomic::AtomicU64,
+}
+
+// SAFETY: the `xla` crate wraps raw pointers without declaring thread
+// safety, but the underlying PJRT C API contract is explicitly thread-safe:
+// `PjRtClient` and `PjRtLoadedExecutable` support concurrent `Compile`/
+// `Execute` calls from multiple threads (XLA runs a multi-threaded runtime
+// underneath).  `Engine` only exposes `&self` methods whose per-call state
+// (input literals, output buffers) is function-local, and `exec_count` is
+// atomic.  Mutation of the artifact map never happens after construction.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Load every artifact in `dir` and compile it on the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let t0 = Instant::now();
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut artifacts = HashMap::new();
+        for spec in &manifest.artifacts {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {}", spec.name))?;
+            artifacts.insert(spec.name.clone(), LoadedArtifact { spec: spec.clone(), exe });
+        }
+        log_info!(
+            "runtime",
+            "loaded {} artifacts from {} in {:.2?} (platform: {})",
+            artifacts.len(),
+            dir.display(),
+            t0.elapsed(),
+            client.platform_name()
+        );
+        Ok(Engine { client, artifacts, manifest, exec_count: std::sync::atomic::AtomicU64::new(0) })
+    }
+
+    /// The manifest the engine was loaded from.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Names of loaded artifacts (sorted).
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// Number of `execute` calls served so far.
+    pub fn exec_count(&self) -> u64 {
+        self.exec_count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Execute artifact `name` with `inputs`; returns the single output.
+    ///
+    /// Inputs are shape-checked against the manifest signature.  All
+    /// artifacts in schema 1 return a 1-tuple (lowered with
+    /// `return_tuple=True`), unwrapped here with `to_tuple1`.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+        let art = self
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact '{name}' (have: {:?})", self.artifact_names()))?;
+        if inputs.len() != art.spec.input_shapes.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                art.spec.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, want)) in inputs.iter().zip(&art.spec.input_shapes).enumerate() {
+            if t.shape() != want.as_slice() {
+                bail!(
+                    "artifact {name}: input #{i} shape {:?} != manifest {:?}",
+                    t.shape(),
+                    want
+                );
+            }
+        }
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        t.data().as_ptr() as *const u8,
+                        t.data().len() * std::mem::size_of::<f32>(),
+                    )
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    t.shape(),
+                    bytes,
+                )
+                .context("building input literal")
+            })
+            .collect::<Result<_>>()?;
+
+        let result = art
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact {name}"))?;
+        let out_literal = result[0][0]
+            .to_literal_sync()
+            .context("fetching output literal")?
+            .to_tuple1()
+            .context("unwrapping 1-tuple output")?;
+
+        let shape = out_literal.array_shape().context("output shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out_literal.to_vec::<f32>().context("output data")?;
+        self.exec_count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(Tensor::new(dims, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need built artifacts live in rust/tests/runtime_pjrt.rs;
+    // here we only cover the error path that needs no artifacts.
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_an_error() {
+        let Err(err) = Engine::load(Path::new("/nonexistent/mtsa-artifacts")) else {
+            panic!("expected error for missing dir");
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("manifest.json"), "unexpected error: {msg}");
+    }
+}

@@ -1,0 +1,221 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust engine.  Parsed with the in-tree JSON parser and validated
+//! eagerly so a stale or hand-edited artifacts directory fails loudly at
+//! engine construction, not mid-serve.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Signature of one AOT artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// File name relative to the artifacts directory.
+    pub file: String,
+    /// Input shapes in call order (dtype is always f32 in schema 1).
+    pub input_shapes: Vec<Vec<usize>>,
+    pub num_outputs: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Array-step geometry the artifacts were lowered for.
+    pub array_s: usize,
+    pub array_k: usize,
+    pub array_c: usize,
+    pub artifacts: Vec<ArtifactSpec>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let doc = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let schema = doc
+            .get("schema")
+            .and_then(Json::as_u64)
+            .context("manifest missing 'schema'")?;
+        if schema != 1 {
+            bail!("unsupported manifest schema {schema} (expected 1)");
+        }
+
+        let array = doc.get("array").context("manifest missing 'array'")?;
+        let dim = |k: &str| -> Result<usize> {
+            Ok(array
+                .get(k)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("array.{k} missing"))? as usize)
+        };
+
+        let mut artifacts = Vec::new();
+        for (i, a) in doc
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'artifacts'")?
+            .iter()
+            .enumerate()
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .with_context(|| format!("artifact #{i} missing name"))?
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .with_context(|| format!("artifact {name} missing file"))?
+                .to_string();
+            let mut input_shapes = Vec::new();
+            for inp in a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .with_context(|| format!("artifact {name} missing inputs"))?
+            {
+                let dtype = inp.get("dtype").and_then(Json::as_str).unwrap_or("?");
+                if dtype != "float32" {
+                    bail!("artifact {name}: dtype {dtype} unsupported (schema 1 is f32-only)");
+                }
+                let shape: Option<Vec<usize>> = inp
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|dims| dims.iter().filter_map(|d| d.as_u64().map(|v| v as usize)).collect());
+                let shape = shape.with_context(|| format!("artifact {name}: bad shape"))?;
+                input_shapes.push(shape);
+            }
+            let num_outputs = a
+                .get("num_outputs")
+                .and_then(Json::as_u64)
+                .with_context(|| format!("artifact {name} missing num_outputs"))?
+                as usize;
+            artifacts.push(ArtifactSpec { name, file, input_shapes, num_outputs });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+
+        Ok(Manifest {
+            array_s: dim("s")?,
+            array_k: dim("k")?,
+            array_c: dim("c")?,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Look up an artifact by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// The partition counts for which a `pws_p{n}` artifact exists,
+    /// ascending.  The engine picks the smallest variant ≥ the live count.
+    pub fn pws_partition_counts(&self) -> Vec<usize> {
+        let mut counts: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter_map(|a| a.name.strip_prefix("pws_p").and_then(|s| s.parse().ok()))
+            .collect();
+        counts.sort_unstable();
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, text: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mtsa-manifest-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    const GOOD: &str = r#"{
+      "schema": 1,
+      "array": {"s": 128, "k": 128, "c": 128},
+      "artifacts": [
+        {"name": "pws_p2", "file": "pws_p2.hlo.txt",
+         "inputs": [{"shape": [2,128,128], "dtype": "float32"},
+                    {"shape": [128,128], "dtype": "float32"},
+                    {"shape": [2,128], "dtype": "float32"},
+                    {"shape": [128,128], "dtype": "float32"}],
+         "num_outputs": 1},
+        {"name": "pws_p8", "file": "pws_p8.hlo.txt",
+         "inputs": [{"shape": [8,128,128], "dtype": "float32"}],
+         "num_outputs": 1}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_good_manifest() {
+        let d = tmpdir("good");
+        write_manifest(&d, GOOD);
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!((m.array_s, m.array_k, m.array_c), (128, 128, 128));
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("pws_p2").unwrap();
+        assert_eq!(a.input_shapes[0], vec![2, 128, 128]);
+        assert_eq!(a.num_outputs, 1);
+        assert_eq!(m.pws_partition_counts(), vec![2, 8]);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_schema() {
+        let d = tmpdir("schema");
+        write_manifest(&d, &GOOD.replace("\"schema\": 1", "\"schema\": 9"));
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn rejects_non_f32() {
+        let d = tmpdir("dtype");
+        write_manifest(&d, &GOOD.replace("float32", "bfloat16"));
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let d = tmpdir("missing");
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_artifacts() {
+        let d = tmpdir("empty");
+        write_manifest(
+            &d,
+            r#"{"schema": 1, "array": {"s":1,"k":1,"c":1}, "artifacts": []}"#,
+        );
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // `make artifacts` not run yet; covered by integration tests
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!((m.array_s, m.array_k, m.array_c), (128, 128, 128));
+        assert!(m.pws_partition_counts().contains(&1));
+        for a in &m.artifacts {
+            assert!(dir.join(&a.file).exists(), "missing {}", a.file);
+        }
+    }
+}

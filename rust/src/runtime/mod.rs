@@ -1,0 +1,23 @@
+//! PJRT runtime — the functional datapath of the accelerator.
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py`
+//! (`artifacts/*.hlo.txt` + `manifest.json`), compiles them once on the PJRT
+//! CPU client, and executes them from the coordinator's hot path.  Python
+//! never runs here; the rust binary is self-contained after
+//! `make artifacts`.
+//!
+//! - [`manifest`] — parses/validates `manifest.json` (artifact signatures)
+//! - [`tensor`] — host-side f32 tensor with shape checking
+//! - [`engine`] — PJRT client + compiled-executable cache
+//! - [`packing`] — packs co-resident tenants' weight tiles into the shared
+//!   array operands (the rust mirror of `model.pack_tenants`)
+
+pub mod engine;
+pub mod manifest;
+pub mod packing;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, Manifest};
+pub use packing::{pack_step, PackedStep, TenantTile};
+pub use tensor::Tensor;

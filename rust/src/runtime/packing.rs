@@ -1,0 +1,268 @@
+//! Packing co-resident tenants into the shared array operands.
+//!
+//! The rust mirror of `python/compile/model.pack_tenants`: given the weight
+//! and feed tiles of the layers currently resident in the array's vertical
+//! partitions, build the fixed-shape operands of a `pws_p{P}` artifact —
+//! packed weights `[K, C]`, per-tenant feed streams `[P, S, K]`, and the
+//! float `Mul_En` mask plane `[P, C]` — plus the unpacking metadata to slice
+//! each tenant's OFMap columns back out of the drained `[S, C]` block.
+
+use anyhow::{bail, Result};
+
+use super::tensor::Tensor;
+
+/// One tenant's tile for a single array step.
+#[derive(Debug, Clone)]
+pub struct TenantTile {
+    /// Caller-meaningful tenant id (carried through to the unpack info).
+    pub tenant: usize,
+    /// Feed-stream tile `[s_rows, k_depth]` (s_rows ≤ S, k_depth ≤ K).
+    pub x: Tensor,
+    /// Stationary weight tile `[k_depth, cols]` (cols = partition width used).
+    pub w: Tensor,
+}
+
+/// Where one tenant's results live in the drained `[S, C]` block.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSlot {
+    pub tenant: usize,
+    /// Valid output rows: `0..s_rows`.
+    pub s_rows: usize,
+    /// Column range `[col0, col0 + cols)`.
+    pub col0: usize,
+    pub cols: usize,
+}
+
+/// Fixed-shape artifact operands plus unpack metadata.
+#[derive(Debug, Clone)]
+pub struct PackedStep {
+    /// Artifact partition count (`pws_p{num_p}`); ≥ number of tiles.
+    pub num_p: usize,
+    /// `[num_p, S, K]`
+    pub x: Tensor,
+    /// `[K, C]`
+    pub w: Tensor,
+    /// `[num_p, C]` float one-hot Mul_En plane.
+    pub mask: Tensor,
+    pub slots: Vec<TenantSlot>,
+}
+
+impl PackedStep {
+    /// Slice one tenant's `[s_rows, cols]` result out of a drained `[S, C]` block.
+    pub fn unpack(&self, drained: &Tensor, slot_idx: usize) -> Tensor {
+        let slot = &self.slots[slot_idx];
+        let c_total = drained.shape()[1];
+        let mut out = Tensor::zeros(vec![slot.s_rows, slot.cols]);
+        for r in 0..slot.s_rows {
+            let src = &drained.data()[r * c_total + slot.col0..r * c_total + slot.col0 + slot.cols];
+            out.data_mut()[r * slot.cols..(r + 1) * slot.cols].copy_from_slice(src);
+        }
+        out
+    }
+}
+
+/// Pick the smallest available artifact partition count ≥ `n`.
+///
+/// `available` must be sorted ascending (see `Manifest::pws_partition_counts`).
+pub fn pick_variant(available: &[usize], n: usize) -> Option<usize> {
+    available.iter().copied().find(|&p| p >= n)
+}
+
+/// Pack tenant tiles into the operands of a `pws_p{num_p}` step.
+///
+/// * `array_s`, `array_k`, `array_c` — fixed artifact geometry;
+/// * `num_p` — artifact partition count (≥ tiles.len(); unused partition
+///   lanes are zero and own no columns).
+///
+/// Tiles are laid out left-to-right in the order given — the same order the
+/// coordinator assigned partitions — and padded with zeros up to the fixed
+/// shapes (zero padding is exact for a GEMM: it contributes nothing).
+pub fn pack_step(
+    tiles: &[TenantTile],
+    array_s: usize,
+    array_k: usize,
+    array_c: usize,
+    num_p: usize,
+) -> Result<PackedStep> {
+    if tiles.is_empty() {
+        bail!("pack_step: no tiles");
+    }
+    if tiles.len() > num_p {
+        bail!("pack_step: {} tiles > {} partition lanes", tiles.len(), num_p);
+    }
+    let total_cols: usize = tiles.iter().map(|t| t.w.shape()[1]).sum();
+    if total_cols > array_c {
+        bail!("pack_step: tiles span {total_cols} columns > array width {array_c}");
+    }
+
+    let mut x = Tensor::zeros(vec![num_p, array_s, array_k]);
+    let mut w = Tensor::zeros(vec![array_k, array_c]);
+    let mut mask = Tensor::zeros(vec![num_p, array_c]);
+    let mut slots = Vec::with_capacity(tiles.len());
+
+    let mut col0 = 0usize;
+    for (p, tile) in tiles.iter().enumerate() {
+        let (s_rows, k_depth) = (tile.x.shape()[0], tile.x.shape()[1]);
+        let (k_depth2, cols) = (tile.w.shape()[0], tile.w.shape()[1]);
+        if s_rows > array_s || k_depth > array_k {
+            bail!(
+                "pack_step: tile {p} stream [{s_rows},{k_depth}] exceeds array step [{array_s},{array_k}]"
+            );
+        }
+        if k_depth2 != k_depth {
+            bail!("pack_step: tile {p} K mismatch: x has {k_depth}, w has {k_depth2}");
+        }
+
+        // Feed stream into lane p, zero-padded to [S, K] — row-contiguous
+        // copies (this is the serving hot path; see EXPERIMENTS.md §Perf).
+        {
+            let lane = &mut x.data_mut()[p * array_s * array_k..(p + 1) * array_s * array_k];
+            for r in 0..s_rows {
+                lane[r * array_k..r * array_k + k_depth]
+                    .copy_from_slice(&tile.x.data()[r * k_depth..(r + 1) * k_depth]);
+            }
+        }
+        // Weights into columns [col0, col0+cols), zero-padded rows.
+        {
+            let wdat = w.data_mut();
+            for kk in 0..k_depth {
+                wdat[kk * array_c + col0..kk * array_c + col0 + cols]
+                    .copy_from_slice(&tile.w.data()[kk * cols..(kk + 1) * cols]);
+            }
+        }
+        // Mul_En plane: lane p owns its column range.
+        mask.data_mut()[p * array_c + col0..p * array_c + col0 + cols].fill(1.0);
+
+        slots.push(TenantSlot { tenant: tile.tenant, s_rows, col0, cols });
+        col0 += cols;
+    }
+
+    Ok(PackedStep { num_p, x, w, mask, slots })
+}
+
+/// CPU oracle for a packed step: what the artifact must compute.
+///
+/// `y[s, c] = acc[s, c] + Σ_k Σ_p x[p, s, k] · w[k, c] · mask[p, c]`
+pub fn packed_step_oracle(step: &PackedStep, acc: &Tensor) -> Tensor {
+    let (num_p, s, k) = (step.x.shape()[0], step.x.shape()[1], step.x.shape()[2]);
+    let c = step.w.shape()[1];
+    assert_eq!(acc.shape(), &[s, c]);
+    let mut out = acc.clone();
+    for p in 0..num_p {
+        for si in 0..s {
+            for kk in 0..k {
+                let xv = step.x.at3(p, si, kk);
+                if xv == 0.0 {
+                    continue;
+                }
+                for ci in 0..c {
+                    let m = step.mask.at2(p, ci);
+                    if m != 0.0 {
+                        let v = out.at2(si, ci) + xv * step.w.at2(kk, ci) * m;
+                        out.set2(si, ci, v);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.gen_f32() - 0.5).collect())
+    }
+
+    #[test]
+    fn pick_variant_smallest_fit() {
+        let avail = [1, 2, 4, 8];
+        assert_eq!(pick_variant(&avail, 1), Some(1));
+        assert_eq!(pick_variant(&avail, 2), Some(2));
+        assert_eq!(pick_variant(&avail, 3), Some(4));
+        assert_eq!(pick_variant(&avail, 8), Some(8));
+        assert_eq!(pick_variant(&avail, 9), None);
+    }
+
+    #[test]
+    fn layout_matches_python_pack_tenants() {
+        let mut rng = Rng::new(1);
+        let t0 = TenantTile { tenant: 10, x: rand_tensor(&mut rng, vec![4, 8]), w: rand_tensor(&mut rng, vec![8, 6]) };
+        let t1 = TenantTile { tenant: 11, x: rand_tensor(&mut rng, vec![3, 8]), w: rand_tensor(&mut rng, vec![8, 10]) };
+        let step = pack_step(&[t0.clone(), t1.clone()], 8, 8, 32, 2).unwrap();
+
+        // Column layout: tenant0 cols 0..6, tenant1 cols 6..16, rest unowned.
+        assert_eq!(step.slots[0], TenantSlot { tenant: 10, s_rows: 4, col0: 0, cols: 6 });
+        assert_eq!(step.slots[1], TenantSlot { tenant: 11, s_rows: 3, col0: 6, cols: 10 });
+        for c in 0..6 {
+            assert_eq!(step.mask.at2(0, c), 1.0);
+            assert_eq!(step.mask.at2(1, c), 0.0);
+            assert_eq!(step.w.at2(3, c), t0.w.at2(3, c));
+        }
+        for c in 6..16 {
+            assert_eq!(step.mask.at2(1, c), 1.0);
+            assert_eq!(step.w.at2(3, c), t1.w.at2(3, c - 6));
+        }
+        for c in 16..32 {
+            assert_eq!(step.mask.at2(0, c) + step.mask.at2(1, c), 0.0);
+        }
+        // Feed lanes zero-padded.
+        assert_eq!(step.x.at3(0, 2, 3), t0.x.at2(2, 3));
+        assert_eq!(step.x.at3(1, 2, 3), t1.x.at2(2, 3));
+        assert_eq!(step.x.at3(1, 3, 0), 0.0, "row 3 of a 3-row stream is padding");
+    }
+
+    #[test]
+    fn oracle_recovers_per_tenant_gemm() {
+        let mut rng = Rng::new(2);
+        let tiles: Vec<TenantTile> = (0..3)
+            .map(|t| TenantTile {
+                tenant: t,
+                x: rand_tensor(&mut rng, vec![5, 7]),
+                w: rand_tensor(&mut rng, vec![7, 4]),
+            })
+            .collect();
+        let step = pack_step(&tiles, 8, 8, 16, 4).unwrap();
+        let acc = Tensor::zeros(vec![8, 16]);
+        let drained = packed_step_oracle(&step, &acc);
+        for (i, tile) in tiles.iter().enumerate() {
+            let got = step.unpack(&drained, i);
+            let want = tile.x.matmul(&tile.w);
+            assert!(got.max_abs_diff(&want) < 1e-5, "tenant {i}");
+        }
+    }
+
+    #[test]
+    fn isolation_under_oracle() {
+        // Changing tenant 1's stream must not affect tenant 0's columns.
+        let mut rng = Rng::new(3);
+        let t0 = TenantTile { tenant: 0, x: rand_tensor(&mut rng, vec![4, 4]), w: rand_tensor(&mut rng, vec![4, 4]) };
+        let mut t1 = TenantTile { tenant: 1, x: rand_tensor(&mut rng, vec![4, 4]), w: rand_tensor(&mut rng, vec![4, 4]) };
+        let acc = Tensor::zeros(vec![4, 16]);
+        let step_a = pack_step(&[t0.clone(), t1.clone()], 4, 4, 16, 2).unwrap();
+        let before = step_a.unpack(&packed_step_oracle(&step_a, &acc), 0);
+        t1.x = rand_tensor(&mut rng, vec![4, 4]);
+        let step_b = pack_step(&[t0, t1], 4, 4, 16, 2).unwrap();
+        let after = step_b.unpack(&packed_step_oracle(&step_b, &acc), 0);
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn rejects_overflow_and_mismatch() {
+        let mut rng = Rng::new(4);
+        let big = TenantTile { tenant: 0, x: rand_tensor(&mut rng, vec![2, 4]), w: rand_tensor(&mut rng, vec![4, 20]) };
+        assert!(pack_step(&[big.clone(), big.clone()], 4, 4, 32, 2).is_err());
+
+        let bad_k = TenantTile { tenant: 0, x: rand_tensor(&mut rng, vec![2, 4]), w: rand_tensor(&mut rng, vec![5, 2]) };
+        assert!(pack_step(&[bad_k], 4, 8, 32, 1).is_err());
+
+        let too_many = TenantTile { tenant: 0, x: rand_tensor(&mut rng, vec![1, 1]), w: rand_tensor(&mut rng, vec![1, 1]) };
+        assert!(pack_step(&[too_many.clone(), too_many], 4, 4, 32, 1).is_err());
+
+        assert!(pack_step(&[], 4, 4, 32, 1).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! Host-side f32 tensor with shape checking — the interchange type between
+//! the coordinator and the PJRT engine.
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from shape and data; panics on element-count mismatch.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(
+            n,
+            data.len(),
+            "shape {:?} implies {} elements, got {}",
+            shape,
+            n,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Fill from a function of the flat index.
+    pub fn from_fn(shape: Vec<usize>, f: impl Fn(usize) -> f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape, data: (0..n).map(f).collect() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D element access (row-major). Panics unless rank 2.
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        assert_eq!(self.rank(), 2, "at2 on rank-{} tensor", self.rank());
+        self.data[r * self.shape[1] + c]
+    }
+
+    /// 2-D element write. Panics unless rank 2.
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        assert_eq!(self.rank(), 2);
+        let cols = self.shape[1];
+        self.data[r * cols + c] = v;
+    }
+
+    /// 3-D element access. Panics unless rank 3.
+    pub fn at3(&self, a: usize, b: usize, c: usize) -> f32 {
+        assert_eq!(self.rank(), 3);
+        self.data[(a * self.shape[1] + b) * self.shape[2] + c]
+    }
+
+    /// 3-D element write. Panics unless rank 3.
+    pub fn set3(&mut self, a: usize, b: usize, c: usize, v: f32) {
+        assert_eq!(self.rank(), 3);
+        let (s1, s2) = (self.shape[1], self.shape[2]);
+        self.data[(a * s1 + b) * s2 + c] = v;
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {:?}", self.shape, shape);
+        self.shape = shape;
+        self
+    }
+
+    /// Maximum absolute difference against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in comparison");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Row-major matmul oracle (used by verify/tests; not the hot path).
+    pub fn matmul(&self, rhs: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(rhs.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (rhs.shape[0], rhs.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim mismatch {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let rrow = &rhs.data[kk * n..(kk + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * rrow[j];
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+}
+
+impl fmt::Display for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::from_fn(vec![2, 3], |i| i as f32);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.at2(0, 0), 0.0);
+        assert_eq!(t.at2(1, 2), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "implies")]
+    fn shape_data_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn set_and_get_round_trip() {
+        let mut t = Tensor::zeros(vec![3, 4]);
+        t.set2(2, 1, 7.5);
+        assert_eq!(t.at2(2, 1), 7.5);
+        let mut t3 = Tensor::zeros(vec![2, 3, 4]);
+        t3.set3(1, 2, 3, -1.0);
+        assert_eq!(t3.at3(1, 2, 3), -1.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_fn(vec![2, 6], |i| i as f32).reshape(vec![3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.at2(2, 3), 11.0);
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(vec![2, 2], vec![1.0; 4]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_fn(vec![3, 3], |i| (i * 7 % 5) as f32);
+        let eye = Tensor::from_fn(vec![3, 3], |i| if i % 4 == 0 { 1.0 } else { 0.0 });
+        assert_eq!(a.matmul(&eye), a);
+    }
+
+    #[test]
+    fn max_abs_diff_basics() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]);
+        let b = Tensor::new(vec![2], vec![1.5, 1.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+        assert_eq!(a.max_abs_diff(&a), 0.0);
+    }
+}

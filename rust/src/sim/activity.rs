@@ -1,0 +1,125 @@
+//! Component-activity counters — the Scale-Sim→Accelergy logfile of the
+//! paper's Fig. 8, as a struct instead of a CSV (a CSV emitter is provided
+//! for the trace path).
+//!
+//! Every timing routine fills one of these; the energy estimator multiplies
+//! by per-component access energies.  Counts are *events*, not bytes —
+//! word width is applied by the energy model.
+
+/// Per-component activity counts for some simulated interval.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Activity {
+    /// MAC operations executed (Mul_En high).
+    pub macs: u64,
+    /// PE load-register writes (weight loads).
+    pub pe_lr_writes: u64,
+    /// Load (weight) SRAM buffer reads.
+    pub weight_sram_reads: u64,
+    /// Feed (IFMap) SRAM buffer reads.
+    pub ifmap_sram_reads: u64,
+    /// Feed (IFMap) SRAM buffer writes (fills from DRAM).
+    pub ifmap_sram_writes: u64,
+    /// Drain (OFMap) SRAM buffer writes.
+    pub ofmap_sram_writes: u64,
+    /// Drain (OFMap) SRAM buffer reads (partial-sum accumulation).
+    pub ofmap_sram_reads: u64,
+    /// Weight SRAM buffer writes (fills from DRAM).
+    pub weight_sram_writes: u64,
+    /// DRAM words read (weights + ifmap fills).
+    pub dram_reads: u64,
+    /// DRAM words written (ofmap spills + final results).
+    pub dram_writes: u64,
+}
+
+impl Activity {
+    /// Element-wise accumulate.
+    pub fn add(&mut self, other: &Activity) {
+        self.macs += other.macs;
+        self.pe_lr_writes += other.pe_lr_writes;
+        self.weight_sram_reads += other.weight_sram_reads;
+        self.ifmap_sram_reads += other.ifmap_sram_reads;
+        self.ifmap_sram_writes += other.ifmap_sram_writes;
+        self.ofmap_sram_writes += other.ofmap_sram_writes;
+        self.ofmap_sram_reads += other.ofmap_sram_reads;
+        self.weight_sram_writes += other.weight_sram_writes;
+        self.dram_reads += other.dram_reads;
+        self.dram_writes += other.dram_writes;
+    }
+
+    /// Total SRAM accesses (reads + writes, all three buffers).
+    pub fn sram_accesses(&self) -> u64 {
+        self.weight_sram_reads
+            + self.weight_sram_writes
+            + self.ifmap_sram_reads
+            + self.ifmap_sram_writes
+            + self.ofmap_sram_reads
+            + self.ofmap_sram_writes
+    }
+
+    /// Total DRAM accesses.
+    pub fn dram_accesses(&self) -> u64 {
+        self.dram_reads + self.dram_writes
+    }
+
+    /// Accelergy-style CSV line (see [`csv_header`]).
+    pub fn csv_line(&self, tag: &str) -> String {
+        format!(
+            "{tag},{},{},{},{},{},{},{},{},{},{}",
+            self.macs,
+            self.pe_lr_writes,
+            self.weight_sram_reads,
+            self.weight_sram_writes,
+            self.ifmap_sram_reads,
+            self.ifmap_sram_writes,
+            self.ofmap_sram_reads,
+            self.ofmap_sram_writes,
+            self.dram_reads,
+            self.dram_writes
+        )
+    }
+}
+
+/// Header matching [`Activity::csv_line`].
+pub fn csv_header() -> &'static str {
+    "tag,macs,pe_lr_writes,weight_sram_reads,weight_sram_writes,\
+     ifmap_sram_reads,ifmap_sram_writes,ofmap_sram_reads,ofmap_sram_writes,\
+     dram_reads,dram_writes"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates_all_fields() {
+        let mut a = Activity { macs: 1, pe_lr_writes: 2, weight_sram_reads: 3, ..Default::default() };
+        let b = Activity { macs: 10, dram_writes: 5, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.macs, 11);
+        assert_eq!(a.pe_lr_writes, 2);
+        assert_eq!(a.dram_writes, 5);
+    }
+
+    #[test]
+    fn totals() {
+        let a = Activity {
+            weight_sram_reads: 1,
+            weight_sram_writes: 2,
+            ifmap_sram_reads: 4,
+            ifmap_sram_writes: 8,
+            ofmap_sram_reads: 16,
+            ofmap_sram_writes: 32,
+            dram_reads: 64,
+            dram_writes: 128,
+            ..Default::default()
+        };
+        assert_eq!(a.sram_accesses(), 63);
+        assert_eq!(a.dram_accesses(), 192);
+    }
+
+    #[test]
+    fn csv_round_trip_field_count() {
+        let line = Activity::default().csv_line("x");
+        assert_eq!(line.split(',').count(), csv_header().split(',').count());
+    }
+}

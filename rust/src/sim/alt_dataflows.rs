@@ -1,0 +1,179 @@
+//! Alternative systolic dataflows — *input stationary* (IS) and *output
+//! stationary* (OS) — the two other basic mappings the paper's §2
+//! preliminaries describe.  Built as comparators: the
+//! `dataflow_comparison` bench shows why the paper (like the TPU) builds
+//! on weight stationary, and where the alternatives would win.
+//!
+//! Both models use the same analytic style as [`super::dataflow`]
+//! (fold-counting with pipeline-fill skew, derived from the same
+//! register-level array assumptions) and fill the same [`Activity`]
+//! counters so the energy model applies unchanged.
+//!
+//! **IS** — the roles of weights and inputs swap (paper: "the
+//! input-stationary approach is similar to weight-stationary, but the
+//! role of weights and inputs is swapped"): IFMap tiles `[Sr, K]` are
+//! pinned in the load registers (Sr on columns, K on rows) and weight
+//! rows stream through; outputs drain down columns.  Folds:
+//! `⌈K/H⌉ × ⌈Sr/W⌉`, stream length `M`.
+//!
+//! **OS** — each PE accumulates one output element `[Sr × M]` in place;
+//! inputs and weights stream in from the two edges (`K` cycles), then
+//! outputs drain through the column wires (`h` cycles per fold).  Folds:
+//! `⌈Sr/H⌉ × ⌈M/W⌉`, stream length `K`, plus an explicit drain phase —
+//! the separate drain stage the paper's §1 mentions.
+
+use super::activity::Activity;
+use super::buffers::BufferConfig;
+use super::dataflow::{ArrayGeometry, LayerTiming};
+use crate::util::ceil_div;
+use crate::workloads::shapes::GemmDims;
+
+/// Input-stationary timing for one layer on the full array.
+pub fn input_stationary_timing(
+    geom: ArrayGeometry,
+    gemm: GemmDims,
+    bufs: &BufferConfig,
+) -> LayerTiming {
+    let GemmDims { sr, k, m } = gemm;
+    assert!(sr > 0 && k > 0 && m > 0);
+    // IFMap stationary: K rows x Sr columns resident; weights stream M rows.
+    let fk = ceil_div(k, geom.rows);
+    let fs = ceil_div(sr, geom.cols);
+    // Per fold: load h_i rows of the ifmap tile, stream M weight rows
+    // through (pipeline fill H + drain across w_j columns).
+    // Closed form mirrors dataflow::layer_timing_at with Sr <-> M swapped.
+    let per_fold_base = m + geom.rows - 1;
+    let cycles = fs * k + fk * sr + fk * fs * per_fold_base;
+
+    let ifmap_passes = bufs.ifmap_dram_passes(sr, k, 1);
+    let activity = Activity {
+        macs: sr * k * m,
+        pe_lr_writes: k * sr,        // the ifmap is what gets pinned
+        weight_sram_reads: k * m * fs, // weights re-stream per Sr fold
+        weight_sram_writes: k * m,
+        ifmap_sram_reads: sr * k,
+        ifmap_sram_writes: sr * k * ifmap_passes,
+        ofmap_sram_writes: sr * m * fk,
+        ofmap_sram_reads: sr * m * (fk - 1),
+        dram_reads: k * m + sr * k * ifmap_passes,
+        dram_writes: sr * m,
+    };
+    LayerTiming { cycles, fk, fm: fs, activity }
+}
+
+/// Output-stationary timing for one layer on the full array.
+pub fn output_stationary_timing(
+    geom: ArrayGeometry,
+    gemm: GemmDims,
+    bufs: &BufferConfig,
+) -> LayerTiming {
+    let GemmDims { sr, k, m } = gemm;
+    assert!(sr > 0 && k > 0 && m > 0);
+    // Each PE owns one (sr, m) output element; stream K products, then
+    // drain the fold's outputs down the columns (h_i cycles).
+    let fs = ceil_div(sr, geom.rows);
+    let fm = ceil_div(m, geom.cols);
+    // Per fold (h_i, w_j): skew-in (h_i + w_j - 2) + K stream + h_i drain.
+    // Closed form: Σ h_i = sr (once per fm), Σ w_j = m (once per fs):
+    //   cycles = Σ_ij [2 h_i + w_j + K - 2]
+    //          = 2·fm·sr + fs·m + fs·fm·(k - 2)   (saturating for k < 2)
+    let cycles = 2 * fm * sr + fs * m + fs * fm * k.saturating_sub(2).max(1);
+
+    let ifmap_passes = bufs.ifmap_dram_passes(sr, k, fm);
+    let activity = Activity {
+        macs: sr * k * m,
+        pe_lr_writes: 0, // nothing pinned; accumulators live in the PE
+        weight_sram_reads: k * m * fs, // weights re-stream per Sr fold
+        weight_sram_writes: k * m,
+        ifmap_sram_reads: sr * k * fm, // ifmap re-streams per M fold
+        ifmap_sram_writes: sr * k * ifmap_passes,
+        // OS writes each output exactly once: no partial-sum traffic.
+        ofmap_sram_writes: sr * m,
+        ofmap_sram_reads: 0,
+        dram_reads: k * m + sr * k * ifmap_passes,
+        dram_writes: sr * m,
+    };
+    LayerTiming { cycles, fk: fs, fm, activity }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dataflow::baseline_layer_timing;
+
+    const GEOM: ArrayGeometry = ArrayGeometry { rows: 128, cols: 128 };
+
+    fn bufs() -> BufferConfig {
+        BufferConfig::default()
+    }
+
+    #[test]
+    fn macs_identical_across_dataflows() {
+        let g = GemmDims { sr: 3025, k: 363, m: 96 };
+        let ws = baseline_layer_timing(GEOM, g, &bufs());
+        let is = input_stationary_timing(GEOM, g, &bufs());
+        let os = output_stationary_timing(GEOM, g, &bufs());
+        assert_eq!(ws.activity.macs, is.activity.macs);
+        assert_eq!(ws.activity.macs, os.activity.macs);
+    }
+
+    #[test]
+    fn os_has_no_partial_sum_traffic() {
+        let g = GemmDims { sr: 1000, k: 2048, m: 512 };
+        let os = output_stationary_timing(GEOM, g, &bufs());
+        assert_eq!(os.activity.ofmap_sram_reads, 0);
+        assert_eq!(os.activity.ofmap_sram_writes, g.sr * g.m);
+        // WS with FK = 16 folds pays 15 read-modify-write passes.
+        let ws = baseline_layer_timing(GEOM, g, &bufs());
+        assert!(ws.activity.ofmap_sram_reads > 0);
+    }
+
+    #[test]
+    fn ws_wins_convs_is_wins_batch1_fc() {
+        // Convolution (long stream, narrow M): WS pins the small weight
+        // tile once and amortizes the fill over 3025 stream rows; IS folds
+        // the 3025-row ifmap into 24 column tiles and re-fills per tile.
+        let conv = GemmDims { sr: 3025, k: 363, m: 96 }; // AlexNet conv1
+        let ws = baseline_layer_timing(GEOM, conv, &bufs());
+        let is = input_stationary_timing(GEOM, conv, &bufs());
+        assert!(ws.cycles < is.cycles / 2, "WS {} vs IS {}", ws.cycles, is.cycles);
+
+        // FC at batch 1 (Sr = 1): the WS weakness the zoo exposes (AlexNet
+        // fc6-8 dominate its runtime).  IS pins the single ifmap column and
+        // streams every weight row through in one pass per K-fold — fewer
+        // fills, fewer cycles.  This is exactly the Herald/Planaria
+        // motivation for heterogeneous dataflows.
+        let fc = GemmDims { sr: 1, k: 4096, m: 4096 };
+        let ws = baseline_layer_timing(GEOM, fc, &bufs());
+        let is = input_stationary_timing(GEOM, fc, &bufs());
+        assert!(is.cycles < ws.cycles, "IS {} vs WS {}", is.cycles, ws.cycles);
+    }
+
+    #[test]
+    fn os_competitive_on_deep_reductions() {
+        // Deep K, modest outputs: OS streams K once per output tile with no
+        // psum spills; WS pays FK load+drain overheads.
+        let deep = GemmDims { sr: 128, k: 16384, m: 128 };
+        let ws = baseline_layer_timing(GEOM, deep, &bufs());
+        let os = output_stationary_timing(GEOM, deep, &bufs());
+        assert!(os.cycles < ws.cycles, "OS {} vs WS {}", os.cycles, ws.cycles);
+    }
+
+    #[test]
+    fn cycle_counts_positive_and_bounded() {
+        for g in [
+            GemmDims { sr: 1, k: 1, m: 1 },
+            GemmDims { sr: 7, k: 129, m: 129 },
+            GemmDims { sr: 4096, k: 4096, m: 4096 },
+        ] {
+            for t in [
+                input_stationary_timing(GEOM, g, &bufs()),
+                output_stationary_timing(GEOM, g, &bufs()),
+            ] {
+                assert!(t.cycles > 0);
+                // Sanity roofline: cycles >= macs / PEs.
+                assert!(t.cycles >= g.macs() / GEOM.pes());
+            }
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! On-chip SRAM buffer model — the *load* (weight), *feed* (IFMap) and
+//! *drain* (OFMap) buffers of Fig. 3.
+//!
+//! Capacity determines DRAM refetch behaviour: a layer whose IFMap fits in
+//! the feed-buffer share streams it from DRAM once and re-reads it from
+//! SRAM on every column fold; otherwise every column fold re-fetches from
+//! DRAM.  Under partitioning, each partition owns a proportional share of
+//! every buffer (the paper allocates "parts of each storage element" with
+//! the PEs).
+
+/// Buffer sizing (per the whole array), TPU-like defaults.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BufferConfig {
+    /// Load (weight) buffer bytes.
+    pub weight_bytes: u64,
+    /// Feed (IFMap) buffer bytes.
+    pub ifmap_bytes: u64,
+    /// Drain (OFMap) buffer bytes.
+    pub ofmap_bytes: u64,
+    /// Element width in bytes (int8 = 1, bf16 = 2, f32 = 4).
+    pub dtype_bytes: u64,
+}
+
+impl Default for BufferConfig {
+    fn default() -> Self {
+        // TPUv3-ish SRAM split scaled to a single 128x128 core: 24 MiB
+        // unified on-chip storage, split 1/2 feed, 1/4 weights, 1/4 drain.
+        BufferConfig {
+            weight_bytes: 6 << 20,
+            ifmap_bytes: 12 << 20,
+            ofmap_bytes: 6 << 20,
+            dtype_bytes: 1, // int8 inference, as the paper's 45nm design point
+        }
+    }
+}
+
+impl BufferConfig {
+    /// The buffer share of a partition covering `width` of `total_cols`
+    /// columns (proportional allocation, min one dtype word).
+    pub fn share(&self, width: u64, total_cols: u64) -> BufferConfig {
+        assert!(width > 0 && width <= total_cols);
+        let scale = |b: u64| (b * width / total_cols).max(self.dtype_bytes);
+        BufferConfig {
+            weight_bytes: scale(self.weight_bytes),
+            ifmap_bytes: scale(self.ifmap_bytes),
+            ofmap_bytes: scale(self.ofmap_bytes),
+            dtype_bytes: self.dtype_bytes,
+        }
+    }
+
+    /// How many DRAM passes the IFMap needs given `fm` column folds:
+    /// 1 if the whole streamed IFMap (`sr·k` words) fits the feed share,
+    /// else one pass per fold.
+    pub fn ifmap_dram_passes(&self, sr: u64, k: u64, fm: u64) -> u64 {
+        if sr.saturating_mul(k).saturating_mul(self.dtype_bytes) <= self.ifmap_bytes {
+            1
+        } else {
+            fm
+        }
+    }
+
+    /// Whether the layer's full weight tile (`k·m` words) fits the load
+    /// share (it is streamed once either way — weights are single-use in
+    /// WS — but a miss forces fold-grained fills, adding fill *events*).
+    pub fn weight_fits(&self, k: u64, m: u64) -> bool {
+        k.saturating_mul(m).saturating_mul(self.dtype_bytes) <= self.weight_bytes
+    }
+
+    /// Whether an OFMap partial-sum working set (`sr·m` words, f32 partials
+    /// = 4x dtype for int8) fits the drain share; a miss spills partials to
+    /// DRAM on every K-fold.
+    pub fn ofmap_fits(&self, sr: u64, m: u64) -> bool {
+        let partial_bytes = self.dtype_bytes.max(4);
+        sr.saturating_mul(m).saturating_mul(partial_bytes) <= self.ofmap_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn share_is_proportional() {
+        let b = BufferConfig { weight_bytes: 1000, ifmap_bytes: 2000, ofmap_bytes: 4000, dtype_bytes: 1 };
+        let s = b.share(32, 128);
+        assert_eq!(s.weight_bytes, 250);
+        assert_eq!(s.ifmap_bytes, 500);
+        assert_eq!(s.ofmap_bytes, 1000);
+        let full = b.share(128, 128);
+        assert_eq!(full, b);
+    }
+
+    #[test]
+    fn share_never_zero() {
+        let b = BufferConfig { weight_bytes: 10, ifmap_bytes: 10, ofmap_bytes: 10, dtype_bytes: 4 };
+        let s = b.share(1, 128);
+        assert!(s.weight_bytes >= 4);
+    }
+
+    #[test]
+    fn ifmap_passes() {
+        let b = BufferConfig { ifmap_bytes: 100, dtype_bytes: 1, ..Default::default() };
+        assert_eq!(b.ifmap_dram_passes(10, 5, 7), 1); // 50 <= 100
+        assert_eq!(b.ifmap_dram_passes(30, 5, 7), 7); // 150 > 100
+    }
+
+    #[test]
+    fn fits_checks() {
+        let b = BufferConfig { weight_bytes: 64, ofmap_bytes: 64, dtype_bytes: 1, ..Default::default() };
+        assert!(b.weight_fits(8, 8));
+        assert!(!b.weight_fits(9, 8));
+        // f32 partials: 4 bytes each regardless of int8 dtype.
+        assert!(b.ofmap_fits(4, 4));
+        assert!(!b.ofmap_fits(5, 4));
+    }
+}

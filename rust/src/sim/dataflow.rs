@@ -1,0 +1,328 @@
+//! Analytic weight-stationary timing — the Scale-Sim-equivalent closed
+//! forms, derived from (and tested against) the functional simulator in
+//! [`super::array`].
+//!
+//! A GEMM `[Sr, K] × [K, M]` maps onto an `H × W` array as
+//! `FK = ⌈K/H⌉ × FM = ⌈M/W⌉` folds.  Per fold `(i, j)` with used rows
+//! `h_i` and used columns `w_j`:
+//!
+//! - **load**: `h_i` cycles (weights ripple down the column shift chain);
+//! - **feed+drain**: the last partial sum for stream row `Sr-1` leaves the
+//!   drain port of column `col0 + w_j - 1` after
+//!   `Sr + H + col0 + w_j - 1` cycles (psums traverse the *full* physical
+//!   column height `H`, plus one drain-pipe stage) — see
+//!   `array::tests::single_tile_cycle_count_formula` for the exact match.
+//!
+//! Folds execute back-to-back with no load/compute overlap (the Y wires
+//! are shared between weights and partial sums, Fig. 3, so a fold's load
+//! cannot start until the previous drain finishes — the paper's motivation
+//! for separate load/calculate steps).
+
+use super::activity::Activity;
+use super::buffers::BufferConfig;
+use crate::util::ceil_div;
+use crate::workloads::shapes::GemmDims;
+
+/// Physical array geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrayGeometry {
+    /// PE rows (`H`, the K dimension).
+    pub rows: u64,
+    /// PE columns (`W`, the M/partitioned dimension).
+    pub cols: u64,
+}
+
+impl ArrayGeometry {
+    pub fn new(rows: u64, cols: u64) -> ArrayGeometry {
+        assert!(rows > 0 && cols > 0);
+        ArrayGeometry { rows, cols }
+    }
+
+    pub fn pes(&self) -> u64 {
+        self.rows * self.cols
+    }
+}
+
+/// Result of timing one layer on (a slice of) the array.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerTiming {
+    /// Total cycles (load + feed + drain over all folds).
+    pub cycles: u64,
+    /// K folds.
+    pub fk: u64,
+    /// M folds.
+    pub fm: u64,
+    /// Component activity for the energy model.
+    pub activity: Activity,
+}
+
+impl LayerTiming {
+    /// PE-seconds utilization of the slice: MACs / (cycles × slice PEs).
+    pub fn utilization(&self, slice_pes: u64) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.activity.macs as f64 / (self.cycles as f64 * slice_pes as f64)
+    }
+}
+
+/// Single-tenant stream cycles for one fold: the tile starts at column
+/// `col0` and spans `w` columns on an `h`-row-high array.
+#[inline]
+pub fn stream_cycles(sr: u64, array_rows: u64, col0: u64, w: u64) -> u64 {
+    sr + array_rows + col0 + w - 1
+}
+
+/// Interleaved (shared-wire) stream cycles with `p` co-resident tenants:
+/// slot `slot` of `p`, derived from the functional model
+/// (`array::tests::interleaved_cycle_count_formula`).
+#[inline]
+pub fn stream_cycles_interleaved(p: u64, slot: u64, sr: u64, array_rows: u64, col0: u64, w: u64) -> u64 {
+    debug_assert!(slot < p);
+    p * (sr - 1 + array_rows - 1) + slot + col0 + w - 1 + p + 1
+}
+
+/// Iterate fold dimensions `(h_i, w_j)` of a `[K, M]` weight on `H×W`.
+pub fn folds(k: u64, m: u64, rows: u64, cols: u64) -> impl Iterator<Item = (u64, u64)> {
+    let fk = ceil_div(k, rows);
+    let fm = ceil_div(m, cols);
+    (0..fk).flat_map(move |i| {
+        let h = (k - i * rows).min(rows);
+        (0..fm).map(move |j| (h, (m - j * cols).min(cols)))
+    })
+}
+
+/// Time a layer on the full array, single tenant (the baseline datapath).
+pub fn baseline_layer_timing(geom: ArrayGeometry, gemm: GemmDims, bufs: &BufferConfig) -> LayerTiming {
+    layer_timing_at(geom, gemm, 0, geom.cols, bufs, None)
+}
+
+/// Shared core: time a layer on columns `[col0, col0+width)` of the array.
+///
+/// `interleave`: `Some((p, slot))` applies the shared-feed-wire penalty of
+/// `p` co-resident tenants; `None` is the independent-feed model (the
+/// paper's).
+pub fn layer_timing_at(
+    geom: ArrayGeometry,
+    gemm: GemmDims,
+    col0: u64,
+    width: u64,
+    bufs: &BufferConfig,
+    interleave: Option<(u64, u64)>,
+) -> LayerTiming {
+    assert!(width > 0 && col0 + width <= geom.cols, "slice out of range");
+    let GemmDims { sr, k, m } = gemm;
+    assert!(sr > 0 && k > 0 && m > 0);
+    let fk = ceil_div(k, geom.rows);
+    let fm = ceil_div(m, width);
+
+    // Closed form of `Σ_folds [h_i + stream(...)]` — the scheduler calls
+    // this for every candidate dispatch, and a fold loop is O(FK·FM)
+    // (AlexNet fc6 on a 16-wide slice = 18 432 folds).  Using
+    // Σ_i h_i = K, Σ_j w_j = M and the per-fold stream equations:
+    //
+    //   independent:  Σ = FM·K + FK·M + FK·FM·(Sr + H + col0 − 1)
+    //   interleaved:  Σ = FM·K + FK·M + FK·FM·(p·(Sr + H − 2) + slot + col0 + p)
+    //
+    // Verified against the explicit fold loop by
+    // `tests::closed_form_matches_fold_loop`.
+    let per_fold_base = match interleave {
+        None => sr + geom.rows + col0 - 1,
+        Some((p, slot)) => {
+            debug_assert!(slot < p);
+            p * (sr + geom.rows - 2) + slot + col0 + p
+        }
+    };
+    let cycles = fm * k + fk * m + fk * fm * per_fold_base;
+
+    // Activity counts (per the DESIGN.md §4 accounting).
+    let share = bufs.share(width, geom.cols);
+    let ifmap_passes = share.ifmap_dram_passes(sr, k, fm);
+    let ofmap_spills = if share.ofmap_fits(sr, m) { 0 } else { fk.saturating_sub(1) };
+    let activity = Activity {
+        macs: sr * k * m,
+        pe_lr_writes: k * m,
+        weight_sram_reads: k * m,
+        weight_sram_writes: k * m, // filled from DRAM once (single-use)
+        ifmap_sram_reads: sr * k * fm,
+        ifmap_sram_writes: sr * k * ifmap_passes,
+        ofmap_sram_writes: sr * m * fk,
+        ofmap_sram_reads: sr * m * (fk - 1),
+        dram_reads: k * m + sr * k * ifmap_passes + sr * m * ofmap_spills,
+        dram_writes: sr * m + sr * m * ofmap_spills,
+    };
+
+    LayerTiming { cycles, fk, fm, activity }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+    use crate::sim::array::{simulate_step, StepTile};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.gen_f32() - 0.5).collect())
+    }
+
+    #[test]
+    fn folds_cover_exact_dims() {
+        let fs: Vec<_> = folds(10, 7, 4, 3).collect();
+        // FK = 3 (4,4,2), FM = 3 (3,3,1)
+        assert_eq!(fs.len(), 9);
+        let sum_h: u64 = fs.iter().step_by(3).map(|(h, _)| h).sum();
+        assert_eq!(sum_h, 10);
+        let sum_w: u64 = fs[..3].iter().map(|(_, w)| w).sum();
+        assert_eq!(sum_w, 7);
+    }
+
+    #[test]
+    fn analytic_matches_functional_single_fold() {
+        prop::check("analytic == functional (single fold, single tenant)", 60, |rng| {
+            let rows = rng.gen_range_inclusive(1, 8);
+            let cols = rng.gen_range_inclusive(1, 8);
+            let k = rng.gen_range_inclusive(1, rows);
+            let w = rng.gen_range_inclusive(1, cols);
+            let col0 = rng.gen_range_inclusive(0, cols - w);
+            let sr = rng.gen_range_inclusive(1, 20);
+            let x = rand_tensor(rng, vec![sr as usize, k as usize]);
+            let wt = rand_tensor(rng, vec![k as usize, w as usize]);
+            let r = simulate_step(
+                rows as usize,
+                cols as usize,
+                &[StepTile { x, w: wt, col0: col0 as usize }],
+                true,
+                None,
+            );
+            let geom = ArrayGeometry::new(rows, cols);
+            let t = layer_timing_at(geom, GemmDims { sr, k, m: w }, col0, w, &BufferConfig::default(), None);
+            prop::ensure_eq(t.cycles, r.total_cycles(), "cycles")?;
+            prop::ensure_eq(t.activity.macs, r.macs, "macs")
+        });
+    }
+
+    #[test]
+    fn analytic_matches_functional_interleaved() {
+        prop::check("analytic == functional (interleaved, worst slot)", 40, |rng| {
+            let rows = rng.gen_range_inclusive(1, 6);
+            let p = rng.gen_range_inclusive(2, 4);
+            // p equal-width tiles with the same stream length and K so the
+            // worst slot is the last one (deterministic max).
+            let w = rng.gen_range_inclusive(1, 3);
+            let cols = p * w;
+            let k = rng.gen_range_inclusive(1, rows);
+            let sr = rng.gen_range_inclusive(2, 12);
+            let tiles: Vec<StepTile> = (0..p)
+                .map(|i| StepTile {
+                    x: rand_tensor(rng, vec![sr as usize, k as usize]),
+                    w: rand_tensor(rng, vec![k as usize, w as usize]),
+                    col0: (i * w) as usize,
+                })
+                .collect();
+            let r = simulate_step(rows as usize, cols as usize, &tiles, true, None);
+            let geom = ArrayGeometry::new(rows, cols);
+            // Tile p-1 (last slot, rightmost columns) finishes last.
+            let t = layer_timing_at(
+                geom,
+                GemmDims { sr, k, m: w },
+                (p - 1) * w,
+                w,
+                &BufferConfig::default(),
+                Some((p, p - 1)),
+            );
+            prop::ensure_eq(t.cycles, k + r.stream_cycles, "load+stream cycles")
+        });
+    }
+
+    #[test]
+    fn closed_form_matches_fold_loop() {
+        // The O(1) closed form in layer_timing_at must equal the explicit
+        // per-fold sum for any shape, slice, and feed policy.
+        prop::check("closed form == fold loop", 200, |rng| {
+            let geom = ArrayGeometry::new(
+                rng.gen_range_inclusive(1, 128),
+                rng.gen_range_inclusive(1, 128),
+            );
+            let width = rng.gen_range_inclusive(1, geom.cols);
+            let col0 = rng.gen_range_inclusive(0, geom.cols - width);
+            let gemm = GemmDims {
+                sr: rng.gen_range_inclusive(1, 5000),
+                k: rng.gen_range_inclusive(1, 8192),
+                m: rng.gen_range_inclusive(1, 8192),
+            };
+            let interleave = if rng.gen_bool(0.5) {
+                let p = rng.gen_range_inclusive(2, 8);
+                Some((p, rng.gen_range(p)))
+            } else {
+                None
+            };
+            let t = layer_timing_at(geom, gemm, col0, width, &BufferConfig::default(), interleave);
+            let mut loop_cycles = 0u64;
+            for (h, w) in folds(gemm.k, gemm.m, geom.rows, width) {
+                loop_cycles += h + match interleave {
+                    None => stream_cycles(gemm.sr, geom.rows, col0, w),
+                    Some((p, slot)) => {
+                        stream_cycles_interleaved(p, slot, gemm.sr, geom.rows, col0, w)
+                    }
+                };
+            }
+            prop::ensure_eq(t.cycles, loop_cycles, "cycles")
+        });
+    }
+
+    #[test]
+    fn multi_fold_cycles_sum() {
+        // K = 2H, M = 2W: 4 folds, each full-size.
+        let geom = ArrayGeometry::new(4, 4);
+        let g = GemmDims { sr: 10, k: 8, m: 8 };
+        let t = baseline_layer_timing(geom, g, &BufferConfig::default());
+        assert_eq!((t.fk, t.fm), (2, 2));
+        let per_fold = 4 + stream_cycles(10, 4, 0, 4);
+        assert_eq!(t.cycles, 4 * per_fold);
+    }
+
+    #[test]
+    fn narrower_slice_takes_longer() {
+        let geom = ArrayGeometry::new(128, 128);
+        let g = GemmDims { sr: 1000, k: 256, m: 128 };
+        let full = baseline_layer_timing(geom, g, &BufferConfig::default());
+        let half = layer_timing_at(geom, g, 0, 64, &BufferConfig::default(), None);
+        assert!(half.cycles > full.cycles);
+        // But by less than 2x: fold overheads amortize.
+        assert!(half.cycles < 2 * full.cycles + 1000);
+    }
+
+    #[test]
+    fn offset_adds_traversal_skew() {
+        let geom = ArrayGeometry::new(8, 32);
+        let g = GemmDims { sr: 100, k: 8, m: 8 };
+        let at0 = layer_timing_at(geom, g, 0, 8, &BufferConfig::default(), None);
+        let at24 = layer_timing_at(geom, g, 24, 8, &BufferConfig::default(), None);
+        assert_eq!(at24.cycles - at0.cycles, 24);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let geom = ArrayGeometry::new(128, 128);
+        let g = GemmDims { sr: 10_000, k: 128, m: 128 };
+        let t = baseline_layer_timing(geom, g, &BufferConfig::default());
+        let u = t.utilization(geom.pes());
+        assert!(u > 0.9, "long streams should approach full utilization, got {u}");
+        assert!(u <= 1.0);
+    }
+
+    #[test]
+    fn activity_scaling_with_folds() {
+        let geom = ArrayGeometry::new(4, 4);
+        let g = GemmDims { sr: 10, k: 8, m: 8 };
+        let t = baseline_layer_timing(geom, g, &BufferConfig::default());
+        assert_eq!(t.activity.macs, 10 * 8 * 8);
+        assert_eq!(t.activity.pe_lr_writes, 8 * 8);
+        assert_eq!(t.activity.ifmap_sram_reads, 10 * 8 * 2); // FM = 2
+        assert_eq!(t.activity.ofmap_sram_writes, 10 * 8 * 2); // FK = 2
+        assert_eq!(t.activity.ofmap_sram_reads, 10 * 8); // FK-1 accumulation
+    }
+}

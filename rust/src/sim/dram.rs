@@ -1,0 +1,77 @@
+//! Off-chip DRAM traffic and bandwidth-stall model.
+//!
+//! The analytic timing in [`super::dataflow`] assumes SRAM-fed folds; when
+//! the DRAM traffic a layer generates exceeds what the interface can
+//! deliver within the layer's compute cycles, the layer is memory-bound
+//! and stalls for the difference.  This mirrors Scale-Sim's bandwidth mode
+//! (`interface_bandwidth`), folded into a post-pass.
+
+use super::activity::Activity;
+
+/// DRAM interface model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DramConfig {
+    /// Words (elements) transferable per array cycle, aggregate R+W.
+    pub words_per_cycle: f64,
+    /// Fixed per-burst latency charged once per layer (cycles).
+    pub burst_latency: u64,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        // ~700 MHz array clock vs HBM-class interface feeding one core:
+        // 64 words/cycle aggregate for int8.
+        DramConfig { words_per_cycle: 64.0, burst_latency: 100 }
+    }
+}
+
+impl DramConfig {
+    /// Cycles needed to move a layer's DRAM traffic.
+    pub fn transfer_cycles(&self, activity: &Activity) -> u64 {
+        let words = activity.dram_accesses() as f64;
+        (words / self.words_per_cycle).ceil() as u64 + self.burst_latency
+    }
+
+    /// Effective layer cycles: compute overlapped with (double-buffered)
+    /// DRAM transfer — the slower of the two paths dominates.
+    pub fn bound_cycles(&self, compute_cycles: u64, activity: &Activity) -> u64 {
+        compute_cycles.max(self.transfer_cycles(activity))
+    }
+
+    /// True when the layer is memory-bound under this interface.
+    pub fn memory_bound(&self, compute_cycles: u64, activity: &Activity) -> bool {
+        self.transfer_cycles(activity) > compute_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn act(reads: u64, writes: u64) -> Activity {
+        Activity { dram_reads: reads, dram_writes: writes, ..Default::default() }
+    }
+
+    #[test]
+    fn transfer_cycles_scale_with_traffic() {
+        let d = DramConfig { words_per_cycle: 10.0, burst_latency: 5 };
+        assert_eq!(d.transfer_cycles(&act(100, 0)), 15);
+        assert_eq!(d.transfer_cycles(&act(95, 6)), 16); // ceil(101/10)+5
+    }
+
+    #[test]
+    fn compute_bound_layer_unaffected() {
+        let d = DramConfig { words_per_cycle: 100.0, burst_latency: 0 };
+        let a = act(1000, 0);
+        assert_eq!(d.bound_cycles(5000, &a), 5000);
+        assert!(!d.memory_bound(5000, &a));
+    }
+
+    #[test]
+    fn memory_bound_layer_stalls() {
+        let d = DramConfig { words_per_cycle: 1.0, burst_latency: 0 };
+        let a = act(10_000, 0);
+        assert_eq!(d.bound_cycles(5000, &a), 10_000);
+        assert!(d.memory_bound(5000, &a));
+    }
+}

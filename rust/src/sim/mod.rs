@@ -1,0 +1,33 @@
+//! Scale-Sim-equivalent systolic-array simulator.
+//!
+//! Two models of the same hardware, cross-validated against each other:
+//!
+//! - **Functional** ([`pe`], [`array`]) — a register-level cycle simulation
+//!   of the weight-stationary array with the paper's modified PE (load
+//!   register + `Mul_En` tri-state gate, Fig. 7).  Executes real numerics
+//!   cycle by cycle, including multi-tenant feed interleaving on shared row
+//!   wires.  Ground truth for both numerics and cycle counts on small
+//!   arrays.
+//! - **Analytic** ([`dataflow`], [`partitioned`]) — closed-form fold/skew
+//!   equations (the Scale-Sim approach) used by the coordinator for full
+//!   128×128 runs.  Tests assert the analytic equations reproduce the
+//!   functional simulator's cycle counts exactly.
+//!
+//! Supporting substrates: [`buffers`] (SRAM capacity/double-buffer model and
+//! access counting), [`dram`] (off-chip traffic), [`activity`] (the
+//! component-activity log consumed by the energy estimator — the
+//! Scale-Sim→Accelergy logfile of the paper's Fig. 8).
+
+pub mod activity;
+pub mod alt_dataflows;
+pub mod array;
+pub mod buffers;
+pub mod dataflow;
+pub mod dram;
+pub mod partitioned;
+pub mod pe;
+pub mod trace;
+
+pub use activity::Activity;
+pub use dataflow::{ArrayGeometry, LayerTiming};
+pub use partitioned::{FeedPolicy, PartitionSlice};

@@ -1,0 +1,190 @@
+//! Partitioned weight-stationary dataflow timing (paper §3.4) — the layer
+//! timing the coordinator uses when a layer runs inside a vertical
+//! partition.
+//!
+//! A partition is a contiguous column slice `[col0, col0 + width)`.  It
+//! behaves as an independent `H × width` sub-accelerator except for the
+//! partitioned-dataflow effects:
+//!
+//! - **traversal skew** — feed data passes through `col0` foreign columns
+//!   (Mul_En low) before reaching the partition (+`col0` cycles/fold);
+//! - **feed-bus policy** — [`FeedPolicy::Independent`] gives every
+//!   partition a private feed stream (the paper's model; partitions are
+//!   fully concurrent).  [`FeedPolicy::Interleaved`] time-slices the
+//!   physical row wires among co-resident tenants, multiplying stream time
+//!   by the tenant count (the conservative physical model; see
+//!   `sim::array` for its register-level derivation).  The ablation bench
+//!   `ablation_feedbus` quantifies the gap.
+
+use super::buffers::BufferConfig;
+use super::dataflow::{layer_timing_at, ArrayGeometry, LayerTiming};
+use crate::workloads::shapes::GemmDims;
+
+/// A vertical partition of the array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PartitionSlice {
+    pub col0: u64,
+    pub width: u64,
+}
+
+impl PartitionSlice {
+    pub fn new(col0: u64, width: u64) -> PartitionSlice {
+        assert!(width > 0);
+        PartitionSlice { col0, width }
+    }
+
+    /// Full-array slice.
+    pub fn full(geom: ArrayGeometry) -> PartitionSlice {
+        PartitionSlice { col0: 0, width: geom.cols }
+    }
+
+    pub fn end(&self) -> u64 {
+        self.col0 + self.width
+    }
+
+    /// True if `other` is immediately adjacent (mergeable).
+    pub fn adjacent(&self, other: &PartitionSlice) -> bool {
+        self.end() == other.col0 || other.end() == self.col0
+    }
+
+    /// Merge with an adjacent slice.
+    pub fn merge(&self, other: &PartitionSlice) -> PartitionSlice {
+        assert!(self.adjacent(other), "merging non-adjacent slices");
+        PartitionSlice { col0: self.col0.min(other.col0), width: self.width + other.width }
+    }
+}
+
+/// Feed-bus sharing model for co-resident partitions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeedPolicy {
+    /// Private feed stream per partition — the paper's model (default).
+    Independent,
+    /// Row wires time-sliced among `coresident` tenants; `slot` is this
+    /// partition's position in the round-robin.
+    Interleaved { coresident: u64, slot: u64 },
+}
+
+impl Default for FeedPolicy {
+    fn default() -> Self {
+        FeedPolicy::Independent
+    }
+}
+
+/// Time one layer on a partition slice under the given feed policy.
+pub fn slice_layer_timing(
+    geom: ArrayGeometry,
+    gemm: GemmDims,
+    slice: PartitionSlice,
+    policy: FeedPolicy,
+    bufs: &BufferConfig,
+) -> LayerTiming {
+    let interleave = match policy {
+        FeedPolicy::Independent => None,
+        FeedPolicy::Interleaved { coresident, slot } => {
+            assert!(coresident >= 1 && slot < coresident);
+            Some((coresident, slot))
+        }
+    };
+    layer_timing_at(geom, gemm, slice.col0, slice.width, bufs, interleave)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    const GEOM: ArrayGeometry = ArrayGeometry { rows: 128, cols: 128 };
+
+    fn bufs() -> BufferConfig {
+        BufferConfig::default()
+    }
+
+    #[test]
+    fn slice_merge_algebra() {
+        let a = PartitionSlice::new(0, 32);
+        let b = PartitionSlice::new(32, 32);
+        let c = PartitionSlice::new(96, 32);
+        assert!(a.adjacent(&b));
+        assert!(b.adjacent(&a));
+        assert!(!a.adjacent(&c));
+        let m = a.merge(&b);
+        assert_eq!(m, PartitionSlice::new(0, 64));
+        assert_eq!(b.merge(&a), m);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-adjacent")]
+    fn merge_rejects_gap() {
+        PartitionSlice::new(0, 16).merge(&PartitionSlice::new(32, 16));
+    }
+
+    #[test]
+    fn independent_equals_full_array_when_whole() {
+        let g = GemmDims { sr: 3025, k: 363, m: 96 };
+        let full = slice_layer_timing(GEOM, g, PartitionSlice::full(GEOM), FeedPolicy::Independent, &bufs());
+        let direct = super::super::dataflow::baseline_layer_timing(GEOM, g, &bufs());
+        assert_eq!(full, direct);
+    }
+
+    #[test]
+    fn interleaved_never_faster_than_independent() {
+        prop::check("interleaved >= independent", 100, |rng| {
+            let g = GemmDims {
+                sr: rng.gen_range_inclusive(1, 5000),
+                k: rng.gen_range_inclusive(1, 1024),
+                m: rng.gen_range_inclusive(1, 1024),
+            };
+            let width = *rng.choose(&[16u64, 32, 64, 128]);
+            let col0 = rng.gen_range_inclusive(0, (128 - width) / 16) * 16;
+            let slice = PartitionSlice::new(col0, width);
+            let p = rng.gen_range_inclusive(2, 8);
+            let slot = rng.gen_range(p);
+            let ind = slice_layer_timing(GEOM, g, slice, FeedPolicy::Independent, &bufs());
+            let il = slice_layer_timing(
+                GEOM,
+                g,
+                slice,
+                FeedPolicy::Interleaved { coresident: p, slot },
+                &bufs(),
+            );
+            prop::ensure(il.cycles >= ind.cycles, "interleaved slower-or-equal")?;
+            prop::ensure_eq(il.activity, ind.activity, "activity identical")
+        });
+    }
+
+    #[test]
+    fn narrower_partitions_monotone_slower() {
+        // For a fixed layer, cycles must not decrease as width shrinks.
+        let g = GemmDims { sr: 784, k: 1152, m: 256 };
+        let mut last = 0u64;
+        for width in [128u64, 64, 32, 16, 8] {
+            let t = slice_layer_timing(GEOM, g, PartitionSlice::new(0, width), FeedPolicy::Independent, &bufs());
+            assert!(t.cycles >= last, "width {width}: {} < {last}", t.cycles);
+            last = t.cycles;
+        }
+    }
+
+    #[test]
+    fn narrow_layer_wastes_nothing_on_narrow_partition() {
+        // A layer with m = 16 runs in the same cycles on a 16-wide
+        // partition (at col0 = 0) as on the full array — the core
+        // utilization argument of the paper.
+        let g = GemmDims { sr: 500, k: 128, m: 16 };
+        let full = slice_layer_timing(GEOM, g, PartitionSlice::full(GEOM), FeedPolicy::Independent, &bufs());
+        let narrow = slice_layer_timing(GEOM, g, PartitionSlice::new(0, 16), FeedPolicy::Independent, &bufs());
+        assert_eq!(full.cycles, narrow.cycles);
+        // And utilization of the slice is 8x better.
+        let u_full = full.utilization(GEOM.pes());
+        let u_narrow = narrow.utilization(128 * 16);
+        assert!((u_narrow / u_full - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn activity_independent_of_offset() {
+        let g = GemmDims { sr: 100, k: 64, m: 32 };
+        let a = slice_layer_timing(GEOM, g, PartitionSlice::new(0, 32), FeedPolicy::Independent, &bufs());
+        let b = slice_layer_timing(GEOM, g, PartitionSlice::new(96, 32), FeedPolicy::Independent, &bufs());
+        assert_eq!(a.activity, b.activity);
+        assert!(b.cycles > a.cycles);
+    }
+}

@@ -1,0 +1,145 @@
+//! The processing element — Fig. 3 (baseline) and Fig. 7 (proposed).
+//!
+//! Each PE holds a load register (LR) and a MAC unit.  Two control ports:
+//!
+//! - `load` — Load mode (`load=1`): the Y-dimension inter-PE wire carries
+//!   weight values downward into the LRs (weights and partial sums share
+//!   the vertical wire, which is why load and calculate are separate
+//!   steps).  Calculate mode (`load=0`): the same wire carries partial
+//!   sums downward.
+//! - `mul_en` — the paper's added tri-state gate between multiplier and
+//!   adder.  When 0, the multiplier is disconnected: the PE passes the feed
+//!   value right and the partial sum down *unchanged*, which is what lets
+//!   foreign tenants' feed data traverse a partition without corrupting it.
+
+/// Inputs sampled by a PE in one cycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeInputs {
+    /// Feed data arriving from the left neighbour (X dimension).
+    pub fd: f32,
+    /// Reused data arriving from above (Y dimension): weight in Load mode,
+    /// partial sum in Calculate mode.
+    pub rd: f32,
+    /// Control: Load (true) vs Calculate (false).
+    pub load: bool,
+    /// Control: multiplier enable (the Fig. 7 tri-state gate).
+    pub mul_en: bool,
+}
+
+/// Outputs driven by a PE at the end of a cycle.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeOutputs {
+    /// Feed data forwarded to the right neighbour.
+    pub fd_out: f32,
+    /// Generated data to the neighbour below: forwarded weight in Load
+    /// mode, partial sum in Calculate mode.
+    pub gd: f32,
+}
+
+/// One processing element (registers survive across cycles).
+#[derive(Debug, Clone, Default)]
+pub struct Pe {
+    /// Load register (the stationary weight).
+    lr: f32,
+    /// Feed-forward register (X pipeline).
+    fd_reg: f32,
+    /// Vertical-output register (Y pipeline: weight passthrough or psum).
+    gd_reg: f32,
+}
+
+impl Pe {
+    pub fn new() -> Pe {
+        Pe::default()
+    }
+
+    /// The stationary value currently held.
+    pub fn weight(&self) -> f32 {
+        self.lr
+    }
+
+    /// Advance one cycle: sample `inputs`, update registers, drive outputs.
+    ///
+    /// Load mode: `rd` shifts into the LR and the *previous* LR content is
+    /// forwarded down (a shift-register column, so `h` cycles load `h`
+    /// rows).  Calculate mode: `gd = rd + fd·lr` when `mul_en`, else the
+    /// partial sum passes through untouched (`gd = rd`) — the tri-state
+    /// gate disconnects the multiplier, it does not zero the wire.
+    pub fn step(&mut self, inputs: PeInputs) -> PeOutputs {
+        let out = PeOutputs { fd_out: self.fd_reg, gd: self.gd_reg };
+        if inputs.load {
+            // Weight shift: new value in, old value forwarded down next cycle.
+            self.gd_reg = self.lr;
+            self.lr = inputs.rd;
+            self.fd_reg = inputs.fd; // feed pipeline still advances
+        } else {
+            self.fd_reg = inputs.fd;
+            self.gd_reg = if inputs.mul_en { inputs.rd + inputs.fd * self.lr } else { inputs.rd };
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn calc(fd: f32, rd: f32, mul_en: bool) -> PeInputs {
+        PeInputs { fd, rd, load: false, mul_en }
+    }
+
+    #[test]
+    fn load_mode_shifts_weights_down() {
+        let mut pe = Pe::new();
+        // Load 3.0 then 5.0: LR ends with 5.0, and 3.0 is forwarded down.
+        pe.step(PeInputs { fd: 0.0, rd: 3.0, load: true, mul_en: false });
+        assert_eq!(pe.weight(), 3.0);
+        pe.step(PeInputs { fd: 0.0, rd: 5.0, load: true, mul_en: false });
+        assert_eq!(pe.weight(), 5.0);
+        // The gd register now carries the displaced 3.0 (visible next step).
+        let out = pe.step(calc(0.0, 0.0, false));
+        assert_eq!(out.gd, 3.0);
+    }
+
+    #[test]
+    fn calculate_mode_macs_when_enabled() {
+        let mut pe = Pe::new();
+        pe.step(PeInputs { fd: 0.0, rd: 2.0, load: true, mul_en: false }); // LR = 2
+        pe.step(calc(3.0, 10.0, true)); // gd_reg = 10 + 3*2 = 16
+        let out = pe.step(calc(0.0, 0.0, true));
+        assert_eq!(out.gd, 16.0);
+    }
+
+    #[test]
+    fn mul_en_low_passes_psum_through_unchanged() {
+        // The Fig. 7 property: with Mul_En=0 the partial sum is NOT zeroed,
+        // it flows through while the foreign feed value is ignored.
+        let mut pe = Pe::new();
+        pe.step(PeInputs { fd: 0.0, rd: 7.0, load: true, mul_en: false }); // LR = 7
+        pe.step(calc(100.0, 42.0, false)); // foreign data: gd_reg = 42 untouched
+        let out = pe.step(calc(0.0, 0.0, false));
+        assert_eq!(out.gd, 42.0);
+    }
+
+    #[test]
+    fn feed_data_always_propagates_right() {
+        // Feed forwards regardless of mul_en — foreign partitions see the
+        // data pass through (one cycle of X-pipeline latency).
+        let mut pe = Pe::new();
+        pe.step(calc(9.0, 0.0, false));
+        let out = pe.step(calc(1.0, 0.0, false));
+        assert_eq!(out.fd_out, 9.0);
+        let out = pe.step(calc(0.0, 0.0, true));
+        assert_eq!(out.fd_out, 1.0);
+    }
+
+    #[test]
+    fn outputs_are_registered_one_cycle() {
+        // Outputs reflect the *previous* cycle's computation (registered).
+        let mut pe = Pe::new();
+        pe.step(PeInputs { fd: 0.0, rd: 4.0, load: true, mul_en: false });
+        let out = pe.step(calc(5.0, 1.0, true)); // computes 1 + 5*4 = 21 into reg
+        assert_ne!(out.gd, 21.0, "must not combinationally bypass");
+        let out = pe.step(calc(0.0, 0.0, true));
+        assert_eq!(out.gd, 21.0);
+    }
+}

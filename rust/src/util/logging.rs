@@ -1,0 +1,120 @@
+//! Leveled stderr logger.
+//!
+//! A tiny global logger: `MTSA_LOG=debug|info|warn|error` (default `info`).
+//! Used by the coordinator service and the CLI; benches keep stdout clean
+//! for the figure tables and log to stderr only.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+impl Level {
+    fn from_env() -> Level {
+        match std::env::var("MTSA_LOG").as_deref() {
+            Ok("debug") => Level::Debug,
+            Ok("warn") => Level::Warn,
+            Ok("error") => Level::Error,
+            _ => Level::Info,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO ",
+            Level::Warn => "WARN ",
+            Level::Error => "ERROR",
+        }
+    }
+}
+
+static CURRENT: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+
+/// Current threshold (lazily read from the environment).
+pub fn level() -> Level {
+    let raw = CURRENT.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        let lvl = Level::from_env();
+        CURRENT.store(lvl as u8, Ordering::Relaxed);
+        return lvl;
+    }
+    match raw {
+        0 => Level::Debug,
+        1 => Level::Info,
+        2 => Level::Warn,
+        _ => Level::Error,
+    }
+}
+
+/// Override the threshold programmatically (tests, CLI `--verbose`).
+pub fn set_level(lvl: Level) {
+    CURRENT.store(lvl as u8, Ordering::Relaxed);
+}
+
+/// Emit a record if `lvl` clears the threshold.
+pub fn log(lvl: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if lvl >= level() {
+        eprintln!("[{} {target}] {msg}", lvl.tag());
+    }
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_are_ordered() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+        assert!(Level::Warn < Level::Error);
+    }
+
+    #[test]
+    fn set_level_round_trips() {
+        let prev = level();
+        set_level(Level::Warn);
+        assert_eq!(level(), Level::Warn);
+        set_level(Level::Error);
+        assert_eq!(level(), Level::Error);
+        set_level(prev);
+    }
+}

@@ -1,0 +1,55 @@
+//! Small self-contained utility substrates.
+//!
+//! The build environment is offline with a fixed vendored crate set (no
+//! `serde`, `rand`, `clap`, `criterion`, `proptest`), so the handful of
+//! generic facilities the rest of the crate needs are implemented here and
+//! tested in place:
+//!
+//! - [`json`] — minimal JSON parser for `artifacts/manifest.json`
+//! - [`rng`] — xorshift* PRNG (deterministic, seedable)
+//! - [`stats`] — summary statistics for benches and metrics
+//! - [`tablefmt`] — aligned plain-text tables for bench/figure output
+//! - [`prop`] — randomized property-test driver with seed reporting
+//! - [`logging`] — leveled stderr logger
+
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tablefmt;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `n` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(n: u64, b: u64) -> u64 {
+    ceil_div(n, b) * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(128, 32), 4);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+}

@@ -1,0 +1,137 @@
+//! Randomized property-test driver (proptest replacement).
+//!
+//! Usage:
+//!
+//! ```ignore
+//! prop::check("partition widths sum to array width", 500, |rng| {
+//!     let n = rng.gen_range_inclusive(1, 16);
+//!     /* build a case from rng, return Err(msg) on violation */
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Each case gets a fresh child generator derived from a printed master
+//! seed, so a failure report (`case #i, seed 0x...`) reproduces standalone.
+//! Set `MTSA_PROP_SEED` to re-run a particular master seed and
+//! `MTSA_PROP_CASES` to scale case counts up for soak runs.
+
+use super::rng::Rng;
+
+/// Master seed: env override or a fixed default (deterministic CI).
+pub fn master_seed() -> u64 {
+    match std::env::var("MTSA_PROP_SEED") {
+        Ok(s) => parse_seed(&s).expect("MTSA_PROP_SEED must be a u64 (hex ok)"),
+        Err(_) => 0xC0FFEE,
+    }
+}
+
+fn parse_seed(s: &str) -> Option<u64> {
+    if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// Case-count multiplier from `MTSA_PROP_CASES` (default 1.0).
+fn case_scale() -> f64 {
+    std::env::var("MTSA_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Run `cases` randomized checks of `prop`; panics with a reproducible
+/// seed on the first violation.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let master = master_seed();
+    let mut root = Rng::new(master);
+    let scaled = ((cases as f64) * case_scale()).ceil() as usize;
+    for i in 0..scaled {
+        let child_seed = root.next_u64();
+        let mut rng = Rng::new(child_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' violated at case #{i} \
+                 (master seed {master:#x}, case seed {child_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-equal helper returning a property error instead of panicking,
+/// so `check` can report the reproducing seed.
+pub fn ensure_eq<T: PartialEq + std::fmt::Debug>(
+    a: T,
+    b: T,
+    what: &str,
+) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a:?} != {b:?}"))
+    }
+}
+
+/// Boolean property helper.
+pub fn ensure(cond: bool, what: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 100, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert!(count >= 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' violated")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 10, |_rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_case_streams() {
+        let mut s1 = Vec::new();
+        check("collect", 20, |rng| {
+            s1.push(rng.next_u64());
+            Ok(())
+        });
+        let mut s2 = Vec::new();
+        check("collect", 20, |rng| {
+            s2.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn helpers() {
+        assert!(ensure_eq(1, 1, "x").is_ok());
+        assert!(ensure_eq(1, 2, "x").is_err());
+        assert!(ensure(true, "y").is_ok());
+        assert!(ensure(false, "y").is_err());
+    }
+
+    #[test]
+    fn seed_parsing() {
+        assert_eq!(parse_seed("123"), Some(123));
+        assert_eq!(parse_seed("0xff"), Some(255));
+        assert_eq!(parse_seed("zz"), None);
+    }
+}

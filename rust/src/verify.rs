@@ -1,0 +1,110 @@
+//! Cross-model verification: the register-level functional simulator, the
+//! CPU oracle, and the AOT-compiled PJRT artifacts must all agree on the
+//! partitioned weight-stationary computation.
+//!
+//! This is the repo's deepest consistency check — it ties the *timing*
+//! model's hardware semantics (L3 `sim::array`, the Fig. 7 PE) to the
+//! *functional* datapath (L1 Pallas kernel via PJRT) through the shared
+//! packing layer.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::runtime::packing::{pack_step, packed_step_oracle, TenantTile};
+use crate::runtime::{Engine, Tensor};
+use crate::sim::array::{simulate_step, StepTile};
+use crate::util::rng::Rng;
+
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| rng.gen_f32() - 0.5).collect())
+}
+
+/// One randomized cross-check of `num_p` tenants on the artifact geometry.
+///
+/// Asserts (a) functional sim == oracle, (b) PJRT artifact == oracle, for
+/// every tenant's output slice.  Returns the number of comparisons.
+pub fn cross_check(engine: &Engine, rng: &mut Rng, num_p: usize) -> Result<usize> {
+    let m = engine.manifest();
+    let (s, k, c) = (m.array_s, m.array_k, m.array_c);
+    let width = c / num_p;
+
+    // Random ragged tiles, one per tenant.  Stream and depth are capped so
+    // the register-level sim (O(rows·cols·cycles)) stays fast; the PJRT
+    // artifact still runs at its full fixed geometry via zero padding.
+    let sim_rows = 48usize.min(k);
+    let tiles: Vec<TenantTile> = (0..num_p)
+        .map(|t| {
+            let sr = 1 + rng.gen_range(48.min(s as u64)) as usize;
+            let kd = 1 + rng.gen_range(sim_rows as u64) as usize;
+            let wc = 1 + rng.gen_range(width as u64) as usize;
+            TenantTile {
+                tenant: t,
+                x: rand_tensor(rng, vec![sr, kd]),
+                w: rand_tensor(rng, vec![kd, wc]),
+            }
+        })
+        .collect();
+
+    let step = pack_step(&tiles, s, k, c, num_p)?;
+    let acc = Tensor::zeros(vec![s, c]);
+
+    // (1) PJRT artifact.
+    let pjrt = engine.execute(
+        &format!("pws_p{num_p}"),
+        &[step.x.clone(), step.w.clone(), step.mask.clone(), acc.clone()],
+    )?;
+    // (2) CPU oracle.
+    let oracle = packed_step_oracle(&step, &acc);
+    ensure!(
+        pjrt.max_abs_diff(&oracle) < 1e-3,
+        "PJRT vs oracle diff {}",
+        pjrt.max_abs_diff(&oracle)
+    );
+
+    // (3) Functional register-level sim (on the same column layout, with
+    // interleaved shared wires — the honest hardware model).
+    let mut col0 = 0usize;
+    let sim_tiles: Vec<StepTile> = tiles
+        .iter()
+        .map(|t| {
+            let st = StepTile { x: t.x.clone(), w: t.w.clone(), col0 };
+            col0 += t.w.shape()[1];
+            st
+        })
+        .collect();
+    let r = simulate_step(sim_rows, c, &sim_tiles, true, None);
+
+    let mut checks = 1usize; // the PJRT-vs-oracle check above
+    for (i, tile) in tiles.iter().enumerate() {
+        let want = tile.x.matmul(&tile.w);
+        ensure!(
+            r.outputs[i].max_abs_diff(&want) < 1e-3,
+            "functional sim vs matmul diff {} (tenant {i})",
+            r.outputs[i].max_abs_diff(&want)
+        );
+        let got = step.unpack(&pjrt, i);
+        ensure!(
+            got.max_abs_diff(&want) < 1e-3,
+            "PJRT slice vs matmul diff {} (tenant {i})",
+            got.max_abs_diff(&want)
+        );
+        checks += 2;
+    }
+    Ok(checks)
+}
+
+/// Run the full verification battery against an artifacts directory.
+pub fn verify_all(artifacts_dir: &Path) -> Result<usize> {
+    let engine = Engine::load(artifacts_dir).context("loading artifacts")?;
+    let mut rng = Rng::new(0xEC0_FFEE);
+    let mut total = 0usize;
+    for num_p in [1usize, 2, 4] {
+        for round in 0..3 {
+            total += cross_check(&engine, &mut rng, num_p)
+                .with_context(|| format!("cross_check p={num_p} round={round}"))?;
+        }
+    }
+    Ok(total)
+}

@@ -1,0 +1,160 @@
+//! DNN graphs (DNNG) and the multi-DNN workload pool (paper §2.1, Fig. 2).
+//!
+//! A DNNG is a weighted DAG of layers; in the paper's evaluation (and the
+//! published networks it uses) every DNNG is a chain — layer `i+1` depends
+//! on layer `i` — so the graph is stored as an ordered layer list plus an
+//! explicit dependency edge list to keep the general DAG form available to
+//! the scheduler (it only dispatches layers whose predecessors completed).
+
+use super::shapes::{LayerKind, LayerShape};
+
+/// Identifies a DNN within a pool.
+pub type DnnId = usize;
+
+/// Identifies a layer within its DNN.
+pub type LayerId = usize;
+
+/// One DNN layer (a DNNG vertex).
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub shape: LayerShape,
+}
+
+impl Layer {
+    pub fn new(name: &str, kind: LayerKind, shape: LayerShape) -> Layer {
+        Layer { name: name.to_string(), kind, shape }
+    }
+}
+
+/// One deep neural network graph.
+#[derive(Debug, Clone)]
+pub struct Dnn {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// Dependency edges `(from, to)`; empty means pure chain.
+    pub edges: Vec<(LayerId, LayerId)>,
+    /// Arrival time `A_t` in cycles (assigned by the pool / generator).
+    pub arrival_cycles: u64,
+}
+
+impl Dnn {
+    /// Chain-topology DNN (the common case).
+    pub fn chain(name: &str, layers: Vec<Layer>) -> Dnn {
+        let edges = (1..layers.len()).map(|i| (i - 1, i)).collect();
+        Dnn { name: name.to_string(), layers, edges, arrival_cycles: 0 }
+    }
+
+    /// Set the arrival time (builder style).
+    pub fn arriving_at(mut self, cycles: u64) -> Dnn {
+        self.arrival_cycles = cycles;
+        self
+    }
+
+    /// Direct predecessors of `layer`.
+    pub fn preds(&self, layer: LayerId) -> impl Iterator<Item = LayerId> + '_ {
+        self.edges.iter().filter(move |(_, t)| *t == layer).map(|(f, _)| *f)
+    }
+
+    /// Total `Opr` (Eq. 2) over all layers.
+    pub fn total_opr(&self) -> u64 {
+        self.layers.iter().map(|l| l.shape.opr()).sum()
+    }
+
+    /// Total true MACs over all layers.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.shape.macs()).sum()
+    }
+
+    /// Validate DAG-ness and edge bounds (panics on malformed graphs;
+    /// called by the pool constructor).
+    pub fn validate(&self) {
+        assert!(!self.layers.is_empty(), "DNN {} has no layers", self.name);
+        for &(f, t) in &self.edges {
+            assert!(f < self.layers.len() && t < self.layers.len(), "edge out of range in {}", self.name);
+            assert!(f < t, "edge {f}->{t} violates topological layer order in {}", self.name);
+        }
+    }
+}
+
+/// A pool of DNNs submitted to the accelerator (the task queue's source).
+#[derive(Debug, Clone)]
+pub struct WorkloadPool {
+    pub name: String,
+    pub dnns: Vec<Dnn>,
+}
+
+impl WorkloadPool {
+    pub fn new(name: &str, dnns: Vec<Dnn>) -> WorkloadPool {
+        for d in &dnns {
+            d.validate();
+        }
+        WorkloadPool { name: name.to_string(), dnns }
+    }
+
+    pub fn total_layers(&self) -> usize {
+        self.dnns.iter().map(|d| d.layers.len()).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.dnns.iter().map(|d| d.total_macs()).sum()
+    }
+
+    /// DNNs sorted by arrival time (stable: ties keep pool order).
+    pub fn by_arrival(&self) -> Vec<DnnId> {
+        let mut ids: Vec<DnnId> = (0..self.dnns.len()).collect();
+        ids.sort_by_key(|&i| self.dnns[i].arrival_cycles);
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_dnn(name: &str, n_layers: usize) -> Dnn {
+        let layers = (0..n_layers)
+            .map(|i| Layer::new(&format!("l{i}"), LayerKind::Fc, LayerShape::fc(1, 64, 64)))
+            .collect();
+        Dnn::chain(name, layers)
+    }
+
+    #[test]
+    fn chain_edges() {
+        let d = small_dnn("a", 4);
+        assert_eq!(d.edges, vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(d.preds(2).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(d.preds(0).count(), 0);
+    }
+
+    #[test]
+    fn totals() {
+        let d = small_dnn("a", 3);
+        assert_eq!(d.total_opr(), 3 * 64 * 64);
+        assert_eq!(d.total_macs(), 3 * 64 * 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "violates topological")]
+    fn rejects_back_edge() {
+        let mut d = small_dnn("a", 2);
+        d.edges.push((1, 0));
+        d.validate();
+    }
+
+    #[test]
+    fn pool_ordering_by_arrival() {
+        let pool = WorkloadPool::new(
+            "p",
+            vec![
+                small_dnn("late", 1).arriving_at(100),
+                small_dnn("early", 1).arriving_at(5),
+                small_dnn("tie-first", 1).arriving_at(5),
+            ],
+        );
+        // stable sort keeps "early" (index 1) before "tie-first" (index 2)
+        assert_eq!(pool.by_arrival(), vec![1, 2, 0]);
+        assert_eq!(pool.total_layers(), 3);
+    }
+}

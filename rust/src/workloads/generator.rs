@@ -1,0 +1,149 @@
+//! Synthetic DNNG generator — random workload pools for stress tests,
+//! property tests and the INFaaS-style serving example.
+//!
+//! Generates chains of conv/FC/recurrent layers with dimension
+//! distributions loosely modeled on the zoo (narrow recommendation layers
+//! through wide FC projections) and Poisson arrivals.
+
+use super::dnng::{Dnn, Layer, WorkloadPool};
+use super::shapes::{LayerKind, LayerShape};
+use crate::util::rng::Rng;
+
+/// Knobs for the synthetic generator.
+#[derive(Debug, Clone)]
+pub struct GeneratorCfg {
+    pub num_dnns: usize,
+    pub layers_min: usize,
+    pub layers_max: usize,
+    /// Mean inter-arrival gap in cycles (exponential); 0 = all arrive at 0.
+    pub mean_interarrival: f64,
+    /// Scale multiplier on layer dimensions (1.0 = zoo-like).
+    pub dim_scale: f64,
+}
+
+impl Default for GeneratorCfg {
+    fn default() -> Self {
+        GeneratorCfg {
+            num_dnns: 6,
+            layers_min: 3,
+            layers_max: 20,
+            mean_interarrival: 0.0,
+            dim_scale: 1.0,
+        }
+    }
+}
+
+fn scaled(rng: &mut Rng, lo: u64, hi: u64, scale: f64) -> u64 {
+    let v = rng.gen_range_inclusive(lo, hi) as f64 * scale;
+    (v.round() as u64).max(1)
+}
+
+/// One random layer.
+fn random_layer(rng: &mut Rng, idx: usize, scale: f64) -> Layer {
+    let roll = rng.gen_range(100);
+    if roll < 45 {
+        // Conv: modest spatial, channel growth with depth.
+        let c = scaled(rng, 16, 256, scale);
+        let m = scaled(rng, 16, 384, scale);
+        let hw = *rng.choose(&[7, 14, 28, 56]);
+        let r = *rng.choose(&[1, 3, 5]);
+        let pad = r / 2;
+        Layer::new(
+            &format!("conv{idx}"),
+            LayerKind::Conv,
+            LayerShape::conv(1, c, hw, hw, m, r, r, 1, pad),
+        )
+    } else if roll < 75 {
+        // FC with a wide K tail (AlexNet-like projections).
+        let k = scaled(rng, 64, 4096, scale);
+        let m = scaled(rng, 16, 2048, scale);
+        let batch = *rng.choose(&[1, 1, 1, 4, 16]);
+        Layer::new(&format!("fc{idx}"), LayerKind::Fc, LayerShape::fc(batch, k, m))
+    } else {
+        // Recurrent step.
+        let hidden = *rng.choose(&[64, 128, 256, 512, 1024]);
+        let hidden = ((hidden as f64 * scale).round() as u64).max(8);
+        let seq = rng.gen_range_inclusive(10, 120);
+        let gates = *rng.choose(&[3, 4]);
+        Layer::new(
+            &format!("rnn{idx}"),
+            LayerKind::Recurrent,
+            LayerShape::recurrent(seq, 1, hidden, hidden, gates),
+        )
+    }
+}
+
+/// Generate one random chain DNN.
+pub fn random_dnn(rng: &mut Rng, name: &str, cfg: &GeneratorCfg) -> Dnn {
+    let n_layers = rng.gen_range_inclusive(cfg.layers_min as u64, cfg.layers_max as u64) as usize;
+    let layers = (0..n_layers).map(|i| random_layer(rng, i, cfg.dim_scale)).collect();
+    Dnn::chain(name, layers)
+}
+
+/// Generate a pool with Poisson arrivals.
+pub fn random_pool(rng: &mut Rng, cfg: &GeneratorCfg) -> WorkloadPool {
+    let mut dnns = Vec::with_capacity(cfg.num_dnns);
+    let mut t = 0.0f64;
+    for i in 0..cfg.num_dnns {
+        let mut d = random_dnn(rng, &format!("synthetic{i}"), cfg);
+        if cfg.mean_interarrival > 0.0 && i > 0 {
+            t += rng.gen_exp(1.0 / cfg.mean_interarrival);
+        }
+        d.arrival_cycles = t as u64;
+        dnns.push(d);
+    }
+    WorkloadPool::new("synthetic", dnns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn generated_pools_validate() {
+        prop::check("generated pools are well-formed", 50, |rng| {
+            let cfg = GeneratorCfg {
+                num_dnns: rng.gen_range_inclusive(1, 10) as usize,
+                layers_min: 1,
+                layers_max: 12,
+                mean_interarrival: if rng.gen_bool(0.5) { 1000.0 } else { 0.0 },
+                dim_scale: 0.25 + rng.gen_f64(),
+            };
+            let pool = random_pool(rng, &cfg);
+            prop::ensure_eq(pool.dnns.len(), cfg.num_dnns, "dnn count")?;
+            for d in &pool.dnns {
+                d.validate();
+                prop::ensure(
+                    d.layers.len() >= cfg.layers_min && d.layers.len() <= cfg.layers_max,
+                    "layer count in range",
+                )?;
+                for l in &d.layers {
+                    let g = l.shape.gemm();
+                    prop::ensure(g.sr > 0 && g.k > 0 && g.m > 0, "positive GEMM dims")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn arrivals_are_monotone() {
+        let mut rng = Rng::new(9);
+        let cfg = GeneratorCfg { num_dnns: 20, mean_interarrival: 500.0, ..Default::default() };
+        let pool = random_pool(&mut rng, &cfg);
+        for w in pool.dnns.windows(2) {
+            assert!(w[0].arrival_cycles <= w[1].arrival_cycles);
+        }
+        assert!(pool.dnns.last().unwrap().arrival_cycles > 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = GeneratorCfg::default();
+        let a = random_pool(&mut Rng::new(7), &cfg);
+        let b = random_pool(&mut Rng::new(7), &cfg);
+        assert_eq!(a.total_macs(), b.total_macs());
+        assert_eq!(a.total_layers(), b.total_layers());
+    }
+}

@@ -1,0 +1,18 @@
+//! Workload model — the paper's §2.1 Deep Neural Network Graph (DNNG).
+//!
+//! - [`shapes`] — the 9-dimension layer shape tuple (Eq. 1), MAC-operation
+//!   count `Opr(l)` (Eq. 2), and the conv→GEMM lowering the systolic array
+//!   actually executes.
+//! - [`dnng`] — layers, DNN graphs, arrival times, and the multi-DNN pool.
+//! - [`models`] — the 12-network zoo of Table 1 (heavy multi-domain group +
+//!   light RNN group), transcribed from the published architectures.
+//! - [`generator`] — synthetic DNNG generator (random graphs, Poisson
+//!   arrivals) for stress and property tests.
+
+pub mod dnng;
+pub mod generator;
+pub mod models;
+pub mod shapes;
+
+pub use dnng::{Dnn, DnnId, Layer, LayerId, WorkloadPool};
+pub use shapes::{GemmDims, LayerKind, LayerShape};

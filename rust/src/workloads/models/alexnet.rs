@@ -1,0 +1,62 @@
+//! AlexNet (Krizhevsky et al., 2012) — ImageNet classification, batch 1.
+//!
+//! 5 conv + 3 FC layers (227×227 input, no-pad conv1 as in the original
+//! single-GPU formulation with grouped convs merged).  The two 4096-wide FC
+//! layers dominate on a weight-stationary array: `K` up to 9216 means 72
+//! K-folds with a 1-row feed stream, which is why Fig. 9(c) shows AlexNet's
+//! final layers occupying the full array and finishing last.
+
+use crate::workloads::dnng::{Dnn, Layer};
+use crate::workloads::shapes::{LayerKind, LayerShape};
+
+/// Build AlexNet at batch 1.
+pub fn build() -> Dnn {
+    let n = 1;
+    let layers = vec![
+        Layer::new("conv1", LayerKind::Conv, LayerShape::conv(n, 3, 227, 227, 96, 11, 11, 4, 0)),
+        Layer::new("conv2", LayerKind::Conv, LayerShape::conv(n, 96, 27, 27, 256, 5, 5, 1, 2)),
+        Layer::new("conv3", LayerKind::Conv, LayerShape::conv(n, 256, 13, 13, 384, 3, 3, 1, 1)),
+        Layer::new("conv4", LayerKind::Conv, LayerShape::conv(n, 384, 13, 13, 384, 3, 3, 1, 1)),
+        Layer::new("conv5", LayerKind::Conv, LayerShape::conv(n, 384, 13, 13, 256, 3, 3, 1, 1)),
+        Layer::new("fc6", LayerKind::Fc, LayerShape::fc(n, 256 * 6 * 6, 4096)),
+        Layer::new("fc7", LayerKind::Fc, LayerShape::fc(n, 4096, 4096)),
+        Layer::new("fc8", LayerKind::Fc, LayerShape::fc(n, 4096, 1000)),
+    ];
+    Dnn::chain("AlexNet", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count_and_kinds() {
+        let d = build();
+        assert_eq!(d.layers.len(), 8);
+        assert_eq!(d.layers.iter().filter(|l| l.kind == LayerKind::Conv).count(), 5);
+        assert_eq!(d.layers.iter().filter(|l| l.kind == LayerKind::Fc).count(), 3);
+    }
+
+    #[test]
+    fn conv1_output_is_55x55() {
+        let d = build();
+        let s = d.layers[0].shape;
+        assert_eq!((s.p, s.q), (55, 55));
+    }
+
+    #[test]
+    fn total_macs_near_published() {
+        // ~1.13 GMACs at batch 1 for the ungrouped (torchvision-style
+        // merged-tower) formulation; the grouped original is ~0.7 G.
+        let macs = build().total_macs();
+        assert!((0.9e9..1.3e9).contains(&(macs as f64)), "got {macs}");
+    }
+
+    #[test]
+    fn fc_layers_dominate_k_depth() {
+        let d = build();
+        let max_conv_k = d.layers[..5].iter().map(|l| l.shape.gemm().k).max().unwrap();
+        let fc6_k = d.layers[5].shape.gemm().k;
+        assert!(fc6_k > 2 * max_conv_k);
+    }
+}

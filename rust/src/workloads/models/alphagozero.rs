@@ -1,0 +1,70 @@
+//! AlphaGo Zero policy/value network (Silver et al., 2017) — **reduced**
+//! configuration, batch 1.
+//!
+//! The full AGZ tower (19–39 residual blocks × 256 filters) would be the
+//! heaviest network in the pool by an order of magnitude, contradicting the
+//! paper's observation that AlphaGoZero completes inside 128×16 partitions
+//! among the early finishers.  We therefore use the small self-play
+//! configuration (10 blocks × 64 filters on the 19×19 board) and document
+//! the substitution in DESIGN.md — layer *shapes* stay faithful (3×3 convs
+//! on 19×19, policy/value heads), only depth/width are the small variant.
+
+use crate::workloads::dnng::{Dnn, Layer};
+use crate::workloads::shapes::{LayerKind, LayerShape};
+
+const BOARD: u64 = 19;
+const PLANES: u64 = 17;
+const FILTERS: u64 = 64;
+const BLOCKS: usize = 10;
+
+/// Build the reduced AlphaGoZero network at batch 1.
+pub fn build() -> Dnn {
+    let n = 1;
+    let mut layers = vec![Layer::new(
+        "stem",
+        LayerKind::Conv,
+        LayerShape::conv(n, PLANES, BOARD, BOARD, FILTERS, 3, 3, 1, 1),
+    )];
+    for b in 0..BLOCKS {
+        for half in ["a", "b"] {
+            layers.push(Layer::new(
+                &format!("res{b}{half}"),
+                LayerKind::Conv,
+                LayerShape::conv(n, FILTERS, BOARD, BOARD, FILTERS, 3, 3, 1, 1),
+            ));
+        }
+    }
+    // Policy head: 1x1 conv to 2 planes + fc to board+pass logits.
+    layers.push(Layer::new("policy_conv", LayerKind::Conv, LayerShape::conv(n, FILTERS, BOARD, BOARD, 2, 1, 1, 1, 0)));
+    layers.push(Layer::new("policy_fc", LayerKind::Fc, LayerShape::fc(n, 2 * BOARD * BOARD, BOARD * BOARD + 1)));
+    // Value head: 1x1 conv to 1 plane + 2 fc.
+    layers.push(Layer::new("value_conv", LayerKind::Conv, LayerShape::conv(n, FILTERS, BOARD, BOARD, 1, 1, 1, 1, 0)));
+    layers.push(Layer::new("value_fc1", LayerKind::Fc, LayerShape::fc(n, BOARD * BOARD, 64)));
+    layers.push(Layer::new("value_fc2", LayerKind::Fc, LayerShape::fc(n, 64, 1)));
+    Dnn::chain("AlphaGoZero", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        // 1 stem + 10*2 res + 5 head layers = 26
+        assert_eq!(build().layers.len(), 26);
+    }
+
+    #[test]
+    fn board_spatial_preserved() {
+        for l in build().layers.iter().filter(|l| l.kind == LayerKind::Conv) {
+            assert_eq!((l.shape.p, l.shape.q), (BOARD, BOARD), "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn reduced_config_stays_light() {
+        // The point of the reduction: well under ResNet50.
+        let macs = build().total_macs() as f64;
+        assert!((1e8..1e9).contains(&macs), "got {macs}");
+    }
+}

@@ -1,0 +1,54 @@
+//! Deep Voice text-to-speech (Arık et al., ICML 2017) — batch 1.
+//!
+//! The inference path of the grapheme-to-phoneme + duration + F0 +
+//! vocoder-conditioning stack: small GRU layers plus skinny conv/FC
+//! conditioning layers over a 40-phoneme utterance.
+
+use crate::workloads::dnng::{Dnn, Layer};
+use crate::workloads::shapes::{LayerKind, LayerShape};
+
+const PHONEMES: u64 = 200;
+const HIDDEN: u64 = 256;
+
+/// Build Deep Voice (inference conditioning stack) at batch 1.
+pub fn build() -> Dnn {
+    let layers = vec![
+        Layer::new("g2p_embed", LayerKind::Embedding, LayerShape::fc(PHONEMES, 64, HIDDEN)),
+        // Grapheme-to-phoneme: bidirectional GRU encoder + GRU decoder.
+        Layer::new("g2p_enc_fwd", LayerKind::Recurrent, LayerShape::recurrent(PHONEMES, 1, HIDDEN, HIDDEN / 2, 3)),
+        Layer::new("g2p_enc_bwd", LayerKind::Recurrent, LayerShape::recurrent(PHONEMES, 1, HIDDEN, HIDDEN / 2, 3)),
+        Layer::new("g2p_dec", LayerKind::Recurrent, LayerShape::recurrent(PHONEMES, 1, HIDDEN, HIDDEN, 3)),
+        // Duration prediction MLP.
+        Layer::new("dur_fc1", LayerKind::Fc, LayerShape::fc(PHONEMES, HIDDEN, 256)),
+        Layer::new("dur_fc2", LayerKind::Fc, LayerShape::fc(PHONEMES, 256, 1)),
+        // F0 prediction GRU + head.
+        Layer::new("f0_gru", LayerKind::Recurrent, LayerShape::recurrent(PHONEMES, 1, HIDDEN, 128, 3)),
+        Layer::new("f0_fc", LayerKind::Fc, LayerShape::fc(PHONEMES, 128, 1)),
+        // Vocoder conditioning projection.
+        Layer::new("cond_fc", LayerKind::Fc, LayerShape::fc(PHONEMES, HIDDEN, 512)),
+    ];
+    Dnn::chain("DeepVoice", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        assert_eq!(build().layers.len(), 9);
+    }
+
+    #[test]
+    fn gru_uses_three_gates() {
+        let d = build();
+        let dec = d.layers.iter().find(|l| l.name == "g2p_dec").unwrap();
+        assert_eq!(dec.shape.gemm().m, 3 * HIDDEN);
+    }
+
+    #[test]
+    fn is_light() {
+        let macs = build().total_macs() as f64;
+        assert!((5e7..5e8).contains(&macs), "got {macs}");
+    }
+}

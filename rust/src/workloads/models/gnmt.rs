@@ -1,0 +1,73 @@
+//! Google Translate / GNMT (Wu et al., 2016) — batch 1, 25-token sentence.
+//!
+//! 8 encoder + 8 decoder LSTM layers at 1024 hidden, attention projection,
+//! and a (sampled) softmax projection.  The heaviest member of the light
+//! group — its final layers are the ones Fig. 9(d) shows claiming the full
+//! array after the small RNNs drain out.
+
+use crate::workloads::dnng::{Dnn, Layer};
+use crate::workloads::shapes::{LayerKind, LayerShape};
+
+const SEQ: u64 = 25;
+const HIDDEN: u64 = 1024;
+const ENC_LAYERS: usize = 8;
+const DEC_LAYERS: usize = 8;
+const VOCAB_SAMPLE: u64 = 4096; // sampled-softmax projection width
+
+/// Build GNMT at batch 1.
+pub fn build() -> Dnn {
+    let mut layers = vec![Layer::new(
+        "embed",
+        LayerKind::Embedding,
+        LayerShape::fc(SEQ, 1024, HIDDEN),
+    )];
+    // Encoder: layer 1 is bidirectional (2x half-hidden cells ≈ one
+    // full-hidden GEMM each direction).
+    layers.push(Layer::new("enc0_fwd", LayerKind::Recurrent, LayerShape::recurrent(SEQ, 1, HIDDEN, HIDDEN / 2, 4)));
+    layers.push(Layer::new("enc0_bwd", LayerKind::Recurrent, LayerShape::recurrent(SEQ, 1, HIDDEN, HIDDEN / 2, 4)));
+    for l in 1..ENC_LAYERS {
+        layers.push(Layer::new(
+            &format!("enc{l}"),
+            LayerKind::Recurrent,
+            LayerShape::recurrent(SEQ, 1, HIDDEN, HIDDEN, 4),
+        ));
+    }
+    // Attention projection over encoder states.
+    layers.push(Layer::new("attention", LayerKind::Attention, LayerShape::fc(SEQ, HIDDEN, HIDDEN)));
+    for l in 0..DEC_LAYERS {
+        // Decoder layer 0 also consumes the attention context.
+        let input = if l == 0 { 2 * HIDDEN } else { HIDDEN };
+        layers.push(Layer::new(
+            &format!("dec{l}"),
+            LayerKind::Recurrent,
+            LayerShape::recurrent(SEQ, 1, input, HIDDEN, 4),
+        ));
+    }
+    layers.push(Layer::new("softmax_proj", LayerKind::Fc, LayerShape::fc(SEQ, HIDDEN, VOCAB_SAMPLE)));
+    Dnn::chain("GoogleTranslate", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        // 1 embed + 2 bidi + 7 enc + 1 attn + 8 dec + 1 softmax = 20
+        assert_eq!(build().layers.len(), 20);
+    }
+
+    #[test]
+    fn decoder0_takes_context() {
+        let d = build();
+        let dec0 = d.layers.iter().find(|l| l.name == "dec0").unwrap();
+        assert_eq!(dec0.shape.gemm().k, 2 * HIDDEN + HIDDEN);
+    }
+
+    #[test]
+    fn heaviest_of_light_group() {
+        // A couple of GMACs — big for the RNN group, small next to ResNet50.
+        let macs = build().total_macs() as f64;
+        assert!((1e9..4e9).contains(&macs), "got {macs}");
+    }
+}

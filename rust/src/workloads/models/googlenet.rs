@@ -1,0 +1,74 @@
+//! GoogLeNet / Inception-v1 (Szegedy et al., 2015) — batch 1.
+//!
+//! Stem convs + 9 inception modules (each 6 conv ops: 1×1, 3×3-reduce,
+//! 3×3, 5×5-reduce, 5×5, pool-proj) + fc.  ≈1.5 GMACs.
+
+use crate::workloads::dnng::{Dnn, Layer};
+use crate::workloads::shapes::{LayerKind, LayerShape};
+
+/// (name, spatial, c_in, n1x1, n3x3red, n3x3, n5x5red, n5x5, pool_proj)
+const INCEPTION: &[(&str, u64, u64, u64, u64, u64, u64, u64, u64)] = &[
+    ("3a", 28, 192, 64, 96, 128, 16, 32, 32),
+    ("3b", 28, 256, 128, 128, 192, 32, 96, 64),
+    ("4a", 14, 480, 192, 96, 208, 16, 48, 64),
+    ("4b", 14, 512, 160, 112, 224, 24, 64, 64),
+    ("4c", 14, 512, 128, 128, 256, 24, 64, 64),
+    ("4d", 14, 512, 112, 144, 288, 32, 64, 64),
+    ("4e", 14, 528, 256, 160, 320, 32, 128, 128),
+    ("5a", 7, 832, 256, 160, 320, 32, 128, 128),
+    ("5b", 7, 832, 384, 192, 384, 48, 128, 128),
+];
+
+/// Build GoogLeNet at batch 1.
+pub fn build() -> Dnn {
+    let n = 1;
+    let mut layers = vec![
+        Layer::new("conv1", LayerKind::Conv, LayerShape::conv(n, 3, 224, 224, 64, 7, 7, 2, 3)),
+        Layer::new("conv2_red", LayerKind::Conv, LayerShape::conv(n, 64, 56, 56, 64, 1, 1, 1, 0)),
+        Layer::new("conv2", LayerKind::Conv, LayerShape::conv(n, 64, 56, 56, 192, 3, 3, 1, 1)),
+    ];
+    for &(tag, sp, c_in, n1, n3r, n3, n5r, n5, pp) in INCEPTION {
+        let mut conv = |name: String, c: u64, m: u64, r: u64, pad: u64| {
+            layers.push(Layer::new(&name, LayerKind::Conv, LayerShape::conv(n, c, sp, sp, m, r, r, 1, pad)));
+        };
+        conv(format!("inc{tag}_1x1"), c_in, n1, 1, 0);
+        conv(format!("inc{tag}_3x3red"), c_in, n3r, 1, 0);
+        conv(format!("inc{tag}_3x3"), n3r, n3, 3, 1);
+        conv(format!("inc{tag}_5x5red"), c_in, n5r, 1, 0);
+        conv(format!("inc{tag}_5x5"), n5r, n5, 5, 2);
+        conv(format!("inc{tag}_poolproj"), c_in, pp, 1, 0);
+    }
+    layers.push(Layer::new("fc", LayerKind::Fc, LayerShape::fc(n, 1024, 1000)));
+    Dnn::chain("GoogleNet", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        // 3 stem + 9 modules * 6 + 1 fc = 58
+        assert_eq!(build().layers.len(), 58);
+    }
+
+    #[test]
+    fn inception_outputs_concatenate() {
+        // Module output channels = n1x1 + n3x3 + n5x5 + pool_proj must
+        // equal the next module's c_in within a stage.
+        let out_3a = 64 + 128 + 32 + 32;
+        assert_eq!(out_3a, 256);
+        assert_eq!(INCEPTION[1].2, 256);
+        let out_4a = 192 + 208 + 48 + 64;
+        assert_eq!(out_4a, INCEPTION[3].2);
+        let out_5a = 256 + 320 + 128 + 128;
+        assert_eq!(out_5a, INCEPTION[8].2);
+    }
+
+    #[test]
+    fn total_macs_near_published() {
+        // ~1.5 GMACs at batch 1.
+        let macs = build().total_macs() as f64;
+        assert!((1.2e9..1.9e9).contains(&macs), "got {macs}");
+    }
+}

@@ -1,0 +1,58 @@
+//! Online handwriting-recognition LSTM (Carbune et al., IJDAR 2020) —
+//! batch 1.
+//!
+//! Bézier-curve features through a 3-layer bidirectional LSTM (64 hidden
+//! per direction) and a CTC character head — the smallest network in the
+//! zoo, matching its 128×32-partition residency in Fig. 9(d).
+
+use crate::workloads::dnng::{Dnn, Layer};
+use crate::workloads::shapes::{LayerKind, LayerShape};
+
+const STROKES: u64 = 512; // curve segments per written line
+const FEAT: u64 = 10; // Bézier feature dim, as published
+const HIDDEN: u64 = 64;
+const CHARS: u64 = 100;
+
+/// Build the handwriting LSTM at batch 1.
+pub fn build() -> Dnn {
+    let mut layers = Vec::new();
+    let mut input = FEAT;
+    for l in 0..3 {
+        layers.push(Layer::new(
+            &format!("blstm{l}_fwd"),
+            LayerKind::Recurrent,
+            LayerShape::recurrent(STROKES, 1, input, HIDDEN, 4),
+        ));
+        layers.push(Layer::new(
+            &format!("blstm{l}_bwd"),
+            LayerKind::Recurrent,
+            LayerShape::recurrent(STROKES, 1, input, HIDDEN, 4),
+        ));
+        input = 2 * HIDDEN; // concat of both directions
+    }
+    layers.push(Layer::new("ctc_fc", LayerKind::Fc, LayerShape::fc(STROKES, 2 * HIDDEN, CHARS)));
+    Dnn::chain("HandwritingLSTM", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        assert_eq!(build().layers.len(), 7);
+    }
+
+    #[test]
+    fn smallest_in_zoo() {
+        let macs = build().total_macs() as f64;
+        assert!((2e7..3e8).contains(&macs), "got {macs}");
+    }
+
+    #[test]
+    fn deeper_layers_take_concat_input() {
+        let d = build();
+        let l2 = d.layers.iter().find(|l| l.name == "blstm1_fwd").unwrap();
+        assert_eq!(l2.shape.gemm().k, 2 * HIDDEN + HIDDEN);
+    }
+}

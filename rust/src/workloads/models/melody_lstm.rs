@@ -1,0 +1,47 @@
+//! Melody-extraction LSTM (Park & Yoo, ICASSP 2017) — batch 1.
+//!
+//! Spectrogram frames (513-bin STFT) through two 256-hidden LSTM layers
+//! and a pitch-class softmax head, over a 600-frame clip (a ~30 s song
+//! section at ~20 fps — melody extraction runs whole clips, not single
+//! frames).
+
+use crate::workloads::dnng::{Dnn, Layer};
+use crate::workloads::shapes::{LayerKind, LayerShape};
+
+const FRAMES: u64 = 600;
+const BINS: u64 = 513;
+const HIDDEN: u64 = 256;
+const PITCH_CLASSES: u64 = 722; // 60 semitones x 12 + unvoiced, as published
+
+/// Build the melody LSTM at batch 1.
+pub fn build() -> Dnn {
+    let layers = vec![
+        Layer::new("lstm1", LayerKind::Recurrent, LayerShape::recurrent(FRAMES, 1, BINS, HIDDEN, 4)),
+        Layer::new("lstm2", LayerKind::Recurrent, LayerShape::recurrent(FRAMES, 1, HIDDEN, HIDDEN, 4)),
+        Layer::new("pitch_fc", LayerKind::Fc, LayerShape::fc(FRAMES, HIDDEN, PITCH_CLASSES)),
+    ];
+    Dnn::chain("MelodyLSTM", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        assert_eq!(build().layers.len(), 3);
+    }
+
+    #[test]
+    fn gate_dims() {
+        let d = build();
+        assert_eq!(d.layers[0].shape.gemm().k, BINS + HIDDEN);
+        assert_eq!(d.layers[0].shape.gemm().m, 4 * HIDDEN);
+    }
+
+    #[test]
+    fn light_but_not_trivial() {
+        let macs = build().total_macs() as f64;
+        assert!((5e8..2e9).contains(&macs), "got {macs}");
+    }
+}

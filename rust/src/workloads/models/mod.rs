@@ -1,0 +1,144 @@
+//! The 12-network zoo of the paper's Table 1.
+//!
+//! Layer dimension tables are transcribed from the published architectures
+//! (the paper gives only model names; shapes are public facts of the
+//! networks).  Two groups, as in Table 1:
+//!
+//! **Heavy (multi-domain)**: AlexNet, ResNet-50, GoogLeNet, SA_CNN,
+//! SA_LSTM, NCF, AlphaGoZero, Transformer.
+//!
+//! **Light (RNN)**: Melody LSTM, Google Translate (GNMT), Deep Voice,
+//! Handwriting LSTM.
+//!
+//! All models are inference-shaped at batch 1 (except NCF, which serves a
+//! recommendation batch — a single-user scoring pass is a degenerate
+//! 1-MAC GEMM that no accelerator study runs).  Substitution notes (e.g.
+//! the reduced AlphaGoZero) are in each module's doc comment and DESIGN.md.
+
+pub mod alexnet;
+pub mod alphagozero;
+pub mod deepvoice;
+pub mod gnmt;
+pub mod googlenet;
+pub mod handwriting_lstm;
+pub mod melody_lstm;
+pub mod ncf;
+pub mod resnet50;
+pub mod sa_cnn;
+pub mod sa_lstm;
+pub mod transformer;
+
+use super::dnng::{Dnn, WorkloadPool};
+
+/// Table 1 metadata for one zoo entry.
+#[derive(Debug, Clone, Copy)]
+pub struct ZooEntry {
+    pub name: &'static str,
+    pub domain: &'static str,
+    pub group: Group,
+    pub build: fn() -> Dnn,
+}
+
+/// Workload group (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Group {
+    /// Multi-domain, heavy-load.
+    Heavy,
+    /// RNN, light-load.
+    Light,
+}
+
+impl Group {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Group::Heavy => "heavy/multi-domain",
+            Group::Light => "light/RNN",
+        }
+    }
+}
+
+/// The full Table 1 registry, paper order.
+pub const ZOO: &[ZooEntry] = &[
+    ZooEntry { name: "AlexNet", domain: "Image classification", group: Group::Heavy, build: alexnet::build },
+    ZooEntry { name: "ResNet50", domain: "Image classification", group: Group::Heavy, build: resnet50::build },
+    ZooEntry { name: "GoogleNet", domain: "Image classification", group: Group::Heavy, build: googlenet::build },
+    ZooEntry { name: "SA_CNN", domain: "Sentiment analysis", group: Group::Heavy, build: sa_cnn::build },
+    ZooEntry { name: "SA_LSTM", domain: "Sentiment analysis", group: Group::Heavy, build: sa_lstm::build },
+    ZooEntry { name: "NCF", domain: "Recommendation system", group: Group::Heavy, build: ncf::build },
+    ZooEntry { name: "AlphaGoZero", domain: "Intelligent search", group: Group::Heavy, build: alphagozero::build },
+    ZooEntry { name: "Transformer", domain: "Natural language processing", group: Group::Heavy, build: transformer::build },
+    ZooEntry { name: "MelodyLSTM", domain: "Melody extraction", group: Group::Light, build: melody_lstm::build },
+    ZooEntry { name: "GoogleTranslate", domain: "Language translation", group: Group::Light, build: gnmt::build },
+    ZooEntry { name: "DeepVoice", domain: "Text to speech", group: Group::Light, build: deepvoice::build },
+    ZooEntry { name: "HandwritingLSTM", domain: "Handwriting recognition", group: Group::Light, build: handwriting_lstm::build },
+];
+
+/// Build the heavy (multi-domain) workload pool — Fig. 9(a)(c)(e).
+///
+/// All DNNs are submitted together (arrival 0), matching the paper's
+/// "pool of n DNNs in the task queue" setup.
+pub fn heavy_pool() -> WorkloadPool {
+    WorkloadPool::new(
+        "multi-domain (heavy)",
+        ZOO.iter().filter(|e| e.group == Group::Heavy).map(|e| (e.build)()).collect(),
+    )
+}
+
+/// Build the light (RNN) workload pool — Fig. 9(b)(d)(f).
+pub fn light_pool() -> WorkloadPool {
+    WorkloadPool::new(
+        "RNN (light)",
+        ZOO.iter().filter(|e| e.group == Group::Light).map(|e| (e.build)()).collect(),
+    )
+}
+
+/// Look up a zoo entry by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<&'static ZooEntry> {
+    let lower = name.to_lowercase();
+    ZOO.iter().find(|e| e.name.to_lowercase() == lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_networks_in_two_groups() {
+        assert_eq!(ZOO.len(), 12);
+        assert_eq!(ZOO.iter().filter(|e| e.group == Group::Heavy).count(), 8);
+        assert_eq!(ZOO.iter().filter(|e| e.group == Group::Light).count(), 4);
+    }
+
+    #[test]
+    fn every_network_builds_and_validates() {
+        for e in ZOO {
+            let dnn = (e.build)();
+            dnn.validate();
+            assert!(!dnn.layers.is_empty(), "{} empty", e.name);
+            for l in &dnn.layers {
+                let g = l.shape.gemm();
+                assert!(g.sr > 0 && g.k > 0 && g.m > 0, "{}/{} has a zero GEMM dim", e.name, l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn group_total_macs_ordering() {
+        // The heavy pool must be substantially heavier than the light pool —
+        // the premise of the paper's two-group evaluation.
+        let heavy = heavy_pool().total_macs() as f64;
+        let light = light_pool().total_macs() as f64;
+        assert!(
+            heavy > 1.5 * light,
+            "heavy pool ({heavy}) should outweigh light pool ({light})"
+        );
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("alexnet").is_some());
+        assert!(by_name("AlexNet").is_some());
+        assert!(by_name("GoogleTranslate").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

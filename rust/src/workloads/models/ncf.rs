@@ -1,0 +1,56 @@
+//! Neural Collaborative Filtering (He et al. / joint NCF after Chen et al.,
+//! TOIS 2019) — recommendation scoring at a serving batch of 64 candidates.
+//!
+//! GMF + MLP towers over user/item embeddings.  The layers are tiny
+//! (M ≤ 128), which is why the paper's Fig. 9(c) shows every NCF layer
+//! running inside a 128×16 partition: its GEMM columns never fill a wider
+//! partition.
+
+use crate::workloads::dnng::{Dnn, Layer};
+use crate::workloads::shapes::{LayerKind, LayerShape};
+
+/// Candidate items scored per request.
+const BATCH: u64 = 64;
+const EMBED: u64 = 64;
+
+/// Build NCF scoring at a 64-candidate batch.
+pub fn build() -> Dnn {
+    let layers = vec![
+        // Embedding lookups lowered as skinny GEMMs over the id one-hots.
+        Layer::new("embed_user", LayerKind::Embedding, LayerShape::fc(BATCH, 128, EMBED)),
+        Layer::new("embed_item", LayerKind::Embedding, LayerShape::fc(BATCH, 128, EMBED)),
+        // MLP tower on [user ; item].
+        Layer::new("mlp1", LayerKind::Fc, LayerShape::fc(BATCH, 2 * EMBED, 128)),
+        Layer::new("mlp2", LayerKind::Fc, LayerShape::fc(BATCH, 128, 64)),
+        Layer::new("mlp3", LayerKind::Fc, LayerShape::fc(BATCH, 64, 32)),
+        // GMF element-product projection + fused prediction head.
+        Layer::new("gmf_proj", LayerKind::Fc, LayerShape::fc(BATCH, EMBED, 32)),
+        Layer::new("predict", LayerKind::Fc, LayerShape::fc(BATCH, 64, 1)),
+    ];
+    Dnn::chain("NCF", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        assert_eq!(build().layers.len(), 7);
+    }
+
+    #[test]
+    fn every_layer_is_narrow() {
+        // The defining property for Fig. 9(c): all output widths ≤ 128,
+        // so a 16-column partition is enough once folded.
+        for l in build().layers {
+            assert!(l.shape.gemm().m <= 128, "{} too wide", l.name);
+        }
+    }
+
+    #[test]
+    fn is_tiny() {
+        let macs = build().total_macs() as f64;
+        assert!(macs < 5e6, "got {macs}");
+    }
+}

@@ -1,0 +1,104 @@
+//! ResNet-50 (He et al., 2016) — ImageNet classification, batch 1.
+//!
+//! conv1 + 4 bottleneck stages of [3, 4, 6, 3] blocks + fc, with the v1.5
+//! stride placement (stride-2 on the 3×3 of each stage's first block).
+//! Downsample projection convs are included — they run on the array like
+//! any other layer.  53 conv layers + 1 fc = 54 layers, ≈4.1 GMACs.
+
+use crate::workloads::dnng::{Dnn, Layer};
+use crate::workloads::shapes::{LayerKind, LayerShape};
+
+struct StageCfg {
+    blocks: usize,
+    width: u64,
+    /// Spatial size *after* this stage's downsampling.
+    spatial: u64,
+}
+
+/// Build ResNet-50 at batch 1.
+pub fn build() -> Dnn {
+    let n = 1;
+    let mut layers = vec![Layer::new(
+        "conv1",
+        LayerKind::Conv,
+        LayerShape::conv(n, 3, 224, 224, 64, 7, 7, 2, 3),
+    )];
+    // After conv1 (112) + maxpool: 56.
+    let stages = [
+        StageCfg { blocks: 3, width: 64, spatial: 56 },
+        StageCfg { blocks: 4, width: 128, spatial: 28 },
+        StageCfg { blocks: 6, width: 256, spatial: 14 },
+        StageCfg { blocks: 3, width: 512, spatial: 7 },
+    ];
+    let mut c_in: u64 = 64; // channels entering stage 2 (after maxpool)
+    for (si, st) in stages.iter().enumerate() {
+        let stage_no = si + 2; // conventional naming: conv2_x .. conv5_x
+        let c_out = st.width * 4;
+        for b in 0..st.blocks {
+            // v1.5: stride 2 on the 3x3 of the first block of stages 3-5.
+            let stride = if b == 0 && si > 0 { 2 } else { 1 };
+            // Spatial entering the block: pre-downsample for the first block.
+            let sp_in = if b == 0 && si > 0 { st.spatial * 2 } else { st.spatial };
+            let p = |name: String, shape: LayerShape| Layer::new(&name, LayerKind::Conv, shape);
+            layers.push(p(
+                format!("conv{stage_no}_{b}_1x1a"),
+                LayerShape::conv(n, c_in, sp_in, sp_in, st.width, 1, 1, 1, 0),
+            ));
+            layers.push(p(
+                format!("conv{stage_no}_{b}_3x3"),
+                LayerShape::conv(n, st.width, sp_in, sp_in, st.width, 3, 3, stride, 1),
+            ));
+            layers.push(p(
+                format!("conv{stage_no}_{b}_1x1b"),
+                LayerShape::conv(n, st.width, st.spatial, st.spatial, c_out, 1, 1, 1, 0),
+            ));
+            if b == 0 {
+                // Identity-shortcut projection (stride matches the block).
+                layers.push(p(
+                    format!("conv{stage_no}_{b}_proj"),
+                    LayerShape::conv(n, c_in, sp_in, sp_in, c_out, 1, 1, stride, 0),
+                ));
+            }
+            c_in = c_out;
+        }
+    }
+    layers.push(Layer::new("fc", LayerKind::Fc, LayerShape::fc(n, 2048, 1000)));
+    Dnn::chain("ResNet50", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        // 1 (conv1) + Σ blocks·3 + 4 projections + 1 fc
+        // = 1 + (3+4+6+3)*3 + 4 + 1 = 54
+        assert_eq!(build().layers.len(), 54);
+    }
+
+    #[test]
+    fn total_macs_near_published() {
+        // ~4.1 GMACs at 224x224 batch 1.
+        let macs = build().total_macs() as f64;
+        assert!((3.6e9..4.6e9).contains(&macs), "got {macs}");
+    }
+
+    #[test]
+    fn stage_widths_progress() {
+        let d = build();
+        // Final conv layer before fc outputs 2048 channels at 7x7.
+        let last_conv = &d.layers[d.layers.len() - 2];
+        assert_eq!(last_conv.shape.m, 2048);
+        assert_eq!((last_conv.shape.p, last_conv.shape.q), (7, 7));
+    }
+
+    #[test]
+    fn downsample_blocks_halve_spatial() {
+        let d = build();
+        // conv3_0_3x3 takes 56 -> 28
+        let l = d.layers.iter().find(|l| l.name == "conv3_0_3x3").unwrap();
+        assert_eq!(l.shape.h, 56);
+        assert_eq!(l.shape.p, 28);
+    }
+}

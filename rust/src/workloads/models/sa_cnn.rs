@@ -1,0 +1,58 @@
+//! Sentiment-analysis CNN (Kim-style sentence CNN with fastText
+//! embeddings, after Santos et al. 2017) — batch 1.
+//!
+//! A 64-token sentence with 300-d embeddings, convolved by three filter
+//! banks of widths 3/4/5 (100 filters each) spanning the full embedding
+//! width, then a small classifier head.  Light, narrow layers — in the
+//! paper's Fig. 9(c) SA_CNN completes entirely inside 128×16 partitions.
+
+use crate::workloads::dnng::{Dnn, Layer};
+use crate::workloads::shapes::{LayerKind, LayerShape};
+
+const SEQ: u64 = 64;
+const EMBED: u64 = 300;
+const FILTERS: u64 = 100;
+
+/// Build the sentence-CNN at batch 1.
+pub fn build() -> Dnn {
+    let n = 1;
+    let layers = vec![
+        // Embedding lookup lowered as a skinny GEMM (vocab slice x embed).
+        Layer::new("embed", LayerKind::Embedding, LayerShape::fc(SEQ, 128, EMBED)),
+        // Full-width text convs: treat the sentence as a C=1 image of
+        // H=SEQ, W=EMBED with R=width, S=EMBED filters (the standard
+        // sentence-CNN formulation).
+        Layer::new("conv_w3", LayerKind::Conv, LayerShape { m: FILTERS, n, c: 1, r: 3, s: EMBED, h: SEQ, w: EMBED, p: SEQ - 2, q: 1 }),
+        Layer::new("conv_w4", LayerKind::Conv, LayerShape { m: FILTERS, n, c: 1, r: 4, s: EMBED, h: SEQ, w: EMBED, p: SEQ - 3, q: 1 }),
+        Layer::new("conv_w5", LayerKind::Conv, LayerShape { m: FILTERS, n, c: 1, r: 5, s: EMBED, h: SEQ, w: EMBED, p: SEQ - 4, q: 1 }),
+        // Max-pool over time then classifier.
+        Layer::new("fc1", LayerKind::Fc, LayerShape::fc(n, 3 * FILTERS, 128)),
+        Layer::new("fc2", LayerKind::Fc, LayerShape::fc(n, 128, 2)),
+    ];
+    Dnn::chain("SA_CNN", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        assert_eq!(build().layers.len(), 6);
+    }
+
+    #[test]
+    fn conv_k_depth_spans_embedding() {
+        let d = build();
+        let g = d.layers[1].shape.gemm();
+        assert_eq!(g.k, 3 * EMBED); // width-3 filter x 300-d embedding
+        assert_eq!(g.m, FILTERS);
+    }
+
+    #[test]
+    fn is_light_weight() {
+        // Tens of MMACs, not GMACs.
+        let macs = build().total_macs() as f64;
+        assert!(macs < 2.5e8, "got {macs}");
+    }
+}

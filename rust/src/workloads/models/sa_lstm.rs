@@ -1,0 +1,56 @@
+//! Regional CNN-LSTM for dimensional sentiment analysis (Wang et al.,
+//! ACL 2016) — batch 1.
+//!
+//! Regional CNN feature extraction over a 64-token, 300-d embedded
+//! sentence followed by a 128-hidden LSTM across regions and a valence/
+//! arousal regression head.
+
+use crate::workloads::dnng::{Dnn, Layer};
+use crate::workloads::shapes::{LayerKind, LayerShape};
+
+const SEQ: u64 = 64;
+const EMBED: u64 = 300;
+const REGIONS: u64 = 8;
+const HIDDEN: u64 = 128;
+
+/// Build the regional CNN-LSTM at batch 1.
+pub fn build() -> Dnn {
+    let n = 1;
+    let layers = vec![
+        Layer::new("embed", LayerKind::Embedding, LayerShape::fc(SEQ, 128, EMBED)),
+        // Regional convs (width 3 and 4 banks, 64 filters each).
+        Layer::new("conv_w3", LayerKind::Conv, LayerShape { m: 64, n, c: 1, r: 3, s: EMBED, h: SEQ, w: EMBED, p: SEQ - 2, q: 1 }),
+        Layer::new("conv_w4", LayerKind::Conv, LayerShape { m: 64, n, c: 1, r: 4, s: EMBED, h: SEQ, w: EMBED, p: SEQ - 3, q: 1 }),
+        // Region projection then LSTM over regions.
+        Layer::new("region_fc", LayerKind::Fc, LayerShape::fc(REGIONS, 128, HIDDEN)),
+        Layer::new("lstm", LayerKind::Recurrent, LayerShape::recurrent(REGIONS, 1, HIDDEN, HIDDEN, 4)),
+        Layer::new("fc_va", LayerKind::Fc, LayerShape::fc(n, HIDDEN, 2)),
+    ];
+    Dnn::chain("SA_LSTM", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        assert_eq!(build().layers.len(), 6);
+    }
+
+    #[test]
+    fn lstm_gate_fusion() {
+        let d = build();
+        let g = d.layers[4].shape.gemm();
+        assert_eq!(g.m, 4 * HIDDEN); // i, f, g, o gates
+        assert_eq!(g.k, HIDDEN + HIDDEN); // input + recurrent
+        assert_eq!(g.sr, REGIONS);
+    }
+
+    #[test]
+    fn heavier_than_sa_cnn_convs_alone() {
+        // SA_LSTM adds recurrent work on top of similar conv banks.
+        let macs = build().total_macs() as f64;
+        assert!((1e7..3e8).contains(&macs), "got {macs}");
+    }
+}

@@ -1,0 +1,69 @@
+//! Transformer-base encoder (Vaswani et al., 2017) — 6 layers, d_model 512,
+//! 8 heads, FFN 2048, sequence 64, batch 1.
+//!
+//! Attention is lowered to the GEMMs the array actually runs: Q/K/V
+//! projections, the score GEMM `QKᵀ` and context GEMM `(scores)V`
+//! (aggregated across heads: per-head GEMMs share the array step and sum to
+//! the same MACs), output projection, and the two FFN GEMMs.
+
+use crate::workloads::dnng::{Dnn, Layer};
+use crate::workloads::shapes::{LayerKind, LayerShape};
+
+const SEQ: u64 = 64;
+const D_MODEL: u64 = 512;
+const FFN: u64 = 2048;
+const LAYERS: usize = 6;
+
+/// Build the Transformer-base encoder at batch 1.
+pub fn build() -> Dnn {
+    let mut layers = vec![Layer::new(
+        "embed",
+        LayerKind::Embedding,
+        LayerShape::fc(SEQ, 512, D_MODEL),
+    )];
+    for l in 0..LAYERS {
+        let mut push = |name: String, kind: LayerKind, sr: u64, k: u64, m: u64| {
+            layers.push(Layer::new(&name, kind, LayerShape::fc(sr, k, m)));
+        };
+        // Fused QKV projection: [SEQ, 512] x [512, 3*512].
+        push(format!("enc{l}_qkv"), LayerKind::Attention, SEQ, D_MODEL, 3 * D_MODEL);
+        // Scores QK^T: per head [SEQ, 64] x [64, SEQ]; 8 heads aggregate to
+        // K = d_model with M = SEQ.
+        push(format!("enc{l}_scores"), LayerKind::Attention, SEQ, D_MODEL, SEQ);
+        // Context (scores)V: [SEQ, SEQ] x [SEQ, 64] per head, aggregated.
+        push(format!("enc{l}_context"), LayerKind::Attention, SEQ, SEQ, D_MODEL);
+        // Output projection.
+        push(format!("enc{l}_out"), LayerKind::Attention, SEQ, D_MODEL, D_MODEL);
+        // Feed-forward.
+        push(format!("enc{l}_ffn1"), LayerKind::Fc, SEQ, D_MODEL, FFN);
+        push(format!("enc{l}_ffn2"), LayerKind::Fc, SEQ, FFN, D_MODEL);
+    }
+    Dnn::chain("Transformer", layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count() {
+        // 1 embed + 6 layers x 6 GEMMs = 37
+        assert_eq!(build().layers.len(), 37);
+    }
+
+    #[test]
+    fn ffn_dominates_per_layer_macs() {
+        let d = build();
+        let ffn1 = d.layers.iter().find(|l| l.name == "enc0_ffn1").unwrap();
+        let scores = d.layers.iter().find(|l| l.name == "enc0_scores").unwrap();
+        assert!(ffn1.shape.macs() > 10 * scores.shape.macs());
+    }
+
+    #[test]
+    fn total_macs_near_published() {
+        // 6 layers x (4·L·d² attn + 2·L·d·ffn ffn + 2·L²·d scores/context)
+        // ≈ 1.25 GMACs at seq 64.
+        let macs = build().total_macs() as f64;
+        assert!((1.0e9..1.5e9).contains(&macs), "got {macs}");
+    }
+}

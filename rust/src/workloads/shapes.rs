@@ -1,0 +1,204 @@
+//! Layer shapes (paper Eq. 1), MAC-operation counts (Eq. 2), and the
+//! conv→GEMM lowering.
+//!
+//! Each layer carries the 9-dimension tuple of the paper:
+//! `shapes(l) = {M, N, C, R, S, H, W, P, Q}` where
+//!
+//! - `FW ∈ R^{M·C·R·S}` — filter weights (M output channels),
+//! - `IFMap ∈ R^{N·C·H·W}` — input feature map (N batch),
+//! - `OFMap ∈ R^{N·M·P·Q}` — output feature map.
+//!
+//! The weight-stationary systolic array executes every layer as a GEMM
+//! `[Sr, K] × [K, M]` with `K = C·R·S` (weight rows mapped to PE rows) and
+//! `Sr = N·P·Q` (the feed-stream length); fully-connected and recurrent
+//! layers are the degenerate `R = S = H = W = P = Q = 1` case.
+
+/// What kind of computation a layer performs (for reporting; the array
+/// treats everything as a GEMM after lowering).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    Conv,
+    /// Fully-connected / projection (GEMM with R=S=1, spatial 1×1).
+    Fc,
+    /// Recurrent cell step (gates lowered to one fused GEMM).
+    Recurrent,
+    /// Attention projection / score GEMM.
+    Attention,
+    /// Embedding-style lookup lowered as a skinny GEMM.
+    Embedding,
+}
+
+impl LayerKind {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            LayerKind::Conv => "conv",
+            LayerKind::Fc => "fc",
+            LayerKind::Recurrent => "rnn",
+            LayerKind::Attention => "attn",
+            LayerKind::Embedding => "embed",
+        }
+    }
+}
+
+/// The paper's 9-dimension layer shape (Eq. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerShape {
+    /// Output channels (filter count).
+    pub m: u64,
+    /// Batch.
+    pub n: u64,
+    /// Input channels.
+    pub c: u64,
+    /// Filter height.
+    pub r: u64,
+    /// Filter width.
+    pub s: u64,
+    /// IFMap height.
+    pub h: u64,
+    /// IFMap width.
+    pub w: u64,
+    /// OFMap height.
+    pub p: u64,
+    /// OFMap width.
+    pub q: u64,
+}
+
+/// GEMM dimensions after weight-stationary lowering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmDims {
+    /// Feed-stream rows `Sr = N·P·Q`.
+    pub sr: u64,
+    /// Reduction depth `K = C·R·S` (stationary weight rows).
+    pub k: u64,
+    /// Output columns `M` (stationary weight columns).
+    pub m: u64,
+}
+
+impl GemmDims {
+    /// MACs of the lowered GEMM: `Sr · K · M`.
+    pub fn macs(&self) -> u64 {
+        self.sr * self.k * self.m
+    }
+}
+
+impl LayerShape {
+    /// Convolution layer from conventional parameters (square filter,
+    /// `same`-style explicit output dims).
+    pub fn conv(n: u64, c: u64, h: u64, w: u64, m: u64, r: u64, s: u64, stride: u64, pad: u64) -> LayerShape {
+        assert!(stride > 0);
+        let p = (h + 2 * pad).saturating_sub(r) / stride + 1;
+        let q = (w + 2 * pad).saturating_sub(s) / stride + 1;
+        LayerShape { m, n, c, r, s, h, w, p, q }
+    }
+
+    /// Fully-connected layer: `out = in[N, C] × W[C, M]`.
+    pub fn fc(n: u64, c: u64, m: u64) -> LayerShape {
+        LayerShape { m, n, c, r: 1, s: 1, h: 1, w: 1, p: 1, q: 1 }
+    }
+
+    /// Recurrent cell step over a sequence: the 4 LSTM gates (or 3 GRU
+    /// gates) fused into one GEMM of `gates·hidden` output columns applied
+    /// to `[seq·batch, input+hidden]`.
+    pub fn recurrent(seq: u64, batch: u64, input: u64, hidden: u64, gates: u64) -> LayerShape {
+        LayerShape {
+            m: gates * hidden,
+            n: seq * batch,
+            c: input + hidden,
+            r: 1,
+            s: 1,
+            h: 1,
+            w: 1,
+            p: 1,
+            q: 1,
+        }
+    }
+
+    /// Eq. 2: `Opr(l) = M · N · C · R · S · H · W`.
+    ///
+    /// The paper uses the product of FW and IFMap shapes as its layer-weight
+    /// measure for sorting; we keep it verbatim for assignment-order
+    /// fidelity (`Task_Assignment` sorts by this).
+    pub fn opr(&self) -> u64 {
+        self.m * self.n * self.c * self.r * self.s * self.h * self.w
+    }
+
+    /// True MAC count of the lowered GEMM (used for utilization/roofline):
+    /// `N·P·Q · C·R·S · M`.
+    pub fn macs(&self) -> u64 {
+        self.gemm().macs()
+    }
+
+    /// Weight-stationary GEMM lowering.
+    pub fn gemm(&self) -> GemmDims {
+        GemmDims { sr: self.n * self.p * self.q, k: self.c * self.r * self.s, m: self.m }
+    }
+
+    /// Filter-weight tensor elements `M·C·R·S`.
+    pub fn fw_elems(&self) -> u64 {
+        self.m * self.c * self.r * self.s
+    }
+
+    /// IFMap tensor elements `N·C·H·W`.
+    pub fn ifmap_elems(&self) -> u64 {
+        self.n * self.c * self.h * self.w
+    }
+
+    /// OFMap tensor elements `N·M·P·Q`.
+    pub fn ofmap_elems(&self) -> u64 {
+        self.n * self.m * self.p * self.q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_output_dims() {
+        // AlexNet conv1: 227x227x3, 96 filters 11x11 stride 4 -> 55x55
+        let l = LayerShape::conv(1, 3, 227, 227, 96, 11, 11, 4, 0);
+        assert_eq!((l.p, l.q), (55, 55));
+        // 3x3 stride 1 pad 1 preserves spatial dims
+        let l = LayerShape::conv(1, 64, 56, 56, 64, 3, 3, 1, 1);
+        assert_eq!((l.p, l.q), (56, 56));
+    }
+
+    #[test]
+    fn fc_is_degenerate_conv() {
+        let l = LayerShape::fc(4, 4096, 1000);
+        assert_eq!(l.gemm(), GemmDims { sr: 4, k: 4096, m: 1000 });
+        assert_eq!(l.opr(), 4 * 4096 * 1000);
+        assert_eq!(l.macs(), 4 * 4096 * 1000);
+    }
+
+    #[test]
+    fn recurrent_fuses_gates() {
+        // LSTM: 4 gates, hidden 256, input 128, seq 50, batch 1
+        let l = LayerShape::recurrent(50, 1, 128, 256, 4);
+        assert_eq!(l.gemm(), GemmDims { sr: 50, k: 384, m: 1024 });
+    }
+
+    #[test]
+    fn opr_matches_eq2() {
+        let l = LayerShape::conv(2, 3, 8, 8, 4, 3, 3, 1, 1);
+        assert_eq!(l.opr(), 4 * 2 * 3 * 3 * 3 * 8 * 8);
+    }
+
+    #[test]
+    fn gemm_macs_for_conv() {
+        let l = LayerShape::conv(1, 3, 227, 227, 96, 11, 11, 4, 0);
+        let g = l.gemm();
+        assert_eq!(g.sr, 55 * 55);
+        assert_eq!(g.k, 3 * 11 * 11);
+        assert_eq!(g.m, 96);
+        assert_eq!(l.macs(), 55 * 55 * 363 * 96);
+    }
+
+    #[test]
+    fn tensor_footprints() {
+        let l = LayerShape::conv(1, 3, 227, 227, 96, 11, 11, 4, 0);
+        assert_eq!(l.fw_elems(), 96 * 3 * 11 * 11);
+        assert_eq!(l.ifmap_elems(), 3 * 227 * 227);
+        assert_eq!(l.ofmap_elems(), 96 * 55 * 55);
+    }
+}

@@ -1,0 +1,148 @@
+//! Integration: the paper's experiments hold their qualitative shape on
+//! the actual zoo pools (the assertions behind EXPERIMENTS.md).
+
+use mtsa::coordinator::scheduler::{AllocPolicy, SchedulerConfig};
+use mtsa::coordinator::static_part::StaticPartitioning;
+use mtsa::energy::EnergyModel;
+use mtsa::report;
+use mtsa::workloads::models::{heavy_pool, light_pool};
+
+fn cfg() -> SchedulerConfig {
+    SchedulerConfig::default()
+}
+
+#[test]
+fn heavy_pool_dynamic_beats_sequential_makespan() {
+    let g = report::run_group(&heavy_pool(), &cfg());
+    assert!(
+        g.dynamic.makespan < g.sequential.makespan,
+        "dynamic {} !< sequential {}",
+        g.dynamic.makespan,
+        g.sequential.makespan
+    );
+    // And by a meaningful margin (paper direction; see EXPERIMENTS.md for
+    // the magnitude discussion).
+    let saving = report::saving_pct(g.sequential.makespan as f64, g.dynamic.makespan as f64);
+    assert!(saving > 5.0, "heavy-pool makespan saving only {saving:.1}%");
+}
+
+#[test]
+fn light_pool_dynamic_never_loses_makespan() {
+    let g = report::run_group(&light_pool(), &cfg());
+    assert!(g.dynamic.makespan <= g.sequential.makespan);
+}
+
+#[test]
+fn equal_share_slashes_small_dnn_completion_times() {
+    // The Fig. 9(a) shape: under the paper-literal policy, small DNNs
+    // finish far earlier than in the sequential queue.
+    let g = report::run_group_with_policy(&heavy_pool(), &cfg(), AllocPolicy::EqualShare);
+    for small in ["NCF", "SA_CNN", "SA_LSTM"] {
+        let seq = g.sequential.completion[small];
+        let dynd = g.dynamic.completion[small];
+        assert!(
+            (dynd as f64) < 0.5 * seq as f64,
+            "{small}: dynamic {dynd} not << sequential {seq}"
+        );
+    }
+}
+
+#[test]
+fn fig9c_partition_ladder_shape() {
+    // Widths land on the {16,32,64,128} ladder; narrow nets stay narrow;
+    // stragglers' final layers claim merged wide partitions.
+    let g = report::run_group_with_policy(&heavy_pool(), &cfg(), AllocPolicy::EqualShare);
+    let ladder = [16u64, 32, 64, 128];
+    for d in &g.dynamic.dispatches {
+        assert!(ladder.contains(&d.slice.width), "width {} off-ladder", d.slice.width);
+    }
+    // NCF's narrow layers (M <= 128, mostly <= 64) never need the full array.
+    assert!(g.dynamic.partition_widths("NCF").iter().all(|&w| w <= 64));
+    // The last-finishing DNN's final layer runs on a merged wide partition.
+    let (last_dnn, _) = g.dynamic.completion.iter().max_by_key(|(_, t)| **t).unwrap();
+    let final_width = *g.dynamic.partition_trace(last_dnn).last().unwrap();
+    assert!(final_width >= 64, "{last_dnn} final layer width {final_width}");
+}
+
+#[test]
+fn fig9d_light_pool_shape() {
+    let g = report::run_group_with_policy(&light_pool(), &cfg(), AllocPolicy::EqualShare);
+    // All four RNNs complete; GoogleTranslate (the heavyweight) finishes last.
+    let (last, _) = g.dynamic.completion.iter().max_by_key(|(_, t)| **t).unwrap();
+    assert_eq!(last, "GoogleTranslate");
+    // The small RNNs complete much earlier than the sequential queue.
+    assert!(
+        g.dynamic.completion["HandwritingLSTM"] < g.sequential.completion["HandwritingLSTM"]
+    );
+}
+
+#[test]
+fn fig9e_energy_bars_favor_partitioning() {
+    // Per-DNN static-attribution bars (the paper's accounting): the mean
+    // bar must improve under partitioning for the heavy pool with the
+    // demand-aware policy.  (Under the paper-literal equal-share policy
+    // the extra per-fold IFMap re-reads of narrow partitions outweigh the
+    // static savings in our traffic-faithful model — quantified in
+    // EXPERIMENTS.md §Gaps.)
+    let model = EnergyModel::default_128();
+    let g = report::run_group_with_policy(&heavy_pool(), &cfg(), AllocPolicy::WidestToHeaviest);
+    let bars_seq = report::per_dnn_energy_bars(&g.sequential, &model);
+    let bars_dyn = report::per_dnn_energy_bars(&g.dynamic, &model);
+    let mean_seq: f64 = bars_seq.values().sum::<f64>() / bars_seq.len() as f64;
+    let mean_dyn: f64 = bars_dyn.values().sum::<f64>() / bars_dyn.len() as f64;
+    assert!(
+        mean_dyn < mean_seq,
+        "mean bar: dynamic {mean_dyn} !< sequential {mean_seq}"
+    );
+}
+
+#[test]
+fn total_energy_tracks_makespan_direction() {
+    // With the widest policy (which wins makespan on the heavy pool), the
+    // total-energy comparison must not regress by more than the extra
+    // SRAM re-reads can explain (< 10%).
+    let model = EnergyModel::default_128();
+    let g = report::run_group(&heavy_pool(), &cfg());
+    let es = report::total_energy(&g.sequential, &model).total_j();
+    let ed = report::total_energy(&g.dynamic, &model).total_j();
+    assert!(ed < es * 1.10, "dynamic energy {ed} vs sequential {es}");
+}
+
+#[test]
+fn dynamic_beats_static_partitioning_on_both_pools() {
+    // A1: merging + demand-aware assignment must beat a naive fixed split.
+    for pool in [heavy_pool(), light_pool()] {
+        let stat = StaticPartitioning::new(cfg()).run(&pool);
+        let g = report::run_group(&pool, &cfg());
+        assert!(
+            g.dynamic.makespan < stat.makespan,
+            "{}: dynamic {} !< static {}",
+            pool.name,
+            g.dynamic.makespan,
+            stat.makespan
+        );
+    }
+}
+
+#[test]
+fn utilization_improves_under_partitioning() {
+    let g = report::run_group(&heavy_pool(), &cfg());
+    assert!(g.dynamic.utilization(cfg().geom) > g.sequential.utilization(cfg().geom));
+}
+
+#[test]
+fn dispatch_log_complete_and_consistent() {
+    for pool in [heavy_pool(), light_pool()] {
+        let g = report::run_group(&pool, &cfg());
+        assert_eq!(g.dynamic.dispatches.len(), pool.total_layers());
+        assert_eq!(g.sequential.dispatches.len(), pool.total_layers());
+        // Activity totals are scheduler-invariant except for fold-count
+        // dependent SRAM/DRAM terms; MACs must match exactly.
+        assert_eq!(
+            g.dynamic.total_activity.macs, g.sequential.total_activity.macs,
+            "{}: MACs differ between schedulers",
+            pool.name
+        );
+        assert_eq!(g.dynamic.total_activity.macs, pool.total_macs());
+    }
+}

@@ -1,0 +1,212 @@
+//! Integration: PJRT engine × AOT artifacts — the end-to-end numerics
+//! contract between `python/compile/` and `rust/src/runtime/`.
+//!
+//! Requires `make artifacts`.  Tests are skipped (not failed) when the
+//! artifacts directory is absent so `cargo test` works pre-AOT; the Makefile
+//! `test` target always builds artifacts first.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use mtsa::runtime::{pack_step, packing, Engine, Tensor, TenantTile};
+use mtsa::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// One engine per test process: PJRT client construction + 8 compiles is
+/// ~seconds; sharing it keeps the suite fast.
+fn engine() -> Option<&'static Engine> {
+    static ENGINE: OnceLock<Option<Engine>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| artifacts_dir().map(|d| Engine::load(&d).expect("engine load")))
+        .as_ref()
+}
+
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| rng.gen_f32() - 0.5).collect())
+}
+
+#[test]
+fn engine_loads_all_manifest_artifacts() {
+    let Some(eng) = engine() else { return };
+    let names = eng.artifact_names();
+    for expected in [
+        "pws_p1", "pws_p2", "pws_p4", "pws_p8",
+        "pws_fused_p4", "gemm_baseline", "drain_relu", "drain_none",
+    ] {
+        assert!(names.contains(&expected), "missing artifact {expected}");
+    }
+    assert_eq!(eng.manifest().array_c, 128);
+}
+
+#[test]
+fn gemm_baseline_matches_cpu_matmul() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(10);
+    let x = rand_tensor(&mut rng, vec![128, 128]);
+    let w = rand_tensor(&mut rng, vec![128, 128]);
+    let acc = rand_tensor(&mut rng, vec![128, 128]);
+
+    let y = eng.execute("gemm_baseline", &[x.clone(), w.clone(), acc.clone()]).unwrap();
+
+    let mut want = x.matmul(&w);
+    for (o, a) in want.data_mut().iter_mut().zip(acc.data()) {
+        *o += a;
+    }
+    assert!(y.max_abs_diff(&want) < 1e-3, "diff {}", y.max_abs_diff(&want));
+}
+
+#[test]
+fn pws_p4_matches_packed_oracle() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(20);
+    // Four tenants with ragged stream rows and K depths, 32 columns each.
+    let tiles: Vec<TenantTile> = (0..4)
+        .map(|t| TenantTile {
+            tenant: t,
+            x: rand_tensor(&mut rng, vec![100 + t, 96 + 8 * t]),
+            w: rand_tensor(&mut rng, vec![96 + 8 * t, 32]),
+        })
+        .collect();
+    let step = pack_step(&tiles, 128, 128, 128, 4).unwrap();
+    let acc = rand_tensor(&mut rng, vec![128, 128]);
+
+    let y = eng
+        .execute("pws_p4", &[step.x.clone(), step.w.clone(), step.mask.clone(), acc.clone()])
+        .unwrap();
+
+    let want = packing::packed_step_oracle(&step, &acc);
+    assert!(y.max_abs_diff(&want) < 1e-3, "diff {}", y.max_abs_diff(&want));
+
+    // And per-tenant unpack equals each tenant's own GEMM (acc=0 region check
+    // done in unit tests; here acc was random so compare against oracle slices).
+    for i in 0..4 {
+        let got = step.unpack(&y, i);
+        let oracle_slice = step.unpack(&want, i);
+        assert!(got.max_abs_diff(&oracle_slice) < 1e-3, "tenant {i}");
+    }
+}
+
+#[test]
+fn pws_variants_agree_on_shared_case() {
+    // The same 2-tenant case run through pws_p2, pws_p4 (2 lanes idle) and
+    // pws_p8 (6 lanes idle) must produce identical tenant results.
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(30);
+    let tiles: Vec<TenantTile> = (0..2)
+        .map(|t| TenantTile {
+            tenant: t,
+            x: rand_tensor(&mut rng, vec![64, 128]),
+            w: rand_tensor(&mut rng, vec![128, 48]),
+        })
+        .collect();
+    let acc = Tensor::zeros(vec![128, 128]);
+
+    let mut results = Vec::new();
+    for p in [2usize, 4, 8] {
+        let step = pack_step(&tiles, 128, 128, 128, p).unwrap();
+        let y = eng
+            .execute(
+                &format!("pws_p{p}"),
+                &[step.x.clone(), step.w.clone(), step.mask.clone(), acc.clone()],
+            )
+            .unwrap();
+        results.push((step.unpack(&y, 0), step.unpack(&y, 1)));
+    }
+    for i in 1..results.len() {
+        assert!(results[0].0.max_abs_diff(&results[i].0) < 1e-4);
+        assert!(results[0].1.max_abs_diff(&results[i].1) < 1e-4);
+    }
+}
+
+#[test]
+fn fold_chaining_through_acc_matches_monolithic() {
+    // K = 256 split into two 128-folds chained through acc — what the
+    // coordinator does for layers deeper than the array.
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(40);
+    let x_full = rand_tensor(&mut rng, vec![128, 256]);
+    let w_full = rand_tensor(&mut rng, vec![256, 128]);
+
+    let slice_x = |k0: usize| {
+        let mut t = Tensor::zeros(vec![128, 128]);
+        for r in 0..128 {
+            for k in 0..128 {
+                t.set2(r, k, x_full.at2(r, k0 + k));
+            }
+        }
+        t
+    };
+    let slice_w = |k0: usize| {
+        let mut t = Tensor::zeros(vec![128, 128]);
+        for k in 0..128 {
+            for c in 0..128 {
+                t.set2(k, c, w_full.at2(k0 + k, c));
+            }
+        }
+        t
+    };
+
+    let acc0 = Tensor::zeros(vec![128, 128]);
+    let y1 = eng.execute("gemm_baseline", &[slice_x(0), slice_w(0), acc0]).unwrap();
+    let y2 = eng.execute("gemm_baseline", &[slice_x(128), slice_w(128), y1]).unwrap();
+
+    let want = x_full.matmul(&w_full);
+    assert!(y2.max_abs_diff(&want) < 1e-2, "diff {}", y2.max_abs_diff(&want));
+}
+
+#[test]
+fn drain_relu_clamps_negatives() {
+    let Some(eng) = engine() else { return };
+    let y = Tensor::from_fn(vec![128, 128], |i| if i % 2 == 0 { -1.0 } else { 2.0 });
+    let bias = Tensor::zeros(vec![128]);
+    let out = eng.execute("drain_relu", &[y, bias]).unwrap();
+    for (i, &v) in out.data().iter().enumerate() {
+        let want = if i % 2 == 0 { 0.0 } else { 2.0 };
+        assert_eq!(v, want, "at {i}");
+    }
+}
+
+#[test]
+fn fused_step_equals_pws_plus_drain() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(50);
+    let tiles: Vec<TenantTile> = (0..4)
+        .map(|t| TenantTile {
+            tenant: t,
+            x: rand_tensor(&mut rng, vec![128, 128]),
+            w: rand_tensor(&mut rng, vec![128, 32]),
+        })
+        .collect();
+    let step = pack_step(&tiles, 128, 128, 128, 4).unwrap();
+    let acc = Tensor::zeros(vec![128, 128]);
+    let bias = rand_tensor(&mut rng, vec![128]);
+
+    let fused = eng
+        .execute(
+            "pws_fused_p4",
+            &[step.x.clone(), step.w.clone(), step.mask.clone(), acc.clone(), bias.clone()],
+        )
+        .unwrap();
+
+    let partial = eng
+        .execute("pws_p4", &[step.x.clone(), step.w.clone(), step.mask.clone(), acc])
+        .unwrap();
+    let unfused = eng.execute("drain_relu", &[partial, bias]).unwrap();
+
+    assert!(fused.max_abs_diff(&unfused) < 1e-4);
+}
+
+#[test]
+fn engine_rejects_wrong_shapes_and_names() {
+    let Some(eng) = engine() else { return };
+    let bad = Tensor::zeros(vec![2, 2]);
+    assert!(eng.execute("gemm_baseline", &[bad.clone(), bad.clone(), bad.clone()]).is_err());
+    let ok = Tensor::zeros(vec![128, 128]);
+    assert!(eng.execute("gemm_baseline", &[ok.clone()]).is_err(), "arity check");
+    assert!(eng.execute("no_such_artifact", &[ok]).is_err());
+}

@@ -1,0 +1,174 @@
+//! Property tests over the dynamic scheduler: structural invariants that
+//! must hold for ANY workload (random pools, random arrivals).
+
+use std::collections::BTreeMap;
+
+use mtsa::coordinator::scheduler::{AllocPolicy, DynamicScheduler, FeedModel, SchedulerConfig};
+use mtsa::util::prop;
+use mtsa::workloads::generator::{random_pool, GeneratorCfg};
+
+fn random_cfg(rng: &mut mtsa::util::rng::Rng) -> SchedulerConfig {
+    SchedulerConfig {
+        min_width: *rng.choose(&[8u64, 16, 32]),
+        alloc_policy: *rng.choose(&[AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare]),
+        feed_model: *rng.choose(&[FeedModel::Independent, FeedModel::Interleaved]),
+        patience_divisor: rng.gen_range_inclusive(1, 8),
+        ..SchedulerConfig::default()
+    }
+}
+
+fn random_gen_cfg(rng: &mut mtsa::util::rng::Rng) -> GeneratorCfg {
+    GeneratorCfg {
+        num_dnns: rng.gen_range_inclusive(1, 8) as usize,
+        layers_min: 1,
+        layers_max: 10,
+        mean_interarrival: if rng.gen_bool(0.5) { 20_000.0 } else { 0.0 },
+        dim_scale: 0.3 + rng.gen_f64(),
+    }
+}
+
+#[test]
+fn every_layer_dispatched_exactly_once() {
+    prop::check("completeness", 40, |rng| {
+        let gcfg = random_gen_cfg(rng);
+        let pool = random_pool(rng, &gcfg);
+        let m = DynamicScheduler::new(random_cfg(rng)).run(&pool);
+        prop::ensure_eq(m.dispatches.len(), pool.total_layers(), "dispatch count")?;
+        let mut seen = BTreeMap::new();
+        for d in &m.dispatches {
+            *seen.entry((d.dnn, d.layer)).or_insert(0) += 1;
+        }
+        prop::ensure(seen.values().all(|&c| c == 1), "no duplicate dispatch")
+    });
+}
+
+#[test]
+fn no_spatial_overlap_at_any_time() {
+    // Two concurrently-running layers must occupy disjoint column ranges.
+    prop::check("spatial isolation", 30, |rng| {
+        let gcfg = random_gen_cfg(rng);
+        let pool = random_pool(rng, &gcfg);
+        let m = DynamicScheduler::new(random_cfg(rng)).run(&pool);
+        for (i, a) in m.dispatches.iter().enumerate() {
+            for b in &m.dispatches[i + 1..] {
+                let time_overlap = a.t_start < b.t_end && b.t_start < a.t_end;
+                if time_overlap {
+                    let cols_overlap =
+                        a.slice.col0 < b.slice.end() && b.slice.col0 < a.slice.end();
+                    prop::ensure(
+                        !cols_overlap,
+                        &format!(
+                            "{}/{} and {}/{} overlap in time AND columns",
+                            a.dnn_name, a.layer_name, b.dnn_name, b.layer_name
+                        ),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chain_dependencies_respected() {
+    prop::check("precedence", 30, |rng| {
+        let gcfg = random_gen_cfg(rng);
+        let pool = random_pool(rng, &gcfg);
+        let m = DynamicScheduler::new(random_cfg(rng)).run(&pool);
+        let mut end_of: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+        for d in &m.dispatches {
+            end_of.insert((d.dnn, d.layer), d.t_end);
+        }
+        for d in &m.dispatches {
+            for pred in pool.dnns[d.dnn].preds(d.layer) {
+                prop::ensure(
+                    end_of[&(d.dnn, pred)] <= d.t_start,
+                    &format!("{}#{} started before predecessor {} ended", d.dnn, d.layer, pred),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn arrivals_and_width_bounds_respected() {
+    prop::check("arrival+width bounds", 30, |rng| {
+        let gcfg = random_gen_cfg(rng);
+        let pool = random_pool(rng, &gcfg);
+        let cfg = random_cfg(rng);
+        let m = DynamicScheduler::new(cfg.clone()).run(&pool);
+        for d in &m.dispatches {
+            prop::ensure(
+                d.t_start >= pool.dnns[d.dnn].arrival_cycles,
+                "dispatch before arrival",
+            )?;
+            prop::ensure(d.slice.width >= cfg.min_width, "below min width")?;
+            prop::ensure(d.slice.end() <= cfg.geom.cols, "slice beyond array")?;
+            prop::ensure(d.t_end > d.t_start, "zero-duration dispatch")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn makespan_at_least_critical_path() {
+    // Makespan can never beat the longest chain run at full width.
+    prop::check("critical-path lower bound", 20, |rng| {
+        let gcfg = random_gen_cfg(rng);
+        let pool = random_pool(rng, &gcfg);
+        let cfg = SchedulerConfig::default();
+        let m = DynamicScheduler::new(cfg.clone()).run(&pool);
+        for dnn in &pool.dnns {
+            let full_width: u64 = dnn
+                .layers
+                .iter()
+                .map(|l| {
+                    mtsa::sim::dataflow::baseline_layer_timing(
+                        cfg.geom,
+                        l.shape.gemm(),
+                        &cfg.buffers,
+                    )
+                    .cycles
+                })
+                .sum();
+            prop::ensure(
+                m.makespan >= dnn.arrival_cycles + full_width,
+                &format!("makespan {} < critical path of {}", m.makespan, dnn.name),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn metrics_are_internally_consistent() {
+    prop::check("metrics consistency", 30, |rng| {
+        let gcfg = random_gen_cfg(rng);
+        let pool = random_pool(rng, &gcfg);
+        let m = DynamicScheduler::new(random_cfg(rng)).run(&pool);
+        let max_end = m.dispatches.iter().map(|d| d.t_end).max().unwrap_or(0);
+        prop::ensure_eq(m.makespan, max_end, "makespan == max t_end")?;
+        for dnn in &pool.dnns {
+            let done = m.completion[&dnn.name];
+            let starts: Vec<u64> = m
+                .dispatches
+                .iter()
+                .filter(|d| d.dnn_name == dnn.name)
+                .map(|d| d.t_start)
+                .collect();
+            prop::ensure_eq(m.start[&dnn.name], *starts.iter().min().unwrap(), "start")?;
+            prop::ensure(
+                done
+                    == m.dispatches
+                        .iter()
+                        .filter(|d| d.dnn_name == dnn.name)
+                        .map(|d| d.t_end)
+                        .max()
+                        .unwrap(),
+                "completion == max t_end of dnn",
+            )?;
+        }
+        Ok(())
+    });
+}

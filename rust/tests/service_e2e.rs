@@ -1,0 +1,112 @@
+//! Integration: the multi-tenant serving loop on the real PJRT datapath
+//! (skipped when artifacts are absent; `make artifacts` builds them).
+
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use mtsa::coordinator::service::{GemmRequest, Service, ServiceHandle};
+use mtsa::runtime::{Engine, Tensor};
+use mtsa::util::rng::Rng;
+use mtsa::verify;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn engine() -> Option<Arc<Engine>> {
+    static ENGINE: OnceLock<Option<Arc<Engine>>> = OnceLock::new();
+    ENGINE
+        .get_or_init(|| artifacts_dir().map(|d| Arc::new(Engine::load(&d).expect("engine"))))
+        .clone()
+}
+
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| rng.gen_f32() - 0.5).collect())
+}
+
+#[test]
+fn serve_group_matches_host_matmul() {
+    let Some(eng) = engine() else { return };
+    let service = Service::new(eng);
+    let mut rng = Rng::new(1);
+    // Three tenants, ragged shapes, K > 128 to exercise fold chaining.
+    let reqs: Vec<GemmRequest> = [(100usize, 300usize, 40usize), (64, 129, 20), (17, 64, 30)]
+        .iter()
+        .enumerate()
+        .map(|(t, &(sr, k, m))| GemmRequest {
+            tenant: t,
+            x: rand_tensor(&mut rng, vec![sr, k]),
+            w: rand_tensor(&mut rng, vec![k, m]),
+        })
+        .collect();
+    let results = service.serve_group(&reqs).unwrap();
+    for (req, got) in reqs.iter().zip(&results) {
+        let want = req.x.matmul(&req.w);
+        assert!(
+            got.max_abs_diff(&want) < 1e-2,
+            "tenant {}: diff {}",
+            req.tenant,
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn serve_group_rejects_oversize() {
+    let Some(eng) = engine() else { return };
+    let service = Service::new(eng);
+    let mut rng = Rng::new(2);
+    // sr > 128
+    let bad = GemmRequest { tenant: 0, x: rand_tensor(&mut rng, vec![200, 8]), w: rand_tensor(&mut rng, vec![8, 8]) };
+    assert!(service.serve_group(&[bad]).is_err());
+    // total m > 128
+    let mut wide = |t| GemmRequest {
+        tenant: t,
+        x: rand_tensor(&mut rng, vec![8, 8]),
+        w: rand_tensor(&mut rng, vec![8, 70]),
+    };
+    let w0 = wide(0);
+    let w1 = wide(1);
+    assert!(service.serve_group(&[w0, w1]).is_err());
+    // K mismatch
+    let bad_k = GemmRequest { tenant: 0, x: rand_tensor(&mut rng, vec![8, 8]), w: rand_tensor(&mut rng, vec![9, 8]) };
+    assert!(service.serve_group(&[bad_k]).is_err());
+    // empty group is fine
+    assert!(service.serve_group(&[]).unwrap().is_empty());
+}
+
+#[test]
+fn threaded_handle_batches_and_answers() {
+    let Some(eng) = engine() else { return };
+    let service = Service::new(eng.clone());
+    let handle = ServiceHandle::spawn(service, 4, Duration::from_millis(5));
+    let mut rng = Rng::new(3);
+
+    // Submit 8 concurrent requests; every response must be correct.
+    let mut waits = Vec::new();
+    let mut wants = Vec::new();
+    for t in 0..8usize {
+        let x = rand_tensor(&mut rng, vec![32, 64]);
+        let w = rand_tensor(&mut rng, vec![64, 16]);
+        wants.push(x.matmul(&w));
+        waits.push(handle.submit(GemmRequest { tenant: t, x, w }));
+    }
+    for (i, rx) in waits.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.tenant, i);
+        assert!(resp.y.max_abs_diff(&wants[i]) < 1e-3, "tenant {i}");
+    }
+    // Dynamic batching must have grouped: fewer array steps than requests.
+    assert!(eng.exec_count() >= 2, "at least two groups of four");
+    handle.shutdown();
+}
+
+#[test]
+fn verify_all_battery() {
+    let Some(dir) = artifacts_dir() else { return };
+    let n = verify::verify_all(&dir).unwrap();
+    assert!(n >= 30, "expected a full battery, got {n} checks");
+}
