@@ -6,12 +6,10 @@
 //! - PJRT artifact execution latency + packing (skipped if artifacts are
 //!   not built).
 
-use std::path::PathBuf;
-
-use mtsa::benchkit::{Bench, BenchOpts};
+use mtsa::benchkit::Bench;
 use mtsa::coordinator::scheduler::{DynamicScheduler, SchedulerConfig};
 use mtsa::coordinator::PartitionManager;
-use mtsa::runtime::{pack_step, Engine, Tensor, TenantTile};
+use mtsa::runtime::{pack_step, Tensor, TenantTile};
 use mtsa::sim::buffers::BufferConfig;
 use mtsa::sim::dataflow::ArrayGeometry;
 use mtsa::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
@@ -63,51 +61,66 @@ fn main() {
         }
     });
 
-    // PJRT execution (requires artifacts).
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        let engine = Engine::load(&dir).expect("engine");
-        let mut rng = Rng::new(2);
-        let rand = |rng: &mut Rng, shape: Vec<usize>| {
-            let n: usize = shape.iter().product();
-            Tensor::new(shape, (0..n).map(|_| rng.gen_f32() - 0.5).collect())
-        };
-        let tiles: Vec<TenantTile> = (0..4)
-            .map(|t| TenantTile {
-                tenant: t,
-                x: rand(&mut rng, vec![128, 128]),
-                w: rand(&mut rng, vec![128, 32]),
-            })
-            .collect();
-        b.measure("pack_step (4 tenants, 128x128)", || {
-            std::hint::black_box(pack_step(&tiles, 128, 128, 128, 4).unwrap());
-        });
-        let step = pack_step(&tiles, 128, 128, 128, 4).unwrap();
-        let acc = Tensor::zeros(vec![128, 128]);
-        let opts = BenchOpts { min_iters: 20, ..Default::default() };
-        let mut b2 = Bench::new("pjrt").with_opts(opts);
-        b2.measure("engine.execute pws_p4 (one array step)", || {
-            std::hint::black_box(
-                engine
-                    .execute(
-                        "pws_p4",
-                        &[step.x.clone(), step.w.clone(), step.mask.clone(), acc.clone()],
-                    )
-                    .unwrap(),
-            );
-        });
-        let x0 = tiles[0].x.clone();
-        b2.measure("engine.execute gemm_baseline", || {
-            std::hint::black_box(
-                engine
-                    .execute("gemm_baseline", &[x0.clone(), step.w.clone(), acc.clone()])
-                    .unwrap(),
-            );
-        });
-        b2.finish();
-    } else {
-        eprintln!("(artifacts not built; skipping PJRT benches)");
-    }
+    // Tenant packing (pure rust; no artifacts needed).
+    let mut rng = Rng::new(2);
+    let rand = |rng: &mut Rng, shape: Vec<usize>| {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.gen_f32() - 0.5).collect())
+    };
+    let tiles: Vec<TenantTile> = (0..4)
+        .map(|t| TenantTile {
+            tenant: t,
+            x: rand(&mut rng, vec![128, 128]),
+            w: rand(&mut rng, vec![128, 32]),
+        })
+        .collect();
+    b.measure("pack_step (4 tenants, 128x128)", || {
+        std::hint::black_box(pack_step(&tiles, 128, 128, 128, 4).unwrap());
+    });
+
+    pjrt_engine_benches(&tiles);
 
     b.finish();
+}
+
+/// PJRT execution latency (requires the `pjrt` feature + built artifacts).
+#[cfg(feature = "pjrt")]
+fn pjrt_engine_benches(tiles: &[TenantTile]) {
+    use mtsa::benchkit::BenchOpts;
+    use mtsa::runtime::Engine;
+
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("(artifacts not built; skipping PJRT benches)");
+        return;
+    }
+    let engine = Engine::load(&dir).expect("engine");
+    let step = pack_step(tiles, 128, 128, 128, 4).unwrap();
+    let acc = Tensor::zeros(vec![128, 128]);
+    let opts = BenchOpts { min_iters: 20, ..Default::default() };
+    let mut b2 = Bench::new("pjrt").with_opts(opts);
+    b2.measure("engine.execute pws_p4 (one array step)", || {
+        std::hint::black_box(
+            engine
+                .execute(
+                    "pws_p4",
+                    &[step.x.clone(), step.w.clone(), step.mask.clone(), acc.clone()],
+                )
+                .unwrap(),
+        );
+    });
+    let x0 = tiles[0].x.clone();
+    b2.measure("engine.execute gemm_baseline", || {
+        std::hint::black_box(
+            engine
+                .execute("gemm_baseline", &[x0.clone(), step.w.clone(), acc.clone()])
+                .unwrap(),
+        );
+    });
+    b2.finish();
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_engine_benches(_tiles: &[TenantTile]) {
+    eprintln!("(built without the `pjrt` feature; skipping PJRT benches)");
 }

@@ -1,0 +1,53 @@
+//! Sweep throughput — how fast the parallel scenario runner chews through
+//! grid points, and how it scales with worker threads.
+//!
+//! Each point is a full dynamic + sequential simulation of an
+//! arrival-driven scenario, so this doubles as a macro-benchmark of the
+//! scheduler hot path under serving-style workloads.  Output in
+//! points/sec makes runs comparable as the grid grows.
+
+use std::time::Duration;
+
+use mtsa::benchkit::{section, Bench, BenchOpts};
+use mtsa::coordinator::scheduler::{AllocPolicy, FeedModel, SchedulerConfig};
+use mtsa::sweep::{run_sweep, SweepGrid};
+
+fn bench_grid() -> SweepGrid {
+    SweepGrid {
+        mixes: vec!["light".to_string()],
+        rates: vec![0.0, 30_000.0],
+        policies: vec![AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare],
+        feeds: vec![FeedModel::Independent, FeedModel::Interleaved],
+        geoms: vec![128],
+        requests: 6,
+        qos_slack: 3.0,
+        bursty: None,
+        seed: 11,
+    }
+}
+
+fn main() {
+    section("sweep throughput (8-point light-mix grid, 6 requests/point)");
+    let base = SchedulerConfig::default();
+    let grid = bench_grid();
+    let points = 8.0;
+
+    let opts = BenchOpts {
+        warmup: Duration::from_millis(200),
+        measure: Duration::from_secs(2),
+        min_iters: 3,
+        max_iters: 200,
+    };
+    let mut b = Bench::new("sweep").with_opts(opts);
+    for threads in [1usize, 2, 4, 8] {
+        let s = b.measure(&format!("run_sweep x8 points, {threads} thread(s)"), || {
+            let rows = run_sweep(&grid, &base, threads).expect("sweep");
+            std::hint::black_box(rows);
+        });
+        println!(
+            "  -> {:.1} points/sec at {threads} thread(s)",
+            points / (s.mean / 1e9)
+        );
+    }
+    b.finish();
+}

@@ -5,10 +5,11 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use super::args::ParsedArgs;
-use crate::config::RunConfig;
-use crate::coordinator::scheduler::AllocPolicy;
+use crate::config::{ArrivalKind, RunConfig};
+use crate::coordinator::scheduler::{AllocPolicy, FeedModel};
 use crate::coordinator::static_part::StaticPartitioning;
 use crate::report;
+use crate::sweep::{run_sweep, SweepGrid};
 use crate::util::stats::fmt_si;
 use crate::util::tablefmt::Table;
 use crate::workloads::dnng::WorkloadPool;
@@ -21,6 +22,11 @@ USAGE:
   mtsa zoo                               print the Table-1 workload zoo
   mtsa run <heavy|light|model,...>       run dynamic vs sequential
        [--config <file>] [--policy widest|equal] [--static] [--detail]
+  mtsa sweep                             parallel scenario sweep (SLA report)
+       [--config <file>] [--mixes heavy,light] [--rates 0,20000,100000]
+       [--policies widest,equal] [--feeds independent,interleaved]
+       [--geoms 128] [--requests 12] [--slack 3.0] [--burst <size>]
+       [--seed 42] [--threads N] [--json <file>]
   mtsa trace <heavy|light|model,...>     write Scale-Sim/Accelergy CSVs
        [--config <file>] [--out <dir>]
   mtsa area [--config <file>]            45nm area breakdown (Accelergy-style)
@@ -33,6 +39,7 @@ pub fn dispatch(args: &ParsedArgs) -> Result<()> {
     match args.command.as_str() {
         "zoo" => cmd_zoo(args),
         "run" => cmd_run(args),
+        "sweep" => cmd_sweep(args),
         "trace" => cmd_trace(args),
         "area" => cmd_area(args),
         "verify" => cmd_verify(args),
@@ -64,22 +71,7 @@ fn cmd_zoo(args: &ParsedArgs) -> Result<()> {
 
 /// Resolve a pool spec: "heavy", "light", or comma-separated model names.
 pub fn resolve_pool(spec: &str) -> Result<WorkloadPool> {
-    match spec {
-        "heavy" => Ok(models::heavy_pool()),
-        "light" => Ok(models::light_pool()),
-        list => {
-            let mut dnns = Vec::new();
-            for name in list.split(',') {
-                let e = models::by_name(name.trim())
-                    .with_context(|| format!("unknown model {name:?} (see `mtsa zoo`)"))?;
-                dnns.push((e.build)());
-            }
-            if dnns.is_empty() {
-                bail!("empty pool spec");
-            }
-            Ok(WorkloadPool::new(spec, dnns))
-        }
-    }
+    models::by_spec(spec).map_err(anyhow::Error::msg)
 }
 
 fn load_config(args: &ParsedArgs) -> Result<RunConfig> {
@@ -167,6 +159,125 @@ fn cmd_run(args: &ParsedArgs) -> Result<()> {
     Ok(())
 }
 
+/// Parse a comma-separated list with a per-item parser.
+fn parse_list<T>(raw: &str, what: &str, parse: impl Fn(&str) -> Option<T>) -> Result<Vec<T>> {
+    let mut out = Vec::new();
+    for item in raw.split(',') {
+        let item = item.trim();
+        out.push(parse(item).with_context(|| format!("bad {what} value {item:?}"))?);
+    }
+    if out.is_empty() {
+        bail!("--{what} must list at least one value");
+    }
+    Ok(out)
+}
+
+fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
+    args.ensure_known(
+        &[
+            "config", "mixes", "rates", "policies", "feeds", "geoms", "requests", "slack",
+            "burst", "burst-within", "seed", "threads", "json",
+        ],
+        &[],
+    )?;
+    let cfg = load_config(args)?;
+
+    // Grid defaults <- [scenario] config section <- CLI flags.
+    let mut grid = SweepGrid {
+        requests: cfg.scenario.requests as usize,
+        qos_slack: cfg.scenario.qos_slack,
+        seed: cfg.scenario.seed,
+        ..SweepGrid::default()
+    };
+    // A configured arrival process replaces the default rate axis: the
+    // sweep then runs batch + the configured rate, bursty if configured.
+    match cfg.scenario.arrival {
+        ArrivalKind::Batch => {}
+        ArrivalKind::Poisson => grid.rates = vec![0.0, cfg.scenario.mean_interarrival],
+        ArrivalKind::Bursty => {
+            grid.rates = vec![0.0, cfg.scenario.mean_interarrival];
+            grid.bursty =
+                Some((cfg.scenario.burst_size as usize, cfg.scenario.burst_within));
+        }
+    }
+    if let Some(v) = args.opt("mixes") {
+        grid.mixes = parse_list(v, "mixes", |s| Some(s.to_string()))?;
+    }
+    if let Some(v) = args.opt("rates") {
+        grid.rates = parse_list(v, "rates", |s| s.parse::<f64>().ok().filter(|r| *r >= 0.0))?;
+    }
+    if let Some(v) = args.opt("policies") {
+        grid.policies = parse_list(v, "policies", AllocPolicy::parse)?;
+    }
+    if let Some(v) = args.opt("feeds") {
+        grid.feeds = parse_list(v, "feeds", FeedModel::parse)?;
+    }
+    if let Some(v) = args.opt("geoms") {
+        grid.geoms = parse_list(v, "geoms", |s| s.parse::<u64>().ok().filter(|c| *c >= 8))?;
+    }
+    grid.requests = args.opt_u64("requests", grid.requests as u64)?.max(1) as usize;
+    grid.seed = args.opt_u64("seed", grid.seed)?;
+    if let Some(v) = args.opt("slack") {
+        grid.qos_slack = v
+            .parse::<f64>()
+            .ok()
+            .filter(|s| *s >= 0.0)
+            .with_context(|| format!("--slack expects a non-negative number, got {v:?}"))?;
+    }
+    let within_flag = args
+        .opt("burst-within")
+        .map(|w| {
+            w.parse::<f64>()
+                .ok()
+                .filter(|w| *w >= 0.0)
+                .with_context(|| format!("--burst-within expects cycles, got {w:?}"))
+        })
+        .transpose()?;
+    if let Some(size) = args.opt("burst") {
+        let size = size
+            .parse::<usize>()
+            .ok()
+            .filter(|b| *b >= 1)
+            .with_context(|| format!("--burst expects a positive integer, got {size:?}"))?;
+        grid.bursty = Some((size, within_flag.unwrap_or(cfg.scenario.burst_within)));
+    } else if let Some(within) = within_flag {
+        match &mut grid.bursty {
+            Some((_, w)) => *w = within,
+            None => bail!("--burst-within requires --burst (or arrival = \"bursty\" in the config)"),
+        }
+    }
+
+    let threads = match args.opt_u64("threads", 0)? {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        n => n as usize,
+    };
+
+    let rows = run_sweep(&grid, &cfg.scheduler, threads)?;
+    println!(
+        "sweep: {} points ({} mixes x {} rates x {} policies x {} feeds x {} geoms), \
+         {} requests each, {} threads",
+        rows.len(),
+        grid.mixes.len(),
+        grid.rates.len(),
+        grid.policies.len(),
+        grid.feeds.len(),
+        if grid.geoms.is_empty() { 1 } else { grid.geoms.len() },
+        grid.requests,
+        threads,
+    );
+    println!("{}", report::sweep_table(&grid, &rows).render());
+
+    let json = report::sweep_json(&grid, &rows).render();
+    match args.opt("json") {
+        Some(path) => {
+            std::fs::write(path, &json).with_context(|| format!("writing {path}"))?;
+            println!("wrote {path} ({} bytes; same seed => identical bytes)", json.len());
+        }
+        None => println!("{json}"),
+    }
+    Ok(())
+}
+
 fn cmd_trace(args: &ParsedArgs) -> Result<()> {
     args.ensure_known(&["config", "out"], &[])?;
     let spec = args.positionals.first().map(String::as_str).unwrap_or("heavy");
@@ -208,6 +319,7 @@ fn cmd_area(args: &ParsedArgs) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_verify(args: &ParsedArgs) -> Result<()> {
     args.ensure_known(&["artifacts"], &[])?;
     let dir = args
@@ -217,6 +329,14 @@ fn cmd_verify(args: &ParsedArgs) -> Result<()> {
     let n = crate::verify::verify_all(&dir)?;
     println!("verify: {n} cross-checks passed (functional sim == PJRT artifacts == oracle)");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_verify(_args: &ParsedArgs) -> Result<()> {
+    bail!(
+        "`mtsa verify` exercises the PJRT datapath, which this binary was built without; \
+         rebuild with `--features pjrt` on a host with XLA/PJRT (see README)"
+    )
 }
 
 #[cfg(test)]
@@ -273,5 +393,46 @@ mod tests {
             ParsedArgs::parse(&["run".into(), "NCF,HandwritingLSTM".into(), "--detail".into()])
                 .unwrap();
         dispatch(&args).unwrap();
+    }
+
+    #[test]
+    fn sweep_small_grid_writes_json() {
+        let out = std::env::temp_dir().join(format!("mtsa-sweep-{}.json", std::process::id()));
+        let args = ParsedArgs::parse(&[
+            "sweep".into(),
+            "--mixes".into(),
+            "NCF".into(),
+            "--rates".into(),
+            "0,40000".into(),
+            "--policies".into(),
+            "widest".into(),
+            "--feeds".into(),
+            "independent".into(),
+            "--requests".into(),
+            "4".into(),
+            "--threads".into(),
+            "2".into(),
+            "--json".into(),
+            out.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        dispatch(&args).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("points").unwrap().as_arr().unwrap().len(), 2);
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn sweep_rejects_bad_flags() {
+        for bad in [
+            vec!["sweep".to_string(), "--rates".into(), "-5".into()],
+            vec!["sweep".to_string(), "--policies".into(), "greedy".into()],
+            vec!["sweep".to_string(), "--feeds".into(), "psychic".into()],
+            vec!["sweep".to_string(), "--mixes".into(), "NotAModel".into()],
+        ] {
+            let args = ParsedArgs::parse(&bad).unwrap();
+            assert!(dispatch(&args).is_err(), "should reject {bad:?}");
+        }
     }
 }

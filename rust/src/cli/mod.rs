@@ -1,6 +1,13 @@
 //! Command-line interface (offline build: no `clap`) — a small typed
 //! argument parser ([`args`]) plus the subcommand implementations
 //! ([`commands`]).
+//!
+//! Subcommands map onto the paper + the serving extension: `zoo`
+//! (Table 1), `run` (the Fig. 9 dynamic-vs-sequential comparison),
+//! `sweep` (arrival-driven scenario grid with SLA metrics, see
+//! `docs/scenarios.md`), `trace` (Scale-Sim/Accelergy-style CSVs,
+//! Fig. 8 toolchain), `area` (the Mul_En overhead of §3.2), and `verify`
+//! (PJRT cross-checks, `pjrt` feature).
 
 pub mod args;
 pub mod commands;

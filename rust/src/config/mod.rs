@@ -1,8 +1,10 @@
 //! Configuration system: a small TOML-subset parser ([`toml`]) and the
-//! typed accelerator/scheduler schema ([`schema`]) the CLI consumes.
+//! typed accelerator/scheduler/scenario schema ([`schema`]) the CLI
+//! consumes.  The scenario keys (`[scenario]`: arrival process, request
+//! count, QoS slack) are documented in `docs/scenarios.md`.
 
 pub mod schema;
 pub mod toml;
 
-pub use schema::RunConfig;
+pub use schema::{ArrivalKind, RunConfig, ScenarioDefaults};
 pub use toml::TomlDoc;

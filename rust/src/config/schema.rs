@@ -24,6 +24,15 @@
 //! enabled = false
 //! words_per_cycle = 64.0
 //! burst_latency = 100
+//!
+//! [scenario]              # arrival/QoS defaults, see docs/scenarios.md
+//! arrival = "poisson"     # batch | poisson | bursty
+//! mean_interarrival = 50000.0
+//! burst_size = 4
+//! burst_within = 1000.0
+//! requests = 12
+//! seed = 42
+//! qos_slack = 3.0         # deadline = arrival + slack x isolated latency; 0 = best-effort
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -33,17 +42,85 @@ use crate::coordinator::scheduler::{AllocPolicy, FeedModel, SchedulerConfig};
 use crate::energy::components::{EnergyModel, Precision};
 use crate::sim::dataflow::ArrayGeometry;
 use crate::sim::dram::DramConfig;
+use crate::workloads::generator::ArrivalProcess;
+
+/// Arrival-process family selected by `[scenario] arrival`.
+///
+/// Fixed-trace arrivals ([`ArrivalProcess::Trace`]) have no TOML spelling
+/// (the config subset has no arrays); build them through the library API.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ArrivalKind {
+    /// Everything at t=0 (the paper's Table-1 setup).
+    #[default]
+    Batch,
+    Poisson,
+    Bursty,
+}
+
+/// `[scenario]` — arrival + QoS defaults for the scenario engine and
+/// `mtsa sweep` (CLI flags override these; see `docs/scenarios.md`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioDefaults {
+    pub arrival: ArrivalKind,
+    /// Poisson mean gap / bursty mean OFF gap, in cycles.
+    pub mean_interarrival: f64,
+    /// Requests per burst (bursty only).
+    pub burst_size: u64,
+    /// Intra-burst spacing in cycles (bursty only).
+    pub burst_within: f64,
+    /// DNN instances per scenario.
+    pub requests: u64,
+    pub seed: u64,
+    /// Deadline slack factor; 0 = best-effort (no deadlines).
+    pub qos_slack: f64,
+}
+
+impl Default for ScenarioDefaults {
+    fn default() -> Self {
+        ScenarioDefaults {
+            arrival: ArrivalKind::Batch,
+            mean_interarrival: 50_000.0,
+            burst_size: 4,
+            burst_within: 1_000.0,
+            requests: 12,
+            seed: 42,
+            qos_slack: 3.0,
+        }
+    }
+}
+
+impl ScenarioDefaults {
+    /// The configured arrival process.
+    pub fn arrival_process(&self) -> ArrivalProcess {
+        match self.arrival {
+            ArrivalKind::Batch => ArrivalProcess::Batch,
+            ArrivalKind::Poisson => {
+                ArrivalProcess::Poisson { mean_interarrival: self.mean_interarrival }
+            }
+            ArrivalKind::Bursty => ArrivalProcess::Bursty {
+                burst_size: self.burst_size as usize,
+                within_gap: self.burst_within,
+                between_gap: self.mean_interarrival,
+            },
+        }
+    }
+}
 
 /// Fully-resolved run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub scheduler: SchedulerConfig,
     pub precision: Precision,
+    pub scenario: ScenarioDefaults,
 }
 
 impl Default for RunConfig {
     fn default() -> Self {
-        RunConfig { scheduler: SchedulerConfig::default(), precision: Precision::Int8 }
+        RunConfig {
+            scheduler: SchedulerConfig::default(),
+            precision: Precision::Int8,
+            scenario: ScenarioDefaults::default(),
+        }
     }
 }
 
@@ -53,7 +130,7 @@ impl RunConfig {
         let doc = TomlDoc::parse(text).context("parsing config")?;
         let mut cfg = RunConfig::default();
 
-        let known = ["array", "buffers", "scheduler", "dram", "energy"];
+        let known = ["array", "buffers", "scheduler", "dram", "energy", "scenario"];
         for s in doc.section_names() {
             if !known.contains(&s) {
                 bail!("unknown config section [{s}] (known: {known:?})");
@@ -97,18 +174,13 @@ impl RunConfig {
         }
 
         if let Some(p) = doc.get("scheduler", "policy").and_then(|v| v.as_str()) {
-            cfg.scheduler.alloc_policy = match p {
-                "widest" => AllocPolicy::WidestToHeaviest,
-                "equal" => AllocPolicy::EqualShare,
-                _ => bail!("unknown scheduler.policy {p:?} (widest|equal)"),
-            };
+            cfg.scheduler.alloc_policy = AllocPolicy::parse(p)
+                .with_context(|| format!("unknown scheduler.policy {p:?} (widest|equal)"))?;
         }
         if let Some(f) = doc.get("scheduler", "feed_model").and_then(|v| v.as_str()) {
-            cfg.scheduler.feed_model = match f {
-                "independent" => FeedModel::Independent,
-                "interleaved" => FeedModel::Interleaved,
-                _ => bail!("unknown scheduler.feed_model {f:?}"),
-            };
+            cfg.scheduler.feed_model = FeedModel::parse(f).with_context(|| {
+                format!("unknown scheduler.feed_model {f:?} (independent|interleaved)")
+            })?;
         }
         if let Some(w) = u64_of("scheduler", "min_width") {
             if w == 0 || w > cols {
@@ -135,6 +207,49 @@ impl RunConfig {
                 d.burst_latency = l;
             }
             cfg.scheduler.dram = Some(d);
+        }
+
+        let sc = &mut cfg.scenario;
+        if let Some(a) = doc.get("scenario", "arrival").and_then(|v| v.as_str()) {
+            sc.arrival = match a {
+                "batch" => ArrivalKind::Batch,
+                "poisson" => ArrivalKind::Poisson,
+                "bursty" => ArrivalKind::Bursty,
+                _ => bail!("unknown scenario.arrival {a:?} (batch|poisson|bursty)"),
+            };
+        }
+        if let Some(m) = f64_of("scenario", "mean_interarrival") {
+            if m <= 0.0 {
+                bail!("scenario.mean_interarrival must be positive");
+            }
+            sc.mean_interarrival = m;
+        }
+        if let Some(b) = u64_of("scenario", "burst_size") {
+            if b == 0 {
+                bail!("scenario.burst_size must be >= 1");
+            }
+            sc.burst_size = b;
+        }
+        if let Some(w) = f64_of("scenario", "burst_within") {
+            if w < 0.0 {
+                bail!("scenario.burst_within must be >= 0");
+            }
+            sc.burst_within = w;
+        }
+        if let Some(r) = u64_of("scenario", "requests") {
+            if r == 0 {
+                bail!("scenario.requests must be >= 1");
+            }
+            sc.requests = r;
+        }
+        if let Some(s) = u64_of("scenario", "seed") {
+            sc.seed = s;
+        }
+        if let Some(q) = f64_of("scenario", "qos_slack") {
+            if q < 0.0 {
+                bail!("scenario.qos_slack must be >= 0 (0 disables deadlines)");
+            }
+            sc.qos_slack = q;
         }
 
         Ok(cfg)
@@ -208,9 +323,52 @@ mod tests {
             "[buffers]\ndtype_bytes = 3",
             "[typo]\nx = 1",
             "[dram]\nenabled = true\nwords_per_cycle = -1.0",
+            "[scenario]\narrival = \"fractal\"",
+            "[scenario]\nmean_interarrival = 0",
+            "[scenario]\nburst_size = 0",
+            "[scenario]\nrequests = 0",
+            "[scenario]\nqos_slack = -1.0",
         ] {
             assert!(RunConfig::from_toml(bad).is_err(), "should reject {bad:?}");
         }
+    }
+
+    #[test]
+    fn scenario_section_round_trip() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            [scenario]
+            arrival = "bursty"
+            mean_interarrival = 80000.0
+            burst_size = 6
+            burst_within = 250.0
+            requests = 20
+            seed = 7
+            qos_slack = 1.5
+            "#,
+        )
+        .unwrap();
+        let sc = &cfg.scenario;
+        assert_eq!(sc.arrival, ArrivalKind::Bursty);
+        assert_eq!(sc.requests, 20);
+        assert_eq!(sc.seed, 7);
+        assert_eq!(sc.qos_slack, 1.5);
+        assert_eq!(
+            sc.arrival_process(),
+            ArrivalProcess::Bursty { burst_size: 6, within_gap: 250.0, between_gap: 80_000.0 }
+        );
+    }
+
+    #[test]
+    fn scenario_defaults_without_section() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.scenario, ScenarioDefaults::default());
+        assert_eq!(cfg.scenario.arrival_process(), ArrivalProcess::Batch);
+        let poisson = RunConfig::from_toml("[scenario]\narrival = \"poisson\"").unwrap();
+        assert_eq!(
+            poisson.scenario.arrival_process(),
+            ArrivalProcess::Poisson { mean_interarrival: 50_000.0 }
+        );
     }
 
     #[test]

@@ -1,10 +1,14 @@
-//! Run metrics — everything the paper's Fig. 9 plots need.
+//! Run metrics — everything the paper's Fig. 9 plots need, plus the
+//! serving-side view the scenario engine adds: per-tenant latency
+//! percentiles, deadline misses ([`TenantStats`]) and time-sliced array
+//! occupancy ([`RunMetrics::occupancy_timeline`]).
 
 use std::collections::BTreeMap;
 
 use crate::sim::activity::Activity;
 use crate::sim::dataflow::ArrayGeometry;
 use crate::sim::partitioned::PartitionSlice;
+use crate::util::stats::{deadline_misses, Summary};
 use crate::workloads::dnng::{DnnId, LayerId};
 
 /// One layer dispatch — a row of the Fig. 9(c)(d) detail plots.
@@ -75,6 +79,91 @@ impl RunMetrics {
         w.dedup();
         w
     }
+
+    /// Time-sliced array occupancy: the makespan is cut into `buckets`
+    /// equal windows and each window reports the fraction of column-cycles
+    /// covered by a live partition (1.0 = the whole array allocated for the
+    /// whole window).  This is the utilization *timeline* behind the
+    /// paper's Fig. 9(c)(d) residency plots — the scalar
+    /// [`RunMetrics::utilization`] is MAC-based and hides when the array
+    /// sat idle waiting for arrivals.
+    pub fn occupancy_timeline(&self, cols: u64, buckets: usize) -> Vec<f64> {
+        assert!(cols > 0 && buckets > 0);
+        if self.makespan == 0 {
+            return vec![0.0; buckets];
+        }
+        let span = self.makespan as f64;
+        let window = span / buckets as f64;
+        let mut busy = vec![0.0f64; buckets]; // column-cycles per window
+        for d in &self.dispatches {
+            // Buckets this dispatch can overlap (u128: cycles × buckets can
+            // exceed u64 on long runs).
+            let b0 = (d.t_start as u128 * buckets as u128 / self.makespan as u128) as usize;
+            let b1 = ((d.t_end - 1) as u128 * buckets as u128 / self.makespan as u128) as usize;
+            for (b, slot) in busy.iter_mut().enumerate().take(b1.min(buckets - 1) + 1).skip(b0) {
+                let w0 = window * b as f64;
+                let w1 = window * (b + 1) as f64;
+                let overlap = (d.t_end as f64).min(w1) - (d.t_start as f64).max(w0);
+                if overlap > 0.0 {
+                    *slot += overlap * d.slice.width as f64;
+                }
+            }
+        }
+        busy.into_iter().map(|b| b / (window * cols as f64)).collect()
+    }
+}
+
+/// Per-tenant serving statistics over a set of requests — the SLA view the
+/// scenario engine reports: request-latency percentiles (arrival →
+/// last-layer completion) and deadline misses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantStats {
+    pub tenant: String,
+    /// Requests aggregated into this row.
+    pub requests: usize,
+    pub mean_latency: f64,
+    pub p50_latency: f64,
+    pub p95_latency: f64,
+    pub p99_latency: f64,
+    pub max_latency: f64,
+    /// Requests that carried a deadline.
+    pub deadlines: usize,
+    /// Requests finishing strictly after their deadline.
+    pub misses: usize,
+}
+
+impl TenantStats {
+    /// Aggregate `(arrival, completion, deadline)` request tuples (cycles;
+    /// deadline absolute).  Empty input yields an all-zero row.
+    pub fn from_requests(tenant: &str, reqs: &[(u64, u64, Option<u64>)]) -> TenantStats {
+        let latencies: Vec<f64> =
+            reqs.iter().map(|&(arrival, done, _)| (done.saturating_sub(arrival)) as f64).collect();
+        let s = Summary::from_samples(&latencies);
+        let pairs: Vec<(u64, u64)> =
+            reqs.iter().filter_map(|&(_, done, dl)| dl.map(|dl| (done, dl))).collect();
+        let misses = deadline_misses(&pairs);
+        TenantStats {
+            tenant: tenant.to_string(),
+            requests: reqs.len(),
+            mean_latency: s.as_ref().map_or(0.0, |s| s.mean),
+            p50_latency: s.as_ref().map_or(0.0, |s| s.p50),
+            p95_latency: s.as_ref().map_or(0.0, |s| s.p95),
+            p99_latency: s.as_ref().map_or(0.0, |s| s.p99),
+            max_latency: s.as_ref().map_or(0.0, |s| s.max),
+            deadlines: pairs.len(),
+            misses,
+        }
+    }
+
+    /// Deadline-miss rate over the requests that carried a deadline
+    /// (0.0 when none did).
+    pub fn miss_rate(&self) -> f64 {
+        if self.deadlines == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.deadlines as f64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -125,5 +214,62 @@ mod tests {
         m.record_dispatch(rec("a", 0, 128, 0, 100));
         let geom = ArrayGeometry::new(10, 10);
         assert!((m.utilization(geom) - 100.0 / (100.0 * 100.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn occupancy_timeline_full_and_half() {
+        // One full-width dispatch over the whole makespan: every bucket 1.0.
+        let mut m = RunMetrics::default();
+        m.record_dispatch(rec("a", 0, 128, 0, 1000));
+        let tl = m.occupancy_timeline(128, 4);
+        assert_eq!(tl.len(), 4);
+        for v in &tl {
+            assert!((v - 1.0).abs() < 1e-9, "{tl:?}");
+        }
+
+        // Half-width dispatch in the first half only.
+        let mut m = RunMetrics::default();
+        m.record_dispatch(rec("a", 0, 64, 0, 500));
+        m.record_dispatch(rec("a", 1, 128, 500, 1000)); // sets makespan=1000
+        let tl = m.occupancy_timeline(128, 2);
+        assert!((tl[0] - 0.5).abs() < 1e-9, "{tl:?}");
+        assert!((tl[1] - 1.0).abs() < 1e-9, "{tl:?}");
+    }
+
+    #[test]
+    fn occupancy_timeline_empty_run() {
+        let m = RunMetrics::default();
+        assert_eq!(m.occupancy_timeline(128, 3), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn tenant_stats_latency_and_misses() {
+        // Three requests: latencies 100, 200, 700; two carry deadlines and
+        // one of those misses.
+        let reqs = vec![
+            (0u64, 100u64, Some(150u64)),  // hit
+            (50, 250, Some(200)),          // miss (done 250 > 200)
+            (100, 800, None),              // best-effort
+        ];
+        let s = TenantStats::from_requests("t", &reqs);
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.deadlines, 2);
+        assert_eq!(s.misses, 1);
+        assert!((s.miss_rate() - 0.5).abs() < 1e-12);
+        assert!((s.mean_latency - (100.0 + 200.0 + 700.0) / 3.0).abs() < 1e-9);
+        assert_eq!(s.p50_latency, 200.0);
+        assert_eq!(s.max_latency, 700.0);
+        assert!(s.p50_latency <= s.p95_latency && s.p95_latency <= s.p99_latency);
+        // Cross-check against the canonical util::stats definition.
+        let pairs = [(250u64, 200u64), (100, 150)];
+        assert!((crate::util::stats::deadline_miss_rate(&pairs) - s.miss_rate()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tenant_stats_empty() {
+        let s = TenantStats::from_requests("t", &[]);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.miss_rate(), 0.0);
+        assert_eq!(s.p99_latency, 0.0);
     }
 }

@@ -14,19 +14,28 @@
 //! - [`multi_array`] — comparator: the §5 related-work alternative of
 //!   allocating whole DNNs to separate chips (TPU-pod style).
 //! - [`metrics`] — run metrics: makespan, per-DNN completion, utilization,
-//!   the partition-size dispatch log behind Fig. 9(c)(d), energy hookup.
-//! - [`service`] — the multi-tenant serving loop that executes scheduler
-//!   decisions on the PJRT runtime (real numerics; used by `e2e_serve`).
+//!   per-tenant latency percentiles and deadline misses, the partition-size
+//!   dispatch log behind Fig. 9(c)(d), energy hookup.
+//! - [`scenario`] — the arrival-driven scenario engine: instantiates
+//!   request streams (Poisson / bursty / trace) over the zoo with per-DNN
+//!   QoS deadlines, and scores runs against them (SLA view the paper's
+//!   two static Table-1 mixes lack; cf. MoCA, arXiv 2305.05843).
+//! - `service` — the multi-tenant serving loop that executes scheduler
+//!   decisions on the PJRT runtime (real numerics; used by `e2e_serve`;
+//!   behind the `pjrt` feature).
 
 pub mod baseline;
 pub mod metrics;
 pub mod multi_array;
 pub mod partition;
 pub mod queue;
+pub mod scenario;
 pub mod scheduler;
+#[cfg(feature = "pjrt")]
 pub mod service;
 pub mod static_part;
 
-pub use metrics::{DispatchRecord, RunMetrics};
+pub use metrics::{DispatchRecord, RunMetrics, TenantStats};
 pub use partition::PartitionManager;
+pub use scenario::{Scenario, ScenarioSpec};
 pub use scheduler::{DynamicScheduler, SchedulerConfig};

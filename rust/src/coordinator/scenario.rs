@@ -1,0 +1,303 @@
+//! Arrival-driven, SLA-aware multi-tenant scenarios — the serving-side
+//! evaluation dimension the paper lacks.
+//!
+//! The paper (§4) evaluates exactly two static workload mixes (Table 1's
+//! heavy and light groups), all DNNs submitted at t=0.  A deployed
+//! multi-tenant accelerator instead sees a *stream* of requests with
+//! per-tenant latency targets: MoCA (arXiv 2305.05843) drives multi-tenant
+//! accelerators from per-tenant QoS/latency targets, and "No DNN Left
+//! Behind" (arXiv 1901.06887) frames cloud DNN inference as an
+//! arrival-driven, SLO-bound serving problem.  This module adds both
+//! dimensions on top of the unchanged Algorithm-1 scheduler:
+//!
+//! - [`ScenarioSpec`] + [`Scenario::generate`] — instantiate `requests`
+//!   DNN instances (round-robin over a template list, e.g. a Table-1
+//!   group) with arrivals drawn from an
+//!   [`ArrivalProcess`](crate::workloads::generator::ArrivalProcess)
+//!   (batch / Poisson / bursty / fixed trace) and an optional per-request
+//!   deadline;
+//! - QoS deadlines are *slack-relative*: `deadline = arrival +
+//!   slack × isolated_latency`, where isolated latency is the DNN's
+//!   full-array sequential runtime on the same geometry.  A slack of 1.0
+//!   means "as fast as having the whole chip to yourself"; 3.0 is a
+//!   typical soft-real-time budget.  Relative deadlines make one knob
+//!   meaningful across DNNs whose runtimes span three orders of magnitude
+//!   (NCF vs ResNet-50).
+//! - [`Scenario::analyze`] — score any scheduler's [`RunMetrics`] against
+//!   the scenario: per-tenant latency percentiles (p50/p95/p99) and
+//!   deadline-miss rates ([`TenantStats`]).
+//!
+//! Everything is deterministic from `ScenarioSpec::seed`, which the sweep
+//! runner ([`crate::sweep`]) relies on for byte-identical reports.
+
+use std::collections::BTreeMap;
+
+use super::metrics::{RunMetrics, TenantStats};
+use super::scheduler::SchedulerConfig;
+use crate::sim::dataflow::baseline_layer_timing;
+use crate::util::rng::Rng;
+use crate::workloads::dnng::{Dnn, WorkloadPool};
+use crate::workloads::generator::ArrivalProcess;
+
+/// One request of a generated scenario: a DNN instance with its arrival
+/// and (optional) absolute deadline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Unique instance name (`"<tenant>#<i>"`) — the key into
+    /// [`RunMetrics::completion`].
+    pub instance: String,
+    /// Tenant = the template (zoo model) this instance was cloned from.
+    pub tenant: String,
+    pub arrival: u64,
+    /// Absolute deadline cycle; `None` = best-effort.
+    pub deadline: Option<u64>,
+    /// Full-array sequential latency of this DNN on the scenario geometry
+    /// (the basis of the slack-relative deadline).
+    pub isolated_cycles: u64,
+}
+
+/// Declarative description of a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub arrival: ArrivalProcess,
+    /// Number of DNN instances to draw (round-robin over the templates).
+    pub requests: usize,
+    /// Seed for the arrival process.
+    pub seed: u64,
+    /// Deadline slack factor (`deadline = arrival + slack × isolated`);
+    /// `None` = best-effort (no deadlines).
+    pub qos_slack: Option<f64>,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec {
+            name: "scenario".to_string(),
+            arrival: ArrivalProcess::Batch,
+            requests: 8,
+            seed: 42,
+            qos_slack: Some(3.0),
+        }
+    }
+}
+
+/// A fully-instantiated scenario: the pool to schedule plus the request
+/// metadata to score the run against.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub pool: WorkloadPool,
+    /// One entry per pool DNN, in pool order.
+    pub requests: Vec<Request>,
+}
+
+/// Per-tenant + overall outcome of one scheduler run on a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioOutcome {
+    /// Sorted by tenant name.
+    pub tenants: Vec<TenantStats>,
+    /// All requests pooled (tenant `"*"`).
+    pub overall: TenantStats,
+}
+
+impl ScenarioOutcome {
+    /// Overall deadline-miss rate (0.0 when nothing carried a deadline).
+    pub fn miss_rate(&self) -> f64 {
+        self.overall.miss_rate()
+    }
+}
+
+impl Scenario {
+    /// Instantiate a scenario from DNN templates.
+    ///
+    /// `cfg` supplies the geometry/buffers used for the isolated-latency
+    /// basis of the deadlines; it should match the config the scenario
+    /// will be run under.
+    pub fn generate(templates: &[Dnn], spec: &ScenarioSpec, cfg: &SchedulerConfig) -> Scenario {
+        assert!(!templates.is_empty(), "scenario needs at least one template DNN");
+        assert!(spec.requests > 0, "scenario needs at least one request");
+        let mut rng = Rng::new(spec.seed);
+        let arrivals = spec.arrival.sample(&mut rng, spec.requests);
+
+        // Isolated (full-array sequential) latency once per template, not
+        // per request — requests round-robin over the same templates.
+        let isolated: Vec<u64> = templates
+            .iter()
+            .map(|t| {
+                t.layers
+                    .iter()
+                    .map(|l| baseline_layer_timing(cfg.geom, l.shape.gemm(), &cfg.buffers).cycles)
+                    .sum()
+            })
+            .collect();
+
+        let mut dnns = Vec::with_capacity(spec.requests);
+        let mut requests = Vec::with_capacity(spec.requests);
+        for (i, &arrival) in arrivals.iter().enumerate() {
+            let template = &templates[i % templates.len()];
+            let instance = format!("{}#{i}", template.name);
+            let isolated_cycles = isolated[i % templates.len()];
+            let deadline = spec
+                .qos_slack
+                .map(|slack| arrival + (slack * isolated_cycles as f64).ceil() as u64);
+
+            let mut dnn = template.clone();
+            dnn.name = instance.clone();
+            dnn.arrival_cycles = arrival;
+            dnns.push(dnn);
+            requests.push(Request {
+                instance,
+                tenant: template.name.clone(),
+                arrival,
+                deadline,
+                isolated_cycles,
+            });
+        }
+        Scenario { name: spec.name.clone(), pool: WorkloadPool::new(&spec.name, dnns), requests }
+    }
+
+    /// Score a finished run (any scheduler that produced `RunMetrics` over
+    /// this scenario's pool) against the per-request deadlines.
+    pub fn analyze(&self, metrics: &RunMetrics) -> ScenarioOutcome {
+        let mut by_tenant: BTreeMap<&str, Vec<(u64, u64, Option<u64>)>> = BTreeMap::new();
+        let mut all = Vec::with_capacity(self.requests.len());
+        for r in &self.requests {
+            let done = *metrics
+                .completion
+                .get(&r.instance)
+                .unwrap_or_else(|| panic!("run has no completion for {}", r.instance));
+            let tuple = (r.arrival, done, r.deadline);
+            by_tenant.entry(&r.tenant).or_default().push(tuple);
+            all.push(tuple);
+        }
+        ScenarioOutcome {
+            tenants: by_tenant
+                .iter()
+                .map(|(tenant, reqs)| TenantStats::from_requests(tenant, reqs))
+                .collect(),
+            overall: TenantStats::from_requests("*", &all),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::baseline::SequentialBaseline;
+    use crate::coordinator::scheduler::DynamicScheduler;
+    use crate::workloads::dnng::Layer;
+    use crate::workloads::shapes::{LayerKind, LayerShape};
+
+    fn templates() -> Vec<Dnn> {
+        let mk = |name: &str, m: u64, n_layers: usize| {
+            let layers = (0..n_layers)
+                .map(|i| Layer::new(&format!("l{i}"), LayerKind::Fc, LayerShape::fc(64, 128, m)))
+                .collect();
+            Dnn::chain(name, layers)
+        };
+        vec![mk("wide", 256, 3), mk("narrow", 32, 2)]
+    }
+
+    #[test]
+    fn generate_round_robins_templates_with_unique_names() {
+        let spec = ScenarioSpec {
+            requests: 5,
+            arrival: ArrivalProcess::Poisson { mean_interarrival: 10_000.0 },
+            ..Default::default()
+        };
+        let sc = Scenario::generate(&templates(), &spec, &SchedulerConfig::default());
+        assert_eq!(sc.pool.dnns.len(), 5);
+        assert_eq!(sc.requests.len(), 5);
+        let names: Vec<&str> = sc.requests.iter().map(|r| r.instance.as_str()).collect();
+        assert_eq!(names, vec!["wide#0", "narrow#1", "wide#2", "narrow#3", "wide#4"]);
+        assert_eq!(sc.requests[1].tenant, "narrow");
+        // Pool arrival times mirror the request metadata.
+        for (d, r) in sc.pool.dnns.iter().zip(&sc.requests) {
+            assert_eq!(d.arrival_cycles, r.arrival);
+            assert_eq!(d.name, r.instance);
+        }
+    }
+
+    #[test]
+    fn deadlines_scale_with_isolated_latency() {
+        let spec = ScenarioSpec { requests: 2, qos_slack: Some(2.0), ..Default::default() };
+        let sc = Scenario::generate(&templates(), &spec, &SchedulerConfig::default());
+        for r in &sc.requests {
+            assert!(r.isolated_cycles > 0);
+            assert_eq!(r.deadline, Some(r.arrival + 2 * r.isolated_cycles));
+        }
+        // The wide template takes longer in isolation than the narrow one.
+        assert!(sc.requests[0].isolated_cycles > sc.requests[1].isolated_cycles);
+    }
+
+    #[test]
+    fn best_effort_has_no_deadlines() {
+        let spec = ScenarioSpec { requests: 3, qos_slack: None, ..Default::default() };
+        let sc = Scenario::generate(&templates(), &spec, &SchedulerConfig::default());
+        assert!(sc.requests.iter().all(|r| r.deadline.is_none()));
+        let m = DynamicScheduler::new(SchedulerConfig::default()).run(&sc.pool);
+        let outcome = sc.analyze(&m);
+        assert_eq!(outcome.overall.deadlines, 0);
+        assert_eq!(outcome.miss_rate(), 0.0);
+    }
+
+    #[test]
+    fn analyze_groups_by_tenant() {
+        let spec = ScenarioSpec {
+            requests: 6,
+            arrival: ArrivalProcess::Poisson { mean_interarrival: 5_000.0 },
+            qos_slack: Some(4.0),
+            ..Default::default()
+        };
+        let sc = Scenario::generate(&templates(), &spec, &SchedulerConfig::default());
+        let m = DynamicScheduler::new(SchedulerConfig::default()).run(&sc.pool);
+        let outcome = sc.analyze(&m);
+        assert_eq!(outcome.tenants.len(), 2);
+        assert_eq!(outcome.tenants[0].tenant, "narrow");
+        assert_eq!(outcome.tenants[1].tenant, "wide");
+        assert_eq!(outcome.tenants.iter().map(|t| t.requests).sum::<usize>(), 6);
+        assert_eq!(outcome.overall.requests, 6);
+        for t in &outcome.tenants {
+            assert!(t.p50_latency > 0.0);
+            assert!(t.p50_latency <= t.p99_latency);
+            assert!((0.0..=1.0).contains(&t.miss_rate()));
+        }
+    }
+
+    #[test]
+    fn generous_slack_is_never_missed_in_isolation() {
+        // A single request with generous slack must always meet its
+        // deadline: it has the array to itself.
+        let spec = ScenarioSpec {
+            requests: 1,
+            qos_slack: Some(1.5),
+            arrival: ArrivalProcess::Batch,
+            ..Default::default()
+        };
+        let sc = Scenario::generate(&templates(), &spec, &SchedulerConfig::default());
+        for m in [
+            DynamicScheduler::new(SchedulerConfig::default()).run(&sc.pool),
+            SequentialBaseline::new(SchedulerConfig::default()).run(&sc.pool),
+        ] {
+            let outcome = sc.analyze(&m);
+            assert_eq!(outcome.overall.misses, 0, "lone request missed its deadline");
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let spec = ScenarioSpec {
+            requests: 10,
+            arrival: ArrivalProcess::Bursty {
+                burst_size: 3,
+                within_gap: 500.0,
+                between_gap: 40_000.0,
+            },
+            ..Default::default()
+        };
+        let a = Scenario::generate(&templates(), &spec, &SchedulerConfig::default());
+        let b = Scenario::generate(&templates(), &spec, &SchedulerConfig::default());
+        assert_eq!(a.requests, b.requests);
+    }
+}

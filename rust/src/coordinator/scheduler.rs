@@ -41,6 +41,25 @@ pub enum FeedModel {
     Interleaved,
 }
 
+impl FeedModel {
+    /// Stable config/CLI/report name.
+    pub fn tag(self) -> &'static str {
+        match self {
+            FeedModel::Independent => "independent",
+            FeedModel::Interleaved => "interleaved",
+        }
+    }
+
+    /// Inverse of [`FeedModel::tag`].
+    pub fn parse(s: &str) -> Option<FeedModel> {
+        match s {
+            "independent" => Some(FeedModel::Independent),
+            "interleaved" => Some(FeedModel::Interleaved),
+            _ => None,
+        }
+    }
+}
+
 /// Partition-width allocation policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum AllocPolicy {
@@ -54,6 +73,25 @@ pub enum AllocPolicy {
     /// `cols / n_available` (power-of-two ladder), regardless of demand.
     /// Kept as an ablation (`ablation_alloc_policy`).
     EqualShare,
+}
+
+impl AllocPolicy {
+    /// Stable config/CLI/report name.
+    pub fn tag(self) -> &'static str {
+        match self {
+            AllocPolicy::WidestToHeaviest => "widest",
+            AllocPolicy::EqualShare => "equal",
+        }
+    }
+
+    /// Inverse of [`AllocPolicy::tag`].
+    pub fn parse(s: &str) -> Option<AllocPolicy> {
+        match s {
+            "widest" => Some(AllocPolicy::WidestToHeaviest),
+            "equal" => Some(AllocPolicy::EqualShare),
+            _ => None,
+        }
+    }
 }
 
 /// Scheduler configuration.

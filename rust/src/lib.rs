@@ -9,8 +9,11 @@
 //!   partitioning coordinator ([`coordinator`]), plus every substrate the
 //!   evaluation depends on: a Scale-Sim-equivalent cycle model ([`sim`]),
 //!   an Accelergy-equivalent energy estimator ([`energy`]), the 12-network
-//!   workload zoo ([`workloads`]), and the PJRT runtime ([`runtime`]) that
-//!   executes the AOT-compiled partitioned-weight-stationary computation.
+//!   workload zoo ([`workloads`]), the arrival-driven scenario engine and
+//!   parallel sweep runner ([`coordinator::scenario`], [`sweep`]), and the
+//!   PJRT runtime ([`runtime`]) that executes the AOT-compiled
+//!   partitioned-weight-stationary computation (behind the `pjrt` feature;
+//!   everything else builds offline with no accelerator hardware).
 //! - **L2 (jax, build time)** — `python/compile/model.py`.
 //! - **L1 (pallas, build time)** — `python/compile/kernels/`.
 //!
@@ -31,10 +34,13 @@ pub mod coordinator;
 
 pub mod report;
 
+pub mod sweep;
+
 pub mod config;
 
 pub mod cli;
 
 pub mod benchkit;
 
+#[cfg(feature = "pjrt")]
 pub mod verify;

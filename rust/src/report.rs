@@ -1,13 +1,19 @@
 //! Experiment drivers shared by the benches, the CLI and the integration
 //! tests — one implementation of every Fig. 9 series so the numbers in
-//! `cargo bench`, `mtsa run` and `EXPERIMENTS.md` cannot drift apart.
+//! `cargo bench`, `mtsa run` and `EXPERIMENTS.md` cannot drift apart —
+//! plus the JSON/table renderers for the scenario sweep
+//! ([`sweep_table`], [`sweep_json`]).
 
 use std::collections::BTreeMap;
 
 use crate::coordinator::baseline::SequentialBaseline;
+use crate::coordinator::metrics::TenantStats;
 use crate::coordinator::scheduler::{AllocPolicy, DynamicScheduler, SchedulerConfig};
 use crate::coordinator::RunMetrics;
 use crate::energy::{EnergyBreakdown, EnergyModel, Estimator};
+use crate::sweep::{SweepGrid, SweepRow};
+use crate::util::json::Json;
+use crate::util::tablefmt::Table;
 use crate::workloads::dnng::WorkloadPool;
 
 /// Results of running one pool under both the baseline and the dynamic
@@ -120,6 +126,130 @@ pub fn headline(g: &GroupResults, model: &EnergyModel) -> Headline {
         dyn_utilization: g.dynamic.utilization(g.cfg.geom),
         seq_utilization: g.sequential.utilization(g.cfg.geom),
     }
+}
+
+// ---------------------------------------------------------------------
+// Scenario-sweep rendering (`mtsa sweep`)
+// ---------------------------------------------------------------------
+
+/// One point's arrival-axis label: `batch`, `1/<gap>` (Poisson) or
+/// `burst<size>/<gap>` (ON-OFF).
+fn arrival_label(grid: &SweepGrid, mean_interarrival: f64) -> String {
+    if mean_interarrival <= 0.0 {
+        "batch".to_string()
+    } else if let Some((burst_size, _)) = grid.bursty {
+        format!("burst{burst_size}/{mean_interarrival:.0}")
+    } else {
+        format!("1/{mean_interarrival:.0}")
+    }
+}
+
+/// The human-readable sweep report: one row per grid point.
+pub fn sweep_table(grid: &SweepGrid, rows: &[SweepRow]) -> Table {
+    let mut t = Table::new(&[
+        "mix",
+        "arrival",
+        "policy",
+        "feed",
+        "cols",
+        "makespan",
+        "vs seq",
+        "util",
+        "p50 lat",
+        "p99 lat",
+        "miss",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.point.mix.clone(),
+            arrival_label(grid, r.point.mean_interarrival),
+            r.point.policy.tag().to_string(),
+            r.point.feed.tag().to_string(),
+            r.point.cols.to_string(),
+            r.makespan.to_string(),
+            format!("{:+.1}%", saving_pct(r.seq_makespan as f64, r.makespan as f64)),
+            format!("{:.1}%", 100.0 * r.utilization),
+            format!("{:.0}", r.outcome.overall.p50_latency),
+            format!("{:.0}", r.outcome.overall.p99_latency),
+            format!("{:.1}%", 100.0 * r.outcome.miss_rate()),
+        ]);
+    }
+    t
+}
+
+fn tenant_stats_json(s: &TenantStats) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("requests".to_string(), Json::Num(s.requests as f64));
+    o.insert("mean_latency".to_string(), Json::Num(s.mean_latency));
+    o.insert("p50_latency".to_string(), Json::Num(s.p50_latency));
+    o.insert("p95_latency".to_string(), Json::Num(s.p95_latency));
+    o.insert("p99_latency".to_string(), Json::Num(s.p99_latency));
+    o.insert("max_latency".to_string(), Json::Num(s.max_latency));
+    o.insert("deadlines".to_string(), Json::Num(s.deadlines as f64));
+    o.insert("misses".to_string(), Json::Num(s.misses as f64));
+    o.insert("miss_rate".to_string(), Json::Num(s.miss_rate()));
+    Json::Obj(o)
+}
+
+/// The machine-readable sweep report.  Deterministic: a fixed grid seed
+/// renders byte-identically regardless of worker-thread count (see
+/// `util::json` and `rust/tests/scenario_sweep.rs`).
+pub fn sweep_json(grid: &SweepGrid, rows: &[SweepRow]) -> Json {
+    let mut points = Vec::with_capacity(rows.len());
+    for r in rows {
+        let mut o = BTreeMap::new();
+        o.insert("mix".to_string(), Json::Str(r.point.mix.clone()));
+        o.insert("mean_interarrival".to_string(), Json::Num(r.point.mean_interarrival));
+        o.insert("policy".to_string(), Json::Str(r.point.policy.tag().to_string()));
+        o.insert("feed".to_string(), Json::Str(r.point.feed.tag().to_string()));
+        o.insert("cols".to_string(), Json::Num(r.point.cols as f64));
+        // Seeds are u64; emitted as strings so they stay exact beyond 2^53.
+        o.insert("scenario_seed".to_string(), Json::Str(r.point.scenario_seed.to_string()));
+        o.insert("requests".to_string(), Json::Num(r.requests as f64));
+        o.insert("makespan".to_string(), Json::Num(r.makespan as f64));
+        o.insert("seq_makespan".to_string(), Json::Num(r.seq_makespan as f64));
+        o.insert(
+            "makespan_saving_pct".to_string(),
+            Json::Num(saving_pct(r.seq_makespan as f64, r.makespan as f64)),
+        );
+        o.insert("utilization".to_string(), Json::Num(r.utilization));
+        o.insert("seq_utilization".to_string(), Json::Num(r.seq_utilization));
+        o.insert(
+            "occupancy".to_string(),
+            Json::Arr(r.occupancy.iter().map(|&v| Json::Num(v)).collect()),
+        );
+        o.insert("overall".to_string(), tenant_stats_json(&r.outcome.overall));
+        o.insert("seq_overall".to_string(), tenant_stats_json(&r.seq_outcome.overall));
+        o.insert(
+            "tenants".to_string(),
+            Json::Obj(
+                r.outcome
+                    .tenants
+                    .iter()
+                    .map(|t| (t.tenant.clone(), tenant_stats_json(t)))
+                    .collect(),
+            ),
+        );
+        points.push(Json::Obj(o));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Num(1.0));
+    top.insert("seed".to_string(), Json::Str(grid.seed.to_string()));
+    top.insert("requests".to_string(), Json::Num(grid.requests as f64));
+    top.insert("qos_slack".to_string(), Json::Num(grid.qos_slack));
+    // The arrival family for the non-zero rates (zero rates are batch).
+    match grid.bursty {
+        Some((burst_size, burst_within)) => {
+            top.insert("arrival".to_string(), Json::Str("bursty".to_string()));
+            top.insert("burst_size".to_string(), Json::Num(burst_size as f64));
+            top.insert("burst_within".to_string(), Json::Num(burst_within));
+        }
+        None => {
+            top.insert("arrival".to_string(), Json::Str("poisson".to_string()));
+        }
+    }
+    top.insert("points".to_string(), Json::Arr(points));
+    Json::Obj(top)
 }
 
 #[cfg(test)]

@@ -8,15 +8,19 @@
 //!
 //! - [`manifest`] — parses/validates `manifest.json` (artifact signatures)
 //! - [`tensor`] — host-side f32 tensor with shape checking
-//! - [`engine`] — PJRT client + compiled-executable cache
+//! - `engine` — PJRT client + compiled-executable cache (behind the `pjrt`
+//!   feature: it needs the `xla` crate and a PJRT install, neither of which
+//!   exists in the offline build; see `Cargo.toml`)
 //! - [`packing`] — packs co-resident tenants' weight tiles into the shared
 //!   array operands (the rust mirror of `model.pack_tenants`)
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
 pub mod packing;
 pub mod tensor;
 
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use manifest::{ArtifactSpec, Manifest};
 pub use packing::{pack_step, PackedStep, TenantTile};

@@ -14,7 +14,8 @@
 //!   physical row wires among co-resident tenants, multiplying stream time
 //!   by the tenant count (the conservative physical model; see
 //!   `sim::array` for its register-level derivation).  The ablation bench
-//!   `ablation_feedbus` quantifies the gap.
+//!   `ablation_feedbus` quantifies the gap, and `docs/feed-models.md` is
+//!   the canonical discussion of when each model is the right one.
 
 use super::buffers::BufferConfig;
 use super::dataflow::{layer_timing_at, ArrayGeometry, LayerTiming};

@@ -1,0 +1,323 @@
+//! Parallel scenario sweeps — fan a (workload mix × arrival rate ×
+//! allocation policy × feed model × array geometry) grid across OS
+//! threads and collect per-point SLA metrics.
+//!
+//! Each grid point is a pure function of its [`SweepGrid`] coordinates and
+//! the seed: a scenario is instantiated ([`crate::coordinator::scenario`]),
+//! run under both the dynamic partitioning scheduler and the sequential
+//! baseline, and scored against its deadlines.  Purity is what makes the
+//! fan-out trivial — workers pull point indices from an atomic counter and
+//! write results into their own slots, so the report is byte-identical for
+//! a fixed seed regardless of thread count (asserted by
+//! `rust/tests/scenario_sweep.rs`).
+//!
+//! Arrival traces are shared across the policy/feed/geometry axes of the
+//! same (mix, rate) cell: every contender schedules the *same* request
+//! stream, so differences in the report are attributable to the scheduler,
+//! not sampling noise.
+//!
+//! Entry points: [`run_sweep`] (library / `mtsa sweep` / the `sweep` bench)
+//! and the renderers in [`crate::report`] (`sweep_table`, `sweep_json`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::baseline::SequentialBaseline;
+use crate::coordinator::scenario::{Scenario, ScenarioOutcome, ScenarioSpec};
+use crate::coordinator::scheduler::{AllocPolicy, DynamicScheduler, FeedModel, SchedulerConfig};
+use crate::sim::dataflow::ArrayGeometry;
+use crate::workloads::dnng::Dnn;
+use crate::workloads::generator::ArrivalProcess;
+use crate::workloads::models;
+
+/// Number of windows in each point's occupancy timeline.
+pub const OCCUPANCY_BUCKETS: usize = 8;
+
+/// The sweep grid: the cross product of every axis.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    /// Workload mixes: `"heavy"`, `"light"`, or comma-separated zoo model
+    /// names (same specs as `mtsa run`).
+    pub mixes: Vec<String>,
+    /// Mean inter-arrival gaps in cycles; `0` = batch (everything at t=0,
+    /// the paper's setup).
+    pub rates: Vec<f64>,
+    pub policies: Vec<AllocPolicy>,
+    pub feeds: Vec<FeedModel>,
+    /// Square array sides; empty = inherit the base config's geometry.
+    pub geoms: Vec<u64>,
+    /// Requests per scenario (DNN instances round-robined over the mix).
+    pub requests: usize,
+    /// Deadline slack factor; `0` disables deadlines.
+    pub qos_slack: f64,
+    /// Bursty arrivals: `Some((burst_size, within_gap))` turns each
+    /// non-zero rate into an ON-OFF process with that rate as the mean OFF
+    /// gap; `None` (default) uses Poisson.
+    pub bursty: Option<(usize, f64)>,
+    pub seed: u64,
+}
+
+impl Default for SweepGrid {
+    /// The default 24-point grid: {heavy, light} × {batch, 20k, 100k
+    /// cycles} × {widest, equal} × {independent, interleaved} on the base
+    /// geometry.
+    fn default() -> Self {
+        SweepGrid {
+            mixes: vec!["heavy".to_string(), "light".to_string()],
+            rates: vec![0.0, 20_000.0, 100_000.0],
+            policies: vec![AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare],
+            feeds: vec![FeedModel::Independent, FeedModel::Interleaved],
+            geoms: Vec::new(),
+            requests: 12,
+            qos_slack: 3.0,
+            bursty: None,
+            seed: 42,
+        }
+    }
+}
+
+/// One grid coordinate (pre-resolved, ready to run).
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub index: usize,
+    pub mix: String,
+    pub mean_interarrival: f64,
+    pub policy: AllocPolicy,
+    pub feed: FeedModel,
+    pub cols: u64,
+    /// Scenario seed — shared across policy/feed/geometry so every
+    /// contender in a (mix, rate) cell sees the same arrival trace.
+    pub scenario_seed: u64,
+}
+
+/// One finished grid point.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub point: SweepPoint,
+    pub requests: usize,
+    pub makespan: u64,
+    pub seq_makespan: u64,
+    /// MAC-based PE utilization of the dynamic run.
+    pub utilization: f64,
+    pub seq_utilization: f64,
+    /// Dynamic-run SLA outcome (per-tenant + overall).
+    pub outcome: ScenarioOutcome,
+    /// Sequential-baseline SLA outcome (the comparison column).
+    pub seq_outcome: ScenarioOutcome,
+    /// Time-sliced occupancy of the dynamic run ([`OCCUPANCY_BUCKETS`]
+    /// windows over the makespan).
+    pub occupancy: Vec<f64>,
+}
+
+/// Expand a grid into its points (row-major over mix, rate, policy, feed,
+/// geometry — the JSON/table row order).
+pub fn expand(grid: &SweepGrid, base: &SchedulerConfig) -> Vec<SweepPoint> {
+    let geoms: Vec<u64> =
+        if grid.geoms.is_empty() { vec![base.geom.cols] } else { grid.geoms.clone() };
+    let mut points = Vec::new();
+    for (mi, mix) in grid.mixes.iter().enumerate() {
+        for (ri, &rate) in grid.rates.iter().enumerate() {
+            let scenario_seed = grid
+                .seed
+                .wrapping_add((mi as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                .wrapping_add((ri as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03));
+            for &policy in &grid.policies {
+                for &feed in &grid.feeds {
+                    for &cols in &geoms {
+                        points.push(SweepPoint {
+                            index: points.len(),
+                            mix: mix.clone(),
+                            mean_interarrival: rate,
+                            policy,
+                            feed,
+                            cols,
+                            scenario_seed,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    points
+}
+
+/// The arrival process for one grid point.
+fn arrival_for(grid: &SweepGrid, rate: f64) -> ArrivalProcess {
+    if rate <= 0.0 {
+        ArrivalProcess::Batch
+    } else if let Some((burst_size, within_gap)) = grid.bursty {
+        ArrivalProcess::Bursty { burst_size, within_gap, between_gap: rate }
+    } else {
+        ArrivalProcess::Poisson { mean_interarrival: rate }
+    }
+}
+
+/// Run a single grid point (pure: no shared state).
+fn run_point(
+    point: &SweepPoint,
+    grid: &SweepGrid,
+    base: &SchedulerConfig,
+    templates: &[Dnn],
+) -> SweepRow {
+    let cols = point.cols;
+    let cfg = SchedulerConfig {
+        geom: ArrayGeometry::new(cols, cols),
+        min_width: (cols / 8).max(1).min(base.min_width.max(1)),
+        feed_model: point.feed,
+        alloc_policy: point.policy,
+        ..base.clone()
+    };
+    let spec = ScenarioSpec {
+        name: format!("{}@{}", point.mix, point.mean_interarrival),
+        arrival: arrival_for(grid, point.mean_interarrival),
+        requests: grid.requests,
+        seed: point.scenario_seed,
+        qos_slack: (grid.qos_slack > 0.0).then_some(grid.qos_slack),
+    };
+    let scenario = Scenario::generate(templates, &spec, &cfg);
+    let dynamic = DynamicScheduler::new(cfg.clone()).run(&scenario.pool);
+    let sequential = SequentialBaseline::new(cfg.clone()).run(&scenario.pool);
+    SweepRow {
+        point: point.clone(),
+        requests: grid.requests,
+        makespan: dynamic.makespan,
+        seq_makespan: sequential.makespan,
+        utilization: dynamic.utilization(cfg.geom),
+        seq_utilization: sequential.utilization(cfg.geom),
+        outcome: scenario.analyze(&dynamic),
+        seq_outcome: scenario.analyze(&sequential),
+        occupancy: dynamic.occupancy_timeline(cols, OCCUPANCY_BUCKETS),
+    }
+}
+
+/// Run the whole grid across `threads` workers; rows come back in grid
+/// order regardless of scheduling.
+pub fn run_sweep(
+    grid: &SweepGrid,
+    base: &SchedulerConfig,
+    threads: usize,
+) -> Result<Vec<SweepRow>> {
+    // Resolve every mix up front so workers are infallible.
+    let mut mix_templates: Vec<(String, Vec<Dnn>)> = Vec::new();
+    for mix in &grid.mixes {
+        let pool = models::by_spec(mix)
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("resolving workload mix {mix:?}"))?;
+        mix_templates.push((mix.clone(), pool.dnns));
+    }
+
+    let points = expand(grid, base);
+    let point_templates: Vec<&[Dnn]> = points
+        .iter()
+        .map(|p| {
+            mix_templates
+                .iter()
+                .find(|(m, _)| *m == p.mix)
+                .map(|(_, t)| t.as_slice())
+                .expect("mix resolved above")
+        })
+        .collect();
+    let threads = threads.max(1).min(points.len().max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<SweepRow>>> =
+        points.iter().map(|_| Mutex::new(None)).collect();
+
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some(point) = points.get(i) else { break };
+                let row = run_point(point, grid, base, point_templates[i]);
+                *slots[i].lock().expect("sweep slot poisoned") = Some(row);
+            });
+        }
+    });
+
+    Ok(slots
+        .into_iter()
+        .map(|slot| slot.into_inner().expect("slot lock").expect("worker filled every slot"))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_has_24_points() {
+        let grid = SweepGrid::default();
+        let points = expand(&grid, &SchedulerConfig::default());
+        assert_eq!(points.len(), 24);
+        // Indices are dense and ordered.
+        for (i, p) in points.iter().enumerate() {
+            assert_eq!(p.index, i);
+        }
+        // Geometry inherited from the base config.
+        assert!(points.iter().all(|p| p.cols == 128));
+    }
+
+    #[test]
+    fn scenario_seed_shared_within_mix_rate_cell() {
+        let grid = SweepGrid::default();
+        let points = expand(&grid, &SchedulerConfig::default());
+        for a in &points {
+            for b in &points {
+                let same_cell = a.mix == b.mix && a.mean_interarrival == b.mean_interarrival;
+                assert_eq!(
+                    same_cell,
+                    a.scenario_seed == b.scenario_seed,
+                    "seed sharing must follow (mix, rate) cells exactly"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn geometry_axis_expands() {
+        let grid = SweepGrid {
+            mixes: vec!["light".into()],
+            rates: vec![0.0],
+            policies: vec![AllocPolicy::WidestToHeaviest],
+            feeds: vec![FeedModel::Independent],
+            geoms: vec![64, 128],
+            ..Default::default()
+        };
+        let points = expand(&grid, &SchedulerConfig::default());
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].cols, 64);
+        assert_eq!(points[1].cols, 128);
+    }
+
+    #[test]
+    fn unknown_mix_is_an_error() {
+        let grid = SweepGrid { mixes: vec!["nope".into()], ..Default::default() };
+        assert!(run_sweep(&grid, &SchedulerConfig::default(), 1).is_err());
+    }
+
+    #[test]
+    fn small_sweep_runs_and_orders_rows() {
+        let grid = SweepGrid {
+            mixes: vec!["light".into()],
+            rates: vec![0.0, 50_000.0],
+            policies: vec![AllocPolicy::WidestToHeaviest],
+            feeds: vec![FeedModel::Independent],
+            geoms: vec![128],
+            requests: 4,
+            ..Default::default()
+        };
+        let rows = run_sweep(&grid, &SchedulerConfig::default(), 2).unwrap();
+        assert_eq!(rows.len(), 2);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.point.index, i);
+            assert!(row.makespan > 0);
+            assert!(row.seq_makespan >= row.makespan / 2, "sanity");
+            assert_eq!(row.occupancy.len(), OCCUPANCY_BUCKETS);
+            assert!(row.occupancy.iter().all(|&o| (0.0..=1.0 + 1e-9).contains(&o)));
+            assert_eq!(row.outcome.overall.requests, 4);
+            assert!((0.0..=1.0).contains(&row.outcome.miss_rate()));
+        }
+    }
+}

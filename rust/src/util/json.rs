@@ -1,6 +1,13 @@
-//! Minimal JSON parser — enough for `artifacts/manifest.json` and config
-//! interchange.  Supports the full JSON grammar except `\u` surrogate pairs
-//! beyond the BMP (sufficient for our ASCII manifests); numbers parse to f64.
+//! Minimal JSON parser and writer — enough for `artifacts/manifest.json`,
+//! config interchange, and the sweep reports.  Supports the full JSON
+//! grammar except `\u` surrogate pairs beyond the BMP (sufficient for our
+//! ASCII manifests); numbers parse to f64.
+//!
+//! [`Json::render`] is deterministic: objects are `BTreeMap`s (keys emit
+//! sorted), and numbers use a fixed formatting rule — so two structurally
+//! identical documents render byte-identically, which the sweep runner
+//! relies on for its reproducibility contract (fixed seed ⇒ identical
+//! report bytes, regardless of worker-thread count).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -90,6 +97,79 @@ impl Json {
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|o| o.get(key))
     }
+
+    /// Serialize to compact JSON text (deterministic; see module docs).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => write_num(out, *n),
+            Json::Str(s) => write_str(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(out, k);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Deterministic number formatting: integral values within the f64-exact
+/// range print without a fraction; everything else uses rust's shortest
+/// round-trip repr (valid JSON: `0.25`, `1e300`, ...).  Non-finite values
+/// have no JSON representation and emit `null`.
+fn write_num(out: &mut String, n: f64) {
+    use std::fmt::Write as _;
+    if !n.is_finite() {
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n:?}");
+    }
+}
+
+fn write_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                use std::fmt::Write as _;
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -336,6 +416,42 @@ mod tests {
         assert_eq!(Json::parse("128").unwrap().as_u64(), Some(128));
         assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
         assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+    }
+
+    #[test]
+    fn render_round_trips() {
+        for text in [
+            "null",
+            "true",
+            "42",
+            "-3.5",
+            r#""hi there""#,
+            r#"{"a":[1,2,{"b":true}],"c":null,"d":"x\ny"}"#,
+            r#"[0.25,1,-7,"",{}]"#,
+        ] {
+            let v = Json::parse(text).unwrap();
+            let rendered = v.render();
+            assert_eq!(Json::parse(&rendered).unwrap(), v, "round trip of {text:?}");
+        }
+    }
+
+    #[test]
+    fn render_is_deterministic_and_sorted() {
+        let a = Json::parse(r#"{"z": 1, "a": 2}"#).unwrap();
+        let b = Json::parse(r#"{"a": 2, "z": 1}"#).unwrap();
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.render(), r#"{"a":2,"z":1}"#);
+    }
+
+    #[test]
+    fn render_number_forms() {
+        assert_eq!(Json::Num(5.0).render(), "5");
+        assert_eq!(Json::Num(-2.0).render(), "-2");
+        assert_eq!(Json::Num(0.25).render(), "0.25");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        // Escapes survive a round trip.
+        let s = Json::Str("a\"b\\c\nd\u{1}".into());
+        assert_eq!(Json::parse(&s.render()).unwrap(), s);
     }
 
     #[test]

@@ -64,6 +64,23 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
+/// Number of `(completion, deadline)` pairs (absolute cycles) finishing
+/// strictly after their deadline.  Finishing exactly at the deadline is a
+/// hit (the SLA is "done by cycle D").  This is the single definition of
+/// a deadline miss; everything else derives from it.
+pub fn deadline_misses(pairs: &[(u64, u64)]) -> usize {
+    pairs.iter().filter(|(done, deadline)| done > deadline).count()
+}
+
+/// Deadline-miss rate over `(completion, deadline)` pairs.  Empty input —
+/// no request carried a deadline — counts as a perfect 0.0, not NaN.
+pub fn deadline_miss_rate(pairs: &[(u64, u64)]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    deadline_misses(pairs) as f64 / pairs.len() as f64
+}
+
 /// Format a duration in nanoseconds with an adaptive unit.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -135,6 +152,52 @@ mod tests {
         let samples: Vec<f64> = (0..101).map(|i| ((i * 37) % 101) as f64).collect();
         let s = Summary::from_samples(&samples).unwrap();
         assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn percentile_exact_on_sample_points() {
+        // With n samples, q = i/(n-1) lands exactly on sorted[i].
+        let sorted = [2.0, 4.0, 8.0, 16.0, 32.0];
+        for (i, &v) in sorted.iter().enumerate() {
+            assert_eq!(percentile(&sorted, i as f64 / 4.0), v);
+        }
+        // Quartile interpolation between points.
+        assert_eq!(percentile(&sorted, 0.125), 3.0);
+        assert_eq!(percentile(&sorted, 0.875), 24.0);
+    }
+
+    #[test]
+    fn percentile_constant_sample() {
+        let sorted = [7.0; 10];
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(percentile(&sorted, q), 7.0);
+        }
+    }
+
+    #[test]
+    fn summary_percentiles_match_percentile_fn() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::from_samples(&samples).unwrap();
+        assert_eq!(s.p50, percentile(&samples, 0.50));
+        assert_eq!(s.p95, percentile(&samples, 0.95));
+        assert_eq!(s.p99, percentile(&samples, 0.99));
+    }
+
+    #[test]
+    fn deadline_miss_rate_basics() {
+        // No deadlines at all -> perfect.
+        assert_eq!(deadline_miss_rate(&[]), 0.0);
+        assert_eq!(deadline_misses(&[]), 0);
+        assert_eq!(deadline_misses(&[(101, 100), (100, 100), (99, 100)]), 1);
+        // Finishing exactly at the deadline is a hit.
+        assert_eq!(deadline_miss_rate(&[(100, 100)]), 0.0);
+        // One cycle over is a miss.
+        assert_eq!(deadline_miss_rate(&[(101, 100)]), 1.0);
+        // Mixed: 1 miss out of 4.
+        let pairs = [(50, 100), (100, 100), (150, 100), (99, 100)];
+        assert!((deadline_miss_rate(&pairs) - 0.25).abs() < 1e-12);
+        // All misses.
+        assert_eq!(deadline_miss_rate(&[(2, 1), (3, 1)]), 1.0);
     }
 
     #[test]

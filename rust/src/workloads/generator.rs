@@ -1,5 +1,6 @@
 //! Synthetic DNNG generator — random workload pools for stress tests,
-//! property tests and the INFaaS-style serving example.
+//! property tests and the INFaaS-style serving example — plus the arrival
+//! processes ([`ArrivalProcess`]) the scenario engine drives pools with.
 //!
 //! Generates chains of conv/FC/recurrent layers with dimension
 //! distributions loosely modeled on the zoo (narrow recommendation layers
@@ -8,6 +9,76 @@
 use super::dnng::{Dnn, Layer, WorkloadPool};
 use super::shapes::{LayerKind, LayerShape};
 use crate::util::rng::Rng;
+
+/// How request arrival times are generated — the serving-side dimension
+/// the paper's Table-1 setup (everything at t=0) collapses; cf. the
+/// arrival-driven SLO framing of "No DNN Left Behind" (arXiv 1901.06887).
+///
+/// All variants produce a monotone non-decreasing cycle sequence, and all
+/// randomness comes from the caller's [`Rng`], so a fixed seed reproduces
+/// the exact trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Every request arrives at cycle 0 (the paper's batch setup).
+    Batch,
+    /// Poisson stream: the first request at 0, then i.i.d. exponential
+    /// gaps with the given mean (cycles).
+    Poisson { mean_interarrival: f64 },
+    /// ON-OFF bursts: `burst_size` requests spaced `within_gap` cycles
+    /// apart, then an exponential OFF period with mean `between_gap`.
+    Bursty { burst_size: usize, within_gap: f64, between_gap: f64 },
+    /// Fixed arrival-time trace (cycles).  Sorted before use; when more
+    /// requests are drawn than the trace holds, the trace tiles forward
+    /// shifted by its span, keeping arrivals monotone.
+    Trace(Vec<u64>),
+}
+
+impl ArrivalProcess {
+    /// Sample `n` arrival cycles (monotone non-decreasing).
+    pub fn sample(&self, rng: &mut Rng, n: usize) -> Vec<u64> {
+        match self {
+            ArrivalProcess::Batch => vec![0; n],
+            ArrivalProcess::Poisson { mean_interarrival } => {
+                assert!(*mean_interarrival > 0.0, "Poisson mean must be positive");
+                let mut t = 0.0f64;
+                (0..n)
+                    .map(|i| {
+                        if i > 0 {
+                            t += rng.gen_exp(1.0 / mean_interarrival);
+                        }
+                        t as u64
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Bursty { burst_size, within_gap, between_gap } => {
+                assert!(*burst_size >= 1, "burst_size must be >= 1");
+                assert!(*within_gap >= 0.0 && *between_gap > 0.0);
+                let mut t = 0.0f64;
+                (0..n)
+                    .map(|i| {
+                        if i > 0 {
+                            if i % burst_size == 0 {
+                                t += rng.gen_exp(1.0 / between_gap); // OFF period
+                            } else {
+                                t += within_gap; // inside the ON burst
+                            }
+                        }
+                        t as u64
+                    })
+                    .collect()
+            }
+            ArrivalProcess::Trace(times) => {
+                assert!(!times.is_empty(), "empty arrival trace");
+                let mut sorted = times.clone();
+                sorted.sort_unstable();
+                let period = sorted.last().unwrap() + 1;
+                (0..n)
+                    .map(|i| sorted[i % sorted.len()] + (i / sorted.len()) as u64 * period)
+                    .collect()
+            }
+        }
+    }
+}
 
 /// Knobs for the synthetic generator.
 #[derive(Debug, Clone)]
@@ -145,5 +216,48 @@ mod tests {
         let b = random_pool(&mut Rng::new(7), &cfg);
         assert_eq!(a.total_macs(), b.total_macs());
         assert_eq!(a.total_layers(), b.total_layers());
+    }
+
+    fn is_monotone(xs: &[u64]) -> bool {
+        xs.windows(2).all(|w| w[0] <= w[1])
+    }
+
+    #[test]
+    fn arrival_batch_is_all_zero() {
+        let mut rng = Rng::new(1);
+        assert_eq!(ArrivalProcess::Batch.sample(&mut rng, 5), vec![0; 5]);
+    }
+
+    #[test]
+    fn arrival_poisson_monotone_and_deterministic() {
+        let p = ArrivalProcess::Poisson { mean_interarrival: 10_000.0 };
+        let a = p.sample(&mut Rng::new(3), 50);
+        let b = p.sample(&mut Rng::new(3), 50);
+        assert_eq!(a, b);
+        assert!(is_monotone(&a));
+        assert_eq!(a[0], 0);
+        assert!(*a.last().unwrap() > 0, "50 draws at mean 10k cannot all collapse to 0");
+    }
+
+    #[test]
+    fn arrival_bursty_shape() {
+        let p = ArrivalProcess::Bursty { burst_size: 4, within_gap: 100.0, between_gap: 50_000.0 };
+        let a = p.sample(&mut Rng::new(9), 16);
+        assert!(is_monotone(&a));
+        // Inside a burst the spacing is exactly within_gap.
+        for (i, w) in a.windows(2).enumerate() {
+            if (i + 1) % 4 != 0 {
+                assert_eq!(w[1] - w[0], 100, "intra-burst gap at {i}: {a:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn arrival_trace_sorts_and_tiles() {
+        let p = ArrivalProcess::Trace(vec![500, 0, 100]);
+        let mut rng = Rng::new(0);
+        // First pass sorted, second pass shifted by last+1 = 501.
+        assert_eq!(p.sample(&mut rng, 6), vec![0, 100, 500, 501, 601, 1001]);
+        assert_eq!(p.sample(&mut rng, 2), vec![0, 100]);
     }
 }

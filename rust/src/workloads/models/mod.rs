@@ -98,6 +98,30 @@ pub fn by_name(name: &str) -> Option<&'static ZooEntry> {
     ZOO.iter().find(|e| e.name.to_lowercase() == lower)
 }
 
+/// Resolve a workload-mix spec: `"heavy"`, `"light"`, or comma-separated
+/// zoo model names.  The error names the exact offending model so a typo
+/// in a long list is pinpointed.  Shared by `mtsa run`, `mtsa sweep` and
+/// the sweep library.
+pub fn by_spec(spec: &str) -> Result<WorkloadPool, String> {
+    match spec {
+        "heavy" => Ok(heavy_pool()),
+        "light" => Ok(light_pool()),
+        list => {
+            if list.trim().is_empty() {
+                return Err("empty pool spec".to_string());
+            }
+            let mut dnns = Vec::new();
+            for name in list.split(',') {
+                let name = name.trim();
+                let entry = by_name(name)
+                    .ok_or_else(|| format!("unknown model {name:?} (see `mtsa zoo`)"))?;
+                dnns.push((entry.build)());
+            }
+            Ok(WorkloadPool::new(spec, dnns))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,90 @@
+//! Integration: the scenario engine + parallel sweep runner.
+//!
+//! The load-bearing contract is reproducibility: a sweep is a pure
+//! function of (grid, base config), so a fixed seed must produce
+//! byte-identical JSON regardless of how many worker threads ran it or
+//! how the OS scheduled them.
+
+use mtsa::coordinator::scheduler::{AllocPolicy, FeedModel, SchedulerConfig};
+use mtsa::report;
+use mtsa::sweep::{expand, run_sweep, SweepGrid};
+use mtsa::util::json::Json;
+
+fn small_grid() -> SweepGrid {
+    SweepGrid {
+        mixes: vec!["light".to_string()],
+        rates: vec![0.0, 30_000.0],
+        policies: vec![AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare],
+        feeds: vec![FeedModel::Independent],
+        geoms: vec![128],
+        requests: 5,
+        qos_slack: 3.0,
+        bursty: None,
+        seed: 0xDECAF,
+    }
+}
+
+#[test]
+fn fixed_seed_reproduces_byte_identical_json() {
+    let base = SchedulerConfig::default();
+    let grid = small_grid();
+    // Different thread counts, same bytes.
+    let a = report::sweep_json(&grid, &run_sweep(&grid, &base, 1).unwrap()).render();
+    let b = report::sweep_json(&grid, &run_sweep(&grid, &base, 3).unwrap()).render();
+    let c = report::sweep_json(&grid, &run_sweep(&grid, &base, 8).unwrap()).render();
+    assert_eq!(a, b, "1 vs 3 worker threads changed the report bytes");
+    assert_eq!(a, c, "1 vs 8 worker threads changed the report bytes");
+    // And the bytes are valid JSON with the full grid.
+    let parsed = Json::parse(&a).unwrap();
+    assert_eq!(parsed.get("points").unwrap().as_arr().unwrap().len(), 4);
+    assert_eq!(parsed.get("seed").unwrap().as_str(), Some("912559"));
+}
+
+#[test]
+fn different_seed_changes_arrival_driven_points() {
+    let base = SchedulerConfig::default();
+    let grid = small_grid();
+    let other = SweepGrid { seed: 1, ..small_grid() };
+    let a = report::sweep_json(&grid, &run_sweep(&grid, &base, 2).unwrap()).render();
+    let b = report::sweep_json(&other, &run_sweep(&other, &base, 2).unwrap()).render();
+    assert_ne!(a, b, "seed must flow into the arrival traces");
+}
+
+#[test]
+fn default_grid_meets_the_24_point_floor() {
+    let grid = SweepGrid::default();
+    assert!(expand(&grid, &SchedulerConfig::default()).len() >= 24);
+}
+
+#[test]
+fn sla_report_fields_are_coherent() {
+    let base = SchedulerConfig::default();
+    let rows = run_sweep(&small_grid(), &base, 4).unwrap();
+    assert_eq!(rows.len(), 4);
+    for row in &rows {
+        let o = &row.outcome.overall;
+        assert_eq!(o.requests, 5);
+        assert!(o.p50_latency > 0.0);
+        assert!(o.p50_latency <= o.p95_latency && o.p95_latency <= o.p99_latency);
+        assert!(o.p99_latency <= o.max_latency);
+        assert!((0.0..=1.0).contains(&row.outcome.miss_rate()));
+        assert!(o.deadlines == o.requests, "slack > 0 puts a deadline on every request");
+        // Per-tenant rows partition the requests.
+        assert_eq!(row.outcome.tenants.iter().map(|t| t.requests).sum::<usize>(), 5);
+        // Batch points start everything at t=0; arrival-driven points
+        // cannot finish earlier than the batch's busiest schedule allows.
+        assert!(row.makespan > 0 && row.seq_makespan > 0);
+    }
+
+    // Dynamic partitioning's downside stays tightly bounded (same 1.25x
+    // envelope the scheduler property tests enforce; the strict win on the
+    // canonical Table-1 pools is asserted in paper_experiments.rs).
+    let batch_widest = &rows[0];
+    assert_eq!(batch_widest.point.mean_interarrival, 0.0);
+    assert!(
+        batch_widest.makespan as f64 <= 1.25 * batch_widest.seq_makespan as f64,
+        "dynamic {} >> sequential {} on the batch light mix",
+        batch_widest.makespan,
+        batch_widest.seq_makespan
+    );
+}

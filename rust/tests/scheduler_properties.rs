@@ -1,11 +1,14 @@
 //! Property tests over the dynamic scheduler: structural invariants that
-//! must hold for ANY workload (random pools, random arrivals).
+//! must hold for ANY workload (random pools, random arrivals, generated
+//! arrival traces).
 
 use std::collections::BTreeMap;
 
+use mtsa::coordinator::baseline::SequentialBaseline;
 use mtsa::coordinator::scheduler::{AllocPolicy, DynamicScheduler, FeedModel, SchedulerConfig};
+use mtsa::report;
 use mtsa::util::prop;
-use mtsa::workloads::generator::{random_pool, GeneratorCfg};
+use mtsa::workloads::generator::{random_pool, ArrivalProcess, GeneratorCfg};
 
 fn random_cfg(rng: &mut mtsa::util::rng::Rng) -> SchedulerConfig {
     SchedulerConfig {
@@ -135,6 +138,63 @@ fn makespan_at_least_critical_path() {
             prop::ensure(
                 m.makespan >= dnn.arrival_cycles + full_width,
                 &format!("makespan {} < critical path of {}", m.makespan, dnn.name),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn arrival_traces_keep_dynamic_competitive_with_sequential() {
+    // On generated arrival traces (the scenario engine's regime), dynamic
+    // partitioning must never do materially worse than the sequential
+    // baseline: the makespan stays inside the same 1.25x envelope the
+    // batch-arrival property enforces — spreading arrivals only reduces
+    // contention — and so does the mean completion cycle.  (The strict
+    // win under contention is asserted on the zoo pools in
+    // paper_experiments.rs.)
+    prop::check("arrival-trace dynamic vs sequential", 12, |rng| {
+        let n = rng.gen_range_inclusive(2, 6) as usize;
+        let mut t = 0u64;
+        let mut trace = Vec::with_capacity(n);
+        for _ in 0..n {
+            trace.push(t);
+            t += rng.gen_range(60_000);
+        }
+        let arrivals = ArrivalProcess::Trace(trace).sample(rng, n);
+
+        let gcfg = GeneratorCfg {
+            num_dnns: n,
+            layers_min: 2,
+            layers_max: 7,
+            mean_interarrival: 0.0,
+            dim_scale: 0.4 + 0.6 * rng.gen_f64(),
+        };
+        let mut pool = random_pool(rng, &gcfg);
+        for (dnn, &at) in pool.dnns.iter_mut().zip(&arrivals) {
+            dnn.arrival_cycles = at;
+        }
+
+        let cfg = SchedulerConfig::default();
+        let dyn_m = DynamicScheduler::new(cfg.clone()).run(&pool);
+        let seq_m = SequentialBaseline::new(cfg).run(&pool);
+        prop::ensure(
+            dyn_m.makespan as f64 <= 1.25 * seq_m.makespan as f64,
+            &format!("makespan: dynamic {} > 1.25x sequential {}", dyn_m.makespan, seq_m.makespan),
+        )?;
+        prop::ensure(
+            report::mean_completion(&dyn_m) <= 1.25 * report::mean_completion(&seq_m),
+            &format!(
+                "mean completion: dynamic {:.0} > 1.25x sequential {:.0}",
+                report::mean_completion(&dyn_m),
+                report::mean_completion(&seq_m)
+            ),
+        )?;
+        // Every DNN still respects its trace arrival.
+        for d in &dyn_m.dispatches {
+            prop::ensure(
+                d.t_start >= pool.dnns[d.dnn].arrival_cycles,
+                "dispatch before trace arrival",
             )?;
         }
         Ok(())
