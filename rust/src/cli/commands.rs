@@ -2,7 +2,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::args::ParsedArgs;
 use crate::config::{ArrivalKind, RunConfig};
@@ -87,11 +87,8 @@ fn cmd_run(args: &ParsedArgs) -> Result<()> {
     let pool = resolve_pool(spec)?;
     let mut cfg = load_config(args)?;
     if let Some(p) = args.opt("policy") {
-        cfg.scheduler.alloc_policy = match p {
-            "widest" => AllocPolicy::WidestToHeaviest,
-            "equal" => AllocPolicy::EqualShare,
-            _ => bail!("--policy must be widest|equal"),
-        };
+        cfg.scheduler.alloc_policy =
+            p.parse::<AllocPolicy>().map_err(|e| anyhow!("--policy: {e}"))?;
     }
     let model = cfg.energy_model();
     let g = report::run_group(&pool, &cfg.scheduler);
@@ -159,12 +156,17 @@ fn cmd_run(args: &ParsedArgs) -> Result<()> {
     Ok(())
 }
 
-/// Parse a comma-separated list with a per-item parser.
-fn parse_list<T>(raw: &str, what: &str, parse: impl Fn(&str) -> Option<T>) -> Result<Vec<T>> {
+/// Parse a comma-separated list via each item's [`std::str::FromStr`]
+/// (tagged enums like [`AllocPolicy`]/[`FeedModel`] report the valid
+/// variants in their error).
+fn parse_list<T: std::str::FromStr>(raw: &str, what: &str) -> Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
     let mut out = Vec::new();
     for item in raw.split(',') {
         let item = item.trim();
-        out.push(parse(item).with_context(|| format!("bad {what} value {item:?}"))?);
+        out.push(item.parse::<T>().map_err(|e| anyhow!("bad {what} value {item:?}: {e}"))?);
     }
     if out.is_empty() {
         bail!("--{what} must list at least one value");
@@ -201,19 +203,25 @@ fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
         }
     }
     if let Some(v) = args.opt("mixes") {
-        grid.mixes = parse_list(v, "mixes", |s| Some(s.to_string()))?;
+        grid.mixes = parse_list::<String>(v, "mixes")?;
     }
     if let Some(v) = args.opt("rates") {
-        grid.rates = parse_list(v, "rates", |s| s.parse::<f64>().ok().filter(|r| *r >= 0.0))?;
+        grid.rates = parse_list::<f64>(v, "rates")?;
+        if grid.rates.iter().any(|r| !r.is_finite() || *r < 0.0) {
+            bail!("--rates values must be finite and >= 0, got {:?}", grid.rates);
+        }
     }
     if let Some(v) = args.opt("policies") {
-        grid.policies = parse_list(v, "policies", AllocPolicy::parse)?;
+        grid.policies = parse_list::<AllocPolicy>(v, "policies")?;
     }
     if let Some(v) = args.opt("feeds") {
-        grid.feeds = parse_list(v, "feeds", FeedModel::parse)?;
+        grid.feeds = parse_list::<FeedModel>(v, "feeds")?;
     }
     if let Some(v) = args.opt("geoms") {
-        grid.geoms = parse_list(v, "geoms", |s| s.parse::<u64>().ok().filter(|c| *c >= 8))?;
+        grid.geoms = parse_list::<u64>(v, "geoms")?;
+        if grid.geoms.iter().any(|c| *c < 8) {
+            bail!("--geoms values must be >= 8, got {:?}", grid.geoms);
+        }
     }
     grid.requests = args.opt_u64("requests", grid.requests as u64)?.max(1) as usize;
     grid.seed = args.opt_u64("seed", grid.seed)?;

@@ -39,6 +39,7 @@ use anyhow::{bail, Context, Result};
 
 use super::toml::TomlDoc;
 use crate::coordinator::scheduler::{AllocPolicy, FeedModel, SchedulerConfig};
+use crate::util::UnknownTag;
 use crate::energy::components::{EnergyModel, Precision};
 use crate::sim::dataflow::ArrayGeometry;
 use crate::sim::dram::DramConfig;
@@ -55,6 +56,34 @@ pub enum ArrivalKind {
     Batch,
     Poisson,
     Bursty,
+}
+
+impl ArrivalKind {
+    /// Every variant, in tag order.
+    pub const ALL: [ArrivalKind; 3] = [ArrivalKind::Batch, ArrivalKind::Poisson, ArrivalKind::Bursty];
+    /// The tags of [`ArrivalKind::ALL`], in the same order.
+    pub const TAGS: [&'static str; 3] = ["batch", "poisson", "bursty"];
+
+    /// Stable config name (round-trips through [`std::str::FromStr`]).
+    pub fn tag(self) -> &'static str {
+        match self {
+            ArrivalKind::Batch => Self::TAGS[0],
+            ArrivalKind::Poisson => Self::TAGS[1],
+            ArrivalKind::Bursty => Self::TAGS[2],
+        }
+    }
+}
+
+impl std::str::FromStr for ArrivalKind {
+    type Err = UnknownTag;
+
+    fn from_str(s: &str) -> Result<ArrivalKind, UnknownTag> {
+        ArrivalKind::ALL.into_iter().find(|k| k.tag() == s).ok_or_else(|| UnknownTag {
+            what: "arrival kind",
+            got: s.to_string(),
+            valid: &ArrivalKind::TAGS,
+        })
+    }
 }
 
 /// `[scenario]` — arrival + QoS defaults for the scenario engine and
@@ -174,13 +203,12 @@ impl RunConfig {
         }
 
         if let Some(p) = doc.get("scheduler", "policy").and_then(|v| v.as_str()) {
-            cfg.scheduler.alloc_policy = AllocPolicy::parse(p)
-                .with_context(|| format!("unknown scheduler.policy {p:?} (widest|equal)"))?;
+            cfg.scheduler.alloc_policy =
+                p.parse::<AllocPolicy>().context("in [scheduler] policy")?;
         }
         if let Some(f) = doc.get("scheduler", "feed_model").and_then(|v| v.as_str()) {
-            cfg.scheduler.feed_model = FeedModel::parse(f).with_context(|| {
-                format!("unknown scheduler.feed_model {f:?} (independent|interleaved)")
-            })?;
+            cfg.scheduler.feed_model =
+                f.parse::<FeedModel>().context("in [scheduler] feed_model")?;
         }
         if let Some(w) = u64_of("scheduler", "min_width") {
             if w == 0 || w > cols {
@@ -211,12 +239,7 @@ impl RunConfig {
 
         let sc = &mut cfg.scenario;
         if let Some(a) = doc.get("scenario", "arrival").and_then(|v| v.as_str()) {
-            sc.arrival = match a {
-                "batch" => ArrivalKind::Batch,
-                "poisson" => ArrivalKind::Poisson,
-                "bursty" => ArrivalKind::Bursty,
-                _ => bail!("unknown scenario.arrival {a:?} (batch|poisson|bursty)"),
-            };
+            sc.arrival = a.parse::<ArrivalKind>().context("in [scenario] arrival")?;
         }
         if let Some(m) = f64_of("scenario", "mean_interarrival") {
             if m <= 0.0 {
@@ -369,6 +392,16 @@ mod tests {
             poisson.scenario.arrival_process(),
             ArrivalProcess::Poisson { mean_interarrival: 50_000.0 }
         );
+    }
+
+    #[test]
+    fn arrival_kind_tags_round_trip() {
+        for k in ArrivalKind::ALL {
+            assert_eq!(k.tag().parse::<ArrivalKind>().unwrap(), k);
+        }
+        let e = "fractal".parse::<ArrivalKind>().unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("batch") && msg.contains("poisson") && msg.contains("bursty"), "{msg}");
     }
 
     #[test]

@@ -1,17 +1,21 @@
 //! The single-tenant sequential baseline (paper §4.3, "baseline systolic
-//! array with no partitioning").
+//! array with no partitioning") as a [`Scheduler`] on the shared engine.
 //!
 //! DNNs execute one at a time in arrival order; every layer gets the whole
 //! array.  This is what the paper's Fig. 9(a)(b)(e)(f) bars labelled
-//! "baseline" measure.
+//! "baseline" measure.  The policy is the simplest possible `plan`: if the
+//! array is idle, the next layer of the earliest-arriving unfinished DNN
+//! takes all columns; otherwise wait.
 
-use super::metrics::{DispatchRecord, RunMetrics};
-use super::scheduler::SchedulerConfig;
+use super::metrics::RunMetrics;
 use crate::sim::dataflow::baseline_layer_timing;
 use crate::sim::partitioned::PartitionSlice;
-use crate::workloads::dnng::WorkloadPool;
+use crate::sim_core::{Allocation, Engine, LayerExec, Scheduler, SystemState};
+use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 
-/// Sequential single-tenant executor.
+use super::scheduler::SchedulerConfig;
+
+/// Sequential single-tenant policy.
 #[derive(Debug, Clone)]
 pub struct SequentialBaseline {
     cfg: SchedulerConfig,
@@ -22,35 +26,69 @@ impl SequentialBaseline {
         SequentialBaseline { cfg }
     }
 
-    /// Run the pool: DNNs in arrival order, layers in chain order, full
-    /// array each.
+    /// Run the pool on the shared engine: DNNs in arrival order, layers
+    /// in chain order, full array each.
     pub fn run(&self, pool: &WorkloadPool) -> RunMetrics {
-        let cfg = &self.cfg;
-        let mut metrics = RunMetrics::default();
-        let mut now = 0u64;
-        for dnn_id in pool.by_arrival() {
-            let dnn = &pool.dnns[dnn_id];
-            now = now.max(dnn.arrival_cycles);
-            for (li, layer) in dnn.layers.iter().enumerate() {
-                let t = baseline_layer_timing(cfg.geom, layer.shape.gemm(), &cfg.buffers);
-                let cycles = match &cfg.dram {
-                    Some(d) => d.bound_cycles(t.cycles, &t.activity),
-                    None => t.cycles,
-                };
-                metrics.record_dispatch(DispatchRecord {
-                    dnn: dnn_id,
-                    dnn_name: dnn.name.clone(),
-                    layer: li,
-                    layer_name: layer.name.clone(),
-                    slice: PartitionSlice::full(cfg.geom),
-                    t_start: now,
-                    t_end: now + cycles,
-                    activity: t.activity,
-                });
-                now += cycles;
+        Engine::execute(pool, self.cfg.geom.cols, &mut self.clone())
+    }
+}
+
+impl Scheduler for SequentialBaseline {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn plan(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
+        // Strictly one layer at a time: wait for the array to drain.
+        if !s.partitions.fully_free() {
+            return Vec::new();
+        }
+        let ready = s.queue.ready_at(s.now);
+        if ready.is_empty() {
+            return Vec::new();
+        }
+        // The earliest-arriving unfinished DNN holds the array; later
+        // arrivals wait even if they are ready first (no work conservation
+        // across the arrival order — exactly the paper's baseline).
+        // Min by (arrival, index) == the pool's stable `by_arrival` order,
+        // without re-sorting at every scheduling event.
+        let mut current: Option<(u64, usize)> = None;
+        for (di, d) in s.pool.dnns.iter().enumerate() {
+            if s.queue.dnn_done(di) {
+                continue;
+            }
+            let key = (d.arrival_cycles, di);
+            if current.map(|c| key < c).unwrap_or(true) {
+                current = Some(key);
             }
         }
-        metrics
+        let Some((_, di)) = current else { return Vec::new() };
+        match ready.iter().filter(|r| r.dnn == di).map(|r| r.layer).min() {
+            Some(layer) => vec![Allocation {
+                dnn: di,
+                layer,
+                slice: PartitionSlice::new(0, self.cfg.geom.cols),
+            }],
+            // Current DNN not arrived yet: idle until its arrival.
+            None => Vec::new(),
+        }
+    }
+
+    fn exec(
+        &self,
+        s: &SystemState<'_>,
+        dnn: DnnId,
+        layer: LayerId,
+        _slice: PartitionSlice,
+        _coresident: u64,
+    ) -> LayerExec {
+        let gemm = s.pool.dnns[dnn].layers[layer].shape.gemm();
+        let t = baseline_layer_timing(self.cfg.geom, gemm, &self.cfg.buffers);
+        let cycles = match &self.cfg.dram {
+            Some(d) => d.bound_cycles(t.cycles, &t.activity),
+            None => t.cycles,
+        };
+        LayerExec { cycles, activity: t.activity }
     }
 }
 

@@ -1,13 +1,21 @@
 //! The paper's contribution: the dynamic resource-partitioning coordinator
-//! (Algorithm 1, Fig. 5).
+//! (Algorithm 1, Fig. 5), expressed as policies over the shared
+//! discrete-event engine ([`crate::sim_core`]).
+//!
+//! Every executor here implements the
+//! [`Scheduler`](crate::sim_core::Scheduler) trait — decision-point hooks
+//! plus `plan`/`exec` — and runs on [`Engine`](crate::sim_core::Engine);
+//! the `run(&pool) -> RunMetrics` methods are thin wrappers over
+//! `Engine::execute`.  See `docs/architecture.md`.
 //!
 //! - [`queue`] — the DNNG task queue: arrivals, per-DNN layer progress,
 //!   ready-layer extraction (DAG predecessors honored).
 //! - [`partition`] — the partition manager: vertical slices of the array,
-//!   allocation, freeing, and adjacent-free merging.
-//! - [`scheduler`] — the event-driven dynamic partitioning scheduler: the
-//!   `Partition_Calculation` / `Task_Assignment` / partitioned-WS loop of
-//!   the paper, producing a full dispatch log.
+//!   allocation (widest-free or at an exact position), freeing, and
+//!   adjacent-free merging.
+//! - [`scheduler`] — the dynamic partitioning policy: the
+//!   `Partition_Calculation` / `Task_Assignment` / partitioned-WS
+//!   decisions of the paper.
 //! - [`baseline`] — the single-tenant sequential baseline the paper
 //!   compares against (whole array per layer, DNNs back-to-back).
 //! - [`static_part`] — ablation: fixed equal partitions, no merging.
@@ -15,7 +23,9 @@
 //!   allocating whole DNNs to separate chips (TPU-pod style).
 //! - [`metrics`] — run metrics: makespan, per-DNN completion, utilization,
 //!   per-tenant latency percentiles and deadline misses, the partition-size
-//!   dispatch log behind Fig. 9(c)(d), energy hookup.
+//!   dispatch log behind Fig. 9(c)(d), energy hookup.  [`RunMetrics`]
+//!   implements [`Observer`](crate::sim_core::Observer), so metrics are
+//!   collected identically on every execution path.
 //! - [`scenario`] — the arrival-driven scenario engine: instantiates
 //!   request streams (Poisson / bursty / trace) over the zoo with per-DNN
 //!   QoS deadlines, and scores runs against them (SLA view the paper's
@@ -37,5 +47,5 @@ pub mod static_part;
 
 pub use metrics::{DispatchRecord, RunMetrics, TenantStats};
 pub use partition::PartitionManager;
-pub use scenario::{Scenario, ScenarioSpec};
-pub use scheduler::{DynamicScheduler, SchedulerConfig};
+pub use scenario::{Scenario, ScenarioObserver, ScenarioSpec};
+pub use scheduler::{DynamicScheduler, SchedulerConfig, UnknownTag};

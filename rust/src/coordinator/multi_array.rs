@@ -1,20 +1,28 @@
 //! Multi-array comparator — the §5 related-work alternative: "multi
 //! tenancy is performed by allocating different tenant DNNs to different
-//! TPUs" (whole-chip granularity, no partitioning inside an array).
+//! TPUs" (whole-chip granularity, no partitioning inside an array) — as a
+//! [`Scheduler`] on the shared engine.
 //!
 //! Splits the same PE budget into `n` independent arrays; DNNs are
-//! assigned to the least-loaded array on arrival (by remaining MACs) and
-//! run there to completion, each array executing its queue sequentially
-//! at full (local) width.  The `ablations` bench compares this against
+//! assigned to the least-loaded array on arrival (by assigned MACs,
+//! through the [`Scheduler::on_arrival`] hook) and run there to
+//! completion, each array executing its queue sequentially at full
+//! (local) width.  Chips are modelled as fixed column ranges of the
+//! pooled silicon, so the one engine and the one metrics pipeline serve
+//! this comparator too.  The `ablations` bench compares this against
 //! partitioning one big array — the paper's actual proposal — at equal
 //! total PE count, isolating what intra-array partitioning buys over
 //! chip-granularity scale-out.
 
-use super::metrics::{DispatchRecord, RunMetrics};
+use std::collections::BTreeMap;
+
+use super::metrics::RunMetrics;
 use super::scheduler::SchedulerConfig;
+use crate::sim::buffers::BufferConfig;
 use crate::sim::dataflow::{baseline_layer_timing, ArrayGeometry};
 use crate::sim::partitioned::PartitionSlice;
-use crate::workloads::dnng::WorkloadPool;
+use crate::sim_core::{Allocation, Engine, LayerExec, Scheduler, SystemState};
+use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 
 /// A bank of `n` independent arrays (whole-DNN granularity).
 #[derive(Debug, Clone)]
@@ -36,44 +44,103 @@ impl MultiArrayBank {
 
     /// Run the pool: least-remaining-work assignment, per-array FIFO.
     pub fn run(&self, pool: &WorkloadPool) -> RunMetrics {
-        // Buffer share scales with the chip fraction.
-        let bufs = self.cfg.buffers.share(self.geom_each.cols, self.cfg.geom.cols);
-        let mut metrics = RunMetrics::default();
-        // (next-free-cycle, accumulated load) per array.
-        let mut free_at = vec![0u64; self.num_arrays];
-        let mut load = vec![0u64; self.num_arrays];
+        Engine::execute(pool, self.cfg.geom.cols, &mut MultiArrayPolicy::new(self))
+    }
+}
 
-        for dnn_id in pool.by_arrival() {
-            let dnn = &pool.dnns[dnn_id];
-            // Least-loaded array (by assigned MACs, then index).
-            let a = (0..self.num_arrays).min_by_key(|&i| (load[i], i)).unwrap();
-            load[a] += dnn.total_macs();
-            let mut now = free_at[a].max(dnn.arrival_cycles);
-            for (li, layer) in dnn.layers.iter().enumerate() {
-                let t = baseline_layer_timing(self.geom_each, layer.shape.gemm(), &bufs);
-                let cycles = match &self.cfg.dram {
-                    Some(d) => d.bound_cycles(t.cycles, &t.activity),
-                    None => t.cycles,
-                };
-                metrics.record_dispatch(DispatchRecord {
-                    dnn: dnn_id,
-                    dnn_name: dnn.name.clone(),
-                    layer: li,
-                    layer_name: layer.name.clone(),
-                    // Record the chip as a column range of the pooled silicon.
-                    slice: PartitionSlice::new(
-                        a as u64 * self.geom_each.cols,
-                        self.geom_each.cols,
-                    ),
-                    t_start: now,
-                    t_end: now + cycles,
-                    activity: t.activity,
-                });
-                now += cycles;
-            }
-            free_at[a] = now;
+/// The per-run policy state of a [`MultiArrayBank`] (assignment table and
+/// per-chip FIFOs are rebuilt fresh for every run).
+#[derive(Debug, Clone)]
+pub struct MultiArrayPolicy {
+    geom_each: ArrayGeometry,
+    num_arrays: usize,
+    /// Buffer share scales with the chip fraction.
+    bufs_each: BufferConfig,
+    dram: Option<crate::sim::dram::DramConfig>,
+    /// DNN → chip, filled on arrival.
+    assignment: BTreeMap<DnnId, usize>,
+    /// Per-chip queues in assignment (= arrival) order.
+    fifo: Vec<Vec<DnnId>>,
+    /// Accumulated assigned MACs per chip.
+    load: Vec<u64>,
+}
+
+impl MultiArrayPolicy {
+    pub fn new(bank: &MultiArrayBank) -> MultiArrayPolicy {
+        MultiArrayPolicy {
+            geom_each: bank.geom_each,
+            num_arrays: bank.num_arrays,
+            bufs_each: bank.cfg.buffers.share(bank.geom_each.cols, bank.cfg.geom.cols),
+            dram: bank.cfg.dram.clone(),
+            assignment: BTreeMap::new(),
+            fifo: vec![Vec::new(); bank.num_arrays],
+            load: vec![0; bank.num_arrays],
         }
-        metrics
+    }
+
+    /// The column range chip `a` occupies in the pooled silicon.
+    fn chip_slice(&self, a: usize) -> PartitionSlice {
+        PartitionSlice::new(a as u64 * self.geom_each.cols, self.geom_each.cols)
+    }
+}
+
+impl Scheduler for MultiArrayPolicy {
+    fn name(&self) -> &'static str {
+        "multi-array"
+    }
+
+    /// Least-loaded assignment (by assigned MACs, then chip index) at the
+    /// moment of arrival — arrival events are processed in `(cycle, dnn)`
+    /// order, which is exactly the pool's `by_arrival` order.
+    fn on_arrival(&mut self, s: &SystemState<'_>, dnn: DnnId) {
+        if self.assignment.contains_key(&dnn) {
+            return;
+        }
+        let a = (0..self.num_arrays).min_by_key(|&i| (self.load[i], i)).expect(">=1 array");
+        self.load[a] += s.pool.dnns[dnn].total_macs();
+        self.assignment.insert(dnn, a);
+        self.fifo[a].push(dnn);
+    }
+
+    fn plan(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
+        let ready = s.queue.ready_at(s.now);
+        if ready.is_empty() {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for a in 0..self.num_arrays {
+            let chip = self.chip_slice(a);
+            if !s.partitions.is_free(chip) {
+                continue; // this chip is mid-layer
+            }
+            // Strict FIFO: the first unfinished DNN owns the chip; later
+            // assignees wait for it even if they are ready.
+            let Some(&dnn) = self.fifo[a].iter().find(|&&d| !s.queue.dnn_done(d)) else {
+                continue;
+            };
+            let Some(layer) = ready.iter().filter(|r| r.dnn == dnn).map(|r| r.layer).min() else {
+                continue;
+            };
+            out.push(Allocation { dnn, layer, slice: chip });
+        }
+        out
+    }
+
+    fn exec(
+        &self,
+        s: &SystemState<'_>,
+        dnn: DnnId,
+        layer: LayerId,
+        _slice: PartitionSlice,
+        _coresident: u64,
+    ) -> LayerExec {
+        let gemm = s.pool.dnns[dnn].layers[layer].shape.gemm();
+        let t = baseline_layer_timing(self.geom_each, gemm, &self.bufs_each);
+        let cycles = match &self.dram {
+            Some(d) => d.bound_cycles(t.cycles, &t.activity),
+            None => t.cycles,
+        };
+        LayerExec { cycles, activity: t.activity }
     }
 }
 

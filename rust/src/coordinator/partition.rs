@@ -98,6 +98,42 @@ impl PartitionManager {
         Some((id, alloc))
     }
 
+    /// Allocate the exact slice `want` (which must lie inside one free
+    /// region), splitting off free remainders on either side.  This is
+    /// how the engine applies a [`Scheduler`](crate::sim_core::Scheduler)
+    /// plan: the policy proposes positions (possibly rehearsed on a
+    /// clone), the manager enforces that they are actually free.
+    pub fn allocate_at(&mut self, want: PartitionSlice) -> Option<(AllocId, PartitionSlice)> {
+        let idx = self.regions.iter().position(|r| {
+            r.owner.is_none() && r.slice.col0 <= want.col0 && want.end() <= r.slice.end()
+        })?;
+        let id = self.next_id;
+        self.next_id += 1;
+        let old = self.regions[idx].slice;
+        self.regions.remove(idx);
+        let mut at = idx;
+        if want.col0 > old.col0 {
+            let left = PartitionSlice::new(old.col0, want.col0 - old.col0);
+            self.regions.insert(at, Region { slice: left, owner: None });
+            at += 1;
+        }
+        self.regions.insert(at, Region { slice: want, owner: Some(id) });
+        at += 1;
+        if want.end() < old.end() {
+            let right = PartitionSlice::new(want.end(), old.end() - want.end());
+            self.regions.insert(at, Region { slice: right, owner: None });
+        }
+        self.debug_check();
+        Some((id, want))
+    }
+
+    /// True when `slice` lies entirely inside one free region.
+    pub fn is_free(&self, slice: PartitionSlice) -> bool {
+        self.regions.iter().any(|r| {
+            r.owner.is_none() && r.slice.col0 <= slice.col0 && slice.end() <= r.slice.end()
+        })
+    }
+
     /// Free an allocation, merging with adjacent free slices (paper:
     /// "these partitions may be merged if they are adjacent").
     pub fn free(&mut self, id: AllocId) -> PartitionSlice {
@@ -216,6 +252,51 @@ mod tests {
         let (a, _) = pm.allocate(16).unwrap();
         pm.free(a);
         pm.free(a);
+    }
+
+    #[test]
+    fn allocate_at_splits_both_sides() {
+        let mut pm = PartitionManager::new(128);
+        assert!(pm.is_free(PartitionSlice::new(32, 64)));
+        let (a, s) = pm.allocate_at(PartitionSlice::new(32, 64)).unwrap();
+        assert_eq!(s, PartitionSlice::new(32, 64));
+        assert_eq!(pm.free_widths(), vec![32, 32]);
+        assert!(!pm.is_free(PartitionSlice::new(32, 64)));
+        assert!(!pm.is_free(PartitionSlice::new(0, 64)), "straddles the allocation");
+        assert!(pm.is_free(PartitionSlice::new(0, 32)));
+        assert!(pm.is_free(PartitionSlice::new(96, 32)));
+        // Overlapping request fails without disturbing state.
+        assert!(pm.allocate_at(PartitionSlice::new(40, 8)).is_none());
+        pm.free(a);
+        assert!(pm.fully_free());
+    }
+
+    #[test]
+    fn allocate_at_exact_region_and_edges() {
+        let mut pm = PartitionManager::new(64);
+        let (_a, _) = pm.allocate_at(PartitionSlice::new(0, 16)).unwrap();
+        let (_b, _) = pm.allocate_at(PartitionSlice::new(48, 16)).unwrap();
+        // Exactly the remaining middle region.
+        let (_c, s) = pm.allocate_at(PartitionSlice::new(16, 32)).unwrap();
+        assert_eq!(s, PartitionSlice::new(16, 32));
+        assert_eq!(pm.free_cols(), 0);
+        assert!(pm.allocate_at(PartitionSlice::new(0, 1)).is_none());
+    }
+
+    #[test]
+    fn allocate_and_allocate_at_agree_on_left_carve() {
+        // The dynamic policy rehearses with `allocate` on a clone and the
+        // engine replays with `allocate_at`; both must produce the same
+        // region layout.
+        let mut a = PartitionManager::new(128);
+        let mut b = PartitionManager::new(128);
+        for w in [32u64, 64, 16] {
+            let (_, sa) = a.allocate(w).unwrap();
+            let (_, sb) = b.allocate_at(sa).unwrap();
+            assert_eq!(sa, sb);
+        }
+        assert_eq!(a.free_widths(), b.free_widths());
+        assert_eq!(a.widest_free(), b.widest_free());
     }
 
     #[test]

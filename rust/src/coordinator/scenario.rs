@@ -23,6 +23,10 @@
 //!   typical soft-real-time budget.  Relative deadlines make one knob
 //!   meaningful across DNNs whose runtimes span three orders of magnitude
 //!   (NCF vs ResNet-50).
+//! - [`Scenario::run`] — execute the scenario on the shared
+//!   discrete-event engine ([`crate::sim_core::Engine`]) under **any**
+//!   [`Scheduler`] policy, with each request's deadline wired in as an
+//!   engine [`Deadline`](crate::sim_core::Event::Deadline) event;
 //! - [`Scenario::analyze`] — score any scheduler's [`RunMetrics`] against
 //!   the scenario: per-tenant latency percentiles (p50/p95/p99) and
 //!   deadline-miss rates ([`TenantStats`]).
@@ -32,11 +36,12 @@
 
 use std::collections::BTreeMap;
 
-use super::metrics::{RunMetrics, TenantStats};
+use super::metrics::{DispatchRecord, RunMetrics, TenantStats};
 use super::scheduler::SchedulerConfig;
 use crate::sim::dataflow::baseline_layer_timing;
+use crate::sim_core::{Engine, Observer, Scheduler};
 use crate::util::rng::Rng;
-use crate::workloads::dnng::{Dnn, WorkloadPool};
+use crate::workloads::dnng::{Dnn, DnnId, WorkloadPool};
 use crate::workloads::generator::ArrivalProcess;
 
 /// One request of a generated scenario: a DNN instance with its arrival
@@ -108,6 +113,30 @@ impl ScenarioOutcome {
     }
 }
 
+/// Engine observer for scenario runs: collects the ordinary
+/// [`RunMetrics`] plus the *live* deadline verdicts the engine's
+/// [`Deadline`](crate::sim_core::Event::Deadline) events report — the
+/// online view a serving controller would act on, cross-checked against
+/// the post-hoc [`Scenario::analyze`] accounting in the tests.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioObserver {
+    pub metrics: RunMetrics,
+    /// `(dnn index, deadline cycle, met)` in event order.
+    pub deadline_events: Vec<(DnnId, u64, bool)>,
+}
+
+impl Observer for ScenarioObserver {
+    fn on_layer_complete(&mut self, rec: &DispatchRecord) {
+        // Delegate to the canonical RunMetrics observer impl so scenario
+        // metrics can never drift from the other execution paths.
+        Observer::on_layer_complete(&mut self.metrics, rec);
+    }
+
+    fn on_deadline(&mut self, dnn: DnnId, t: u64, met: bool) {
+        self.deadline_events.push((dnn, t, met));
+    }
+}
+
 impl Scenario {
     /// Instantiate a scenario from DNN templates.
     ///
@@ -155,6 +184,36 @@ impl Scenario {
             });
         }
         Scenario { name: spec.name.clone(), pool: WorkloadPool::new(&spec.name, dnns), requests }
+    }
+
+    /// The `(dnn index, absolute deadline)` pairs to attach to an engine
+    /// run (request `i` is pool DNN `i` by construction).
+    pub fn deadlines(&self) -> Vec<(DnnId, u64)> {
+        self.requests
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.deadline.map(|d| (i, d)))
+            .collect()
+    }
+
+    /// Execute this scenario on the shared engine under `sched` (any
+    /// [`Scheduler`] policy), with request deadlines wired in as engine
+    /// events, and score the result.  `cols` is the array width the
+    /// policy expects (`cfg.geom.cols`).
+    ///
+    /// Returns the full [`ScenarioObserver`] — `observer.metrics` is the
+    /// ordinary [`RunMetrics`], `observer.deadline_events` the live
+    /// verdicts — plus the post-hoc [`ScenarioOutcome`].
+    pub fn run(&self, sched: &mut dyn Scheduler, cols: u64) -> (ScenarioObserver, ScenarioOutcome) {
+        let mut obs = ScenarioObserver::default();
+        Engine::new(&self.pool, cols).with_deadlines(self.deadlines()).run(sched, &mut obs);
+        let outcome = self.analyze(&obs.metrics);
+        debug_assert_eq!(
+            obs.deadline_events.iter().filter(|&&(_, _, met)| !met).count(),
+            outcome.overall.misses,
+            "live deadline verdicts must agree with the post-hoc accounting"
+        );
+        (obs, outcome)
     }
 
     /// Score a finished run (any scheduler that produced `RunMetrics` over
@@ -283,6 +342,50 @@ mod tests {
             let outcome = sc.analyze(&m);
             assert_eq!(outcome.overall.misses, 0, "lone request missed its deadline");
         }
+    }
+
+    #[test]
+    fn run_matches_manual_engine_drive() {
+        // Scenario::run == running the pool yourself + analyze: one
+        // engine, one metrics pipeline, no scenario-private time loop.
+        let spec = ScenarioSpec {
+            requests: 6,
+            arrival: ArrivalProcess::Poisson { mean_interarrival: 8_000.0 },
+            qos_slack: Some(2.0),
+            ..Default::default()
+        };
+        let cfg = SchedulerConfig::default();
+        let sc = Scenario::generate(&templates(), &spec, &cfg);
+        let (obs, outcome) = sc.run(&mut DynamicScheduler::new(cfg.clone()), cfg.geom.cols);
+        let manual = DynamicScheduler::new(cfg.clone()).run(&sc.pool);
+        assert_eq!(obs.metrics.makespan, manual.makespan);
+        assert_eq!(obs.metrics.dispatches, manual.dispatches);
+        assert_eq!(outcome, sc.analyze(&manual));
+        // The one-call path surfaces the live verdicts: one per deadline.
+        assert_eq!(obs.deadline_events.len(), outcome.overall.deadlines);
+    }
+
+    #[test]
+    fn live_deadline_events_agree_with_analyze() {
+        // Tight slack under contention forces some misses; the engine's
+        // live Deadline events must report exactly the analyze() verdicts.
+        let spec = ScenarioSpec {
+            requests: 8,
+            arrival: ArrivalProcess::Batch,
+            qos_slack: Some(1.05),
+            ..Default::default()
+        };
+        let cfg = SchedulerConfig::default();
+        let sc = Scenario::generate(&templates(), &spec, &cfg);
+        let mut obs = ScenarioObserver::default();
+        crate::sim_core::Engine::new(&sc.pool, cfg.geom.cols)
+            .with_deadlines(sc.deadlines())
+            .run(&mut SequentialBaseline::new(cfg.clone()), &mut obs);
+        let outcome = sc.analyze(&obs.metrics);
+        assert_eq!(obs.deadline_events.len(), outcome.overall.deadlines);
+        let live_misses = obs.deadline_events.iter().filter(|&&(_, _, met)| !met).count();
+        assert_eq!(live_misses, outcome.overall.misses);
+        assert!(live_misses > 0, "a batch of 8 at slack 1.05 must miss sequentially");
     }
 
     #[test]

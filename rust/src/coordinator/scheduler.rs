@@ -1,6 +1,6 @@
-//! The dynamic resource-partitioning scheduler — Algorithm 1 (Fig. 5).
-//!
-//! Event-driven simulation over layer completions and DNN arrivals:
+//! The dynamic resource-partitioning policy — Algorithm 1 (Fig. 5) — as a
+//! [`Scheduler`] plugged into the shared event engine
+//! ([`crate::sim_core::Engine`]):
 //!
 //! 1. The first ready layer on an idle array takes **all** PEs (Line 6).
 //! 2. At every scheduling point (a completion or an arrival), the ready
@@ -14,20 +14,27 @@
 //! 4. Completed layers free their slice; adjacent free slices merge
 //!    (§3.3), so a late straggler can reclaim the whole array.
 //!
+//! [`DynamicScheduler::plan`](crate::sim_core::Scheduler::plan) rehearses
+//! the carving on a clone of the live
+//! [`PartitionManager`](super::partition::PartitionManager) and returns
+//! explicit column positions; the engine replays them with
+//! `allocate_at`, so the placement is exactly what the rehearsal saw.
 //! Layer execution time comes from the partitioned-WS analytic model
 //! ([`crate::sim::partitioned`]), optionally DRAM-bandwidth-bounded.
+//! `rust/tests/engine_parity.rs` pins this port bit-for-bit against the
+//! pre-refactor fused batch loop.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::str::FromStr;
 
-use super::metrics::{DispatchRecord, RunMetrics};
-use super::partition::{AllocId, PartitionManager};
-use super::queue::TaskQueue;
+use super::metrics::RunMetrics;
 use crate::sim::buffers::BufferConfig;
 use crate::sim::dataflow::ArrayGeometry;
 use crate::sim::dram::DramConfig;
 use crate::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
+use crate::sim_core::{Allocation, Engine, LayerExec, Scheduler, SystemState};
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
+
+pub use crate::util::UnknownTag;
 
 /// Feed-bus model selector for the scheduler (the per-dispatch slot/count
 /// is filled in from live occupancy).
@@ -42,21 +49,29 @@ pub enum FeedModel {
 }
 
 impl FeedModel {
-    /// Stable config/CLI/report name.
+    /// Every variant, in tag order.
+    pub const ALL: [FeedModel; 2] = [FeedModel::Independent, FeedModel::Interleaved];
+    /// The tags of [`FeedModel::ALL`], in the same order.
+    pub const TAGS: [&'static str; 2] = ["independent", "interleaved"];
+
+    /// Stable config/CLI/report name (round-trips through [`FromStr`]).
     pub fn tag(self) -> &'static str {
         match self {
-            FeedModel::Independent => "independent",
-            FeedModel::Interleaved => "interleaved",
+            FeedModel::Independent => Self::TAGS[0],
+            FeedModel::Interleaved => Self::TAGS[1],
         }
     }
+}
 
-    /// Inverse of [`FeedModel::tag`].
-    pub fn parse(s: &str) -> Option<FeedModel> {
-        match s {
-            "independent" => Some(FeedModel::Independent),
-            "interleaved" => Some(FeedModel::Interleaved),
-            _ => None,
-        }
+impl FromStr for FeedModel {
+    type Err = UnknownTag;
+
+    fn from_str(s: &str) -> Result<FeedModel, UnknownTag> {
+        FeedModel::ALL.into_iter().find(|m| m.tag() == s).ok_or_else(|| UnknownTag {
+            what: "feed model",
+            got: s.to_string(),
+            valid: &FeedModel::TAGS,
+        })
     }
 }
 
@@ -76,21 +91,29 @@ pub enum AllocPolicy {
 }
 
 impl AllocPolicy {
-    /// Stable config/CLI/report name.
+    /// Every variant, in tag order.
+    pub const ALL: [AllocPolicy; 2] = [AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare];
+    /// The tags of [`AllocPolicy::ALL`], in the same order.
+    pub const TAGS: [&'static str; 2] = ["widest", "equal"];
+
+    /// Stable config/CLI/report name (round-trips through [`FromStr`]).
     pub fn tag(self) -> &'static str {
         match self {
-            AllocPolicy::WidestToHeaviest => "widest",
-            AllocPolicy::EqualShare => "equal",
+            AllocPolicy::WidestToHeaviest => Self::TAGS[0],
+            AllocPolicy::EqualShare => Self::TAGS[1],
         }
     }
+}
 
-    /// Inverse of [`AllocPolicy::tag`].
-    pub fn parse(s: &str) -> Option<AllocPolicy> {
-        match s {
-            "widest" => Some(AllocPolicy::WidestToHeaviest),
-            "equal" => Some(AllocPolicy::EqualShare),
-            _ => None,
-        }
+impl FromStr for AllocPolicy {
+    type Err = UnknownTag;
+
+    fn from_str(s: &str) -> Result<AllocPolicy, UnknownTag> {
+        AllocPolicy::ALL.into_iter().find(|p| p.tag() == s).ok_or_else(|| UnknownTag {
+            what: "allocation policy",
+            got: s.to_string(),
+            valid: &AllocPolicy::TAGS,
+        })
     }
 }
 
@@ -139,27 +162,8 @@ fn ceil_pow2(x: u64) -> u64 {
     x.next_power_of_two()
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-struct Completion {
-    t_end: u64,
-    dnn: DnnId,
-    layer: LayerId,
-    alloc: AllocId,
-    t_start: u64,
-}
-
-impl Ord for Completion {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.t_end, self.dnn, self.layer).cmp(&(other.t_end, other.dnn, other.layer))
-    }
-}
-impl PartialOrd for Completion {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-/// The dynamic partitioning scheduler.
+/// The dynamic partitioning policy (stateless between decision points:
+/// every plan is a pure function of the observable [`SystemState`]).
 #[derive(Debug, Clone)]
 pub struct DynamicScheduler {
     cfg: SchedulerConfig,
@@ -175,173 +179,121 @@ impl DynamicScheduler {
         &self.cfg
     }
 
-    /// Run a pool to completion; returns the full metrics.
+    /// Run a pool to completion on the shared engine; returns the full
+    /// metrics.  Equivalent to
+    /// [`Engine::execute`]`(pool, cfg.geom.cols, &mut self.clone())`.
     pub fn run(&self, pool: &WorkloadPool) -> RunMetrics {
-        let cfg = &self.cfg;
-        let mut queue = TaskQueue::new(pool);
-        let mut pm = PartitionManager::new(cfg.geom.cols);
-        let mut metrics = RunMetrics::default();
-        let mut events: BinaryHeap<Reverse<Completion>> = BinaryHeap::new();
-        let mut now = 0u64;
+        Engine::execute(pool, self.cfg.geom.cols, &mut self.clone())
+    }
+}
 
-        loop {
-            // ---- dispatch phase at `now` -------------------------------
-            let ready = queue.ready_at(now);
-            if !ready.is_empty() {
-                // Partition_Calculation (Lines 15-19): divide the array by
-                // the number of available layers (running partitions keep
-                // their slices), on the power-of-two ladder.
-                let n_avail = ready.len() as u64 + pm.allocated_count() as u64;
-                let target = floor_pow2((cfg.geom.cols / n_avail).max(1))
-                    .clamp(cfg.min_width, cfg.geom.cols);
-
-                let mut dispatched_any = false;
-                for r in ready {
-                    // Width demand: a layer gains nothing beyond its GEMM
-                    // column count M (Task_Assignment's "layers with higher
-                    // dimensions to partitions with higher resources").
-                    let m_cols = pool.dnns[r.dnn].layers[r.layer].shape.gemm().m;
-                    let demand =
-                        ceil_pow2(m_cols).clamp(cfg.min_width, cfg.geom.cols);
-
-                    // First layer on a fully idle array: all PEs (Line 6).
-                    if pm.fully_free() && n_avail == 1 {
-                        let (alloc, slice) = pm.allocate(cfg.geom.cols).expect("full array free");
-                        queue.mark_running(r.dnn, r.layer);
-                        let cycles = self.layer_cycles(pool, r.dnn, r.layer, slice, 1);
-                        events.push(Reverse(Completion {
-                            t_end: now + cycles,
-                            dnn: r.dnn,
-                            layer: r.layer,
-                            alloc,
-                            t_start: now,
-                        }));
-                        dispatched_any = true;
-                        continue;
-                    }
-
-                    let widest = pm.widest_free().map(|s| s.width).unwrap_or(0);
-                    if widest < cfg.min_width {
-                        continue; // nothing usable free right now
-                    }
-                    let width = match cfg.alloc_policy {
-                        // Paper-literal Partition_Calculation: take the
-                        // equal share (capped by demand), no waiting.
-                        AllocPolicy::EqualShare => demand.min(target).min(floor_pow2(widest)),
-                        // Demand-aware: the heaviest ready layer takes the
-                        // widest free slice up to its demand.  Patience: a
-                        // layer whose demand cannot be reasonably met WAITS
-                        // for merges instead of exploding its fold count in
-                        // a sliver — unless nothing is running (progress
-                        // guarantee: take the best slice available).
-                        AllocPolicy::WidestToHeaviest => {
-                            let width = demand.min(floor_pow2(widest));
-                            let acceptable =
-                                (demand / cfg.patience_divisor).max(cfg.min_width);
-                            if width >= acceptable {
-                                width
-                            } else if pm.allocated_count() == 0 && !dispatched_any {
-                                floor_pow2(widest)
-                            } else {
-                                continue; // wait for a completion to merge space
-                            }
-                        }
-                    };
-                    let Some((alloc, slice)) = pm.allocate(width) else { continue };
-                    queue.mark_running(r.dnn, r.layer);
-                    dispatched_any = true;
-
-                    let coresident = pm.allocated_count() as u64;
-                    let cycles = self.layer_cycles(pool, r.dnn, r.layer, slice, coresident);
-                    events.push(Reverse(Completion {
-                        t_end: now + cycles,
-                        dnn: r.dnn,
-                        layer: r.layer,
-                        alloc,
-                        t_start: now,
-                    }));
-                }
-            }
-
-            // ---- advance time ------------------------------------------
-            let next_completion = events.peek().map(|Reverse(c)| c.t_end);
-            let next_arrival = queue.next_arrival_after(now);
-            match (next_completion, next_arrival) {
-                (None, None) => break,
-                (None, Some(t_arr)) => {
-                    // Idle until the next DNN arrives.
-                    now = t_arr;
-                }
-                (Some(t_done), t_arr) => {
-                    if let Some(t_arr) = t_arr {
-                        if t_arr < t_done {
-                            now = t_arr;
-                            continue; // dispatch newly arrived work first
-                        }
-                    }
-                    now = t_done;
-                    // Retire every completion at this timestamp.
-                    while let Some(Reverse(c)) = events.peek().copied() {
-                        if c.t_end != now {
-                            break;
-                        }
-                        events.pop();
-                        let slice = pm.slice_of(c.alloc).expect("completion of live alloc");
-                        pm.free(c.alloc);
-                        queue.mark_done(c.dnn, c.layer);
-                        let layer = &pool.dnns[c.dnn].layers[c.layer];
-                        let timing = slice_layer_timing(
-                            cfg.geom,
-                            layer.shape.gemm(),
-                            slice,
-                            FeedPolicy::Independent, // activity is policy-invariant
-                            &cfg.buffers,
-                        );
-                        metrics.record_dispatch(DispatchRecord {
-                            dnn: c.dnn,
-                            dnn_name: pool.dnns[c.dnn].name.clone(),
-                            layer: c.layer,
-                            layer_name: layer.name.clone(),
-                            slice,
-                            t_start: c.t_start,
-                            t_end: c.t_end,
-                            activity: timing.activity,
-                        });
-                    }
-                }
-            }
-            if queue.all_done() && events.is_empty() {
-                break;
-            }
-        }
-
-        debug_assert!(queue.all_done(), "scheduler exited with pending layers");
-        metrics
+impl Scheduler for DynamicScheduler {
+    fn name(&self) -> &'static str {
+        "dynamic"
     }
 
-    /// Cycles for one layer on `slice` with `coresident` live partitions.
-    fn layer_cycles(
+    /// `Partition_Calculation` + `Task_Assignment` over the ready set,
+    /// rehearsed on a clone of the live partition tiling.
+    fn plan(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
+        let cfg = &self.cfg;
+        let ready = s.queue.ready_at(s.now);
+        if ready.is_empty() {
+            return Vec::new();
+        }
+        let mut pm = s.partitions.clone();
+        let mut out = Vec::new();
+
+        // Partition_Calculation (Lines 15-19): divide the array by the
+        // number of available layers (running partitions keep their
+        // slices), on the power-of-two ladder.
+        let n_avail = ready.len() as u64 + pm.allocated_count() as u64;
+        let target =
+            floor_pow2((cfg.geom.cols / n_avail).max(1)).clamp(cfg.min_width, cfg.geom.cols);
+
+        let mut dispatched_any = false;
+        for r in ready {
+            // Width demand: a layer gains nothing beyond its GEMM column
+            // count M (Task_Assignment's "layers with higher dimensions
+            // to partitions with higher resources").
+            let m_cols = s.pool.dnns[r.dnn].layers[r.layer].shape.gemm().m;
+            let demand = ceil_pow2(m_cols).clamp(cfg.min_width, cfg.geom.cols);
+
+            // First layer on a fully idle array: all PEs (Line 6).
+            if pm.fully_free() && n_avail == 1 {
+                let (_, slice) = pm.allocate(cfg.geom.cols).expect("full array free");
+                out.push(Allocation { dnn: r.dnn, layer: r.layer, slice });
+                dispatched_any = true;
+                continue;
+            }
+
+            let widest = pm.widest_free().map(|s| s.width).unwrap_or(0);
+            if widest < cfg.min_width {
+                continue; // nothing usable free right now
+            }
+            let width = match cfg.alloc_policy {
+                // Paper-literal Partition_Calculation: take the equal
+                // share (capped by demand), no waiting.
+                AllocPolicy::EqualShare => demand.min(target).min(floor_pow2(widest)),
+                // Demand-aware: the heaviest ready layer takes the widest
+                // free slice up to its demand.  Patience: a layer whose
+                // demand cannot be reasonably met WAITS for merges
+                // instead of exploding its fold count in a sliver —
+                // unless nothing is running (progress guarantee: take the
+                // best slice available).
+                AllocPolicy::WidestToHeaviest => {
+                    let width = demand.min(floor_pow2(widest));
+                    let acceptable = (demand / cfg.patience_divisor).max(cfg.min_width);
+                    if width >= acceptable {
+                        width
+                    } else if pm.allocated_count() == 0 && !dispatched_any {
+                        floor_pow2(widest)
+                    } else {
+                        continue; // wait for a completion to merge space
+                    }
+                }
+            };
+            let Some((_, slice)) = pm.allocate(width) else { continue };
+            out.push(Allocation { dnn: r.dnn, layer: r.layer, slice });
+            dispatched_any = true;
+        }
+        out
+    }
+
+    /// Cycles for one layer on `slice` with `coresident` live partitions;
+    /// activity is feed-policy-invariant and always billed under the
+    /// independent model.
+    fn exec(
         &self,
-        pool: &WorkloadPool,
+        s: &SystemState<'_>,
         dnn: DnnId,
         layer: LayerId,
         slice: PartitionSlice,
         coresident: u64,
-    ) -> u64 {
+    ) -> LayerExec {
         let cfg = &self.cfg;
-        let gemm = pool.dnns[dnn].layers[layer].shape.gemm();
-        let policy = match cfg.feed_model {
-            FeedModel::Independent => FeedPolicy::Independent,
-            FeedModel::Interleaved => FeedPolicy::Interleaved {
-                coresident: coresident.max(1),
-                slot: coresident.saturating_sub(1),
-            },
+        let gemm = s.pool.dnns[dnn].layers[layer].shape.gemm();
+        let ind = slice_layer_timing(cfg.geom, gemm, slice, FeedPolicy::Independent, &cfg.buffers);
+        let raw = match cfg.feed_model {
+            FeedModel::Independent => ind.cycles,
+            FeedModel::Interleaved => {
+                slice_layer_timing(
+                    cfg.geom,
+                    gemm,
+                    slice,
+                    FeedPolicy::Interleaved {
+                        coresident: coresident.max(1),
+                        slot: coresident.saturating_sub(1),
+                    },
+                    &cfg.buffers,
+                )
+                .cycles
+            }
         };
-        let t = slice_layer_timing(cfg.geom, gemm, slice, policy, &cfg.buffers);
-        match &cfg.dram {
-            Some(d) => d.bound_cycles(t.cycles, &t.activity),
-            None => t.cycles,
-        }
+        let cycles = match &cfg.dram {
+            Some(d) => d.bound_cycles(raw, &ind.activity),
+            None => raw,
+        };
+        LayerExec { cycles, activity: ind.activity }
     }
 }
 
@@ -373,6 +325,30 @@ mod tests {
         assert_eq!(floor_pow2(42), 32);
         assert_eq!(floor_pow2(17), 16);
         assert_eq!(floor_pow2(1), 1);
+    }
+
+    #[test]
+    fn tags_round_trip_through_fromstr() {
+        for m in FeedModel::ALL {
+            assert_eq!(m.tag().parse::<FeedModel>().unwrap(), m);
+        }
+        for p in AllocPolicy::ALL {
+            assert_eq!(p.tag().parse::<AllocPolicy>().unwrap(), p);
+        }
+        // TAGS is exactly the tag() image, in order.
+        assert_eq!(FeedModel::TAGS, [FeedModel::Independent.tag(), FeedModel::Interleaved.tag()]);
+        assert_eq!(AllocPolicy::TAGS, [AllocPolicy::WidestToHeaviest.tag(), AllocPolicy::EqualShare.tag()]);
+    }
+
+    #[test]
+    fn parse_errors_list_valid_tags() {
+        let e = "psychic".parse::<FeedModel>().unwrap_err();
+        assert_eq!(e.got, "psychic");
+        let msg = e.to_string();
+        assert!(msg.contains("independent") && msg.contains("interleaved"), "{msg}");
+        let e = "greedy".parse::<AllocPolicy>().unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("widest") && msg.contains("equal"), "{msg}");
     }
 
     #[test]

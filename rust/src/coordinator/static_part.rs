@@ -1,4 +1,5 @@
-//! Ablation: static equal partitioning without merging.
+//! Ablation: static equal partitioning without merging, as a
+//! [`Scheduler`] on the shared engine.
 //!
 //! The array is divided into `n_dnns` equal vertical partitions up front;
 //! DNN `i` is pinned to partition `i` for its whole lifetime.  No merging,
@@ -6,12 +7,15 @@
 //! `ablation_merging` bench compares this against the dynamic scheduler to
 //! isolate the value of partition merging + Opr-sorted assignment.
 
-use super::metrics::{DispatchRecord, RunMetrics};
+use std::collections::BTreeMap;
+
+use super::metrics::RunMetrics;
 use super::scheduler::SchedulerConfig;
 use crate::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
-use crate::workloads::dnng::WorkloadPool;
+use crate::sim_core::{Allocation, Engine, LayerExec, Scheduler, SystemState};
+use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 
-/// Static equal-partition executor.
+/// Static equal-partition policy.
 #[derive(Debug, Clone)]
 pub struct StaticPartitioning {
     cfg: SchedulerConfig,
@@ -22,52 +26,80 @@ impl StaticPartitioning {
         StaticPartitioning { cfg }
     }
 
+    /// Each DNN's fixed partition width for `pool`.
+    ///
+    /// Panics if the pool has more DNNs than `cols / min_width`
+    /// partitions can host — checked here (not just in [`Self::run`]) so
+    /// the guard also fires when the policy is driven through the
+    /// generic engine entry points (`Engine::execute`, `Scenario::run`).
+    fn width_for(&self, pool: &WorkloadPool) -> u64 {
+        let n = pool.dnns.len() as u64;
+        assert!(n >= 1);
+        let width = (self.cfg.geom.cols / n).max(1);
+        assert!(
+            width >= self.cfg.min_width,
+            "{n} DNNs need width {width} < min {}",
+            self.cfg.min_width
+        );
+        width
+    }
+
     /// Run the pool with one fixed partition per DNN.
     ///
     /// Panics if the pool has more DNNs than `cols / min_width` partitions
     /// can host.
     pub fn run(&self, pool: &WorkloadPool) -> RunMetrics {
-        let cfg = &self.cfg;
-        let n = pool.dnns.len() as u64;
-        assert!(n >= 1);
-        let width = (cfg.geom.cols / n).max(1);
-        assert!(
-            width >= cfg.min_width,
-            "{} DNNs need width {width} < min {}",
-            n,
-            cfg.min_width
-        );
+        self.width_for(pool); // capacity guard before the engine spins up
+        Engine::execute(pool, self.cfg.geom.cols, &mut self.clone())
+    }
+}
 
-        let mut metrics = RunMetrics::default();
-        for (di, dnn) in pool.dnns.iter().enumerate() {
-            let slice = PartitionSlice::new(di as u64 * width, width);
-            let mut now = dnn.arrival_cycles;
-            for (li, layer) in dnn.layers.iter().enumerate() {
-                let t = slice_layer_timing(
-                    cfg.geom,
-                    layer.shape.gemm(),
-                    slice,
-                    FeedPolicy::Independent,
-                    &cfg.buffers,
-                );
-                let cycles = match &cfg.dram {
-                    Some(d) => d.bound_cycles(t.cycles, &t.activity),
-                    None => t.cycles,
-                };
-                metrics.record_dispatch(DispatchRecord {
-                    dnn: di,
-                    dnn_name: dnn.name.clone(),
-                    layer: li,
-                    layer_name: layer.name.clone(),
-                    slice,
-                    t_start: now,
-                    t_end: now + cycles,
-                    activity: t.activity,
-                });
-                now += cycles;
+impl Scheduler for StaticPartitioning {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn plan(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
+        let width = self.width_for(s.pool);
+        // At most one layer per DNN (the lowest-index ready one), into
+        // its pinned slice — which is free exactly when the DNN has no
+        // layer in flight.
+        let mut next: BTreeMap<DnnId, LayerId> = BTreeMap::new();
+        for r in s.queue.ready_at(s.now) {
+            let e = next.entry(r.dnn).or_insert(r.layer);
+            if r.layer < *e {
+                *e = r.layer;
             }
         }
-        metrics
+        next.into_iter()
+            .filter_map(|(dnn, layer)| {
+                let slice = PartitionSlice::new(dnn as u64 * width, width);
+                s.partitions.is_free(slice).then_some(Allocation { dnn, layer, slice })
+            })
+            .collect()
+    }
+
+    fn exec(
+        &self,
+        s: &SystemState<'_>,
+        dnn: DnnId,
+        layer: LayerId,
+        slice: PartitionSlice,
+        _coresident: u64,
+    ) -> LayerExec {
+        let gemm = s.pool.dnns[dnn].layers[layer].shape.gemm();
+        let t = slice_layer_timing(
+            self.cfg.geom,
+            gemm,
+            slice,
+            FeedPolicy::Independent,
+            &self.cfg.buffers,
+        );
+        let cycles = match &self.cfg.dram {
+            Some(d) => d.bound_cycles(t.cycles, &t.activity),
+            None => t.cycles,
+        };
+        LayerExec { cycles, activity: t.activity }
     }
 }
 

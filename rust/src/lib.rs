@@ -6,8 +6,9 @@
 //! PDP 2023) as a three-layer rust + JAX + Pallas stack:
 //!
 //! - **L3 (this crate)** — the paper's contribution: the dynamic
-//!   partitioning coordinator ([`coordinator`]), plus every substrate the
-//!   evaluation depends on: a Scale-Sim-equivalent cycle model ([`sim`]),
+//!   partitioning coordinator ([`coordinator`]) as policies plugged into
+//!   the shared discrete-event engine ([`sim_core`]), plus every substrate
+//!   the evaluation depends on: a Scale-Sim-equivalent cycle model ([`sim`]),
 //!   an Accelergy-equivalent energy estimator ([`energy`]), the 12-network
 //!   workload zoo ([`workloads`]), the arrival-driven scenario engine and
 //!   parallel sweep runner ([`coordinator::scenario`], [`sweep`]), and the
@@ -29,6 +30,8 @@ pub mod workloads;
 pub mod sim;
 
 pub mod energy;
+
+pub mod sim_core;
 
 pub mod coordinator;
 

@@ -26,7 +26,9 @@ pub struct GroupResults {
     pub cfg: SchedulerConfig,
 }
 
-/// Run a pool under sequential + dynamic scheduling.
+/// Run a pool under sequential + dynamic scheduling — both policies on
+/// the one shared engine (the `run` wrappers are `Engine::execute`),
+/// metrics collected by the same observer.
 pub fn run_group(pool: &WorkloadPool, cfg: &SchedulerConfig) -> GroupResults {
     GroupResults {
         pool_name: pool.name.clone(),

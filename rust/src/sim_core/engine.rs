@@ -1,0 +1,544 @@
+//! The discrete-event engine: event queue + clock + allocation bookkeeping.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+
+use super::event::Event;
+use super::observer::Observer;
+use super::scheduler::{Scheduler, SystemState};
+use crate::coordinator::metrics::{DispatchRecord, RunMetrics};
+use crate::coordinator::partition::{AllocId, PartitionManager};
+use crate::coordinator::queue::TaskQueue;
+use crate::sim::activity::Activity;
+use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
+
+/// Execution details of an in-flight layer, keyed by its allocation.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    dnn: DnnId,
+    layer: LayerId,
+    t_start: u64,
+    activity: Activity,
+}
+
+/// The one simulation engine behind `mtsa run`, the scenario engine and
+/// the sweep runner.
+///
+/// The engine owns the clock, the event queue, the DAG-aware
+/// [`TaskQueue`] and the [`PartitionManager`]; a [`Scheduler`] owns
+/// *policy* and an [`Observer`] owns *metrics*.  One run:
+///
+/// 1. seed [`Event::Arrival`] events from the pool (plus any
+///    [`Event::Deadline`]s attached via [`Engine::with_deadlines`]);
+/// 2. pop every event at the earliest pending cycle, retire completions
+///    (free + merge columns, advance the task queue) and fire the
+///    scheduler hooks;
+/// 3. call [`Scheduler::plan`] once over the settled state and apply its
+///    allocations at their exact proposed positions, pricing each via
+///    [`Scheduler::exec`] and scheduling its completion;
+/// 4. repeat until every layer has retired, then drain any remaining
+///    deadline events (all met by construction).
+///
+/// Determinism: events are totally ordered (see [`Event`]), the scheduler
+/// contract is deterministic, and the engine adds no randomness — a fixed
+/// workload and policy reproduce byte-identical metrics anywhere.
+pub struct Engine<'p> {
+    pool: &'p WorkloadPool,
+    queue: TaskQueue<'p>,
+    partitions: PartitionManager,
+    events: BinaryHeap<Reverse<Event>>,
+    pending: BTreeMap<AllocId, Pending>,
+    /// `(dnn, absolute deadline cycle)` pairs to turn into events.
+    deadlines: Vec<(DnnId, u64)>,
+    /// Arrival events not yet fired (progress can still come from outside).
+    arrivals_pending: usize,
+    /// Consecutive wake-ups scheduled while nothing else could change the
+    /// state (no layer in flight, no future arrival) and nothing was
+    /// dispatched — the livelock detector for wake-only policies.
+    idle_wakes: u32,
+    now: u64,
+}
+
+/// How many consecutive unproductive wake-only rounds a policy may take
+/// before the engine declares it livelocked.  Generous enough for any
+/// real epoch/time-slice policy that defers ready work across a few
+/// boundaries; a policy that spins past this is waiting on a condition
+/// that can never occur (state is unchanged and nothing else is pending).
+const MAX_IDLE_WAKES: u32 = 1_000;
+
+impl<'p> Engine<'p> {
+    /// An engine over `pool` on an array `cols` columns wide.
+    pub fn new(pool: &'p WorkloadPool, cols: u64) -> Engine<'p> {
+        Engine {
+            pool,
+            queue: TaskQueue::new(pool),
+            partitions: PartitionManager::new(cols),
+            events: BinaryHeap::new(),
+            pending: BTreeMap::new(),
+            deadlines: Vec::new(),
+            arrivals_pending: pool.dnns.len(),
+            idle_wakes: 0,
+            now: 0,
+        }
+    }
+
+    /// Attach absolute QoS deadlines; each becomes an
+    /// [`Event::Deadline`] reported to the scheduler and observer.
+    pub fn with_deadlines(mut self, deadlines: Vec<(DnnId, u64)>) -> Engine<'p> {
+        self.deadlines = deadlines;
+        self
+    }
+
+    /// Convenience: run `pool` under `sched` and collect [`RunMetrics`].
+    pub fn execute(pool: &WorkloadPool, cols: u64, sched: &mut dyn Scheduler) -> RunMetrics {
+        let mut metrics = RunMetrics::default();
+        Engine::new(pool, cols).run(sched, &mut metrics);
+        metrics
+    }
+
+    fn state(&self) -> SystemState<'_> {
+        SystemState {
+            now: self.now,
+            pool: self.pool,
+            queue: &self.queue,
+            partitions: &self.partitions,
+        }
+    }
+
+    /// Run to completion.  Panics if the scheduler deadlocks (the pool is
+    /// not done and no completion is in flight when the event queue
+    /// drains) — a policy bug, not a recoverable condition.
+    pub fn run(mut self, sched: &mut dyn Scheduler, obs: &mut dyn Observer) {
+        for (di, d) in self.pool.dnns.iter().enumerate() {
+            self.events.push(Reverse(Event::Arrival { t: d.arrival_cycles, dnn: di }));
+        }
+        for &(dnn, t) in &self.deadlines {
+            self.events.push(Reverse(Event::Deadline { t, dnn }));
+        }
+
+        while let Some(Reverse(first)) = self.events.pop() {
+            let now = first.time();
+            debug_assert!(now >= self.now, "event time went backwards");
+            self.now = now;
+
+            // Process the whole batch of events at this cycle.
+            let mut needs_plan = false;
+            let mut next = Some(first);
+            while let Some(ev) = next {
+                self.handle(ev, sched, obs, &mut needs_plan);
+                next = if self.events.peek().is_some_and(|r| r.0.time() == now) {
+                    self.events.pop().map(|r| r.0)
+                } else {
+                    None
+                };
+            }
+
+            // One decision point over the settled state.
+            if needs_plan && !self.queue.all_done() {
+                self.dispatch(sched, obs);
+            }
+
+            if self.queue.all_done() {
+                // Only Deadline/Repartition events can remain; report the
+                // deadlines (all met — the work finished first) and stop.
+                while let Some(Reverse(ev)) = self.events.pop() {
+                    if let Event::Deadline { t, dnn } = ev {
+                        self.now = t;
+                        sched.on_deadline(&self.state(), dnn, true);
+                        obs.on_deadline(dnn, t, true);
+                    }
+                }
+                break;
+            }
+        }
+
+        assert!(
+            self.queue.all_done(),
+            "engine drained its event queue with {} layer(s) never scheduled \
+             (policy `{}` deadlocked)",
+            self.queue.remaining(),
+            sched.name(),
+        );
+    }
+
+    fn handle(
+        &mut self,
+        ev: Event,
+        sched: &mut dyn Scheduler,
+        obs: &mut dyn Observer,
+        needs_plan: &mut bool,
+    ) {
+        match ev {
+            Event::Arrival { dnn, .. } => {
+                self.arrivals_pending -= 1;
+                sched.on_arrival(&self.state(), dnn);
+                *needs_plan = true;
+            }
+            Event::LayerComplete { t, dnn, layer, alloc } => {
+                let slice = self.partitions.slice_of(alloc).expect("completion of live alloc");
+                self.partitions.free(alloc);
+                self.queue.mark_done(dnn, layer);
+                let pend = self.pending.remove(&alloc).expect("pending entry for live alloc");
+                debug_assert_eq!((pend.dnn, pend.layer), (dnn, layer));
+                let l = &self.pool.dnns[dnn].layers[layer];
+                let rec = DispatchRecord {
+                    dnn,
+                    dnn_name: self.pool.dnns[dnn].name.clone(),
+                    layer,
+                    layer_name: l.name.clone(),
+                    slice,
+                    t_start: pend.t_start,
+                    t_end: t,
+                    activity: pend.activity,
+                };
+                sched.on_layer_complete(&self.state(), dnn, layer);
+                obs.on_layer_complete(&rec);
+                *needs_plan = true;
+            }
+            Event::Deadline { t, dnn } => {
+                let met = self.queue.dnn_done(dnn);
+                sched.on_deadline(&self.state(), dnn, met);
+                obs.on_deadline(dnn, t, met);
+                // By default a deadline is a report, not a decision
+                // point (it changes neither ready set nor tiling);
+                // stateful SLA-aware policies opt into replanning via
+                // `plan_on_deadline`.
+                *needs_plan |= sched.plan_on_deadline();
+            }
+            Event::Repartition { .. } => {
+                sched.on_repartition(&self.state());
+                *needs_plan = true;
+            }
+        }
+    }
+
+    fn dispatch(&mut self, sched: &mut dyn Scheduler, obs: &mut dyn Observer) {
+        let allocs = sched.plan(&self.state());
+        if !allocs.is_empty() {
+            self.idle_wakes = 0; // progress: the livelock detector restarts
+        }
+        for a in allocs {
+            let (alloc, slice) = self.partitions.allocate_at(a.slice).unwrap_or_else(|| {
+                panic!(
+                    "policy `{}` allocated unavailable slice {:?} at cycle {}",
+                    sched.name(),
+                    a.slice,
+                    self.now
+                )
+            });
+            self.queue.mark_running(a.dnn, a.layer);
+            let coresident = self.partitions.allocated_count() as u64;
+            let exec = sched.exec(&self.state(), a.dnn, a.layer, slice, coresident);
+            obs.on_dispatch(self.now, a.dnn, a.layer, slice);
+            self.pending.insert(
+                alloc,
+                Pending { dnn: a.dnn, layer: a.layer, t_start: self.now, activity: exec.activity },
+            );
+            self.events.push(Reverse(Event::LayerComplete {
+                t: self.now + exec.cycles.max(1),
+                dnn: a.dnn,
+                layer: a.layer,
+                alloc,
+            }));
+        }
+        if let Some(dt) = sched.wake_after(&self.state()) {
+            // Livelock detector: a wake-up scheduled while nothing else
+            // can change the state (no layer in flight, no future
+            // arrival) and this round dispatched nothing is unproductive.
+            // A legitimate epoch policy deferring ready work to the next
+            // boundary takes a handful of these at most; a policy that
+            // strings [`MAX_IDLE_WAKES`] together is waiting on a
+            // condition that can never occur, and honoring it forever
+            // would livelock instead of hitting the deadlock panic `run`
+            // promises for policy bugs.
+            if self.pending.is_empty() && self.arrivals_pending == 0 {
+                self.idle_wakes += 1;
+                assert!(
+                    self.idle_wakes <= MAX_IDLE_WAKES,
+                    "policy `{}` took {} consecutive repartition wake-ups at cycle {} without \
+                     dispatching, with no layer in flight and no future arrival (policy \
+                     deadlocked on its own wake-ups)",
+                    sched.name(),
+                    self.idle_wakes,
+                    self.now,
+                );
+            }
+            let t = self.now.saturating_add(dt.max(1));
+            self.events.push(Reverse(Event::Repartition { t }));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::dataflow::ArrayGeometry;
+    use crate::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
+    use crate::sim_core::{Allocation, LayerExec};
+    use crate::workloads::dnng::{Dnn, Layer};
+    use crate::workloads::shapes::{LayerKind, LayerShape};
+
+    const GEOM: ArrayGeometry = ArrayGeometry { rows: 128, cols: 128 };
+
+    fn pool(arrivals: &[u64]) -> WorkloadPool {
+        let dnns = arrivals
+            .iter()
+            .enumerate()
+            .map(|(i, &at)| {
+                let layers = vec![
+                    Layer::new("l0", LayerKind::Fc, LayerShape::fc(32, 64, 64)),
+                    Layer::new("l1", LayerKind::Fc, LayerShape::fc(32, 64, 64)),
+                ];
+                Dnn::chain(&format!("d{i}"), layers).arriving_at(at)
+            })
+            .collect();
+        WorkloadPool::new("t", dnns)
+    }
+
+    /// Minimal FIFO policy: the earliest ready (dnn, layer) takes the
+    /// whole array; used to exercise the engine independently of the
+    /// production policies.
+    struct FullArrayFifo {
+        arrivals_seen: usize,
+        completions_seen: usize,
+        repartitions_seen: usize,
+        wake_once: bool,
+    }
+
+    impl FullArrayFifo {
+        fn new() -> FullArrayFifo {
+            FullArrayFifo {
+                arrivals_seen: 0,
+                completions_seen: 0,
+                repartitions_seen: 0,
+                wake_once: false,
+            }
+        }
+    }
+
+    impl Scheduler for FullArrayFifo {
+        fn name(&self) -> &'static str {
+            "fifo-test"
+        }
+        fn on_arrival(&mut self, _s: &SystemState<'_>, _dnn: DnnId) {
+            self.arrivals_seen += 1;
+        }
+        fn on_layer_complete(&mut self, _s: &SystemState<'_>, _dnn: DnnId, _layer: LayerId) {
+            self.completions_seen += 1;
+        }
+        fn on_repartition(&mut self, _s: &SystemState<'_>) {
+            self.repartitions_seen += 1;
+        }
+        fn plan(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
+            if !s.partitions.fully_free() {
+                return Vec::new();
+            }
+            let ready = s.queue.ready_at(s.now);
+            ready
+                .iter()
+                .min_by_key(|r| (r.dnn, r.layer))
+                .map(|r| {
+                    vec![Allocation {
+                        dnn: r.dnn,
+                        layer: r.layer,
+                        slice: PartitionSlice::full(GEOM),
+                    }]
+                })
+                .unwrap_or_default()
+        }
+        fn exec(
+            &self,
+            s: &SystemState<'_>,
+            dnn: DnnId,
+            layer: LayerId,
+            slice: PartitionSlice,
+            _coresident: u64,
+        ) -> LayerExec {
+            let gemm = s.pool.dnns[dnn].layers[layer].shape.gemm();
+            let t = slice_layer_timing(GEOM, gemm, slice, FeedPolicy::Independent, &Default::default());
+            LayerExec { cycles: t.cycles, activity: t.activity }
+        }
+        fn wake_after(&mut self, _s: &SystemState<'_>) -> Option<u64> {
+            if self.wake_once {
+                None
+            } else {
+                self.wake_once = true;
+                Some(10)
+            }
+        }
+    }
+
+    #[test]
+    fn engine_runs_every_layer_once_and_fires_hooks() {
+        let p = pool(&[0, 5_000]);
+        let mut sched = FullArrayFifo::new();
+        let m = Engine::execute(&p, GEOM.cols, &mut sched);
+        assert_eq!(m.dispatches.len(), 4);
+        assert_eq!(sched.arrivals_seen, 2);
+        assert_eq!(sched.completions_seen, 4);
+        assert_eq!(sched.repartitions_seen, 1, "wake_after schedules a Repartition event");
+        // FIFO on a full array: strictly sequential records.
+        for w in m.dispatches.windows(2) {
+            assert!(w[0].t_end <= w[1].t_start);
+        }
+        assert!(m.completion["d1"] > m.completion["d0"]);
+    }
+
+    #[test]
+    fn deadline_events_report_met_and_missed() {
+        #[derive(Default)]
+        struct Tally(Vec<(DnnId, u64, bool)>);
+        impl Observer for Tally {
+            fn on_deadline(&mut self, dnn: DnnId, t: u64, met: bool) {
+                self.0.push((dnn, t, met));
+            }
+        }
+        let p = pool(&[0]);
+        // One absurdly tight deadline (cycle 1: missed) and one generous
+        // deadline far beyond the makespan (met, reported in the drain).
+        let mut sched = FullArrayFifo::new();
+        let mut tally = Tally::default();
+        Engine::new(&p, GEOM.cols)
+            .with_deadlines(vec![(0, 1), (0, u64::MAX)])
+            .run(&mut sched, &mut tally);
+        assert_eq!(tally.0.len(), 2);
+        assert_eq!(tally.0[0], (0, 1, false), "in-flight at cycle 1 => missed");
+        assert_eq!(tally.0[1], (0, u64::MAX, true), "drained after completion => met");
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlocked")]
+    fn deadlocking_policy_panics() {
+        struct Never;
+        impl Scheduler for Never {
+            fn name(&self) -> &'static str {
+                "never"
+            }
+            fn plan(&mut self, _s: &SystemState<'_>) -> Vec<Allocation> {
+                Vec::new()
+            }
+            fn exec(
+                &self,
+                _s: &SystemState<'_>,
+                _d: DnnId,
+                _l: LayerId,
+                _sl: PartitionSlice,
+                _c: u64,
+            ) -> LayerExec {
+                unreachable!()
+            }
+        }
+        Engine::execute(&pool(&[0]), GEOM.cols, &mut Never);
+    }
+
+    #[test]
+    fn plan_on_deadline_makes_deadlines_decision_points() {
+        // A stateful policy that defers all work until it has observed a
+        // deadline verdict: with `plan_on_deadline` the release happens
+        // AT the deadline cycle, not at the next unrelated event (there
+        // is none here — without the opt-in this run would deadlock).
+        struct DeferUntilDeadline {
+            inner: FullArrayFifo,
+            released: bool,
+        }
+        impl Scheduler for DeferUntilDeadline {
+            fn name(&self) -> &'static str {
+                "defer-until-deadline"
+            }
+            fn on_deadline(&mut self, _s: &SystemState<'_>, _dnn: DnnId, _met: bool) {
+                self.released = true;
+            }
+            fn plan_on_deadline(&self) -> bool {
+                true
+            }
+            fn plan(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
+                if self.released {
+                    self.inner.plan(s)
+                } else {
+                    Vec::new()
+                }
+            }
+            fn exec(
+                &self,
+                s: &SystemState<'_>,
+                dnn: DnnId,
+                layer: LayerId,
+                slice: PartitionSlice,
+                coresident: u64,
+            ) -> LayerExec {
+                self.inner.exec(s, dnn, layer, slice, coresident)
+            }
+        }
+        let p = pool(&[0]);
+        let mut sched = DeferUntilDeadline { inner: FullArrayFifo::new(), released: false };
+        let mut m = RunMetrics::default();
+        Engine::new(&p, GEOM.cols).with_deadlines(vec![(0, 5_000)]).run(&mut sched, &mut m);
+        assert_eq!(m.dispatches.len(), 2);
+        assert_eq!(m.dispatches[0].t_start, 5_000, "release takes effect at deadline time");
+    }
+
+    #[test]
+    #[should_panic(expected = "wake-up")]
+    fn wake_only_policy_cannot_livelock() {
+        // A policy that dispatches nothing and keeps asking to be woken
+        // up must eventually hit the livelock detector (after
+        // MAX_IDLE_WAKES unproductive rounds), not spin forever.
+        struct Spinner;
+        impl Scheduler for Spinner {
+            fn name(&self) -> &'static str {
+                "spinner"
+            }
+            fn plan(&mut self, _s: &SystemState<'_>) -> Vec<Allocation> {
+                Vec::new()
+            }
+            fn exec(
+                &self,
+                _s: &SystemState<'_>,
+                _d: DnnId,
+                _l: LayerId,
+                _sl: PartitionSlice,
+                _c: u64,
+            ) -> LayerExec {
+                unreachable!()
+            }
+            fn wake_after(&mut self, _s: &SystemState<'_>) -> Option<u64> {
+                Some(100)
+            }
+        }
+        Engine::execute(&pool(&[0]), GEOM.cols, &mut Spinner);
+    }
+
+    #[test]
+    #[should_panic(expected = "unavailable slice")]
+    fn overlapping_allocation_panics() {
+        struct DoubleBook;
+        impl Scheduler for DoubleBook {
+            fn name(&self) -> &'static str {
+                "double-book"
+            }
+            fn plan(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
+                // Propose the same columns for every ready layer.
+                s.queue
+                    .ready_at(s.now)
+                    .iter()
+                    .map(|r| Allocation {
+                        dnn: r.dnn,
+                        layer: r.layer,
+                        slice: PartitionSlice::new(0, 64),
+                    })
+                    .collect()
+            }
+            fn exec(
+                &self,
+                _s: &SystemState<'_>,
+                _d: DnnId,
+                _l: LayerId,
+                _sl: PartitionSlice,
+                _c: u64,
+            ) -> LayerExec {
+                LayerExec { cycles: 100, activity: Activity::default() }
+            }
+        }
+        Engine::execute(&pool(&[0, 0]), GEOM.cols, &mut DoubleBook);
+    }
+}

@@ -1,0 +1,94 @@
+//! Engine events and their deterministic total order.
+
+use crate::coordinator::partition::AllocId;
+use crate::workloads::dnng::{DnnId, LayerId};
+
+/// One discrete event in the simulated timeline.
+///
+/// Events at the same cycle are processed in the order
+/// `Arrival < LayerComplete < Deadline < Repartition` (ties broken by
+/// `(dnn, layer)`), which encodes three invariants:
+///
+/// - arrivals have no side effect beyond scheduler hooks, so they may go
+///   first;
+/// - completions retire (free columns, mark layers done) before deadlines
+///   are judged, so a request finishing exactly *at* its deadline counts
+///   as met — the same strict `done > deadline` rule
+///   [`Scenario::analyze`](crate::coordinator::scenario::Scenario::analyze)
+///   applies post-hoc;
+/// - the single [`Scheduler::plan`](super::Scheduler::plan) call per
+///   timestamp sees the fully-settled state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// A DNN's arrival cycle has been reached.
+    Arrival { t: u64, dnn: DnnId },
+    /// A dispatched layer drains; its partition is freed (and merged).
+    LayerComplete { t: u64, dnn: DnnId, layer: LayerId, alloc: AllocId },
+    /// A request's absolute QoS deadline passes.
+    Deadline { t: u64, dnn: DnnId },
+    /// A scheduler-requested wake-up (see
+    /// [`Scheduler::wake_after`](super::Scheduler::wake_after)) — the
+    /// decision point that makes time-sliced repartitioning policies
+    /// expressible without any new engine machinery.
+    Repartition { t: u64 },
+}
+
+impl Event {
+    /// The cycle this event fires at.
+    pub fn time(&self) -> u64 {
+        match *self {
+            Event::Arrival { t, .. }
+            | Event::LayerComplete { t, .. }
+            | Event::Deadline { t, .. }
+            | Event::Repartition { t } => t,
+        }
+    }
+
+    /// Total-order key: `(time, kind rank, dnn, layer)`.
+    fn key(&self) -> (u64, u8, DnnId, LayerId) {
+        match *self {
+            Event::Arrival { t, dnn } => (t, 0, dnn, 0),
+            Event::LayerComplete { t, dnn, layer, .. } => (t, 1, dnn, layer),
+            Event::Deadline { t, dnn } => (t, 2, dnn, 0),
+            Event::Repartition { t } => (t, 3, 0, 0),
+        }
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.key().cmp(&other.key())
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_is_time_then_kind_then_ids() {
+        let arr = Event::Arrival { t: 10, dnn: 5 };
+        let done = Event::LayerComplete { t: 10, dnn: 0, layer: 3, alloc: 7 };
+        let dl = Event::Deadline { t: 10, dnn: 0 };
+        let rp = Event::Repartition { t: 10 };
+        let early = Event::Repartition { t: 9 };
+        assert!(early < arr, "time dominates kind");
+        assert!(arr < done, "arrivals before completions at the same cycle");
+        assert!(done < dl, "completions retire before deadlines are judged");
+        assert!(dl < rp);
+        let done_b = Event::LayerComplete { t: 10, dnn: 1, layer: 0, alloc: 8 };
+        assert!(done < done_b, "completion ties break by (dnn, layer)");
+    }
+
+    #[test]
+    fn time_accessor() {
+        assert_eq!(Event::Arrival { t: 42, dnn: 0 }.time(), 42);
+        assert_eq!(Event::Repartition { t: 7 }.time(), 7);
+    }
+}

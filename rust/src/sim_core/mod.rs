@@ -1,0 +1,49 @@
+//! The discrete-event simulation core — ONE engine behind `mtsa run`, the
+//! scenario engine and the sweep runner.
+//!
+//! Before this module existed, every executor (`DynamicScheduler`, the
+//! sequential baseline, static partitioning, the multi-array comparator)
+//! fused three concerns into one private batch loop: *policy* (who gets
+//! which columns), *clock advancement* (when does the world change) and
+//! *metrics accumulation* (what happened).  MoCA (arXiv 2305.05843) and
+//! the systolic-vector scheduling exploration (arXiv 2206.03060) both show
+//! that the interesting design space is policies plugged into a shared
+//! event-driven core; this module adopts that shape:
+//!
+//! - [`Event`] — the four event kinds a multi-tenant accelerator sees:
+//!   DNN [`Event::Arrival`], [`Event::LayerComplete`], a scheduled
+//!   [`Event::Repartition`] wake-up, and a QoS [`Event::Deadline`].
+//!   Ordering is total and deterministic: `(time, kind, dnn, layer)`.
+//! - [`Scheduler`] — the policy trait.  Decision-point hooks
+//!   ([`Scheduler::on_arrival`], [`Scheduler::on_layer_complete`], …) let
+//!   a policy maintain internal state; [`Scheduler::plan`] maps the
+//!   observable [`SystemState`] to concrete [`Allocation`]s; and
+//!   [`Scheduler::exec`] prices one layer on its
+//!   [`PartitionSlice`](crate::sim::partitioned::PartitionSlice) (this is
+//!   where [`slice_layer_timing`](crate::sim::partitioned::slice_layer_timing)
+//!   feeds event durations).
+//! - [`Observer`] — metrics collection, decoupled from both policy and
+//!   clock.  [`RunMetrics`](crate::coordinator::metrics::RunMetrics)
+//!   implements it directly, so every execution path collects metrics
+//!   identically.
+//! - [`Engine`] — owns the event queue, the
+//!   [`TaskQueue`](crate::coordinator::queue::TaskQueue) (DAG-aware
+//!   ready-layer tracking) and the
+//!   [`PartitionManager`](crate::coordinator::partition::PartitionManager)
+//!   (column tiling with merge-on-free), pops event batches, invokes the
+//!   policy, and applies its allocations.
+//!
+//! All four legacy policies are ports onto this trait (see
+//! [`crate::coordinator`]), and `rust/tests/engine_parity.rs` pins the
+//! dynamic policy bit-for-bit against the pre-refactor batch loop.
+//! `docs/architecture.md` is the narrative version of this design.
+
+mod engine;
+mod event;
+mod observer;
+mod scheduler;
+
+pub use engine::Engine;
+pub use event::Event;
+pub use observer::Observer;
+pub use scheduler::{Allocation, LayerExec, Scheduler, SystemState};

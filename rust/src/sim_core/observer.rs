@@ -1,0 +1,41 @@
+//! Metrics collection decoupled from policy and clock.
+
+use crate::coordinator::metrics::{DispatchRecord, RunMetrics};
+use crate::sim::partitioned::PartitionSlice;
+use crate::workloads::dnng::{DnnId, LayerId};
+
+/// Passive listener attached to an [`Engine`](super::Engine) run.
+///
+/// Observers see the same callback stream regardless of which
+/// [`Scheduler`](super::Scheduler) is driving, which is what makes
+/// metrics comparable across policies: there is exactly one place that
+/// turns events into numbers.
+pub trait Observer {
+    /// A layer was dispatched onto `slice` at cycle `t`.
+    fn on_dispatch(&mut self, _t: u64, _dnn: DnnId, _layer: LayerId, _slice: PartitionSlice) {}
+
+    /// A layer retired; `rec` is the full dispatch record (slice, start,
+    /// end, activity).
+    fn on_layer_complete(&mut self, _rec: &DispatchRecord) {}
+
+    /// A request's deadline cycle passed; `met` is whether its DNN had
+    /// completed by then (completions at the same cycle count as met).
+    fn on_deadline(&mut self, _dnn: DnnId, _t: u64, _met: bool) {}
+}
+
+/// `RunMetrics` *is* an observer: attach one to any engine run and the
+/// familiar makespan / completion / dispatch-log / activity metrics fall
+/// out — identically for every policy and every entry point (CLI `run`,
+/// scenarios, sweeps).
+impl Observer for RunMetrics {
+    fn on_layer_complete(&mut self, rec: &DispatchRecord) {
+        self.record_dispatch(rec.clone());
+    }
+}
+
+/// No-op observer for callers that only want side effects of the run
+/// (e.g. exercising a policy in a test).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullObserver;
+
+impl Observer for NullObserver {}

@@ -1,0 +1,107 @@
+//! The `Scheduler` policy trait and the state view it decides over.
+
+use crate::coordinator::partition::PartitionManager;
+use crate::coordinator::queue::TaskQueue;
+use crate::sim::activity::Activity;
+use crate::sim::partitioned::PartitionSlice;
+use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
+
+/// Read-only view of the world a policy decides over: the current cycle,
+/// the workload pool, layer progress (ready set, per-DNN completion) and
+/// the live column tiling.
+///
+/// A policy that needs to try out allocations before committing (the
+/// dynamic policy's heaviest-first carving does) clones `partitions` and
+/// rehearses on the clone; the engine then applies the returned
+/// [`Allocation`]s to the real manager at the exact proposed positions.
+pub struct SystemState<'e> {
+    pub now: u64,
+    pub pool: &'e WorkloadPool,
+    pub queue: &'e TaskQueue<'e>,
+    pub partitions: &'e PartitionManager,
+}
+
+/// One scheduling decision: run `(dnn, layer)` on `slice` starting now.
+///
+/// The slice must lie inside a currently-free region — the engine carves
+/// it with [`PartitionManager::allocate_at`] and panics on overlap, so a
+/// buggy policy fails loudly instead of silently double-booking columns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Allocation {
+    pub dnn: DnnId,
+    pub layer: LayerId,
+    pub slice: PartitionSlice,
+}
+
+/// Execution price of one layer on one slice: how long the
+/// [`LayerComplete`](super::Event::LayerComplete) event is scheduled out,
+/// and the component activity billed to the energy model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerExec {
+    pub cycles: u64,
+    pub activity: Activity,
+}
+
+/// A partitioning policy plugged into the [`Engine`](super::Engine).
+///
+/// The engine calls, per event batch: the `on_*` hooks for each popped
+/// event, then [`Scheduler::plan`] once over the settled state, then
+/// [`Scheduler::exec`] for each returned allocation (in order, so a
+/// policy can price later allocations against earlier co-residents), then
+/// [`Scheduler::wake_after`].  All methods are deterministic functions of
+/// their inputs plus the policy's own state — the engine adds no hidden
+/// randomness, which is what keeps fixed-seed sweeps byte-identical
+/// across thread counts.
+pub trait Scheduler {
+    /// Stable display name (report/CLI tag).
+    fn name(&self) -> &'static str;
+
+    /// A DNN just arrived (its layers may now appear in the ready set).
+    fn on_arrival(&mut self, _state: &SystemState<'_>, _dnn: DnnId) {}
+
+    /// A layer just retired (its columns are already freed and merged).
+    fn on_layer_complete(&mut self, _state: &SystemState<'_>, _dnn: DnnId, _layer: LayerId) {}
+
+    /// A request's deadline just passed; `met` is whether it had finished.
+    fn on_deadline(&mut self, _state: &SystemState<'_>, _dnn: DnnId, _met: bool) {}
+
+    /// Opt in to a [`Scheduler::plan`] call after deadline events.
+    ///
+    /// Defaults to `false`: a deadline changes neither the ready set nor
+    /// the tiling, so for a policy whose decisions are a pure function of
+    /// [`SystemState`] (all four shipped policies) replanning there can
+    /// only repeat the previous decision.  A *stateful* SLA-aware policy
+    /// that reacts in [`Scheduler::on_deadline`] (boosting a tenant,
+    /// releasing deferred work) returns `true` so its reaction takes
+    /// effect at deadline time instead of at the next unrelated event.
+    fn plan_on_deadline(&self) -> bool {
+        false
+    }
+
+    /// A wake-up previously requested via [`Scheduler::wake_after`] fired.
+    fn on_repartition(&mut self, _state: &SystemState<'_>) {}
+
+    /// Map the current state to zero or more dispatches.  Returning an
+    /// empty vector means "wait" — the engine will call again at the next
+    /// event.
+    fn plan(&mut self, state: &SystemState<'_>) -> Vec<Allocation>;
+
+    /// Price one planned layer: cycles until completion and the activity
+    /// to bill.  `coresident` counts live partitions *including* this one
+    /// at dispatch (feeds the interleaved feed-bus model).
+    fn exec(
+        &self,
+        state: &SystemState<'_>,
+        dnn: DnnId,
+        layer: LayerId,
+        slice: PartitionSlice,
+        coresident: u64,
+    ) -> LayerExec;
+
+    /// Request a [`Repartition`](super::Event::Repartition) wake-up this
+    /// many cycles from now (`None` = none).  Called once after each
+    /// plan/dispatch round.
+    fn wake_after(&mut self, _state: &SystemState<'_>) -> Option<u64> {
+        None
+    }
+}

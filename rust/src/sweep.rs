@@ -4,8 +4,10 @@
 //!
 //! Each grid point is a pure function of its [`SweepGrid`] coordinates and
 //! the seed: a scenario is instantiated ([`crate::coordinator::scenario`]),
-//! run under both the dynamic partitioning scheduler and the sequential
-//! baseline, and scored against its deadlines.  Purity is what makes the
+//! run on the shared discrete-event engine ([`crate::sim_core::Engine`],
+//! via [`Scenario::run`]) under both the dynamic partitioning policy and
+//! the sequential baseline, and scored against its deadlines.  The sweep
+//! owns no time loop of its own.  Purity is what makes the
 //! fan-out trivial — workers pull point indices from an atomic counter and
 //! write results into their own slots, so the report is byte-identical for
 //! a fixed seed regardless of thread count (asserted by
@@ -155,7 +157,10 @@ fn arrival_for(grid: &SweepGrid, rate: f64) -> ArrivalProcess {
     }
 }
 
-/// Run a single grid point (pure: no shared state).
+/// Run a single grid point (pure: no shared state).  Both contenders are
+/// [`Scheduler`](crate::sim_core::Scheduler) policies driven through
+/// [`Scenario::run`] — i.e. the one shared engine — so adding a policy
+/// axis is "construct another `impl Scheduler`", nothing more.
 fn run_point(
     point: &SweepPoint,
     grid: &SweepGrid,
@@ -178,8 +183,9 @@ fn run_point(
         qos_slack: (grid.qos_slack > 0.0).then_some(grid.qos_slack),
     };
     let scenario = Scenario::generate(templates, &spec, &cfg);
-    let dynamic = DynamicScheduler::new(cfg.clone()).run(&scenario.pool);
-    let sequential = SequentialBaseline::new(cfg.clone()).run(&scenario.pool);
+    let (dyn_obs, outcome) = scenario.run(&mut DynamicScheduler::new(cfg.clone()), cols);
+    let (seq_obs, seq_outcome) = scenario.run(&mut SequentialBaseline::new(cfg.clone()), cols);
+    let (dynamic, sequential) = (dyn_obs.metrics, seq_obs.metrics);
     SweepRow {
         point: point.clone(),
         requests: grid.requests,
@@ -187,8 +193,8 @@ fn run_point(
         seq_makespan: sequential.makespan,
         utilization: dynamic.utilization(cfg.geom),
         seq_utilization: sequential.utilization(cfg.geom),
-        outcome: scenario.analyze(&dynamic),
-        seq_outcome: scenario.analyze(&sequential),
+        outcome,
+        seq_outcome,
         occupancy: dynamic.occupancy_timeline(cols, OCCUPANCY_BUCKETS),
     }
 }

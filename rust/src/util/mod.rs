@@ -19,6 +19,27 @@ pub mod rng;
 pub mod stats;
 pub mod tablefmt;
 
+/// Parse error for string-tagged enums (`FeedModel`, `AllocPolicy`,
+/// `ArrivalKind`, …): carries the rejected input and the full list of
+/// valid tags, so every `FromStr` error names its alternatives.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnknownTag {
+    /// What was being parsed, e.g. `"feed model"`.
+    pub what: &'static str,
+    /// The rejected input.
+    pub got: String,
+    /// Every valid tag, in declaration order.
+    pub valid: &'static [&'static str],
+}
+
+impl std::fmt::Display for UnknownTag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "unknown {} {:?} (valid: {})", self.what, self.got, self.valid.join("|"))
+    }
+}
+
+impl std::error::Error for UnknownTag {}
+
 /// Integer ceiling division.
 #[inline]
 pub fn ceil_div(a: u64, b: u64) -> u64 {

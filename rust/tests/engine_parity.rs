@@ -1,0 +1,436 @@
+//! Engine/legacy parity and Scheduler-trait contract tests.
+//!
+//! `legacy_dynamic_run` below is a verbatim port of the pre-refactor
+//! `DynamicScheduler::run` — the fused batch loop that owned policy,
+//! clock and metrics before the `sim_core` engine existed.  The golden
+//! tests assert the engine-driven port reproduces it **bit-for-bit**
+//! (makespan, every dispatch record, per-tenant p50/p95/p99 and miss
+//! rates) on the paper's heavy and light mixes, across alloc policies,
+//! feed models and the DRAM bound.
+//!
+//! The property tests then check the trait contract every `Scheduler`
+//! implementation must satisfy: each layer executes exactly once, in
+//! chain order, never before its DNN arrives — including a test-local
+//! policy that exists nowhere in the library.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use mtsa::coordinator::baseline::SequentialBaseline;
+use mtsa::coordinator::metrics::{DispatchRecord, RunMetrics};
+use mtsa::coordinator::multi_array::MultiArrayBank;
+use mtsa::coordinator::partition::{AllocId, PartitionManager};
+use mtsa::coordinator::queue::TaskQueue;
+use mtsa::coordinator::scenario::{Scenario, ScenarioSpec};
+use mtsa::coordinator::scheduler::{AllocPolicy, DynamicScheduler, FeedModel, SchedulerConfig};
+use mtsa::coordinator::static_part::StaticPartitioning;
+use mtsa::sim::dram::DramConfig;
+use mtsa::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
+use mtsa::sim_core::{Allocation, Engine, LayerExec, Scheduler, SystemState};
+use mtsa::util::prop;
+use mtsa::workloads::dnng::{DnnId, LayerId, WorkloadPool};
+use mtsa::workloads::generator::{random_pool, ArrivalProcess, GeneratorCfg};
+use mtsa::workloads::models;
+
+// ---------------------------------------------------------------------
+// The legacy scheduler, frozen: this is the exact pre-sim_core loop.
+// ---------------------------------------------------------------------
+
+fn floor_pow2(x: u64) -> u64 {
+    1 << (63 - x.leading_zeros() as u64)
+}
+
+fn ceil_pow2(x: u64) -> u64 {
+    x.next_power_of_two()
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Completion {
+    t_end: u64,
+    dnn: DnnId,
+    layer: LayerId,
+    alloc: AllocId,
+    t_start: u64,
+}
+
+impl Ord for Completion {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.t_end, self.dnn, self.layer).cmp(&(other.t_end, other.dnn, other.layer))
+    }
+}
+impl PartialOrd for Completion {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+fn legacy_layer_cycles(
+    cfg: &SchedulerConfig,
+    pool: &WorkloadPool,
+    dnn: DnnId,
+    layer: LayerId,
+    slice: PartitionSlice,
+    coresident: u64,
+) -> u64 {
+    let gemm = pool.dnns[dnn].layers[layer].shape.gemm();
+    let policy = match cfg.feed_model {
+        FeedModel::Independent => FeedPolicy::Independent,
+        FeedModel::Interleaved => FeedPolicy::Interleaved {
+            coresident: coresident.max(1),
+            slot: coresident.saturating_sub(1),
+        },
+    };
+    let t = slice_layer_timing(cfg.geom, gemm, slice, policy, &cfg.buffers);
+    match &cfg.dram {
+        Some(d) => d.bound_cycles(t.cycles, &t.activity),
+        None => t.cycles,
+    }
+}
+
+/// Pre-refactor `DynamicScheduler::run`, verbatim.
+fn legacy_dynamic_run(cfg: &SchedulerConfig, pool: &WorkloadPool) -> RunMetrics {
+    let mut queue = TaskQueue::new(pool);
+    let mut pm = PartitionManager::new(cfg.geom.cols);
+    let mut metrics = RunMetrics::default();
+    let mut events: BinaryHeap<Reverse<Completion>> = BinaryHeap::new();
+    let mut now = 0u64;
+
+    loop {
+        // ---- dispatch phase at `now` -------------------------------
+        let ready = queue.ready_at(now);
+        if !ready.is_empty() {
+            let n_avail = ready.len() as u64 + pm.allocated_count() as u64;
+            let target =
+                floor_pow2((cfg.geom.cols / n_avail).max(1)).clamp(cfg.min_width, cfg.geom.cols);
+
+            let mut dispatched_any = false;
+            for r in ready {
+                let m_cols = pool.dnns[r.dnn].layers[r.layer].shape.gemm().m;
+                let demand = ceil_pow2(m_cols).clamp(cfg.min_width, cfg.geom.cols);
+
+                if pm.fully_free() && n_avail == 1 {
+                    let (alloc, slice) = pm.allocate(cfg.geom.cols).expect("full array free");
+                    queue.mark_running(r.dnn, r.layer);
+                    let cycles = legacy_layer_cycles(cfg, pool, r.dnn, r.layer, slice, 1);
+                    events.push(Reverse(Completion {
+                        t_end: now + cycles,
+                        dnn: r.dnn,
+                        layer: r.layer,
+                        alloc,
+                        t_start: now,
+                    }));
+                    dispatched_any = true;
+                    continue;
+                }
+
+                let widest = pm.widest_free().map(|s| s.width).unwrap_or(0);
+                if widest < cfg.min_width {
+                    continue;
+                }
+                let width = match cfg.alloc_policy {
+                    AllocPolicy::EqualShare => demand.min(target).min(floor_pow2(widest)),
+                    AllocPolicy::WidestToHeaviest => {
+                        let width = demand.min(floor_pow2(widest));
+                        let acceptable = (demand / cfg.patience_divisor).max(cfg.min_width);
+                        if width >= acceptable {
+                            width
+                        } else if pm.allocated_count() == 0 && !dispatched_any {
+                            floor_pow2(widest)
+                        } else {
+                            continue;
+                        }
+                    }
+                };
+                let Some((alloc, slice)) = pm.allocate(width) else { continue };
+                queue.mark_running(r.dnn, r.layer);
+                dispatched_any = true;
+
+                let coresident = pm.allocated_count() as u64;
+                let cycles = legacy_layer_cycles(cfg, pool, r.dnn, r.layer, slice, coresident);
+                events.push(Reverse(Completion {
+                    t_end: now + cycles,
+                    dnn: r.dnn,
+                    layer: r.layer,
+                    alloc,
+                    t_start: now,
+                }));
+            }
+        }
+
+        // ---- advance time ------------------------------------------
+        let next_completion = events.peek().map(|Reverse(c)| c.t_end);
+        let next_arrival = queue.next_arrival_after(now);
+        match (next_completion, next_arrival) {
+            (None, None) => break,
+            (None, Some(t_arr)) => {
+                now = t_arr;
+            }
+            (Some(t_done), t_arr) => {
+                if let Some(t_arr) = t_arr {
+                    if t_arr < t_done {
+                        now = t_arr;
+                        continue;
+                    }
+                }
+                now = t_done;
+                while let Some(Reverse(c)) = events.peek().copied() {
+                    if c.t_end != now {
+                        break;
+                    }
+                    events.pop();
+                    let slice = pm.slice_of(c.alloc).expect("completion of live alloc");
+                    pm.free(c.alloc);
+                    queue.mark_done(c.dnn, c.layer);
+                    let layer = &pool.dnns[c.dnn].layers[c.layer];
+                    let timing = slice_layer_timing(
+                        cfg.geom,
+                        layer.shape.gemm(),
+                        slice,
+                        FeedPolicy::Independent,
+                        &cfg.buffers,
+                    );
+                    metrics.record_dispatch(DispatchRecord {
+                        dnn: c.dnn,
+                        dnn_name: pool.dnns[c.dnn].name.clone(),
+                        layer: c.layer,
+                        layer_name: layer.name.clone(),
+                        slice,
+                        t_start: c.t_start,
+                        t_end: c.t_end,
+                        activity: timing.activity,
+                    });
+                }
+            }
+        }
+        if queue.all_done() && events.is_empty() {
+            break;
+        }
+    }
+
+    assert!(queue.all_done(), "legacy scheduler exited with pending layers");
+    metrics
+}
+
+// ---------------------------------------------------------------------
+// Golden tests: engine == legacy, bit for bit.
+// ---------------------------------------------------------------------
+
+fn assert_metrics_identical(legacy: &RunMetrics, engine: &RunMetrics, what: &str) {
+    assert_eq!(legacy.makespan, engine.makespan, "{what}: makespan");
+    assert_eq!(legacy.completion, engine.completion, "{what}: completion map");
+    assert_eq!(legacy.start, engine.start, "{what}: start map");
+    assert_eq!(legacy.total_activity, engine.total_activity, "{what}: activity");
+    assert_eq!(legacy.dispatches.len(), engine.dispatches.len(), "{what}: dispatch count");
+    for (i, (l, e)) in legacy.dispatches.iter().zip(&engine.dispatches).enumerate() {
+        assert_eq!(l, e, "{what}: dispatch record #{i}");
+    }
+}
+
+fn paper_mixes() -> Vec<(&'static str, WorkloadPool)> {
+    vec![
+        ("heavy", models::by_spec("heavy").unwrap()),
+        ("light", models::by_spec("light").unwrap()),
+    ]
+}
+
+#[test]
+fn golden_engine_matches_legacy_on_paper_mixes() {
+    for (name, pool) in paper_mixes() {
+        let cfg = SchedulerConfig::default();
+        let legacy = legacy_dynamic_run(&cfg, &pool);
+        let engine = DynamicScheduler::new(cfg).run(&pool);
+        assert_metrics_identical(&legacy, &engine, name);
+    }
+}
+
+#[test]
+fn golden_parity_across_config_axes() {
+    let variants: Vec<(&str, SchedulerConfig)> = vec![
+        (
+            "equal-share",
+            SchedulerConfig { alloc_policy: AllocPolicy::EqualShare, ..Default::default() },
+        ),
+        (
+            "interleaved",
+            SchedulerConfig { feed_model: FeedModel::Interleaved, ..Default::default() },
+        ),
+        ("dram-bound", SchedulerConfig { dram: Some(DramConfig::default()), ..Default::default() }),
+        ("narrow-min", SchedulerConfig { min_width: 32, ..Default::default() }),
+        ("impatient", SchedulerConfig { patience_divisor: 1, ..Default::default() }),
+    ];
+    for (name, pool) in paper_mixes() {
+        for (vname, cfg) in &variants {
+            let legacy = legacy_dynamic_run(cfg, &pool);
+            let engine = DynamicScheduler::new(cfg.clone()).run(&pool);
+            assert_metrics_identical(&legacy, &engine, &format!("{name}/{vname}"));
+        }
+    }
+}
+
+#[test]
+fn golden_tenant_stats_on_arrival_driven_scenario() {
+    // The serving-side view: p50/p95/p99 + miss rates from an
+    // arrival-driven scenario must match exactly too.
+    for (name, pool) in paper_mixes() {
+        let cfg = SchedulerConfig::default();
+        let spec = ScenarioSpec {
+            name: format!("{name}-poisson"),
+            arrival: ArrivalProcess::Poisson { mean_interarrival: 25_000.0 },
+            requests: 16,
+            seed: 0xFEED,
+            qos_slack: Some(2.5),
+        };
+        let scenario = Scenario::generate(&pool.dnns, &spec, &cfg);
+        let legacy = legacy_dynamic_run(&cfg, &scenario.pool);
+        let (engine_obs, engine_outcome) =
+            scenario.run(&mut DynamicScheduler::new(cfg.clone()), cfg.geom.cols);
+        assert_metrics_identical(&legacy, &engine_obs.metrics, name);
+        let legacy_outcome = scenario.analyze(&legacy);
+        assert_eq!(legacy_outcome.tenants, engine_outcome.tenants, "{name}: per-tenant stats");
+        assert_eq!(legacy_outcome.overall, engine_outcome.overall, "{name}: overall stats");
+    }
+}
+
+#[test]
+fn golden_parity_on_random_arrival_pools() {
+    prop::check("engine == legacy on random pools", 12, |rng| {
+        let cfg = GeneratorCfg {
+            num_dnns: rng.gen_range_inclusive(2, 6) as usize,
+            layers_min: 1,
+            layers_max: 8,
+            mean_interarrival: *rng.choose(&[0.0, 10_000.0, 80_000.0]),
+            dim_scale: 0.4 + rng.gen_f64(),
+        };
+        let pool = random_pool(rng, &cfg);
+        let scfg = SchedulerConfig {
+            alloc_policy: *rng.choose(&AllocPolicy::ALL),
+            feed_model: *rng.choose(&FeedModel::ALL),
+            ..Default::default()
+        };
+        let legacy = legacy_dynamic_run(&scfg, &pool);
+        let engine = DynamicScheduler::new(scfg).run(&pool);
+        prop::ensure_eq(legacy.makespan, engine.makespan, "makespan")?;
+        prop::ensure_eq(&legacy.dispatches, &engine.dispatches, "dispatch log")
+    });
+}
+
+// ---------------------------------------------------------------------
+// Trait-contract property: ANY Scheduler executes every layer exactly
+// once, in chain order, never before arrival.
+// ---------------------------------------------------------------------
+
+/// A policy that exists only in this test: earliest ready (dnn, layer)
+/// takes the whole array, FIFO.  If the contract holds for this too, it
+/// is a property of the engine + trait, not of any particular policy.
+struct TestFifo(SchedulerConfig);
+
+impl Scheduler for TestFifo {
+    fn name(&self) -> &'static str {
+        "test-fifo"
+    }
+    fn plan(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
+        if !s.partitions.fully_free() {
+            return Vec::new();
+        }
+        s.queue
+            .ready_at(s.now)
+            .iter()
+            .min_by_key(|r| (r.dnn, r.layer))
+            .map(|r| {
+                vec![Allocation {
+                    dnn: r.dnn,
+                    layer: r.layer,
+                    slice: PartitionSlice::new(0, self.0.geom.cols),
+                }]
+            })
+            .unwrap_or_default()
+    }
+    fn exec(
+        &self,
+        s: &SystemState<'_>,
+        dnn: DnnId,
+        layer: LayerId,
+        slice: PartitionSlice,
+        _coresident: u64,
+    ) -> LayerExec {
+        let gemm = s.pool.dnns[dnn].layers[layer].shape.gemm();
+        let t =
+            slice_layer_timing(self.0.geom, gemm, slice, FeedPolicy::Independent, &self.0.buffers);
+        LayerExec { cycles: t.cycles, activity: t.activity }
+    }
+}
+
+/// The contract every `Scheduler` implementation must satisfy on chain
+/// pools: one dispatch per layer, in chain order, non-overlapping within
+/// a DNN, never before the DNN's arrival.
+fn check_contract(pool: &WorkloadPool, m: &RunMetrics, who: &str) -> Result<(), String> {
+    prop::ensure_eq(m.dispatches.len(), pool.total_layers(), &format!("{who}: dispatch count"))?;
+    for (di, dnn) in pool.dnns.iter().enumerate() {
+        let mut recs: Vec<&DispatchRecord> =
+            m.dispatches.iter().filter(|d| d.dnn == di).collect();
+        prop::ensure_eq(recs.len(), dnn.layers.len(), &format!("{who}: layers of {}", dnn.name))?;
+        recs.sort_by_key(|d| (d.t_start, d.layer));
+        for (i, r) in recs.iter().enumerate() {
+            prop::ensure_eq(r.layer, i, &format!("{who}: chain order of {}", dnn.name))?;
+            prop::ensure(
+                r.t_start >= dnn.arrival_cycles,
+                &format!("{who}: {} layer {} started before arrival", dnn.name, r.layer),
+            )?;
+        }
+        for w in recs.windows(2) {
+            prop::ensure(
+                w[0].t_end <= w[1].t_start,
+                &format!("{who}: {} layers overlap", dnn.name),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn every_scheduler_runs_each_layer_once_in_chain_order() {
+    prop::check("scheduler trait contract", 10, |rng| {
+        let gcfg = GeneratorCfg {
+            num_dnns: rng.gen_range_inclusive(2, 6) as usize,
+            layers_min: 1,
+            layers_max: 6,
+            mean_interarrival: *rng.choose(&[0.0, 20_000.0]),
+            dim_scale: 0.5 + rng.gen_f64() * 0.5,
+        };
+        let pool = random_pool(rng, &gcfg);
+        let cfg = SchedulerConfig::default();
+
+        check_contract(&pool, &DynamicScheduler::new(cfg.clone()).run(&pool), "dynamic")?;
+        check_contract(&pool, &SequentialBaseline::new(cfg.clone()).run(&pool), "sequential")?;
+        check_contract(&pool, &StaticPartitioning::new(cfg.clone()).run(&pool), "static")?;
+        check_contract(&pool, &MultiArrayBank::split_of(&cfg, 2).run(&pool), "multi-array")?;
+        check_contract(
+            &pool,
+            &Engine::execute(&pool, cfg.geom.cols, &mut TestFifo(cfg.clone())),
+            "test-fifo",
+        )
+    });
+}
+
+// ---------------------------------------------------------------------
+// Cross-policy sanity on the shared engine.
+// ---------------------------------------------------------------------
+
+#[test]
+fn all_four_policies_run_the_heavy_mix_through_one_engine() {
+    let cfg = SchedulerConfig::default();
+    let pool = models::by_spec("heavy").unwrap();
+    let layers = pool.total_layers();
+    let runs = [
+        Engine::execute(&pool, cfg.geom.cols, &mut DynamicScheduler::new(cfg.clone())),
+        Engine::execute(&pool, cfg.geom.cols, &mut SequentialBaseline::new(cfg.clone())),
+        Engine::execute(&pool, cfg.geom.cols, &mut StaticPartitioning::new(cfg.clone())),
+        MultiArrayBank::split_of(&cfg, 4).run(&pool),
+    ];
+    for m in &runs {
+        assert_eq!(m.dispatches.len(), layers);
+        assert!(m.makespan > 0);
+    }
+    // And the paper's ordering holds: dynamic <= sequential on the mixes.
+    assert!(runs[0].makespan <= runs[1].makespan);
+}
