@@ -30,6 +30,7 @@ fn main() {
         qos_slack: 3.0,
         bursty: None,
         seed: 7,
+        ..SweepGrid::default()
     };
     let base = SchedulerConfig::default();
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);

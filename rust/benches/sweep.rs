@@ -23,6 +23,7 @@ fn bench_grid() -> SweepGrid {
         qos_slack: 3.0,
         bursty: None,
         seed: 11,
+        ..SweepGrid::default()
     }
 }
 

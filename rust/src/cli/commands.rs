@@ -8,6 +8,7 @@ use super::args::ParsedArgs;
 use crate::config::{ArrivalKind, RunConfig};
 use crate::coordinator::scheduler::{AllocPolicy, FeedModel};
 use crate::coordinator::static_part::StaticPartitioning;
+use crate::mem::{ArbitrationMode, MemConfig};
 use crate::report;
 use crate::sweep::{run_sweep, SweepGrid};
 use crate::util::stats::fmt_si;
@@ -21,11 +22,13 @@ mtsa — multi-tenant systolic-array accelerator (Reshadi & Gregg, PDP'23)
 USAGE:
   mtsa zoo                               print the Table-1 workload zoo
   mtsa run <heavy|light|model,...>       run dynamic vs sequential
-       [--config <file>] [--policy widest|equal] [--static] [--detail]
+       [--config <file>] [--policy widest|equal|mem-aware] [--mem]
+       [--static] [--detail]
   mtsa sweep                             parallel scenario sweep (SLA report)
        [--config <file>] [--mixes heavy,light] [--rates 0,20000,100000]
-       [--policies widest,equal] [--feeds independent,interleaved]
-       [--geoms 128] [--requests 12] [--slack 3.0] [--burst <size>]
+       [--policies widest,equal,mem-aware] [--feeds independent,interleaved]
+       [--geoms 128] [--bandwidths 8,32,128] [--arbitrations fair,weighted,priority]
+       [--requests 12] [--slack 3.0] [--burst <size>]
        [--seed 42] [--threads N] [--json <file>]
   mtsa trace <heavy|light|model,...>     write Scale-Sim/Accelergy CSVs
        [--config <file>] [--out <dir>]
@@ -82,13 +85,23 @@ fn load_config(args: &ParsedArgs) -> Result<RunConfig> {
 }
 
 fn cmd_run(args: &ParsedArgs) -> Result<()> {
-    args.ensure_known(&["config", "policy"], &["static", "detail"])?;
+    args.ensure_known(&["config", "policy"], &["static", "detail", "mem"])?;
     let spec = args.positionals.first().map(String::as_str).unwrap_or("heavy");
     let pool = resolve_pool(spec)?;
     let mut cfg = load_config(args)?;
     if let Some(p) = args.opt("policy") {
         cfg.scheduler.alloc_policy =
             p.parse::<AllocPolicy>().map_err(|e| anyhow!("--policy: {e}"))?;
+    }
+    if args.has("mem") && cfg.scheduler.mem.is_none() {
+        // Shorthand: shared memory hierarchy at defaults ([mem] config
+        // section for the full knobs).  Subsumes the [dram] bound —
+        // keeping its configured interface parameters, since [mem]
+        // shares the same words/cycle + burst model.
+        cfg.scheduler.mem = Some(MemConfig {
+            dram: cfg.scheduler.dram.take().unwrap_or_default(),
+            ..MemConfig::default()
+        });
     }
     let model = cfg.energy_model();
     let g = report::run_group(&pool, &cfg.scheduler);
@@ -129,6 +142,11 @@ fn cmd_run(args: &ParsedArgs) -> Result<()> {
         "".into(),
     ]);
     println!("{}", t.render());
+
+    if cfg.scheduler.mem.is_some() {
+        println!("shared memory hierarchy (dynamic run):");
+        println!("{}", report::mem_table(&g.dynamic, &model).render());
+    }
 
     if args.has("static") {
         let stat = StaticPartitioning::new(cfg.scheduler.clone()).run(&pool);
@@ -177,8 +195,9 @@ where
 fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
     args.ensure_known(
         &[
-            "config", "mixes", "rates", "policies", "feeds", "geoms", "requests", "slack",
-            "burst", "burst-within", "seed", "threads", "json",
+            "config", "mixes", "rates", "policies", "feeds", "geoms", "bandwidths",
+            "arbitrations", "requests", "slack", "burst", "burst-within", "seed", "threads",
+            "json",
         ],
         &[],
     )?;
@@ -221,6 +240,18 @@ fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
         grid.geoms = parse_list::<u64>(v, "geoms")?;
         if grid.geoms.iter().any(|c| *c < 8) {
             bail!("--geoms values must be >= 8, got {:?}", grid.geoms);
+        }
+    }
+    if let Some(v) = args.opt("bandwidths") {
+        grid.bandwidths = parse_list::<f64>(v, "bandwidths")?;
+        if grid.bandwidths.iter().any(|b| !b.is_finite() || *b <= 0.0) {
+            bail!("--bandwidths values must be finite and > 0, got {:?}", grid.bandwidths);
+        }
+    }
+    if let Some(v) = args.opt("arbitrations") {
+        grid.arbitrations = parse_list::<ArbitrationMode>(v, "arbitrations")?;
+        if grid.bandwidths.is_empty() {
+            bail!("--arbitrations requires --bandwidths (the contention axis)");
         }
     }
     grid.requests = args.opt_u64("requests", grid.requests as u64)?.max(1) as usize;
@@ -438,9 +469,59 @@ mod tests {
             vec!["sweep".to_string(), "--policies".into(), "greedy".into()],
             vec!["sweep".to_string(), "--feeds".into(), "psychic".into()],
             vec!["sweep".to_string(), "--mixes".into(), "NotAModel".into()],
+            vec!["sweep".to_string(), "--bandwidths".into(), "0".into()],
+            vec!["sweep".to_string(), "--arbitrations".into(), "fair".into()],
+            vec![
+                "sweep".to_string(),
+                "--bandwidths".into(),
+                "8".into(),
+                "--arbitrations".into(),
+                "psychic".into(),
+            ],
         ] {
             let args = ParsedArgs::parse(&bad).unwrap();
             assert!(dispatch(&args).is_err(), "should reject {bad:?}");
         }
+    }
+
+    #[test]
+    fn run_with_mem_prints_contention_table() {
+        let args =
+            ParsedArgs::parse(&["run".into(), "NCF".into(), "--mem".into()]).unwrap();
+        dispatch(&args).unwrap();
+    }
+
+    #[test]
+    fn sweep_contention_grid_emits_mem_json() {
+        let out = std::env::temp_dir().join(format!("mtsa-memsweep-{}.json", std::process::id()));
+        let args = ParsedArgs::parse(&[
+            "sweep".into(),
+            "--mixes".into(),
+            "NCF".into(),
+            "--rates".into(),
+            "0".into(),
+            "--policies".into(),
+            "widest,mem-aware".into(),
+            "--feeds".into(),
+            "independent".into(),
+            "--bandwidths".into(),
+            "8,64".into(),
+            "--arbitrations".into(),
+            "fair,priority".into(),
+            "--requests".into(),
+            "3".into(),
+            "--threads".into(),
+            "2".into(),
+            "--json".into(),
+            out.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        dispatch(&args).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let points = parsed.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 2 * 2 * 2, "policies x bandwidths x arbitrations");
+        assert!(points.iter().all(|p| p.get("mem").is_some()));
+        let _ = std::fs::remove_file(&out);
     }
 }

@@ -25,6 +25,13 @@
 //! words_per_cycle = 64.0
 //! burst_latency = 100
 //!
+//! [mem]                    # shared memory hierarchy, see docs/memory.md
+//! enabled = false          # subsumes [dram]; the two are exclusive
+//! words_per_cycle = 64.0
+//! burst_latency = 100
+//! arbitration = "fair"     # fair | weighted | priority
+//! banks = 8
+//!
 //! [scenario]              # arrival/QoS defaults, see docs/scenarios.md
 //! arrival = "poisson"     # batch | poisson | bursty
 //! mean_interarrival = 50000.0
@@ -39,6 +46,7 @@ use anyhow::{bail, Context, Result};
 
 use super::toml::TomlDoc;
 use crate::coordinator::scheduler::{AllocPolicy, FeedModel, SchedulerConfig};
+use crate::mem::{ArbitrationMode, MemConfig};
 use crate::util::UnknownTag;
 use crate::energy::components::{EnergyModel, Precision};
 use crate::sim::dataflow::ArrayGeometry;
@@ -159,7 +167,7 @@ impl RunConfig {
         let doc = TomlDoc::parse(text).context("parsing config")?;
         let mut cfg = RunConfig::default();
 
-        let known = ["array", "buffers", "scheduler", "dram", "energy", "scenario"];
+        let known = ["array", "buffers", "scheduler", "dram", "mem", "energy", "scenario"];
         for s in doc.section_names() {
             if !known.contains(&s) {
                 bail!("unknown config section [{s}] (known: {known:?})");
@@ -235,6 +243,35 @@ impl RunConfig {
                 d.burst_latency = l;
             }
             cfg.scheduler.dram = Some(d);
+        }
+
+        if doc.get("mem", "enabled").and_then(|v| v.as_bool()).unwrap_or(false) {
+            if cfg.scheduler.dram.is_some() {
+                bail!(
+                    "[mem] and [dram] are mutually exclusive: the shared memory hierarchy \
+                     subsumes the isolated DRAM bound (see docs/memory.md)"
+                );
+            }
+            let mut m = MemConfig::default();
+            if let Some(w) = f64_of("mem", "words_per_cycle") {
+                if w <= 0.0 {
+                    bail!("mem.words_per_cycle must be positive");
+                }
+                m.dram.words_per_cycle = w;
+            }
+            if let Some(l) = u64_of("mem", "burst_latency") {
+                m.dram.burst_latency = l;
+            }
+            if let Some(a) = doc.get("mem", "arbitration").and_then(|v| v.as_str()) {
+                m.arbitration = a.parse::<ArbitrationMode>().context("in [mem] arbitration")?;
+            }
+            if let Some(b) = u64_of("mem", "banks") {
+                if b == 0 {
+                    bail!("mem.banks must be >= 1");
+                }
+                m.banks = b;
+            }
+            cfg.scheduler.mem = Some(m);
         }
 
         let sc = &mut cfg.scenario;
@@ -337,6 +374,41 @@ mod tests {
     }
 
     #[test]
+    fn mem_section_round_trip() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            [mem]
+            enabled = true
+            words_per_cycle = 32.0
+            burst_latency = 40
+            arbitration = "weighted"
+            banks = 16
+            "#,
+        )
+        .unwrap();
+        let m = cfg.scheduler.mem.unwrap();
+        assert_eq!(m.dram.words_per_cycle, 32.0);
+        assert_eq!(m.dram.burst_latency, 40);
+        assert_eq!(m.arbitration, ArbitrationMode::WeightedByColumns);
+        assert_eq!(m.banks, 16);
+        assert!(cfg.scheduler.dram.is_none());
+
+        // Disabled (the default): no mem system, bit-for-bit today's runs.
+        let off = RunConfig::from_toml("[mem]\nenabled = false\nbanks = 4").unwrap();
+        assert!(off.scheduler.mem.is_none());
+        assert!(RunConfig::from_toml("").unwrap().scheduler.mem.is_none());
+    }
+
+    #[test]
+    fn mem_and_dram_are_mutually_exclusive() {
+        let e = RunConfig::from_toml(
+            "[dram]\nenabled = true\n[mem]\nenabled = true",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("mutually exclusive"), "{e}");
+    }
+
+    #[test]
     fn rejects_bad_values() {
         for bad in [
             "[array]\nrows = 0",
@@ -346,6 +418,9 @@ mod tests {
             "[buffers]\ndtype_bytes = 3",
             "[typo]\nx = 1",
             "[dram]\nenabled = true\nwords_per_cycle = -1.0",
+            "[mem]\nenabled = true\nwords_per_cycle = -2.0",
+            "[mem]\nenabled = true\nbanks = 0",
+            "[mem]\nenabled = true\narbitration = \"psychic\"",
             "[scenario]\narrival = \"fractal\"",
             "[scenario]\nmean_interarrival = 0",
             "[scenario]\nburst_size = 0",

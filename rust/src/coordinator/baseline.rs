@@ -38,6 +38,10 @@ impl Scheduler for SequentialBaseline {
         "sequential"
     }
 
+    fn mem_spec(&self) -> Option<crate::mem::MemSpec> {
+        self.cfg.mem_spec()
+    }
+
     fn plan(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
         // Strictly one layer at a time: wait for the array to drain.
         if !s.partitions.fully_free() {

@@ -5,6 +5,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::mem::MemStats;
 use crate::sim::activity::Activity;
 use crate::sim::dataflow::ArrayGeometry;
 use crate::sim::partitioned::PartitionSlice;
@@ -43,9 +44,20 @@ pub struct RunMetrics {
     pub dispatches: Vec<DispatchRecord>,
     /// Aggregate activity (for the energy estimator).
     pub total_activity: Activity,
+    /// Per-tenant memory-hierarchy stats (name → stats); empty unless the
+    /// run had `[mem]` enabled.
+    pub mem: BTreeMap<String, MemStats>,
+    /// All tenants pooled ([`RunMetrics::mem`] summed).
+    pub mem_total: MemStats,
 }
 
 impl RunMetrics {
+    /// Accumulate one layer's memory-side record under its tenant.
+    pub fn record_mem(&mut self, tenant: &str, stats: &MemStats) {
+        self.mem.entry(tenant.to_string()).or_default().add(stats);
+        self.mem_total.add(stats);
+    }
+
     pub fn record_dispatch(&mut self, rec: DispatchRecord) {
         self.start.entry(rec.dnn_name.clone()).or_insert(rec.t_start);
         let done = self.completion.entry(rec.dnn_name.clone()).or_insert(0);
@@ -263,6 +275,21 @@ mod tests {
         // Cross-check against the canonical util::stats definition.
         let pairs = [(250u64, 200u64), (100, 150)];
         assert!((crate::util::stats::deadline_miss_rate(&pairs) - s.miss_rate()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_mem_accumulates_per_tenant_and_total() {
+        let mut m = RunMetrics::default();
+        let s1 = MemStats { layers: 1, stall_cycles: 10, busy_cycles: 100, xfer_words: 500, ..Default::default() };
+        let s2 = MemStats { layers: 1, stall_cycles: 30, busy_cycles: 100, xfer_words: 700, ..Default::default() };
+        m.record_mem("a", &s1);
+        m.record_mem("a", &s2);
+        m.record_mem("b", &s2);
+        assert_eq!(m.mem.len(), 2);
+        assert_eq!(m.mem["a"].stall_cycles, 40);
+        assert_eq!(m.mem["a"].layers, 2);
+        assert_eq!(m.mem_total.xfer_words, 1900);
+        assert_eq!(m.mem_total.layers, 3);
     }
 
     #[test]

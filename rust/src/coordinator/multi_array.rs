@@ -57,6 +57,9 @@ pub struct MultiArrayPolicy {
     /// Buffer share scales with the chip fraction.
     bufs_each: BufferConfig,
     dram: Option<crate::sim::dram::DramConfig>,
+    /// Shared memory hierarchy over the pooled silicon (chips contend
+    /// for the one interface like partitions do).
+    mem_spec: Option<crate::mem::MemSpec>,
     /// DNN → chip, filled on arrival.
     assignment: BTreeMap<DnnId, usize>,
     /// Per-chip queues in assignment (= arrival) order.
@@ -72,6 +75,7 @@ impl MultiArrayPolicy {
             num_arrays: bank.num_arrays,
             bufs_each: bank.cfg.buffers.share(bank.geom_each.cols, bank.cfg.geom.cols),
             dram: bank.cfg.dram.clone(),
+            mem_spec: bank.cfg.mem_spec(),
             assignment: BTreeMap::new(),
             fifo: vec![Vec::new(); bank.num_arrays],
             load: vec![0; bank.num_arrays],
@@ -87,6 +91,10 @@ impl MultiArrayPolicy {
 impl Scheduler for MultiArrayPolicy {
     fn name(&self) -> &'static str {
         "multi-array"
+    }
+
+    fn mem_spec(&self) -> Option<crate::mem::MemSpec> {
+        self.mem_spec
     }
 
     /// Least-loaded assignment (by assigned MACs, then chip index) at the

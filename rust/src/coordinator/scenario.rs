@@ -135,6 +135,10 @@ impl Observer for ScenarioObserver {
     fn on_deadline(&mut self, dnn: DnnId, t: u64, met: bool) {
         self.deadline_events.push((dnn, t, met));
     }
+
+    fn on_mem(&mut self, _dnn: DnnId, tenant: &str, stats: &crate::mem::MemStats) {
+        self.metrics.record_mem(tenant, stats);
+    }
 }
 
 impl Scenario {

@@ -24,15 +24,18 @@
 //! `rust/tests/engine_parity.rs` pins this port bit-for-bit against the
 //! pre-refactor fused batch loop.
 
+use std::collections::BTreeMap;
 use std::str::FromStr;
 
 use super::metrics::RunMetrics;
+use crate::mem::{MemConfig, MemSpec};
 use crate::sim::buffers::BufferConfig;
 use crate::sim::dataflow::ArrayGeometry;
 use crate::sim::dram::DramConfig;
 use crate::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
 use crate::sim_core::{Allocation, Engine, LayerExec, Scheduler, SystemState};
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
+use crate::workloads::shapes::GemmDims;
 
 pub use crate::util::UnknownTag;
 
@@ -88,19 +91,29 @@ pub enum AllocPolicy {
     /// `cols / n_available` (power-of-two ladder), regardless of demand.
     /// Kept as an ablation (`ablation_alloc_policy`).
     EqualShare,
+    /// MoCA-style memory-aware variant of `WidestToHeaviest` (arXiv
+    /// 2305.05843): reads the bandwidth arbiter's feedback
+    /// ([`SystemState::mem`]) and *throttles* memory-bound tenants by
+    /// never co-running two memory-bound layers — time-multiplexing a
+    /// saturated interface beats processor-sharing it (both finish later
+    /// than either alone).  Identical to `WidestToHeaviest` when the
+    /// `[mem]` hierarchy is disabled.
+    MemAware,
 }
 
 impl AllocPolicy {
     /// Every variant, in tag order.
-    pub const ALL: [AllocPolicy; 2] = [AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare];
+    pub const ALL: [AllocPolicy; 3] =
+        [AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare, AllocPolicy::MemAware];
     /// The tags of [`AllocPolicy::ALL`], in the same order.
-    pub const TAGS: [&'static str; 2] = ["widest", "equal"];
+    pub const TAGS: [&'static str; 3] = ["widest", "equal", "mem-aware"];
 
     /// Stable config/CLI/report name (round-trips through [`FromStr`]).
     pub fn tag(self) -> &'static str {
         match self {
             AllocPolicy::WidestToHeaviest => Self::TAGS[0],
             AllocPolicy::EqualShare => Self::TAGS[1],
+            AllocPolicy::MemAware => Self::TAGS[2],
         }
     }
 }
@@ -131,8 +144,13 @@ pub struct SchedulerConfig {
     /// running).  Folding a wide-M layer into a sliver multiplies its fold
     /// count, so impatience costs far more than waiting.
     pub patience_divisor: u64,
-    /// Apply the DRAM bandwidth bound to layer times.
+    /// Apply the *isolated* DRAM bandwidth bound to layer times
+    /// (mutually exclusive with [`SchedulerConfig::mem`]).
     pub dram: Option<DramConfig>,
+    /// Simulate the *shared* memory hierarchy (`[mem]` config section):
+    /// cross-tenant bandwidth arbitration + banked buffer allocation on
+    /// the engine.  Subsumes `dram`.
+    pub mem: Option<MemConfig>,
 }
 
 impl Default for SchedulerConfig {
@@ -146,7 +164,26 @@ impl Default for SchedulerConfig {
             alloc_policy: AllocPolicy::WidestToHeaviest,
             patience_divisor: 4,
             dram: None,
+            mem: None,
         }
+    }
+}
+
+impl SchedulerConfig {
+    /// The [`MemSpec`] this config asks the engine to simulate (the
+    /// shared `mem_spec` implementation of every shipped policy).
+    ///
+    /// Panics if both `dram` and `mem` are set: the isolated bound is
+    /// already folded into `exec` cycles, so layering the shared
+    /// hierarchy on top would double-count transfer time.  Enforced here
+    /// — the one place every policy passes through — so the invariant
+    /// holds for all of them, not just the dynamic scheduler.
+    pub fn mem_spec(&self) -> Option<MemSpec> {
+        assert!(
+            self.dram.is_none() || self.mem.is_none(),
+            "[dram] (isolated bound) and [mem] (shared hierarchy) are mutually exclusive"
+        );
+        self.mem.map(|cfg| MemSpec { cfg, geom: self.geom, buffers: self.buffers })
     }
 }
 
@@ -163,16 +200,41 @@ fn ceil_pow2(x: u64) -> u64 {
 }
 
 /// The dynamic partitioning policy (stateless between decision points:
-/// every plan is a pure function of the observable [`SystemState`]).
+/// every plan is a pure function of the observable [`SystemState`] —
+/// the one cache below memoizes a run-constant).
 #[derive(Debug, Clone)]
 pub struct DynamicScheduler {
     cfg: SchedulerConfig,
+    /// Memo for [`intrinsically_bound`], keyed by GEMM shape `(sr, k,
+    /// m)` — the estimate is a pure function of the shape and the fixed
+    /// config, and `plan` re-evaluates it for every ready layer at every
+    /// decision point (mem-aware policy only; empty otherwise).
+    bound_cache: BTreeMap<(u64, u64, u64), bool>,
+}
+
+/// True when the layer would be memory-bound on a `width` slice even
+/// with the *whole* interface to itself — transfer need (proportional
+/// share estimate) beats compute need.  The `mem-aware` policy's
+/// admission-time signal.  Deliberately *intrinsic*: observed stall
+/// fractions measure sharing (a compute-bound victim co-running with a
+/// memory hog stalls too), so classifying from them would serialize the
+/// victim behind its aggressor.
+fn intrinsically_bound(cfg: &SchedulerConfig, mem: &MemConfig, gemm: GemmDims, width: u64) -> bool {
+    let width = width.clamp(1, cfg.geom.cols);
+    let t = slice_layer_timing(
+        cfg.geom,
+        gemm,
+        PartitionSlice::new(0, width),
+        FeedPolicy::Independent,
+        &cfg.buffers,
+    );
+    mem.dram.transfer_cycles(&t.activity) > t.cycles
 }
 
 impl DynamicScheduler {
     pub fn new(cfg: SchedulerConfig) -> DynamicScheduler {
         assert!(cfg.min_width >= 1 && cfg.min_width <= cfg.geom.cols);
-        DynamicScheduler { cfg }
+        DynamicScheduler { cfg, bound_cache: BTreeMap::new() }
     }
 
     pub fn config(&self) -> &SchedulerConfig {
@@ -190,6 +252,10 @@ impl DynamicScheduler {
 impl Scheduler for DynamicScheduler {
     fn name(&self) -> &'static str {
         "dynamic"
+    }
+
+    fn mem_spec(&self) -> Option<MemSpec> {
+        self.cfg.mem_spec()
     }
 
     /// `Partition_Calculation` + `Task_Assignment` over the ready set,
@@ -211,18 +277,44 @@ impl Scheduler for DynamicScheduler {
             floor_pow2((cfg.geom.cols / n_avail).max(1)).clamp(cfg.min_width, cfg.geom.cols);
 
         let mut dispatched_any = false;
+        // mem-aware throttle state: a memory-bound layer dispatched this
+        // round counts like one already in flight.
+        let mut bound_in_plan = false;
         for r in ready {
             // Width demand: a layer gains nothing beyond its GEMM column
             // count M (Task_Assignment's "layers with higher dimensions
             // to partitions with higher resources").
-            let m_cols = s.pool.dnns[r.dnn].layers[r.layer].shape.gemm().m;
-            let demand = ceil_pow2(m_cols).clamp(cfg.min_width, cfg.geom.cols);
+            let gemm = s.pool.dnns[r.dnn].layers[r.layer].shape.gemm();
+            let demand = ceil_pow2(gemm.m).clamp(cfg.min_width, cfg.geom.cols);
+
+            // MoCA-style throttle (mem-aware policy): a layer headed for
+            // the DRAM wall is deferred while another memory-bound layer
+            // is in flight — two saturated transfers processor-sharing
+            // the interface both finish later than either alone, so
+            // time-multiplexing them wins p95 latency AND residency
+            // energy.  Never defers when nothing is running (progress).
+            let bound = cfg.alloc_policy == AllocPolicy::MemAware
+                && match &cfg.mem {
+                    Some(mem) => *self
+                        .bound_cache
+                        .entry((gemm.sr, gemm.k, gemm.m))
+                        .or_insert_with(|| intrinsically_bound(cfg, mem, gemm, demand)),
+                    None => false,
+                };
+            if bound
+                && (pm.allocated_count() > 0 || dispatched_any)
+                && (bound_in_plan
+                    || s.mem.is_some_and(|fb| fb.bound_inflight_excluding(r.dnn) > 0))
+            {
+                continue; // throttled: wait for the bound co-runner to drain
+            }
 
             // First layer on a fully idle array: all PEs (Line 6).
             if pm.fully_free() && n_avail == 1 {
                 let (_, slice) = pm.allocate(cfg.geom.cols).expect("full array free");
                 out.push(Allocation { dnn: r.dnn, layer: r.layer, slice });
                 dispatched_any = true;
+                bound_in_plan |= bound;
                 continue;
             }
 
@@ -239,8 +331,9 @@ impl Scheduler for DynamicScheduler {
                 // demand cannot be reasonably met WAITS for merges
                 // instead of exploding its fold count in a sliver —
                 // unless nothing is running (progress guarantee: take the
-                // best slice available).
-                AllocPolicy::WidestToHeaviest => {
+                // best slice available).  The mem-aware policy carves
+                // identically; its throttle already ran above.
+                AllocPolicy::WidestToHeaviest | AllocPolicy::MemAware => {
                     let width = demand.min(floor_pow2(widest));
                     let acceptable = (demand / cfg.patience_divisor).max(cfg.min_width);
                     if width >= acceptable {
@@ -255,6 +348,7 @@ impl Scheduler for DynamicScheduler {
             let Some((_, slice)) = pm.allocate(width) else { continue };
             out.push(Allocation { dnn: r.dnn, layer: r.layer, slice });
             dispatched_any = true;
+            bound_in_plan |= bound;
         }
         out
     }
@@ -337,7 +431,14 @@ mod tests {
         }
         // TAGS is exactly the tag() image, in order.
         assert_eq!(FeedModel::TAGS, [FeedModel::Independent.tag(), FeedModel::Interleaved.tag()]);
-        assert_eq!(AllocPolicy::TAGS, [AllocPolicy::WidestToHeaviest.tag(), AllocPolicy::EqualShare.tag()]);
+        assert_eq!(
+            AllocPolicy::TAGS,
+            [
+                AllocPolicy::WidestToHeaviest.tag(),
+                AllocPolicy::EqualShare.tag(),
+                AllocPolicy::MemAware.tag()
+            ]
+        );
     }
 
     #[test]
@@ -348,7 +449,7 @@ mod tests {
         assert!(msg.contains("independent") && msg.contains("interleaved"), "{msg}");
         let e = "greedy".parse::<AllocPolicy>().unwrap_err();
         let msg = e.to_string();
-        assert!(msg.contains("widest") && msg.contains("equal"), "{msg}");
+        assert!(msg.contains("widest") && msg.contains("equal") && msg.contains("mem-aware"), "{msg}");
     }
 
     #[test]
@@ -479,5 +580,72 @@ mod tests {
         for (x, y) in a.dispatches.iter().zip(&b.dispatches) {
             assert_eq!(x, y);
         }
+    }
+
+    fn tight_mem() -> crate::mem::MemConfig {
+        crate::mem::MemConfig {
+            dram: DramConfig { words_per_cycle: 1.0, burst_latency: 10 },
+            arbitration: crate::mem::ArbitrationMode::FairShare,
+            banks: 8,
+        }
+    }
+
+    #[test]
+    fn mem_aware_serializes_bound_tenants_and_wins_latency() {
+        // Two identical strongly memory-bound single-layer tenants on a
+        // starved 1 word/cycle interface.  Plain widest co-runs them at
+        // half bandwidth each (both finish ~2T); mem-aware time-
+        // multiplexes (T, then 2T) — strictly better mean completion at
+        // (essentially) the same makespan, plus visible stall stats.
+        let pool = WorkloadPool::new("t", vec![fc_dnn("a", &[64], 0), fc_dnn("b", &[64], 0)]);
+        let widest_cfg = SchedulerConfig { mem: Some(tight_mem()), ..Default::default() };
+        let aware_cfg = SchedulerConfig {
+            alloc_policy: AllocPolicy::MemAware,
+            mem: Some(tight_mem()),
+            ..Default::default()
+        };
+        let widest = DynamicScheduler::new(widest_cfg).run(&pool);
+        let aware = DynamicScheduler::new(aware_cfg).run(&pool);
+        assert!(
+            crate::report::mean_completion(&aware) <= 0.9 * crate::report::mean_completion(&widest),
+            "mem-aware {:.0} should beat widest {:.0} on mean completion",
+            crate::report::mean_completion(&aware),
+            crate::report::mean_completion(&widest),
+        );
+        // Contention is visible in the per-tenant stats.
+        assert_eq!(widest.mem.len(), 2);
+        assert!(widest.mem_total.stall_cycles > 0, "starved interface must stall");
+        assert!(widest.mem_total.achieved_words_per_cycle() <= 1.0 + 1e-9);
+        assert!(aware.mem_total.stall_cycles < widest.mem_total.stall_cycles);
+    }
+
+    #[test]
+    fn mem_aware_without_mem_matches_widest_bitwise() {
+        let pool = WorkloadPool::new(
+            "t",
+            vec![fc_dnn("a", &[64, 64, 64], 0), fc_dnn("b", &[256, 64], 2_000)],
+        );
+        let widest = DynamicScheduler::new(SchedulerConfig::default()).run(&pool);
+        let aware = DynamicScheduler::new(SchedulerConfig {
+            alloc_policy: AllocPolicy::MemAware,
+            ..Default::default()
+        })
+        .run(&pool);
+        assert_eq!(widest.makespan, aware.makespan);
+        assert_eq!(widest.dispatches, aware.dispatches);
+        assert!(aware.mem.is_empty(), "no [mem] => no mem stats");
+    }
+
+    #[test]
+    #[should_panic(expected = "mutually exclusive")]
+    fn dram_and_mem_cannot_coexist() {
+        // Enforced at the one place every policy passes through on its
+        // way into the engine.
+        let cfg = SchedulerConfig {
+            dram: Some(DramConfig::default()),
+            mem: Some(tight_mem()),
+            ..Default::default()
+        };
+        let _ = cfg.mem_spec();
     }
 }

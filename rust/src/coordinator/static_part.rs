@@ -59,6 +59,10 @@ impl Scheduler for StaticPartitioning {
         "static"
     }
 
+    fn mem_spec(&self) -> Option<crate::mem::MemSpec> {
+        self.cfg.mem_spec()
+    }
+
     fn plan(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
         let width = self.width_for(s.pool);
         // At most one layer per DNN (the lowest-index ready one), into

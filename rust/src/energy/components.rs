@@ -120,6 +120,20 @@ impl EnergyModel {
                 + a.dram_accesses() as f64 * c.dram_pj_per_word)
     }
 
+    /// Idle-leakage energy of memory-stall residency, in joules:
+    /// `stall_col_cycles` column-cycles of PEs held by a partition but
+    /// starved by the DRAM interface (see
+    /// [`MemStats::stall_col_cycles`](crate::mem::MemStats)), each
+    /// burning a column of idle PEs.  This is *attribution*, not new
+    /// energy: stalls stretch residency and the makespan, so the
+    /// whole-run [`EnergyModel::static_j`] term already contains it —
+    /// this prices the share a specific tenant's stalls caused.
+    pub fn stall_j(&self, stall_col_cycles: u64) -> f64 {
+        1e-12
+            * (stall_col_cycles.saturating_mul(self.geom.rows)) as f64
+            * self.components.pe_idle_pj_per_cycle
+    }
+
     /// Static/idle energy over a span of cycles, in joules.
     ///
     /// `busy_pe_cycles` = Σ MACs: a PE doing a MAC burns `mac_pj` (already
@@ -181,6 +195,21 @@ mod tests {
         assert!(idle_all > busy_half && busy_half > busy_all);
         // With every PE busy, only control + SRAM leakage remain.
         assert!(busy_all > 0.0);
+    }
+
+    #[test]
+    fn stall_energy_scales_with_held_columns() {
+        let m = EnergyModel::default_128();
+        let one_col = m.stall_j(1_000);
+        let four_col = m.stall_j(4_000);
+        assert!(one_col > 0.0);
+        assert!((four_col / one_col - 4.0).abs() < 1e-9);
+        // A full-width stall for S cycles equals S cycles of the PE-idle
+        // share of the whole-array static rate.
+        let s = 10_000u64;
+        let full = m.stall_j(s * m.geom.cols);
+        let idle_all = 1e-12 * (s * m.geom.pes()) as f64 * m.components.pe_idle_pj_per_cycle;
+        assert!((full - idle_all).abs() < 1e-15);
     }
 
     #[test]

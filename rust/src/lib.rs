@@ -31,6 +31,8 @@ pub mod sim;
 
 pub mod energy;
 
+pub mod mem;
+
 pub mod sim_core;
 
 pub mod coordinator;

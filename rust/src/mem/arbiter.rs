@@ -1,0 +1,504 @@
+//! The DRAM bandwidth arbiter — processor-sharing of the off-chip
+//! interface among concurrently executing partitions.
+//!
+//! Every in-flight layer is a *flight*: a fixed compute finish time (the
+//! policy's `exec` price) overlapped with a transfer obligation (its DRAM
+//! words, double-buffered against compute — the same `max(compute,
+//! transfer)` semantics as the isolated
+//! [`DramConfig::bound_cycles`](crate::sim::dram::DramConfig::bound_cycles),
+//! except the interface is now *shared*).  Whenever the co-runner set
+//! changes — a dispatch, a retirement, or a transfer draining before its
+//! compute — remaining transfer work is rescaled under the new shares and
+//! every affected completion is re-predicted; the engine re-posts those
+//! [`LayerComplete`](crate::sim_core::Event::LayerComplete) events and
+//! drops the stale ones.
+//!
+//! Three arbitration modes: [`ArbitrationMode::FairShare`] (equal split
+//! among transfer-active flights), [`ArbitrationMode::WeightedByColumns`]
+//! (split proportional to partition width — wide tenants paid for their
+//! bandwidth in silicon) and [`ArbitrationMode::StrictPriority`]
+//! (earliest-dispatched flight takes the whole interface; later flights
+//! starve until it drains — FIFO DMA).
+//!
+//! Everything is deterministic: flights live in a `BTreeMap`, shares are
+//! pure functions of the live set, and the only state is advanced at
+//! engine event boundaries.
+
+use std::collections::BTreeMap;
+use std::str::FromStr;
+
+use crate::coordinator::partition::AllocId;
+use crate::sim::dram::DramConfig;
+use crate::util::UnknownTag;
+use crate::workloads::dnng::DnnId;
+
+/// How the DRAM interface is split among transfer-active flights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ArbitrationMode {
+    /// Equal share per transfer-active flight.
+    #[default]
+    FairShare,
+    /// Share proportional to partition width (columns held).
+    WeightedByColumns,
+    /// Earliest-dispatched flight takes the whole interface.
+    StrictPriority,
+}
+
+impl ArbitrationMode {
+    /// Every variant, in tag order.
+    pub const ALL: [ArbitrationMode; 3] = [
+        ArbitrationMode::FairShare,
+        ArbitrationMode::WeightedByColumns,
+        ArbitrationMode::StrictPriority,
+    ];
+    /// The tags of [`ArbitrationMode::ALL`], in the same order.
+    pub const TAGS: [&'static str; 3] = ["fair", "weighted", "priority"];
+
+    /// Stable config/CLI/report name (round-trips through [`FromStr`]).
+    pub fn tag(self) -> &'static str {
+        match self {
+            ArbitrationMode::FairShare => Self::TAGS[0],
+            ArbitrationMode::WeightedByColumns => Self::TAGS[1],
+            ArbitrationMode::StrictPriority => Self::TAGS[2],
+        }
+    }
+}
+
+impl FromStr for ArbitrationMode {
+    type Err = UnknownTag;
+
+    fn from_str(s: &str) -> Result<ArbitrationMode, UnknownTag> {
+        ArbitrationMode::ALL.into_iter().find(|m| m.tag() == s).ok_or_else(|| UnknownTag {
+            what: "arbitration mode",
+            got: s.to_string(),
+            valid: &ArbitrationMode::TAGS,
+        })
+    }
+}
+
+/// Sentinel "no completion predictable" (a starved strict-priority
+/// flight); no event is posted until a rescale gives it bandwidth.
+const STARVED: u64 = u64::MAX;
+
+/// One in-flight layer's transfer obligation.
+#[derive(Debug, Clone)]
+struct Flight {
+    dnn: DnnId,
+    width: u64,
+    /// Admission order (strict-priority key).
+    seq: u64,
+    t_start: u64,
+    /// Compute path finishes here regardless of contention.
+    compute_end: u64,
+    /// Per-burst setup latency still to elapse (rate-independent).
+    burst_left: u64,
+    /// DRAM words still to move.
+    words_left: f64,
+    words_total: u64,
+    /// Currently predicted completion cycle (the one live event).
+    predicted_end: u64,
+}
+
+impl Flight {
+    fn transfer_active(&self) -> bool {
+        self.burst_left > 0 || self.words_left > 0.0
+    }
+}
+
+/// Event-queue corrections after a co-runner-set change: completions to
+/// re-post and (optionally) the next cycle at which a transfer drains
+/// *before* its compute — an early bandwidth release the engine turns
+/// into a [`MemRescale`](crate::sim_core::Event::MemRescale) event.
+#[derive(Debug, Clone, Default)]
+pub struct MemUpdate {
+    /// `(alloc, new completion cycle)` — re-post these `LayerComplete`s.
+    pub reposts: Vec<(AllocId, u64)>,
+    /// Earliest early-release cycle, strictly in the future.
+    pub next_release: Option<u64>,
+}
+
+/// What one retired flight contributed (the raw material of
+/// [`MemStats`](super::MemStats)).
+#[derive(Debug, Clone, Copy)]
+pub struct FlightReport {
+    pub dnn: DnnId,
+    pub width: u64,
+    pub t_start: u64,
+    pub t_end: u64,
+    /// The compute-path cycles the policy priced (stall = residency
+    /// beyond this).
+    pub compute_cycles: u64,
+    /// DRAM words this flight moved.
+    pub words: u64,
+}
+
+/// The shared-interface arbiter.  Owned by the engine's
+/// [`MemSystem`](super::MemSystem); usable standalone in tests.
+#[derive(Debug, Clone)]
+pub struct BandwidthArbiter {
+    dram: DramConfig,
+    mode: ArbitrationMode,
+    flights: BTreeMap<AllocId, Flight>,
+    now: u64,
+    seq: u64,
+    /// Σ rate×dt actually delivered — the conservation ledger: once every
+    /// flight retires this equals the sum of admitted words exactly.
+    consumed_words: f64,
+}
+
+impl BandwidthArbiter {
+    pub fn new(dram: DramConfig, mode: ArbitrationMode) -> BandwidthArbiter {
+        assert!(dram.words_per_cycle > 0.0);
+        BandwidthArbiter {
+            dram,
+            mode,
+            flights: BTreeMap::new(),
+            now: 0,
+            seq: 0,
+            consumed_words: 0.0,
+        }
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.flights.len()
+    }
+
+    /// Words delivered so far (see the conservation property test).
+    pub fn consumed_words(&self) -> f64 {
+        self.consumed_words
+    }
+
+    /// The currently predicted completion of a live flight (`None` for
+    /// unknown flights *and* for starved ones with no prediction).
+    pub fn predicted_end(&self, id: AllocId) -> Option<u64> {
+        self.flights.get(&id).map(|f| f.predicted_end).filter(|&t| t != STARVED)
+    }
+
+    /// True when a `LayerComplete { t, alloc: id }` event no longer
+    /// matches the flight's live prediction (superseded by a rescale, or
+    /// the flight already retired).
+    pub fn is_stale(&self, id: AllocId, t: u64) -> bool {
+        match self.flights.get(&id) {
+            Some(f) => f.predicted_end != t,
+            None => true,
+        }
+    }
+
+    /// Per-flight transfer rates (words/cycle) under the current set.
+    fn rates(&self) -> BTreeMap<AllocId, f64> {
+        let mut out: BTreeMap<AllocId, f64> = self.flights.keys().map(|&id| (id, 0.0)).collect();
+        let active: Vec<(AllocId, &Flight)> = self
+            .flights
+            .iter()
+            .filter(|(_, f)| f.transfer_active())
+            .map(|(&id, f)| (id, f))
+            .collect();
+        if active.is_empty() {
+            return out;
+        }
+        let b = self.dram.words_per_cycle;
+        match self.mode {
+            ArbitrationMode::FairShare => {
+                let share = b / active.len() as f64;
+                for (id, _) in &active {
+                    out.insert(*id, share);
+                }
+            }
+            ArbitrationMode::WeightedByColumns => {
+                let total: u64 = active.iter().map(|(_, f)| f.width).sum();
+                for (id, f) in &active {
+                    out.insert(*id, b * f.width as f64 / total as f64);
+                }
+            }
+            ArbitrationMode::StrictPriority => {
+                let first = active
+                    .iter()
+                    .min_by_key(|(id, f)| (f.seq, *id))
+                    .map(|(id, _)| *id)
+                    .expect("non-empty active set");
+                out.insert(first, b);
+            }
+        }
+        out
+    }
+
+    /// Progress every transfer from the last update to `now` at the
+    /// current shares, crediting the conservation ledger.  Burst latency
+    /// elapses first (it is setup time, not bandwidth).
+    pub fn advance(&mut self, now: u64) {
+        debug_assert!(now >= self.now, "arbiter time went backwards");
+        let dt = now - self.now;
+        if dt > 0 && !self.flights.is_empty() {
+            let rates = self.rates();
+            for (id, f) in self.flights.iter_mut() {
+                let lat = f.burst_left.min(dt);
+                f.burst_left -= lat;
+                let span = (dt - lat) as f64;
+                let rate = rates[id];
+                if span > 0.0 && rate > 0.0 && f.words_left > 0.0 {
+                    let moved = (rate * span).min(f.words_left);
+                    f.words_left -= moved;
+                    self.consumed_words += moved;
+                }
+            }
+        }
+        self.now = now;
+    }
+
+    /// Cycles until flight `f`'s transfer drains at `rate` (`None` =
+    /// starved, never under the current shares).
+    fn transfer_eta(f: &Flight, rate: f64) -> Option<u64> {
+        if !f.transfer_active() {
+            return Some(0);
+        }
+        if rate <= 0.0 {
+            return None;
+        }
+        Some(f.burst_left + (f.words_left / rate).ceil() as u64)
+    }
+
+    /// Re-predict every completion from `self.now` under the current
+    /// shares.  Call after any co-runner-set change (and after
+    /// [`BandwidthArbiter::advance`]).
+    pub fn reschedule(&mut self) -> MemUpdate {
+        let rates = self.rates();
+        let now = self.now;
+        let mut upd = MemUpdate::default();
+        for (id, f) in self.flights.iter_mut() {
+            let end = match Self::transfer_eta(f, rates[id]) {
+                None => STARVED,
+                Some(eta) => {
+                    let t_xfer = now + eta;
+                    if eta > 0 && t_xfer < f.compute_end {
+                        // Transfer drains before compute: bandwidth frees
+                        // early — the set changes again at t_xfer.
+                        upd.next_release = Some(match upd.next_release {
+                            Some(c) => c.min(t_xfer),
+                            None => t_xfer,
+                        });
+                    }
+                    t_xfer.max(f.compute_end)
+                }
+            };
+            if end != f.predicted_end {
+                f.predicted_end = end;
+                if end != STARVED {
+                    upd.reposts.push((*id, end));
+                }
+            }
+        }
+        upd
+    }
+
+    /// Admit a dispatched layer at `now`: `compute_cycles` from the
+    /// policy's `exec`, `words` its (banked) DRAM traffic.  The returned
+    /// update includes the new flight's own completion.
+    pub fn admit(
+        &mut self,
+        now: u64,
+        id: AllocId,
+        dnn: DnnId,
+        width: u64,
+        compute_cycles: u64,
+        words: u64,
+    ) -> MemUpdate {
+        self.advance(now);
+        let seq = self.seq;
+        self.seq += 1;
+        let prev = self.flights.insert(
+            id,
+            Flight {
+                dnn,
+                width,
+                seq,
+                t_start: now,
+                compute_end: now + compute_cycles.max(1),
+                burst_left: if words > 0 { self.dram.burst_latency } else { 0 },
+                words_left: words as f64,
+                words_total: words,
+                // Repaired by the reschedule below (guaranteed to differ,
+                // so the new flight always lands in `reposts`).
+                predicted_end: 0,
+            },
+        );
+        assert!(prev.is_none(), "double admit of allocation {id}");
+        self.reschedule()
+    }
+
+    /// Retire flight `id` at `now` (which must be its live prediction —
+    /// the engine checks [`BandwidthArbiter::is_stale`] first).  The
+    /// survivors' shares grow; their corrections come back in the update.
+    pub fn retire(&mut self, now: u64, id: AllocId) -> (FlightReport, MemUpdate) {
+        self.advance(now);
+        let f = self.flights.remove(&id).unwrap_or_else(|| panic!("retire of unknown flight {id}"));
+        debug_assert_eq!(f.predicted_end, now, "retire at a stale prediction");
+        // Sub-word float residue at the boundary cycle goes to the ledger
+        // so conservation stays exact.
+        self.consumed_words += f.words_left;
+        let report = FlightReport {
+            dnn: f.dnn,
+            width: f.width,
+            t_start: f.t_start,
+            t_end: now,
+            compute_cycles: f.compute_end - f.t_start,
+            words: f.words_total,
+        };
+        (report, self.reschedule())
+    }
+
+    /// A rescale decision point (an early bandwidth release fired):
+    /// advance and re-predict.  Idempotent — firing a stale rescale is a
+    /// no-op.
+    pub fn rescale(&mut self, now: u64) -> MemUpdate {
+        self.advance(now);
+        self.reschedule()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dram(wpc: f64, burst: u64) -> DramConfig {
+        DramConfig { words_per_cycle: wpc, burst_latency: burst }
+    }
+
+    /// Drive an arbiter to completion: honor reposts/releases like the
+    /// engine does, returning each flight's final completion cycle.
+    fn drain(arb: &mut BandwidthArbiter, upds: Vec<MemUpdate>) -> BTreeMap<AllocId, u64> {
+        fn absorb(events: &mut Vec<(u64, Option<AllocId>)>, upd: &MemUpdate) {
+            for &(id, t) in &upd.reposts {
+                events.push((t, Some(id)));
+            }
+            if let Some(t) = upd.next_release {
+                events.push((t, None));
+            }
+        }
+        let mut done = BTreeMap::new();
+        // (t, Some = completion of alloc, None = rescale)
+        let mut events: Vec<(u64, Option<AllocId>)> = Vec::new();
+        for upd in &upds {
+            absorb(&mut events, upd);
+        }
+        while !events.is_empty() {
+            events.sort_by_key(|&(t, id)| (t, id.is_some() as u8, id));
+            let (t, id) = events.remove(0);
+            let upd = match id {
+                Some(id) => {
+                    if arb.is_stale(id, t) {
+                        continue;
+                    }
+                    let (rep, u) = arb.retire(t, id);
+                    done.insert(id, rep.t_end);
+                    u
+                }
+                None => arb.rescale(t),
+            };
+            absorb(&mut events, &upd);
+        }
+        done
+    }
+
+    #[test]
+    fn lone_flight_matches_isolated_bound() {
+        // One tenant with the whole interface: completion is exactly
+        // max(compute, burst + ceil(words / B)) — the isolated bound.
+        let mut arb = BandwidthArbiter::new(dram(10.0, 5), ArbitrationMode::FairShare);
+        let upd = arb.admit(0, 0, 0, 128, 100, 2000);
+        let done = drain(&mut arb, vec![upd]);
+        assert_eq!(done[&0], 5 + 200);
+        assert!((arb.consumed_words() - 2000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn compute_bound_flight_ignores_interface() {
+        let mut arb = BandwidthArbiter::new(dram(10.0, 5), ArbitrationMode::FairShare);
+        let upd = arb.admit(0, 0, 0, 128, 1000, 50); // transfer 10 cycles + burst
+        let done = drain(&mut arb, vec![upd]);
+        assert_eq!(done[&0], 1000);
+    }
+
+    #[test]
+    fn zero_traffic_flight_costs_no_burst() {
+        let mut arb = BandwidthArbiter::new(dram(10.0, 100), ArbitrationMode::FairShare);
+        let upd = arb.admit(0, 0, 0, 128, 40, 0);
+        let done = drain(&mut arb, vec![upd]);
+        assert_eq!(done[&0], 40);
+    }
+
+    #[test]
+    fn fair_share_halves_two_equal_flights() {
+        let mut arb = BandwidthArbiter::new(dram(10.0, 0), ArbitrationMode::FairShare);
+        let u0 = arb.admit(0, 0, 0, 64, 10, 1000);
+        assert_eq!(u0.reposts, vec![(0, 100)]);
+        let u1 = arb.admit(0, 1, 1, 64, 10, 1000);
+        // Both now see half the interface: 200 cycles each.
+        let done = drain(&mut arb, vec![u0, u1]);
+        assert_eq!(done[&0], 200);
+        assert_eq!(done[&1], 200);
+        assert!((arb.consumed_words() - 2000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weighted_mode_favors_wide_partitions() {
+        let mut arb = BandwidthArbiter::new(dram(10.0, 0), ArbitrationMode::WeightedByColumns);
+        let u0 = arb.admit(0, 0, 0, 96, 10, 900); // 3/4 of the columns
+        let u1 = arb.admit(0, 1, 1, 32, 10, 900); // 1/4
+        let done = drain(&mut arb, vec![u0, u1]);
+        // Wide: 900 words at 7.5 w/c = 120 cycles; narrow then drains the
+        // remainder at full rate.
+        assert_eq!(done[&0], 120);
+        assert!(done[&1] > done[&0]);
+        assert!((arb.consumed_words() - 1800.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn strict_priority_serializes_transfers() {
+        let mut arb = BandwidthArbiter::new(dram(10.0, 0), ArbitrationMode::StrictPriority);
+        let u0 = arb.admit(0, 0, 0, 64, 10, 1000);
+        let u1 = arb.admit(0, 1, 1, 64, 10, 1000);
+        // Flight 1 is starved: no event posted for it yet.
+        assert!(arb.predicted_end(1).is_none());
+        let done = drain(&mut arb, vec![u0, u1]);
+        assert_eq!(done[&0], 100, "priority holder sees the full interface");
+        assert_eq!(done[&1], 200, "loser drains after the holder retires");
+    }
+
+    #[test]
+    fn early_release_speeds_up_the_survivor() {
+        // Flight 0: tiny transfer, long compute — its transfer drains
+        // early and flight 1 must speed up mid-flight via the release
+        // rescale, NOT wait for flight 0's completion.
+        let mut arb = BandwidthArbiter::new(dram(10.0, 0), ArbitrationMode::FairShare);
+        let u0 = arb.admit(0, 0, 0, 64, 1000, 100);
+        let u1 = arb.admit(0, 1, 1, 64, 10, 1000);
+        assert!(u1.next_release.is_some(), "flight 0's transfer drains before its compute");
+        let done = drain(&mut arb, vec![u0, u1]);
+        assert_eq!(done[&0], 1000);
+        // Shared until t=20 (flight 0 moves 100 words at 5 w/c), then
+        // full rate: 1000 - 20*5 = 900 words at 10 w/c => done at 110.
+        assert_eq!(done[&1], 110);
+        assert!((arb.consumed_words() - 1100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stale_predictions_are_detected() {
+        let mut arb = BandwidthArbiter::new(dram(10.0, 0), ArbitrationMode::FairShare);
+        arb.admit(0, 0, 0, 64, 10, 1000); // predicted 100
+        assert!(!arb.is_stale(0, 100));
+        arb.admit(0, 1, 1, 64, 10, 1000); // both re-predicted to 200
+        assert!(arb.is_stale(0, 100), "old prediction superseded");
+        assert!(!arb.is_stale(0, 200));
+        assert!(arb.is_stale(7, 0), "unknown flight is stale");
+    }
+
+    #[test]
+    fn tags_round_trip() {
+        for m in ArbitrationMode::ALL {
+            assert_eq!(m.tag().parse::<ArbitrationMode>().unwrap(), m);
+        }
+        let e = "psychic".parse::<ArbitrationMode>().unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("fair") && msg.contains("weighted") && msg.contains("priority"), "{msg}");
+    }
+}

@@ -1,0 +1,147 @@
+//! The bank allocator — integral global-buffer banks granted to
+//! partitions alongside their columns.
+//!
+//! The paper shares "parts of each storage element" with the PE columns;
+//! [`BufferConfig::share`](crate::sim::buffers::BufferConfig::share)
+//! models that as an exact proportional split, which no banked SRAM can
+//! deliver.  This allocator splits each buffer into `total` equal banks
+//! and hands out *whole* banks: a partition asks for its proportional
+//! count, gets at least one, and is capped by what the pool still holds —
+//! so a late tenant under heavy co-residency really does run with less
+//! SRAM than its column share suggests, and its refetch traffic (and
+//! therefore its DRAM interference) follows the banks it actually owns.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::partition::AllocId;
+use crate::sim::buffers::BufferConfig;
+
+/// Grants whole buffer banks to live allocations.
+#[derive(Debug, Clone)]
+pub struct BankAllocator {
+    total: u64,
+    cols: u64,
+    free: u64,
+    granted: BTreeMap<AllocId, u64>,
+}
+
+impl BankAllocator {
+    /// An allocator of `total` banks over an array `cols` columns wide.
+    pub fn new(total: u64, cols: u64) -> BankAllocator {
+        assert!(total >= 1 && cols >= 1);
+        BankAllocator { total, cols, free: total, granted: BTreeMap::new() }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn free_banks(&self) -> u64 {
+        self.free
+    }
+
+    /// Banks currently held by allocation `id` (0 if unknown).
+    pub fn granted(&self, id: AllocId) -> u64 {
+        self.granted.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Grant banks to a `width`-column partition: the proportional count
+    /// (at least one), capped by the free pool.  Returns the grant — a
+    /// grant of 0 means the pool was exhausted and the tenant runs with
+    /// the minimal (one-word) share.
+    pub fn grant(&mut self, id: AllocId, width: u64) -> u64 {
+        assert!(width >= 1 && !self.granted.contains_key(&id), "double grant for {id}");
+        let want = (self.total * width / self.cols).max(1);
+        let got = want.min(self.free);
+        self.free -= got;
+        self.granted.insert(id, got);
+        got
+    }
+
+    /// Release the banks of allocation `id` back to the pool.
+    pub fn release(&mut self, id: AllocId) -> u64 {
+        let got = self.granted.remove(&id).unwrap_or_else(|| panic!("release of unknown grant {id}"));
+        self.free += got;
+        got
+    }
+
+    /// The absolute SRAM capacity `got` banks of `bufs` carry (every
+    /// buffer banked the same way, min one dtype word — mirrors
+    /// [`BufferConfig::share`]).
+    pub fn share_of(&self, got: u64, bufs: &BufferConfig) -> BufferConfig {
+        let scale = |b: u64| (b * got / self.total).max(bufs.dtype_bytes);
+        BufferConfig {
+            weight_bytes: scale(bufs.weight_bytes),
+            ifmap_bytes: scale(bufs.ifmap_bytes),
+            ofmap_bytes: scale(bufs.ofmap_bytes),
+            dtype_bytes: bufs.dtype_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proportional_grants_and_release() {
+        let mut b = BankAllocator::new(8, 128);
+        assert_eq!(b.grant(0, 64), 4);
+        assert_eq!(b.grant(1, 32), 2);
+        assert_eq!(b.free_banks(), 2);
+        assert_eq!(b.granted(0), 4);
+        assert_eq!(b.release(0), 4);
+        assert_eq!(b.free_banks(), 6);
+        assert_eq!(b.granted(0), 0);
+    }
+
+    #[test]
+    fn narrow_partition_still_gets_one_bank() {
+        let mut b = BankAllocator::new(8, 128);
+        assert_eq!(b.grant(0, 1), 1);
+    }
+
+    #[test]
+    fn exhausted_pool_grants_zero() {
+        let mut b = BankAllocator::new(2, 128);
+        assert_eq!(b.grant(0, 128), 2);
+        assert_eq!(b.grant(1, 64), 0, "pool exhausted: late tenant starved");
+        b.release(0);
+        assert_eq!(b.free_banks(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown grant")]
+    fn double_release_panics() {
+        let mut b = BankAllocator::new(4, 128);
+        b.grant(0, 32);
+        b.release(0);
+        b.release(0);
+    }
+
+    #[test]
+    fn share_scales_with_banks() {
+        let b = BankAllocator::new(4, 128);
+        let bufs = BufferConfig { weight_bytes: 400, ifmap_bytes: 800, ofmap_bytes: 1200, dtype_bytes: 1 };
+        let half = b.share_of(2, &bufs);
+        assert_eq!(half.weight_bytes, 200);
+        assert_eq!(half.ifmap_bytes, 400);
+        assert_eq!(half.ofmap_bytes, 600);
+        let full = b.share_of(4, &bufs);
+        assert_eq!(full, bufs);
+        // A zero-bank grant leaves the one-word minimum.
+        let none = b.share_of(0, &bufs);
+        assert_eq!(none.weight_bytes, 1);
+    }
+
+    #[test]
+    fn one_bank_per_column_matches_proportional_share() {
+        // With `banks == cols` the integral grant reproduces the exact
+        // proportional split — the fiction is the limit of fine banking.
+        let mut b = BankAllocator::new(128, 128);
+        let bufs = BufferConfig::default();
+        let got = b.grant(0, 32);
+        assert_eq!(got, 32);
+        assert_eq!(b.share_of(got, &bufs), bufs.share(32, 128));
+    }
+}

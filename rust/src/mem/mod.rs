@@ -1,0 +1,287 @@
+//! The shared memory hierarchy — cross-tenant DRAM bandwidth arbitration
+//! and banked global-buffer allocation, wired into the discrete-event
+//! engine as a first-class resource.
+//!
+//! Before this module, the DRAM model priced each tenant's layer in
+//! isolation ([`DramConfig::bound_cycles`](crate::sim::dram::DramConfig))
+//! — co-running DNNs magically each saw the full interface, so memory
+//! interference (the dominant multi-tenant effect per MoCA, arXiv
+//! 2305.05843) was invisible to every policy and every sweep.  Enabled
+//! via the `[mem]` config section (or
+//! [`SchedulerConfig::mem`](crate::coordinator::scheduler::SchedulerConfig)),
+//! the engine instead simulates:
+//!
+//! - [`BandwidthArbiter`] — processor-sharing of the DRAM interface among
+//!   concurrently executing partitions (fair-share, weighted-by-columns,
+//!   strict-priority).  At every event where the co-runner set changes,
+//!   in-flight layers' remaining transfer work is rescaled and their
+//!   completions re-posted.
+//! - [`BankAllocator`] — the global buffer split into integral banks
+//!   granted to partitions alongside their columns, replacing the
+//!   proportional `BufferConfig::share` fiction: refetch traffic follows
+//!   the banks a tenant actually owns.
+//! - [`MemStats`] / [`MemFeedback`] — per-tenant stall cycles, achieved
+//!   words/cycle and refetch bytes, flowing through the
+//!   [`Observer`](crate::sim_core::Observer) into
+//!   [`RunMetrics`](crate::coordinator::metrics::RunMetrics), the report
+//!   tables/JSON and the energy estimator; the live feedback view is what
+//!   the `mem-aware` policy throttles on.
+//!
+//! With `[mem]` disabled (the default) nothing here is instantiated and
+//! every execution path reproduces today's outputs bit-for-bit
+//! (`rust/tests/engine_parity.rs`).  See `docs/memory.md` for the
+//! narrative and a worked example.
+
+pub mod arbiter;
+pub mod banks;
+pub mod stats;
+
+pub use arbiter::{ArbitrationMode, BandwidthArbiter, FlightReport, MemUpdate};
+pub use banks::BankAllocator;
+pub use stats::{MemFeedback, MemStats};
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::partition::AllocId;
+use crate::sim::activity::Activity;
+use crate::sim::buffers::BufferConfig;
+use crate::sim::dataflow::{layer_timing_with_share, ArrayGeometry};
+use crate::sim::dram::DramConfig;
+use crate::sim::partitioned::PartitionSlice;
+use crate::workloads::dnng::DnnId;
+use crate::workloads::shapes::GemmDims;
+
+/// `[mem]` — the shared memory-hierarchy configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemConfig {
+    /// The shared DRAM interface (aggregate words/cycle + per-burst
+    /// latency — the same parameters as the isolated `[dram]` bound,
+    /// which this subsumes).
+    pub dram: DramConfig,
+    pub arbitration: ArbitrationMode,
+    /// Global-buffer banks the [`BankAllocator`] hands out.
+    pub banks: u64,
+}
+
+impl Default for MemConfig {
+    fn default() -> Self {
+        MemConfig { dram: DramConfig::default(), arbitration: ArbitrationMode::FairShare, banks: 8 }
+    }
+}
+
+/// Everything the engine needs to instantiate the shared memory system
+/// for one run — supplied by the policy via
+/// [`Scheduler::mem_spec`](crate::sim_core::Scheduler::mem_spec), so
+/// every entry point (`mtsa run`, scenarios, sweeps, `Engine::execute`)
+/// gets contention through the one engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemSpec {
+    pub cfg: MemConfig,
+    pub geom: ArrayGeometry,
+    /// Whole-array buffer capacity the banks split.
+    pub buffers: BufferConfig,
+}
+
+/// The DRAM words a layer would move with *unbounded* SRAM: weights in
+/// once, IFMap streamed once, OFMap out once.  Everything beyond this is
+/// refetch traffic.
+pub fn ideal_words(gemm: GemmDims) -> u64 {
+    gemm.k * gemm.m + gemm.sr * gemm.k + gemm.sr * gemm.m
+}
+
+/// Per-flight bookkeeping the arbiter does not own.
+#[derive(Debug, Clone, Copy)]
+struct FlightMeta {
+    refetch_words: u64,
+    /// Intrinsically memory-bound (transfer need beats compute even at
+    /// the full interface) — feeds [`MemFeedback::inflight_bound`].
+    bound: bool,
+}
+
+/// The engine-owned memory system: arbiter + bank allocator + stats.
+///
+/// Lifecycle per dispatched layer: [`MemSystem::admit`] grants banks,
+/// re-prices the layer's DRAM traffic under the *banked* share (the
+/// activity the observer bills), and registers the transfer with the
+/// arbiter; [`MemSystem::retire`] at the (possibly rescaled) completion
+/// releases the banks and emits the layer's [`MemStats`].
+#[derive(Debug, Clone)]
+pub struct MemSystem {
+    spec: MemSpec,
+    arbiter: BandwidthArbiter,
+    banks: BankAllocator,
+    feedback: MemFeedback,
+    meta: BTreeMap<AllocId, FlightMeta>,
+}
+
+impl MemSystem {
+    pub fn new(spec: MemSpec) -> MemSystem {
+        MemSystem {
+            arbiter: BandwidthArbiter::new(spec.cfg.dram, spec.cfg.arbitration),
+            banks: BankAllocator::new(spec.cfg.banks.max(1), spec.geom.cols),
+            feedback: MemFeedback::default(),
+            meta: BTreeMap::new(),
+            spec,
+        }
+    }
+
+    pub fn spec(&self) -> &MemSpec {
+        &self.spec
+    }
+
+    /// The live feedback view policies read through
+    /// [`SystemState::mem`](crate::sim_core::SystemState).
+    pub fn feedback(&self) -> &MemFeedback {
+        &self.feedback
+    }
+
+    /// Admit a dispatched layer: grant banks, price its DRAM traffic
+    /// under the banked share, register the transfer.  Returns the
+    /// banked [`Activity`] (what the observer should bill) and the
+    /// event-queue corrections (which include the new flight's own
+    /// completion).
+    pub fn admit(
+        &mut self,
+        now: u64,
+        alloc: AllocId,
+        dnn: DnnId,
+        gemm: GemmDims,
+        slice: PartitionSlice,
+        compute_cycles: u64,
+    ) -> (Activity, MemUpdate) {
+        let got = self.banks.grant(alloc, slice.width);
+        let share = self.banks.share_of(got, &self.spec.buffers);
+        let t = layer_timing_with_share(self.spec.geom, gemm, slice.col0, slice.width, &share, None);
+        let words = t.activity.dram_accesses();
+        let refetch = words.saturating_sub(ideal_words(gemm));
+        let bound = self.spec.cfg.dram.transfer_cycles(&t.activity) > compute_cycles;
+        if bound {
+            *self.feedback.inflight_bound.entry(dnn).or_insert(0) += 1;
+        }
+        self.meta.insert(alloc, FlightMeta { refetch_words: refetch, bound });
+        let upd = self.arbiter.admit(now, alloc, dnn, slice.width, compute_cycles, words);
+        (t.activity, upd)
+    }
+
+    /// True when a `LayerComplete { t, alloc }` event was superseded by a
+    /// rescale (or the flight already retired) and must be skipped.
+    pub fn is_stale(&self, alloc: AllocId, t: u64) -> bool {
+        self.arbiter.is_stale(alloc, t)
+    }
+
+    /// Retire a flight at its completion cycle: release banks, emit its
+    /// stats, and return the survivors' corrections.
+    pub fn retire(&mut self, now: u64, alloc: AllocId) -> (MemStats, MemUpdate) {
+        let (rep, upd) = self.arbiter.retire(now, alloc);
+        let meta = self.meta.remove(&alloc).expect("retire of unadmitted flight");
+        self.banks.release(alloc);
+        let busy = rep.t_end - rep.t_start;
+        let stall = busy.saturating_sub(rep.compute_cycles);
+        let stats = MemStats {
+            layers: 1,
+            stall_cycles: stall,
+            stall_col_cycles: stall.saturating_mul(rep.width),
+            busy_cycles: busy,
+            xfer_words: rep.words,
+            refetch_words: meta.refetch_words,
+        };
+        if meta.bound {
+            let c = self
+                .feedback
+                .inflight_bound
+                .get_mut(&rep.dnn)
+                .expect("bound flight retired without an inflight_bound entry");
+            *c -= 1;
+            if *c == 0 {
+                self.feedback.inflight_bound.remove(&rep.dnn);
+            }
+        }
+        self.feedback.per_dnn.entry(rep.dnn).or_default().add(&stats);
+        (stats, upd)
+    }
+
+    /// An early bandwidth release fired: rescale the survivors.
+    pub fn rescale(&mut self, now: u64) -> MemUpdate {
+        self.arbiter.rescale(now)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(wpc: f64, banks: u64) -> MemSpec {
+        MemSpec {
+            cfg: MemConfig {
+                dram: DramConfig { words_per_cycle: wpc, burst_latency: 0 },
+                arbitration: ArbitrationMode::FairShare,
+                banks,
+            },
+            geom: ArrayGeometry::new(128, 128),
+            buffers: BufferConfig::default(),
+        }
+    }
+
+    #[test]
+    fn admit_prices_banked_traffic_and_retire_reports_stall() {
+        let mut mem = MemSystem::new(spec(1.0, 8));
+        let gemm = GemmDims { sr: 512, k: 128, m: 64 };
+        let slice = PartitionSlice::new(0, 64);
+        let (activity, upd) = mem.admit(0, 0, 0, gemm, slice, 1000);
+        let words = activity.dram_accesses();
+        assert!(words >= ideal_words(gemm));
+        // Strongly memory-bound at 1 word/cycle.
+        assert_eq!(mem.feedback().inflight_bound.get(&0), Some(&1));
+        let (_, t_end) = upd.reposts.iter().find(|&&(a, _)| a == 0).copied().unwrap();
+        assert_eq!(t_end, words, "transfer-bound completion at words / 1.0 w/c");
+        let (stats, _) = mem.retire(t_end, 0);
+        assert_eq!(stats.busy_cycles, t_end);
+        assert_eq!(stats.stall_cycles, t_end - 1000);
+        assert_eq!(stats.stall_col_cycles, (t_end - 1000) * 64);
+        assert_eq!(stats.xfer_words, words);
+        assert!(mem.feedback().inflight_bound.is_empty());
+        assert_eq!(mem.feedback().tenant(0).unwrap().layers, 1);
+    }
+
+    #[test]
+    fn fewer_banks_mean_more_refetch_words() {
+        // A tenant admitted after the pool is drained gets no banks at
+        // all and pays in IFMap refetches — traffic the proportional
+        // `BufferConfig::share` fiction would never show.
+        let gemm = GemmDims { sr: 4000, k: 512, m: 256 }; // fm = 4 on 64 cols
+        let slice = PartitionSlice::new(0, 64);
+        let mut rich = MemSystem::new(spec(64.0, 8));
+        let (a_rich, _) = rich.admit(0, 0, 0, gemm, slice, 1_000_000);
+        let mut poor = MemSystem::new(spec(64.0, 2));
+        // A full-width tenant exhausts the two banks first.
+        let (_, _) = poor.admit(0, 7, 7, gemm, PartitionSlice::new(0, 128), 1_000_000);
+        let (a_poor, _) = poor.admit(0, 0, 0, gemm, slice, 1_000_000);
+        assert!(
+            a_poor.dram_accesses() > a_rich.dram_accesses(),
+            "starved banks must inflate traffic: {} vs {}",
+            a_poor.dram_accesses(),
+            a_rich.dram_accesses()
+        );
+        // And the surplus is exactly what `refetch_words` accounts.
+        let ideal = ideal_words(gemm);
+        assert!(a_poor.dram_accesses() - ideal > a_rich.dram_accesses() - ideal);
+    }
+
+    #[test]
+    fn compute_bound_layer_has_no_stall() {
+        let mut mem = MemSystem::new(spec(1_000_000.0, 8));
+        let gemm = GemmDims { sr: 64, k: 64, m: 64 };
+        let (_, upd) = mem.admit(0, 0, 0, gemm, PartitionSlice::new(0, 64), 50_000);
+        let (_, t_end) = upd.reposts.iter().find(|&&(a, _)| a == 0).copied().unwrap();
+        assert_eq!(t_end, 50_000);
+        let (stats, _) = mem.retire(t_end, 0);
+        assert_eq!(stats.stall_cycles, 0);
+        assert!(mem.feedback().inflight_bound.is_empty(), "not memory-bound");
+    }
+
+    #[test]
+    fn ideal_words_formula() {
+        let g = GemmDims { sr: 10, k: 20, m: 30 };
+        assert_eq!(ideal_words(g), 20 * 30 + 10 * 20 + 10 * 30);
+    }
+}

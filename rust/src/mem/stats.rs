@@ -1,0 +1,136 @@
+//! Per-tenant memory-system statistics and the live feedback view the
+//! `mem-aware` policy decides over.
+
+use std::collections::BTreeMap;
+
+use crate::workloads::dnng::DnnId;
+
+/// Accumulated memory-hierarchy statistics for one tenant (or one layer,
+/// or a whole run — the struct is additive via [`MemStats::add`]).
+///
+/// All counts come from the [`BandwidthArbiter`](super::BandwidthArbiter)
+/// and [`BankAllocator`](super::BankAllocator): `stall_cycles` is time a
+/// layer was resident beyond its compute need (waiting on the shared DRAM
+/// interface), `xfer_words` the DRAM words actually moved (banked
+/// refetches included), and `refetch_words` the words beyond the
+/// single-pass ideal — the traffic a bigger bank grant would have
+/// eliminated.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemStats {
+    /// Layers accumulated into this record.
+    pub layers: u64,
+    /// Cycles spent resident beyond the compute need (DRAM stall).
+    pub stall_cycles: u64,
+    /// Stall cycles weighted by partition width (column-cycles of PEs
+    /// held but starved) — the idle-leakage term the energy model prices
+    /// via [`EnergyModel::stall_j`](crate::energy::components::EnergyModel::stall_j).
+    pub stall_col_cycles: u64,
+    /// Total cycles layers were resident (dispatch → completion).
+    pub busy_cycles: u64,
+    /// DRAM words moved (reads + writes, refetches included).
+    pub xfer_words: u64,
+    /// Words beyond the single-pass ideal (weights once, IFMap once,
+    /// OFMap out once) — refetch traffic caused by the banks actually
+    /// owned.
+    pub refetch_words: u64,
+}
+
+impl MemStats {
+    /// Element-wise accumulate.
+    pub fn add(&mut self, other: &MemStats) {
+        self.layers += other.layers;
+        self.stall_cycles += other.stall_cycles;
+        self.stall_col_cycles += other.stall_col_cycles;
+        self.busy_cycles += other.busy_cycles;
+        self.xfer_words += other.xfer_words;
+        self.refetch_words += other.refetch_words;
+    }
+
+    /// Mean DRAM words delivered per resident cycle (0.0 when idle) —
+    /// the *achieved* bandwidth, to compare against the interface's
+    /// `words_per_cycle`.
+    pub fn achieved_words_per_cycle(&self) -> f64 {
+        if self.busy_cycles == 0 {
+            0.0
+        } else {
+            self.xfer_words as f64 / self.busy_cycles as f64
+        }
+    }
+
+    /// Fraction of residency spent stalled on memory (0.0 when idle).
+    pub fn stall_fraction(&self) -> f64 {
+        if self.busy_cycles == 0 {
+            0.0
+        } else {
+            self.stall_cycles as f64 / self.busy_cycles as f64
+        }
+    }
+}
+
+/// Live arbiter feedback exposed to policies through
+/// [`SystemState::mem`](crate::sim_core::SystemState) — what the
+/// `mem-aware` policy reads to detect memory-bound tenants.
+#[derive(Debug, Clone, Default)]
+pub struct MemFeedback {
+    /// Per-DNN accumulated stats over *finished* layers.
+    pub per_dnn: BTreeMap<DnnId, MemStats>,
+    /// Count of in-flight layers per DNN that are intrinsically
+    /// memory-bound (transfer need exceeds compute need even at full
+    /// interface bandwidth).
+    pub inflight_bound: BTreeMap<DnnId, usize>,
+}
+
+impl MemFeedback {
+    /// Accumulated stats of one tenant's finished layers.
+    pub fn tenant(&self, dnn: DnnId) -> Option<&MemStats> {
+        self.per_dnn.get(&dnn)
+    }
+
+    /// Memory-bound layers currently in flight for tenants *other* than
+    /// `dnn` — the signal the `mem-aware` policy throttles on.
+    pub fn bound_inflight_excluding(&self, dnn: DnnId) -> usize {
+        self.inflight_bound.iter().filter(|&(&d, _)| d != dnn).map(|(_, &c)| c).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_accumulate() {
+        let mut a = MemStats {
+            layers: 1,
+            stall_cycles: 100,
+            stall_col_cycles: 3200,
+            busy_cycles: 400,
+            xfer_words: 800,
+            refetch_words: 50,
+        };
+        let b = MemStats { layers: 2, busy_cycles: 100, xfer_words: 200, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.layers, 3);
+        assert_eq!(a.busy_cycles, 500);
+        assert_eq!(a.xfer_words, 1000);
+        assert!((a.achieved_words_per_cycle() - 2.0).abs() < 1e-12);
+        assert!((a.stall_fraction() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_have_zero_rates() {
+        let s = MemStats::default();
+        assert_eq!(s.achieved_words_per_cycle(), 0.0);
+        assert_eq!(s.stall_fraction(), 0.0);
+    }
+
+    #[test]
+    fn feedback_excludes_own_tenant() {
+        let mut fb = MemFeedback::default();
+        fb.inflight_bound.insert(0, 2);
+        fb.inflight_bound.insert(1, 1);
+        assert_eq!(fb.bound_inflight_excluding(0), 1);
+        assert_eq!(fb.bound_inflight_excluding(1), 2);
+        assert_eq!(fb.bound_inflight_excluding(9), 3);
+        assert!(fb.tenant(0).is_none());
+    }
+}

@@ -11,6 +11,7 @@ use crate::coordinator::metrics::TenantStats;
 use crate::coordinator::scheduler::{AllocPolicy, DynamicScheduler, SchedulerConfig};
 use crate::coordinator::RunMetrics;
 use crate::energy::{EnergyBreakdown, EnergyModel, Estimator};
+use crate::mem::MemStats;
 use crate::sweep::{SweepGrid, SweepRow};
 use crate::util::json::Json;
 use crate::util::tablefmt::Table;
@@ -130,6 +131,39 @@ pub fn headline(g: &GroupResults, model: &EnergyModel) -> Headline {
     }
 }
 
+/// Per-tenant memory-hierarchy table (`mtsa run` with `[mem]` enabled):
+/// DRAM words moved, achieved bandwidth, stall cycles/fraction, refetch
+/// words, and the idle-leakage energy the stalls held live
+/// ([`EnergyModel::stall_j`]).  Refetch *energy* needs no extra row: the
+/// banked activity already flows through the estimator's DRAM term.
+pub fn mem_table(m: &RunMetrics, model: &EnergyModel) -> Table {
+    let mut t = Table::new(&[
+        "tenant",
+        "xfer words",
+        "achieved w/c",
+        "stall cycles",
+        "stall",
+        "refetch words",
+        "stall energy (mJ)",
+    ]);
+    let mut push = |name: &str, s: &MemStats| {
+        t.row(&[
+            name.to_string(),
+            s.xfer_words.to_string(),
+            format!("{:.2}", s.achieved_words_per_cycle()),
+            s.stall_cycles.to_string(),
+            format!("{:.1}%", 100.0 * s.stall_fraction()),
+            s.refetch_words.to_string(),
+            format!("{:.3}", model.stall_j(s.stall_col_cycles) * 1e3),
+        ]);
+    };
+    for (name, s) in &m.mem {
+        push(name, s);
+    }
+    push("== total ==", &m.mem_total);
+    t
+}
+
 // ---------------------------------------------------------------------
 // Scenario-sweep rendering (`mtsa sweep`)
 // ---------------------------------------------------------------------
@@ -146,23 +180,22 @@ fn arrival_label(grid: &SweepGrid, mean_interarrival: f64) -> String {
     }
 }
 
-/// The human-readable sweep report: one row per grid point.
+/// The human-readable sweep report: one row per grid point.  When any
+/// point ran under the shared memory hierarchy, four contention columns
+/// (interface bandwidth, arbitration, stall fraction, achieved
+/// words/cycle) are appended; points without `[mem]` show `-`.
 pub fn sweep_table(grid: &SweepGrid, rows: &[SweepRow]) -> Table {
-    let mut t = Table::new(&[
-        "mix",
-        "arrival",
-        "policy",
-        "feed",
-        "cols",
-        "makespan",
-        "vs seq",
-        "util",
-        "p50 lat",
-        "p99 lat",
-        "miss",
-    ]);
+    let with_mem = rows.iter().any(|r| r.mem.is_some());
+    let mut headers = vec![
+        "mix", "arrival", "policy", "feed", "cols", "makespan", "vs seq", "util", "p50 lat",
+        "p99 lat", "miss",
+    ];
+    if with_mem {
+        headers.extend(["bw", "arb", "stall", "wpc"]);
+    }
+    let mut t = Table::new(&headers);
     for r in rows {
-        t.row(&[
+        let mut cells = vec![
             r.point.mix.clone(),
             arrival_label(grid, r.point.mean_interarrival),
             r.point.policy.tag().to_string(),
@@ -174,9 +207,33 @@ pub fn sweep_table(grid: &SweepGrid, rows: &[SweepRow]) -> Table {
             format!("{:.0}", r.outcome.overall.p50_latency),
             format!("{:.0}", r.outcome.overall.p99_latency),
             format!("{:.1}%", 100.0 * r.outcome.miss_rate()),
-        ]);
+        ];
+        if with_mem {
+            match &r.mem {
+                Some(m) => cells.extend([
+                    format!("{:.0}", m.words_per_cycle),
+                    m.arbitration.tag().to_string(),
+                    format!("{:.1}%", 100.0 * m.stats.stall_fraction()),
+                    format!("{:.2}", m.stats.achieved_words_per_cycle()),
+                ]),
+                None => cells.extend(["-".into(), "-".into(), "-".into(), "-".into()]),
+            }
+        }
+        t.row(&cells);
     }
     t
+}
+
+fn mem_stats_json(s: &MemStats) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("layers".to_string(), Json::Num(s.layers as f64));
+    o.insert("stall_cycles".to_string(), Json::Num(s.stall_cycles as f64));
+    o.insert("busy_cycles".to_string(), Json::Num(s.busy_cycles as f64));
+    o.insert("stall_fraction".to_string(), Json::Num(s.stall_fraction()));
+    o.insert("xfer_words".to_string(), Json::Num(s.xfer_words as f64));
+    o.insert("refetch_words".to_string(), Json::Num(s.refetch_words as f64));
+    o.insert("achieved_words_per_cycle".to_string(), Json::Num(s.achieved_words_per_cycle()));
+    Json::Obj(o)
 }
 
 fn tenant_stats_json(s: &TenantStats) -> Json {
@@ -220,6 +277,15 @@ pub fn sweep_json(grid: &SweepGrid, rows: &[SweepRow]) -> Json {
             "occupancy".to_string(),
             Json::Arr(r.occupancy.iter().map(|&v| Json::Num(v)).collect()),
         );
+        // Only emitted for points that ran under [mem] — a sweep without
+        // the contention axis renders byte-identically to before.
+        if let Some(m) = &r.mem {
+            let mut mo = BTreeMap::new();
+            mo.insert("words_per_cycle".to_string(), Json::Num(m.words_per_cycle));
+            mo.insert("arbitration".to_string(), Json::Str(m.arbitration.tag().to_string()));
+            mo.insert("total".to_string(), mem_stats_json(&m.stats));
+            o.insert("mem".to_string(), Json::Obj(mo));
+        }
         o.insert("overall".to_string(), tenant_stats_json(&r.outcome.overall));
         o.insert("seq_overall".to_string(), tenant_stats_json(&r.seq_outcome.overall));
         o.insert(
@@ -249,6 +315,21 @@ pub fn sweep_json(grid: &SweepGrid, rows: &[SweepRow]) -> Json {
         None => {
             top.insert("arrival".to_string(), Json::Str("poisson".to_string()));
         }
+    }
+    if !grid.bandwidths.is_empty() {
+        top.insert(
+            "bandwidths".to_string(),
+            Json::Arr(grid.bandwidths.iter().map(|&b| Json::Num(b)).collect()),
+        );
+        top.insert(
+            "arbitrations".to_string(),
+            Json::Arr(
+                grid.effective_arbitrations()
+                    .into_iter()
+                    .map(|a| Json::Str(a.tag().to_string()))
+                    .collect(),
+            ),
+        );
     }
     top.insert("points".to_string(), Json::Arr(points));
     Json::Obj(top)
@@ -301,6 +382,26 @@ mod tests {
         // All layers here have m <= 64 (width-insensitive), so the shared
         // accounting must strictly win in aggregate.
         assert!(sum_dyn < sum_seq, "dyn {sum_dyn} vs seq {sum_seq}");
+    }
+
+    #[test]
+    fn mem_table_renders_tenants_and_total() {
+        let mut m = RunMetrics::default();
+        m.record_mem(
+            "a",
+            &MemStats {
+                layers: 1,
+                stall_cycles: 50,
+                stall_col_cycles: 3200,
+                busy_cycles: 200,
+                xfer_words: 1000,
+                refetch_words: 10,
+            },
+        );
+        let text = mem_table(&m, &EnergyModel::default_128()).render();
+        assert!(text.contains("== total =="), "{text}");
+        assert!(text.contains("1000"), "{text}");
+        assert!(text.contains("25.0%"), "stall fraction 50/200: {text}");
     }
 
     #[test]

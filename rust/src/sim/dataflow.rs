@@ -110,6 +110,24 @@ pub fn layer_timing_at(
     bufs: &BufferConfig,
     interleave: Option<(u64, u64)>,
 ) -> LayerTiming {
+    layer_timing_with_share(geom, gemm, col0, width, &bufs.share(width, geom.cols), interleave)
+}
+
+/// Like [`layer_timing_at`], but with an *explicit* buffer share instead
+/// of the proportional `width/cols` split: `share` is the absolute SRAM
+/// capacity this slice actually owns.  This is the entry point of the
+/// banked memory hierarchy ([`crate::mem`]) — the
+/// [`BankAllocator`](crate::mem::BankAllocator) grants integral banks, so
+/// a tenant's refetch traffic follows the banks it holds, not the
+/// proportional fiction.
+pub fn layer_timing_with_share(
+    geom: ArrayGeometry,
+    gemm: GemmDims,
+    col0: u64,
+    width: u64,
+    share: &BufferConfig,
+    interleave: Option<(u64, u64)>,
+) -> LayerTiming {
     assert!(width > 0 && col0 + width <= geom.cols, "slice out of range");
     let GemmDims { sr, k, m } = gemm;
     assert!(sr > 0 && k > 0 && m > 0);
@@ -136,7 +154,6 @@ pub fn layer_timing_at(
     let cycles = fm * k + fk * m + fk * fm * per_fold_base;
 
     // Activity counts (per the DESIGN.md §4 accounting).
-    let share = bufs.share(width, geom.cols);
     let ifmap_passes = share.ifmap_dram_passes(sr, k, fm);
     let ofmap_spills = if share.ofmap_fits(sr, m) { 0 } else { fk.saturating_sub(1) };
     let activity = Activity {
@@ -271,6 +288,22 @@ mod tests {
             }
             prop::ensure_eq(t.cycles, loop_cycles, "cycles")
         });
+    }
+
+    #[test]
+    fn explicit_share_matches_proportional_share() {
+        let geom = ArrayGeometry::new(128, 128);
+        let g = GemmDims { sr: 3025, k: 363, m: 96 };
+        let bufs = BufferConfig::default();
+        let a = layer_timing_at(geom, g, 0, 32, &bufs, None);
+        let b = layer_timing_with_share(geom, g, 0, 32, &bufs.share(32, 128), None);
+        assert_eq!(a, b);
+        // A starved explicit share inflates refetch traffic but never
+        // changes the compute cycles (bufs only shape the activity).
+        let starved = BufferConfig { weight_bytes: 1, ifmap_bytes: 1, ofmap_bytes: 1, dtype_bytes: 1 };
+        let c = layer_timing_with_share(geom, g, 0, 32, &starved, None);
+        assert_eq!(c.cycles, a.cycles);
+        assert!(c.activity.dram_accesses() >= a.activity.dram_accesses());
     }
 
     #[test]

@@ -26,10 +26,16 @@ impl Default for DramConfig {
 }
 
 impl DramConfig {
-    /// Cycles needed to move a layer's DRAM traffic.
+    /// Cycles needed to move a layer's DRAM traffic.  A layer that
+    /// touches DRAM not at all costs nothing — in particular no
+    /// `burst_latency`, which is a per-burst setup cost and a layer with
+    /// zero traffic issues zero bursts.
     pub fn transfer_cycles(&self, activity: &Activity) -> u64 {
-        let words = activity.dram_accesses() as f64;
-        (words / self.words_per_cycle).ceil() as u64 + self.burst_latency
+        let words = activity.dram_accesses();
+        if words == 0 {
+            return 0;
+        }
+        (words as f64 / self.words_per_cycle).ceil() as u64 + self.burst_latency
     }
 
     /// Effective layer cycles: compute overlapped with (double-buffered)
@@ -57,6 +63,19 @@ mod tests {
         let d = DramConfig { words_per_cycle: 10.0, burst_latency: 5 };
         assert_eq!(d.transfer_cycles(&act(100, 0)), 15);
         assert_eq!(d.transfer_cycles(&act(95, 6)), 16); // ceil(101/10)+5
+    }
+
+    #[test]
+    fn zero_traffic_layer_costs_no_transfer_cycles() {
+        // Regression: burst latency is per burst, and zero traffic issues
+        // zero bursts — an SRAM-resident layer must not stall on DRAM.
+        let d = DramConfig { words_per_cycle: 10.0, burst_latency: 100 };
+        let a = act(0, 0);
+        assert_eq!(d.transfer_cycles(&a), 0);
+        assert_eq!(d.bound_cycles(5000, &a), 5000);
+        assert!(!d.memory_bound(5000, &a));
+        // One word still pays the burst setup.
+        assert_eq!(d.transfer_cycles(&act(1, 0)), 101);
     }
 
     #[test]

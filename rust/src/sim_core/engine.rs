@@ -9,6 +9,7 @@ use super::scheduler::{Scheduler, SystemState};
 use crate::coordinator::metrics::{DispatchRecord, RunMetrics};
 use crate::coordinator::partition::{AllocId, PartitionManager};
 use crate::coordinator::queue::TaskQueue;
+use crate::mem::{MemSystem, MemUpdate};
 use crate::sim::activity::Activity;
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 
@@ -56,6 +57,14 @@ pub struct Engine<'p> {
     /// state (no layer in flight, no future arrival) and nothing was
     /// dispatched — the livelock detector for wake-only policies.
     idle_wakes: u32,
+    /// The shared memory hierarchy (bandwidth arbiter + bank allocator),
+    /// instantiated from [`Scheduler::mem_spec`] at the start of
+    /// [`Engine::run`]; `None` keeps the isolated DRAM pricing.
+    mem: Option<MemSystem>,
+    /// Earliest pending [`Event::MemRescale`] cycle — dedup: every
+    /// rescale recomputes the next release anyway, so one pending event
+    /// (the earliest) suffices and later/duplicate requests are dropped.
+    mem_release_at: Option<u64>,
     now: u64,
 }
 
@@ -78,6 +87,8 @@ impl<'p> Engine<'p> {
             deadlines: Vec::new(),
             arrivals_pending: pool.dnns.len(),
             idle_wakes: 0,
+            mem: None,
+            mem_release_at: None,
             now: 0,
         }
     }
@@ -102,6 +113,29 @@ impl<'p> Engine<'p> {
             pool: self.pool,
             queue: &self.queue,
             partitions: &self.partitions,
+            mem: self.mem.as_ref().map(|m| m.feedback()),
+        }
+    }
+
+    /// Apply a memory-system rescale: re-post the corrected completions
+    /// (their stale predecessors are skipped via the staleness check) and
+    /// schedule the next early bandwidth release, if any.
+    fn apply_mem_update(&mut self, upd: MemUpdate) {
+        for (alloc, t) in upd.reposts {
+            let p = self.pending[&alloc];
+            self.events.push(Reverse(Event::LayerComplete { t, dnn: p.dnn, layer: p.layer, alloc }));
+        }
+        if let Some(t) = upd.next_release {
+            // One pending rescale is enough: if an earlier one is already
+            // queued, it will recompute (and re-request) this release.
+            let earlier_pending = match self.mem_release_at {
+                Some(p) => p <= t,
+                None => false,
+            };
+            if !earlier_pending {
+                self.mem_release_at = Some(t);
+                self.events.push(Reverse(Event::MemRescale { t }));
+            }
         }
     }
 
@@ -109,6 +143,7 @@ impl<'p> Engine<'p> {
     /// not done and no completion is in flight when the event queue
     /// drains) — a policy bug, not a recoverable condition.
     pub fn run(mut self, sched: &mut dyn Scheduler, obs: &mut dyn Observer) {
+        self.mem = sched.mem_spec().map(MemSystem::new);
         for (di, d) in self.pool.dnns.iter().enumerate() {
             self.events.push(Reverse(Event::Arrival { t: d.arrival_cycles, dnn: di }));
         }
@@ -175,6 +210,18 @@ impl<'p> Engine<'p> {
                 *needs_plan = true;
             }
             Event::LayerComplete { t, dnn, layer, alloc } => {
+                // Under the shared memory hierarchy a completion may have
+                // been superseded by a bandwidth rescale; the re-posted
+                // event is live and this one is a husk to skip.
+                let mem_result = match self.mem.as_mut() {
+                    Some(mem) => {
+                        if mem.is_stale(alloc, t) {
+                            return;
+                        }
+                        Some(mem.retire(t, alloc))
+                    }
+                    None => None,
+                };
                 let slice = self.partitions.slice_of(alloc).expect("completion of live alloc");
                 self.partitions.free(alloc);
                 self.queue.mark_done(dnn, layer);
@@ -193,6 +240,10 @@ impl<'p> Engine<'p> {
                 };
                 sched.on_layer_complete(&self.state(), dnn, layer);
                 obs.on_layer_complete(&rec);
+                if let Some((stats, upd)) = mem_result {
+                    obs.on_mem(dnn, &self.pool.dnns[dnn].name, &stats);
+                    self.apply_mem_update(upd);
+                }
                 *needs_plan = true;
             }
             Event::Deadline { t, dnn } => {
@@ -208,6 +259,18 @@ impl<'p> Engine<'p> {
             Event::Repartition { .. } => {
                 sched.on_repartition(&self.state());
                 *needs_plan = true;
+            }
+            Event::MemRescale { .. } => {
+                // Engine-internal: a transfer drained before its compute,
+                // so the survivors' shares grow.  No scheduler hook, no
+                // plan — and firing a stale one is a harmless no-op.
+                if self.mem_release_at == Some(self.now) {
+                    self.mem_release_at = None;
+                }
+                if let Some(mem) = self.mem.as_mut() {
+                    let upd = mem.rescale(self.now);
+                    self.apply_mem_update(upd);
+                }
             }
         }
     }
@@ -230,16 +293,32 @@ impl<'p> Engine<'p> {
             let coresident = self.partitions.allocated_count() as u64;
             let exec = sched.exec(&self.state(), a.dnn, a.layer, slice, coresident);
             obs.on_dispatch(self.now, a.dnn, a.layer, slice);
-            self.pending.insert(
-                alloc,
-                Pending { dnn: a.dnn, layer: a.layer, t_start: self.now, activity: exec.activity },
-            );
-            self.events.push(Reverse(Event::LayerComplete {
-                t: self.now + exec.cycles.max(1),
-                dnn: a.dnn,
-                layer: a.layer,
-                alloc,
-            }));
+            if let Some(mem) = self.mem.as_mut() {
+                // Shared memory hierarchy: `exec.cycles` is the compute
+                // path; the mem system grants banks, re-prices the DRAM
+                // traffic under the banked share (that activity is what
+                // the observer bills) and predicts the contended
+                // completion — posted via the update, alongside any
+                // co-runner completions it rescaled.
+                let gemm = self.pool.dnns[a.dnn].layers[a.layer].shape.gemm();
+                let (activity, upd) = mem.admit(self.now, alloc, a.dnn, gemm, slice, exec.cycles);
+                self.pending.insert(
+                    alloc,
+                    Pending { dnn: a.dnn, layer: a.layer, t_start: self.now, activity },
+                );
+                self.apply_mem_update(upd);
+            } else {
+                self.pending.insert(
+                    alloc,
+                    Pending { dnn: a.dnn, layer: a.layer, t_start: self.now, activity: exec.activity },
+                );
+                self.events.push(Reverse(Event::LayerComplete {
+                    t: self.now + exec.cycles.max(1),
+                    dnn: a.dnn,
+                    layer: a.layer,
+                    alloc,
+                }));
+            }
         }
         if let Some(dt) = sched.wake_after(&self.state()) {
             // Livelock detector: a wake-up scheduled while nothing else

@@ -31,6 +31,12 @@ pub enum Event {
     /// decision point that makes time-sliced repartitioning policies
     /// expressible without any new engine machinery.
     Repartition { t: u64 },
+    /// An in-flight transfer drains *before* its compute, releasing its
+    /// DRAM share early — the engine's [`MemSystem`](crate::mem::MemSystem)
+    /// rescales the survivors here.  Engine-internal: no scheduler hook
+    /// fires and no plan is taken; firing a stale one is a no-op.  Only
+    /// posted when the `[mem]` hierarchy is enabled.
+    MemRescale { t: u64 },
 }
 
 impl Event {
@@ -40,7 +46,8 @@ impl Event {
             Event::Arrival { t, .. }
             | Event::LayerComplete { t, .. }
             | Event::Deadline { t, .. }
-            | Event::Repartition { t } => t,
+            | Event::Repartition { t }
+            | Event::MemRescale { t } => t,
         }
     }
 
@@ -51,6 +58,7 @@ impl Event {
             Event::LayerComplete { t, dnn, layer, .. } => (t, 1, dnn, layer),
             Event::Deadline { t, dnn } => (t, 2, dnn, 0),
             Event::Repartition { t } => (t, 3, 0, 0),
+            Event::MemRescale { t } => (t, 4, 0, 0),
         }
     }
 }
@@ -84,6 +92,9 @@ mod tests {
         assert!(dl < rp);
         let done_b = Event::LayerComplete { t: 10, dnn: 1, layer: 0, alloc: 8 };
         assert!(done < done_b, "completion ties break by (dnn, layer)");
+        let mr = Event::MemRescale { t: 10 };
+        assert!(rp < mr, "rescales settle after every same-cycle decision");
+        assert!(Event::MemRescale { t: 9 } < arr);
     }
 
     #[test]

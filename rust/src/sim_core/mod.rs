@@ -10,9 +10,11 @@
 //! that the interesting design space is policies plugged into a shared
 //! event-driven core; this module adopts that shape:
 //!
-//! - [`Event`] — the four event kinds a multi-tenant accelerator sees:
+//! - [`Event`] — the event kinds a multi-tenant accelerator sees:
 //!   DNN [`Event::Arrival`], [`Event::LayerComplete`], a scheduled
-//!   [`Event::Repartition`] wake-up, and a QoS [`Event::Deadline`].
+//!   [`Event::Repartition`] wake-up, a QoS [`Event::Deadline`], and —
+//!   when the shared memory hierarchy ([`crate::mem`]) is enabled — the
+//!   engine-internal [`Event::MemRescale`] bandwidth-release point.
 //!   Ordering is total and deterministic: `(time, kind, dnn, layer)`.
 //! - [`Scheduler`] — the policy trait.  Decision-point hooks
 //!   ([`Scheduler::on_arrival`], [`Scheduler::on_layer_complete`], …) let

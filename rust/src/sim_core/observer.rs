@@ -1,6 +1,7 @@
 //! Metrics collection decoupled from policy and clock.
 
 use crate::coordinator::metrics::{DispatchRecord, RunMetrics};
+use crate::mem::MemStats;
 use crate::sim::partitioned::PartitionSlice;
 use crate::workloads::dnng::{DnnId, LayerId};
 
@@ -21,6 +22,12 @@ pub trait Observer {
     /// A request's deadline cycle passed; `met` is whether its DNN had
     /// completed by then (completions at the same cycle count as met).
     fn on_deadline(&mut self, _dnn: DnnId, _t: u64, _met: bool) {}
+
+    /// A layer retired under the shared memory hierarchy; `stats` is its
+    /// memory-side record (stall cycles, words moved, refetches).  Only
+    /// fires when `[mem]` is enabled, once per completed layer, right
+    /// after [`Observer::on_layer_complete`].
+    fn on_mem(&mut self, _dnn: DnnId, _tenant: &str, _stats: &MemStats) {}
 }
 
 /// `RunMetrics` *is* an observer: attach one to any engine run and the
@@ -30,6 +37,10 @@ pub trait Observer {
 impl Observer for RunMetrics {
     fn on_layer_complete(&mut self, rec: &DispatchRecord) {
         self.record_dispatch(rec.clone());
+    }
+
+    fn on_mem(&mut self, _dnn: DnnId, tenant: &str, stats: &MemStats) {
+        self.record_mem(tenant, stats);
     }
 }
 

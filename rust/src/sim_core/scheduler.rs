@@ -2,13 +2,15 @@
 
 use crate::coordinator::partition::PartitionManager;
 use crate::coordinator::queue::TaskQueue;
+use crate::mem::{MemFeedback, MemSpec};
 use crate::sim::activity::Activity;
 use crate::sim::partitioned::PartitionSlice;
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 
 /// Read-only view of the world a policy decides over: the current cycle,
-/// the workload pool, layer progress (ready set, per-DNN completion) and
-/// the live column tiling.
+/// the workload pool, layer progress (ready set, per-DNN completion), the
+/// live column tiling, and — when the shared memory hierarchy is enabled
+/// — the arbiter's per-tenant feedback.
 ///
 /// A policy that needs to try out allocations before committing (the
 /// dynamic policy's heaviest-first carving does) clones `partitions` and
@@ -19,6 +21,9 @@ pub struct SystemState<'e> {
     pub pool: &'e WorkloadPool,
     pub queue: &'e TaskQueue<'e>,
     pub partitions: &'e PartitionManager,
+    /// Live memory-system feedback (stall fractions, in-flight
+    /// memory-bound layers); `None` when `[mem]` is disabled.
+    pub mem: Option<&'e MemFeedback>,
 }
 
 /// One scheduling decision: run `(dnn, layer)` on `slice` starting now.
@@ -55,6 +60,19 @@ pub struct LayerExec {
 pub trait Scheduler {
     /// Stable display name (report/CLI tag).
     fn name(&self) -> &'static str;
+
+    /// The shared memory hierarchy this policy expects the engine to
+    /// simulate (`None`, the default, keeps today's isolated DRAM
+    /// pricing inside [`Scheduler::exec`]).  When `Some`, the engine
+    /// instantiates a [`MemSystem`](crate::mem::MemSystem): layer DRAM
+    /// traffic is re-priced under the banked buffer share, the interface
+    /// is arbitrated among co-runners, and completions rescale as the
+    /// co-runner set changes — so `exec` must return *compute* cycles
+    /// only (a policy must not carry both `dram` and `mem` configs).
+    /// Queried once per [`Engine::run`](super::Engine::run).
+    fn mem_spec(&self) -> Option<MemSpec> {
+        None
+    }
 
     /// A DNN just arrived (its layers may now appear in the ready set).
     fn on_arrival(&mut self, _state: &SystemState<'_>, _dnn: DnnId) {}

@@ -30,6 +30,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::baseline::SequentialBaseline;
 use crate::coordinator::scenario::{Scenario, ScenarioOutcome, ScenarioSpec};
 use crate::coordinator::scheduler::{AllocPolicy, DynamicScheduler, FeedModel, SchedulerConfig};
+use crate::mem::{ArbitrationMode, MemConfig, MemStats};
 use crate::sim::dataflow::ArrayGeometry;
 use crate::workloads::dnng::Dnn;
 use crate::workloads::generator::ArrivalProcess;
@@ -59,6 +60,14 @@ pub struct SweepGrid {
     /// non-zero rate into an ON-OFF process with that rate as the mean OFF
     /// gap; `None` (default) uses Poisson.
     pub bursty: Option<(usize, f64)>,
+    /// Shared-memory contention axis: DRAM interface bandwidths
+    /// (words/cycle) to sweep.  Empty (default) = no `[mem]` hierarchy
+    /// (points inherit the base config, normally isolated DRAM) and the
+    /// report carries no mem fields — today's bytes exactly.
+    pub bandwidths: Vec<f64>,
+    /// Arbitration modes crossed with [`SweepGrid::bandwidths`]; empty
+    /// defaults to fair-share when a bandwidth axis is present.
+    pub arbitrations: Vec<ArbitrationMode>,
     pub seed: u64,
 }
 
@@ -76,7 +85,23 @@ impl Default for SweepGrid {
             requests: 12,
             qos_slack: 3.0,
             bursty: None,
+            bandwidths: Vec::new(),
+            arbitrations: Vec::new(),
             seed: 42,
+        }
+    }
+}
+
+impl SweepGrid {
+    /// The arbitration modes the bandwidth axis actually runs under —
+    /// empty `arbitrations` defaults to fair-share.  Shared by
+    /// [`expand`] and the JSON header (`report::sweep_json`) so the
+    /// report can never misstate what the points ran.
+    pub fn effective_arbitrations(&self) -> Vec<ArbitrationMode> {
+        if self.arbitrations.is_empty() {
+            vec![ArbitrationMode::FairShare]
+        } else {
+            self.arbitrations.clone()
         }
     }
 }
@@ -90,7 +115,10 @@ pub struct SweepPoint {
     pub policy: AllocPolicy,
     pub feed: FeedModel,
     pub cols: u64,
-    /// Scenario seed — shared across policy/feed/geometry so every
+    /// `(interface words/cycle, arbitration)` when this point runs under
+    /// the shared memory hierarchy; `None` inherits the base config.
+    pub mem: Option<(f64, ArbitrationMode)>,
+    /// Scenario seed — shared across policy/feed/geometry/mem so every
     /// contender in a (mix, rate) cell sees the same arrival trace.
     pub scenario_seed: u64,
 }
@@ -112,6 +140,19 @@ pub struct SweepRow {
     /// Time-sliced occupancy of the dynamic run ([`OCCUPANCY_BUCKETS`]
     /// windows over the makespan).
     pub occupancy: Vec<f64>,
+    /// Memory-hierarchy summary of the dynamic run; `Some` exactly when
+    /// the point ran with `[mem]` enabled.
+    pub mem: Option<MemSummary>,
+}
+
+/// Shared-memory summary of one grid point's dynamic run.
+#[derive(Debug, Clone)]
+pub struct MemSummary {
+    /// Interface bandwidth this point ran under (words/cycle).
+    pub words_per_cycle: f64,
+    pub arbitration: ArbitrationMode,
+    /// All tenants pooled ([`RunMetrics::mem_total`](crate::coordinator::metrics::RunMetrics)).
+    pub stats: MemStats,
 }
 
 /// Expand a grid into its points (row-major over mix, rate, policy, feed,
@@ -119,6 +160,16 @@ pub struct SweepRow {
 pub fn expand(grid: &SweepGrid, base: &SchedulerConfig) -> Vec<SweepPoint> {
     let geoms: Vec<u64> =
         if grid.geoms.is_empty() { vec![base.geom.cols] } else { grid.geoms.clone() };
+    // The contention axis: no bandwidths = one inherit-the-base point.
+    let mems: Vec<Option<(f64, ArbitrationMode)>> = if grid.bandwidths.is_empty() {
+        vec![None]
+    } else {
+        let arbs = grid.effective_arbitrations();
+        grid.bandwidths
+            .iter()
+            .flat_map(|&bw| arbs.iter().map(move |&arb| Some((bw, arb))))
+            .collect()
+    };
     let mut points = Vec::new();
     for (mi, mix) in grid.mixes.iter().enumerate() {
         for (ri, &rate) in grid.rates.iter().enumerate() {
@@ -129,15 +180,18 @@ pub fn expand(grid: &SweepGrid, base: &SchedulerConfig) -> Vec<SweepPoint> {
             for &policy in &grid.policies {
                 for &feed in &grid.feeds {
                     for &cols in &geoms {
-                        points.push(SweepPoint {
-                            index: points.len(),
-                            mix: mix.clone(),
-                            mean_interarrival: rate,
-                            policy,
-                            feed,
-                            cols,
-                            scenario_seed,
-                        });
+                        for &mem in &mems {
+                            points.push(SweepPoint {
+                                index: points.len(),
+                                mix: mix.clone(),
+                                mean_interarrival: rate,
+                                policy,
+                                feed,
+                                cols,
+                                mem,
+                                scenario_seed,
+                            });
+                        }
                     }
                 }
             }
@@ -168,13 +222,29 @@ fn run_point(
     templates: &[Dnn],
 ) -> SweepRow {
     let cols = point.cols;
-    let cfg = SchedulerConfig {
+    let mut cfg = SchedulerConfig {
         geom: ArrayGeometry::new(cols, cols),
         min_width: (cols / 8).max(1).min(base.min_width.max(1)),
         feed_model: point.feed,
         alloc_policy: point.policy,
         ..base.clone()
     };
+    if let Some((bw, arb)) = point.mem {
+        // The contention axis: this point runs under the shared memory
+        // hierarchy, which subsumes any isolated [dram] bound — whose
+        // interface parameters (burst latency) it inherits, exactly like
+        // `mtsa run --mem`.
+        let base_mem = base.mem.unwrap_or(MemConfig {
+            dram: base.dram.unwrap_or_default(),
+            ..MemConfig::default()
+        });
+        cfg.mem = Some(MemConfig {
+            dram: crate::sim::dram::DramConfig { words_per_cycle: bw, ..base_mem.dram },
+            arbitration: arb,
+            banks: base_mem.banks,
+        });
+        cfg.dram = None;
+    }
     let spec = ScenarioSpec {
         name: format!("{}@{}", point.mix, point.mean_interarrival),
         arrival: arrival_for(grid, point.mean_interarrival),
@@ -186,6 +256,11 @@ fn run_point(
     let (dyn_obs, outcome) = scenario.run(&mut DynamicScheduler::new(cfg.clone()), cols);
     let (seq_obs, seq_outcome) = scenario.run(&mut SequentialBaseline::new(cfg.clone()), cols);
     let (dynamic, sequential) = (dyn_obs.metrics, seq_obs.metrics);
+    let mem = cfg.mem.map(|m| MemSummary {
+        words_per_cycle: m.dram.words_per_cycle,
+        arbitration: m.arbitration,
+        stats: dynamic.mem_total,
+    });
     SweepRow {
         point: point.clone(),
         requests: grid.requests,
@@ -196,6 +271,7 @@ fn run_point(
         outcome,
         seq_outcome,
         occupancy: dynamic.occupancy_timeline(cols, OCCUPANCY_BUCKETS),
+        mem,
     }
 }
 
@@ -295,6 +371,54 @@ mod tests {
         assert_eq!(points.len(), 2);
         assert_eq!(points[0].cols, 64);
         assert_eq!(points[1].cols, 128);
+    }
+
+    #[test]
+    fn bandwidth_axis_crosses_with_arbitration() {
+        let grid = SweepGrid {
+            mixes: vec!["light".into()],
+            rates: vec![0.0],
+            policies: vec![AllocPolicy::WidestToHeaviest],
+            feeds: vec![FeedModel::Independent],
+            geoms: vec![128],
+            bandwidths: vec![8.0, 64.0],
+            arbitrations: vec![ArbitrationMode::FairShare, ArbitrationMode::StrictPriority],
+            ..Default::default()
+        };
+        let points = expand(&grid, &SchedulerConfig::default());
+        assert_eq!(points.len(), 4);
+        assert_eq!(points[0].mem, Some((8.0, ArbitrationMode::FairShare)));
+        assert_eq!(points[3].mem, Some((64.0, ArbitrationMode::StrictPriority)));
+        // No bandwidth axis: the mem coordinate stays inherited.
+        let plain = expand(&SweepGrid::default(), &SchedulerConfig::default());
+        assert!(plain.iter().all(|p| p.mem.is_none()));
+    }
+
+    #[test]
+    fn mem_points_report_contention() {
+        let grid = SweepGrid {
+            mixes: vec!["NCF".into()],
+            rates: vec![0.0],
+            policies: vec![AllocPolicy::WidestToHeaviest, AllocPolicy::MemAware],
+            feeds: vec![FeedModel::Independent],
+            geoms: vec![128],
+            requests: 4,
+            bandwidths: vec![4.0],
+            ..Default::default()
+        };
+        let rows = run_sweep(&grid, &SchedulerConfig::default(), 2).unwrap();
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            let mem = row.mem.as_ref().expect("bandwidth axis => mem summary");
+            assert_eq!(mem.words_per_cycle, 4.0);
+            assert!(mem.stats.layers > 0);
+            assert!(mem.stats.xfer_words > 0);
+            assert!(
+                mem.stats.achieved_words_per_cycle() <= 4.0 + 1e-9,
+                "cannot beat the interface: {}",
+                mem.stats.achieved_words_per_cycle()
+            );
+        }
     }
 
     #[test]

@@ -416,6 +416,59 @@ fn every_scheduler_runs_each_layer_once_in_chain_order() {
 // Cross-policy sanity on the shared engine.
 // ---------------------------------------------------------------------
 
+// ---------------------------------------------------------------------
+// Shared-memory-hierarchy parity guard: with [mem] disabled (the
+// default), every policy and every report must reproduce today's bytes.
+// ---------------------------------------------------------------------
+
+#[test]
+fn mem_disabled_keeps_all_four_policies_bit_identical_to_legacy_era_runs() {
+    // The legacy goldens above already pin the dynamic policy against the
+    // frozen pre-engine loop; this pins the *shape* guarantees the mem
+    // subsystem must not disturb when disabled: no mem stats collected,
+    // the mem-aware tag degenerates to widest bit-for-bit, and sweep JSON
+    // carries no mem fields and stays thread-count invariant.
+    for (name, pool) in paper_mixes() {
+        let cfg = SchedulerConfig::default();
+        assert!(cfg.mem.is_none(), "contention must be opt-in");
+        let widest = DynamicScheduler::new(cfg.clone()).run(&pool);
+        assert!(widest.mem.is_empty(), "{name}: no [mem] => no mem stats");
+        assert_eq!(widest.mem_total, Default::default());
+        let aware = DynamicScheduler::new(SchedulerConfig {
+            alloc_policy: AllocPolicy::MemAware,
+            ..cfg.clone()
+        })
+        .run(&pool);
+        assert_eq!(widest.makespan, aware.makespan, "{name}");
+        assert_eq!(widest.dispatches, aware.dispatches, "{name}");
+
+        let seq = SequentialBaseline::new(cfg.clone()).run(&pool);
+        assert!(seq.mem.is_empty());
+        let stat = StaticPartitioning::new(cfg.clone()).run(&pool);
+        assert!(stat.mem.is_empty());
+        let multi = MultiArrayBank::split_of(&cfg, 4).run(&pool);
+        assert!(multi.mem.is_empty());
+    }
+
+    let grid = mtsa::sweep::SweepGrid {
+        mixes: vec!["light".into()],
+        rates: vec![0.0, 40_000.0],
+        policies: vec![AllocPolicy::WidestToHeaviest],
+        feeds: vec![FeedModel::Independent],
+        geoms: vec![128],
+        requests: 4,
+        ..Default::default()
+    };
+    let base = SchedulerConfig::default();
+    let a = mtsa::report::sweep_json(&grid, &mtsa::sweep::run_sweep(&grid, &base, 1).unwrap())
+        .render();
+    let b = mtsa::report::sweep_json(&grid, &mtsa::sweep::run_sweep(&grid, &base, 4).unwrap())
+        .render();
+    assert_eq!(a, b, "mem-disabled sweep must stay thread-count invariant");
+    assert!(!a.contains("\"mem\""), "no [mem] => no mem keys in the JSON");
+    assert!(!a.contains("\"bandwidths\""), "no contention axis => no grid-level mem keys");
+}
+
 #[test]
 fn all_four_policies_run_the_heavy_mix_through_one_engine() {
     let cfg = SchedulerConfig::default();

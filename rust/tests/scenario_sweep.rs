@@ -21,6 +21,7 @@ fn small_grid() -> SweepGrid {
         qos_slack: 3.0,
         bursty: None,
         seed: 0xDECAF,
+        ..SweepGrid::default()
     }
 }
 

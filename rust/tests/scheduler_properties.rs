@@ -1,13 +1,17 @@
-//! Property tests over the dynamic scheduler: structural invariants that
-//! must hold for ANY workload (random pools, random arrivals, generated
-//! arrival traces).
+//! Property tests over the dynamic scheduler and the shared memory
+//! hierarchy: structural invariants that must hold for ANY workload
+//! (random pools, random arrivals, generated arrival traces, random
+//! contention schedules).
 
 use std::collections::BTreeMap;
 
 use mtsa::coordinator::baseline::SequentialBaseline;
 use mtsa::coordinator::scheduler::{AllocPolicy, DynamicScheduler, FeedModel, SchedulerConfig};
+use mtsa::mem::{ArbitrationMode, BandwidthArbiter, MemConfig, MemUpdate};
 use mtsa::report;
+use mtsa::sim::dram::DramConfig;
 use mtsa::util::prop;
+use mtsa::workloads::dnng::WorkloadPool;
 use mtsa::workloads::generator::{random_pool, ArrivalProcess, GeneratorCfg};
 
 fn random_cfg(rng: &mut mtsa::util::rng::Rng) -> SchedulerConfig {
@@ -199,6 +203,147 @@ fn arrival_traces_keep_dynamic_competitive_with_sequential() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------
+// Shared memory hierarchy (rust/src/mem): arbiter + engine properties.
+// ---------------------------------------------------------------------
+
+fn mem_cfg(rng: &mut mtsa::util::rng::Rng) -> MemConfig {
+    MemConfig {
+        dram: DramConfig {
+            words_per_cycle: *rng.choose(&[1.0, 4.0, 16.0, 64.0]),
+            burst_latency: *rng.choose(&[0u64, 20, 100]),
+        },
+        arbitration: *rng.choose(&ArbitrationMode::ALL),
+        banks: *rng.choose(&[1u64, 4, 8, 32]),
+    }
+}
+
+#[test]
+fn sharing_never_beats_the_isolated_bound() {
+    // Property (a): a tenant's completion under the shared hierarchy is
+    // >= its completion running the same workload alone (full array, all
+    // banks, whole interface) — contention can only slow you down.
+    prop::check("shared completion >= isolated completion", 12, |rng| {
+        let gcfg = GeneratorCfg {
+            num_dnns: rng.gen_range_inclusive(2, 5) as usize,
+            layers_min: 1,
+            layers_max: 5,
+            mean_interarrival: *rng.choose(&[0.0, 20_000.0]),
+            dim_scale: 0.3 + 0.5 * rng.gen_f64(),
+        };
+        let pool = random_pool(rng, &gcfg);
+        let cfg = SchedulerConfig { mem: Some(mem_cfg(rng)), ..Default::default() };
+        let shared = DynamicScheduler::new(cfg.clone()).run(&pool);
+        for dnn in &pool.dnns {
+            let solo_pool = WorkloadPool::new("solo", vec![dnn.clone()]);
+            let solo = DynamicScheduler::new(cfg.clone()).run(&solo_pool);
+            prop::ensure(
+                shared.completion[&dnn.name] >= solo.completion[&dnn.name],
+                &format!(
+                    "{}: shared {} < isolated {}",
+                    dnn.name, shared.completion[&dnn.name], solo.completion[&dnn.name]
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn arbiter_conserves_words_across_rescales() {
+    // Property (b): however often the co-runner set changes (admissions,
+    // retirements, early releases — each rescaling every in-flight
+    // transfer), the words the arbiter delivers equal the words admitted.
+    prop::check("arbiter word conservation", 25, |rng| {
+        let dram = DramConfig {
+            words_per_cycle: 0.5 + 10.0 * rng.gen_f64(),
+            burst_latency: rng.gen_range(50),
+        };
+        let mode = *rng.choose(&ArbitrationMode::ALL);
+        let mut arb = BandwidthArbiter::new(dram, mode);
+        let n = rng.gen_range_inclusive(2, 8) as usize;
+        let mut admitted_words = 0u64;
+
+        // Engine-style event loop; kind: 0 = admit, 1 = complete, 2 =
+        // rescale.  Admissions are events too, so arbiter time only moves
+        // forward.
+        let mut events: Vec<(u64, u8, usize)> = Vec::new();
+        fn absorb(events: &mut Vec<(u64, u8, usize)>, upd: &MemUpdate) {
+            for &(id, t) in &upd.reposts {
+                events.push((t, 1, id));
+            }
+            if let Some(t) = upd.next_release {
+                events.push((t, 2, 0));
+            }
+        }
+        let mut flights: Vec<(u64, u64, u64, u64)> = Vec::new(); // (t, width, compute, words)
+        let mut t_admit = 0u64;
+        for _ in 0..n {
+            t_admit += rng.gen_range(500);
+            let words = rng.gen_range(20_000);
+            let compute = 1 + rng.gen_range(10_000);
+            admitted_words += words;
+            flights.push((t_admit, *rng.choose(&[16u64, 32, 64, 128]), compute, words));
+        }
+        for (id, &(t, ..)) in flights.iter().enumerate() {
+            events.push((t, 0, id));
+        }
+        let mut retired = 0usize;
+        while !events.is_empty() {
+            events.sort_unstable();
+            let (t, kind, id) = events.remove(0);
+            let upd = match kind {
+                0 => {
+                    let (_, width, compute, words) = flights[id];
+                    arb.admit(t, id, id, width, compute, words)
+                }
+                1 => {
+                    if arb.is_stale(id, t) {
+                        continue;
+                    }
+                    let (rep, u) = arb.retire(t, id);
+                    prop::ensure_eq(rep.t_end, t, "retire at the predicted cycle")?;
+                    retired += 1;
+                    u
+                }
+                _ => arb.rescale(t),
+            };
+            absorb(&mut events, &upd);
+        }
+        prop::ensure_eq(retired, n, "every flight retires")?;
+        prop::ensure_eq(arb.in_flight(), 0, "arbiter drained")?;
+        prop::ensure(
+            (arb.consumed_words() - admitted_words as f64).abs() < 1e-6 * (1.0 + admitted_words as f64),
+            &format!("conserved {} vs admitted {}", arb.consumed_words(), admitted_words),
+        )
+    });
+}
+
+#[test]
+fn mem_aware_sweep_json_is_thread_count_invariant() {
+    // Property (c): the determinism contract survives the contention
+    // axis and the mem-aware policy — fixed seed => byte-identical JSON.
+    let grid = mtsa::sweep::SweepGrid {
+        mixes: vec!["light".into()],
+        rates: vec![0.0, 30_000.0],
+        policies: vec![AllocPolicy::MemAware],
+        feeds: vec![FeedModel::Independent],
+        geoms: vec![128],
+        requests: 4,
+        bandwidths: vec![8.0, 64.0],
+        arbitrations: vec![ArbitrationMode::FairShare, ArbitrationMode::WeightedByColumns],
+        seed: 0xBEEF,
+        ..Default::default()
+    };
+    let base = SchedulerConfig::default();
+    let a = report::sweep_json(&grid, &mtsa::sweep::run_sweep(&grid, &base, 1).unwrap()).render();
+    let b = report::sweep_json(&grid, &mtsa::sweep::run_sweep(&grid, &base, 4).unwrap()).render();
+    let c = report::sweep_json(&grid, &mtsa::sweep::run_sweep(&grid, &base, 8).unwrap()).render();
+    assert_eq!(a, b, "1 vs 4 workers changed the mem-aware report bytes");
+    assert_eq!(a, c, "1 vs 8 workers changed the mem-aware report bytes");
+    assert!(a.contains("\"mem\""), "contention points must carry mem stats");
 }
 
 #[test]
