@@ -55,7 +55,7 @@ fn main() {
             let cfg = cfg_with(bw, arb, AllocPolicy::WidestToHeaviest);
             let scenario = Scenario::generate(&templates, &spec, &cfg);
             let (obs, outcome) =
-                scenario.run(&mut DynamicScheduler::new(cfg.clone()), cfg.geom.cols);
+                scenario.run(&mut DynamicScheduler::new(cfg.clone()), cfg.geom);
             let m = &obs.metrics;
             t.row(&[
                 format!("{bw:.0}"),
@@ -76,7 +76,7 @@ fn main() {
     for policy in [AllocPolicy::WidestToHeaviest, AllocPolicy::MemAware] {
         let cfg = cfg_with(8.0, ArbitrationMode::FairShare, policy);
         let scenario = Scenario::generate(&templates, &spec, &cfg);
-        let (obs, outcome) = scenario.run(&mut DynamicScheduler::new(cfg.clone()), cfg.geom.cols);
+        let (obs, outcome) = scenario.run(&mut DynamicScheduler::new(cfg.clone()), cfg.geom);
         t.row(&[
             policy.tag().to_string(),
             obs.metrics.makespan.to_string(),

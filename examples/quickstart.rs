@@ -47,8 +47,8 @@ fn main() {
             "  {:9} {:6}  cols [{:3}..{:3})  t {:>7}..{:>7}",
             d.dnn_name,
             d.layer_name,
-            d.slice.col0,
-            d.slice.end(),
+            d.tile.col0,
+            d.tile.col_end(),
             d.t_start,
             d.t_end
         );

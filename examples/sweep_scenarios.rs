@@ -16,6 +16,7 @@
 
 use mtsa::coordinator::scheduler::{AllocPolicy, FeedModel, SchedulerConfig};
 use mtsa::report;
+use mtsa::sim::dataflow::ArrayGeometry;
 use mtsa::sweep::{run_sweep, SweepGrid};
 
 fn main() {
@@ -25,7 +26,7 @@ fn main() {
         rates: vec![0.0, 25_000.0, 250_000.0],
         policies: vec![AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare],
         feeds: vec![FeedModel::Independent, FeedModel::Interleaved],
-        geoms: vec![128],
+        geoms: vec![ArrayGeometry::new(128, 128)],
         requests: 10,
         qos_slack: 3.0,
         bursty: None,

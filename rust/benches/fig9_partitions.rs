@@ -32,7 +32,7 @@ fn fig(pool: &mtsa::workloads::dnng::WorkloadPool, tag: &str, policy: AllocPolic
     // Width histogram over dispatches (the ladder).
     let mut hist = std::collections::BTreeMap::new();
     for d in &g.dynamic.dispatches {
-        *hist.entry(d.slice.width).or_insert(0u64) += 1;
+        *hist.entry(d.tile.cols).or_insert(0u64) += 1;
     }
     let mut t = Table::new(&["partition width", "layer dispatches"]);
     for (w, n) in hist {

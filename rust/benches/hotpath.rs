@@ -43,7 +43,7 @@ fn main() {
 
     // Partition manager churn.
     b.measure("PartitionManager alloc/free x64", || {
-        let mut pm = PartitionManager::new(128);
+        let mut pm = PartitionManager::new(geom);
         let mut rng = Rng::new(1);
         let mut live = Vec::new();
         for _ in 0..64 {

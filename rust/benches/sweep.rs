@@ -10,6 +10,7 @@ use std::time::Duration;
 
 use mtsa::benchkit::{section, Bench, BenchOpts};
 use mtsa::coordinator::scheduler::{AllocPolicy, FeedModel, SchedulerConfig};
+use mtsa::sim::dataflow::ArrayGeometry;
 use mtsa::sweep::{run_sweep, SweepGrid};
 
 fn bench_grid() -> SweepGrid {
@@ -18,7 +19,7 @@ fn bench_grid() -> SweepGrid {
         rates: vec![0.0, 30_000.0],
         policies: vec![AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare],
         feeds: vec![FeedModel::Independent, FeedModel::Interleaved],
-        geoms: vec![128],
+        geoms: vec![ArrayGeometry::new(128, 128)],
         requests: 6,
         qos_slack: 3.0,
         bursty: None,

@@ -6,10 +6,11 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::args::ParsedArgs;
 use crate::config::{ArrivalKind, RunConfig};
-use crate::coordinator::scheduler::{AllocPolicy, FeedModel};
+use crate::coordinator::scheduler::{AllocPolicy, FeedModel, PartitionMode};
 use crate::coordinator::static_part::StaticPartitioning;
 use crate::mem::{ArbitrationMode, MemConfig};
 use crate::report;
+use crate::sim::dataflow::ArrayGeometry;
 use crate::sweep::{run_sweep, SweepGrid};
 use crate::util::stats::fmt_si;
 use crate::util::tablefmt::Table;
@@ -23,11 +24,12 @@ USAGE:
   mtsa zoo                               print the Table-1 workload zoo
   mtsa run <heavy|light|model,...>       run dynamic vs sequential
        [--config <file>] [--policy widest|equal|mem-aware] [--mem]
-       [--static] [--detail]
+       [--mode columns|2d] [--static] [--detail]
   mtsa sweep                             parallel scenario sweep (SLA report)
        [--config <file>] [--mixes heavy,light] [--rates 0,20000,100000]
        [--policies widest,equal,mem-aware] [--feeds independent,interleaved]
-       [--geoms 128] [--bandwidths 8,32,128] [--arbitrations fair,weighted,priority]
+       [--geoms 128,64x256] [--modes columns,2d]
+       [--bandwidths 8,32,128] [--arbitrations fair,weighted,priority]
        [--requests 12] [--slack 3.0] [--burst <size>]
        [--seed 42] [--threads N] [--json <file>]
   mtsa trace <heavy|light|model,...>     write Scale-Sim/Accelergy CSVs
@@ -85,13 +87,17 @@ fn load_config(args: &ParsedArgs) -> Result<RunConfig> {
 }
 
 fn cmd_run(args: &ParsedArgs) -> Result<()> {
-    args.ensure_known(&["config", "policy"], &["static", "detail", "mem"])?;
+    args.ensure_known(&["config", "policy", "mode"], &["static", "detail", "mem"])?;
     let spec = args.positionals.first().map(String::as_str).unwrap_or("heavy");
     let pool = resolve_pool(spec)?;
     let mut cfg = load_config(args)?;
     if let Some(p) = args.opt("policy") {
         cfg.scheduler.alloc_policy =
             p.parse::<AllocPolicy>().map_err(|e| anyhow!("--policy: {e}"))?;
+    }
+    if let Some(m) = args.opt("mode") {
+        cfg.scheduler.partition_mode =
+            m.parse::<PartitionMode>().map_err(|e| anyhow!("--mode: {e}"))?;
     }
     if args.has("mem") && cfg.scheduler.mem.is_none() {
         // Shorthand: shared memory hierarchy at defaults ([mem] config
@@ -195,7 +201,7 @@ where
 fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
     args.ensure_known(
         &[
-            "config", "mixes", "rates", "policies", "feeds", "geoms", "bandwidths",
+            "config", "mixes", "rates", "policies", "feeds", "geoms", "modes", "bandwidths",
             "arbitrations", "requests", "slack", "burst", "burst-within", "seed", "threads",
             "json",
         ],
@@ -237,10 +243,13 @@ fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
         grid.feeds = parse_list::<FeedModel>(v, "feeds")?;
     }
     if let Some(v) = args.opt("geoms") {
-        grid.geoms = parse_list::<u64>(v, "geoms")?;
-        if grid.geoms.iter().any(|c| *c < 8) {
-            bail!("--geoms values must be >= 8, got {:?}", grid.geoms);
+        grid.geoms = parse_list::<ArrayGeometry>(v, "geoms")?;
+        if grid.geoms.iter().any(|g| g.rows < 8 || g.cols < 8) {
+            bail!("--geoms dimensions must be >= 8, got {:?}", grid.geoms);
         }
+    }
+    if let Some(v) = args.opt("modes") {
+        grid.modes = parse_list::<PartitionMode>(v, "modes")?;
     }
     if let Some(v) = args.opt("bandwidths") {
         grid.bandwidths = parse_list::<f64>(v, "bandwidths")?;
@@ -329,7 +338,7 @@ fn cmd_trace(args: &ParsedArgs) -> Result<()> {
     let safe = spec.replace([',', ' '], "_");
     for (tag, m) in [("dynamic", &g.dynamic), ("sequential", &g.sequential)] {
         let compute = out.join(format!("{safe}_{tag}_compute_report.csv"));
-        std::fs::write(&compute, crate::sim::trace::compute_report_csv(m, cfg.scheduler.geom))?;
+        std::fs::write(&compute, crate::sim::trace::compute_report_csv(m))?;
         let activity = out.join(format!("{safe}_{tag}_activity_log.csv"));
         std::fs::write(&activity, crate::sim::trace::activity_log_csv(m))?;
         println!("wrote {} and {}", compute.display(), activity.display());
@@ -470,6 +479,10 @@ mod tests {
             vec!["sweep".to_string(), "--feeds".into(), "psychic".into()],
             vec!["sweep".to_string(), "--mixes".into(), "NotAModel".into()],
             vec!["sweep".to_string(), "--bandwidths".into(), "0".into()],
+            vec!["sweep".to_string(), "--geoms".into(), "64x".into()],
+            vec!["sweep".to_string(), "--geoms".into(), "4".into()],
+            vec!["sweep".to_string(), "--modes".into(), "diagonal".into()],
+            vec!["run".to_string(), "NCF".into(), "--mode".into(), "psychic".into()],
             vec!["sweep".to_string(), "--arbitrations".into(), "fair".into()],
             vec![
                 "sweep".to_string(),
@@ -482,6 +495,59 @@ mod tests {
             let args = ParsedArgs::parse(&bad).unwrap();
             assert!(dispatch(&args).is_err(), "should reject {bad:?}");
         }
+    }
+
+    #[test]
+    fn run_with_2d_mode() {
+        let args = ParsedArgs::parse(&[
+            "run".into(),
+            "NCF,HandwritingLSTM".into(),
+            "--mode".into(),
+            "2d".into(),
+        ])
+        .unwrap();
+        dispatch(&args).unwrap();
+    }
+
+    #[test]
+    fn sweep_mode_axis_and_hxw_geoms_emit_json() {
+        let out = std::env::temp_dir().join(format!("mtsa-2dsweep-{}.json", std::process::id()));
+        let args = ParsedArgs::parse(&[
+            "sweep".into(),
+            "--mixes".into(),
+            "NCF".into(),
+            "--rates".into(),
+            "0".into(),
+            "--policies".into(),
+            "widest".into(),
+            "--feeds".into(),
+            "independent".into(),
+            "--geoms".into(),
+            "128,64x128".into(),
+            "--modes".into(),
+            "columns,2d".into(),
+            "--requests".into(),
+            "3".into(),
+            "--threads".into(),
+            "2".into(),
+            "--json".into(),
+            out.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        dispatch(&args).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let points = parsed.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 4, "geoms x modes");
+        // 2d points carry the mode key; columns points do not.
+        let with_mode =
+            points.iter().filter(|p| p.get("partition_mode").is_some()).count();
+        assert_eq!(with_mode, 2);
+        // Non-square geometries carry a rows key.
+        let with_rows = points.iter().filter(|p| p.get("rows").is_some()).count();
+        assert_eq!(with_rows, 2);
+        assert!(parsed.get("modes").is_some());
+        let _ = std::fs::remove_file(&out);
     }
 
     #[test]

@@ -20,6 +20,10 @@
 //! min_width = 16
 //! patience_divisor = 4
 //!
+//! [partition]              # 2D architecture fission, see docs/fission.md
+//! mode = "columns"         # columns (paper) | 2d (rectangular tiles)
+//! min_rows = 16            # shortest tile 2d mode will create
+//!
 //! [dram]
 //! enabled = false
 //! words_per_cycle = 64.0
@@ -45,7 +49,7 @@
 use anyhow::{bail, Context, Result};
 
 use super::toml::TomlDoc;
-use crate::coordinator::scheduler::{AllocPolicy, FeedModel, SchedulerConfig};
+use crate::coordinator::scheduler::{AllocPolicy, FeedModel, PartitionMode, SchedulerConfig};
 use crate::mem::{ArbitrationMode, MemConfig};
 use crate::util::UnknownTag;
 use crate::energy::components::{EnergyModel, Precision};
@@ -167,7 +171,8 @@ impl RunConfig {
         let doc = TomlDoc::parse(text).context("parsing config")?;
         let mut cfg = RunConfig::default();
 
-        let known = ["array", "buffers", "scheduler", "dram", "mem", "energy", "scenario"];
+        let known =
+            ["array", "buffers", "scheduler", "partition", "dram", "mem", "energy", "scenario"];
         for s in doc.section_names() {
             if !known.contains(&s) {
                 bail!("unknown config section [{s}] (known: {known:?})");
@@ -229,6 +234,17 @@ impl RunConfig {
                 bail!("patience_divisor must be >= 1");
             }
             cfg.scheduler.patience_divisor = p;
+        }
+
+        if let Some(m) = doc.get("partition", "mode").and_then(|v| v.as_str()) {
+            cfg.scheduler.partition_mode =
+                m.parse::<PartitionMode>().context("in [partition] mode")?;
+        }
+        if let Some(r) = u64_of("partition", "min_rows") {
+            if r == 0 || r > rows {
+                bail!("min_rows must be in 1..=rows");
+            }
+            cfg.scheduler.min_rows = r;
         }
 
         if doc.get("dram", "enabled").and_then(|v| v.as_bool()).unwrap_or(false) {
@@ -374,6 +390,26 @@ mod tests {
     }
 
     #[test]
+    fn partition_section_round_trip() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            [partition]
+            mode = "2d"
+            min_rows = 32
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.scheduler.partition_mode, PartitionMode::TwoD);
+        assert_eq!(cfg.scheduler.min_rows, 32);
+        // Default: the paper's columns mode, min_rows = rows/8.
+        let def = RunConfig::from_toml("").unwrap();
+        assert_eq!(def.scheduler.partition_mode, PartitionMode::Columns);
+        assert_eq!(def.scheduler.min_rows, 16);
+        let explicit = RunConfig::from_toml("[partition]\nmode = \"columns\"").unwrap();
+        assert_eq!(explicit.scheduler.partition_mode, PartitionMode::Columns);
+    }
+
+    #[test]
     fn mem_section_round_trip() {
         let cfg = RunConfig::from_toml(
             r#"
@@ -414,6 +450,9 @@ mod tests {
             "[array]\nrows = 0",
             "[scheduler]\npolicy = \"nope\"",
             "[scheduler]\nmin_width = 0",
+            "[partition]\nmode = \"diagonal\"",
+            "[partition]\nmin_rows = 0",
+            "[partition]\nmin_rows = 256",
             "[scheduler]\npatience_divisor = 0",
             "[buffers]\ndtype_bytes = 3",
             "[typo]\nx = 1",

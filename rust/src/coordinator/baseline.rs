@@ -9,7 +9,7 @@
 
 use super::metrics::RunMetrics;
 use crate::sim::dataflow::baseline_layer_timing;
-use crate::sim::partitioned::PartitionSlice;
+use crate::sim::partitioned::Tile;
 use crate::sim_core::{Allocation, Engine, LayerExec, Scheduler, SystemState};
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 
@@ -29,7 +29,7 @@ impl SequentialBaseline {
     /// Run the pool on the shared engine: DNNs in arrival order, layers
     /// in chain order, full array each.
     pub fn run(&self, pool: &WorkloadPool) -> RunMetrics {
-        Engine::execute(pool, self.cfg.geom.cols, &mut self.clone())
+        Engine::execute(pool, self.cfg.geom, &mut self.clone())
     }
 }
 
@@ -68,11 +68,7 @@ impl Scheduler for SequentialBaseline {
         }
         let Some((_, di)) = current else { return Vec::new() };
         match ready.iter().filter(|r| r.dnn == di).map(|r| r.layer).min() {
-            Some(layer) => vec![Allocation {
-                dnn: di,
-                layer,
-                slice: PartitionSlice::new(0, self.cfg.geom.cols),
-            }],
+            Some(layer) => vec![Allocation { dnn: di, layer, tile: Tile::full(self.cfg.geom) }],
             // Current DNN not arrived yet: idle until its arrival.
             None => Vec::new(),
         }
@@ -83,7 +79,7 @@ impl Scheduler for SequentialBaseline {
         s: &SystemState<'_>,
         dnn: DnnId,
         layer: LayerId,
-        _slice: PartitionSlice,
+        _tile: Tile,
         _coresident: u64,
     ) -> LayerExec {
         let gemm = s.pool.dnns[dnn].layers[layer].shape.gemm();
@@ -120,7 +116,7 @@ mod tests {
             assert_eq!(w[0].t_end, w[1].t_start, "no overlap, no gap");
         }
         // Every layer used the full array.
-        assert!(m.dispatches.iter().all(|d| d.slice.width == 128));
+        assert!(m.dispatches.iter().all(|d| d.tile.cols == 128));
     }
 
     #[test]

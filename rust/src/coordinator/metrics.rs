@@ -8,18 +8,21 @@ use std::collections::BTreeMap;
 use crate::mem::MemStats;
 use crate::sim::activity::Activity;
 use crate::sim::dataflow::ArrayGeometry;
-use crate::sim::partitioned::PartitionSlice;
+use crate::sim::partitioned::Tile;
 use crate::util::stats::{deadline_misses, Summary};
 use crate::workloads::dnng::{DnnId, LayerId};
 
 /// One layer dispatch — a row of the Fig. 9(c)(d) detail plots.
+///
+/// `tile` is full-height in `columns` mode; 2D fission also records the
+/// row band.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DispatchRecord {
     pub dnn: DnnId,
     pub dnn_name: String,
     pub layer: LayerId,
     pub layer_name: String,
-    pub slice: PartitionSlice,
+    pub tile: Tile,
     pub t_start: u64,
     pub t_end: u64,
     pub activity: Activity,
@@ -80,7 +83,17 @@ impl RunMetrics {
         self.dispatches
             .iter()
             .filter(|d| d.dnn_name == dnn_name)
-            .map(|d| d.slice.width)
+            .map(|d| d.tile.cols)
+            .collect()
+    }
+
+    /// Tile shapes `(rows, cols)` used by a DNN, in dispatch order — the
+    /// 2D-fission counterpart of [`RunMetrics::partition_trace`].
+    pub fn partition_shapes(&self, dnn_name: &str) -> Vec<(u64, u64)> {
+        self.dispatches
+            .iter()
+            .filter(|d| d.dnn_name == dnn_name)
+            .map(|d| (d.tile.rows, d.tile.cols))
             .collect()
     }
 
@@ -93,21 +106,25 @@ impl RunMetrics {
     }
 
     /// Time-sliced array occupancy: the makespan is cut into `buckets`
-    /// equal windows and each window reports the fraction of column-cycles
+    /// equal windows and each window reports the fraction of PE-cycles
     /// covered by a live partition (1.0 = the whole array allocated for the
     /// whole window).  This is the utilization *timeline* behind the
     /// paper's Fig. 9(c)(d) residency plots — the scalar
     /// [`RunMetrics::utilization`] is MAC-based and hides when the array
     /// sat idle waiting for arrivals.
-    pub fn occupancy_timeline(&self, cols: u64, buckets: usize) -> Vec<f64> {
-        assert!(cols > 0 && buckets > 0);
+    pub fn occupancy_timeline(&self, geom: ArrayGeometry, buckets: usize) -> Vec<f64> {
+        assert!(buckets > 0);
         if self.makespan == 0 {
             return vec![0.0; buckets];
         }
         let span = self.makespan as f64;
         let window = span / buckets as f64;
-        let mut busy = vec![0.0f64; buckets]; // column-cycles per window
+        let mut busy = vec![0.0f64; buckets]; // column-equivalent-cycles per window
         for d in &self.dispatches {
+            // Column-equivalents of the tile (== its width for full-height
+            // tiles — both divisions are exact, keeping columns-mode
+            // output bit-identical to the pre-2D accounting).
+            let width_equiv = d.tile.pes() as f64 / geom.rows as f64;
             // Buckets this dispatch can overlap (u128: cycles × buckets can
             // exceed u64 on long runs).
             let b0 = (d.t_start as u128 * buckets as u128 / self.makespan as u128) as usize;
@@ -117,11 +134,11 @@ impl RunMetrics {
                 let w1 = window * (b + 1) as f64;
                 let overlap = (d.t_end as f64).min(w1) - (d.t_start as f64).max(w0);
                 if overlap > 0.0 {
-                    *slot += overlap * d.slice.width as f64;
+                    *slot += overlap * width_equiv;
                 }
             }
         }
-        busy.into_iter().map(|b| b / (window * cols as f64)).collect()
+        busy.into_iter().map(|b| b / (window * geom.cols as f64)).collect()
     }
 }
 
@@ -182,13 +199,19 @@ impl TenantStats {
 mod tests {
     use super::*;
 
+    const GEOM: ArrayGeometry = ArrayGeometry { rows: 128, cols: 128 };
+
     fn rec(dnn: &str, layer: LayerId, width: u64, t0: u64, t1: u64) -> DispatchRecord {
+        rec_tile(dnn, layer, Tile::new(0, 0, 128, width), t0, t1)
+    }
+
+    fn rec_tile(dnn: &str, layer: LayerId, tile: Tile, t0: u64, t1: u64) -> DispatchRecord {
         DispatchRecord {
             dnn: 0,
             dnn_name: dnn.to_string(),
             layer,
             layer_name: format!("l{layer}"),
-            slice: PartitionSlice::new(0, width),
+            tile,
             t_start: t0,
             t_end: t1,
             activity: Activity { macs: 100, ..Default::default() },
@@ -233,7 +256,7 @@ mod tests {
         // One full-width dispatch over the whole makespan: every bucket 1.0.
         let mut m = RunMetrics::default();
         m.record_dispatch(rec("a", 0, 128, 0, 1000));
-        let tl = m.occupancy_timeline(128, 4);
+        let tl = m.occupancy_timeline(GEOM, 4);
         assert_eq!(tl.len(), 4);
         for v in &tl {
             assert!((v - 1.0).abs() < 1e-9, "{tl:?}");
@@ -243,15 +266,37 @@ mod tests {
         let mut m = RunMetrics::default();
         m.record_dispatch(rec("a", 0, 64, 0, 500));
         m.record_dispatch(rec("a", 1, 128, 500, 1000)); // sets makespan=1000
-        let tl = m.occupancy_timeline(128, 2);
+        let tl = m.occupancy_timeline(GEOM, 2);
         assert!((tl[0] - 0.5).abs() < 1e-9, "{tl:?}");
         assert!((tl[1] - 1.0).abs() < 1e-9, "{tl:?}");
     }
 
     #[test]
+    fn occupancy_counts_tiles_by_pe_footprint() {
+        // A half-height full-width tile covers half the array; stacking a
+        // second one in the other row band fills it.
+        let mut m = RunMetrics::default();
+        m.record_dispatch(rec_tile("a", 0, Tile::new(0, 0, 64, 128), 0, 1000));
+        let tl = m.occupancy_timeline(GEOM, 2);
+        assert!((tl[0] - 0.5).abs() < 1e-9, "{tl:?}");
+        m.record_dispatch(rec_tile("b", 0, Tile::new(64, 0, 64, 128), 0, 1000));
+        let tl = m.occupancy_timeline(GEOM, 2);
+        assert!((tl[0] - 1.0).abs() < 1e-9, "{tl:?}");
+    }
+
+    #[test]
+    fn partition_shapes_record_row_bands() {
+        let mut m = RunMetrics::default();
+        m.record_dispatch(rec_tile("a", 0, Tile::new(0, 0, 64, 32), 0, 10));
+        m.record_dispatch(rec_tile("a", 1, Tile::new(32, 16, 96, 64), 10, 20));
+        assert_eq!(m.partition_shapes("a"), vec![(64, 32), (96, 64)]);
+        assert_eq!(m.partition_trace("a"), vec![32, 64]);
+    }
+
+    #[test]
     fn occupancy_timeline_empty_run() {
         let m = RunMetrics::default();
-        assert_eq!(m.occupancy_timeline(128, 3), vec![0.0, 0.0, 0.0]);
+        assert_eq!(m.occupancy_timeline(GEOM, 3), vec![0.0, 0.0, 0.0]);
     }
 
     #[test]

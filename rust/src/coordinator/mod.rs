@@ -10,9 +10,10 @@
 //!
 //! - [`queue`] — the DNNG task queue: arrivals, per-DNN layer progress,
 //!   ready-layer extraction (DAG predecessors honored).
-//! - [`partition`] — the partition manager: vertical slices of the array,
-//!   allocation (widest-free or at an exact position), freeing, and
-//!   adjacent-free merging.
+//! - [`partition`] — the partition manager: rectangular tiles of the
+//!   array (full-height column slices in the paper's `columns` mode),
+//!   allocation (widest-free, best-fit 2D, or at an exact position),
+//!   freeing, and adjacent-free rectangle merging.
 //! - [`scheduler`] — the dynamic partitioning policy: the
 //!   `Partition_Calculation` / `Task_Assignment` / partitioned-WS
 //!   decisions of the paper.
@@ -48,4 +49,4 @@ pub mod static_part;
 pub use metrics::{DispatchRecord, RunMetrics, TenantStats};
 pub use partition::PartitionManager;
 pub use scenario::{Scenario, ScenarioObserver, ScenarioSpec};
-pub use scheduler::{DynamicScheduler, SchedulerConfig, UnknownTag};
+pub use scheduler::{DynamicScheduler, PartitionMode, SchedulerConfig, UnknownTag};

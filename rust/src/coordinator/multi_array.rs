@@ -20,7 +20,7 @@ use super::metrics::RunMetrics;
 use super::scheduler::SchedulerConfig;
 use crate::sim::buffers::BufferConfig;
 use crate::sim::dataflow::{baseline_layer_timing, ArrayGeometry};
-use crate::sim::partitioned::PartitionSlice;
+use crate::sim::partitioned::Tile;
 use crate::sim_core::{Allocation, Engine, LayerExec, Scheduler, SystemState};
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 
@@ -44,7 +44,7 @@ impl MultiArrayBank {
 
     /// Run the pool: least-remaining-work assignment, per-array FIFO.
     pub fn run(&self, pool: &WorkloadPool) -> RunMetrics {
-        Engine::execute(pool, self.cfg.geom.cols, &mut MultiArrayPolicy::new(self))
+        Engine::execute(pool, self.cfg.geom, &mut MultiArrayPolicy::new(self))
     }
 }
 
@@ -82,9 +82,10 @@ impl MultiArrayPolicy {
         }
     }
 
-    /// The column range chip `a` occupies in the pooled silicon.
-    fn chip_slice(&self, a: usize) -> PartitionSlice {
-        PartitionSlice::new(a as u64 * self.geom_each.cols, self.geom_each.cols)
+    /// The column range chip `a` occupies in the pooled silicon
+    /// (full-height: chips span every row).
+    fn chip_tile(&self, a: usize) -> Tile {
+        Tile::new(0, a as u64 * self.geom_each.cols, self.geom_each.rows, self.geom_each.cols)
     }
 }
 
@@ -117,7 +118,7 @@ impl Scheduler for MultiArrayPolicy {
         }
         let mut out = Vec::new();
         for a in 0..self.num_arrays {
-            let chip = self.chip_slice(a);
+            let chip = self.chip_tile(a);
             if !s.partitions.is_free(chip) {
                 continue; // this chip is mid-layer
             }
@@ -129,7 +130,7 @@ impl Scheduler for MultiArrayPolicy {
             let Some(layer) = ready.iter().filter(|r| r.dnn == dnn).map(|r| r.layer).min() else {
                 continue;
             };
-            out.push(Allocation { dnn, layer, slice: chip });
+            out.push(Allocation { dnn, layer, tile: chip });
         }
         out
     }
@@ -139,7 +140,7 @@ impl Scheduler for MultiArrayPolicy {
         s: &SystemState<'_>,
         dnn: DnnId,
         layer: LayerId,
-        _slice: PartitionSlice,
+        _tile: Tile,
         _coresident: u64,
     ) -> LayerExec {
         let gemm = s.pool.dnns[dnn].layers[layer].shape.gemm();
@@ -185,7 +186,7 @@ mod tests {
         // Equal DNNs spread one per chip: all four start at cycle 0.
         assert!(m.dispatches.iter().all(|d| d.t_start == 0));
         let chips: std::collections::BTreeSet<u64> =
-            m.dispatches.iter().map(|d| d.slice.col0).collect();
+            m.dispatches.iter().map(|d| d.tile.col0).collect();
         assert_eq!(chips.len(), 4);
     }
 

@@ -1,57 +1,93 @@
-//! The partition manager — vertical slices of the PE array with
-//! allocate / free / merge-adjacent-free semantics (paper §3.1–3.3).
+//! The partition manager — a 2D free-rectangle allocator over the PE
+//! array, generalizing the paper's vertical column slices (§3.1–3.3) to
+//! rectangular tiles (Planaria-style 2D fission; see `docs/fission.md`).
 //!
 //! Invariants (checked in debug builds and by property tests):
-//! - slices tile the array: disjoint, sorted, covering `[0, cols)`;
-//! - free neighbours are always merged (canonical form), so the number of
-//!   free slices is minimal;
-//! - allocation carves from one free slice, leaving the remainder free.
+//! - regions tile the array: pairwise disjoint and covering every PE;
+//! - no two free regions share a full edge (canonical form — any such
+//!   pair would merge into one rectangle), so the free list is minimal
+//!   under rectangle merging;
+//! - allocation carves from one free region with a guillotine split
+//!   (full-container-height strips left/right of the carved tile, then
+//!   tile-width remainders above/below), leaving the remainders free.
+//!
+//! The rehearse/replay contract of the 1D manager is preserved: a policy
+//! clones the manager, rehearses [`PartitionManager::allocate`] /
+//! [`PartitionManager::allocate_at`] on the clone, and the engine replays
+//! the returned tiles with `allocate_at` on the live manager — both paths
+//! run the same split + merge code, so the replayed state is exactly what
+//! the rehearsal saw.
+//!
+//! In `columns` mode every allocation is full-height, all regions stay
+//! full-height rectangles, and the allocator degenerates bit-for-bit to
+//! the original 1D slice manager (merging is only ever horizontal, and
+//! the guillotine split leaves only left/right strips).
 
-use crate::sim::partitioned::PartitionSlice;
+use crate::sim::dataflow::ArrayGeometry;
+use crate::sim::partitioned::{PartitionSlice, Tile};
 
 /// Allocation handle: index into the live allocation table.
 pub type AllocId = usize;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 struct Region {
-    slice: PartitionSlice,
+    tile: Tile,
     /// `None` = free; `Some(id)` = allocated.
     owner: Option<AllocId>,
 }
 
-/// Manages the vertical partitioning of an array `cols` wide.
+/// Manages the rectangular partitioning of an `ArrayGeometry`.
 #[derive(Debug, Clone)]
 pub struct PartitionManager {
-    cols: u64,
+    geom: ArrayGeometry,
+    /// Sorted by `(row0, col0)` — the deterministic scan order.
     regions: Vec<Region>,
     next_id: AllocId,
 }
 
 impl PartitionManager {
-    pub fn new(cols: u64) -> PartitionManager {
-        assert!(cols > 0);
+    pub fn new(geom: ArrayGeometry) -> PartitionManager {
         PartitionManager {
-            cols,
-            regions: vec![Region { slice: PartitionSlice::new(0, cols), owner: None }],
+            geom,
+            regions: vec![Region { tile: Tile::full(geom), owner: None }],
             next_id: 0,
         }
     }
 
-    pub fn cols(&self) -> u64 {
-        self.cols
+    pub fn geom(&self) -> ArrayGeometry {
+        self.geom
     }
 
-    /// Widths of free slices, descending.
+    pub fn cols(&self) -> u64 {
+        self.geom.cols
+    }
+
+    fn sort_regions(&mut self) {
+        self.regions.sort_unstable_by_key(|r| (r.tile.row0, r.tile.col0));
+    }
+
+    /// Widths of *full-height* free regions, descending — the
+    /// columns-mode view (in that mode every free region is full-height).
     pub fn free_widths(&self) -> Vec<u64> {
-        let mut w: Vec<u64> =
-            self.regions.iter().filter(|r| r.owner.is_none()).map(|r| r.slice.width).collect();
+        let mut w: Vec<u64> = self
+            .regions
+            .iter()
+            .filter(|r| r.owner.is_none() && r.tile.is_full_height(self.geom))
+            .map(|r| r.tile.cols)
+            .collect();
         w.sort_unstable_by(|a, b| b.cmp(a));
         w
     }
 
-    /// Total free columns.
+    /// Total free PEs.
+    pub fn free_pes(&self) -> u64 {
+        self.regions.iter().filter(|r| r.owner.is_none()).map(|r| r.tile.pes()).sum()
+    }
+
+    /// Free column-equivalents: free PEs / array rows.  Exact whenever
+    /// the free space is full-height — i.e. always in columns mode.
     pub fn free_cols(&self) -> u64 {
-        self.regions.iter().filter(|r| r.owner.is_none()).map(|r| r.slice.width).sum()
+        self.free_pes() / self.geom.rows
     }
 
     /// Number of live allocations.
@@ -59,111 +95,181 @@ impl PartitionManager {
         self.regions.iter().filter(|r| r.owner.is_some()).count()
     }
 
-    /// Widest free slice, if any.
+    /// Free regions, in `(row0, col0)` order.
+    pub fn free_tiles(&self) -> Vec<Tile> {
+        self.regions.iter().filter(|r| r.owner.is_none()).map(|r| r.tile).collect()
+    }
+
+    /// Live allocated tiles, in `(row0, col0)` order.
+    pub fn allocated_tiles(&self) -> Vec<Tile> {
+        self.regions.iter().filter(|r| r.owner.is_some()).map(|r| r.tile).collect()
+    }
+
+    /// Widest free *full-height* slice, if any (leftmost on width ties —
+    /// the same preference [`PartitionManager::allocate`] carves with).
     pub fn widest_free(&self) -> Option<PartitionSlice> {
         self.regions
             .iter()
-            .filter(|r| r.owner.is_none())
-            .map(|r| r.slice)
+            .filter(|r| r.owner.is_none() && r.tile.is_full_height(self.geom))
+            .map(|r| PartitionSlice::new(r.tile.col0, r.tile.cols))
             .max_by_key(|s| (s.width, u64::MAX - s.col0))
     }
 
-    /// Allocate `width` columns from the widest free slice (carving from
-    /// its left edge).  Returns the allocation id and slice, or `None` if
-    /// no free slice is wide enough.
-    pub fn allocate(&mut self, width: u64) -> Option<(AllocId, PartitionSlice)> {
+    /// Allocate `width` full-height columns from the widest free
+    /// full-height region (carving from its left edge).  Ties on width go
+    /// to the *leftmost* candidate — exactly the region
+    /// [`PartitionManager::widest_free`] reports, so a policy that sizes
+    /// against `widest_free` and then carves with `allocate` can never
+    /// land in a different region.  Returns the allocation id and tile,
+    /// or `None` if no free full-height region is wide enough.
+    pub fn allocate(&mut self, width: u64) -> Option<(AllocId, Tile)> {
         assert!(width > 0);
+        let best = self
+            .regions
+            .iter()
+            .filter(|r| {
+                r.owner.is_none() && r.tile.is_full_height(self.geom) && r.tile.cols >= width
+            })
+            .map(|r| r.tile)
+            .max_by_key(|t| (t.cols, u64::MAX - t.col0))?;
+        self.allocate_at(Tile::full_height(self.geom, best.col0, width))
+    }
+
+    /// Best-fit 2D allocation: a `rows × cols` tile at the top-left
+    /// corner of the smallest free region that fits it (ties to the
+    /// topmost, then leftmost region).  Returns `None` when no free
+    /// region is tall and wide enough.
+    pub fn allocate_tile(&mut self, rows: u64, cols: u64) -> Option<(AllocId, Tile)> {
+        assert!(rows > 0 && cols > 0);
+        let best = self
+            .regions
+            .iter()
+            .filter(|r| r.owner.is_none() && r.tile.rows >= rows && r.tile.cols >= cols)
+            .map(|r| r.tile)
+            .min_by_key(|t| (t.pes(), t.row0, t.col0))?;
+        self.allocate_at(Tile::new(best.row0, best.col0, rows, cols))
+    }
+
+    /// Allocate the exact tile `want` (which must lie inside one free
+    /// region), guillotine-splitting the remainder: full-container-height
+    /// strips left and right of `want`, then `want`-width remainders
+    /// above and below.  This is how the engine applies a
+    /// [`Scheduler`](crate::sim_core::Scheduler) plan: the policy
+    /// proposes positions (possibly rehearsed on a clone), the manager
+    /// enforces that they are actually free.
+    pub fn allocate_at(&mut self, want: Tile) -> Option<(AllocId, Tile)> {
         let idx = self
             .regions
             .iter()
-            .enumerate()
-            .filter(|(_, r)| r.owner.is_none() && r.slice.width >= width)
-            .max_by_key(|(_, r)| r.slice.width)
-            .map(|(i, _)| i)?;
-
+            .position(|r| r.owner.is_none() && r.tile.contains(&want))?;
         let id = self.next_id;
         self.next_id += 1;
-        let old = self.regions[idx].slice;
-        let alloc = PartitionSlice::new(old.col0, width);
-        if old.width == width {
-            self.regions[idx].owner = Some(id);
-        } else {
-            self.regions[idx] = Region { slice: alloc, owner: Some(id) };
-            self.regions.insert(
-                idx + 1,
-                Region { slice: PartitionSlice::new(old.col0 + width, old.width - width), owner: None },
-            );
-        }
-        self.debug_check();
-        Some((id, alloc))
-    }
-
-    /// Allocate the exact slice `want` (which must lie inside one free
-    /// region), splitting off free remainders on either side.  This is
-    /// how the engine applies a [`Scheduler`](crate::sim_core::Scheduler)
-    /// plan: the policy proposes positions (possibly rehearsed on a
-    /// clone), the manager enforces that they are actually free.
-    pub fn allocate_at(&mut self, want: PartitionSlice) -> Option<(AllocId, PartitionSlice)> {
-        let idx = self.regions.iter().position(|r| {
-            r.owner.is_none() && r.slice.col0 <= want.col0 && want.end() <= r.slice.end()
-        })?;
-        let id = self.next_id;
-        self.next_id += 1;
-        let old = self.regions[idx].slice;
+        let old = self.regions[idx].tile;
         self.regions.remove(idx);
-        let mut at = idx;
         if want.col0 > old.col0 {
-            let left = PartitionSlice::new(old.col0, want.col0 - old.col0);
-            self.regions.insert(at, Region { slice: left, owner: None });
-            at += 1;
+            let left = Tile::new(old.row0, old.col0, old.rows, want.col0 - old.col0);
+            self.regions.push(Region { tile: left, owner: None });
         }
-        self.regions.insert(at, Region { slice: want, owner: Some(id) });
-        at += 1;
-        if want.end() < old.end() {
-            let right = PartitionSlice::new(want.end(), old.end() - want.end());
-            self.regions.insert(at, Region { slice: right, owner: None });
+        if want.col_end() < old.col_end() {
+            let right =
+                Tile::new(old.row0, want.col_end(), old.rows, old.col_end() - want.col_end());
+            self.regions.push(Region { tile: right, owner: None });
         }
+        if want.row0 > old.row0 {
+            let above = Tile::new(old.row0, want.col0, want.row0 - old.row0, want.cols);
+            self.regions.push(Region { tile: above, owner: None });
+        }
+        if want.row_end() < old.row_end() {
+            let below =
+                Tile::new(want.row_end(), want.col0, old.row_end() - want.row_end(), want.cols);
+            self.regions.push(Region { tile: below, owner: None });
+        }
+        self.regions.push(Region { tile: want, owner: Some(id) });
+        // A remainder can expose a full edge to a free region *outside*
+        // the container (impossible in 1D, routine in 2D) — restore the
+        // canonical form.  In columns mode this never fires: the old
+        // invariant already guarantees the container's neighbours are
+        // allocated.
+        self.merge_free();
         self.debug_check();
         Some((id, want))
     }
 
-    /// True when `slice` lies entirely inside one free region.
-    pub fn is_free(&self, slice: PartitionSlice) -> bool {
-        self.regions.iter().any(|r| {
-            r.owner.is_none() && r.slice.col0 <= slice.col0 && slice.end() <= r.slice.end()
-        })
+    /// True when `tile` lies entirely inside one free region.
+    ///
+    /// Like the 1D manager, this is containment in a *single* region: an
+    /// L-shaped free area covering `tile` across two rectangles reports
+    /// `false` (canonical merging keeps such fragmentation minimal).
+    pub fn is_free(&self, tile: Tile) -> bool {
+        self.regions.iter().any(|r| r.owner.is_none() && r.tile.contains(&tile))
     }
 
-    /// Free an allocation, merging with adjacent free slices (paper:
-    /// "these partitions may be merged if they are adjacent").
-    pub fn free(&mut self, id: AllocId) -> PartitionSlice {
+    /// Free an allocation, merging free rectangles that share a full edge
+    /// until none remain (paper §3.3: "these partitions may be merged if
+    /// they are adjacent", extended to both axes).  Returns the free
+    /// region that absorbed the tile.
+    pub fn free(&mut self, id: AllocId) -> Tile {
         let idx = self
             .regions
             .iter()
             .position(|r| r.owner == Some(id))
             .unwrap_or_else(|| panic!("free of unknown allocation {id}"));
+        let origin = self.regions[idx].tile;
         self.regions[idx].owner = None;
-        // Merge right then left.
-        if idx + 1 < self.regions.len() && self.regions[idx + 1].owner.is_none() {
-            let right = self.regions.remove(idx + 1);
-            self.regions[idx].slice = self.regions[idx].slice.merge(&right.slice);
-        }
-        let mut idx = idx;
-        if idx > 0 && self.regions[idx - 1].owner.is_none() {
-            let cur = self.regions.remove(idx);
-            idx -= 1;
-            self.regions[idx].slice = self.regions[idx].slice.merge(&cur.slice);
+        self.merge_free();
+        // Greedy pairwise merging cannot always re-fuse an *all-free*
+        // tiling (pinwheel-shaped fixpoints exist in 2D); once no
+        // allocation remains, the canonical form is simply the whole
+        // array.  In columns mode this is a no-op: full-height regions
+        // always merge back to one rectangle pairwise.
+        if self.regions.len() > 1 && self.regions.iter().all(|r| r.owner.is_none()) {
+            self.regions = vec![Region { tile: Tile::full(self.geom), owner: None }];
         }
         self.debug_check();
-        self.regions[idx].slice
+        self.regions
+            .iter()
+            .find(|r| r.owner.is_none() && r.tile.contains(&origin))
+            .map(|r| r.tile)
+            .expect("freed tile must end up inside one free region")
     }
 
-    /// The slice of a live allocation.
-    pub fn slice_of(&self, id: AllocId) -> Option<PartitionSlice> {
-        self.regions.iter().find(|r| r.owner == Some(id)).map(|r| r.slice)
+    /// Merge free regions sharing a full edge, to fixpoint, in
+    /// deterministic `(row0, col0)` scan order.
+    fn merge_free(&mut self) {
+        loop {
+            self.sort_regions();
+            let mut found: Option<(usize, usize, Tile)> = None;
+            'scan: for i in 0..self.regions.len() {
+                if self.regions[i].owner.is_some() {
+                    continue;
+                }
+                for j in (i + 1)..self.regions.len() {
+                    if self.regions[j].owner.is_some() {
+                        continue;
+                    }
+                    if let Some(t) = self.regions[i].tile.merged_with(&self.regions[j].tile) {
+                        found = Some((i, j, t));
+                        break 'scan;
+                    }
+                }
+            }
+            match found {
+                Some((i, j, t)) => {
+                    self.regions.remove(j); // j > i, so i stays valid
+                    self.regions[i].tile = t;
+                }
+                None => break,
+            }
+        }
+        self.sort_regions();
     }
 
-    /// True when the whole array is one free slice.
+    /// The tile of a live allocation.
+    pub fn tile_of(&self, id: AllocId) -> Option<Tile> {
+        self.regions.iter().find(|r| r.owner == Some(id)).map(|r| r.tile)
+    }
+
+    /// True when the whole array is one free region.
     pub fn fully_free(&self) -> bool {
         self.regions.len() == 1 && self.regions[0].owner.is_none()
     }
@@ -174,21 +280,29 @@ impl PartitionManager {
 
     /// Validate tiling + canonical-merge invariants (used by property tests).
     pub fn check_invariants(&self) -> Result<(), String> {
-        let mut expected_col = 0u64;
-        let mut prev_free = false;
-        for r in &self.regions {
-            if r.slice.col0 != expected_col {
-                return Err(format!("gap/overlap at col {expected_col}: {:?}", r.slice));
+        let mut area = 0u64;
+        for (i, r) in self.regions.iter().enumerate() {
+            if r.tile.row_end() > self.geom.rows || r.tile.col_end() > self.geom.cols {
+                return Err(format!("tile out of bounds: {:?}", r.tile));
             }
-            expected_col = r.slice.end();
-            let is_free = r.owner.is_none();
-            if is_free && prev_free {
-                return Err(format!("unmerged adjacent free slices at {:?}", r.slice));
+            area += r.tile.pes();
+            for s in &self.regions[i + 1..] {
+                if r.tile.overlaps(&s.tile) {
+                    return Err(format!("overlapping tiles {:?} and {:?}", r.tile, s.tile));
+                }
+                if r.owner.is_none()
+                    && s.owner.is_none()
+                    && r.tile.merged_with(&s.tile).is_some()
+                {
+                    return Err(format!(
+                        "unmerged adjacent free tiles {:?} and {:?}",
+                        r.tile, s.tile
+                    ));
+                }
             }
-            prev_free = is_free;
         }
-        if expected_col != self.cols {
-            return Err(format!("slices cover {expected_col} of {} cols", self.cols));
+        if area != self.geom.pes() {
+            return Err(format!("tiles cover {area} of {} PEs", self.geom.pes()));
         }
         Ok(())
     }
@@ -199,37 +313,67 @@ mod tests {
     use super::*;
     use crate::util::prop;
 
+    const GEOM: ArrayGeometry = ArrayGeometry { rows: 128, cols: 128 };
+
+    /// Full-height tile shorthand (the columns-mode shape).
+    fn fh(col0: u64, width: u64) -> Tile {
+        Tile::full_height(GEOM, col0, width)
+    }
+
     #[test]
     fn starts_fully_free() {
-        let pm = PartitionManager::new(128);
+        let pm = PartitionManager::new(GEOM);
         assert!(pm.fully_free());
         assert_eq!(pm.free_cols(), 128);
+        assert_eq!(pm.free_pes(), 128 * 128);
         assert_eq!(pm.widest_free().unwrap().width, 128);
     }
 
     #[test]
     fn allocate_carves_left_edge() {
-        let mut pm = PartitionManager::new(128);
+        let mut pm = PartitionManager::new(GEOM);
         let (a, sa) = pm.allocate(32).unwrap();
-        assert_eq!(sa, PartitionSlice::new(0, 32));
+        assert_eq!(sa, fh(0, 32));
         let (_b, sb) = pm.allocate(64).unwrap();
-        assert_eq!(sb, PartitionSlice::new(32, 64));
+        assert_eq!(sb, fh(32, 64));
         assert_eq!(pm.free_cols(), 32);
-        assert_eq!(pm.slice_of(a), Some(sa));
+        assert_eq!(pm.tile_of(a), Some(sa));
+    }
+
+    #[test]
+    fn allocate_prefers_leftmost_on_width_ties() {
+        // Regression for the 1D tie-break bug: with two equal-width free
+        // regions, `allocate` must carve from the one `widest_free`
+        // reports (the leftmost), not the rightmost.
+        let mut pm = PartitionManager::new(GEOM);
+        let (_a, _) = pm.allocate(32).unwrap(); // [0, 32)
+        let (b, _) = pm.allocate(32).unwrap(); // [32, 64)
+        let (_c, _) = pm.allocate(32).unwrap(); // [64, 96)
+        pm.free(b); // free [32, 64) and [96, 128): two 32-wide regions
+        assert_eq!(pm.free_widths(), vec![32, 32]);
+        let reported = pm.widest_free().unwrap();
+        assert_eq!(reported, PartitionSlice::new(32, 32), "widest_free prefers leftmost");
+        let (_d, carved) = pm.allocate(32).unwrap();
+        assert_eq!(
+            carved,
+            fh(reported.col0, 32),
+            "allocate must carve the region widest_free reported"
+        );
     }
 
     #[test]
     fn free_merges_adjacent() {
-        let mut pm = PartitionManager::new(128);
+        let mut pm = PartitionManager::new(GEOM);
         let (a, _) = pm.allocate(32).unwrap();
         let (b, _) = pm.allocate(32).unwrap();
         let (c, _) = pm.allocate(32).unwrap();
-        // Free middle: no merge (neighbours busy).
+        // Free middle: neighbours busy and the free right end [96,128)
+        // is not adjacent — two separate free regions remain.
         pm.free(b);
         assert_eq!(pm.free_widths(), vec![32, 32]);
         // Free left: merges with the freed middle.
         let merged = pm.free(a);
-        assert_eq!(merged, PartitionSlice::new(0, 64));
+        assert_eq!(merged, fh(0, 64));
         assert_eq!(pm.free_widths(), vec![64, 32]);
         // Free right: merges everything.
         pm.free(c);
@@ -238,7 +382,8 @@ mod tests {
 
     #[test]
     fn allocation_failure_leaves_state_intact() {
-        let mut pm = PartitionManager::new(64);
+        let geom = ArrayGeometry::new(128, 64);
+        let mut pm = PartitionManager::new(geom);
         let (_a, _) = pm.allocate(48).unwrap();
         assert!(pm.allocate(32).is_none());
         assert_eq!(pm.free_cols(), 16);
@@ -248,7 +393,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "unknown allocation")]
     fn double_free_panics() {
-        let mut pm = PartitionManager::new(64);
+        let mut pm = PartitionManager::new(GEOM);
         let (a, _) = pm.allocate(16).unwrap();
         pm.free(a);
         pm.free(a);
@@ -256,31 +401,100 @@ mod tests {
 
     #[test]
     fn allocate_at_splits_both_sides() {
-        let mut pm = PartitionManager::new(128);
-        assert!(pm.is_free(PartitionSlice::new(32, 64)));
-        let (a, s) = pm.allocate_at(PartitionSlice::new(32, 64)).unwrap();
-        assert_eq!(s, PartitionSlice::new(32, 64));
+        let mut pm = PartitionManager::new(GEOM);
+        assert!(pm.is_free(fh(32, 64)));
+        let (a, t) = pm.allocate_at(fh(32, 64)).unwrap();
+        assert_eq!(t, fh(32, 64));
         assert_eq!(pm.free_widths(), vec![32, 32]);
-        assert!(!pm.is_free(PartitionSlice::new(32, 64)));
-        assert!(!pm.is_free(PartitionSlice::new(0, 64)), "straddles the allocation");
-        assert!(pm.is_free(PartitionSlice::new(0, 32)));
-        assert!(pm.is_free(PartitionSlice::new(96, 32)));
+        assert!(!pm.is_free(fh(32, 64)));
+        assert!(!pm.is_free(fh(0, 64)), "straddles the allocation");
+        assert!(pm.is_free(fh(0, 32)));
+        assert!(pm.is_free(fh(96, 32)));
         // Overlapping request fails without disturbing state.
-        assert!(pm.allocate_at(PartitionSlice::new(40, 8)).is_none());
+        assert!(pm.allocate_at(fh(40, 8)).is_none());
         pm.free(a);
         assert!(pm.fully_free());
     }
 
     #[test]
     fn allocate_at_exact_region_and_edges() {
-        let mut pm = PartitionManager::new(64);
-        let (_a, _) = pm.allocate_at(PartitionSlice::new(0, 16)).unwrap();
-        let (_b, _) = pm.allocate_at(PartitionSlice::new(48, 16)).unwrap();
+        let geom = ArrayGeometry::new(128, 64);
+        let mut pm = PartitionManager::new(geom);
+        let (_a, _) = pm.allocate_at(Tile::full_height(geom, 0, 16)).unwrap();
+        let (_b, _) = pm.allocate_at(Tile::full_height(geom, 48, 16)).unwrap();
         // Exactly the remaining middle region.
-        let (_c, s) = pm.allocate_at(PartitionSlice::new(16, 32)).unwrap();
-        assert_eq!(s, PartitionSlice::new(16, 32));
+        let (_c, t) = pm.allocate_at(Tile::full_height(geom, 16, 32)).unwrap();
+        assert_eq!(t, Tile::full_height(geom, 16, 32));
         assert_eq!(pm.free_cols(), 0);
-        assert!(pm.allocate_at(PartitionSlice::new(0, 1)).is_none());
+        assert!(pm.allocate_at(Tile::full_height(geom, 0, 1)).is_none());
+    }
+
+    #[test]
+    fn allocate_at_guillotine_splits_2d() {
+        // Carve an interior tile: the container splits into left/right
+        // full-height strips plus above/below remainders at tile width.
+        let mut pm = PartitionManager::new(GEOM);
+        let want = Tile::new(32, 16, 64, 96);
+        let (a, t) = pm.allocate_at(want).unwrap();
+        assert_eq!(t, want);
+        let free = pm.free_tiles();
+        assert_eq!(
+            free,
+            vec![
+                Tile::new(0, 0, 128, 16),   // left strip
+                Tile::new(0, 16, 32, 96),   // above
+                Tile::new(0, 112, 128, 16), // right strip
+                Tile::new(96, 16, 32, 96),  // below
+            ]
+        );
+        assert_eq!(pm.free_pes() + want.pes(), GEOM.pes());
+        // Freeing restores the single region.
+        pm.free(a);
+        assert!(pm.fully_free());
+    }
+
+    #[test]
+    fn vertical_stacking_and_merge() {
+        // Two half-height tiles stack in the same columns; freeing both
+        // merges them back vertically, then into the whole array.
+        let mut pm = PartitionManager::new(GEOM);
+        let (a, ta) = pm.allocate_tile(64, 128).unwrap();
+        assert_eq!(ta, Tile::new(0, 0, 64, 128));
+        let (b, tb) = pm.allocate_tile(64, 128).unwrap();
+        assert_eq!(tb, Tile::new(64, 0, 64, 128));
+        assert_eq!(pm.free_pes(), 0);
+        assert_eq!(pm.widest_free(), None, "no full-height region left");
+        pm.free(a);
+        assert_eq!(pm.free_tiles(), vec![Tile::new(0, 0, 64, 128)]);
+        pm.free(b);
+        assert!(pm.fully_free());
+    }
+
+    #[test]
+    fn allocate_tile_best_fit_prefers_smallest_region() {
+        let mut pm = PartitionManager::new(GEOM);
+        // Carve a 32x32 corner so a small free region (32 x 96 above-right
+        // strip pattern) exists alongside the big remainder.
+        let (_a, _) = pm.allocate_at(Tile::new(0, 0, 32, 32)).unwrap();
+        // Free regions now: right strip (128 x 96 at col 32) and below
+        // (96 x 32 at row 32).
+        assert_eq!(
+            pm.free_tiles(),
+            vec![Tile::new(0, 32, 128, 96), Tile::new(32, 0, 96, 32)]
+        );
+        // A 32x32 request fits both; best-fit picks the smaller region.
+        let (_b, t) = pm.allocate_tile(32, 32).unwrap();
+        assert_eq!(t, Tile::new(32, 0, 32, 32));
+    }
+
+    #[test]
+    fn is_free_respects_rows() {
+        let mut pm = PartitionManager::new(GEOM);
+        let (_a, _) = pm.allocate_tile(64, 64).unwrap(); // top-left quadrant
+        assert!(!pm.is_free(Tile::new(0, 0, 64, 64)));
+        assert!(!pm.is_free(fh(0, 64)), "column straddles the allocated quadrant");
+        assert!(pm.is_free(Tile::new(64, 0, 64, 64)), "below the quadrant");
+        assert!(pm.is_free(fh(64, 64)), "right half is full-height free");
     }
 
     #[test]
@@ -288,28 +502,47 @@ mod tests {
         // The dynamic policy rehearses with `allocate` on a clone and the
         // engine replays with `allocate_at`; both must produce the same
         // region layout.
-        let mut a = PartitionManager::new(128);
-        let mut b = PartitionManager::new(128);
+        let mut a = PartitionManager::new(GEOM);
+        let mut b = PartitionManager::new(GEOM);
         for w in [32u64, 64, 16] {
-            let (_, sa) = a.allocate(w).unwrap();
-            let (_, sb) = b.allocate_at(sa).unwrap();
-            assert_eq!(sa, sb);
+            let (_, ta) = a.allocate(w).unwrap();
+            let (_, tb) = b.allocate_at(ta).unwrap();
+            assert_eq!(ta, tb);
         }
         assert_eq!(a.free_widths(), b.free_widths());
         assert_eq!(a.widest_free(), b.widest_free());
+        assert_eq!(a.free_tiles(), b.free_tiles());
+    }
+
+    #[test]
+    fn allocate_tile_and_allocate_at_agree() {
+        // Same rehearse/replay contract for the 2D path.
+        let mut a = PartitionManager::new(GEOM);
+        let mut b = PartitionManager::new(GEOM);
+        for (h, w) in [(64u64, 32u64), (64, 96), (64, 64), (16, 16)] {
+            let (_, ta) = a.allocate_tile(h, w).unwrap();
+            let (_, tb) = b.allocate_at(ta).unwrap();
+            assert_eq!(ta, tb);
+        }
+        assert_eq!(a.free_tiles(), b.free_tiles());
     }
 
     #[test]
     fn random_alloc_free_preserves_invariants() {
+        // Full-height (columns-mode) random workload — the original 1D
+        // property suite, ported; the 2D variant lives in
+        // rust/tests/scheduler_properties.rs.
         prop::check("partition manager invariants", 200, |rng| {
             let cols = *rng.choose(&[16u64, 64, 128, 256]);
-            let mut pm = PartitionManager::new(cols);
+            let geom = ArrayGeometry::new(64, cols);
+            let mut pm = PartitionManager::new(geom);
             let mut live: Vec<AllocId> = Vec::new();
             for _ in 0..64 {
                 if live.is_empty() || rng.gen_bool(0.55) {
                     let w = rng.gen_range_inclusive(1, cols / 2);
-                    if let Some((id, s)) = pm.allocate(w) {
-                        prop::ensure_eq(s.width, w, "allocated width")?;
+                    if let Some((id, t)) = pm.allocate(w) {
+                        prop::ensure_eq(t.cols, w, "allocated width")?;
+                        prop::ensure(t.is_full_height(geom), "allocate stays full height")?;
                         live.push(id);
                     }
                 } else {
@@ -318,7 +551,7 @@ mod tests {
                 }
                 pm.check_invariants()?;
                 let alloc_cols: u64 =
-                    live.iter().map(|&id| pm.slice_of(id).unwrap().width).sum();
+                    live.iter().map(|&id| pm.tile_of(id).unwrap().cols).sum();
                 prop::ensure_eq(alloc_cols + pm.free_cols(), cols, "conservation")?;
             }
             for id in live {

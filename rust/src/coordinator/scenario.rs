@@ -202,15 +202,19 @@ impl Scenario {
 
     /// Execute this scenario on the shared engine under `sched` (any
     /// [`Scheduler`] policy), with request deadlines wired in as engine
-    /// events, and score the result.  `cols` is the array width the
-    /// policy expects (`cfg.geom.cols`).
+    /// events, and score the result.  `geom` is the array geometry the
+    /// policy expects (`cfg.geom`).
     ///
     /// Returns the full [`ScenarioObserver`] — `observer.metrics` is the
     /// ordinary [`RunMetrics`], `observer.deadline_events` the live
     /// verdicts — plus the post-hoc [`ScenarioOutcome`].
-    pub fn run(&self, sched: &mut dyn Scheduler, cols: u64) -> (ScenarioObserver, ScenarioOutcome) {
+    pub fn run(
+        &self,
+        sched: &mut dyn Scheduler,
+        geom: crate::sim::dataflow::ArrayGeometry,
+    ) -> (ScenarioObserver, ScenarioOutcome) {
         let mut obs = ScenarioObserver::default();
-        Engine::new(&self.pool, cols).with_deadlines(self.deadlines()).run(sched, &mut obs);
+        Engine::new(&self.pool, geom).with_deadlines(self.deadlines()).run(sched, &mut obs);
         let outcome = self.analyze(&obs.metrics);
         debug_assert_eq!(
             obs.deadline_events.iter().filter(|&&(_, _, met)| !met).count(),
@@ -360,7 +364,7 @@ mod tests {
         };
         let cfg = SchedulerConfig::default();
         let sc = Scenario::generate(&templates(), &spec, &cfg);
-        let (obs, outcome) = sc.run(&mut DynamicScheduler::new(cfg.clone()), cfg.geom.cols);
+        let (obs, outcome) = sc.run(&mut DynamicScheduler::new(cfg.clone()), cfg.geom);
         let manual = DynamicScheduler::new(cfg.clone()).run(&sc.pool);
         assert_eq!(obs.metrics.makespan, manual.makespan);
         assert_eq!(obs.metrics.dispatches, manual.dispatches);
@@ -382,7 +386,7 @@ mod tests {
         let cfg = SchedulerConfig::default();
         let sc = Scenario::generate(&templates(), &spec, &cfg);
         let mut obs = ScenarioObserver::default();
-        crate::sim_core::Engine::new(&sc.pool, cfg.geom.cols)
+        crate::sim_core::Engine::new(&sc.pool, cfg.geom)
             .with_deadlines(sc.deadlines())
             .run(&mut SequentialBaseline::new(cfg.clone()), &mut obs);
         let outcome = sc.analyze(&obs.metrics);

@@ -32,12 +32,56 @@ use crate::mem::{MemConfig, MemSpec};
 use crate::sim::buffers::BufferConfig;
 use crate::sim::dataflow::ArrayGeometry;
 use crate::sim::dram::DramConfig;
-use crate::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
+use crate::sim::partitioned::{tile_layer_timing, FeedPolicy, Tile};
 use crate::sim_core::{Allocation, Engine, LayerExec, Scheduler, SystemState};
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 use crate::workloads::shapes::GemmDims;
 
 pub use crate::util::UnknownTag;
+
+/// Partition-shape selector: the paper's full-height column slices, or
+/// rectangular 2D fission (Planaria-style; see `docs/fission.md`).
+///
+/// `columns` (the default) reproduces the pre-2D scheduler bit for bit —
+/// every tile is full-height and the planner logic is unchanged.  `2d`
+/// lets the dynamic policy also split rows, choosing row-split vs
+/// column-split per decision point by minimizing the projected
+/// fold-adjusted completion time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionMode {
+    /// Full-height column slices only (the paper's model; default).
+    #[default]
+    Columns,
+    /// Rectangular tiles: rows and columns both divisible.
+    TwoD,
+}
+
+impl PartitionMode {
+    /// Every variant, in tag order.
+    pub const ALL: [PartitionMode; 2] = [PartitionMode::Columns, PartitionMode::TwoD];
+    /// The tags of [`PartitionMode::ALL`], in the same order.
+    pub const TAGS: [&'static str; 2] = ["columns", "2d"];
+
+    /// Stable config/CLI/report name (round-trips through [`FromStr`]).
+    pub fn tag(self) -> &'static str {
+        match self {
+            PartitionMode::Columns => Self::TAGS[0],
+            PartitionMode::TwoD => Self::TAGS[1],
+        }
+    }
+}
+
+impl FromStr for PartitionMode {
+    type Err = UnknownTag;
+
+    fn from_str(s: &str) -> Result<PartitionMode, UnknownTag> {
+        PartitionMode::ALL.into_iter().find(|m| m.tag() == s).ok_or_else(|| UnknownTag {
+            what: "partition mode",
+            got: s.to_string(),
+            valid: &PartitionMode::TAGS,
+        })
+    }
+}
 
 /// Feed-bus model selector for the scheduler (the per-dispatch slot/count
 /// is filled in from live occupancy).
@@ -137,6 +181,11 @@ pub struct SchedulerConfig {
     pub buffers: BufferConfig,
     /// Narrowest partition the scheduler will create.
     pub min_width: u64,
+    /// Shortest tile the scheduler will create (2D mode only; `columns`
+    /// mode always allocates full-height tiles).
+    pub min_rows: u64,
+    /// Column slices (paper) or rectangular 2D fission.
+    pub partition_mode: PartitionMode,
     pub feed_model: FeedModel,
     pub alloc_policy: AllocPolicy,
     /// Patience: a layer dispatches only into a slice ≥ `demand /
@@ -160,6 +209,8 @@ impl Default for SchedulerConfig {
             geom,
             buffers: BufferConfig::default(),
             min_width: geom.cols / 8,
+            min_rows: geom.rows / 8,
+            partition_mode: PartitionMode::Columns,
             feed_model: FeedModel::Independent,
             alloc_policy: AllocPolicy::WidestToHeaviest,
             patience_divisor: 4,
@@ -221,10 +272,10 @@ pub struct DynamicScheduler {
 /// victim behind its aggressor.
 fn intrinsically_bound(cfg: &SchedulerConfig, mem: &MemConfig, gemm: GemmDims, width: u64) -> bool {
     let width = width.clamp(1, cfg.geom.cols);
-    let t = slice_layer_timing(
+    let t = tile_layer_timing(
         cfg.geom,
         gemm,
-        PartitionSlice::new(0, width),
+        Tile::full_height(cfg.geom, 0, width),
         FeedPolicy::Independent,
         &cfg.buffers,
     );
@@ -234,6 +285,7 @@ fn intrinsically_bound(cfg: &SchedulerConfig, mem: &MemConfig, gemm: GemmDims, w
 impl DynamicScheduler {
     pub fn new(cfg: SchedulerConfig) -> DynamicScheduler {
         assert!(cfg.min_width >= 1 && cfg.min_width <= cfg.geom.cols);
+        assert!(cfg.min_rows >= 1 && cfg.min_rows <= cfg.geom.rows);
         DynamicScheduler { cfg, bound_cache: BTreeMap::new() }
     }
 
@@ -243,9 +295,9 @@ impl DynamicScheduler {
 
     /// Run a pool to completion on the shared engine; returns the full
     /// metrics.  Equivalent to
-    /// [`Engine::execute`]`(pool, cfg.geom.cols, &mut self.clone())`.
+    /// [`Engine::execute`]`(pool, cfg.geom, &mut self.clone())`.
     pub fn run(&self, pool: &WorkloadPool) -> RunMetrics {
-        Engine::execute(pool, self.cfg.geom.cols, &mut self.clone())
+        Engine::execute(pool, self.cfg.geom, &mut self.clone())
     }
 }
 
@@ -259,9 +311,86 @@ impl Scheduler for DynamicScheduler {
     }
 
     /// `Partition_Calculation` + `Task_Assignment` over the ready set,
-    /// rehearsed on a clone of the live partition tiling.
+    /// rehearsed on a clone of the live partition tiling.  `columns` mode
+    /// is the paper's Algorithm 1 verbatim; `2d` mode additionally
+    /// considers row splits per decision point.
     fn plan(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
+        match self.cfg.partition_mode {
+            PartitionMode::Columns => self.plan_columns(s),
+            PartitionMode::TwoD => self.plan_2d(s),
+        }
+    }
+
+    /// Cycles for one layer on `tile` with `coresident` live partitions;
+    /// activity is feed-policy-invariant and always billed under the
+    /// independent model.
+    fn exec(
+        &self,
+        s: &SystemState<'_>,
+        dnn: DnnId,
+        layer: LayerId,
+        tile: Tile,
+        coresident: u64,
+    ) -> LayerExec {
         let cfg = &self.cfg;
+        let gemm = s.pool.dnns[dnn].layers[layer].shape.gemm();
+        let ind = tile_layer_timing(cfg.geom, gemm, tile, FeedPolicy::Independent, &cfg.buffers);
+        let raw = match cfg.feed_model {
+            FeedModel::Independent => ind.cycles,
+            FeedModel::Interleaved => {
+                // Row feed wires are shared only by tiles whose row bands
+                // intersect: in columns mode that is every live partition
+                // (the engine's `coresident`), in 2D mode count them —
+                // vertically stacked tenants use disjoint wires.
+                let p = match cfg.partition_mode {
+                    PartitionMode::Columns => coresident.max(1),
+                    PartitionMode::TwoD => (s
+                        .partitions
+                        .allocated_tiles()
+                        .iter()
+                        .filter(|t| t.overlaps_rows(&tile))
+                        .count() as u64)
+                        .max(1),
+                };
+                tile_layer_timing(
+                    cfg.geom,
+                    gemm,
+                    tile,
+                    FeedPolicy::Interleaved { coresident: p, slot: p.saturating_sub(1) },
+                    &cfg.buffers,
+                )
+                .cycles
+            }
+        };
+        let cycles = match &cfg.dram {
+            Some(d) => d.bound_cycles(raw, &ind.activity),
+            None => raw,
+        };
+        LayerExec { cycles, activity: ind.activity }
+    }
+}
+
+impl DynamicScheduler {
+    /// Memoized mem-aware admission signal for one layer shape (false
+    /// whenever the policy is not `mem-aware` or `[mem]` is off).
+    fn layer_bound(&mut self, gemm: GemmDims, width: u64) -> bool {
+        let cfg = &self.cfg;
+        if cfg.alloc_policy != AllocPolicy::MemAware {
+            return false;
+        }
+        match &cfg.mem {
+            Some(mem) => *self
+                .bound_cache
+                .entry((gemm.sr, gemm.k, gemm.m))
+                .or_insert_with(|| intrinsically_bound(cfg, mem, gemm, width)),
+            None => false,
+        }
+    }
+
+    /// The paper's Algorithm 1 over full-height column slices — kept
+    /// verbatim from the pre-2D scheduler (the `columns`-mode parity rail
+    /// pinned by `rust/tests/engine_parity.rs`).
+    fn plan_columns(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
         let ready = s.queue.ready_at(s.now);
         if ready.is_empty() {
             return Vec::new();
@@ -272,6 +401,8 @@ impl Scheduler for DynamicScheduler {
         // Partition_Calculation (Lines 15-19): divide the array by the
         // number of available layers (running partitions keep their
         // slices), on the power-of-two ladder.
+        let cfg_snapshot = self.cfg.clone();
+        let cfg = &cfg_snapshot;
         let n_avail = ready.len() as u64 + pm.allocated_count() as u64;
         let target =
             floor_pow2((cfg.geom.cols / n_avail).max(1)).clamp(cfg.min_width, cfg.geom.cols);
@@ -293,14 +424,7 @@ impl Scheduler for DynamicScheduler {
             // the interface both finish later than either alone, so
             // time-multiplexing them wins p95 latency AND residency
             // energy.  Never defers when nothing is running (progress).
-            let bound = cfg.alloc_policy == AllocPolicy::MemAware
-                && match &cfg.mem {
-                    Some(mem) => *self
-                        .bound_cache
-                        .entry((gemm.sr, gemm.k, gemm.m))
-                        .or_insert_with(|| intrinsically_bound(cfg, mem, gemm, demand)),
-                    None => false,
-                };
+            let bound = self.layer_bound(gemm, demand);
             if bound
                 && (pm.allocated_count() > 0 || dispatched_any)
                 && (bound_in_plan
@@ -311,8 +435,8 @@ impl Scheduler for DynamicScheduler {
 
             // First layer on a fully idle array: all PEs (Line 6).
             if pm.fully_free() && n_avail == 1 {
-                let (_, slice) = pm.allocate(cfg.geom.cols).expect("full array free");
-                out.push(Allocation { dnn: r.dnn, layer: r.layer, slice });
+                let (_, tile) = pm.allocate(cfg.geom.cols).expect("full array free");
+                out.push(Allocation { dnn: r.dnn, layer: r.layer, tile });
                 dispatched_any = true;
                 bound_in_plan |= bound;
                 continue;
@@ -345,49 +469,119 @@ impl Scheduler for DynamicScheduler {
                     }
                 }
             };
-            let Some((_, slice)) = pm.allocate(width) else { continue };
-            out.push(Allocation { dnn: r.dnn, layer: r.layer, slice });
+            let Some((_, tile)) = pm.allocate(width) else { continue };
+            out.push(Allocation { dnn: r.dnn, layer: r.layer, tile });
             dispatched_any = true;
             bound_in_plan |= bound;
         }
         out
     }
 
-    /// Cycles for one layer on `slice` with `coresident` live partitions;
-    /// activity is feed-policy-invariant and always billed under the
-    /// independent model.
-    fn exec(
-        &self,
-        s: &SystemState<'_>,
-        dnn: DnnId,
-        layer: LayerId,
-        slice: PartitionSlice,
-        coresident: u64,
-    ) -> LayerExec {
-        let cfg = &self.cfg;
-        let gemm = s.pool.dnns[dnn].layers[layer].shape.gemm();
-        let ind = slice_layer_timing(cfg.geom, gemm, slice, FeedPolicy::Independent, &cfg.buffers);
-        let raw = match cfg.feed_model {
-            FeedModel::Independent => ind.cycles,
-            FeedModel::Interleaved => {
-                slice_layer_timing(
-                    cfg.geom,
-                    gemm,
-                    slice,
-                    FeedPolicy::Interleaved {
-                        coresident: coresident.max(1),
-                        slot: coresident.saturating_sub(1),
-                    },
-                    &cfg.buffers,
-                )
-                .cycles
+    /// 2D fission planning: for each ready layer (Opr order), evaluate
+    /// candidate tiles — every free rectangle × the power-of-two height
+    /// ladder at the layer's width demand — and take the one minimizing
+    /// the projected fold-adjusted completion from the tile timing model.
+    /// Ties prefer the smallest PE footprint, then the topmost/leftmost
+    /// placement, so a shallow-K layer takes a short tile and leaves the
+    /// rows below for a co-tenant (the packing win columns cannot get).
+    /// Patience generalizes from widths to cycles: a candidate slower
+    /// than `patience_divisor ×` the layer's unconstrained demand-shaped
+    /// tile waits for merges instead (with the same progress guarantee).
+    ///
+    /// The allocation policies keep their columns-mode meaning: `equal`
+    /// additionally caps the width demand at the `Partition_Calculation`
+    /// equal share (`cols / n_available`, pow-2 ladder) and never waits
+    /// on patience; `widest`/`mem-aware` carve demand-first.
+    fn plan_2d(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
+        let ready = s.queue.ready_at(s.now);
+        if ready.is_empty() {
+            return Vec::new();
+        }
+        let mut pm = s.partitions.clone();
+        let mut out = Vec::new();
+        let geom = self.cfg.geom;
+        let buffers = self.cfg.buffers;
+        let (min_width, min_rows) = (self.cfg.min_width, self.cfg.min_rows);
+        let patience = self.cfg.patience_divisor;
+        let alloc_policy = self.cfg.alloc_policy;
+        let n_avail = ready.len() as u64 + pm.allocated_count() as u64;
+        let target = floor_pow2((geom.cols / n_avail).max(1)).clamp(min_width, geom.cols);
+
+        let mut dispatched_any = false;
+        let mut bound_in_plan = false;
+        for r in ready {
+            let gemm = s.pool.dnns[r.dnn].layers[r.layer].shape.gemm();
+            // Demand: a layer gains nothing beyond M columns or K rows
+            // (FK = ⌈K/h⌉ is already 1 at h = K), on the pow-2 ladder.
+            let mut demand_w = ceil_pow2(gemm.m).clamp(min_width, geom.cols);
+            if alloc_policy == AllocPolicy::EqualShare {
+                demand_w = demand_w.min(target);
             }
-        };
-        let cycles = match &cfg.dram {
-            Some(d) => d.bound_cycles(raw, &ind.activity),
-            None => raw,
-        };
-        LayerExec { cycles, activity: ind.activity }
+            let demand_h = ceil_pow2(gemm.k).clamp(min_rows, geom.rows);
+
+            // Same MoCA-style throttle as columns mode.
+            let bound = self.layer_bound(gemm, demand_w);
+            if bound
+                && (pm.allocated_count() > 0 || dispatched_any)
+                && (bound_in_plan
+                    || s.mem.is_some_and(|fb| fb.bound_inflight_excluding(r.dnn) > 0))
+            {
+                continue;
+            }
+
+            // First layer on a fully idle array: all PEs (Line 6).
+            if pm.fully_free() && n_avail == 1 {
+                let (_, tile) = pm.allocate(geom.cols).expect("full array free");
+                out.push(Allocation { dnn: r.dnn, layer: r.layer, tile });
+                dispatched_any = true;
+                bound_in_plan |= bound;
+                continue;
+            }
+
+            let mut best: Option<((u64, u64, u64, u64), Tile)> = None;
+            for rect in pm.free_tiles() {
+                let w = demand_w.min(floor_pow2(rect.cols));
+                if w < min_width {
+                    continue;
+                }
+                let mut h = demand_h.min(floor_pow2(rect.rows));
+                while h >= min_rows {
+                    let tile = Tile::new(rect.row0, rect.col0, h, w);
+                    let cycles =
+                        tile_layer_timing(geom, gemm, tile, FeedPolicy::Independent, &buffers)
+                            .cycles;
+                    let key = (cycles, tile.pes(), tile.row0, tile.col0);
+                    if best.map(|(bk, _)| key < bk).unwrap_or(true) {
+                        best = Some((key, tile));
+                    }
+                    if h == 1 {
+                        break;
+                    }
+                    h /= 2;
+                }
+            }
+            let Some(((cycles, ..), want)) = best else { continue };
+
+            // Patience in cycle space: the reference is the demand-shaped
+            // tile at the array origin (no skew, no folding beyond the
+            // layer's own shape).
+            let ideal = Tile::new(0, 0, demand_h, demand_w);
+            let ideal_cycles =
+                tile_layer_timing(geom, gemm, ideal, FeedPolicy::Independent, &buffers).cycles;
+            // Paper-literal equal share takes its slice without waiting,
+            // exactly like the columns-mode EqualShare arm.
+            if alloc_policy != AllocPolicy::EqualShare
+                && cycles > patience.saturating_mul(ideal_cycles)
+                && !(pm.allocated_count() == 0 && !dispatched_any)
+            {
+                continue; // wait for a completion to merge space
+            }
+            let Some((_, tile)) = pm.allocate_at(want) else { continue };
+            out.push(Allocation { dnn: r.dnn, layer: r.layer, tile });
+            dispatched_any = true;
+            bound_in_plan |= bound;
+        }
+        out
     }
 }
 
@@ -429,6 +623,9 @@ mod tests {
         for p in AllocPolicy::ALL {
             assert_eq!(p.tag().parse::<AllocPolicy>().unwrap(), p);
         }
+        for m in PartitionMode::ALL {
+            assert_eq!(m.tag().parse::<PartitionMode>().unwrap(), m);
+        }
         // TAGS is exactly the tag() image, in order.
         assert_eq!(FeedModel::TAGS, [FeedModel::Independent.tag(), FeedModel::Interleaved.tag()]);
         assert_eq!(
@@ -439,6 +636,16 @@ mod tests {
                 AllocPolicy::MemAware.tag()
             ]
         );
+        assert_eq!(
+            PartitionMode::TAGS,
+            [PartitionMode::Columns.tag(), PartitionMode::TwoD.tag()]
+        );
+        // The default is the paper's columns mode.
+        assert_eq!(PartitionMode::default(), PartitionMode::Columns);
+        assert_eq!(SchedulerConfig::default().partition_mode, PartitionMode::Columns);
+        let e = "diagonal".parse::<PartitionMode>().unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("columns") && msg.contains("2d"), "{msg}");
     }
 
     #[test]
@@ -456,7 +663,7 @@ mod tests {
     fn single_dnn_first_layer_gets_full_array() {
         let pool = WorkloadPool::new("t", vec![fc_dnn("a", &[256, 128], 0)]);
         let m = DynamicScheduler::new(SchedulerConfig::default()).run(&pool);
-        assert_eq!(m.dispatches[0].slice.width, 128, "first layer uses all PEs");
+        assert_eq!(m.dispatches[0].tile.cols, 128, "first layer uses all PEs");
         assert_eq!(m.partition_trace("a").len(), 2);
     }
 
@@ -524,7 +731,7 @@ mod tests {
         let pool = WorkloadPool::new("t", dnns);
         let cfg = SchedulerConfig { min_width: 16, ..Default::default() };
         let m = DynamicScheduler::new(cfg).run(&pool);
-        assert!(m.dispatches.iter().all(|d| d.slice.width >= 16));
+        assert!(m.dispatches.iter().all(|d| d.tile.cols >= 16));
     }
 
     #[test]

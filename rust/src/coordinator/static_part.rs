@@ -11,7 +11,7 @@ use std::collections::BTreeMap;
 
 use super::metrics::RunMetrics;
 use super::scheduler::SchedulerConfig;
-use crate::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
+use crate::sim::partitioned::{tile_layer_timing, FeedPolicy, Tile};
 use crate::sim_core::{Allocation, Engine, LayerExec, Scheduler, SystemState};
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 
@@ -50,7 +50,7 @@ impl StaticPartitioning {
     /// can host.
     pub fn run(&self, pool: &WorkloadPool) -> RunMetrics {
         self.width_for(pool); // capacity guard before the engine spins up
-        Engine::execute(pool, self.cfg.geom.cols, &mut self.clone())
+        Engine::execute(pool, self.cfg.geom, &mut self.clone())
     }
 }
 
@@ -77,8 +77,8 @@ impl Scheduler for StaticPartitioning {
         }
         next.into_iter()
             .filter_map(|(dnn, layer)| {
-                let slice = PartitionSlice::new(dnn as u64 * width, width);
-                s.partitions.is_free(slice).then_some(Allocation { dnn, layer, slice })
+                let tile = Tile::full_height(self.cfg.geom, dnn as u64 * width, width);
+                s.partitions.is_free(tile).then_some(Allocation { dnn, layer, tile })
             })
             .collect()
     }
@@ -88,14 +88,14 @@ impl Scheduler for StaticPartitioning {
         s: &SystemState<'_>,
         dnn: DnnId,
         layer: LayerId,
-        slice: PartitionSlice,
+        tile: Tile,
         _coresident: u64,
     ) -> LayerExec {
         let gemm = s.pool.dnns[dnn].layers[layer].shape.gemm();
-        let t = slice_layer_timing(
+        let t = tile_layer_timing(
             self.cfg.geom,
             gemm,
-            slice,
+            tile,
             FeedPolicy::Independent,
             &self.cfg.buffers,
         );
@@ -137,8 +137,8 @@ mod tests {
         let p = pool(&[&[128, 128], &[128], &[128, 128, 128], &[128]]);
         let m = StaticPartitioning::new(SchedulerConfig::default()).run(&p);
         for d in &m.dispatches {
-            assert_eq!(d.slice.width, 32);
-            assert_eq!(d.slice.col0, d.dnn as u64 * 32);
+            assert_eq!(d.tile.cols, 32);
+            assert_eq!(d.tile.col0, d.dnn as u64 * 32);
         }
     }
 

@@ -1,15 +1,19 @@
 //! The bank allocator — integral global-buffer banks granted to
-//! partitions alongside their columns.
+//! partitions alongside their PEs.
 //!
 //! The paper shares "parts of each storage element" with the PE columns;
 //! [`BufferConfig::share`](crate::sim::buffers::BufferConfig::share)
 //! models that as an exact proportional split, which no banked SRAM can
 //! deliver.  This allocator splits each buffer into `total` equal banks
-//! and hands out *whole* banks: a partition asks for its proportional
-//! count, gets at least one, and is capped by what the pool still holds —
-//! so a late tenant under heavy co-residency really does run with less
-//! SRAM than its column share suggests, and its refetch traffic (and
-//! therefore its DRAM interference) follows the banks it actually owns.
+//! and hands out *whole* banks: a partition asks for the count
+//! proportional to its **tile footprint** (PEs held — under 2D fission a
+//! half-height tile earns half the banks of a full column slice of the
+//! same width; for full-height tiles this reduces exactly to the old
+//! column-span grant), gets at least one, and is capped by what the pool
+//! still holds — so a late tenant under heavy co-residency really does
+//! run with less SRAM than its share suggests, and its refetch traffic
+//! (and therefore its DRAM interference) follows the banks it actually
+//! owns.
 
 use std::collections::BTreeMap;
 
@@ -20,16 +24,17 @@ use crate::sim::buffers::BufferConfig;
 #[derive(Debug, Clone)]
 pub struct BankAllocator {
     total: u64,
-    cols: u64,
+    /// Total PEs the banks are split over (the whole array).
+    pes: u64,
     free: u64,
     granted: BTreeMap<AllocId, u64>,
 }
 
 impl BankAllocator {
-    /// An allocator of `total` banks over an array `cols` columns wide.
-    pub fn new(total: u64, cols: u64) -> BankAllocator {
-        assert!(total >= 1 && cols >= 1);
-        BankAllocator { total, cols, free: total, granted: BTreeMap::new() }
+    /// An allocator of `total` banks over an array of `pes` PEs.
+    pub fn new(total: u64, pes: u64) -> BankAllocator {
+        assert!(total >= 1 && pes >= 1);
+        BankAllocator { total, pes, free: total, granted: BTreeMap::new() }
     }
 
     pub fn total(&self) -> u64 {
@@ -45,13 +50,13 @@ impl BankAllocator {
         self.granted.get(&id).copied().unwrap_or(0)
     }
 
-    /// Grant banks to a `width`-column partition: the proportional count
-    /// (at least one), capped by the free pool.  Returns the grant — a
-    /// grant of 0 means the pool was exhausted and the tenant runs with
-    /// the minimal (one-word) share.
-    pub fn grant(&mut self, id: AllocId, width: u64) -> u64 {
-        assert!(width >= 1 && !self.granted.contains_key(&id), "double grant for {id}");
-        let want = (self.total * width / self.cols).max(1);
+    /// Grant banks to a partition holding `tile_pes` PEs: the
+    /// proportional count (at least one), capped by the free pool.
+    /// Returns the grant — a grant of 0 means the pool was exhausted and
+    /// the tenant runs with the minimal (one-word) share.
+    pub fn grant(&mut self, id: AllocId, tile_pes: u64) -> u64 {
+        assert!(tile_pes >= 1 && !self.granted.contains_key(&id), "double grant for {id}");
+        let want = (self.total * tile_pes / self.pes).max(1);
         let got = want.min(self.free);
         self.free -= got;
         self.granted.insert(id, got);
@@ -83,11 +88,17 @@ impl BankAllocator {
 mod tests {
     use super::*;
 
+    /// PE footprint of a full-height slice `width` columns wide on the
+    /// default 128-row array.
+    fn cols_pes(width: u64) -> u64 {
+        width * 128
+    }
+
     #[test]
     fn proportional_grants_and_release() {
-        let mut b = BankAllocator::new(8, 128);
-        assert_eq!(b.grant(0, 64), 4);
-        assert_eq!(b.grant(1, 32), 2);
+        let mut b = BankAllocator::new(8, cols_pes(128));
+        assert_eq!(b.grant(0, cols_pes(64)), 4);
+        assert_eq!(b.grant(1, cols_pes(32)), 2);
         assert_eq!(b.free_banks(), 2);
         assert_eq!(b.granted(0), 4);
         assert_eq!(b.release(0), 4);
@@ -96,16 +107,25 @@ mod tests {
     }
 
     #[test]
+    fn footprint_grants_follow_tile_height() {
+        // A half-height tile earns half the banks of the full column
+        // slice at the same width — the 2D generalization.
+        let mut b = BankAllocator::new(8, cols_pes(128));
+        assert_eq!(b.grant(0, 64 * 64), 2, "64x64 quadrant = quarter of the array");
+        assert_eq!(b.grant(1, 64 * 128), 4, "full-height 64 cols = half");
+    }
+
+    #[test]
     fn narrow_partition_still_gets_one_bank() {
-        let mut b = BankAllocator::new(8, 128);
+        let mut b = BankAllocator::new(8, cols_pes(128));
         assert_eq!(b.grant(0, 1), 1);
     }
 
     #[test]
     fn exhausted_pool_grants_zero() {
-        let mut b = BankAllocator::new(2, 128);
-        assert_eq!(b.grant(0, 128), 2);
-        assert_eq!(b.grant(1, 64), 0, "pool exhausted: late tenant starved");
+        let mut b = BankAllocator::new(2, cols_pes(128));
+        assert_eq!(b.grant(0, cols_pes(128)), 2);
+        assert_eq!(b.grant(1, cols_pes(64)), 0, "pool exhausted: late tenant starved");
         b.release(0);
         assert_eq!(b.free_banks(), 2);
     }
@@ -113,15 +133,15 @@ mod tests {
     #[test]
     #[should_panic(expected = "unknown grant")]
     fn double_release_panics() {
-        let mut b = BankAllocator::new(4, 128);
-        b.grant(0, 32);
+        let mut b = BankAllocator::new(4, cols_pes(128));
+        b.grant(0, cols_pes(32));
         b.release(0);
         b.release(0);
     }
 
     #[test]
     fn share_scales_with_banks() {
-        let b = BankAllocator::new(4, 128);
+        let b = BankAllocator::new(4, cols_pes(128));
         let bufs = BufferConfig { weight_bytes: 400, ifmap_bytes: 800, ofmap_bytes: 1200, dtype_bytes: 1 };
         let half = b.share_of(2, &bufs);
         assert_eq!(half.weight_bytes, 200);
@@ -138,9 +158,9 @@ mod tests {
     fn one_bank_per_column_matches_proportional_share() {
         // With `banks == cols` the integral grant reproduces the exact
         // proportional split — the fiction is the limit of fine banking.
-        let mut b = BankAllocator::new(128, 128);
+        let mut b = BankAllocator::new(128, cols_pes(128));
         let bufs = BufferConfig::default();
-        let got = b.grant(0, 32);
+        let got = b.grant(0, cols_pes(32));
         assert_eq!(got, 32);
         assert_eq!(b.share_of(got, &bufs), bufs.share(32, 128));
     }

@@ -45,9 +45,9 @@ use std::collections::BTreeMap;
 use crate::coordinator::partition::AllocId;
 use crate::sim::activity::Activity;
 use crate::sim::buffers::BufferConfig;
-use crate::sim::dataflow::{layer_timing_with_share, ArrayGeometry};
+use crate::sim::dataflow::{layer_timing_tile_with_share, ArrayGeometry};
 use crate::sim::dram::DramConfig;
-use crate::sim::partitioned::PartitionSlice;
+use crate::sim::partitioned::Tile;
 use crate::workloads::dnng::DnnId;
 use crate::workloads::shapes::GemmDims;
 
@@ -118,7 +118,7 @@ impl MemSystem {
     pub fn new(spec: MemSpec) -> MemSystem {
         MemSystem {
             arbiter: BandwidthArbiter::new(spec.cfg.dram, spec.cfg.arbitration),
-            banks: BankAllocator::new(spec.cfg.banks.max(1), spec.geom.cols),
+            banks: BankAllocator::new(spec.cfg.banks.max(1), spec.geom.pes()),
             feedback: MemFeedback::default(),
             meta: BTreeMap::new(),
             spec,
@@ -146,12 +146,12 @@ impl MemSystem {
         alloc: AllocId,
         dnn: DnnId,
         gemm: GemmDims,
-        slice: PartitionSlice,
+        tile: Tile,
         compute_cycles: u64,
     ) -> (Activity, MemUpdate) {
-        let got = self.banks.grant(alloc, slice.width);
+        let got = self.banks.grant(alloc, tile.pes());
         let share = self.banks.share_of(got, &self.spec.buffers);
-        let t = layer_timing_with_share(self.spec.geom, gemm, slice.col0, slice.width, &share, None);
+        let t = layer_timing_tile_with_share(self.spec.geom, gemm, tile, &share, None);
         let words = t.activity.dram_accesses();
         let refetch = words.saturating_sub(ideal_words(gemm));
         let bound = self.spec.cfg.dram.transfer_cycles(&t.activity) > compute_cycles;
@@ -159,7 +159,12 @@ impl MemSystem {
             *self.feedback.inflight_bound.entry(dnn).or_insert(0) += 1;
         }
         self.meta.insert(alloc, FlightMeta { refetch_words: refetch, bound });
-        let upd = self.arbiter.admit(now, alloc, dnn, slice.width, compute_cycles, words);
+        // The arbiter weights shares in column-equivalents (tile PEs /
+        // array rows — exactly the column span for full-height tiles),
+        // which also keeps `stall_col_cycles` in the units the energy
+        // model bills.
+        let width = (tile.pes() / self.spec.geom.rows).max(1);
+        let upd = self.arbiter.admit(now, alloc, dnn, width, compute_cycles, words);
         (t.activity, upd)
     }
 
@@ -226,8 +231,8 @@ mod tests {
     fn admit_prices_banked_traffic_and_retire_reports_stall() {
         let mut mem = MemSystem::new(spec(1.0, 8));
         let gemm = GemmDims { sr: 512, k: 128, m: 64 };
-        let slice = PartitionSlice::new(0, 64);
-        let (activity, upd) = mem.admit(0, 0, 0, gemm, slice, 1000);
+        let tile = Tile::new(0, 0, 128, 64);
+        let (activity, upd) = mem.admit(0, 0, 0, gemm, tile, 1000);
         let words = activity.dram_accesses();
         assert!(words >= ideal_words(gemm));
         // Strongly memory-bound at 1 word/cycle.
@@ -249,13 +254,13 @@ mod tests {
         // all and pays in IFMap refetches — traffic the proportional
         // `BufferConfig::share` fiction would never show.
         let gemm = GemmDims { sr: 4000, k: 512, m: 256 }; // fm = 4 on 64 cols
-        let slice = PartitionSlice::new(0, 64);
+        let tile = Tile::new(0, 0, 128, 64);
         let mut rich = MemSystem::new(spec(64.0, 8));
-        let (a_rich, _) = rich.admit(0, 0, 0, gemm, slice, 1_000_000);
+        let (a_rich, _) = rich.admit(0, 0, 0, gemm, tile, 1_000_000);
         let mut poor = MemSystem::new(spec(64.0, 2));
         // A full-width tenant exhausts the two banks first.
-        let (_, _) = poor.admit(0, 7, 7, gemm, PartitionSlice::new(0, 128), 1_000_000);
-        let (a_poor, _) = poor.admit(0, 0, 0, gemm, slice, 1_000_000);
+        let (_, _) = poor.admit(0, 7, 7, gemm, Tile::new(0, 0, 128, 128), 1_000_000);
+        let (a_poor, _) = poor.admit(0, 0, 0, gemm, tile, 1_000_000);
         assert!(
             a_poor.dram_accesses() > a_rich.dram_accesses(),
             "starved banks must inflate traffic: {} vs {}",
@@ -271,7 +276,7 @@ mod tests {
     fn compute_bound_layer_has_no_stall() {
         let mut mem = MemSystem::new(spec(1_000_000.0, 8));
         let gemm = GemmDims { sr: 64, k: 64, m: 64 };
-        let (_, upd) = mem.admit(0, 0, 0, gemm, PartitionSlice::new(0, 64), 50_000);
+        let (_, upd) = mem.admit(0, 0, 0, gemm, Tile::new(0, 0, 128, 64), 50_000);
         let (_, t_end) = upd.reposts.iter().find(|&&(a, _)| a == 0).copied().unwrap();
         assert_eq!(t_end, 50_000);
         let (stats, _) = mem.retire(t_end, 0);

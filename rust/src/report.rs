@@ -8,7 +8,7 @@ use std::collections::BTreeMap;
 
 use crate::coordinator::baseline::SequentialBaseline;
 use crate::coordinator::metrics::TenantStats;
-use crate::coordinator::scheduler::{AllocPolicy, DynamicScheduler, SchedulerConfig};
+use crate::coordinator::scheduler::{AllocPolicy, DynamicScheduler, PartitionMode, SchedulerConfig};
 use crate::coordinator::RunMetrics;
 use crate::energy::{EnergyBreakdown, EnergyModel, Estimator};
 use crate::mem::MemStats;
@@ -61,18 +61,20 @@ pub fn total_energy(m: &RunMetrics, model: &EnergyModel) -> EnergyBreakdown {
 /// Per-DNN energy bars — the accounting of the paper's Fig. 9(e)(f):
 /// each DNN's bar is its own dynamic energy plus the array static energy
 /// attributed to its residency, weighted by the fraction of the array it
-/// occupied (`width/cols`).  Under the sequential baseline every layer
-/// occupies the full array, so a DNN is billed the whole static power for
-/// its whole execution window; under partitioning, co-residents split it.
+/// occupied (tile PEs / array PEs — exactly `width/cols` for the
+/// full-height tiles of columns mode).  Under the sequential baseline
+/// every layer occupies the full array, so a DNN is billed the whole
+/// static power for its whole execution window; under partitioning,
+/// co-residents split it.
 pub fn per_dnn_energy_bars(m: &RunMetrics, model: &EnergyModel) -> BTreeMap<String, f64> {
     let rate = model.static_rate_j_per_cycle();
-    let cols = model.geom.cols as f64;
+    let pes = model.geom.pes() as f64;
     let mut bars: BTreeMap<String, f64> = BTreeMap::new();
     let mut est = Estimator::new(*model);
     for d in &m.dispatches {
         est.record(&d.dnn_name, &d.activity);
         *bars.entry(d.dnn_name.clone()).or_default() +=
-            rate * d.duration() as f64 * (d.slice.width as f64 / cols);
+            rate * d.duration() as f64 * (d.tile.pes() as f64 / pes);
     }
     let bd = est.finish(m.makespan);
     for (name, dyn_j) in bd.per_dnn_dynamic_j {
@@ -180,16 +182,32 @@ fn arrival_label(grid: &SweepGrid, mean_interarrival: f64) -> String {
     }
 }
 
+/// One point's geometry label: the bare side for square arrays, `HxW`
+/// otherwise (the same spelling `--geoms` parses).
+fn geom_label(geom: crate::sim::dataflow::ArrayGeometry) -> String {
+    if geom.rows == geom.cols {
+        geom.cols.to_string()
+    } else {
+        format!("{}x{}", geom.rows, geom.cols)
+    }
+}
+
 /// The human-readable sweep report: one row per grid point.  When any
 /// point ran under the shared memory hierarchy, four contention columns
 /// (interface bandwidth, arbitration, stall fraction, achieved
-/// words/cycle) are appended; points without `[mem]` show `-`.
+/// words/cycle) are appended; points without `[mem]` show `-`.  A `mode`
+/// column appears only when some point ran 2D fission, so column-only
+/// sweeps render exactly as before.
 pub fn sweep_table(grid: &SweepGrid, rows: &[SweepRow]) -> Table {
     let with_mem = rows.iter().any(|r| r.mem.is_some());
+    let with_mode = rows.iter().any(|r| r.point.mode == PartitionMode::TwoD);
     let mut headers = vec![
         "mix", "arrival", "policy", "feed", "cols", "makespan", "vs seq", "util", "p50 lat",
         "p99 lat", "miss",
     ];
+    if with_mode {
+        headers.insert(5, "mode");
+    }
     if with_mem {
         headers.extend(["bw", "arb", "stall", "wpc"]);
     }
@@ -200,7 +218,7 @@ pub fn sweep_table(grid: &SweepGrid, rows: &[SweepRow]) -> Table {
             arrival_label(grid, r.point.mean_interarrival),
             r.point.policy.tag().to_string(),
             r.point.feed.tag().to_string(),
-            r.point.cols.to_string(),
+            geom_label(r.point.geom),
             r.makespan.to_string(),
             format!("{:+.1}%", saving_pct(r.seq_makespan as f64, r.makespan as f64)),
             format!("{:.1}%", 100.0 * r.utilization),
@@ -208,6 +226,9 @@ pub fn sweep_table(grid: &SweepGrid, rows: &[SweepRow]) -> Table {
             format!("{:.0}", r.outcome.overall.p99_latency),
             format!("{:.1}%", 100.0 * r.outcome.miss_rate()),
         ];
+        if with_mode {
+            cells.insert(5, r.point.mode.tag().to_string());
+        }
         if with_mem {
             match &r.mem {
                 Some(m) => cells.extend([
@@ -261,7 +282,20 @@ pub fn sweep_json(grid: &SweepGrid, rows: &[SweepRow]) -> Json {
         o.insert("mean_interarrival".to_string(), Json::Num(r.point.mean_interarrival));
         o.insert("policy".to_string(), Json::Str(r.point.policy.tag().to_string()));
         o.insert("feed".to_string(), Json::Str(r.point.feed.tag().to_string()));
-        o.insert("cols".to_string(), Json::Num(r.point.cols as f64));
+        o.insert("cols".to_string(), Json::Num(r.point.geom.cols as f64));
+        // New-geometry keys are strictly opt-in: `rows` only for
+        // non-square arrays, `partition_mode` only for 2D points — a
+        // columns-mode square-geometry sweep renders byte-identically to
+        // the pre-2D report.
+        if r.point.geom.rows != r.point.geom.cols {
+            o.insert("rows".to_string(), Json::Num(r.point.geom.rows as f64));
+        }
+        if r.point.mode == PartitionMode::TwoD {
+            o.insert(
+                "partition_mode".to_string(),
+                Json::Str(r.point.mode.tag().to_string()),
+            );
+        }
         // Seeds are u64; emitted as strings so they stay exact beyond 2^53.
         o.insert("scenario_seed".to_string(), Json::Str(r.point.scenario_seed.to_string()));
         o.insert("requests".to_string(), Json::Num(r.requests as f64));
@@ -315,6 +349,14 @@ pub fn sweep_json(grid: &SweepGrid, rows: &[SweepRow]) -> Json {
         None => {
             top.insert("arrival".to_string(), Json::Str("poisson".to_string()));
         }
+    }
+    if grid.modes.contains(&PartitionMode::TwoD) {
+        top.insert(
+            "modes".to_string(),
+            Json::Arr(
+                grid.modes.iter().map(|m| Json::Str(m.tag().to_string())).collect(),
+            ),
+        );
     }
     if !grid.bandwidths.is_empty() {
         top.insert(

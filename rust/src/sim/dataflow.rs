@@ -20,6 +20,7 @@
 
 use super::activity::Activity;
 use super::buffers::BufferConfig;
+use super::partitioned::Tile;
 use crate::util::ceil_div;
 use crate::workloads::shapes::GemmDims;
 
@@ -40,6 +41,30 @@ impl ArrayGeometry {
 
     pub fn pes(&self) -> u64 {
         self.rows * self.cols
+    }
+}
+
+/// Parse `"HxW"` (e.g. `64x256`) or a bare side `"N"` (= `NxN`) — the
+/// CLI/config spelling of a geometry (`mtsa sweep --geoms 64x256,128`).
+impl std::str::FromStr for ArrayGeometry {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<ArrayGeometry, String> {
+        fn dim(d: &str) -> Result<u64, String> {
+            match d.trim().parse::<u64>() {
+                Ok(v) if v > 0 => Ok(v),
+                _ => Err(format!(
+                    "bad array dimension {d:?} (expected a positive integer, e.g. 128 or 64x256)"
+                )),
+            }
+        }
+        match s.split_once(|c| c == 'x' || c == 'X') {
+            Some((h, w)) => Ok(ArrayGeometry { rows: dim(h)?, cols: dim(w)? }),
+            None => {
+                let n = dim(s)?;
+                Ok(ArrayGeometry { rows: n, cols: n })
+            }
+        }
     }
 }
 
@@ -110,7 +135,8 @@ pub fn layer_timing_at(
     bufs: &BufferConfig,
     interleave: Option<(u64, u64)>,
 ) -> LayerTiming {
-    layer_timing_with_share(geom, gemm, col0, width, &bufs.share(width, geom.cols), interleave)
+    assert!(width > 0 && col0 + width <= geom.cols, "slice out of range");
+    layer_timing_tile(geom, gemm, Tile::full_height(geom, col0, width), bufs, interleave)
 }
 
 /// Like [`layer_timing_at`], but with an *explicit* buffer share instead
@@ -129,26 +155,59 @@ pub fn layer_timing_with_share(
     interleave: Option<(u64, u64)>,
 ) -> LayerTiming {
     assert!(width > 0 && col0 + width <= geom.cols, "slice out of range");
+    layer_timing_tile_with_share(geom, gemm, Tile::full_height(geom, col0, width), share, interleave)
+}
+
+/// Time a layer on a rectangular [`Tile`] with the proportional buffer
+/// share of its PE footprint.  Full-height tiles reproduce
+/// [`layer_timing_at`] bit for bit (`rows·width / rows·cols` and
+/// `width / cols` floor to the same share, and `row0 = 0` adds nothing).
+pub fn layer_timing_tile(
+    geom: ArrayGeometry,
+    gemm: GemmDims,
+    tile: Tile,
+    bufs: &BufferConfig,
+    interleave: Option<(u64, u64)>,
+) -> LayerTiming {
+    layer_timing_tile_with_share(geom, gemm, tile, &bufs.share(tile.pes(), geom.pes()), interleave)
+}
+
+/// The general timing core: a layer on rows `[row0, row0+rows)` ×
+/// columns `[col0, col0+cols)` with an explicit buffer share.
+pub fn layer_timing_tile_with_share(
+    geom: ArrayGeometry,
+    gemm: GemmDims,
+    tile: Tile,
+    share: &BufferConfig,
+    interleave: Option<(u64, u64)>,
+) -> LayerTiming {
+    assert!(
+        tile.col_end() <= geom.cols && tile.row_end() <= geom.rows,
+        "tile out of range"
+    );
     let GemmDims { sr, k, m } = gemm;
     assert!(sr > 0 && k > 0 && m > 0);
-    let fk = ceil_div(k, geom.rows);
-    let fm = ceil_div(m, width);
+    let fk = ceil_div(k, tile.rows);
+    let fm = ceil_div(m, tile.cols);
 
-    // Closed form of `Σ_folds [h_i + stream(...)]` — the scheduler calls
-    // this for every candidate dispatch, and a fold loop is O(FK·FM)
-    // (AlexNet fc6 on a 16-wide slice = 18 432 folds).  Using
+    // Closed form of `Σ_folds [(row0 + h_i) + stream(...)]` — the
+    // scheduler calls this for every candidate dispatch, and a fold loop
+    // is O(FK·FM) (AlexNet fc6 on a 16-wide slice = 18 432 folds).  The
+    // load step pays `row0` extra cycles per fold (weights ripple through
+    // the `row0` foreign rows above the tile's band), and the drain still
+    // traverses the full physical column height `H`.  Using
     // Σ_i h_i = K, Σ_j w_j = M and the per-fold stream equations:
     //
-    //   independent:  Σ = FM·K + FK·M + FK·FM·(Sr + H + col0 − 1)
-    //   interleaved:  Σ = FM·K + FK·M + FK·FM·(p·(Sr + H − 2) + slot + col0 + p)
+    //   independent:  Σ = FM·K + FK·M + FK·FM·(row0 + Sr + H + col0 − 1)
+    //   interleaved:  Σ = FM·K + FK·M + FK·FM·(row0 + p·(Sr + H − 2) + slot + col0 + p)
     //
     // Verified against the explicit fold loop by
     // `tests::closed_form_matches_fold_loop`.
     let per_fold_base = match interleave {
-        None => sr + geom.rows + col0 - 1,
+        None => tile.row0 + sr + geom.rows + tile.col0 - 1,
         Some((p, slot)) => {
             debug_assert!(slot < p);
-            p * (sr + geom.rows - 2) + slot + col0 + p
+            tile.row0 + p * (sr + geom.rows - 2) + slot + tile.col0 + p
         }
     };
     let cycles = fm * k + fk * m + fk * fm * per_fold_base;
@@ -288,6 +347,58 @@ mod tests {
             }
             prop::ensure_eq(t.cycles, loop_cycles, "cycles")
         });
+    }
+
+    #[test]
+    fn tile_closed_form_matches_fold_loop() {
+        // The 2D closed form (row0 load-chain skew + height-based FK)
+        // must equal the explicit per-fold sum for any tile placement.
+        prop::check("tile closed form == fold loop", 200, |rng| {
+            let geom = ArrayGeometry::new(
+                rng.gen_range_inclusive(1, 128),
+                rng.gen_range_inclusive(1, 128),
+            );
+            let height = rng.gen_range_inclusive(1, geom.rows);
+            let row0 = rng.gen_range_inclusive(0, geom.rows - height);
+            let width = rng.gen_range_inclusive(1, geom.cols);
+            let col0 = rng.gen_range_inclusive(0, geom.cols - width);
+            let gemm = GemmDims {
+                sr: rng.gen_range_inclusive(1, 5000),
+                k: rng.gen_range_inclusive(1, 8192),
+                m: rng.gen_range_inclusive(1, 8192),
+            };
+            let interleave = if rng.gen_bool(0.5) {
+                let p = rng.gen_range_inclusive(2, 8);
+                Some((p, rng.gen_range(p)))
+            } else {
+                None
+            };
+            let tile = Tile::new(row0, col0, height, width);
+            let t = layer_timing_tile(geom, gemm, tile, &BufferConfig::default(), interleave);
+            let mut loop_cycles = 0u64;
+            for (h, w) in folds(gemm.k, gemm.m, height, width) {
+                loop_cycles += row0
+                    + h
+                    + match interleave {
+                        None => stream_cycles(gemm.sr, geom.rows, col0, w),
+                        Some((p, slot)) => {
+                            stream_cycles_interleaved(p, slot, gemm.sr, geom.rows, col0, w)
+                        }
+                    };
+            }
+            prop::ensure_eq(t.cycles, loop_cycles, "cycles")
+        });
+    }
+
+    #[test]
+    fn geometry_parses_hxw_and_bare_side() {
+        assert_eq!("128".parse::<ArrayGeometry>().unwrap(), ArrayGeometry::new(128, 128));
+        assert_eq!("64x256".parse::<ArrayGeometry>().unwrap(), ArrayGeometry::new(64, 256));
+        assert_eq!("64X256".parse::<ArrayGeometry>().unwrap(), ArrayGeometry::new(64, 256));
+        assert_eq!(" 32 x 8 ".parse::<ArrayGeometry>().unwrap(), ArrayGeometry::new(32, 8));
+        for bad in ["", "x", "0", "0x8", "8x0", "8x", "x8", "12y34", "-4", "8x8x8"] {
+            assert!(bad.parse::<ArrayGeometry>().is_err(), "should reject {bad:?}");
+        }
     }
 
     #[test]

@@ -30,4 +30,4 @@ pub mod trace;
 
 pub use activity::Activity;
 pub use dataflow::{ArrayGeometry, LayerTiming};
-pub use partitioned::{FeedPolicy, PartitionSlice};
+pub use partitioned::{FeedPolicy, PartitionSlice, Tile};

@@ -1,13 +1,22 @@
 //! Partitioned weight-stationary dataflow timing (paper §3.4) — the layer
-//! timing the coordinator uses when a layer runs inside a vertical
-//! partition.
+//! timing the coordinator uses when a layer runs inside a partition.
 //!
-//! A partition is a contiguous column slice `[col0, col0 + width)`.  It
-//! behaves as an independent `H × width` sub-accelerator except for the
-//! partitioned-dataflow effects:
+//! The paper partitions the array along **columns only**: a partition is a
+//! contiguous vertical slice `[col0, col0 + width)` spanning every row.
+//! This module generalizes that to rectangular **2D fission**
+//! (Planaria-style): a [`Tile`] owns rows `[row0, row0 + rows)` ×
+//! columns `[col0, col0 + cols)` and behaves as an independent
+//! `rows × cols` sub-accelerator except for the partitioned-dataflow
+//! effects:
 //!
-//! - **traversal skew** — feed data passes through `col0` foreign columns
-//!   (Mul_En low) before reaching the partition (+`col0` cycles/fold);
+//! - **feed traversal skew** — feed data passes through `col0` foreign
+//!   columns (Mul_En low) before reaching the tile (+`col0` cycles/fold);
+//! - **load-chain skew** — weights ripple down the column shift chain
+//!   through `row0` foreign rows before reaching the tile's band
+//!   (+`row0` cycles/fold on the load step);
+//! - **fold count** — a `[Sr,K]×[K,M]` GEMM takes `FK = ⌈K/rows⌉ ×
+//!   FM = ⌈M/cols⌉` folds, so 2D fission trades fold count against
+//!   width/height (see `docs/fission.md`);
 //! - **feed-bus policy** — [`FeedPolicy::Independent`] gives every
 //!   partition a private feed stream (the paper's model; partitions are
 //!   fully concurrent).  [`FeedPolicy::Interleaved`] time-slices the
@@ -16,12 +25,114 @@
 //!   `sim::array` for its register-level derivation).  The ablation bench
 //!   `ablation_feedbus` quantifies the gap, and `docs/feed-models.md` is
 //!   the canonical discussion of when each model is the right one.
+//!
+//! [`PartitionSlice`] is kept as the full-height special case: a
+//! `PartitionSlice { col0, width }` is exactly `Tile { row0: 0, col0,
+//! rows: H, cols: width }` (see [`PartitionSlice::tile`]), and
+//! [`slice_layer_timing`] prices it bit-identically to the pre-2D model.
 
 use super::buffers::BufferConfig;
-use super::dataflow::{layer_timing_at, ArrayGeometry, LayerTiming};
+use super::dataflow::{layer_timing_tile, ArrayGeometry, LayerTiming};
 use crate::workloads::shapes::GemmDims;
 
-/// A vertical partition of the array.
+/// A rectangular tile of the array: rows `[row0, row0 + rows)` ×
+/// columns `[col0, col0 + cols)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Tile {
+    pub row0: u64,
+    pub col0: u64,
+    pub rows: u64,
+    pub cols: u64,
+}
+
+impl Tile {
+    pub fn new(row0: u64, col0: u64, rows: u64, cols: u64) -> Tile {
+        assert!(rows > 0 && cols > 0);
+        Tile { row0, col0, rows, cols }
+    }
+
+    /// The whole array as one tile.
+    pub fn full(geom: ArrayGeometry) -> Tile {
+        Tile { row0: 0, col0: 0, rows: geom.rows, cols: geom.cols }
+    }
+
+    /// The full-height tile of a vertical column slice — the paper's
+    /// partition shape, and what every `columns`-mode policy allocates.
+    pub fn full_height(geom: ArrayGeometry, col0: u64, width: u64) -> Tile {
+        Tile::new(0, col0, geom.rows, width)
+    }
+
+    pub fn row_end(&self) -> u64 {
+        self.row0 + self.rows
+    }
+
+    pub fn col_end(&self) -> u64 {
+        self.col0 + self.cols
+    }
+
+    /// PEs this tile owns.
+    pub fn pes(&self) -> u64 {
+        self.rows * self.cols
+    }
+
+    /// True when the tile spans every row (a column slice).
+    pub fn is_full_height(&self, geom: ArrayGeometry) -> bool {
+        self.row0 == 0 && self.rows == geom.rows
+    }
+
+    /// True when `inner` lies entirely inside this tile.
+    pub fn contains(&self, inner: &Tile) -> bool {
+        self.row0 <= inner.row0
+            && inner.row_end() <= self.row_end()
+            && self.col0 <= inner.col0
+            && inner.col_end() <= self.col_end()
+    }
+
+    /// True when the two tiles share at least one PE.
+    pub fn overlaps(&self, other: &Tile) -> bool {
+        self.row0 < other.row_end()
+            && other.row0 < self.row_end()
+            && self.col0 < other.col_end()
+            && other.col0 < self.col_end()
+    }
+
+    /// True when the two tiles' row bands intersect (they share feed
+    /// wires even if their columns are disjoint).
+    pub fn overlaps_rows(&self, other: &Tile) -> bool {
+        self.row0 < other.row_end() && other.row0 < self.row_end()
+    }
+
+    /// The union of two tiles when they share a full edge (same row band
+    /// and adjacent columns, or same column band and adjacent rows);
+    /// `None` when the union would not be a rectangle.
+    pub fn merged_with(&self, other: &Tile) -> Option<Tile> {
+        if self.row0 == other.row0
+            && self.rows == other.rows
+            && (self.col_end() == other.col0 || other.col_end() == self.col0)
+        {
+            return Some(Tile::new(
+                self.row0,
+                self.col0.min(other.col0),
+                self.rows,
+                self.cols + other.cols,
+            ));
+        }
+        if self.col0 == other.col0
+            && self.cols == other.cols
+            && (self.row_end() == other.row0 || other.row_end() == self.row0)
+        {
+            return Some(Tile::new(
+                self.row0.min(other.row0),
+                self.col0,
+                self.rows + other.rows,
+                self.cols,
+            ));
+        }
+        None
+    }
+}
+
+/// A vertical (full-height) partition of the array — the paper's shape.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PartitionSlice {
     pub col0: u64,
@@ -41,6 +152,11 @@ impl PartitionSlice {
 
     pub fn end(&self) -> u64 {
         self.col0 + self.width
+    }
+
+    /// The full-height [`Tile`] this slice denotes on `geom`.
+    pub fn tile(self, geom: ArrayGeometry) -> Tile {
+        Tile::full_height(geom, self.col0, self.width)
     }
 
     /// True if `other` is immediately adjacent (mergeable).
@@ -71,11 +187,11 @@ impl Default for FeedPolicy {
     }
 }
 
-/// Time one layer on a partition slice under the given feed policy.
-pub fn slice_layer_timing(
+/// Time one layer on a rectangular tile under the given feed policy.
+pub fn tile_layer_timing(
     geom: ArrayGeometry,
     gemm: GemmDims,
-    slice: PartitionSlice,
+    tile: Tile,
     policy: FeedPolicy,
     bufs: &BufferConfig,
 ) -> LayerTiming {
@@ -86,7 +202,19 @@ pub fn slice_layer_timing(
             Some((coresident, slot))
         }
     };
-    layer_timing_at(geom, gemm, slice.col0, slice.width, bufs, interleave)
+    layer_timing_tile(geom, gemm, tile, bufs, interleave)
+}
+
+/// Time one layer on a full-height partition slice — the paper's model,
+/// bit-identical to pricing the corresponding [`Tile`].
+pub fn slice_layer_timing(
+    geom: ArrayGeometry,
+    gemm: GemmDims,
+    slice: PartitionSlice,
+    policy: FeedPolicy,
+    bufs: &BufferConfig,
+) -> LayerTiming {
+    tile_layer_timing(geom, gemm, slice.tile(geom), policy, bufs)
 }
 
 #[cfg(test)]
@@ -120,11 +248,111 @@ mod tests {
     }
 
     #[test]
+    fn tile_geometry_helpers() {
+        let t = Tile::new(32, 64, 16, 8);
+        assert_eq!(t.row_end(), 48);
+        assert_eq!(t.col_end(), 72);
+        assert_eq!(t.pes(), 128);
+        assert!(!t.is_full_height(GEOM));
+        assert!(Tile::full(GEOM).is_full_height(GEOM));
+        assert_eq!(PartitionSlice::new(64, 8).tile(GEOM), Tile::new(0, 64, 128, 8));
+        assert!(Tile::full(GEOM).contains(&t));
+        assert!(!t.contains(&Tile::full(GEOM)));
+        assert!(t.overlaps(&Tile::new(40, 70, 20, 20)));
+        assert!(!t.overlaps(&Tile::new(48, 64, 16, 8)), "edge-adjacent is not overlap");
+        assert!(t.overlaps_rows(&Tile::new(40, 0, 8, 4)));
+        assert!(!t.overlaps_rows(&Tile::new(48, 64, 8, 8)));
+    }
+
+    #[test]
+    fn tile_merge_algebra() {
+        let a = Tile::new(0, 0, 64, 32);
+        let b = Tile::new(0, 32, 64, 32);
+        let c = Tile::new(64, 0, 64, 32);
+        let d = Tile::new(64, 32, 64, 32);
+        // Horizontal merge: same row band, adjacent columns.
+        assert_eq!(a.merged_with(&b), Some(Tile::new(0, 0, 64, 64)));
+        assert_eq!(b.merged_with(&a), Some(Tile::new(0, 0, 64, 64)));
+        // Vertical merge: same column band, adjacent rows.
+        assert_eq!(a.merged_with(&c), Some(Tile::new(0, 0, 128, 32)));
+        // Diagonal neighbours do not merge into a rectangle.
+        assert_eq!(a.merged_with(&d), None);
+        // Adjacent but mismatched band: no merge.
+        assert_eq!(a.merged_with(&Tile::new(0, 32, 32, 32)), None);
+        assert_eq!(a.merged_with(&Tile::new(64, 0, 64, 16)), None);
+    }
+
+    #[test]
     fn independent_equals_full_array_when_whole() {
         let g = GemmDims { sr: 3025, k: 363, m: 96 };
         let full = slice_layer_timing(GEOM, g, PartitionSlice::full(GEOM), FeedPolicy::Independent, &bufs());
         let direct = super::super::dataflow::baseline_layer_timing(GEOM, g, &bufs());
         assert_eq!(full, direct);
+    }
+
+    #[test]
+    fn full_height_tile_prices_like_its_slice() {
+        // The parity rail of the 2D generalization: every column slice and
+        // its Tile form are the same timing, bit for bit, under both feed
+        // policies.
+        prop::check("tile == slice when full height", 100, |rng| {
+            let g = GemmDims {
+                sr: rng.gen_range_inclusive(1, 5000),
+                k: rng.gen_range_inclusive(1, 1024),
+                m: rng.gen_range_inclusive(1, 1024),
+            };
+            let width = *rng.choose(&[8u64, 16, 32, 64, 128]);
+            let col0 = rng.gen_range_inclusive(0, 128 - width);
+            let slice = PartitionSlice::new(col0, width);
+            let policy = if rng.gen_bool(0.5) {
+                FeedPolicy::Independent
+            } else {
+                let p = rng.gen_range_inclusive(2, 8);
+                FeedPolicy::Interleaved { coresident: p, slot: rng.gen_range(p) }
+            };
+            let a = slice_layer_timing(GEOM, g, slice, policy, &bufs());
+            let b = tile_layer_timing(GEOM, g, slice.tile(GEOM), policy, &bufs());
+            prop::ensure_eq(a, b, "slice vs tile")
+        });
+    }
+
+    #[test]
+    fn row_offset_adds_load_chain_skew() {
+        // Two identical tiles, one at the top and one 32 rows down: the
+        // lower tile pays +row0 load cycles per fold, nothing else.
+        let g = GemmDims { sr: 100, k: 32, m: 32 };
+        let top = tile_layer_timing(GEOM, g, Tile::new(0, 0, 32, 32), FeedPolicy::Independent, &bufs());
+        let low = tile_layer_timing(GEOM, g, Tile::new(32, 0, 32, 32), FeedPolicy::Independent, &bufs());
+        assert_eq!((top.fk, top.fm), (1, 1));
+        assert_eq!(low.cycles - top.cycles, 32);
+        assert_eq!(low.activity, top.activity);
+    }
+
+    #[test]
+    fn shorter_tile_multiplies_k_folds() {
+        // Halving the tile height doubles FK for a K-deep layer; the
+        // cycles grow accordingly (fold overheads are paid FK x FM times).
+        let g = GemmDims { sr: 500, k: 128, m: 32 };
+        let full = tile_layer_timing(GEOM, g, Tile::new(0, 0, 128, 32), FeedPolicy::Independent, &bufs());
+        let half = tile_layer_timing(GEOM, g, Tile::new(0, 0, 64, 32), FeedPolicy::Independent, &bufs());
+        assert_eq!(full.fk, 1);
+        assert_eq!(half.fk, 2);
+        assert!(half.cycles > full.cycles);
+    }
+
+    #[test]
+    fn shallow_layer_wastes_nothing_on_short_tile() {
+        // A layer with k = 32 runs in the same cycles on a 32-row tile
+        // (at row0 = 0) as on the full height — the core 2D-fission
+        // utilization argument, dual to the narrow-M case below.
+        let g = GemmDims { sr: 500, k: 32, m: 64 };
+        let full = tile_layer_timing(GEOM, g, Tile::new(0, 0, 128, 64), FeedPolicy::Independent, &bufs());
+        let short = tile_layer_timing(GEOM, g, Tile::new(0, 0, 32, 64), FeedPolicy::Independent, &bufs());
+        assert_eq!(full.cycles, short.cycles);
+        // And utilization of the tile is 4x better.
+        let u_full = full.utilization(128 * 64);
+        let u_short = short.utilization(32 * 64);
+        assert!((u_short / u_full - 4.0).abs() < 1e-9);
     }
 
     #[test]

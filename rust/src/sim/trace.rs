@@ -6,32 +6,33 @@ use std::fmt::Write as _;
 
 use crate::coordinator::RunMetrics;
 use crate::sim::activity::csv_header;
-use crate::sim::dataflow::ArrayGeometry;
 
 /// Scale-Sim-style compute report: one row per layer dispatch.
 ///
 /// Columns mirror Scale-Sim's `COMPUTE_REPORT.csv` (layer id, start/end
 /// cycle, total cycles, utilization %) extended with the partition
 /// geometry this system adds.
-pub fn compute_report_csv(m: &RunMetrics, geom: ArrayGeometry) -> String {
+pub fn compute_report_csv(m: &RunMetrics) -> String {
     let mut out = String::from(
-        "dnn,layer,layer_name,col0,width,start_cycle,end_cycle,total_cycles,macs,pe_utilization_pct\n",
+        "dnn,layer,layer_name,row0,col0,rows,cols,start_cycle,end_cycle,total_cycles,macs,pe_utilization_pct\n",
     );
     for d in &m.dispatches {
-        let slice_pes = geom.rows * d.slice.width;
+        let tile_pes = d.tile.pes();
         let util = if d.duration() > 0 {
-            100.0 * d.activity.macs as f64 / (d.duration() as f64 * slice_pes as f64)
+            100.0 * d.activity.macs as f64 / (d.duration() as f64 * tile_pes as f64)
         } else {
             0.0
         };
         let _ = writeln!(
             out,
-            "{},{},{},{},{},{},{},{},{},{:.2}",
+            "{},{},{},{},{},{},{},{},{},{},{},{:.2}",
             d.dnn_name,
             d.layer,
             d.layer_name,
-            d.slice.col0,
-            d.slice.width,
+            d.tile.row0,
+            d.tile.col0,
+            d.tile.rows,
+            d.tile.cols,
             d.t_start,
             d.t_end,
             d.duration(),
@@ -66,7 +67,7 @@ mod tests {
     use crate::workloads::dnng::{Dnn, Layer, WorkloadPool};
     use crate::workloads::shapes::{LayerKind, LayerShape};
 
-    fn run() -> (RunMetrics, ArrayGeometry) {
+    fn run() -> RunMetrics {
         let pool = WorkloadPool::new(
             "t",
             vec![Dnn::chain(
@@ -77,14 +78,13 @@ mod tests {
                 ],
             )],
         );
-        let cfg = SchedulerConfig::default();
-        (DynamicScheduler::new(cfg.clone()).run(&pool), cfg.geom)
+        DynamicScheduler::new(SchedulerConfig::default()).run(&pool)
     }
 
     #[test]
     fn compute_report_has_row_per_dispatch() {
-        let (m, geom) = run();
-        let csv = compute_report_csv(&m, geom);
+        let m = run();
+        let csv = compute_report_csv(&m);
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 1 + m.dispatches.len());
         assert!(lines[0].starts_with("dnn,layer,"));
@@ -96,7 +96,7 @@ mod tests {
 
     #[test]
     fn activity_log_has_total_row() {
-        let (m, _) = run();
+        let m = run();
         let csv = activity_log_csv(&m);
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 1 + m.dispatches.len() + 1);
@@ -109,8 +109,8 @@ mod tests {
 
     #[test]
     fn csv_is_machine_parseable() {
-        let (m, geom) = run();
-        for csv in [compute_report_csv(&m, geom), activity_log_csv(&m)] {
+        let m = run();
+        for csv in [compute_report_csv(&m), activity_log_csv(&m)] {
             let mut lines = csv.lines();
             let ncols = lines.next().unwrap().split(',').count();
             for line in lines {

@@ -11,6 +11,7 @@ use crate::coordinator::partition::{AllocId, PartitionManager};
 use crate::coordinator::queue::TaskQueue;
 use crate::mem::{MemSystem, MemUpdate};
 use crate::sim::activity::Activity;
+use crate::sim::dataflow::ArrayGeometry;
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 
 /// Execution details of an in-flight layer, keyed by its allocation.
@@ -76,12 +77,12 @@ pub struct Engine<'p> {
 const MAX_IDLE_WAKES: u32 = 1_000;
 
 impl<'p> Engine<'p> {
-    /// An engine over `pool` on an array `cols` columns wide.
-    pub fn new(pool: &'p WorkloadPool, cols: u64) -> Engine<'p> {
+    /// An engine over `pool` on an array of the given geometry.
+    pub fn new(pool: &'p WorkloadPool, geom: ArrayGeometry) -> Engine<'p> {
         Engine {
             pool,
             queue: TaskQueue::new(pool),
-            partitions: PartitionManager::new(cols),
+            partitions: PartitionManager::new(geom),
             events: BinaryHeap::new(),
             pending: BTreeMap::new(),
             deadlines: Vec::new(),
@@ -101,9 +102,13 @@ impl<'p> Engine<'p> {
     }
 
     /// Convenience: run `pool` under `sched` and collect [`RunMetrics`].
-    pub fn execute(pool: &WorkloadPool, cols: u64, sched: &mut dyn Scheduler) -> RunMetrics {
+    pub fn execute(
+        pool: &WorkloadPool,
+        geom: ArrayGeometry,
+        sched: &mut dyn Scheduler,
+    ) -> RunMetrics {
         let mut metrics = RunMetrics::default();
-        Engine::new(pool, cols).run(sched, &mut metrics);
+        Engine::new(pool, geom).run(sched, &mut metrics);
         metrics
     }
 
@@ -222,7 +227,7 @@ impl<'p> Engine<'p> {
                     }
                     None => None,
                 };
-                let slice = self.partitions.slice_of(alloc).expect("completion of live alloc");
+                let tile = self.partitions.tile_of(alloc).expect("completion of live alloc");
                 self.partitions.free(alloc);
                 self.queue.mark_done(dnn, layer);
                 let pend = self.pending.remove(&alloc).expect("pending entry for live alloc");
@@ -233,7 +238,7 @@ impl<'p> Engine<'p> {
                     dnn_name: self.pool.dnns[dnn].name.clone(),
                     layer,
                     layer_name: l.name.clone(),
-                    slice,
+                    tile,
                     t_start: pend.t_start,
                     t_end: t,
                     activity: pend.activity,
@@ -281,18 +286,18 @@ impl<'p> Engine<'p> {
             self.idle_wakes = 0; // progress: the livelock detector restarts
         }
         for a in allocs {
-            let (alloc, slice) = self.partitions.allocate_at(a.slice).unwrap_or_else(|| {
+            let (alloc, tile) = self.partitions.allocate_at(a.tile).unwrap_or_else(|| {
                 panic!(
-                    "policy `{}` allocated unavailable slice {:?} at cycle {}",
+                    "policy `{}` allocated unavailable tile {:?} at cycle {}",
                     sched.name(),
-                    a.slice,
+                    a.tile,
                     self.now
                 )
             });
             self.queue.mark_running(a.dnn, a.layer);
             let coresident = self.partitions.allocated_count() as u64;
-            let exec = sched.exec(&self.state(), a.dnn, a.layer, slice, coresident);
-            obs.on_dispatch(self.now, a.dnn, a.layer, slice);
+            let exec = sched.exec(&self.state(), a.dnn, a.layer, tile, coresident);
+            obs.on_dispatch(self.now, a.dnn, a.layer, tile);
             if let Some(mem) = self.mem.as_mut() {
                 // Shared memory hierarchy: `exec.cycles` is the compute
                 // path; the mem system grants banks, re-prices the DRAM
@@ -301,7 +306,7 @@ impl<'p> Engine<'p> {
                 // completion — posted via the update, alongside any
                 // co-runner completions it rescaled.
                 let gemm = self.pool.dnns[a.dnn].layers[a.layer].shape.gemm();
-                let (activity, upd) = mem.admit(self.now, alloc, a.dnn, gemm, slice, exec.cycles);
+                let (activity, upd) = mem.admit(self.now, alloc, a.dnn, gemm, tile, exec.cycles);
                 self.pending.insert(
                     alloc,
                     Pending { dnn: a.dnn, layer: a.layer, t_start: self.now, activity },
@@ -351,8 +356,7 @@ impl<'p> Engine<'p> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::dataflow::ArrayGeometry;
-    use crate::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
+    use crate::sim::partitioned::{tile_layer_timing, FeedPolicy, Tile};
     use crate::sim_core::{Allocation, LayerExec};
     use crate::workloads::dnng::{Dnn, Layer};
     use crate::workloads::shapes::{LayerKind, LayerShape};
@@ -417,11 +421,7 @@ mod tests {
                 .iter()
                 .min_by_key(|r| (r.dnn, r.layer))
                 .map(|r| {
-                    vec![Allocation {
-                        dnn: r.dnn,
-                        layer: r.layer,
-                        slice: PartitionSlice::full(GEOM),
-                    }]
+                    vec![Allocation { dnn: r.dnn, layer: r.layer, tile: Tile::full(GEOM) }]
                 })
                 .unwrap_or_default()
         }
@@ -430,11 +430,11 @@ mod tests {
             s: &SystemState<'_>,
             dnn: DnnId,
             layer: LayerId,
-            slice: PartitionSlice,
+            tile: Tile,
             _coresident: u64,
         ) -> LayerExec {
             let gemm = s.pool.dnns[dnn].layers[layer].shape.gemm();
-            let t = slice_layer_timing(GEOM, gemm, slice, FeedPolicy::Independent, &Default::default());
+            let t = tile_layer_timing(GEOM, gemm, tile, FeedPolicy::Independent, &Default::default());
             LayerExec { cycles: t.cycles, activity: t.activity }
         }
         fn wake_after(&mut self, _s: &SystemState<'_>) -> Option<u64> {
@@ -451,7 +451,7 @@ mod tests {
     fn engine_runs_every_layer_once_and_fires_hooks() {
         let p = pool(&[0, 5_000]);
         let mut sched = FullArrayFifo::new();
-        let m = Engine::execute(&p, GEOM.cols, &mut sched);
+        let m = Engine::execute(&p, GEOM, &mut sched);
         assert_eq!(m.dispatches.len(), 4);
         assert_eq!(sched.arrivals_seen, 2);
         assert_eq!(sched.completions_seen, 4);
@@ -477,7 +477,7 @@ mod tests {
         // deadline far beyond the makespan (met, reported in the drain).
         let mut sched = FullArrayFifo::new();
         let mut tally = Tally::default();
-        Engine::new(&p, GEOM.cols)
+        Engine::new(&p, GEOM)
             .with_deadlines(vec![(0, 1), (0, u64::MAX)])
             .run(&mut sched, &mut tally);
         assert_eq!(tally.0.len(), 2);
@@ -501,13 +501,13 @@ mod tests {
                 _s: &SystemState<'_>,
                 _d: DnnId,
                 _l: LayerId,
-                _sl: PartitionSlice,
+                _tl: Tile,
                 _c: u64,
             ) -> LayerExec {
                 unreachable!()
             }
         }
-        Engine::execute(&pool(&[0]), GEOM.cols, &mut Never);
+        Engine::execute(&pool(&[0]), GEOM, &mut Never);
     }
 
     #[test]
@@ -542,16 +542,16 @@ mod tests {
                 s: &SystemState<'_>,
                 dnn: DnnId,
                 layer: LayerId,
-                slice: PartitionSlice,
+                tile: Tile,
                 coresident: u64,
             ) -> LayerExec {
-                self.inner.exec(s, dnn, layer, slice, coresident)
+                self.inner.exec(s, dnn, layer, tile, coresident)
             }
         }
         let p = pool(&[0]);
         let mut sched = DeferUntilDeadline { inner: FullArrayFifo::new(), released: false };
         let mut m = RunMetrics::default();
-        Engine::new(&p, GEOM.cols).with_deadlines(vec![(0, 5_000)]).run(&mut sched, &mut m);
+        Engine::new(&p, GEOM).with_deadlines(vec![(0, 5_000)]).run(&mut sched, &mut m);
         assert_eq!(m.dispatches.len(), 2);
         assert_eq!(m.dispatches[0].t_start, 5_000, "release takes effect at deadline time");
     }
@@ -575,7 +575,7 @@ mod tests {
                 _s: &SystemState<'_>,
                 _d: DnnId,
                 _l: LayerId,
-                _sl: PartitionSlice,
+                _tl: Tile,
                 _c: u64,
             ) -> LayerExec {
                 unreachable!()
@@ -584,11 +584,11 @@ mod tests {
                 Some(100)
             }
         }
-        Engine::execute(&pool(&[0]), GEOM.cols, &mut Spinner);
+        Engine::execute(&pool(&[0]), GEOM, &mut Spinner);
     }
 
     #[test]
-    #[should_panic(expected = "unavailable slice")]
+    #[should_panic(expected = "unavailable tile")]
     fn overlapping_allocation_panics() {
         struct DoubleBook;
         impl Scheduler for DoubleBook {
@@ -603,7 +603,7 @@ mod tests {
                     .map(|r| Allocation {
                         dnn: r.dnn,
                         layer: r.layer,
-                        slice: PartitionSlice::new(0, 64),
+                        tile: Tile::full_height(GEOM, 0, 64),
                     })
                     .collect()
             }
@@ -612,12 +612,12 @@ mod tests {
                 _s: &SystemState<'_>,
                 _d: DnnId,
                 _l: LayerId,
-                _sl: PartitionSlice,
+                _tl: Tile,
                 _c: u64,
             ) -> LayerExec {
                 LayerExec { cycles: 100, activity: Activity::default() }
             }
         }
-        Engine::execute(&pool(&[0, 0]), GEOM.cols, &mut DoubleBook);
+        Engine::execute(&pool(&[0, 0]), GEOM, &mut DoubleBook);
     }
 }

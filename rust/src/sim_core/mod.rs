@@ -21,8 +21,8 @@
 //!   a policy maintain internal state; [`Scheduler::plan`] maps the
 //!   observable [`SystemState`] to concrete [`Allocation`]s; and
 //!   [`Scheduler::exec`] prices one layer on its
-//!   [`PartitionSlice`](crate::sim::partitioned::PartitionSlice) (this is
-//!   where [`slice_layer_timing`](crate::sim::partitioned::slice_layer_timing)
+//!   [`Tile`](crate::sim::partitioned::Tile) (this is where
+//!   [`tile_layer_timing`](crate::sim::partitioned::tile_layer_timing)
 //!   feeds event durations).
 //! - [`Observer`] — metrics collection, decoupled from both policy and
 //!   clock.  [`RunMetrics`](crate::coordinator::metrics::RunMetrics)

@@ -2,7 +2,7 @@
 
 use crate::coordinator::metrics::{DispatchRecord, RunMetrics};
 use crate::mem::MemStats;
-use crate::sim::partitioned::PartitionSlice;
+use crate::sim::partitioned::Tile;
 use crate::workloads::dnng::{DnnId, LayerId};
 
 /// Passive listener attached to an [`Engine`](super::Engine) run.
@@ -12,10 +12,10 @@ use crate::workloads::dnng::{DnnId, LayerId};
 /// metrics comparable across policies: there is exactly one place that
 /// turns events into numbers.
 pub trait Observer {
-    /// A layer was dispatched onto `slice` at cycle `t`.
-    fn on_dispatch(&mut self, _t: u64, _dnn: DnnId, _layer: LayerId, _slice: PartitionSlice) {}
+    /// A layer was dispatched onto `tile` at cycle `t`.
+    fn on_dispatch(&mut self, _t: u64, _dnn: DnnId, _layer: LayerId, _tile: Tile) {}
 
-    /// A layer retired; `rec` is the full dispatch record (slice, start,
+    /// A layer retired; `rec` is the full dispatch record (tile, start,
     /// end, activity).
     fn on_layer_complete(&mut self, _rec: &DispatchRecord) {}
 

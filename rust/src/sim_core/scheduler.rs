@@ -4,13 +4,13 @@ use crate::coordinator::partition::PartitionManager;
 use crate::coordinator::queue::TaskQueue;
 use crate::mem::{MemFeedback, MemSpec};
 use crate::sim::activity::Activity;
-use crate::sim::partitioned::PartitionSlice;
+use crate::sim::partitioned::Tile;
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 
 /// Read-only view of the world a policy decides over: the current cycle,
 /// the workload pool, layer progress (ready set, per-DNN completion), the
-/// live column tiling, and — when the shared memory hierarchy is enabled
-/// — the arbiter's per-tenant feedback.
+/// live rectangle tiling, and — when the shared memory hierarchy is
+/// enabled — the arbiter's per-tenant feedback.
 ///
 /// A policy that needs to try out allocations before committing (the
 /// dynamic policy's heaviest-first carving does) clones `partitions` and
@@ -26,16 +26,17 @@ pub struct SystemState<'e> {
     pub mem: Option<&'e MemFeedback>,
 }
 
-/// One scheduling decision: run `(dnn, layer)` on `slice` starting now.
+/// One scheduling decision: run `(dnn, layer)` on `tile` starting now.
 ///
-/// The slice must lie inside a currently-free region — the engine carves
+/// The tile must lie inside a currently-free region — the engine carves
 /// it with [`PartitionManager::allocate_at`] and panics on overlap, so a
-/// buggy policy fails loudly instead of silently double-booking columns.
+/// buggy policy fails loudly instead of silently double-booking PEs.
+/// Columns-mode policies always propose full-height tiles.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Allocation {
     pub dnn: DnnId,
     pub layer: LayerId,
-    pub slice: PartitionSlice,
+    pub tile: Tile,
 }
 
 /// Execution price of one layer on one slice: how long the
@@ -112,7 +113,7 @@ pub trait Scheduler {
         state: &SystemState<'_>,
         dnn: DnnId,
         layer: LayerId,
-        slice: PartitionSlice,
+        tile: Tile,
         coresident: u64,
     ) -> LayerExec;
 

@@ -29,7 +29,9 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::baseline::SequentialBaseline;
 use crate::coordinator::scenario::{Scenario, ScenarioOutcome, ScenarioSpec};
-use crate::coordinator::scheduler::{AllocPolicy, DynamicScheduler, FeedModel, SchedulerConfig};
+use crate::coordinator::scheduler::{
+    AllocPolicy, DynamicScheduler, FeedModel, PartitionMode, SchedulerConfig,
+};
 use crate::mem::{ArbitrationMode, MemConfig, MemStats};
 use crate::sim::dataflow::ArrayGeometry;
 use crate::workloads::dnng::Dnn;
@@ -50,8 +52,13 @@ pub struct SweepGrid {
     pub rates: Vec<f64>,
     pub policies: Vec<AllocPolicy>,
     pub feeds: Vec<FeedModel>,
-    /// Square array sides; empty = inherit the base config's geometry.
-    pub geoms: Vec<u64>,
+    /// Array geometries (`HxW`, or `N` = square); empty = inherit the
+    /// base config's geometry.
+    pub geoms: Vec<ArrayGeometry>,
+    /// Partition-mode axis (`columns` / `2d`); empty = inherit the base
+    /// config's mode (so the report carries no mode fields and stays
+    /// byte-identical to the pre-2D sweep).
+    pub modes: Vec<PartitionMode>,
     /// Requests per scenario (DNN instances round-robined over the mix).
     pub requests: usize,
     /// Deadline slack factor; `0` disables deadlines.
@@ -82,6 +89,7 @@ impl Default for SweepGrid {
             policies: vec![AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare],
             feeds: vec![FeedModel::Independent, FeedModel::Interleaved],
             geoms: Vec::new(),
+            modes: Vec::new(),
             requests: 12,
             qos_slack: 3.0,
             bursty: None,
@@ -114,12 +122,15 @@ pub struct SweepPoint {
     pub mean_interarrival: f64,
     pub policy: AllocPolicy,
     pub feed: FeedModel,
-    pub cols: u64,
+    pub geom: ArrayGeometry,
+    /// Partition mode this point runs under (the base config's when the
+    /// grid has no mode axis).
+    pub mode: PartitionMode,
     /// `(interface words/cycle, arbitration)` when this point runs under
     /// the shared memory hierarchy; `None` inherits the base config.
     pub mem: Option<(f64, ArbitrationMode)>,
-    /// Scenario seed — shared across policy/feed/geometry/mem so every
-    /// contender in a (mix, rate) cell sees the same arrival trace.
+    /// Scenario seed — shared across policy/feed/geometry/mode/mem so
+    /// every contender in a (mix, rate) cell sees the same arrival trace.
     pub scenario_seed: u64,
 }
 
@@ -156,10 +167,12 @@ pub struct MemSummary {
 }
 
 /// Expand a grid into its points (row-major over mix, rate, policy, feed,
-/// geometry — the JSON/table row order).
+/// geometry, partition mode — the JSON/table row order).
 pub fn expand(grid: &SweepGrid, base: &SchedulerConfig) -> Vec<SweepPoint> {
-    let geoms: Vec<u64> =
-        if grid.geoms.is_empty() { vec![base.geom.cols] } else { grid.geoms.clone() };
+    let geoms: Vec<ArrayGeometry> =
+        if grid.geoms.is_empty() { vec![base.geom] } else { grid.geoms.clone() };
+    let modes: Vec<PartitionMode> =
+        if grid.modes.is_empty() { vec![base.partition_mode] } else { grid.modes.clone() };
     // The contention axis: no bandwidths = one inherit-the-base point.
     let mems: Vec<Option<(f64, ArbitrationMode)>> = if grid.bandwidths.is_empty() {
         vec![None]
@@ -179,18 +192,21 @@ pub fn expand(grid: &SweepGrid, base: &SchedulerConfig) -> Vec<SweepPoint> {
                 .wrapping_add((ri as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03));
             for &policy in &grid.policies {
                 for &feed in &grid.feeds {
-                    for &cols in &geoms {
-                        for &mem in &mems {
-                            points.push(SweepPoint {
-                                index: points.len(),
-                                mix: mix.clone(),
-                                mean_interarrival: rate,
-                                policy,
-                                feed,
-                                cols,
-                                mem,
-                                scenario_seed,
-                            });
+                    for &geom in &geoms {
+                        for &mode in &modes {
+                            for &mem in &mems {
+                                points.push(SweepPoint {
+                                    index: points.len(),
+                                    mix: mix.clone(),
+                                    mean_interarrival: rate,
+                                    policy,
+                                    feed,
+                                    geom,
+                                    mode,
+                                    mem,
+                                    scenario_seed,
+                                });
+                            }
                         }
                     }
                 }
@@ -221,10 +237,12 @@ fn run_point(
     base: &SchedulerConfig,
     templates: &[Dnn],
 ) -> SweepRow {
-    let cols = point.cols;
+    let geom = point.geom;
     let mut cfg = SchedulerConfig {
-        geom: ArrayGeometry::new(cols, cols),
-        min_width: (cols / 8).max(1).min(base.min_width.max(1)),
+        geom,
+        min_width: (geom.cols / 8).max(1).min(base.min_width.max(1)),
+        min_rows: (geom.rows / 8).max(1).min(base.min_rows.max(1)),
+        partition_mode: point.mode,
         feed_model: point.feed,
         alloc_policy: point.policy,
         ..base.clone()
@@ -253,8 +271,8 @@ fn run_point(
         qos_slack: (grid.qos_slack > 0.0).then_some(grid.qos_slack),
     };
     let scenario = Scenario::generate(templates, &spec, &cfg);
-    let (dyn_obs, outcome) = scenario.run(&mut DynamicScheduler::new(cfg.clone()), cols);
-    let (seq_obs, seq_outcome) = scenario.run(&mut SequentialBaseline::new(cfg.clone()), cols);
+    let (dyn_obs, outcome) = scenario.run(&mut DynamicScheduler::new(cfg.clone()), geom);
+    let (seq_obs, seq_outcome) = scenario.run(&mut SequentialBaseline::new(cfg.clone()), geom);
     let (dynamic, sequential) = (dyn_obs.metrics, seq_obs.metrics);
     let mem = cfg.mem.map(|m| MemSummary {
         words_per_cycle: m.dram.words_per_cycle,
@@ -270,7 +288,7 @@ fn run_point(
         seq_utilization: sequential.utilization(cfg.geom),
         outcome,
         seq_outcome,
-        occupancy: dynamic.occupancy_timeline(cols, OCCUPANCY_BUCKETS),
+        occupancy: dynamic.occupancy_timeline(geom, OCCUPANCY_BUCKETS),
         mem,
     }
 }
@@ -337,8 +355,9 @@ mod tests {
         for (i, p) in points.iter().enumerate() {
             assert_eq!(p.index, i);
         }
-        // Geometry inherited from the base config.
-        assert!(points.iter().all(|p| p.cols == 128));
+        // Geometry and mode inherited from the base config.
+        assert!(points.iter().all(|p| p.geom == ArrayGeometry::new(128, 128)));
+        assert!(points.iter().all(|p| p.mode == PartitionMode::Columns));
     }
 
     #[test]
@@ -364,13 +383,29 @@ mod tests {
             rates: vec![0.0],
             policies: vec![AllocPolicy::WidestToHeaviest],
             feeds: vec![FeedModel::Independent],
-            geoms: vec![64, 128],
+            geoms: vec![ArrayGeometry::new(64, 64), ArrayGeometry::new(64, 256)],
             ..Default::default()
         };
         let points = expand(&grid, &SchedulerConfig::default());
         assert_eq!(points.len(), 2);
-        assert_eq!(points[0].cols, 64);
-        assert_eq!(points[1].cols, 128);
+        assert_eq!(points[0].geom, ArrayGeometry::new(64, 64));
+        assert_eq!(points[1].geom, ArrayGeometry::new(64, 256), "HxW geometries expand too");
+    }
+
+    #[test]
+    fn mode_axis_expands() {
+        let grid = SweepGrid {
+            mixes: vec!["light".into()],
+            rates: vec![0.0],
+            policies: vec![AllocPolicy::WidestToHeaviest],
+            feeds: vec![FeedModel::Independent],
+            modes: vec![PartitionMode::Columns, PartitionMode::TwoD],
+            ..Default::default()
+        };
+        let points = expand(&grid, &SchedulerConfig::default());
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].mode, PartitionMode::Columns);
+        assert_eq!(points[1].mode, PartitionMode::TwoD);
     }
 
     #[test]
@@ -380,7 +415,7 @@ mod tests {
             rates: vec![0.0],
             policies: vec![AllocPolicy::WidestToHeaviest],
             feeds: vec![FeedModel::Independent],
-            geoms: vec![128],
+            geoms: vec![ArrayGeometry::new(128, 128)],
             bandwidths: vec![8.0, 64.0],
             arbitrations: vec![ArbitrationMode::FairShare, ArbitrationMode::StrictPriority],
             ..Default::default()
@@ -401,7 +436,7 @@ mod tests {
             rates: vec![0.0],
             policies: vec![AllocPolicy::WidestToHeaviest, AllocPolicy::MemAware],
             feeds: vec![FeedModel::Independent],
-            geoms: vec![128],
+            geoms: vec![ArrayGeometry::new(128, 128)],
             requests: 4,
             bandwidths: vec![4.0],
             ..Default::default()
@@ -434,7 +469,7 @@ mod tests {
             rates: vec![0.0, 50_000.0],
             policies: vec![AllocPolicy::WidestToHeaviest],
             feeds: vec![FeedModel::Independent],
-            geoms: vec![128],
+            geoms: vec![ArrayGeometry::new(128, 128)],
             requests: 4,
             ..Default::default()
         };

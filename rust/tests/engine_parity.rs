@@ -22,10 +22,12 @@ use mtsa::coordinator::multi_array::MultiArrayBank;
 use mtsa::coordinator::partition::{AllocId, PartitionManager};
 use mtsa::coordinator::queue::TaskQueue;
 use mtsa::coordinator::scenario::{Scenario, ScenarioSpec};
-use mtsa::coordinator::scheduler::{AllocPolicy, DynamicScheduler, FeedModel, SchedulerConfig};
+use mtsa::coordinator::scheduler::{
+    AllocPolicy, DynamicScheduler, FeedModel, PartitionMode, SchedulerConfig,
+};
 use mtsa::coordinator::static_part::StaticPartitioning;
 use mtsa::sim::dram::DramConfig;
-use mtsa::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
+use mtsa::sim::partitioned::{tile_layer_timing, FeedPolicy, Tile};
 use mtsa::sim_core::{Allocation, Engine, LayerExec, Scheduler, SystemState};
 use mtsa::util::prop;
 use mtsa::workloads::dnng::{DnnId, LayerId, WorkloadPool};
@@ -69,7 +71,7 @@ fn legacy_layer_cycles(
     pool: &WorkloadPool,
     dnn: DnnId,
     layer: LayerId,
-    slice: PartitionSlice,
+    tile: Tile,
     coresident: u64,
 ) -> u64 {
     let gemm = pool.dnns[dnn].layers[layer].shape.gemm();
@@ -80,7 +82,7 @@ fn legacy_layer_cycles(
             slot: coresident.saturating_sub(1),
         },
     };
-    let t = slice_layer_timing(cfg.geom, gemm, slice, policy, &cfg.buffers);
+    let t = tile_layer_timing(cfg.geom, gemm, tile, policy, &cfg.buffers);
     match &cfg.dram {
         Some(d) => d.bound_cycles(t.cycles, &t.activity),
         None => t.cycles,
@@ -90,7 +92,7 @@ fn legacy_layer_cycles(
 /// Pre-refactor `DynamicScheduler::run`, verbatim.
 fn legacy_dynamic_run(cfg: &SchedulerConfig, pool: &WorkloadPool) -> RunMetrics {
     let mut queue = TaskQueue::new(pool);
-    let mut pm = PartitionManager::new(cfg.geom.cols);
+    let mut pm = PartitionManager::new(cfg.geom);
     let mut metrics = RunMetrics::default();
     let mut events: BinaryHeap<Reverse<Completion>> = BinaryHeap::new();
     let mut now = 0u64;
@@ -109,9 +111,9 @@ fn legacy_dynamic_run(cfg: &SchedulerConfig, pool: &WorkloadPool) -> RunMetrics 
                 let demand = ceil_pow2(m_cols).clamp(cfg.min_width, cfg.geom.cols);
 
                 if pm.fully_free() && n_avail == 1 {
-                    let (alloc, slice) = pm.allocate(cfg.geom.cols).expect("full array free");
+                    let (alloc, tile) = pm.allocate(cfg.geom.cols).expect("full array free");
                     queue.mark_running(r.dnn, r.layer);
-                    let cycles = legacy_layer_cycles(cfg, pool, r.dnn, r.layer, slice, 1);
+                    let cycles = legacy_layer_cycles(cfg, pool, r.dnn, r.layer, tile, 1);
                     events.push(Reverse(Completion {
                         t_end: now + cycles,
                         dnn: r.dnn,
@@ -129,7 +131,10 @@ fn legacy_dynamic_run(cfg: &SchedulerConfig, pool: &WorkloadPool) -> RunMetrics 
                 }
                 let width = match cfg.alloc_policy {
                     AllocPolicy::EqualShare => demand.min(target).min(floor_pow2(widest)),
-                    AllocPolicy::WidestToHeaviest => {
+                    // The legacy loop predates the [mem] hierarchy;
+                    // without it the mem-aware policy carves exactly like
+                    // widest (pinned by the mem-disabled parity test).
+                    AllocPolicy::WidestToHeaviest | AllocPolicy::MemAware => {
                         let width = demand.min(floor_pow2(widest));
                         let acceptable = (demand / cfg.patience_divisor).max(cfg.min_width);
                         if width >= acceptable {
@@ -141,12 +146,12 @@ fn legacy_dynamic_run(cfg: &SchedulerConfig, pool: &WorkloadPool) -> RunMetrics 
                         }
                     }
                 };
-                let Some((alloc, slice)) = pm.allocate(width) else { continue };
+                let Some((alloc, tile)) = pm.allocate(width) else { continue };
                 queue.mark_running(r.dnn, r.layer);
                 dispatched_any = true;
 
                 let coresident = pm.allocated_count() as u64;
-                let cycles = legacy_layer_cycles(cfg, pool, r.dnn, r.layer, slice, coresident);
+                let cycles = legacy_layer_cycles(cfg, pool, r.dnn, r.layer, tile, coresident);
                 events.push(Reverse(Completion {
                     t_end: now + cycles,
                     dnn: r.dnn,
@@ -178,14 +183,14 @@ fn legacy_dynamic_run(cfg: &SchedulerConfig, pool: &WorkloadPool) -> RunMetrics 
                         break;
                     }
                     events.pop();
-                    let slice = pm.slice_of(c.alloc).expect("completion of live alloc");
+                    let tile = pm.tile_of(c.alloc).expect("completion of live alloc");
                     pm.free(c.alloc);
                     queue.mark_done(c.dnn, c.layer);
                     let layer = &pool.dnns[c.dnn].layers[c.layer];
-                    let timing = slice_layer_timing(
+                    let timing = tile_layer_timing(
                         cfg.geom,
                         layer.shape.gemm(),
-                        slice,
+                        tile,
                         FeedPolicy::Independent,
                         &cfg.buffers,
                     );
@@ -194,7 +199,7 @@ fn legacy_dynamic_run(cfg: &SchedulerConfig, pool: &WorkloadPool) -> RunMetrics 
                         dnn_name: pool.dnns[c.dnn].name.clone(),
                         layer: c.layer,
                         layer_name: layer.name.clone(),
-                        slice,
+                        tile,
                         t_start: c.t_start,
                         t_end: c.t_end,
                         activity: timing.activity,
@@ -283,7 +288,7 @@ fn golden_tenant_stats_on_arrival_driven_scenario() {
         let scenario = Scenario::generate(&pool.dnns, &spec, &cfg);
         let legacy = legacy_dynamic_run(&cfg, &scenario.pool);
         let (engine_obs, engine_outcome) =
-            scenario.run(&mut DynamicScheduler::new(cfg.clone()), cfg.geom.cols);
+            scenario.run(&mut DynamicScheduler::new(cfg.clone()), cfg.geom);
         assert_metrics_identical(&legacy, &engine_obs.metrics, name);
         let legacy_outcome = scenario.analyze(&legacy);
         assert_eq!(legacy_outcome.tenants, engine_outcome.tenants, "{name}: per-tenant stats");
@@ -337,11 +342,7 @@ impl Scheduler for TestFifo {
             .iter()
             .min_by_key(|r| (r.dnn, r.layer))
             .map(|r| {
-                vec![Allocation {
-                    dnn: r.dnn,
-                    layer: r.layer,
-                    slice: PartitionSlice::new(0, self.0.geom.cols),
-                }]
+                vec![Allocation { dnn: r.dnn, layer: r.layer, tile: Tile::full(self.0.geom) }]
             })
             .unwrap_or_default()
     }
@@ -350,12 +351,12 @@ impl Scheduler for TestFifo {
         s: &SystemState<'_>,
         dnn: DnnId,
         layer: LayerId,
-        slice: PartitionSlice,
+        tile: Tile,
         _coresident: u64,
     ) -> LayerExec {
         let gemm = s.pool.dnns[dnn].layers[layer].shape.gemm();
         let t =
-            slice_layer_timing(self.0.geom, gemm, slice, FeedPolicy::Independent, &self.0.buffers);
+            tile_layer_timing(self.0.geom, gemm, tile, FeedPolicy::Independent, &self.0.buffers);
         LayerExec { cycles: t.cycles, activity: t.activity }
     }
 }
@@ -406,7 +407,7 @@ fn every_scheduler_runs_each_layer_once_in_chain_order() {
         check_contract(&pool, &MultiArrayBank::split_of(&cfg, 2).run(&pool), "multi-array")?;
         check_contract(
             &pool,
-            &Engine::execute(&pool, cfg.geom.cols, &mut TestFifo(cfg.clone())),
+            &Engine::execute(&pool, cfg.geom, &mut TestFifo(cfg.clone())),
             "test-fifo",
         )
     });
@@ -455,7 +456,7 @@ fn mem_disabled_keeps_all_four_policies_bit_identical_to_legacy_era_runs() {
         rates: vec![0.0, 40_000.0],
         policies: vec![AllocPolicy::WidestToHeaviest],
         feeds: vec![FeedModel::Independent],
-        geoms: vec![128],
+        geoms: vec![mtsa::sim::dataflow::ArrayGeometry::new(128, 128)],
         requests: 4,
         ..Default::default()
     };
@@ -475,9 +476,9 @@ fn all_four_policies_run_the_heavy_mix_through_one_engine() {
     let pool = models::by_spec("heavy").unwrap();
     let layers = pool.total_layers();
     let runs = [
-        Engine::execute(&pool, cfg.geom.cols, &mut DynamicScheduler::new(cfg.clone())),
-        Engine::execute(&pool, cfg.geom.cols, &mut SequentialBaseline::new(cfg.clone())),
-        Engine::execute(&pool, cfg.geom.cols, &mut StaticPartitioning::new(cfg.clone())),
+        Engine::execute(&pool, cfg.geom, &mut DynamicScheduler::new(cfg.clone())),
+        Engine::execute(&pool, cfg.geom, &mut SequentialBaseline::new(cfg.clone())),
+        Engine::execute(&pool, cfg.geom, &mut StaticPartitioning::new(cfg.clone())),
         MultiArrayBank::split_of(&cfg, 4).run(&pool),
     ];
     for m in &runs {
@@ -486,4 +487,69 @@ fn all_four_policies_run_the_heavy_mix_through_one_engine() {
     }
     // And the paper's ordering holds: dynamic <= sequential on the mixes.
     assert!(runs[0].makespan <= runs[1].makespan);
+}
+
+// ---------------------------------------------------------------------
+// 2D-fission parity guard: the default `partition.mode = "columns"`
+// must produce byte-identical runs and sweep JSON to the pre-2D system,
+// and the new JSON keys may only appear when 2D mode is actually on.
+// ---------------------------------------------------------------------
+
+#[test]
+fn columns_mode_is_default_and_byte_identical() {
+    for (name, pool) in paper_mixes() {
+        let def_cfg = SchedulerConfig::default();
+        assert_eq!(def_cfg.partition_mode, PartitionMode::Columns, "columns must be the default");
+        let def = DynamicScheduler::new(def_cfg.clone()).run(&pool);
+        let explicit = DynamicScheduler::new(SchedulerConfig {
+            partition_mode: PartitionMode::Columns,
+            ..def_cfg.clone()
+        })
+        .run(&pool);
+        assert_metrics_identical(&def, &explicit, name);
+        // Every columns-mode tile is full-height — the 1D shape exactly.
+        for d in &def.dispatches {
+            assert_eq!(d.tile.row0, 0, "{name}: columns tiles start at row 0");
+            assert_eq!(d.tile.rows, def_cfg.geom.rows, "{name}: columns tiles span all rows");
+        }
+    }
+}
+
+#[test]
+fn columns_mode_sweep_json_carries_no_2d_keys() {
+    let grid = mtsa::sweep::SweepGrid {
+        mixes: vec!["light".into()],
+        rates: vec![0.0, 40_000.0],
+        policies: vec![AllocPolicy::WidestToHeaviest],
+        feeds: vec![FeedModel::Independent],
+        requests: 4,
+        ..Default::default()
+    };
+    let base = SchedulerConfig::default();
+    let default_json =
+        mtsa::report::sweep_json(&grid, &mtsa::sweep::run_sweep(&grid, &base, 2).unwrap())
+            .render();
+    // An explicit columns-only mode axis must not change a byte either.
+    let explicit = mtsa::sweep::SweepGrid {
+        modes: vec![PartitionMode::Columns],
+        ..grid.clone()
+    };
+    let explicit_json =
+        mtsa::report::sweep_json(&explicit, &mtsa::sweep::run_sweep(&explicit, &base, 2).unwrap())
+            .render();
+    assert_eq!(default_json, explicit_json, "explicit columns mode changed the sweep bytes");
+    for key in ["\"partition_mode\"", "\"modes\"", "\"rows\""] {
+        assert!(!default_json.contains(key), "columns-mode sweep JSON leaked {key}");
+    }
+    // The keys DO appear once a 2D point runs — guarding against the
+    // opposite failure (silently dropping the new coordinates).
+    let with_2d = mtsa::sweep::SweepGrid {
+        modes: vec![PartitionMode::Columns, PartitionMode::TwoD],
+        ..grid.clone()
+    };
+    let json_2d =
+        mtsa::report::sweep_json(&with_2d, &mtsa::sweep::run_sweep(&with_2d, &base, 2).unwrap())
+            .render();
+    assert!(json_2d.contains("\"partition_mode\""));
+    assert!(json_2d.contains("\"modes\""));
 }

@@ -54,7 +54,7 @@ fn fig9c_partition_ladder_shape() {
     let g = report::run_group_with_policy(&heavy_pool(), &cfg(), AllocPolicy::EqualShare);
     let ladder = [16u64, 32, 64, 128];
     for d in &g.dynamic.dispatches {
-        assert!(ladder.contains(&d.slice.width), "width {} off-ladder", d.slice.width);
+        assert!(ladder.contains(&d.tile.cols), "width {} off-ladder", d.tile.cols);
     }
     // NCF's narrow layers (M <= 128, mostly <= 64) never need the full array.
     assert!(g.dynamic.partition_widths("NCF").iter().all(|&w| w <= 64));

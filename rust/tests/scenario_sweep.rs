@@ -7,6 +7,7 @@
 
 use mtsa::coordinator::scheduler::{AllocPolicy, FeedModel, SchedulerConfig};
 use mtsa::report;
+use mtsa::sim::dataflow::ArrayGeometry;
 use mtsa::sweep::{expand, run_sweep, SweepGrid};
 use mtsa::util::json::Json;
 
@@ -16,7 +17,7 @@ fn small_grid() -> SweepGrid {
         rates: vec![0.0, 30_000.0],
         policies: vec![AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare],
         feeds: vec![FeedModel::Independent],
-        geoms: vec![128],
+        geoms: vec![ArrayGeometry::new(128, 128)],
         requests: 5,
         qos_slack: 3.0,
         bursty: None,

@@ -6,9 +6,13 @@
 use std::collections::BTreeMap;
 
 use mtsa::coordinator::baseline::SequentialBaseline;
-use mtsa::coordinator::scheduler::{AllocPolicy, DynamicScheduler, FeedModel, SchedulerConfig};
+use mtsa::coordinator::partition::{AllocId, PartitionManager};
+use mtsa::coordinator::scheduler::{
+    AllocPolicy, DynamicScheduler, FeedModel, PartitionMode, SchedulerConfig,
+};
 use mtsa::mem::{ArbitrationMode, BandwidthArbiter, MemConfig, MemUpdate};
 use mtsa::report;
+use mtsa::sim::dataflow::ArrayGeometry;
 use mtsa::sim::dram::DramConfig;
 use mtsa::util::prop;
 use mtsa::workloads::dnng::WorkloadPool;
@@ -17,6 +21,8 @@ use mtsa::workloads::generator::{random_pool, ArrivalProcess, GeneratorCfg};
 fn random_cfg(rng: &mut mtsa::util::rng::Rng) -> SchedulerConfig {
     SchedulerConfig {
         min_width: *rng.choose(&[8u64, 16, 32]),
+        min_rows: *rng.choose(&[8u64, 16, 32]),
+        partition_mode: *rng.choose(&[PartitionMode::Columns, PartitionMode::TwoD]),
         alloc_policy: *rng.choose(&[AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare]),
         feed_model: *rng.choose(&[FeedModel::Independent, FeedModel::Interleaved]),
         patience_divisor: rng.gen_range_inclusive(1, 8),
@@ -51,7 +57,9 @@ fn every_layer_dispatched_exactly_once() {
 
 #[test]
 fn no_spatial_overlap_at_any_time() {
-    // Two concurrently-running layers must occupy disjoint column ranges.
+    // Two concurrently-running layers must occupy disjoint PE rectangles
+    // (disjoint columns in columns mode; 2D mode may instead separate
+    // them by row band).
     prop::check("spatial isolation", 30, |rng| {
         let gcfg = random_gen_cfg(rng);
         let pool = random_pool(rng, &gcfg);
@@ -60,12 +68,10 @@ fn no_spatial_overlap_at_any_time() {
             for b in &m.dispatches[i + 1..] {
                 let time_overlap = a.t_start < b.t_end && b.t_start < a.t_end;
                 if time_overlap {
-                    let cols_overlap =
-                        a.slice.col0 < b.slice.end() && b.slice.col0 < a.slice.end();
                     prop::ensure(
-                        !cols_overlap,
+                        !a.tile.overlaps(&b.tile),
                         &format!(
-                            "{}/{} and {}/{} overlap in time AND columns",
+                            "{}/{} and {}/{} overlap in time AND PEs",
                             a.dnn_name, a.layer_name, b.dnn_name, b.layer_name
                         ),
                     )?;
@@ -110,8 +116,17 @@ fn arrivals_and_width_bounds_respected() {
                 d.t_start >= pool.dnns[d.dnn].arrival_cycles,
                 "dispatch before arrival",
             )?;
-            prop::ensure(d.slice.width >= cfg.min_width, "below min width")?;
-            prop::ensure(d.slice.end() <= cfg.geom.cols, "slice beyond array")?;
+            prop::ensure(d.tile.cols >= cfg.min_width, "below min width")?;
+            prop::ensure(d.tile.col_end() <= cfg.geom.cols, "tile beyond array cols")?;
+            prop::ensure(d.tile.row_end() <= cfg.geom.rows, "tile beyond array rows")?;
+            if cfg.partition_mode == PartitionMode::Columns {
+                prop::ensure(
+                    d.tile.row0 == 0 && d.tile.rows == cfg.geom.rows,
+                    "columns mode must stay full height",
+                )?;
+            } else {
+                prop::ensure(d.tile.rows >= cfg.min_rows, "below min rows")?;
+            }
             prop::ensure(d.t_end > d.t_start, "zero-duration dispatch")?;
         }
         Ok(())
@@ -330,7 +345,7 @@ fn mem_aware_sweep_json_is_thread_count_invariant() {
         rates: vec![0.0, 30_000.0],
         policies: vec![AllocPolicy::MemAware],
         feeds: vec![FeedModel::Independent],
-        geoms: vec![128],
+        geoms: vec![ArrayGeometry::new(128, 128)],
         requests: 4,
         bandwidths: vec![8.0, 64.0],
         arbitrations: vec![ArbitrationMode::FairShare, ArbitrationMode::WeightedByColumns],
@@ -375,5 +390,84 @@ fn metrics_are_internally_consistent() {
             )?;
         }
         Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// 2D partition manager (rust/src/coordinator/partition.rs): the 1D
+// random alloc/free property suite, ported to rectangular tiles.
+// ---------------------------------------------------------------------
+
+#[test]
+fn partition_manager_2d_random_ops_preserve_invariants() {
+    prop::check("2d partition manager invariants", 150, |rng| {
+        let geom = ArrayGeometry::new(
+            *rng.choose(&[16u64, 64, 128]),
+            *rng.choose(&[16u64, 64, 128, 256]),
+        );
+        let mut pm = PartitionManager::new(geom);
+        let mut live: Vec<AllocId> = Vec::new();
+        for _ in 0..64 {
+            if live.is_empty() || rng.gen_bool(0.55) {
+                let h = rng.gen_range_inclusive(1, (geom.rows / 2).max(1));
+                let w = rng.gen_range_inclusive(1, (geom.cols / 2).max(1));
+                // Mix the two allocation paths: best-fit 2D and the
+                // full-height columns carve.
+                let got = if rng.gen_bool(0.7) {
+                    pm.allocate_tile(h, w)
+                } else {
+                    pm.allocate(w)
+                };
+                if let Some((id, t)) = got {
+                    prop::ensure_eq(t.cols, w, "allocated width")?;
+                    live.push(id);
+                }
+            } else {
+                let i = rng.gen_range(live.len() as u64) as usize;
+                pm.free(live.swap_remove(i));
+            }
+            // Tiling, disjointness, canonical merge.
+            pm.check_invariants()?;
+            // PE-count conservation across every alloc/free interleaving.
+            let alloc_pes: u64 = live.iter().map(|&id| pm.tile_of(id).unwrap().pes()).sum();
+            prop::ensure_eq(alloc_pes + pm.free_pes(), geom.pes(), "PE conservation")?;
+        }
+        for id in live {
+            pm.free(id);
+            pm.check_invariants()?;
+        }
+        prop::ensure(pm.fully_free(), "all freed => fully free")
+    });
+}
+
+#[test]
+fn two_d_mode_executes_every_layer_once_like_columns() {
+    // Whatever tile shapes the 2D planner picks, the engine contract is
+    // unchanged: every layer exactly once, and the 2D makespan stays
+    // within the same envelope vs the sequential baseline that the
+    // columns-mode properties enforce.
+    prop::check("2d engine contract", 10, |rng| {
+        let gcfg = GeneratorCfg {
+            num_dnns: rng.gen_range_inclusive(2, 6) as usize,
+            layers_min: 1,
+            layers_max: 6,
+            mean_interarrival: *rng.choose(&[0.0, 20_000.0]),
+            dim_scale: 0.4 + rng.gen_f64() * 0.8,
+        };
+        let pool = random_pool(rng, &gcfg);
+        let cfg = SchedulerConfig {
+            partition_mode: PartitionMode::TwoD,
+            ..SchedulerConfig::default()
+        };
+        let m = DynamicScheduler::new(cfg).run(&pool);
+        prop::ensure_eq(m.dispatches.len(), pool.total_layers(), "dispatch count")?;
+        let seq = SequentialBaseline::new(SchedulerConfig::default()).run(&pool);
+        // Slightly looser envelope than the columns property: 2D tiles
+        // additionally trade K-fold count and row skew, so individual
+        // placements can be marginally worse while the mix still wins.
+        prop::ensure(
+            m.makespan as f64 <= 1.35 * seq.makespan as f64,
+            &format!("2d makespan {} > 1.35x sequential {}", m.makespan, seq.makespan),
+        )
     });
 }
