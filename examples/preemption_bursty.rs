@@ -1,0 +1,121 @@
+//! Fold-boundary preemption vs head-of-line blocking — the pinned
+//! bursty light-over-heavy mix of `docs/preemption.md`.
+//!
+//! One heavy tenant (2 × fc [4000, 1024] × [1024, 64]: 8 K-bands of
+//! 4319 cycles per layer) takes the whole 128×128 array at t = 0; six
+//! light requests (fc [256, 128] × [128, 32], 543 isolated cycles)
+//! burst in at t = 3000..3500, mid-band of the heavy first layer, each
+//! carrying a 6× slack-relative deadline (3258 cycles of budget).
+//!
+//! Without preemption the burst waits out the whole 34552-cycle heavy
+//! layer and misses every deadline.  With `preempt = arrival` the heavy
+//! layer drains at its next band boundary (cycle 4319), keeps the 64
+//! columns its M = 64 demand actually needs, and the burst runs in the
+//! freed half — p99 collapses by >90% and the heavy tenant finishes at
+//! exactly the same cycle.
+//!
+//! ```bash
+//! cargo run --release --example preemption_bursty
+//! ```
+
+use mtsa::coordinator::scenario::{Scenario, ScenarioOutcome, ScenarioSpec};
+use mtsa::coordinator::scheduler::{DynamicScheduler, PreemptMode, SchedulerConfig};
+use mtsa::report;
+use mtsa::util::tablefmt::Table;
+use mtsa::workloads::dnng::{Dnn, Layer};
+use mtsa::workloads::generator::ArrivalProcess;
+use mtsa::workloads::shapes::{LayerKind, LayerShape};
+
+fn fc_chain(name: &str, sr: u64, k: u64, m: u64, n_layers: usize) -> Dnn {
+    let layers = (0..n_layers)
+        .map(|i| Layer::new(&format!("l{i}"), LayerKind::Fc, LayerShape::fc(sr, k, m)))
+        .collect();
+    Dnn::chain(name, layers)
+}
+
+fn scenario(cfg: &SchedulerConfig) -> Scenario {
+    let mut templates = vec![fc_chain("heavy", 4000, 1024, 64, 2)];
+    for _ in 0..6 {
+        templates.push(fc_chain("light", 256, 128, 32, 1));
+    }
+    let spec = ScenarioSpec {
+        name: "bursty-light-over-heavy".to_string(),
+        arrival: ArrivalProcess::Trace(vec![0, 3000, 3100, 3200, 3300, 3400, 3500]),
+        requests: 7,
+        seed: 1,
+        qos_slack: Some(6.0),
+    };
+    Scenario::generate(&templates, &spec, cfg)
+}
+
+fn light(outcome: &ScenarioOutcome) -> &mtsa::coordinator::metrics::TenantStats {
+    outcome.tenants.iter().find(|t| t.tenant == "light").unwrap()
+}
+
+fn main() {
+    let base = SchedulerConfig::default();
+    let sc = scenario(&base);
+
+    let (off_obs, off) = sc.run(&mut DynamicScheduler::new(base.clone()), base.geom);
+    let pre_cfg = SchedulerConfig { preempt: PreemptMode::Arrival, ..base.clone() };
+    let (pre_obs, pre) = sc.run(&mut DynamicScheduler::new(pre_cfg), base.geom);
+
+    println!("bursty light-over-heavy mix on one 128x128 array (deadline slack 6.0):\n");
+    let mut t = Table::new(&["metric", "preempt=off", "preempt=arrival", "saving"]);
+    let (lo, lp) = (light(&off), light(&pre));
+    t.row(&[
+        "light p50 latency (cycles)".into(),
+        format!("{:.0}", lo.p50_latency),
+        format!("{:.0}", lp.p50_latency),
+        format!("{:+.1}%", report::saving_pct(lo.p50_latency, lp.p50_latency)),
+    ]);
+    t.row(&[
+        "light p99 latency (cycles)".into(),
+        format!("{:.0}", lo.p99_latency),
+        format!("{:.0}", lp.p99_latency),
+        format!("{:+.1}%", report::saving_pct(lo.p99_latency, lp.p99_latency)),
+    ]);
+    t.row(&[
+        "light deadline misses".into(),
+        format!("{}/6", lo.misses),
+        format!("{}/6", lp.misses),
+        "".into(),
+    ]);
+    t.row(&[
+        "heavy completion (cycles)".into(),
+        off_obs.metrics.completion["heavy#0"].to_string(),
+        pre_obs.metrics.completion["heavy#0"].to_string(),
+        "".into(),
+    ]);
+    t.row(&[
+        "makespan (cycles)".into(),
+        off_obs.metrics.makespan.to_string(),
+        pre_obs.metrics.makespan.to_string(),
+        "".into(),
+    ]);
+    println!("{}", t.render());
+
+    println!(
+        "preemptions: {} (replayed folds {}, wasted refill cycles {})",
+        pre_obs.metrics.preemptions,
+        pre_obs.metrics.replayed_folds,
+        pre_obs.metrics.wasted_refill_cycles,
+    );
+    println!(
+        "heavy tile trace: {:?} — the 128->64 reshape at the first band boundary",
+        pre_obs.metrics.partition_trace("heavy#0"),
+    );
+
+    assert!(
+        lp.p99_latency * 10.0 < lo.p99_latency,
+        "preemption must collapse light p99 ({:.0} vs {:.0})",
+        lp.p99_latency,
+        lo.p99_latency
+    );
+    assert!(lp.misses < lo.misses, "preemption must cut the miss count");
+    assert!(pre.miss_rate() < off.miss_rate());
+    assert_eq!(
+        pre_obs.metrics.completion["heavy#0"], off_obs.metrics.completion["heavy#0"],
+        "the reshape is free for the heavy tenant on this mix"
+    );
+}

@@ -6,7 +6,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::args::ParsedArgs;
 use crate::config::{ArrivalKind, RunConfig};
-use crate::coordinator::scheduler::{AllocPolicy, FeedModel, PartitionMode};
+use crate::coordinator::scheduler::{AllocPolicy, FeedModel, PartitionMode, PreemptMode};
 use crate::coordinator::static_part::StaticPartitioning;
 use crate::mem::{ArbitrationMode, MemConfig};
 use crate::report;
@@ -24,11 +24,13 @@ USAGE:
   mtsa zoo                               print the Table-1 workload zoo
   mtsa run <heavy|light|model,...>       run dynamic vs sequential
        [--config <file>] [--policy widest|equal|mem-aware] [--mem]
-       [--mode columns|2d] [--static] [--detail]
+       [--mode columns|2d] [--preempt off|arrival|deadline]
+       [--static] [--detail]
   mtsa sweep                             parallel scenario sweep (SLA report)
        [--config <file>] [--mixes heavy,light] [--rates 0,20000,100000]
        [--policies widest,equal,mem-aware] [--feeds independent,interleaved]
        [--geoms 128,64x256] [--modes columns,2d]
+       [--preempts off,arrival,deadline]
        [--bandwidths 8,32,128] [--arbitrations fair,weighted,priority]
        [--requests 12] [--slack 3.0] [--burst <size>]
        [--seed 42] [--threads N] [--json <file>]
@@ -87,7 +89,7 @@ fn load_config(args: &ParsedArgs) -> Result<RunConfig> {
 }
 
 fn cmd_run(args: &ParsedArgs) -> Result<()> {
-    args.ensure_known(&["config", "policy", "mode"], &["static", "detail", "mem"])?;
+    args.ensure_known(&["config", "policy", "mode", "preempt"], &["static", "detail", "mem"])?;
     let spec = args.positionals.first().map(String::as_str).unwrap_or("heavy");
     let pool = resolve_pool(spec)?;
     let mut cfg = load_config(args)?;
@@ -98,6 +100,9 @@ fn cmd_run(args: &ParsedArgs) -> Result<()> {
     if let Some(m) = args.opt("mode") {
         cfg.scheduler.partition_mode =
             m.parse::<PartitionMode>().map_err(|e| anyhow!("--mode: {e}"))?;
+    }
+    if let Some(p) = args.opt("preempt") {
+        cfg.scheduler.preempt = p.parse::<PreemptMode>().map_err(|e| anyhow!("--preempt: {e}"))?;
     }
     if args.has("mem") && cfg.scheduler.mem.is_none() {
         // Shorthand: shared memory hierarchy at defaults ([mem] config
@@ -148,6 +153,17 @@ fn cmd_run(args: &ParsedArgs) -> Result<()> {
         "".into(),
     ]);
     println!("{}", t.render());
+
+    if cfg.scheduler.preempt != PreemptMode::Off {
+        println!(
+            "preemption ({}): {} fold-boundary preemption(s), {} fold(s) replayed, \
+             {} wasted refill cycle(s)",
+            cfg.scheduler.preempt.tag(),
+            g.dynamic.preemptions,
+            g.dynamic.replayed_folds,
+            g.dynamic.wasted_refill_cycles,
+        );
+    }
 
     if cfg.scheduler.mem.is_some() {
         println!("shared memory hierarchy (dynamic run):");
@@ -201,9 +217,9 @@ where
 fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
     args.ensure_known(
         &[
-            "config", "mixes", "rates", "policies", "feeds", "geoms", "modes", "bandwidths",
-            "arbitrations", "requests", "slack", "burst", "burst-within", "seed", "threads",
-            "json",
+            "config", "mixes", "rates", "policies", "feeds", "geoms", "modes", "preempts",
+            "bandwidths", "arbitrations", "requests", "slack", "burst", "burst-within", "seed",
+            "threads", "json",
         ],
         &[],
     )?;
@@ -250,6 +266,9 @@ fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
     }
     if let Some(v) = args.opt("modes") {
         grid.modes = parse_list::<PartitionMode>(v, "modes")?;
+    }
+    if let Some(v) = args.opt("preempts") {
+        grid.preempts = parse_list::<PreemptMode>(v, "preempts")?;
     }
     if let Some(v) = args.opt("bandwidths") {
         grid.bandwidths = parse_list::<f64>(v, "bandwidths")?;
@@ -482,7 +501,9 @@ mod tests {
             vec!["sweep".to_string(), "--geoms".into(), "64x".into()],
             vec!["sweep".to_string(), "--geoms".into(), "4".into()],
             vec!["sweep".to_string(), "--modes".into(), "diagonal".into()],
+            vec!["sweep".to_string(), "--preempts".into(), "sometimes".into()],
             vec!["run".to_string(), "NCF".into(), "--mode".into(), "psychic".into()],
+            vec!["run".to_string(), "NCF".into(), "--preempt".into(), "sometimes".into()],
             vec!["sweep".to_string(), "--arbitrations".into(), "fair".into()],
             vec![
                 "sweep".to_string(),
@@ -547,6 +568,52 @@ mod tests {
         let with_rows = points.iter().filter(|p| p.get("rows").is_some()).count();
         assert_eq!(with_rows, 2);
         assert!(parsed.get("modes").is_some());
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn run_with_preempt_flag() {
+        let args = ParsedArgs::parse(&[
+            "run".into(),
+            "NCF,HandwritingLSTM".into(),
+            "--preempt".into(),
+            "arrival".into(),
+        ])
+        .unwrap();
+        dispatch(&args).unwrap();
+    }
+
+    #[test]
+    fn sweep_preempt_axis_emits_json_keys_only_when_on() {
+        let out = std::env::temp_dir().join(format!("mtsa-presweep-{}.json", std::process::id()));
+        let args = ParsedArgs::parse(&[
+            "sweep".into(),
+            "--mixes".into(),
+            "light".into(),
+            "--rates".into(),
+            "30000".into(),
+            "--policies".into(),
+            "widest".into(),
+            "--feeds".into(),
+            "independent".into(),
+            "--preempts".into(),
+            "off,arrival".into(),
+            "--requests".into(),
+            "4".into(),
+            "--threads".into(),
+            "2".into(),
+            "--json".into(),
+            out.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        dispatch(&args).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let points = parsed.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 2);
+        let with_keys = points.iter().filter(|p| p.get("preempt").is_some()).count();
+        assert_eq!(with_keys, 1, "only the arrival point carries preempt keys");
+        assert!(parsed.get("preempts").is_some());
         let _ = std::fs::remove_file(&out);
     }
 

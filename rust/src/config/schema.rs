@@ -23,6 +23,8 @@
 //! [partition]              # 2D architecture fission, see docs/fission.md
 //! mode = "columns"         # columns (paper) | 2d (rectangular tiles)
 //! min_rows = 16            # shortest tile 2d mode will create
+//! preempt = "off"          # off | arrival | deadline — fold-boundary
+//!                          # drain-and-reshape, see docs/preemption.md
 //!
 //! [dram]
 //! enabled = false
@@ -49,7 +51,9 @@
 use anyhow::{bail, Context, Result};
 
 use super::toml::TomlDoc;
-use crate::coordinator::scheduler::{AllocPolicy, FeedModel, PartitionMode, SchedulerConfig};
+use crate::coordinator::scheduler::{
+    AllocPolicy, FeedModel, PartitionMode, PreemptMode, SchedulerConfig,
+};
 use crate::mem::{ArbitrationMode, MemConfig};
 use crate::util::UnknownTag;
 use crate::energy::components::{EnergyModel, Precision};
@@ -188,10 +192,8 @@ impl RunConfig {
 
         let rows = u64_of("array", "rows").unwrap_or(cfg.scheduler.geom.rows);
         let cols = u64_of("array", "cols").unwrap_or(cfg.scheduler.geom.cols);
-        if rows == 0 || cols == 0 {
-            bail!("array dims must be positive");
-        }
-        cfg.scheduler.geom = ArrayGeometry::new(rows, cols);
+        cfg.scheduler.geom = ArrayGeometry::try_new(rows, cols)
+            .map_err(|e| anyhow::anyhow!("in [array]: {e}"))?;
 
         let b = &mut cfg.scheduler.buffers;
         if let Some(k) = u64_of("buffers", "weight_kib") {
@@ -245,6 +247,9 @@ impl RunConfig {
                 bail!("min_rows must be in 1..=rows");
             }
             cfg.scheduler.min_rows = r;
+        }
+        if let Some(p) = doc.get("partition", "preempt").and_then(|v| v.as_str()) {
+            cfg.scheduler.preempt = p.parse::<PreemptMode>().context("in [partition] preempt")?;
         }
 
         if doc.get("dram", "enabled").and_then(|v| v.as_bool()).unwrap_or(false) {
@@ -396,11 +401,20 @@ mod tests {
             [partition]
             mode = "2d"
             min_rows = 32
+            preempt = "arrival"
             "#,
         )
         .unwrap();
         assert_eq!(cfg.scheduler.partition_mode, PartitionMode::TwoD);
         assert_eq!(cfg.scheduler.min_rows, 32);
+        assert_eq!(cfg.scheduler.preempt, PreemptMode::Arrival);
+        let dl = RunConfig::from_toml("[partition]\npreempt = \"deadline\"").unwrap();
+        assert_eq!(dl.scheduler.preempt, PreemptMode::Deadline);
+        assert_eq!(
+            RunConfig::from_toml("").unwrap().scheduler.preempt,
+            PreemptMode::Off,
+            "preemption is strictly opt-in"
+        );
         // Default: the paper's columns mode, min_rows = rows/8.
         let def = RunConfig::from_toml("").unwrap();
         assert_eq!(def.scheduler.partition_mode, PartitionMode::Columns);
@@ -453,6 +467,7 @@ mod tests {
             "[partition]\nmode = \"diagonal\"",
             "[partition]\nmin_rows = 0",
             "[partition]\nmin_rows = 256",
+            "[partition]\npreempt = \"sometimes\"",
             "[scheduler]\npatience_divisor = 0",
             "[buffers]\ndtype_bytes = 3",
             "[typo]\nx = 1",
@@ -516,6 +531,14 @@ mod tests {
         let e = "fractal".parse::<ArrivalKind>().unwrap_err();
         let msg = e.to_string();
         assert!(msg.contains("batch") && msg.contains("poisson") && msg.contains("bursty"), "{msg}");
+    }
+
+    #[test]
+    fn bad_geometry_error_names_the_offending_value() {
+        let e = RunConfig::from_toml("[array]\nrows = 0\ncols = 8").unwrap_err();
+        assert!(e.to_string().contains("0x8"), "{e}");
+        let e = RunConfig::from_toml("[array]\ncols = 0").unwrap_err();
+        assert!(e.to_string().contains("128x0"), "{e}");
     }
 
     #[test]

@@ -52,9 +52,29 @@ pub struct RunMetrics {
     pub mem: BTreeMap<String, MemStats>,
     /// All tenants pooled ([`RunMetrics::mem`] summed).
     pub mem_total: MemStats,
+    /// Fold-boundary preemptions taken (0 unless a preempting policy
+    /// ran); each adds one extra segment record to `dispatches`.
+    pub preemptions: u64,
+    /// M-folds the preempted remainders replay (partial-band work
+    /// discarded at the boundaries).
+    pub replayed_folds: u64,
+    /// Cycles spent on folds that were later replayed — the total
+    /// refill overhead preemption paid for its latency wins.
+    pub wasted_refill_cycles: u64,
 }
 
 impl RunMetrics {
+    /// Record a preempted segment: the drained `[t_start, boundary)`
+    /// window enters the dispatch log (occupancy/energy accounting see
+    /// it like any other residency) and the preemption counters grow.
+    /// The layer's *final* segment arrives later via
+    /// [`RunMetrics::record_dispatch`] and wins the completion map's max.
+    pub fn record_preempt(&mut self, rec: DispatchRecord, replayed_folds: u64, wasted_cycles: u64) {
+        self.preemptions += 1;
+        self.replayed_folds += replayed_folds;
+        self.wasted_refill_cycles += wasted_cycles;
+        self.record_dispatch(rec);
+    }
     /// Accumulate one layer's memory-side record under its tenant.
     pub fn record_mem(&mut self, tenant: &str, stats: &MemStats) {
         self.mem.entry(tenant.to_string()).or_default().add(stats);
@@ -320,6 +340,23 @@ mod tests {
         // Cross-check against the canonical util::stats definition.
         let pairs = [(250u64, 200u64), (100, 150)];
         assert!((crate::util::stats::deadline_miss_rate(&pairs) - s.miss_rate()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_preempt_counts_segments_and_waste() {
+        let mut m = RunMetrics::default();
+        assert_eq!((m.preemptions, m.replayed_folds, m.wasted_refill_cycles), (0, 0, 0));
+        // A segment drains at cycle 40, the remainder finishes at 100:
+        // the completion map must reflect the FINAL segment.
+        m.record_preempt(rec("a", 0, 128, 0, 40), 2, 15);
+        m.record_dispatch(rec("a", 0, 64, 40, 100));
+        assert_eq!(m.preemptions, 1);
+        assert_eq!(m.replayed_folds, 2);
+        assert_eq!(m.wasted_refill_cycles, 15);
+        assert_eq!(m.completion["a"], 100);
+        assert_eq!(m.start["a"], 0);
+        assert_eq!(m.dispatches.len(), 2, "segment + final record");
+        assert_eq!(m.partition_trace("a"), vec![128, 64], "reshape visible in the trace");
     }
 
     #[test]

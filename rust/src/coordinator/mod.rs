@@ -49,4 +49,4 @@ pub mod static_part;
 pub use metrics::{DispatchRecord, RunMetrics, TenantStats};
 pub use partition::PartitionManager;
 pub use scenario::{Scenario, ScenarioObserver, ScenarioSpec};
-pub use scheduler::{DynamicScheduler, PartitionMode, SchedulerConfig, UnknownTag};
+pub use scheduler::{DynamicScheduler, PartitionMode, PreemptMode, SchedulerConfig, UnknownTag};

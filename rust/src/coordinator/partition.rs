@@ -264,6 +264,53 @@ impl PartitionManager {
         self.sort_regions();
     }
 
+    /// Shrink a live allocation in place to `keep` (a sub-rectangle of
+    /// its current tile), freeing the remainder with the same guillotine
+    /// split [`PartitionManager::allocate_at`] carves with — the reshape
+    /// primitive for preempting schedulers that narrow a running tenant
+    /// at a fold boundary without fully draining it.  Returns the number
+    /// of PEs released (0 when `keep` equals the current tile).
+    ///
+    /// Panics if `id` is unknown or `keep` is not contained in its tile —
+    /// a policy bug, exactly like freeing an unknown allocation.
+    pub fn shrink(&mut self, id: AllocId, keep: Tile) -> u64 {
+        let idx = self
+            .regions
+            .iter()
+            .position(|r| r.owner == Some(id))
+            .unwrap_or_else(|| panic!("shrink of unknown allocation {id}"));
+        let old = self.regions[idx].tile;
+        assert!(
+            old.contains(&keep),
+            "shrink of allocation {id} to {keep:?} outside its tile {old:?}"
+        );
+        if keep == old {
+            return 0;
+        }
+        self.regions[idx].tile = keep;
+        if keep.col0 > old.col0 {
+            let left = Tile::new(old.row0, old.col0, old.rows, keep.col0 - old.col0);
+            self.regions.push(Region { tile: left, owner: None });
+        }
+        if keep.col_end() < old.col_end() {
+            let right =
+                Tile::new(old.row0, keep.col_end(), old.rows, old.col_end() - keep.col_end());
+            self.regions.push(Region { tile: right, owner: None });
+        }
+        if keep.row0 > old.row0 {
+            let above = Tile::new(old.row0, keep.col0, keep.row0 - old.row0, keep.cols);
+            self.regions.push(Region { tile: above, owner: None });
+        }
+        if keep.row_end() < old.row_end() {
+            let below =
+                Tile::new(keep.row_end(), keep.col0, old.row_end() - keep.row_end(), keep.cols);
+            self.regions.push(Region { tile: below, owner: None });
+        }
+        self.merge_free();
+        self.debug_check();
+        old.pes() - keep.pes()
+    }
+
     /// The tile of a live allocation.
     pub fn tile_of(&self, id: AllocId) -> Option<Tile> {
         self.regions.iter().find(|r| r.owner == Some(id)).map(|r| r.tile)
@@ -525,6 +572,79 @@ mod tests {
             assert_eq!(ta, tb);
         }
         assert_eq!(a.free_tiles(), b.free_tiles());
+    }
+
+    #[test]
+    fn shrink_frees_the_remainder_in_place() {
+        let mut pm = PartitionManager::new(GEOM);
+        let (a, t) = pm.allocate(128).unwrap();
+        assert_eq!(t, fh(0, 128));
+        // Narrow the running tenant to its left 64 columns: the right
+        // half frees (and is immediately allocatable), the allocation id
+        // stays live on the kept tile.
+        let released = pm.shrink(a, fh(0, 64));
+        assert_eq!(released, 64 * 128);
+        assert_eq!(pm.tile_of(a), Some(fh(0, 64)));
+        assert_eq!(pm.free_widths(), vec![64]);
+        let (b, tb) = pm.allocate(32).unwrap();
+        assert_eq!(tb, fh(64, 32));
+        // Shrinking to the current tile is a no-op.
+        assert_eq!(pm.shrink(a, fh(0, 64)), 0);
+        // 2D shrink: keep the top-left quadrant of the kept slice.
+        let released = pm.shrink(a, Tile::new(0, 0, 64, 64));
+        assert_eq!(released, 64 * 64);
+        pm.check_invariants().unwrap();
+        // Freeing the survivors restores the whole array.
+        pm.free(a);
+        pm.free(b);
+        assert!(pm.fully_free());
+    }
+
+    #[test]
+    #[should_panic(expected = "outside its tile")]
+    fn shrink_rejects_tiles_outside_the_allocation() {
+        let mut pm = PartitionManager::new(GEOM);
+        let (a, _) = pm.allocate(32).unwrap();
+        pm.shrink(a, fh(16, 32));
+    }
+
+    #[test]
+    fn random_shrink_preserves_invariants() {
+        prop::check("shrink invariants", 100, |rng| {
+            let geom = ArrayGeometry::new(64, 128);
+            let mut pm = PartitionManager::new(geom);
+            let mut live: Vec<AllocId> = Vec::new();
+            for _ in 0..48 {
+                let roll = rng.gen_range(3);
+                if live.is_empty() || roll == 0 {
+                    let w = rng.gen_range_inclusive(1, 48);
+                    if let Some((id, _)) = pm.allocate(w) {
+                        live.push(id);
+                    }
+                } else if roll == 1 {
+                    let i = rng.gen_range(live.len() as u64) as usize;
+                    pm.free(live.swap_remove(i));
+                } else {
+                    let i = rng.gen_range(live.len() as u64) as usize;
+                    let old = pm.tile_of(live[i]).unwrap();
+                    let rows = rng.gen_range_inclusive(1, old.rows);
+                    let cols = rng.gen_range_inclusive(1, old.cols);
+                    let row0 = old.row0 + rng.gen_range_inclusive(0, old.rows - rows);
+                    let col0 = old.col0 + rng.gen_range_inclusive(0, old.cols - cols);
+                    let keep = Tile::new(row0, col0, rows, cols);
+                    let released = pm.shrink(live[i], keep);
+                    prop::ensure_eq(released, old.pes() - keep.pes(), "released PEs")?;
+                    prop::ensure_eq(pm.tile_of(live[i]), Some(keep), "kept tile")?;
+                }
+                pm.check_invariants()?;
+                let alloc_pes: u64 = live.iter().map(|&id| pm.tile_of(id).unwrap().pes()).sum();
+                prop::ensure_eq(alloc_pes + pm.free_pes(), geom.pes(), "PE conservation")?;
+            }
+            for id in live {
+                pm.free(id);
+            }
+            prop::ensure(pm.fully_free(), "all freed -> fully free")
+        });
     }
 
     #[test]

@@ -112,6 +112,20 @@ impl<'a> TaskQueue<'a> {
         }
     }
 
+    /// Return a running layer to the ready set — a fold-boundary
+    /// preemption drained it mid-layer.  Progress (completed K-bands) is
+    /// the engine's ledger, not the queue's: here the layer simply
+    /// becomes dispatchable again, with its DAG state untouched.
+    pub fn mark_preempted(&mut self, dnn: DnnId, layer: LayerId) {
+        assert_eq!(
+            self.state[dnn][layer],
+            LayerState::Running,
+            "preempting non-running {dnn}/{layer}"
+        );
+        self.state[dnn][layer] = LayerState::Waiting;
+        self.frontier.push((dnn, layer));
+    }
+
     pub fn mark_done(&mut self, dnn: DnnId, layer: LayerId) {
         assert_eq!(self.state[dnn][layer], LayerState::Running, "completing non-running {dnn}/{layer}");
         self.state[dnn][layer] = LayerState::Done;
@@ -197,6 +211,30 @@ mod tests {
         assert!(q.dnn_done(0));
         assert_eq!(q.remaining(), 1);
         assert!(!q.all_done());
+    }
+
+    #[test]
+    fn preempted_layer_returns_to_ready() {
+        let p = pool();
+        let mut q = TaskQueue::new(&p);
+        q.mark_running(0, 0);
+        assert!(q.ready_at(0).is_empty());
+        q.mark_preempted(0, 0);
+        let r = q.ready_at(0);
+        assert_eq!((r[0].dnn, r[0].layer), (0, 0), "preempted layer is ready again");
+        assert_eq!(q.remaining(), 3, "preemption completes nothing");
+        // The resumed segment runs and retires normally.
+        q.mark_running(0, 0);
+        q.mark_done(0, 0);
+        assert_eq!(q.ready_at(0)[0].layer, 1, "successor released once");
+    }
+
+    #[test]
+    #[should_panic(expected = "preempting non-running")]
+    fn preempting_waiting_layer_panics() {
+        let p = pool();
+        let mut q = TaskQueue::new(&p);
+        q.mark_preempted(0, 0);
     }
 
     #[test]

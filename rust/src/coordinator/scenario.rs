@@ -44,6 +44,49 @@ use crate::util::rng::Rng;
 use crate::workloads::dnng::{Dnn, DnnId, WorkloadPool};
 use crate::workloads::generator::ArrivalProcess;
 
+/// `arrival + ceil(slack × isolated)`, computed exactly.
+///
+/// The former `(slack * isolated_cycles as f64).ceil() as u64` lost
+/// precision once `isolated_cycles` crossed 2^53 (f64's integer range)
+/// and could land anywhere near the wrap on overflow.  Here `slack` is
+/// decomposed into its exact binary value `mant × 2^exp` (53-bit
+/// mantissa), the product `isolated × mant` is taken in u128 (≤ 117
+/// bits, never overflows) and the exponent is applied as a ceiling
+/// shift — the result is the true `ceil(slack × isolated)` of the f64
+/// slack at any cycle count, and every overflow path saturates (an
+/// absurd slack degrades to "never misses", not to a bogus early
+/// deadline).
+fn deadline_cycle(arrival: u64, isolated_cycles: u64, slack: f64) -> u64 {
+    if isolated_cycles == 0 || slack <= 0.0 {
+        return arrival;
+    }
+    if !slack.is_finite() {
+        return u64::MAX;
+    }
+    // Exact decomposition: slack = mant × 2^exp (mant < 2^53).
+    let bits = slack.to_bits();
+    let raw_exp = ((bits >> 52) & 0x7FF) as i64;
+    let frac = bits & ((1u64 << 52) - 1);
+    let (mant, exp) =
+        if raw_exp == 0 { (frac, -1074i64) } else { (frac | (1u64 << 52), raw_exp - 1075) };
+    let product = isolated_cycles as u128 * mant as u128;
+    let cycles = if exp >= 0 {
+        if exp >= 128 {
+            u128::MAX
+        } else {
+            product.saturating_mul(1u128 << exp)
+        }
+    } else {
+        let shift = (-exp) as u32;
+        if shift >= 128 {
+            1 // ceil of a positive value below one cycle
+        } else {
+            product.saturating_add((1u128 << shift) - 1) >> shift
+        }
+    };
+    arrival.saturating_add(cycles.min(u64::MAX as u128) as u64)
+}
+
 /// One request of a generated scenario: a DNN instance with its arrival
 /// and (optional) absolute deadline.
 #[derive(Debug, Clone, PartialEq)]
@@ -132,6 +175,10 @@ impl Observer for ScenarioObserver {
         Observer::on_layer_complete(&mut self.metrics, rec);
     }
 
+    fn on_preempt(&mut self, rec: &DispatchRecord, replayed_folds: u64, wasted_cycles: u64) {
+        Observer::on_preempt(&mut self.metrics, rec, replayed_folds, wasted_cycles);
+    }
+
     fn on_deadline(&mut self, dnn: DnnId, t: u64, met: bool) {
         self.deadline_events.push((dnn, t, met));
     }
@@ -171,9 +218,8 @@ impl Scenario {
             let template = &templates[i % templates.len()];
             let instance = format!("{}#{i}", template.name);
             let isolated_cycles = isolated[i % templates.len()];
-            let deadline = spec
-                .qos_slack
-                .map(|slack| arrival + (slack * isolated_cycles as f64).ceil() as u64);
+            let deadline =
+                spec.qos_slack.map(|slack| deadline_cycle(arrival, isolated_cycles, slack));
 
             let mut dnn = template.clone();
             dnn.name = instance.clone();
@@ -296,6 +342,24 @@ mod tests {
         }
         // The wide template takes longer in isolation than the narrow one.
         assert!(sc.requests[0].isolated_cycles > sc.requests[1].isolated_cycles);
+    }
+
+    #[test]
+    fn deadline_math_is_exact_and_saturating_at_extreme_cycle_counts() {
+        // 2^60 + 3 isolated cycles: f64 math would round the product to a
+        // multiple of 256 and miss the true deadline by up to ±128.
+        let iso = (1u64 << 60) + 3;
+        assert_eq!(deadline_cycle(0, iso, 2.0), 2 * iso);
+        assert_eq!(deadline_cycle(5, iso, 1.0), 5 + iso);
+        assert_eq!(deadline_cycle(0, iso, 1.5), iso + iso / 2 + 1, "ceil of an odd half");
+        // Products and sums beyond u64 saturate instead of wrapping.
+        assert_eq!(deadline_cycle(0, u64::MAX, 4.0), u64::MAX);
+        assert_eq!(deadline_cycle(u64::MAX - 10, 100, 1.0), u64::MAX);
+        assert_eq!(deadline_cycle(7, u64::MAX, f64::MAX), u64::MAX);
+        // Small values keep the old ceil behavior exactly.
+        assert_eq!(deadline_cycle(0, 3, 1.5), 5);
+        assert_eq!(deadline_cycle(10, 543, 3.0), 10 + 1629);
+        assert_eq!(deadline_cycle(0, 0, 3.0), 0);
     }
 
     #[test]

@@ -24,16 +24,20 @@
 //! `rust/tests/engine_parity.rs` pins this port bit-for-bit against the
 //! pre-refactor fused batch loop.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::str::FromStr;
 
 use super::metrics::RunMetrics;
+use super::partition::AllocId;
 use crate::mem::{MemConfig, MemSpec};
+use crate::sim::activity::Activity;
 use crate::sim::buffers::BufferConfig;
-use crate::sim::dataflow::ArrayGeometry;
+use crate::sim::dataflow::{next_fold_boundary, ArrayGeometry};
 use crate::sim::dram::DramConfig;
 use crate::sim::partitioned::{tile_layer_timing, FeedPolicy, Tile};
-use crate::sim_core::{Allocation, Engine, LayerExec, Scheduler, SystemState};
+use crate::sim_core::{
+    Allocation, Checkpoint, Engine, LayerExec, RunningLayer, Scheduler, SystemState,
+};
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 use crate::workloads::shapes::GemmDims;
 
@@ -79,6 +83,57 @@ impl FromStr for PartitionMode {
             what: "partition mode",
             got: s.to_string(),
             valid: &PartitionMode::TAGS,
+        })
+    }
+}
+
+/// When the dynamic policy may preempt a *running* layer at its next
+/// fold boundary (drain-and-reshape; see `docs/preemption.md`).
+///
+/// `off` (the default) reproduces the non-preemptive scheduler bit for
+/// bit — arrivals only reclaim PEs at `LayerComplete` events, so a light
+/// tenant can stall behind a wide tenant's long layer (head-of-line
+/// blocking).  `arrival` arms a preemption check at every DNN arrival;
+/// `deadline` additionally reacts to deadline verdicts, evicting tenants
+/// that have already missed theirs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PreemptMode {
+    /// Never interrupt a running layer (the paper's model; default).
+    #[default]
+    Off,
+    /// Preempt when an arrival would otherwise starve behind a running
+    /// tenant holding more than its recomputed equal share.
+    Arrival,
+    /// `arrival`, plus deadline awareness: replan at deadline events and
+    /// evict first from tenants whose deadline has already passed unmet.
+    Deadline,
+}
+
+impl PreemptMode {
+    /// Every variant, in tag order.
+    pub const ALL: [PreemptMode; 3] =
+        [PreemptMode::Off, PreemptMode::Arrival, PreemptMode::Deadline];
+    /// The tags of [`PreemptMode::ALL`], in the same order.
+    pub const TAGS: [&'static str; 3] = ["off", "arrival", "deadline"];
+
+    /// Stable config/CLI/report name (round-trips through [`FromStr`]).
+    pub fn tag(self) -> &'static str {
+        match self {
+            PreemptMode::Off => Self::TAGS[0],
+            PreemptMode::Arrival => Self::TAGS[1],
+            PreemptMode::Deadline => Self::TAGS[2],
+        }
+    }
+}
+
+impl FromStr for PreemptMode {
+    type Err = UnknownTag;
+
+    fn from_str(s: &str) -> Result<PreemptMode, UnknownTag> {
+        PreemptMode::ALL.into_iter().find(|m| m.tag() == s).ok_or_else(|| UnknownTag {
+            what: "preempt mode",
+            got: s.to_string(),
+            valid: &PreemptMode::TAGS,
         })
     }
 }
@@ -186,6 +241,9 @@ pub struct SchedulerConfig {
     pub min_rows: u64,
     /// Column slices (paper) or rectangular 2D fission.
     pub partition_mode: PartitionMode,
+    /// Fold-boundary preemption of running layers (`[partition] preempt`
+    /// / `--preempt`); `off` keeps the non-preemptive scheduler exactly.
+    pub preempt: PreemptMode,
     pub feed_model: FeedModel,
     pub alloc_policy: AllocPolicy,
     /// Patience: a layer dispatches only into a slice ≥ `demand /
@@ -211,6 +269,7 @@ impl Default for SchedulerConfig {
             min_width: geom.cols / 8,
             min_rows: geom.rows / 8,
             partition_mode: PartitionMode::Columns,
+            preempt: PreemptMode::Off,
             feed_model: FeedModel::Independent,
             alloc_policy: AllocPolicy::WidestToHeaviest,
             patience_divisor: 4,
@@ -250,9 +309,11 @@ fn ceil_pow2(x: u64) -> u64 {
     x.next_power_of_two()
 }
 
-/// The dynamic partitioning policy (stateless between decision points:
-/// every plan is a pure function of the observable [`SystemState`] —
-/// the one cache below memoizes a run-constant).
+/// The dynamic partitioning policy (with `preempt = off`, stateless
+/// between decision points: every plan is a pure function of the
+/// observable [`SystemState`] — the one cache below memoizes a
+/// run-constant.  Preemption adds two small pieces of deterministic
+/// state: the trigger latch and the missed-deadline set).
 #[derive(Debug, Clone)]
 pub struct DynamicScheduler {
     cfg: SchedulerConfig,
@@ -261,6 +322,14 @@ pub struct DynamicScheduler {
     /// config, and `plan` re-evaluates it for every ready layer at every
     /// decision point (mem-aware policy only; empty otherwise).
     bound_cache: BTreeMap<(u64, u64, u64), bool>,
+    /// Preemption trigger latch: set by the event hooks (arrivals; in
+    /// deadline mode also missed deadlines), consumed by the next
+    /// [`Scheduler::preempt`] decision point.  Bounds preemptions to at
+    /// most one attempt per triggering event — no thrash, no livelock.
+    preempt_armed: bool,
+    /// Tenants whose deadline has already passed unmet (deadline mode's
+    /// first-choice eviction victims).
+    missed: BTreeSet<DnnId>,
 }
 
 /// True when the layer would be memory-bound on a `width` slice even
@@ -286,7 +355,12 @@ impl DynamicScheduler {
     pub fn new(cfg: SchedulerConfig) -> DynamicScheduler {
         assert!(cfg.min_width >= 1 && cfg.min_width <= cfg.geom.cols);
         assert!(cfg.min_rows >= 1 && cfg.min_rows <= cfg.geom.rows);
-        DynamicScheduler { cfg, bound_cache: BTreeMap::new() }
+        DynamicScheduler {
+            cfg,
+            bound_cache: BTreeMap::new(),
+            preempt_armed: false,
+            missed: BTreeSet::new(),
+        }
     }
 
     pub fn config(&self) -> &SchedulerConfig {
@@ -308,6 +382,157 @@ impl Scheduler for DynamicScheduler {
 
     fn mem_spec(&self) -> Option<MemSpec> {
         self.cfg.mem_spec()
+    }
+
+    fn on_arrival(&mut self, _s: &SystemState<'_>, _dnn: DnnId) {
+        if self.cfg.preempt != PreemptMode::Off {
+            self.preempt_armed = true;
+        }
+    }
+
+    fn on_deadline(&mut self, _s: &SystemState<'_>, dnn: DnnId, met: bool) {
+        if self.cfg.preempt == PreemptMode::Deadline && !met {
+            self.missed.insert(dnn);
+            self.preempt_armed = true;
+        }
+    }
+
+    /// Deadline mode reacts to verdicts (eviction of missed tenants), so
+    /// its reaction must take effect at deadline time.
+    fn plan_on_deadline(&self) -> bool {
+        self.cfg.preempt == PreemptMode::Deadline
+    }
+
+    fn preempts(&self) -> bool {
+        self.cfg.preempt != PreemptMode::Off
+    }
+
+    /// The preemption decision point: fires at most once per triggering
+    /// event (the latch), and only when some ready layer is *starved* —
+    /// its tenant has nothing running and the free space cannot give it
+    /// even its patience floor.  The victim is the widest running tile
+    /// above the recomputed `Partition_Calculation` equal share (in
+    /// deadline mode, a tenant that already missed its deadline is taken
+    /// first regardless of size); one victim per decision point keeps
+    /// the reshape conservative.
+    fn preempt(&mut self, s: &SystemState<'_>, running: &[RunningLayer]) -> Vec<AllocId> {
+        if self.cfg.preempt == PreemptMode::Off || !self.preempt_armed {
+            return Vec::new();
+        }
+        let ready = s.queue.ready_at(s.now);
+        if ready.is_empty() {
+            // Nobody is waiting (yet): keep the latch armed — the event
+            // that set it may precede its starved arrival (e.g. a missed
+            // deadline before the burst lands).
+            return Vec::new();
+        }
+        self.preempt_armed = false;
+        let cols = self.cfg.geom.cols;
+        let widest = s.partitions.widest_free().map(|f| f.width).unwrap_or(0);
+        let starved: Vec<DnnId> = ready
+            .iter()
+            .filter(|r| {
+                if running.iter().any(|rl| rl.dnn == r.dnn) {
+                    return false; // its tenant is already progressing
+                }
+                let gemm = self.gemm_remaining(s, r.dnn, r.layer);
+                let demand = ceil_pow2(gemm.m).clamp(self.cfg.min_width, cols);
+                let acceptable = (demand / self.cfg.patience_divisor).max(self.cfg.min_width);
+                let usable = if widest == 0 { 0 } else { demand.min(floor_pow2(widest)) };
+                usable < acceptable
+            })
+            .map(|r| r.dnn)
+            .collect();
+        if starved.is_empty() {
+            return Vec::new();
+        }
+        // A layer already reshaped once is not reshaped again (its width
+        // already reflects a contention decision; transient starvation
+        // while earlier winners drain must not keep halving it).  A
+        // starved strict-priority flight (no live completion prediction,
+        // `t_end == u64::MAX`) is no victim either: its fold clock has
+        // no finite dilation to locate a boundary on.
+        let eligible =
+            |rl: &&RunningLayer| s.k_done(rl.dnn, rl.layer) == 0 && rl.t_end != u64::MAX;
+        if self.cfg.preempt == PreemptMode::Deadline {
+            if let Some(victim) = running
+                .iter()
+                .filter(eligible)
+                .filter(|rl| self.missed.contains(&rl.dnn) && !starved.contains(&rl.dnn))
+                .max_by_key(|rl| (rl.tile.pes(), rl.t_end, rl.alloc))
+            {
+                return vec![victim.alloc];
+            }
+        }
+        let n_avail = ready.len() as u64 + running.len() as u64;
+        let target = floor_pow2((cols / n_avail).max(1)).clamp(self.cfg.min_width, cols);
+        // Judge "above the equal share" in PEs, not column span — in 2D
+        // mode a short-but-wide tile can hold far less than a full-height
+        // slice of the same width (for full-height tiles the two tests
+        // are identical, so columns-mode behavior is unchanged).
+        let share_pes = target * self.cfg.geom.rows;
+        running
+            .iter()
+            .filter(eligible)
+            .filter(|rl| rl.tile.pes() > share_pes && rl.t_end > s.now)
+            .max_by_key(|rl| (rl.tile.pes(), rl.t_end.saturating_sub(s.now), rl.alloc))
+            .map(|rl| vec![rl.alloc])
+            .unwrap_or_default()
+    }
+
+    /// Fold-boundary location for the engine: find the boundary on the
+    /// independent-feed fold clock, then stretch it onto the segment's
+    /// wall clock when contention (interleaved feed, DRAM bound, or a
+    /// bandwidth rescale) priced the segment slower than the fold model
+    /// — folds are assumed to dilate uniformly (see `docs/preemption.md`).
+    fn checkpoint(
+        &self,
+        s: &SystemState<'_>,
+        dnn: DnnId,
+        layer: LayerId,
+        tile: Tile,
+        elapsed: u64,
+        total: u64,
+    ) -> Option<Checkpoint> {
+        if self.cfg.preempt == PreemptMode::Off {
+            return None;
+        }
+        let geom = self.cfg.geom;
+        let gemm = self.gemm_remaining(s, dnn, layer);
+        let ind = tile_layer_timing(geom, gemm, tile, FeedPolicy::Independent, &self.cfg.buffers);
+        let c_ind = ind.cycles.max(1);
+        let total = total.max(c_ind);
+        // Floor into the fold clock (never credit an unfinished fold),
+        // ceil back out (never schedule the drain before it can finish).
+        // A just-dispatched victim (elapsed 0) drains at its FIRST fold
+        // boundary, never at cycle zero.
+        let elapsed_ind = ((elapsed as u128 * c_ind as u128) / total as u128) as u64;
+        let fb = next_fold_boundary(geom, gemm, tile, elapsed_ind.max(1))?;
+        let to_wall = |x: u64| ((x as u128 * total as u128).div_ceil(c_ind as u128)) as u64;
+        let boundary = to_wall(fb.cycles).max(elapsed);
+        let k_advance = fb.bands_done * tile.rows;
+        let activity = if k_advance > 0 {
+            let done = GemmDims { sr: gemm.sr, k: k_advance, m: gemm.m };
+            tile_layer_timing(geom, done, tile, FeedPolicy::Independent, &self.cfg.buffers)
+                .activity
+        } else {
+            Activity::default()
+        };
+        // Drain-and-reshape: keep the left half of the tile's width (the
+        // pow-2 ladder's next rung down) so the remainder keeps running
+        // and the freed right half hosts the starved arrival.  Below
+        // `min_width` there is no rung left — evict to the ready set.
+        let half = floor_pow2(tile.cols) / 2;
+        let keep = (half >= self.cfg.min_width)
+            .then(|| Tile::new(tile.row0, tile.col0, tile.rows, half));
+        Some(Checkpoint {
+            boundary,
+            k_advance,
+            replayed_folds: fb.replayed_folds,
+            wasted_cycles: to_wall(fb.cycles) - to_wall(fb.band_prefix_cycles),
+            activity,
+            keep,
+        })
     }
 
     /// `Partition_Calculation` + `Task_Assignment` over the ready set,
@@ -333,7 +558,7 @@ impl Scheduler for DynamicScheduler {
         coresident: u64,
     ) -> LayerExec {
         let cfg = &self.cfg;
-        let gemm = s.pool.dnns[dnn].layers[layer].shape.gemm();
+        let gemm = self.gemm_remaining(s, dnn, layer);
         let ind = tile_layer_timing(cfg.geom, gemm, tile, FeedPolicy::Independent, &cfg.buffers);
         let raw = match cfg.feed_model {
             FeedModel::Independent => ind.cycles,
@@ -371,6 +596,15 @@ impl Scheduler for DynamicScheduler {
 }
 
 impl DynamicScheduler {
+    /// The GEMM still to execute for `(dnn, layer)` — delegates to
+    /// [`SystemState::remaining_gemm`], the one remainder-sizing formula
+    /// the engine also prices DRAM traffic with.  Identical to the full
+    /// shape — and bit-identical pricing — whenever preemption never
+    /// fired.
+    fn gemm_remaining(&self, s: &SystemState<'_>, dnn: DnnId, layer: LayerId) -> GemmDims {
+        s.remaining_gemm(dnn, layer)
+    }
+
     /// Memoized mem-aware admission signal for one layer shape (false
     /// whenever the policy is not `mem-aware` or `[mem]` is off).
     fn layer_bound(&mut self, gemm: GemmDims, width: u64) -> bool {
@@ -414,8 +648,9 @@ impl DynamicScheduler {
         for r in ready {
             // Width demand: a layer gains nothing beyond its GEMM column
             // count M (Task_Assignment's "layers with higher dimensions
-            // to partitions with higher resources").
-            let gemm = s.pool.dnns[r.dnn].layers[r.layer].shape.gemm();
+            // to partitions with higher resources").  A preempted
+            // remainder is priced on what it has left.
+            let gemm = self.gemm_remaining(s, r.dnn, r.layer);
             let demand = ceil_pow2(gemm.m).clamp(cfg.min_width, cfg.geom.cols);
 
             // MoCA-style throttle (mem-aware policy): a layer headed for
@@ -510,7 +745,7 @@ impl DynamicScheduler {
         let mut dispatched_any = false;
         let mut bound_in_plan = false;
         for r in ready {
-            let gemm = s.pool.dnns[r.dnn].layers[r.layer].shape.gemm();
+            let gemm = self.gemm_remaining(s, r.dnn, r.layer);
             // Demand: a layer gains nothing beyond M columns or K rows
             // (FK = ⌈K/h⌉ is already 1 at h = K), on the pow-2 ladder.
             let mut demand_w = ceil_pow2(gemm.m).clamp(min_width, geom.cols);
@@ -626,6 +861,14 @@ mod tests {
         for m in PartitionMode::ALL {
             assert_eq!(m.tag().parse::<PartitionMode>().unwrap(), m);
         }
+        for p in PreemptMode::ALL {
+            assert_eq!(p.tag().parse::<PreemptMode>().unwrap(), p);
+        }
+        assert_eq!(PreemptMode::default(), PreemptMode::Off);
+        assert_eq!(SchedulerConfig::default().preempt, PreemptMode::Off);
+        let e = "sometimes".parse::<PreemptMode>().unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("off") && msg.contains("arrival") && msg.contains("deadline"), "{msg}");
         // TAGS is exactly the tag() image, in order.
         assert_eq!(FeedModel::TAGS, [FeedModel::Independent.tag(), FeedModel::Interleaved.tag()]);
         assert_eq!(
@@ -787,6 +1030,220 @@ mod tests {
         for (x, y) in a.dispatches.iter().zip(&b.dispatches) {
             assert_eq!(x, y);
         }
+    }
+
+    /// The canonical head-of-line mix: one heavy tenant holding the full
+    /// array for a long multi-band layer, one light tenant arriving
+    /// mid-layer.  Heavy layer: [4000, 1024] × [1024, 64] — 8 K-bands of
+    /// 4319 cycles on the default 128×128 array (34552 cycles/layer).
+    fn hol_pool(light_arrival: u64) -> WorkloadPool {
+        let mk = |name: &str, sr: u64, k: u64, m: u64, n: usize, at: u64| {
+            let layers = (0..n)
+                .map(|i| Layer::new(&format!("l{i}"), LayerKind::Fc, LayerShape::fc(sr, k, m)))
+                .collect();
+            Dnn::chain(name, layers).arriving_at(at)
+        };
+        WorkloadPool::new(
+            "hol",
+            vec![mk("heavy", 4000, 1024, 64, 2, 0), mk("light", 256, 128, 32, 1, light_arrival)],
+        )
+    }
+
+    #[test]
+    fn preempt_off_is_bitwise_default() {
+        let pool = hol_pool(3_000);
+        let def = DynamicScheduler::new(SchedulerConfig::default()).run(&pool);
+        let off = DynamicScheduler::new(SchedulerConfig {
+            preempt: PreemptMode::Off,
+            ..Default::default()
+        })
+        .run(&pool);
+        assert_eq!(def.makespan, off.makespan);
+        assert_eq!(def.dispatches, off.dispatches);
+        assert_eq!(def.preemptions, 0);
+        assert_eq!(def.wasted_refill_cycles, 0);
+        // And the head-of-line block is real: the light tenant waits for
+        // the heavy layer to drain whole.
+        assert_eq!(def.start["light"], 34_552);
+    }
+
+    #[test]
+    fn arrival_preemption_drains_at_the_fold_boundary() {
+        // Mirror-validated pinned numbers (see docs/preemption.md): the
+        // light arrival at 3000 preempts the heavy layer at its next
+        // band boundary (4319); the remainder resumes on 64 columns and
+        // — because m = 64 wastes nothing beyond that width — finishes
+        // at exactly the uninterrupted 34552.  The light tenant starts
+        // 30k cycles earlier; the heavy tenant loses nothing.
+        let pool = hol_pool(3_000);
+        let off = DynamicScheduler::new(SchedulerConfig::default()).run(&pool);
+        let pre = DynamicScheduler::new(SchedulerConfig {
+            preempt: PreemptMode::Arrival,
+            ..Default::default()
+        })
+        .run(&pool);
+        assert_eq!(pre.preemptions, 1);
+        assert_eq!(pre.replayed_folds, 0, "fm = 1: band boundaries waste nothing");
+        assert_eq!(pre.wasted_refill_cycles, 0);
+        assert_eq!(pre.start["light"], 4_319, "light dispatches at the fold boundary");
+        assert_eq!(pre.completion["light"], 4_319 + 607);
+        assert_eq!(pre.completion["heavy"], off.completion["heavy"], "heavy loses nothing");
+        assert_eq!(pre.dispatches.len(), pool.total_layers() + 1, "one extra segment record");
+        // The preempted segment is visible in the partition trace:
+        // 128-wide segment, then the 64-wide remainder.
+        assert_eq!(pre.partition_trace("heavy")[..2], [128, 64]);
+        // Work conservation: the heavy layer's MACs split exactly across
+        // its two segments (1 band of 128 K-rows, then 896 remaining).
+        let macs: u64 = pre
+            .dispatches
+            .iter()
+            .filter(|d| d.dnn_name == "heavy" && d.layer == 0)
+            .map(|d| d.activity.macs)
+            .sum();
+        assert_eq!(macs, 4000 * 1024 * 64);
+        // Determinism: the preempting run reproduces itself.
+        let again = DynamicScheduler::new(SchedulerConfig {
+            preempt: PreemptMode::Arrival,
+            ..Default::default()
+        })
+        .run(&pool);
+        assert_eq!(pre.dispatches, again.dispatches);
+    }
+
+    #[test]
+    fn preemption_requires_starvation() {
+        // Free space for the arrival => no preemption: a and c hold
+        // [0,32) and [32,64), the light dispatches straight into the
+        // free right half and the armed trigger finds nobody starved.
+        let mk = |name: &str, sr: u64, k: u64, m: u64, at: u64| {
+            let layers = vec![Layer::new("l0", LayerKind::Fc, LayerShape::fc(sr, k, m))];
+            Dnn::chain(name, layers).arriving_at(at)
+        };
+        let roomy = WorkloadPool::new(
+            "roomy",
+            vec![
+                mk("a", 4000, 1024, 32, 0),
+                mk("c", 4000, 1024, 32, 0),
+                mk("light", 256, 128, 32, 3_000),
+            ],
+        );
+        let pre = DynamicScheduler::new(SchedulerConfig {
+            preempt: PreemptMode::Arrival,
+            ..Default::default()
+        })
+        .run(&roomy);
+        assert_eq!(pre.preemptions, 0, "nobody starved => nothing preempted");
+        assert_eq!(pre.start["light"], 3_000, "the arrival dispatched immediately");
+
+        // No free space => the starved arrival preempts the equal-width
+        // tenant with the most remaining work (b, rightmost, ends later).
+        let packed = WorkloadPool::new(
+            "packed",
+            vec![
+                mk("a", 4000, 1024, 64, 0),
+                mk("b", 4000, 1024, 64, 0),
+                mk("light", 256, 128, 32, 3_000),
+            ],
+        );
+        let pre = DynamicScheduler::new(SchedulerConfig {
+            preempt: PreemptMode::Arrival,
+            ..Default::default()
+        })
+        .run(&packed);
+        assert_eq!(pre.preemptions, 1);
+        // b runs on [64, 128): its band boundary is 128 + (4000 + 128 +
+        // 64 + 64 - 1) = 4383; the segment record ends there.
+        let seg = pre.dispatches.iter().find(|d| d.t_end == 4_383).unwrap();
+        assert_eq!(seg.dnn_name, "b", "victim is the longest-remaining equal-width tile");
+        assert_eq!(seg.tile.cols, 64, "segment billed on the pre-shrink tile");
+        assert_eq!(pre.start["light"], 4_383, "light dispatches into the shrink's freed half");
+
+        // Cascading reshape: a alone takes the whole array (Line 6), b's
+        // arrival halves it at the first band boundary, and the light's
+        // arrival halves b in turn — every arrival reclaims PEs without
+        // ever waiting out a 34k-cycle layer.
+        let cascade = WorkloadPool::new(
+            "cascade",
+            vec![
+                mk("a", 4000, 1024, 64, 0),
+                mk("b", 4000, 1024, 64, 10),
+                mk("light", 256, 128, 32, 3_000),
+            ],
+        );
+        let pre = DynamicScheduler::new(SchedulerConfig {
+            preempt: PreemptMode::Arrival,
+            ..Default::default()
+        })
+        .run(&cascade);
+        assert_eq!(pre.preemptions, 2);
+        assert!(pre.start["light"] < 10_000, "light must not wait out a whole heavy layer");
+    }
+
+    #[test]
+    fn preemption_works_under_the_shared_memory_hierarchy() {
+        // The drained segment's flight early-retires (banks + bandwidth
+        // share released) and the remainder re-admits under the same
+        // alloc id; MAC conservation and the record accounting must hold
+        // exactly as in the isolated-DRAM case.
+        let pool = hol_pool(3_000);
+        let cfg = SchedulerConfig {
+            preempt: PreemptMode::Arrival,
+            mem: Some(crate::mem::MemConfig::default()),
+            ..Default::default()
+        };
+        let m = DynamicScheduler::new(cfg).run(&pool);
+        assert!(m.preemptions >= 1);
+        assert_eq!(m.dispatches.len(), pool.total_layers() + m.preemptions as usize);
+        // Every record (segments included) closed a mem flight.
+        assert_eq!(m.mem_total.layers as usize, m.dispatches.len());
+        let macs: u64 = m
+            .dispatches
+            .iter()
+            .filter(|d| d.dnn_name == "heavy" && d.layer == 0)
+            .map(|d| d.activity.macs)
+            .sum();
+        assert_eq!(macs, 4000 * 1024 * 64, "MAC conservation under [mem]");
+        // Still a strict latency win for the light tenant.
+        assert!(m.start["light"] < 10_000);
+    }
+
+    #[test]
+    fn deadline_mode_evicts_missed_tenants_first() {
+        use crate::sim_core::Engine;
+        let mk = |name: &str, sr: u64, k: u64, m: u64, at: u64| {
+            let layers = vec![Layer::new("l0", LayerKind::Fc, LayerShape::fc(sr, k, m))];
+            Dnn::chain(name, layers).arriving_at(at)
+        };
+        let pool = WorkloadPool::new(
+            "dl",
+            vec![
+                mk("h0", 4000, 1024, 64, 0),
+                mk("h1", 4000, 1024, 64, 0),
+                mk("light", 256, 128, 32, 3_000),
+            ],
+        );
+        let run = |preempt: PreemptMode, deadlines: Vec<(usize, u64)>| {
+            let mut sched = DynamicScheduler::new(SchedulerConfig {
+                preempt,
+                ..Default::default()
+            });
+            let mut m = RunMetrics::default();
+            Engine::new(&pool, SchedulerConfig::default().geom)
+                .with_deadlines(deadlines)
+                .run(&mut sched, &mut m);
+            m
+        };
+        // h0 misses its (absurd) deadline at cycle 100; when the light
+        // tenant arrives starved, deadline mode evicts the missed h0 —
+        // arrival mode would have picked h1 (equal width, later t_end).
+        let dl = run(PreemptMode::Deadline, vec![(0, 100)]);
+        assert_eq!(dl.preemptions, 1);
+        let seg = dl.dispatches.iter().min_by_key(|d| d.t_end).unwrap();
+        assert_eq!(seg.dnn_name, "h0", "missed tenant is evicted first");
+        let ar = run(PreemptMode::Arrival, vec![(0, 100)]);
+        assert_eq!(ar.preemptions, 1);
+        let seg = ar.dispatches.iter().min_by_key(|d| d.t_end).unwrap();
+        assert_eq!(seg.dnn_name, "h1", "arrival mode ignores the verdict");
     }
 
     fn tight_mem() -> crate::mem::MemConfig {

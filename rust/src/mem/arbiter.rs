@@ -353,6 +353,31 @@ impl BandwidthArbiter {
         self.advance(now);
         self.reschedule()
     }
+
+    /// Remove flight `id` at `now`, *before* its predicted completion —
+    /// a fold-boundary preemption drained its layer segment early.  The
+    /// report covers only what actually happened: words moved so far and
+    /// the compute cycles consumed by `now`.  Words never moved are NOT
+    /// credited to the conservation ledger (the resumed remainder
+    /// re-admits its own traffic as a fresh flight); survivors' shares
+    /// grow and their corrections come back in the update.
+    pub fn preempt(&mut self, now: u64, id: AllocId) -> (FlightReport, MemUpdate) {
+        self.advance(now);
+        let f = self
+            .flights
+            .remove(&id)
+            .unwrap_or_else(|| panic!("preempt of unknown flight {id}"));
+        let moved = f.words_total.saturating_sub(f.words_left.ceil() as u64);
+        let report = FlightReport {
+            dnn: f.dnn,
+            width: f.width,
+            t_start: f.t_start,
+            t_end: now,
+            compute_cycles: f.compute_end.min(now) - f.t_start,
+            words: moved,
+        };
+        (report, self.reschedule())
+    }
 }
 
 #[cfg(test)]
@@ -479,6 +504,26 @@ mod tests {
         // full rate: 1000 - 20*5 = 900 words at 10 w/c => done at 110.
         assert_eq!(done[&1], 110);
         assert!((arb.consumed_words() - 1100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn preempted_flight_frees_its_share_early() {
+        // Two equal flights split 10 w/c; preempting flight 0 at t=50
+        // hands the whole interface to flight 1 mid-transfer.
+        let mut arb = BandwidthArbiter::new(dram(10.0, 0), ArbitrationMode::FairShare);
+        let u0 = arb.admit(0, 0, 0, 64, 10, 1000);
+        let u1 = arb.admit(0, 1, 1, 64, 10, 1000);
+        let (rep, upd) = arb.preempt(50, 0);
+        assert_eq!(rep.t_end, 50);
+        assert_eq!(rep.words, 250, "5 w/c for 50 cycles");
+        assert_eq!(rep.compute_cycles, 10, "compute path had finished");
+        assert_eq!(arb.in_flight(), 1);
+        // Survivor: 250 words moved by t=50, 750 left at 10 w/c => 125.
+        assert_eq!(upd.reposts, vec![(1, 125)]);
+        let done = drain(&mut arb, vec![u0, u1, upd]);
+        assert_eq!(done[&1], 125);
+        // The ledger holds only what crossed the interface.
+        assert!((arb.consumed_words() - (250.0 + 1000.0)).abs() < 1e-6);
     }
 
     #[test]

@@ -178,7 +178,25 @@ impl MemSystem {
     /// stats, and return the survivors' corrections.
     pub fn retire(&mut self, now: u64, alloc: AllocId) -> (MemStats, MemUpdate) {
         let (rep, upd) = self.arbiter.retire(now, alloc);
-        let meta = self.meta.remove(&alloc).expect("retire of unadmitted flight");
+        let stats = self.close_flight(alloc, &rep, u64::MAX);
+        (stats, upd)
+    }
+
+    /// Early-retire a flight at a fold-boundary preemption: the drained
+    /// segment's banks release and its stats cover only the words it
+    /// actually moved (refetch attribution is clamped accordingly — the
+    /// resumed remainder re-admits the rest as a fresh flight).
+    pub fn preempt(&mut self, now: u64, alloc: AllocId) -> (MemStats, MemUpdate) {
+        let (rep, upd) = self.arbiter.preempt(now, alloc);
+        let stats = self.close_flight(alloc, &rep, rep.words);
+        (stats, upd)
+    }
+
+    /// Shared retire/preempt bookkeeping: banks, stats, bound counter,
+    /// per-tenant feedback.  `refetch_cap` clamps the refetch attribution
+    /// for partially-moved flights.
+    fn close_flight(&mut self, alloc: AllocId, rep: &FlightReport, refetch_cap: u64) -> MemStats {
+        let meta = self.meta.remove(&alloc).expect("close of unadmitted flight");
         self.banks.release(alloc);
         let busy = rep.t_end - rep.t_start;
         let stall = busy.saturating_sub(rep.compute_cycles);
@@ -188,7 +206,7 @@ impl MemSystem {
             stall_col_cycles: stall.saturating_mul(rep.width),
             busy_cycles: busy,
             xfer_words: rep.words,
-            refetch_words: meta.refetch_words,
+            refetch_words: meta.refetch_words.min(refetch_cap),
         };
         if meta.bound {
             let c = self
@@ -202,7 +220,7 @@ impl MemSystem {
             }
         }
         self.feedback.per_dnn.entry(rep.dnn).or_default().add(&stats);
-        (stats, upd)
+        stats
     }
 
     /// An early bandwidth release fired: rescale the survivors.
@@ -270,6 +288,22 @@ mod tests {
         // And the surplus is exactly what `refetch_words` accounts.
         let ideal = ideal_words(gemm);
         assert!(a_poor.dram_accesses() - ideal > a_rich.dram_accesses() - ideal);
+    }
+
+    #[test]
+    fn preempt_releases_banks_and_bound_tracking_early() {
+        let mut mem = MemSystem::new(spec(1.0, 8));
+        let gemm = GemmDims { sr: 512, k: 128, m: 64 };
+        let (activity, _) = mem.admit(0, 0, 0, gemm, Tile::new(0, 0, 128, 64), 1000);
+        assert_eq!(mem.feedback().inflight_bound.get(&0), Some(&1));
+        let (stats, _) = mem.preempt(500, 0);
+        assert_eq!(stats.busy_cycles, 500);
+        assert!(stats.xfer_words <= activity.dram_accesses(), "only moved words are billed");
+        assert!(stats.xfer_words >= 499, "1 w/c for 500 cycles minus burst setup");
+        assert!(mem.feedback().inflight_bound.is_empty(), "bound tracking released");
+        // The remainder can re-admit under the same alloc id.
+        let (_, upd) = mem.admit(500, 0, 0, gemm, Tile::new(0, 0, 128, 32), 1000);
+        assert!(upd.reposts.iter().any(|&(a, _)| a == 0));
     }
 
     #[test]

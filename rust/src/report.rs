@@ -8,7 +8,9 @@ use std::collections::BTreeMap;
 
 use crate::coordinator::baseline::SequentialBaseline;
 use crate::coordinator::metrics::TenantStats;
-use crate::coordinator::scheduler::{AllocPolicy, DynamicScheduler, PartitionMode, SchedulerConfig};
+use crate::coordinator::scheduler::{
+    AllocPolicy, DynamicScheduler, PartitionMode, PreemptMode, SchedulerConfig,
+};
 use crate::coordinator::RunMetrics;
 use crate::energy::{EnergyBreakdown, EnergyModel, Estimator};
 use crate::mem::MemStats;
@@ -196,17 +198,23 @@ fn geom_label(geom: crate::sim::dataflow::ArrayGeometry) -> String {
 /// point ran under the shared memory hierarchy, four contention columns
 /// (interface bandwidth, arbitration, stall fraction, achieved
 /// words/cycle) are appended; points without `[mem]` show `-`.  A `mode`
-/// column appears only when some point ran 2D fission, so column-only
-/// sweeps render exactly as before.
+/// column appears only when some point ran 2D fission, and three
+/// preemption columns (mode, count, wasted refill cycles) only when some
+/// point ran with preemption on — so column-only non-preemptive sweeps
+/// render exactly as before.
 pub fn sweep_table(grid: &SweepGrid, rows: &[SweepRow]) -> Table {
     let with_mem = rows.iter().any(|r| r.mem.is_some());
     let with_mode = rows.iter().any(|r| r.point.mode == PartitionMode::TwoD);
+    let with_preempt = rows.iter().any(|r| r.point.preempt != PreemptMode::Off);
     let mut headers = vec![
         "mix", "arrival", "policy", "feed", "cols", "makespan", "vs seq", "util", "p50 lat",
         "p99 lat", "miss",
     ];
     if with_mode {
         headers.insert(5, "mode");
+    }
+    if with_preempt {
+        headers.extend(["preempt", "npre", "wasted"]);
     }
     if with_mem {
         headers.extend(["bw", "arb", "stall", "wpc"]);
@@ -228,6 +236,13 @@ pub fn sweep_table(grid: &SweepGrid, rows: &[SweepRow]) -> Table {
         ];
         if with_mode {
             cells.insert(5, r.point.mode.tag().to_string());
+        }
+        if with_preempt {
+            cells.extend([
+                r.point.preempt.tag().to_string(),
+                r.preemptions.to_string(),
+                r.wasted_refill_cycles.to_string(),
+            ]);
         }
         if with_mem {
             match &r.mem {
@@ -296,6 +311,16 @@ pub fn sweep_json(grid: &SweepGrid, rows: &[SweepRow]) -> Json {
                 Json::Str(r.point.mode.tag().to_string()),
             );
         }
+        // Preemption keys are strictly opt-in: a `preempt = off` point
+        // emits none of them, keeping non-preemptive sweeps byte-stable.
+        if r.point.preempt != PreemptMode::Off {
+            o.insert("preempt".to_string(), Json::Str(r.point.preempt.tag().to_string()));
+            o.insert("preemptions".to_string(), Json::Num(r.preemptions as f64));
+            o.insert(
+                "wasted_refill_cycles".to_string(),
+                Json::Num(r.wasted_refill_cycles as f64),
+            );
+        }
         // Seeds are u64; emitted as strings so they stay exact beyond 2^53.
         o.insert("scenario_seed".to_string(), Json::Str(r.point.scenario_seed.to_string()));
         o.insert("requests".to_string(), Json::Num(r.requests as f64));
@@ -355,6 +380,14 @@ pub fn sweep_json(grid: &SweepGrid, rows: &[SweepRow]) -> Json {
             "modes".to_string(),
             Json::Arr(
                 grid.modes.iter().map(|m| Json::Str(m.tag().to_string())).collect(),
+            ),
+        );
+    }
+    if grid.preempts.iter().any(|p| *p != PreemptMode::Off) {
+        top.insert(
+            "preempts".to_string(),
+            Json::Arr(
+                grid.preempts.iter().map(|p| Json::Str(p.tag().to_string())).collect(),
             ),
         );
     }

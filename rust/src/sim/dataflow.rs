@@ -35,8 +35,20 @@ pub struct ArrayGeometry {
 
 impl ArrayGeometry {
     pub fn new(rows: u64, cols: u64) -> ArrayGeometry {
-        assert!(rows > 0 && cols > 0);
-        ArrayGeometry { rows, cols }
+        ArrayGeometry::try_new(rows, cols).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Like [`ArrayGeometry::new`], but surfaces bad dimensions as an
+    /// error naming the offending value — the config/CLI entry points
+    /// route through this so a zero dimension in a TOML file is a
+    /// reported config error, not an abort.
+    pub fn try_new(rows: u64, cols: u64) -> Result<ArrayGeometry, String> {
+        if rows == 0 || cols == 0 {
+            return Err(format!(
+                "array geometry {rows}x{cols} is invalid: both dimensions must be positive"
+            ));
+        }
+        Ok(ArrayGeometry { rows, cols })
     }
 
     pub fn pes(&self) -> u64 {
@@ -122,6 +134,98 @@ pub fn baseline_layer_timing(geom: ArrayGeometry, gemm: GemmDims, bufs: &BufferC
     layer_timing_at(geom, gemm, 0, geom.cols, bufs, None)
 }
 
+/// Progress of a partially executed layer at a fold boundary, under the
+/// independent feed model.  Fold order is K-band-major (all M-folds of
+/// band `i` before band `i + 1`), matching [`folds`].
+///
+/// A preemption can only take effect here: the fold in flight must drain
+/// its partial sums before the tile can be reshaped.  Work is credited at
+/// *K-band* granularity — a complete band has accumulated its psum
+/// contribution for every output column, so the remainder is exactly the
+/// GEMM `[Sr, K - bands_done·rows] × [K - bands_done·rows, M]` and can
+/// resume on any tile.  M-folds of a trailing *partial* band have no
+/// complete band to fold their psums into and are replayed by the
+/// remainder (`replayed_folds` / the `cycles - band_prefix_cycles` gap is
+/// the preemption's wasted refill; see `docs/preemption.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FoldBoundary {
+    /// Complete K-bands (fold-grid rows) finished by the boundary.
+    pub bands_done: u64,
+    /// M-folds completed inside the trailing partial band — work the
+    /// resumed remainder replays.
+    pub replayed_folds: u64,
+    /// Cycles from the segment's start to the boundary.
+    pub cycles: u64,
+    /// Cycles from the segment's start to the end of the last complete
+    /// band (`cycles - band_prefix_cycles` is the wasted replayed work).
+    pub band_prefix_cycles: u64,
+}
+
+/// The earliest fold boundary at or after `elapsed` cycles into a layer
+/// running `gemm` on `tile` (independent feed model).
+///
+/// Returns `None` when that boundary is the layer's own completion (or
+/// `elapsed` is already past it) — nothing is gained by preempting there.
+/// O(FK): per-band arithmetic, no per-fold loop (verified against the
+/// explicit fold scan by `tests::fold_boundary_matches_fold_scan`).
+pub fn next_fold_boundary(
+    geom: ArrayGeometry,
+    gemm: GemmDims,
+    tile: Tile,
+    elapsed: u64,
+) -> Option<FoldBoundary> {
+    let GemmDims { sr, k, m } = gemm;
+    assert!(sr > 0 && k > 0 && m > 0);
+    let fk = ceil_div(k, tile.rows);
+    let fm = ceil_div(m, tile.cols);
+    let w_last = m - (fm - 1) * tile.cols;
+    // Per-fold duration: load (row0 skew + h) plus stream (see the module
+    // doc) = base + h + w.
+    let base = tile.row0 + sr + geom.rows + tile.col0 - 1;
+    let mut t = 0u64;
+    for i in 0..fk {
+        let h = (k - i * tile.rows).min(tile.rows);
+        let d_full = base + h + tile.cols;
+        let d_last = base + h + w_last;
+        let band = (fm - 1) * d_full + d_last;
+        if elapsed >= t + band {
+            t += band;
+            continue;
+        }
+        let into = elapsed - t;
+        if into == 0 {
+            // Exactly on the band edge: band i-1's boundary, no replay.
+            return Some(FoldBoundary {
+                bands_done: i,
+                replayed_folds: 0,
+                cycles: t,
+                band_prefix_cycles: t,
+            });
+        }
+        if fm >= 2 && into <= (fm - 1) * d_full {
+            // Mid-band: finish the fold in flight; its band stays partial.
+            let j = ceil_div(into, d_full);
+            return Some(FoldBoundary {
+                bands_done: i,
+                replayed_folds: j,
+                cycles: t + j * d_full,
+                band_prefix_cycles: t,
+            });
+        }
+        // The fold in flight completes the band.
+        if i + 1 == fk {
+            return None; // ... and the band completes the layer
+        }
+        return Some(FoldBoundary {
+            bands_done: i + 1,
+            replayed_folds: 0,
+            cycles: t + band,
+            band_prefix_cycles: t + band,
+        });
+    }
+    None // elapsed is at or past the layer's completion
+}
+
 /// Shared core: time a layer on columns `[col0, col0+width)` of the array.
 ///
 /// `interleave`: `Some((p, slot))` applies the shared-feed-wire penalty of
@@ -135,7 +239,12 @@ pub fn layer_timing_at(
     bufs: &BufferConfig,
     interleave: Option<(u64, u64)>,
 ) -> LayerTiming {
-    assert!(width > 0 && col0 + width <= geom.cols, "slice out of range");
+    assert!(
+        width > 0 && col0 + width <= geom.cols,
+        "slice [{col0}, {}) out of range for a {}-column array",
+        col0 + width,
+        geom.cols
+    );
     layer_timing_tile(geom, gemm, Tile::full_height(geom, col0, width), bufs, interleave)
 }
 
@@ -154,7 +263,12 @@ pub fn layer_timing_with_share(
     share: &BufferConfig,
     interleave: Option<(u64, u64)>,
 ) -> LayerTiming {
-    assert!(width > 0 && col0 + width <= geom.cols, "slice out of range");
+    assert!(
+        width > 0 && col0 + width <= geom.cols,
+        "slice [{col0}, {}) out of range for a {}-column array",
+        col0 + width,
+        geom.cols
+    );
     layer_timing_tile_with_share(geom, gemm, Tile::full_height(geom, col0, width), share, interleave)
 }
 
@@ -183,7 +297,9 @@ pub fn layer_timing_tile_with_share(
 ) -> LayerTiming {
     assert!(
         tile.col_end() <= geom.cols && tile.row_end() <= geom.rows,
-        "tile out of range"
+        "tile {tile:?} out of range for a {}x{} array",
+        geom.rows,
+        geom.cols
     );
     let GemmDims { sr, k, m } = gemm;
     assert!(sr > 0 && k > 0 && m > 0);
@@ -388,6 +504,110 @@ mod tests {
             }
             prop::ensure_eq(t.cycles, loop_cycles, "cycles")
         });
+    }
+
+    #[test]
+    fn fold_boundary_matches_fold_scan() {
+        // The O(FK) per-band arithmetic must agree with an explicit scan
+        // over the fold durations for any tile, shape and elapsed time.
+        prop::check("next_fold_boundary == fold scan", 150, |rng| {
+            let geom = ArrayGeometry::new(
+                rng.gen_range_inclusive(1, 64),
+                rng.gen_range_inclusive(1, 64),
+            );
+            let rows = rng.gen_range_inclusive(1, geom.rows);
+            let row0 = rng.gen_range_inclusive(0, geom.rows - rows);
+            let cols = rng.gen_range_inclusive(1, geom.cols);
+            let col0 = rng.gen_range_inclusive(0, geom.cols - cols);
+            let tile = Tile::new(row0, col0, rows, cols);
+            let gemm = GemmDims {
+                sr: rng.gen_range_inclusive(1, 2000),
+                k: rng.gen_range_inclusive(1, 300),
+                m: rng.gen_range_inclusive(1, 300),
+            };
+            let fm = ceil_div(gemm.m, cols);
+            let durations: Vec<u64> = folds(gemm.k, gemm.m, rows, cols)
+                .map(|(h, w)| row0 + h + stream_cycles(gemm.sr, geom.rows, col0, w))
+                .collect();
+            let total: u64 = durations.iter().sum();
+            let elapsed = rng.gen_range(total + 3);
+            // Reference: the smallest fold-end >= elapsed.
+            let mut t = 0u64;
+            let mut n_folds = durations.len();
+            for (n, d) in durations.iter().enumerate() {
+                if t >= elapsed {
+                    n_folds = n;
+                    break;
+                }
+                t += d;
+            }
+            let fm_us = fm as usize;
+            let expect = if elapsed >= total || n_folds == durations.len() {
+                None
+            } else {
+                let prefix: u64 = durations[..n_folds / fm_us * fm_us].iter().sum();
+                Some(FoldBoundary {
+                    bands_done: (n_folds / fm_us) as u64,
+                    replayed_folds: (n_folds % fm_us) as u64,
+                    cycles: t,
+                    band_prefix_cycles: prefix,
+                })
+            };
+            prop::ensure_eq(next_fold_boundary(geom, gemm, tile, elapsed), expect, "boundary")
+        });
+    }
+
+    #[test]
+    fn fold_boundary_pinned_values() {
+        // The preemption example's heavy layer: [4000, 1024] x [1024, 64]
+        // on the full 128x128 array — 8 K-bands of one 4319-cycle fold.
+        let geom = ArrayGeometry::new(128, 128);
+        let g = GemmDims { sr: 4000, k: 1024, m: 64 };
+        let tile = Tile::full(geom);
+        let band = 128 + 4000 + 128 + 64 - 1; // load + stream
+        assert_eq!(band, 4319);
+        let fb = next_fold_boundary(geom, g, tile, 3000).unwrap();
+        let want =
+            FoldBoundary { bands_done: 1, replayed_folds: 0, cycles: 4319, band_prefix_cycles: 4319 };
+        assert_eq!(fb, want);
+        // Landing exactly on a boundary preempts there, with no replay.
+        let fb = next_fold_boundary(geom, g, tile, 2 * 4319).unwrap();
+        assert_eq!((fb.bands_done, fb.cycles), (2, 2 * 4319));
+        // Inside the last band (or past the end) there is nothing to gain.
+        assert_eq!(next_fold_boundary(geom, g, tile, 7 * 4319 + 1), None);
+        assert_eq!(next_fold_boundary(geom, g, tile, 8 * 4319), None);
+        assert_eq!(next_fold_boundary(geom, g, tile, u64::MAX), None);
+    }
+
+    #[test]
+    fn fold_boundary_counts_replayed_partial_band_folds() {
+        // m = 300 on 128 columns: fm = 3 (128, 128, 44).  Mid-band
+        // boundaries credit no K rows but count the folds to replay.
+        let geom = ArrayGeometry::new(128, 128);
+        let g = GemmDims { sr: 100, k: 256, m: 300 };
+        let tile = Tile::full(geom);
+        let d_full = 128 + 100 + 128 + 128 - 1; // 483
+        let fb = next_fold_boundary(geom, g, tile, 1).unwrap();
+        let want =
+            FoldBoundary { bands_done: 0, replayed_folds: 1, cycles: d_full, band_prefix_cycles: 0 };
+        assert_eq!(fb, want);
+        let fb = next_fold_boundary(geom, g, tile, d_full + 1).unwrap();
+        assert_eq!((fb.bands_done, fb.replayed_folds), (0, 2));
+        assert_eq!(fb.cycles - fb.band_prefix_cycles, 2 * d_full, "wasted = replayed folds");
+    }
+
+    #[test]
+    fn geometry_try_new_names_the_offending_value() {
+        assert_eq!(ArrayGeometry::try_new(64, 32), Ok(ArrayGeometry { rows: 64, cols: 32 }));
+        let e = ArrayGeometry::try_new(0, 8).unwrap_err();
+        assert!(e.contains("0x8"), "{e}");
+        assert!(ArrayGeometry::try_new(8, 0).unwrap_err().contains("8x0"));
+    }
+
+    #[test]
+    #[should_panic(expected = "0x8")]
+    fn geometry_new_panic_names_the_offending_value() {
+        let _ = ArrayGeometry::new(0, 8);
     }
 
     #[test]

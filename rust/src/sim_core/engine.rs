@@ -5,13 +5,14 @@ use std::collections::{BTreeMap, BinaryHeap};
 
 use super::event::Event;
 use super::observer::Observer;
-use super::scheduler::{Scheduler, SystemState};
+use super::scheduler::{Checkpoint, LayerExec, RunningLayer, Scheduler, SystemState};
 use crate::coordinator::metrics::{DispatchRecord, RunMetrics};
 use crate::coordinator::partition::{AllocId, PartitionManager};
 use crate::coordinator::queue::TaskQueue;
 use crate::mem::{MemSystem, MemUpdate};
 use crate::sim::activity::Activity;
 use crate::sim::dataflow::ArrayGeometry;
+use crate::sim::partitioned::Tile;
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 
 /// Execution details of an in-flight layer, keyed by its allocation.
@@ -20,7 +21,13 @@ struct Pending {
     dnn: DnnId,
     layer: LayerId,
     t_start: u64,
+    /// Currently scheduled completion (kept in sync with bandwidth
+    /// rescales; `u64::MAX` for a starved strict-priority flight).
+    t_end: u64,
     activity: Activity,
+    /// Armed preemption: the boundary cycle the segment drains at plus
+    /// the checkpoint describing what it completes there.
+    preempt: Option<(u64, Checkpoint)>,
 }
 
 /// The one simulation engine behind `mtsa run`, the scenario engine and
@@ -66,6 +73,10 @@ pub struct Engine<'p> {
     /// rescale recomputes the next release anyway, so one pending event
     /// (the earliest) suffices and later/duplicate requests are dropped.
     mem_release_at: Option<u64>,
+    /// K rows completed per `(dnn, layer)` by preempted segments — the
+    /// checkpoint ledger behind [`SystemState::k_done`].  Empty (and
+    /// never touched) unless the scheduler preempts.
+    progress: BTreeMap<(DnnId, LayerId), u64>,
     now: u64,
 }
 
@@ -90,6 +101,7 @@ impl<'p> Engine<'p> {
             idle_wakes: 0,
             mem: None,
             mem_release_at: None,
+            progress: BTreeMap::new(),
             now: 0,
         }
     }
@@ -119,6 +131,7 @@ impl<'p> Engine<'p> {
             queue: &self.queue,
             partitions: &self.partitions,
             mem: self.mem.as_ref().map(|m| m.feedback()),
+            progress: &self.progress,
         }
     }
 
@@ -127,8 +140,18 @@ impl<'p> Engine<'p> {
     /// schedule the next early bandwidth release, if any.
     fn apply_mem_update(&mut self, upd: MemUpdate) {
         for (alloc, t) in upd.reposts {
-            let p = self.pending[&alloc];
-            self.events.push(Reverse(Event::LayerComplete { t, dnn: p.dnn, layer: p.layer, alloc }));
+            let p = self.pending.get_mut(&alloc).expect("repost for live alloc");
+            p.t_end = t;
+            // A rescale that moves this flight's completion invalidates
+            // any armed preemption: its checkpoint was located on the old
+            // dilation and would credit K-bands the slowed (or sped-up)
+            // segment has not actually reached at the boundary.  Dropping
+            // the arm turns the pending Preempt event into a stale husk;
+            // a still-starved tenant re-triggers at a later decision
+            // point against the corrected timing.
+            p.preempt = None;
+            let (dnn, layer) = (p.dnn, p.layer);
+            self.events.push(Reverse(Event::LayerComplete { t, dnn, layer, alloc }));
         }
         if let Some(t) = upd.next_release {
             // One pending rescale is enough: if an earlier one is already
@@ -173,14 +196,21 @@ impl<'p> Engine<'p> {
                 };
             }
 
-            // One decision point over the settled state.
+            // One decision point over the settled state: plan dispatches
+            // into the free space first, then offer the policy its
+            // preemption check — starvation is judged against what the
+            // plan actually left free, so a layer dispatched this very
+            // cycle can itself become the victim (bounded to its first
+            // fold boundary).
             if needs_plan && !self.queue.all_done() {
                 self.dispatch(sched, obs);
+                self.request_preemptions(sched);
             }
 
             if self.queue.all_done() {
-                // Only Deadline/Repartition events can remain; report the
-                // deadlines (all met — the work finished first) and stop.
+                // Only Deadline/Repartition (or stale Preempt) events can
+                // remain; report the deadlines (all met — the work
+                // finished first) and stop.
                 while let Some(Reverse(ev)) = self.events.pop() {
                     if let Event::Deadline { t, dnn } = ev {
                         self.now = t;
@@ -215,6 +245,14 @@ impl<'p> Engine<'p> {
                 *needs_plan = true;
             }
             Event::LayerComplete { t, dnn, layer, alloc } => {
+                // A preemption may have evicted this alloc at an earlier
+                // fold boundary (absence — alloc ids are never reused) or
+                // shrunk it onto a re-priced remainder (t_end moved); the
+                // completion is then a husk to skip.
+                match self.pending.get(&alloc) {
+                    Some(p) if p.t_end == t => {}
+                    _ => return,
+                }
                 // Under the shared memory hierarchy a completion may have
                 // been superseded by a bandwidth rescale; the re-posted
                 // event is live and this one is a husk to skip.
@@ -251,6 +289,63 @@ impl<'p> Engine<'p> {
                 }
                 *needs_plan = true;
             }
+            Event::Preempt { t, dnn, layer, alloc } => {
+                // Stale if the segment already completed (a bandwidth
+                // rescale can pull a completion before the boundary), if
+                // the arm was invalidated by a rescale, or if a later
+                // decision point re-armed the alloc at a different
+                // boundary (then only the event matching the live arm is
+                // real; earlier ones are husks).
+                let Some(pend) = self.pending.get(&alloc).copied() else { return };
+                let Some((t_b, ckpt)) = pend.preempt else { return };
+                if t_b != t {
+                    return;
+                }
+                debug_assert_eq!((pend.dnn, pend.layer), (dnn, layer));
+                let tile = self.partitions.tile_of(alloc).expect("preempt of live alloc");
+                // Credit the completed K-bands before re-pricing anything.
+                if ckpt.k_advance > 0 {
+                    *self.progress.entry((dnn, layer)).or_insert(0) += ckpt.k_advance;
+                }
+                let l = &self.pool.dnns[dnn].layers[layer];
+                let rec = DispatchRecord {
+                    dnn,
+                    dnn_name: self.pool.dnns[dnn].name.clone(),
+                    layer,
+                    layer_name: l.name.clone(),
+                    tile,
+                    t_start: pend.t_start,
+                    t_end: t,
+                    activity: ckpt.activity,
+                };
+                obs.on_preempt(&rec, ckpt.replayed_folds, ckpt.wasted_cycles);
+                // Either way the segment's mem flight retires early:
+                // banks release, surviving co-runners' shares grow.
+                if let Some(mem) = self.mem.as_mut() {
+                    let (stats, upd) = mem.preempt(t, alloc);
+                    obs.on_mem(dnn, &self.pool.dnns[dnn].name, &stats);
+                    self.apply_mem_update(upd);
+                }
+                match ckpt.keep {
+                    Some(keep) => {
+                        // Drain-and-reshape in place: the remainder keeps
+                        // running on `keep`; the rest of the tile frees.
+                        self.partitions.shrink(alloc, keep);
+                        let coresident = self.partitions.allocated_count() as u64;
+                        let exec = sched.exec(&self.state(), dnn, layer, keep, coresident);
+                        self.schedule_segment(alloc, dnn, layer, keep, exec);
+                    }
+                    None => {
+                        // Evict: the whole tile frees (and merges); the
+                        // remainder re-enters the ready set with its
+                        // progress and competes at the next plan.
+                        self.pending.remove(&alloc);
+                        self.partitions.free(alloc);
+                        self.queue.mark_preempted(dnn, layer);
+                    }
+                }
+                *needs_plan = true;
+            }
             Event::Deadline { t, dnn } => {
                 let met = self.queue.dnn_done(dnn);
                 sched.on_deadline(&self.state(), dnn, met);
@@ -280,6 +375,103 @@ impl<'p> Engine<'p> {
         }
     }
 
+    /// Offer the policy its preemption decision point: every in-flight
+    /// layer not already draining toward a boundary is on the table
+    /// (including layers dispatched this very cycle — their first fold
+    /// boundary is still ahead).  A granted request arms the alloc and
+    /// posts its [`Event::Preempt`] at the checkpoint's fold boundary;
+    /// requests whose boundary would not beat the layer's own completion
+    /// are dropped.
+    /// Price and schedule a (re)dispatched layer segment at the current
+    /// cycle: under `[mem]`, admit its remaining GEMM's traffic (the
+    /// banked activity is what the observer bills) and take the
+    /// arbiter's completion prediction (`u64::MAX` for a starved
+    /// strict-priority flight — no event until a rescale frees it);
+    /// otherwise schedule the exec-priced completion directly.  Shared
+    /// by [`Engine::dispatch`] and the shrink-in-place preemption path.
+    fn schedule_segment(
+        &mut self,
+        alloc: AllocId,
+        dnn: DnnId,
+        layer: LayerId,
+        tile: Tile,
+        exec: LayerExec,
+    ) {
+        // A preempted remainder only moves its remaining GEMM's traffic
+        // — the same discount the policy's `exec` priced compute with.
+        let gemm = self.state().remaining_gemm(dnn, layer);
+        if let Some(mem) = self.mem.as_mut() {
+            let (activity, upd) = mem.admit(self.now, alloc, dnn, gemm, tile, exec.cycles);
+            let t_end = upd
+                .reposts
+                .iter()
+                .find(|&&(a2, _)| a2 == alloc)
+                .map(|&(_, t)| t)
+                .unwrap_or(u64::MAX);
+            self.pending.insert(
+                alloc,
+                Pending { dnn, layer, t_start: self.now, t_end, activity, preempt: None },
+            );
+            self.apply_mem_update(upd);
+        } else {
+            let t_end = self.now + exec.cycles.max(1);
+            let activity = exec.activity;
+            self.pending.insert(
+                alloc,
+                Pending { dnn, layer, t_start: self.now, t_end, activity, preempt: None },
+            );
+            self.events.push(Reverse(Event::LayerComplete { t: t_end, dnn, layer, alloc }));
+        }
+    }
+
+    fn request_preemptions(&mut self, sched: &mut dyn Scheduler) {
+        if self.pending.is_empty() || !sched.preempts() {
+            return;
+        }
+        let running: Vec<RunningLayer> = self
+            .pending
+            .iter()
+            .filter(|(_, p)| p.preempt.is_none())
+            .map(|(&alloc, p)| RunningLayer {
+                alloc,
+                dnn: p.dnn,
+                layer: p.layer,
+                tile: self.partitions.tile_of(alloc).expect("live alloc has a tile"),
+                t_start: p.t_start,
+                t_end: p.t_end,
+            })
+            .collect();
+        if running.is_empty() {
+            return;
+        }
+        let mut requests = sched.preempt(&self.state(), &running);
+        requests.sort_unstable();
+        requests.dedup();
+        for alloc in requests {
+            let Some(run) = running.iter().find(|r| r.alloc == alloc) else { continue };
+            let elapsed = self.now - run.t_start;
+            let total = run.t_end.saturating_sub(run.t_start);
+            let Some(ckpt) =
+                sched.checkpoint(&self.state(), run.dnn, run.layer, run.tile, elapsed, total)
+            else {
+                continue;
+            };
+            let t_b = run.t_start.saturating_add(ckpt.boundary).max(self.now);
+            if t_b >= run.t_end {
+                continue; // the layer finishes first: let it drain whole
+            }
+            if let Some(p) = self.pending.get_mut(&alloc) {
+                p.preempt = Some((t_b, ckpt));
+            }
+            self.events.push(Reverse(Event::Preempt {
+                t: t_b,
+                dnn: run.dnn,
+                layer: run.layer,
+                alloc,
+            }));
+        }
+    }
+
     fn dispatch(&mut self, sched: &mut dyn Scheduler, obs: &mut dyn Observer) {
         let allocs = sched.plan(&self.state());
         if !allocs.is_empty() {
@@ -298,32 +490,10 @@ impl<'p> Engine<'p> {
             let coresident = self.partitions.allocated_count() as u64;
             let exec = sched.exec(&self.state(), a.dnn, a.layer, tile, coresident);
             obs.on_dispatch(self.now, a.dnn, a.layer, tile);
-            if let Some(mem) = self.mem.as_mut() {
-                // Shared memory hierarchy: `exec.cycles` is the compute
-                // path; the mem system grants banks, re-prices the DRAM
-                // traffic under the banked share (that activity is what
-                // the observer bills) and predicts the contended
-                // completion — posted via the update, alongside any
-                // co-runner completions it rescaled.
-                let gemm = self.pool.dnns[a.dnn].layers[a.layer].shape.gemm();
-                let (activity, upd) = mem.admit(self.now, alloc, a.dnn, gemm, tile, exec.cycles);
-                self.pending.insert(
-                    alloc,
-                    Pending { dnn: a.dnn, layer: a.layer, t_start: self.now, activity },
-                );
-                self.apply_mem_update(upd);
-            } else {
-                self.pending.insert(
-                    alloc,
-                    Pending { dnn: a.dnn, layer: a.layer, t_start: self.now, activity: exec.activity },
-                );
-                self.events.push(Reverse(Event::LayerComplete {
-                    t: self.now + exec.cycles.max(1),
-                    dnn: a.dnn,
-                    layer: a.layer,
-                    alloc,
-                }));
-            }
+            // Under [mem], `exec.cycles` is the compute path; the mem
+            // system grants banks, re-prices the DRAM traffic under the
+            // banked share and predicts the contended completion.
+            self.schedule_segment(alloc, a.dnn, a.layer, tile, exec);
         }
         if let Some(dt) = sched.wake_after(&self.state()) {
             // Livelock detector: a wake-up scheduled while nothing else

@@ -6,8 +6,8 @@ use crate::workloads::dnng::{DnnId, LayerId};
 /// One discrete event in the simulated timeline.
 ///
 /// Events at the same cycle are processed in the order
-/// `Arrival < LayerComplete < Deadline < Repartition` (ties broken by
-/// `(dnn, layer)`), which encodes three invariants:
+/// `Arrival < LayerComplete < Preempt < Deadline < Repartition` (ties
+/// broken by `(dnn, layer)`), which encodes three invariants:
 ///
 /// - arrivals have no side effect beyond scheduler hooks, so they may go
 ///   first;
@@ -24,6 +24,13 @@ pub enum Event {
     Arrival { t: u64, dnn: DnnId },
     /// A dispatched layer drains; its partition is freed (and merged).
     LayerComplete { t: u64, dnn: DnnId, layer: LayerId, alloc: AllocId },
+    /// A scheduler-requested preemption reaches the running layer's next
+    /// fold boundary: the completed K-bands drain, the tile frees, and
+    /// the remainder returns to the ready set carrying its progress (see
+    /// [`Scheduler::preempt`](super::Scheduler::preempt) and
+    /// `docs/preemption.md`).  Ordered with completions (a completion at
+    /// the same cycle wins and turns the preemption into a stale husk).
+    Preempt { t: u64, dnn: DnnId, layer: LayerId, alloc: AllocId },
     /// A request's absolute QoS deadline passes.
     Deadline { t: u64, dnn: DnnId },
     /// A scheduler-requested wake-up (see
@@ -45,6 +52,7 @@ impl Event {
         match *self {
             Event::Arrival { t, .. }
             | Event::LayerComplete { t, .. }
+            | Event::Preempt { t, .. }
             | Event::Deadline { t, .. }
             | Event::Repartition { t }
             | Event::MemRescale { t } => t,
@@ -56,9 +64,10 @@ impl Event {
         match *self {
             Event::Arrival { t, dnn } => (t, 0, dnn, 0),
             Event::LayerComplete { t, dnn, layer, .. } => (t, 1, dnn, layer),
-            Event::Deadline { t, dnn } => (t, 2, dnn, 0),
-            Event::Repartition { t } => (t, 3, 0, 0),
-            Event::MemRescale { t } => (t, 4, 0, 0),
+            Event::Preempt { t, dnn, layer, .. } => (t, 2, dnn, layer),
+            Event::Deadline { t, dnn } => (t, 3, dnn, 0),
+            Event::Repartition { t } => (t, 4, 0, 0),
+            Event::MemRescale { t } => (t, 5, 0, 0),
         }
     }
 }
@@ -90,6 +99,9 @@ mod tests {
         assert!(arr < done, "arrivals before completions at the same cycle");
         assert!(done < dl, "completions retire before deadlines are judged");
         assert!(dl < rp);
+        let pre = Event::Preempt { t: 10, dnn: 0, layer: 3, alloc: 7 };
+        assert!(done < pre, "a same-cycle completion beats its preemption");
+        assert!(pre < dl, "preemptions settle before deadlines are judged");
         let done_b = Event::LayerComplete { t: 10, dnn: 1, layer: 0, alloc: 8 };
         assert!(done < done_b, "completion ties break by (dnn, layer)");
         let mr = Event::MemRescale { t: 10 };

@@ -11,7 +11,9 @@
 //! event-driven core; this module adopts that shape:
 //!
 //! - [`Event`] — the event kinds a multi-tenant accelerator sees:
-//!   DNN [`Event::Arrival`], [`Event::LayerComplete`], a scheduled
+//!   DNN [`Event::Arrival`], [`Event::LayerComplete`], a fold-boundary
+//!   [`Event::Preempt`] (a running layer drains mid-layer so an arrival
+//!   can reclaim its PEs — see `docs/preemption.md`), a scheduled
 //!   [`Event::Repartition`] wake-up, a QoS [`Event::Deadline`], and —
 //!   when the shared memory hierarchy ([`crate::mem`]) is enabled — the
 //!   engine-internal [`Event::MemRescale`] bandwidth-release point.
@@ -48,4 +50,4 @@ mod scheduler;
 pub use engine::Engine;
 pub use event::Event;
 pub use observer::Observer;
-pub use scheduler::{Allocation, LayerExec, Scheduler, SystemState};
+pub use scheduler::{Allocation, Checkpoint, LayerExec, RunningLayer, Scheduler, SystemState};

@@ -19,6 +19,15 @@ pub trait Observer {
     /// end, activity).
     fn on_layer_complete(&mut self, _rec: &DispatchRecord) {}
 
+    /// A running layer drained at a fold boundary because the scheduler
+    /// preempted it; `rec` covers the drained segment (its `t_end` is the
+    /// boundary cycle, its activity only the completed K-bands).  The
+    /// layer is NOT done — it returns to the ready set and later segments
+    /// (ending in a final `on_layer_complete`) finish it.
+    /// `replayed_folds`/`wasted_cycles` are the partial-band work the
+    /// remainder replays.  Only fires when a preempting policy runs.
+    fn on_preempt(&mut self, _rec: &DispatchRecord, _replayed_folds: u64, _wasted_cycles: u64) {}
+
     /// A request's deadline cycle passed; `met` is whether its DNN had
     /// completed by then (completions at the same cycle count as met).
     fn on_deadline(&mut self, _dnn: DnnId, _t: u64, _met: bool) {}
@@ -37,6 +46,10 @@ pub trait Observer {
 impl Observer for RunMetrics {
     fn on_layer_complete(&mut self, rec: &DispatchRecord) {
         self.record_dispatch(rec.clone());
+    }
+
+    fn on_preempt(&mut self, rec: &DispatchRecord, replayed_folds: u64, wasted_cycles: u64) {
+        self.record_preempt(rec.clone(), replayed_folds, wasted_cycles);
     }
 
     fn on_mem(&mut self, _dnn: DnnId, tenant: &str, stats: &MemStats) {

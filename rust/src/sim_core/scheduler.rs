@@ -1,11 +1,14 @@
 //! The `Scheduler` policy trait and the state view it decides over.
 
-use crate::coordinator::partition::PartitionManager;
+use std::collections::BTreeMap;
+
+use crate::coordinator::partition::{AllocId, PartitionManager};
 use crate::coordinator::queue::TaskQueue;
 use crate::mem::{MemFeedback, MemSpec};
 use crate::sim::activity::Activity;
 use crate::sim::partitioned::Tile;
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
+use crate::workloads::shapes::GemmDims;
 
 /// Read-only view of the world a policy decides over: the current cycle,
 /// the workload pool, layer progress (ready set, per-DNN completion), the
@@ -24,6 +27,75 @@ pub struct SystemState<'e> {
     /// Live memory-system feedback (stall fractions, in-flight
     /// memory-bound layers); `None` when `[mem]` is disabled.
     pub mem: Option<&'e MemFeedback>,
+    /// K rows already completed per `(dnn, layer)` by earlier preempted
+    /// segments — empty unless a preempting policy ran.  A policy that
+    /// supports preemption prices the *remaining* GEMM (`k -
+    /// k_done`) in [`Scheduler::plan`]/[`Scheduler::exec`].
+    pub progress: &'e BTreeMap<(DnnId, LayerId), u64>,
+}
+
+impl SystemState<'_> {
+    /// K rows of `(dnn, layer)` completed by earlier preempted segments
+    /// (0 for layers that were never preempted).
+    pub fn k_done(&self, dnn: DnnId, layer: LayerId) -> u64 {
+        self.progress.get(&(dnn, layer)).copied().unwrap_or(0)
+    }
+
+    /// The GEMM still to execute for `(dnn, layer)`: the full lowered
+    /// shape minus the [`SystemState::k_done`] rows (clamped so at least
+    /// one K row remains).  THE one formula for remainder sizing — the
+    /// engine prices a remainder's DRAM traffic with it and a preempting
+    /// policy must price its compute the same way, or words and cycles
+    /// desynchronize.  Identical to the full shape when nothing was
+    /// preempted.
+    pub fn remaining_gemm(&self, dnn: DnnId, layer: LayerId) -> GemmDims {
+        let mut gemm = self.pool.dnns[dnn].layers[layer].shape.gemm();
+        gemm.k -= self.k_done(dnn, layer).min(gemm.k - 1);
+        gemm
+    }
+}
+
+/// An in-flight layer as the engine shows it to
+/// [`Scheduler::preempt`]: where it runs and when it is scheduled to
+/// finish (`t_end` is the currently live completion prediction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunningLayer {
+    pub alloc: AllocId,
+    pub dnn: DnnId,
+    pub layer: LayerId,
+    pub tile: Tile,
+    pub t_start: u64,
+    /// Currently scheduled completion cycle (`u64::MAX` when a starved
+    /// strict-priority transfer has no live prediction).
+    pub t_end: u64,
+}
+
+/// A preemption checkpoint located by [`Scheduler::checkpoint`]: where
+/// the running segment's next fold boundary falls and what the segment
+/// will have completed when it drains there.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Checkpoint {
+    /// Wall cycles from the segment's dispatch to the fold boundary.
+    pub boundary: u64,
+    /// K rows of the layer's GEMM this segment completes by the boundary
+    /// (complete K-bands only); the engine credits them to
+    /// [`SystemState::k_done`] and the remainder resumes from there.
+    pub k_advance: u64,
+    /// M-folds of the trailing partial band the remainder replays.
+    pub replayed_folds: u64,
+    /// Wall cycles the segment spent on folds that will be replayed —
+    /// the preemption's wasted refill (reported per run).
+    pub wasted_cycles: u64,
+    /// Activity the segment actually completed (billed to its record;
+    /// the replayed folds' traffic is re-billed by the remainder).
+    pub activity: Activity,
+    /// What happens to the remainder at the boundary.  `Some(keep)`:
+    /// **shrink in place** — the layer keeps running, re-priced on
+    /// `keep` (a sub-tile of its running tile), and only the rest of the
+    /// tile frees; the policy never has to win the next plan to make
+    /// progress.  `None`: **evict** — the whole tile frees and the
+    /// remainder returns to the ready set carrying its progress.
+    pub keep: Option<Tile>,
 }
 
 /// One scheduling decision: run `(dnn, layer)` on `tile` starting now.
@@ -99,6 +171,57 @@ pub trait Scheduler {
 
     /// A wake-up previously requested via [`Scheduler::wake_after`] fired.
     fn on_repartition(&mut self, _state: &SystemState<'_>) {}
+
+    /// Capability flag: does this policy ever call for preemptions?
+    ///
+    /// `false` (the default) lets the engine skip building the
+    /// running-layer view entirely — non-preempting policies pay nothing
+    /// for the machinery.  A policy overriding [`Scheduler::preempt`]
+    /// must return `true` here (gate it on its own config, as the
+    /// dynamic policy does with `preempt = off`).
+    fn preempts(&self) -> bool {
+        false
+    }
+
+    /// Nominate running layers to preempt at their next fold boundary.
+    ///
+    /// Called once per decision point, *after* [`Scheduler::plan`] has
+    /// dispatched (so starvation is judged against what is actually left
+    /// free), with every in-flight layer not already draining toward a
+    /// preemption.  For each returned alloc the engine asks
+    /// [`Scheduler::checkpoint`] for the boundary and posts a
+    /// [`Preempt`](super::Event::Preempt) event there; at that cycle the
+    /// segment drains, the completed K-bands are credited to
+    /// [`SystemState::k_done`], and — per the checkpoint's `keep` — the
+    /// layer either shrinks in place onto a sub-tile (the freed rest
+    /// goes to the next plan) or is evicted back to the ready set.
+    /// Requests whose boundary would not beat the layer's own completion
+    /// are ignored.  Default: never preempt.
+    fn preempt(&mut self, _state: &SystemState<'_>, _running: &[RunningLayer]) -> Vec<AllocId> {
+        Vec::new()
+    }
+
+    /// Locate the next fold boundary of an in-flight layer segment.
+    ///
+    /// `elapsed` is wall cycles since the segment's dispatch and `total`
+    /// its full priced duration (the [`Scheduler::exec`] cycles, possibly
+    /// stretched by a bandwidth rescale).  A policy that preempts maps
+    /// `elapsed` onto its fold clock (see
+    /// [`next_fold_boundary`](crate::sim::dataflow::next_fold_boundary))
+    /// and reports where the segment can drain and what it completes
+    /// there.  Default `None`: the policy cannot be preempted and
+    /// [`Scheduler::preempt`] requests are ignored.
+    fn checkpoint(
+        &self,
+        _state: &SystemState<'_>,
+        _dnn: DnnId,
+        _layer: LayerId,
+        _tile: Tile,
+        _elapsed: u64,
+        _total: u64,
+    ) -> Option<Checkpoint> {
+        None
+    }
 
     /// Map the current state to zero or more dispatches.  Returning an
     /// empty vector means "wait" — the engine will call again at the next

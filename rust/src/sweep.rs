@@ -30,7 +30,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::baseline::SequentialBaseline;
 use crate::coordinator::scenario::{Scenario, ScenarioOutcome, ScenarioSpec};
 use crate::coordinator::scheduler::{
-    AllocPolicy, DynamicScheduler, FeedModel, PartitionMode, SchedulerConfig,
+    AllocPolicy, DynamicScheduler, FeedModel, PartitionMode, PreemptMode, SchedulerConfig,
 };
 use crate::mem::{ArbitrationMode, MemConfig, MemStats};
 use crate::sim::dataflow::ArrayGeometry;
@@ -59,6 +59,11 @@ pub struct SweepGrid {
     /// config's mode (so the report carries no mode fields and stays
     /// byte-identical to the pre-2D sweep).
     pub modes: Vec<PartitionMode>,
+    /// Preemption axis (`off` / `arrival` / `deadline`, the dynamic
+    /// policy's fold-boundary drain-and-reshape); empty = inherit the
+    /// base config's mode (report carries no preempt fields and stays
+    /// byte-identical to the non-preemptive sweep).
+    pub preempts: Vec<PreemptMode>,
     /// Requests per scenario (DNN instances round-robined over the mix).
     pub requests: usize,
     /// Deadline slack factor; `0` disables deadlines.
@@ -90,6 +95,7 @@ impl Default for SweepGrid {
             feeds: vec![FeedModel::Independent, FeedModel::Interleaved],
             geoms: Vec::new(),
             modes: Vec::new(),
+            preempts: Vec::new(),
             requests: 12,
             qos_slack: 3.0,
             bursty: None,
@@ -126,6 +132,9 @@ pub struct SweepPoint {
     /// Partition mode this point runs under (the base config's when the
     /// grid has no mode axis).
     pub mode: PartitionMode,
+    /// Preemption mode this point runs under (the base config's when the
+    /// grid has no preempt axis).
+    pub preempt: PreemptMode,
     /// `(interface words/cycle, arbitration)` when this point runs under
     /// the shared memory hierarchy; `None` inherits the base config.
     pub mem: Option<(f64, ArbitrationMode)>,
@@ -154,6 +163,11 @@ pub struct SweepRow {
     /// Memory-hierarchy summary of the dynamic run; `Some` exactly when
     /// the point ran with `[mem]` enabled.
     pub mem: Option<MemSummary>,
+    /// Fold-boundary preemptions the dynamic run took (0 with `preempt`
+    /// off — the counters only reach the report when the axis is on).
+    pub preemptions: u64,
+    /// Cycles the dynamic run spent on replayed folds.
+    pub wasted_refill_cycles: u64,
 }
 
 /// Shared-memory summary of one grid point's dynamic run.
@@ -167,12 +181,14 @@ pub struct MemSummary {
 }
 
 /// Expand a grid into its points (row-major over mix, rate, policy, feed,
-/// geometry, partition mode — the JSON/table row order).
+/// geometry, partition mode, mem, preempt — the JSON/table row order).
 pub fn expand(grid: &SweepGrid, base: &SchedulerConfig) -> Vec<SweepPoint> {
     let geoms: Vec<ArrayGeometry> =
         if grid.geoms.is_empty() { vec![base.geom] } else { grid.geoms.clone() };
     let modes: Vec<PartitionMode> =
         if grid.modes.is_empty() { vec![base.partition_mode] } else { grid.modes.clone() };
+    let preempts: Vec<PreemptMode> =
+        if grid.preempts.is_empty() { vec![base.preempt] } else { grid.preempts.clone() };
     // The contention axis: no bandwidths = one inherit-the-base point.
     let mems: Vec<Option<(f64, ArbitrationMode)>> = if grid.bandwidths.is_empty() {
         vec![None]
@@ -195,17 +211,20 @@ pub fn expand(grid: &SweepGrid, base: &SchedulerConfig) -> Vec<SweepPoint> {
                     for &geom in &geoms {
                         for &mode in &modes {
                             for &mem in &mems {
-                                points.push(SweepPoint {
-                                    index: points.len(),
-                                    mix: mix.clone(),
-                                    mean_interarrival: rate,
-                                    policy,
-                                    feed,
-                                    geom,
-                                    mode,
-                                    mem,
-                                    scenario_seed,
-                                });
+                                for &preempt in &preempts {
+                                    points.push(SweepPoint {
+                                        index: points.len(),
+                                        mix: mix.clone(),
+                                        mean_interarrival: rate,
+                                        policy,
+                                        feed,
+                                        geom,
+                                        mode,
+                                        preempt,
+                                        mem,
+                                        scenario_seed,
+                                    });
+                                }
                             }
                         }
                     }
@@ -243,6 +262,7 @@ fn run_point(
         min_width: (geom.cols / 8).max(1).min(base.min_width.max(1)),
         min_rows: (geom.rows / 8).max(1).min(base.min_rows.max(1)),
         partition_mode: point.mode,
+        preempt: point.preempt,
         feed_model: point.feed,
         alloc_policy: point.policy,
         ..base.clone()
@@ -286,6 +306,8 @@ fn run_point(
         seq_makespan: sequential.makespan,
         utilization: dynamic.utilization(cfg.geom),
         seq_utilization: sequential.utilization(cfg.geom),
+        preemptions: dynamic.preemptions,
+        wasted_refill_cycles: dynamic.wasted_refill_cycles,
         outcome,
         seq_outcome,
         occupancy: dynamic.occupancy_timeline(geom, OCCUPANCY_BUCKETS),
@@ -406,6 +428,25 @@ mod tests {
         assert_eq!(points.len(), 2);
         assert_eq!(points[0].mode, PartitionMode::Columns);
         assert_eq!(points[1].mode, PartitionMode::TwoD);
+    }
+
+    #[test]
+    fn preempt_axis_expands_and_default_inherits_off() {
+        let grid = SweepGrid {
+            mixes: vec!["light".into()],
+            rates: vec![0.0],
+            policies: vec![AllocPolicy::WidestToHeaviest],
+            feeds: vec![FeedModel::Independent],
+            preempts: vec![PreemptMode::Off, PreemptMode::Arrival, PreemptMode::Deadline],
+            ..Default::default()
+        };
+        let points = expand(&grid, &SchedulerConfig::default());
+        assert_eq!(points.len(), 3);
+        assert_eq!(points[0].preempt, PreemptMode::Off);
+        assert_eq!(points[1].preempt, PreemptMode::Arrival);
+        assert_eq!(points[2].preempt, PreemptMode::Deadline);
+        let plain = expand(&SweepGrid::default(), &SchedulerConfig::default());
+        assert!(plain.iter().all(|p| p.preempt == PreemptMode::Off));
     }
 
     #[test]

@@ -23,7 +23,7 @@ use mtsa::coordinator::partition::{AllocId, PartitionManager};
 use mtsa::coordinator::queue::TaskQueue;
 use mtsa::coordinator::scenario::{Scenario, ScenarioSpec};
 use mtsa::coordinator::scheduler::{
-    AllocPolicy, DynamicScheduler, FeedModel, PartitionMode, SchedulerConfig,
+    AllocPolicy, DynamicScheduler, FeedModel, PartitionMode, PreemptMode, SchedulerConfig,
 };
 use mtsa::coordinator::static_part::StaticPartitioning;
 use mtsa::sim::dram::DramConfig;
@@ -513,6 +513,69 @@ fn columns_mode_is_default_and_byte_identical() {
             assert_eq!(d.tile.rows, def_cfg.geom.rows, "{name}: columns tiles span all rows");
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Preemption parity guard: `preempt = off` (the default) must produce
+// byte-identical runs and sweep JSON to the non-preemptive system, and
+// the preempt JSON keys may only appear when preemption is actually on.
+// ---------------------------------------------------------------------
+
+#[test]
+fn preempt_off_is_default_and_byte_identical() {
+    for (name, pool) in paper_mixes() {
+        let def_cfg = SchedulerConfig::default();
+        assert_eq!(def_cfg.preempt, PreemptMode::Off, "preemption must be opt-in");
+        let def = DynamicScheduler::new(def_cfg.clone()).run(&pool);
+        let explicit = DynamicScheduler::new(SchedulerConfig {
+            preempt: PreemptMode::Off,
+            ..def_cfg.clone()
+        })
+        .run(&pool);
+        assert_metrics_identical(&def, &explicit, name);
+        assert_eq!(def.preemptions, 0, "{name}: off => no preemptions");
+        assert_eq!(def.replayed_folds, 0);
+        assert_eq!(def.wasted_refill_cycles, 0);
+        // ... and the legacy golden above already pins `def` against the
+        // frozen pre-engine loop, so off == the pre-preemption system.
+    }
+
+    let grid = mtsa::sweep::SweepGrid {
+        mixes: vec!["light".into()],
+        rates: vec![0.0, 40_000.0],
+        policies: vec![AllocPolicy::WidestToHeaviest],
+        feeds: vec![FeedModel::Independent],
+        requests: 4,
+        ..Default::default()
+    };
+    let base = SchedulerConfig::default();
+    let default_json =
+        mtsa::report::sweep_json(&grid, &mtsa::sweep::run_sweep(&grid, &base, 2).unwrap())
+            .render();
+    let explicit = mtsa::sweep::SweepGrid { preempts: vec![PreemptMode::Off], ..grid.clone() };
+    let explicit_json =
+        mtsa::report::sweep_json(&explicit, &mtsa::sweep::run_sweep(&explicit, &base, 2).unwrap())
+            .render();
+    assert_eq!(default_json, explicit_json, "explicit preempt=off changed the sweep bytes");
+    for key in ["\"preempt\"", "\"preempts\"", "\"preemptions\"", "\"wasted_refill_cycles\""] {
+        assert!(!default_json.contains(key), "preempt-off sweep JSON leaked {key}");
+    }
+    // The keys DO appear once a preempting point runs.
+    let with_pre = mtsa::sweep::SweepGrid {
+        preempts: vec![PreemptMode::Off, PreemptMode::Arrival],
+        ..grid.clone()
+    };
+    let json_pre =
+        mtsa::report::sweep_json(&with_pre, &mtsa::sweep::run_sweep(&with_pre, &base, 2).unwrap())
+            .render();
+    for key in ["\"preempt\"", "\"preempts\"", "\"preemptions\"", "\"wasted_refill_cycles\""] {
+        assert!(json_pre.contains(key), "preempting sweep JSON must carry {key}");
+    }
+    // ... and the preempting sweep stays thread-count invariant.
+    let json_pre_8 =
+        mtsa::report::sweep_json(&with_pre, &mtsa::sweep::run_sweep(&with_pre, &base, 8).unwrap())
+            .render();
+    assert_eq!(json_pre, json_pre_8, "preempting sweep must stay thread-count invariant");
 }
 
 #[test]

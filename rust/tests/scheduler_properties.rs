@@ -8,7 +8,7 @@ use std::collections::BTreeMap;
 use mtsa::coordinator::baseline::SequentialBaseline;
 use mtsa::coordinator::partition::{AllocId, PartitionManager};
 use mtsa::coordinator::scheduler::{
-    AllocPolicy, DynamicScheduler, FeedModel, PartitionMode, SchedulerConfig,
+    AllocPolicy, DynamicScheduler, FeedModel, PartitionMode, PreemptMode, SchedulerConfig,
 };
 use mtsa::mem::{ArbitrationMode, BandwidthArbiter, MemConfig, MemUpdate};
 use mtsa::report;
@@ -359,6 +359,99 @@ fn mem_aware_sweep_json_is_thread_count_invariant() {
     assert_eq!(a, b, "1 vs 4 workers changed the mem-aware report bytes");
     assert_eq!(a, c, "1 vs 8 workers changed the mem-aware report bytes");
     assert!(a.contains("\"mem\""), "contention points must carry mem stats");
+}
+
+#[test]
+fn preemption_never_loses_work() {
+    // Fold-boundary preemption invariants, for ANY workload and either
+    // preempting mode, in both partition modes:
+    //  - every layer still completes exactly once (the extra records are
+    //    segments: dispatches - layers == preemptions);
+    //  - work is conserved — each layer's MACs split exactly across its
+    //    segments (completed K-bands) plus its final record (the
+    //    remainder re-bills replayed folds, never double-billing MACs);
+    //  - chain order holds across segments (layer i+1 starts after layer
+    //    i's last segment ends) and no two time-overlapping records
+    //    share PEs (reshape conserves spatial isolation);
+    //  - the makespan still respects every DNN's critical path.
+    prop::check("preemption work conservation", 25, |rng| {
+        let gcfg = GeneratorCfg {
+            num_dnns: rng.gen_range_inclusive(2, 6) as usize,
+            layers_min: 1,
+            layers_max: 6,
+            mean_interarrival: *rng.choose(&[5_000.0, 20_000.0, 60_000.0]),
+            dim_scale: 0.4 + rng.gen_f64() * 0.8,
+        };
+        let pool = random_pool(rng, &gcfg);
+        let cfg = SchedulerConfig {
+            preempt: *rng.choose(&[PreemptMode::Arrival, PreemptMode::Deadline]),
+            partition_mode: *rng.choose(&[PartitionMode::Columns, PartitionMode::TwoD]),
+            ..SchedulerConfig::default()
+        };
+        let m = DynamicScheduler::new(cfg).run(&pool);
+
+        prop::ensure_eq(
+            m.dispatches.len(),
+            pool.total_layers() + m.preemptions as usize,
+            "records == layers + preempted segments",
+        )?;
+        for (di, dnn) in pool.dnns.iter().enumerate() {
+            prop::ensure_eq(
+                m.completion.get(&dnn.name).is_some(),
+                true,
+                "every DNN completes",
+            )?;
+            let mut last_end = dnn.arrival_cycles;
+            for (li, layer) in dnn.layers.iter().enumerate() {
+                let recs: Vec<_> = m
+                    .dispatches
+                    .iter()
+                    .filter(|d| d.dnn == di && d.layer == li)
+                    .collect();
+                prop::ensure(!recs.is_empty(), "layer has at least one record")?;
+                let macs: u64 = recs.iter().map(|d| d.activity.macs).sum();
+                prop::ensure_eq(macs, layer.shape.gemm().macs(), "MAC conservation")?;
+                let start = recs.iter().map(|d| d.t_start).min().unwrap();
+                let end = recs.iter().map(|d| d.t_end).max().unwrap();
+                prop::ensure(start >= last_end, "chain order across segments")?;
+                last_end = end;
+            }
+        }
+        // Reshaped tiles still never share PEs with a co-running record.
+        for (i, a) in m.dispatches.iter().enumerate() {
+            for b in &m.dispatches[i + 1..] {
+                if a.t_start < b.t_end && b.t_start < a.t_end {
+                    prop::ensure(
+                        !a.tile.overlaps(&b.tile),
+                        &format!(
+                            "{}/{} and {}/{} overlap in time AND PEs after a reshape",
+                            a.dnn_name, a.layer_name, b.dnn_name, b.layer_name
+                        ),
+                    )?;
+                }
+            }
+        }
+        // Preemption adds overhead, never time travel.
+        for dnn in &pool.dnns {
+            let full_width: u64 = dnn
+                .layers
+                .iter()
+                .map(|l| {
+                    mtsa::sim::dataflow::baseline_layer_timing(
+                        SchedulerConfig::default().geom,
+                        l.shape.gemm(),
+                        &SchedulerConfig::default().buffers,
+                    )
+                    .cycles
+                })
+                .sum();
+            prop::ensure(
+                m.makespan >= dnn.arrival_cycles + full_width,
+                "critical-path lower bound survives preemption",
+            )?;
+        }
+        Ok(())
+    });
 }
 
 #[test]
