@@ -61,11 +61,13 @@ impl Bench {
         while t0.elapsed() < self.opts.warmup {
             f();
         }
-        // Measure.
+        // Measure.  `min_iters` is honored unconditionally: a fast closure
+        // must never be under-sampled just because `measure` elapsed (or
+        // because `max_iters <= min_iters` made the cap win the race).
         let mut samples = Vec::new();
         let t1 = Instant::now();
-        while (t1.elapsed() < self.opts.measure || samples.len() < self.opts.min_iters)
-            && samples.len() < self.opts.max_iters
+        while samples.len() < self.opts.min_iters
+            || (t1.elapsed() < self.opts.measure && samples.len() < self.opts.max_iters)
         {
             let s = Instant::now();
             f();
@@ -131,6 +133,42 @@ mod tests {
             std::hint::black_box(1 + 1);
         });
         assert_eq!(s.n, 50);
+        b.finish();
+    }
+
+    #[test]
+    fn min_iters_honored_when_measure_elapses_first() {
+        // A zero measurement window used to starve fast closures down to a
+        // single sample: the old loop condition let `max_iters` (or an
+        // already-elapsed `measure`) short-circuit `min_iters`.
+        let mut b = Bench::new("min").with_opts(BenchOpts {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_millis(0),
+            min_iters: 25,
+            max_iters: 50,
+        });
+        let s = b.measure("fast", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.n >= 25, "min_iters must be honored unconditionally, got {}", s.n);
+        assert!(s.n <= 50, "max_iters still caps past min_iters, got {}", s.n);
+        b.finish();
+    }
+
+    #[test]
+    fn min_iters_wins_over_smaller_max_iters() {
+        // When the two bounds conflict, the sampling floor wins — a summary
+        // over too few samples is worse than a slightly longer run.
+        let mut b = Bench::new("conflict").with_opts(BenchOpts {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_millis(0),
+            min_iters: 10,
+            max_iters: 3,
+        });
+        let s = b.measure("fast", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.n, 10);
         b.finish();
     }
 }

@@ -1,0 +1,338 @@
+//! `mtsa bench` — the recorded perf trajectory.
+//!
+//! Each growth PR extends a trajectory of `BENCH_<n>.json` files at the
+//! repository root: `mtsa bench --record` measures the engine hot path on
+//! this host and writes the current PR's file; `--check` compares the
+//! fresh measurement against a committed baseline and fails on a >15%
+//! events/sec regression.  A baseline is only *gating* when its
+//! `provenance` field is `"measured"` — a file whose numbers were
+//! projected on a host without a toolchain records the trajectory shape
+//! but must not fail builds on other hardware.  `docs/benchmarks.md` is
+//! the narrative version of this contract.
+//!
+//! Scenarios (kept stable across PRs so the trajectory stays comparable):
+//! - `engine_run_heavy` — `DynamicScheduler::run` over the heavy pool;
+//!   `events_per_sec` counts engine events (arrivals + completed layers +
+//!   preemptions) retired per wall-clock second.  This is the gated
+//!   number.
+//! - `timing_model` — one `slice_layer_timing` call (the sweep grid's
+//!   inner loop; a cache hit when the timing memo is enabled).
+//! - `sweep_point_light` — one full sweep point (scenario generation +
+//!   dynamic/sequential runs + SLA stats); `points_per_sec` is the
+//!   sweep-grid throughput unit.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::args::ParsedArgs;
+use crate::benchkit::{Bench, BenchOpts};
+use crate::coordinator::partition::alloc_index_enabled;
+use crate::coordinator::scheduler::{AllocPolicy, DynamicScheduler, FeedModel, SchedulerConfig};
+use crate::sim::buffers::BufferConfig;
+use crate::sim::dataflow::{timing_cache_enabled, ArrayGeometry};
+use crate::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
+use crate::sim_core::obs_ring_enabled;
+use crate::sim_core::queue::bucket_queue_enabled;
+use crate::sweep::{run_sweep, SweepGrid};
+use crate::util::json::Json;
+use crate::workloads::models::heavy_pool;
+use crate::workloads::shapes::GemmDims;
+
+/// Layout version of the `BENCH_*.json` files.
+pub const BENCH_SCHEMA: u64 = 1;
+
+/// Maximum tolerated fractional events/sec regression vs a *measured*
+/// baseline before `--check` fails the build.
+pub const REGRESSION_TOLERANCE: f64 = 0.15;
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+struct Measured {
+    events_per_run: u64,
+    events_per_sec: f64,
+    engine_wall_s_per_run: f64,
+    timing_ns_per_call: f64,
+    sweep_points: usize,
+    sweep_requests: usize,
+    sweep_wall_s: f64,
+    sweep_points_per_sec: f64,
+}
+
+fn measure(quick: bool, threads: usize) -> Result<Measured> {
+    let opts = if quick {
+        BenchOpts {
+            warmup: Duration::from_millis(10),
+            measure: Duration::from_millis(100),
+            min_iters: 2,
+            max_iters: 1_000,
+        }
+    } else {
+        BenchOpts {
+            warmup: Duration::from_millis(100),
+            measure: Duration::from_secs(1),
+            min_iters: 3,
+            max_iters: 100_000,
+        }
+    };
+    let mut b = Bench::new("mtsa bench").with_opts(opts);
+
+    // Inner-loop cost model (a memo hit when the timing cache is on).
+    let geom = ArrayGeometry::new(128, 128);
+    let bufs = BufferConfig::default();
+    let gemm = GemmDims { sr: 3025, k: 1152, m: 384 };
+    let timing = b.measure("slice_layer_timing (conv layer)", || {
+        std::hint::black_box(slice_layer_timing(
+            geom,
+            std::hint::black_box(gemm),
+            PartitionSlice::new(32, 32),
+            FeedPolicy::Independent,
+            &bufs,
+        ));
+    });
+
+    // End-to-end engine run; the event count comes from the metrics of
+    // one (deterministic) run, the wall time from the timed repeats.
+    let pool = heavy_pool();
+    let sched = DynamicScheduler::new(SchedulerConfig::default());
+    let m = sched.run(&pool);
+    let events_per_run = pool.dnns.len() as u64 + m.dispatches.len() as u64 + m.preemptions;
+    let engine = b.measure("DynamicScheduler::run (heavy pool)", || {
+        std::hint::black_box(sched.run(&pool));
+    });
+    let engine_wall_s = engine.mean / 1e9;
+
+    // One sweep point, end to end.
+    let grid = SweepGrid {
+        mixes: vec!["light".to_string()],
+        rates: vec![20_000.0],
+        policies: vec![AllocPolicy::WidestToHeaviest],
+        feeds: vec![FeedModel::Independent],
+        requests: if quick { 4 } else { 8 },
+        ..SweepGrid::default()
+    };
+    let t0 = Instant::now();
+    let rows = run_sweep(&grid, &SchedulerConfig::default(), threads)?;
+    let sweep_wall_s = t0.elapsed().as_secs_f64();
+    b.finish();
+
+    Ok(Measured {
+        events_per_run,
+        events_per_sec: events_per_run as f64 / engine_wall_s,
+        engine_wall_s_per_run: engine_wall_s,
+        timing_ns_per_call: timing.mean,
+        sweep_points: rows.len(),
+        sweep_requests: grid.requests,
+        sweep_wall_s,
+        sweep_points_per_sec: rows.len() as f64 / sweep_wall_s,
+    })
+}
+
+fn record_json(m: &Measured) -> Json {
+    obj(vec![
+        ("schema", Json::Num(BENCH_SCHEMA as f64)),
+        ("pr", Json::Num(6.0)),
+        ("provenance", Json::Str("measured".into())),
+        ("tolerance_pct", Json::Num(100.0 * REGRESSION_TOLERANCE)),
+        (
+            "features",
+            obj(vec![
+                ("timing_cache", Json::Bool(timing_cache_enabled())),
+                ("bucket_queue", Json::Bool(bucket_queue_enabled())),
+                ("alloc_index", Json::Bool(alloc_index_enabled())),
+                ("obs_ring", Json::Bool(obs_ring_enabled())),
+            ]),
+        ),
+        (
+            "scenarios",
+            obj(vec![
+                (
+                    "engine_run_heavy",
+                    obj(vec![
+                        ("events_per_run", Json::Num(m.events_per_run as f64)),
+                        ("events_per_sec", Json::Num(m.events_per_sec)),
+                        ("wall_s_per_run", Json::Num(m.engine_wall_s_per_run)),
+                    ]),
+                ),
+                (
+                    "timing_model",
+                    obj(vec![("ns_per_call", Json::Num(m.timing_ns_per_call))]),
+                ),
+                (
+                    "sweep_point_light",
+                    obj(vec![
+                        ("points", Json::Num(m.sweep_points as f64)),
+                        ("requests", Json::Num(m.sweep_requests as f64)),
+                        ("wall_s", Json::Num(m.sweep_wall_s)),
+                        ("points_per_sec", Json::Num(m.sweep_points_per_sec)),
+                    ]),
+                ),
+            ]),
+        ),
+    ])
+}
+
+/// Gate a fresh measurement against a committed baseline file.  Returns
+/// `Ok(true)` when the baseline actually gated (provenance `"measured"`),
+/// `Ok(false)` when it was informational only.
+fn check_against(baseline_path: &str, m: &Measured) -> Result<bool> {
+    let text = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("reading baseline {baseline_path}"))?;
+    let base = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing baseline {baseline_path}: {e}"))?;
+    let provenance = base.get("provenance").and_then(Json::as_str).unwrap_or("unknown");
+    let base_eps = base
+        .get("scenarios")
+        .and_then(|s| s.get("engine_run_heavy"))
+        .and_then(|s| s.get("events_per_sec"))
+        .and_then(Json::as_f64);
+    match (provenance, base_eps) {
+        ("measured", Some(eps)) if eps > 0.0 => {
+            let floor = eps * (1.0 - REGRESSION_TOLERANCE);
+            if m.events_per_sec < floor {
+                bail!(
+                    "events/sec regression: measured {:.0} vs baseline {:.0} \
+                     (floor {:.0}, tolerance {:.0}%) — see docs/benchmarks.md",
+                    m.events_per_sec,
+                    eps,
+                    floor,
+                    100.0 * REGRESSION_TOLERANCE,
+                );
+            }
+            println!(
+                "check: events/sec {:.0} vs measured baseline {:.0} (floor {:.0}) — ok",
+                m.events_per_sec, eps, floor
+            );
+            Ok(true)
+        }
+        _ => {
+            println!(
+                "check: baseline {baseline_path} has provenance {provenance:?} \
+                 (not \"measured\") — informational only, not gating"
+            );
+            Ok(false)
+        }
+    }
+}
+
+pub fn cmd_bench(args: &ParsedArgs) -> Result<()> {
+    args.ensure_known(&["out", "baseline", "threads"], &["record", "check", "quick"])?;
+    let quick = args.has("quick");
+    let threads = args.opt_u64("threads", 1)?.max(1) as usize;
+
+    let m = measure(quick, threads)?;
+    println!(
+        "engine: {} events/run, {:.0} events/sec ({:.3}s/run); sweep: {:.2} points/sec",
+        m.events_per_run, m.events_per_sec, m.engine_wall_s_per_run, m.sweep_points_per_sec
+    );
+
+    if args.has("check") {
+        let baseline = args.opt("baseline").unwrap_or("BENCH_6.json");
+        check_against(baseline, &m)?;
+    }
+
+    if args.has("record") {
+        let out = args.opt("out").unwrap_or("BENCH_6.json");
+        let json = record_json(&m).render();
+        std::fs::write(out, &json).with_context(|| format!("writing {out}"))?;
+        println!("wrote {out} ({} bytes, provenance \"measured\")", json.len());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mtsa-bench-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn record_writes_parseable_trajectory_file() {
+        let out = tmp("record.json");
+        let args = ParsedArgs::parse(&[
+            "bench".into(),
+            "--quick".into(),
+            "--record".into(),
+            "--out".into(),
+            out.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        cmd_bench(&args).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(parsed.get("provenance").and_then(Json::as_str), Some("measured"));
+        let eng = parsed.get("scenarios").unwrap().get("engine_run_heavy").unwrap();
+        assert!(eng.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(eng.get("events_per_run").unwrap().as_u64().unwrap() > 0);
+        let sweep = parsed.get("scenarios").unwrap().get("sweep_point_light").unwrap();
+        assert!(sweep.get("points_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn check_does_not_gate_on_projected_baseline() {
+        // A projected baseline (no toolchain on the recording host) must
+        // never fail a build, whatever its numbers claim.
+        let base = tmp("projected.json");
+        std::fs::write(
+            &base,
+            r#"{"provenance":"projected","scenarios":{"engine_run_heavy":{"events_per_sec":1e18}}}"#,
+        )
+        .unwrap();
+        let m = Measured {
+            events_per_run: 100,
+            events_per_sec: 1.0,
+            engine_wall_s_per_run: 1.0,
+            timing_ns_per_call: 1.0,
+            sweep_points: 1,
+            sweep_requests: 4,
+            sweep_wall_s: 1.0,
+            sweep_points_per_sec: 1.0,
+        };
+        assert!(!check_against(base.to_str().unwrap(), &m).unwrap());
+        let _ = std::fs::remove_file(&base);
+    }
+
+    #[test]
+    fn check_gates_on_measured_baseline() {
+        let base = tmp("measured.json");
+        std::fs::write(
+            &base,
+            r#"{"provenance":"measured","scenarios":{"engine_run_heavy":{"events_per_sec":1000.0}}}"#,
+        )
+        .unwrap();
+        let mut m = Measured {
+            events_per_run: 100,
+            events_per_sec: 900.0, // within 15%
+            engine_wall_s_per_run: 1.0,
+            timing_ns_per_call: 1.0,
+            sweep_points: 1,
+            sweep_requests: 4,
+            sweep_wall_s: 1.0,
+            sweep_points_per_sec: 1.0,
+        };
+        assert!(check_against(base.to_str().unwrap(), &m).unwrap());
+        m.events_per_sec = 800.0; // >15% below
+        let err = check_against(base.to_str().unwrap(), &m).unwrap_err();
+        assert!(err.to_string().contains("regression"), "got: {err:#}");
+        let _ = std::fs::remove_file(&base);
+    }
+
+    #[test]
+    fn missing_baseline_is_an_error() {
+        let m = Measured {
+            events_per_run: 1,
+            events_per_sec: 1.0,
+            engine_wall_s_per_run: 1.0,
+            timing_ns_per_call: 1.0,
+            sweep_points: 1,
+            sweep_requests: 4,
+            sweep_wall_s: 1.0,
+            sweep_points_per_sec: 1.0,
+        };
+        assert!(check_against("/nonexistent/BENCH_6.json", &m).is_err());
+    }
+}

@@ -38,6 +38,9 @@ USAGE:
        [--config <file>] [--out <dir>]
   mtsa area [--config <file>]            45nm area breakdown (Accelergy-style)
   mtsa verify [--artifacts <dir>]        PJRT vs functional-sim numerics
+  mtsa bench                             engine hot-path perf (BENCH_*.json)
+       [--record] [--check] [--quick] [--out <file>] [--baseline <file>]
+       [--threads N]
   mtsa help                              this message
 ";
 
@@ -50,6 +53,7 @@ pub fn dispatch(args: &ParsedArgs) -> Result<()> {
         "trace" => cmd_trace(args),
         "area" => cmd_area(args),
         "verify" => cmd_verify(args),
+        "bench" => super::bench::cmd_bench(args),
         "help" | "" => {
             println!("{USAGE}");
             Ok(())

@@ -10,6 +10,7 @@
 //! (PJRT cross-checks, `pjrt` feature).
 
 pub mod args;
+pub mod bench;
 pub mod commands;
 
 pub use args::ParsedArgs;

@@ -23,11 +23,25 @@
 //! the original 1D slice manager (merging is only ever horizontal, and
 //! the guillotine split leaves only left/right strips).
 
+use std::sync::OnceLock;
+
 use crate::sim::dataflow::ArrayGeometry;
 use crate::sim::partitioned::{PartitionSlice, Tile};
 
 /// Allocation handle: index into the live allocation table.
 pub type AllocId = usize;
+
+/// Whether the sorted free-region index is consulted by the allocator
+/// lookups ([`PartitionManager::allocate_tile`],
+/// [`PartitionManager::allocate_at`], [`PartitionManager::is_free`]).
+/// Opt out with `MTSA_NO_ALLOC_INDEX` (any value) to run the reference
+/// linear scans — output is identical; the switch exists for A/B timing
+/// and bisecting.  The index itself is always maintained (it is cheap and
+/// rebuilt only when the region set changes).
+pub fn alloc_index_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| std::env::var_os("MTSA_NO_ALLOC_INDEX").is_none())
+}
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 struct Region {
@@ -42,6 +56,12 @@ pub struct PartitionManager {
     geom: ArrayGeometry,
     /// Sorted by `(row0, col0)` — the deterministic scan order.
     regions: Vec<Region>,
+    /// Indices of *free* regions, sorted by `(pes, row0, col0)` — the
+    /// best-fit order.  First fit over this index equals the reference
+    /// `min_by_key` scan because disjoint rectangles have distinct
+    /// top-left corners, making the key unique.  Rebuilt whenever the
+    /// region set changes (every mutation ends in [`Self::merge_free`]).
+    free_index: Vec<usize>,
     next_id: AllocId,
 }
 
@@ -50,6 +70,7 @@ impl PartitionManager {
         PartitionManager {
             geom,
             regions: vec![Region { tile: Tile::full(geom), owner: None }],
+            free_index: vec![0],
             next_id: 0,
         }
     }
@@ -64,6 +85,18 @@ impl PartitionManager {
 
     fn sort_regions(&mut self) {
         self.regions.sort_unstable_by_key(|r| (r.tile.row0, r.tile.col0));
+    }
+
+    fn rebuild_free_index(&mut self) {
+        self.free_index.clear();
+        self.free_index.extend(
+            self.regions.iter().enumerate().filter(|(_, r)| r.owner.is_none()).map(|(i, _)| i),
+        );
+        let regions = &self.regions;
+        self.free_index.sort_unstable_by_key(|&i| {
+            let t = regions[i].tile;
+            (t.pes(), t.row0, t.col0)
+        });
     }
 
     /// Widths of *full-height* free regions, descending — the
@@ -141,12 +174,22 @@ impl PartitionManager {
     /// region is tall and wide enough.
     pub fn allocate_tile(&mut self, rows: u64, cols: u64) -> Option<(AllocId, Tile)> {
         assert!(rows > 0 && cols > 0);
-        let best = self
-            .regions
-            .iter()
-            .filter(|r| r.owner.is_none() && r.tile.rows >= rows && r.tile.cols >= cols)
-            .map(|r| r.tile)
-            .min_by_key(|t| (t.pes(), t.row0, t.col0))?;
+        let best = if alloc_index_enabled() {
+            // First fit over the best-fit-sorted free index: the first
+            // fitting entry *is* the `min_by_key` of the reference scan
+            // (the index key is unique), found without visiting every
+            // region or comparing keys.
+            self.free_index
+                .iter()
+                .map(|&i| self.regions[i].tile)
+                .find(|t| t.rows >= rows && t.cols >= cols)
+        } else {
+            self.regions
+                .iter()
+                .filter(|r| r.owner.is_none() && r.tile.rows >= rows && r.tile.cols >= cols)
+                .map(|r| r.tile)
+                .min_by_key(|t| (t.pes(), t.row0, t.col0))
+        }?;
         self.allocate_at(Tile::new(best.row0, best.col0, rows, cols))
     }
 
@@ -158,10 +201,14 @@ impl PartitionManager {
     /// proposes positions (possibly rehearsed on a clone), the manager
     /// enforces that they are actually free.
     pub fn allocate_at(&mut self, want: Tile) -> Option<(AllocId, Tile)> {
-        let idx = self
-            .regions
-            .iter()
-            .position(|r| r.owner.is_none() && r.tile.contains(&want))?;
+        // At most one region can contain `want` (regions are pairwise
+        // disjoint), so scanning only the free index finds the same
+        // region the reference full scan would.
+        let idx = if alloc_index_enabled() {
+            self.free_index.iter().copied().find(|&i| self.regions[i].tile.contains(&want))
+        } else {
+            self.regions.iter().position(|r| r.owner.is_none() && r.tile.contains(&want))
+        }?;
         let id = self.next_id;
         self.next_id += 1;
         let old = self.regions[idx].tile;
@@ -201,7 +248,11 @@ impl PartitionManager {
     /// L-shaped free area covering `tile` across two rectangles reports
     /// `false` (canonical merging keeps such fragmentation minimal).
     pub fn is_free(&self, tile: Tile) -> bool {
-        self.regions.iter().any(|r| r.owner.is_none() && r.tile.contains(&tile))
+        if alloc_index_enabled() {
+            self.free_index.iter().any(|&i| self.regions[i].tile.contains(&tile))
+        } else {
+            self.regions.iter().any(|r| r.owner.is_none() && r.tile.contains(&tile))
+        }
     }
 
     /// Free an allocation, merging free rectangles that share a full edge
@@ -224,6 +275,7 @@ impl PartitionManager {
         // always merge back to one rectangle pairwise.
         if self.regions.len() > 1 && self.regions.iter().all(|r| r.owner.is_none()) {
             self.regions = vec![Region { tile: Tile::full(self.geom), owner: None }];
+            self.rebuild_free_index();
         }
         self.debug_check();
         self.regions
@@ -236,8 +288,15 @@ impl PartitionManager {
     /// Merge free regions sharing a full edge, to fixpoint, in
     /// deterministic `(row0, col0)` scan order.
     fn merge_free(&mut self) {
+        // Sort once, outside the fixpoint loop: a merge replaces region
+        // `i`'s tile with the merged rectangle — whose top-left corner is
+        // exactly region `i`'s corner, because `j > i` in `(row0, col0)`
+        // order and `merged_with` keeps the smaller corner — and removing
+        // `j` leaves the tail sorted.  The list therefore *stays* sorted
+        // through every merge, and each iteration scans the identical
+        // order the per-iteration re-sort used to produce.
+        self.sort_regions();
         loop {
-            self.sort_regions();
             let mut found: Option<(usize, usize, Tile)> = None;
             'scan: for i in 0..self.regions.len() {
                 if self.regions[i].owner.is_some() {
@@ -261,7 +320,7 @@ impl PartitionManager {
                 None => break,
             }
         }
-        self.sort_regions();
+        self.rebuild_free_index();
     }
 
     /// Shrink a live allocation in place to `keep` (a sub-rectangle of
@@ -350,6 +409,20 @@ impl PartitionManager {
         }
         if area != self.geom.pes() {
             return Err(format!("tiles cover {area} of {} PEs", self.geom.pes()));
+        }
+        let mut want: Vec<usize> = self
+            .regions
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.owner.is_none())
+            .map(|(i, _)| i)
+            .collect();
+        want.sort_unstable_by_key(|&i| {
+            let t = self.regions[i].tile;
+            (t.pes(), t.row0, t.col0)
+        });
+        if self.free_index != want {
+            return Err(format!("stale free index {:?}, want {want:?}", self.free_index));
         }
         Ok(())
     }
@@ -532,6 +605,45 @@ mod tests {
         // A 32x32 request fits both; best-fit picks the smaller region.
         let (_b, t) = pm.allocate_tile(32, 32).unwrap();
         assert_eq!(t, Tile::new(32, 0, 32, 32));
+    }
+
+    #[test]
+    fn free_index_first_fit_matches_reference_best_fit() {
+        // The indexed `allocate_tile` must pick the exact region the
+        // reference `min_by_key` scan picks, across random region shapes.
+        prop::check("alloc index parity", 120, |rng| {
+            let geom = ArrayGeometry::new(64, 64);
+            let mut pm = PartitionManager::new(geom);
+            let mut live: Vec<AllocId> = Vec::new();
+            for _ in 0..40 {
+                if live.is_empty() || rng.gen_bool(0.6) {
+                    let rows = rng.gen_range_inclusive(1, 48);
+                    let cols = rng.gen_range_inclusive(1, 48);
+                    let want = pm
+                        .free_tiles()
+                        .into_iter()
+                        .filter(|t| t.rows >= rows && t.cols >= cols)
+                        .min_by_key(|t| (t.pes(), t.row0, t.col0));
+                    match (want, pm.allocate_tile(rows, cols)) {
+                        (None, None) => {}
+                        (Some(w), Some((id, t))) => {
+                            prop::ensure_eq(
+                                t,
+                                Tile::new(w.row0, w.col0, rows, cols),
+                                "carve corner",
+                            )?;
+                            live.push(id);
+                        }
+                        (w, g) => return Err(format!("fit disagreement: {w:?} vs {g:?}")),
+                    }
+                } else {
+                    let i = rng.gen_range(live.len() as u64) as usize;
+                    pm.free(live.swap_remove(i));
+                }
+                pm.check_invariants()?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

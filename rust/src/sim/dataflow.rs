@@ -18,6 +18,11 @@
 //! cannot start until the previous drain finishes — the paper's motivation
 //! for separate load/calculate steps).
 
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+use std::sync::OnceLock;
+
 use super::activity::Activity;
 use super::buffers::BufferConfig;
 use super::partitioned::Tile;
@@ -286,9 +291,121 @@ pub fn layer_timing_tile(
     layer_timing_tile_with_share(geom, gemm, tile, &bufs.share(tile.pes(), geom.pes()), interleave)
 }
 
+/// Cache key of the memoized timing core: every input of
+/// [`layer_timing_tile_with_share`], flattened to plain integers.  The
+/// function is pure in exactly these fields, so key equality implies
+/// result equality (pinned by `timing_cache_is_transparent` in
+/// `rust/tests/scheduler_properties.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct TimingKey {
+    geom: (u64, u64),
+    gemm: (u64, u64, u64),
+    tile: (u64, u64, u64, u64),
+    share: (u64, u64, u64, u64),
+    /// `(1 + p, slot)` for the interleaved feed, `(0, 0)` for independent.
+    interleave: (u64, u64),
+}
+
+impl TimingKey {
+    fn new(
+        geom: ArrayGeometry,
+        gemm: GemmDims,
+        tile: Tile,
+        share: &BufferConfig,
+        interleave: Option<(u64, u64)>,
+    ) -> TimingKey {
+        TimingKey {
+            geom: (geom.rows, geom.cols),
+            gemm: (gemm.sr, gemm.k, gemm.m),
+            tile: (tile.row0, tile.col0, tile.rows, tile.cols),
+            share: (share.weight_bytes, share.ifmap_bytes, share.ofmap_bytes, share.dtype_bytes),
+            interleave: match interleave {
+                None => (0, 0),
+                Some((p, slot)) => (1 + p, slot),
+            },
+        }
+    }
+}
+
+/// Multiply-xor integer hasher (fx-style) — the key is a dozen small
+/// integers, so the default SipHash would dominate the lookup cost.
+#[derive(Default)]
+struct TimingHasher {
+    hash: u64,
+}
+
+impl Hasher for TimingHasher {
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_u64(b as u64);
+        }
+    }
+    fn write_u64(&mut self, v: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ v).wrapping_mul(0x517C_C1B7_2722_0A95);
+    }
+}
+
+/// Entries above which a thread's timing cache is reset — a backstop
+/// against unbounded growth in pathological never-repeating workloads;
+/// real sweeps revisit a few thousand (layer, tile, share) combinations.
+const TIMING_CACHE_CAP: usize = 1 << 20;
+
+type TimingCache = HashMap<TimingKey, LayerTiming, BuildHasherDefault<TimingHasher>>;
+
+thread_local! {
+    static TIMING_CACHE: RefCell<TimingCache> = RefCell::new(HashMap::default());
+}
+
+/// Whether the layer-timing memo is on.  Set `MTSA_NO_TIMING_CACHE` (to
+/// any value) to opt out and compute every call from scratch — the
+/// results are identical either way; the switch exists for A/B timing and
+/// for bisecting, not correctness.
+pub fn timing_cache_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| std::env::var_os("MTSA_NO_TIMING_CACHE").is_none())
+}
+
 /// The general timing core: a layer on rows `[row0, row0+rows)` ×
 /// columns `[col0, col0+cols)` with an explicit buffer share.
+///
+/// Memoized: the result is a pure function of the arguments, and the
+/// scheduler's planning loops (`plan_2d` candidate ladders, checkpoint
+/// pricing, the sweep grid's repeated scenarios) revisit the same few
+/// thousand keys constantly.  Each OS thread keeps its own cache, so the
+/// parallel sweep stays lock-free and byte-deterministic.  Opt out with
+/// `MTSA_NO_TIMING_CACHE` (see [`timing_cache_enabled`]).
 pub fn layer_timing_tile_with_share(
+    geom: ArrayGeometry,
+    gemm: GemmDims,
+    tile: Tile,
+    share: &BufferConfig,
+    interleave: Option<(u64, u64)>,
+) -> LayerTiming {
+    if !timing_cache_enabled() {
+        return layer_timing_tile_with_share_uncached(geom, gemm, tile, share, interleave);
+    }
+    let key = TimingKey::new(geom, gemm, tile, share, interleave);
+    TIMING_CACHE.with(|cache| {
+        if let Some(hit) = cache.borrow().get(&key) {
+            return *hit;
+        }
+        let t = layer_timing_tile_with_share_uncached(geom, gemm, tile, share, interleave);
+        let mut cache = cache.borrow_mut();
+        if cache.len() >= TIMING_CACHE_CAP {
+            cache.clear();
+        }
+        cache.insert(key, t);
+        t
+    })
+}
+
+/// The uncached computation behind [`layer_timing_tile_with_share`] —
+/// public so the transparency property test (and any A/B harness) can
+/// compare against the memo directly.
+pub fn layer_timing_tile_with_share_uncached(
     geom: ArrayGeometry,
     gemm: GemmDims,
     tile: Tile,
@@ -619,6 +736,23 @@ mod tests {
         for bad in ["", "x", "0", "0x8", "8x0", "8x", "x8", "12y34", "-4", "8x8x8"] {
             assert!(bad.parse::<ArrayGeometry>().is_err(), "should reject {bad:?}");
         }
+    }
+
+    #[test]
+    fn timing_memo_repeat_calls_match_uncached() {
+        let geom = ArrayGeometry::new(128, 128);
+        let g = GemmDims { sr: 3025, k: 1152, m: 384 };
+        let tile = Tile::new(16, 32, 64, 64);
+        let share = BufferConfig::default().share(tile.pes(), geom.pes());
+        let first = layer_timing_tile_with_share(geom, g, tile, &share, None);
+        let hit = layer_timing_tile_with_share(geom, g, tile, &share, None);
+        let uncached = layer_timing_tile_with_share_uncached(geom, g, tile, &share, None);
+        assert_eq!(first, hit);
+        assert_eq!(first, uncached);
+        // The interleave tag keeps `None` distinct from every `Some`.
+        let il = layer_timing_tile_with_share(geom, g, tile, &share, Some((2, 1)));
+        assert_ne!(first.cycles, il.cycles);
+        assert_eq!(il, layer_timing_tile_with_share_uncached(geom, g, tile, &share, Some((2, 1))));
     }
 
     #[test]

@@ -1,19 +1,59 @@
 //! The discrete-event engine: event queue + clock + allocation bookkeeping.
 
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap};
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
 
 use super::event::Event;
 use super::observer::Observer;
+use super::queue::EventQueue;
 use super::scheduler::{Checkpoint, LayerExec, RunningLayer, Scheduler, SystemState};
 use crate::coordinator::metrics::{DispatchRecord, RunMetrics};
 use crate::coordinator::partition::{AllocId, PartitionManager};
 use crate::coordinator::queue::TaskQueue;
-use crate::mem::{MemSystem, MemUpdate};
+use crate::mem::{MemStats, MemSystem, MemUpdate};
 use crate::sim::activity::Activity;
 use crate::sim::dataflow::ArrayGeometry;
 use crate::sim::partitioned::Tile;
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
+
+/// Whether [`Observer`] callbacks are batched through the engine's ring
+/// and delivered at cycle-batch boundaries.  Opt out with
+/// `MTSA_NO_OBS_RING` (any value) to fire each callback at its event, as
+/// the pre-ring engine did — observers are passive (they cannot influence
+/// the engine), so both modes produce the identical callback sequence;
+/// the switch exists for A/B timing and bisecting.
+pub fn obs_ring_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| std::env::var_os("MTSA_NO_OBS_RING").is_none())
+}
+
+/// A buffered observer callback: the `Copy` payload of one notification,
+/// with the `DispatchRecord` (and its name `String` clones) built only at
+/// delivery time, out of the event hot path.
+#[derive(Debug, Clone, Copy)]
+enum ObsEvent {
+    Dispatch { t: u64, dnn: DnnId, layer: LayerId, tile: Tile },
+    LayerComplete {
+        dnn: DnnId,
+        layer: LayerId,
+        tile: Tile,
+        t_start: u64,
+        t_end: u64,
+        activity: Activity,
+    },
+    Preempt {
+        dnn: DnnId,
+        layer: LayerId,
+        tile: Tile,
+        t_start: u64,
+        t_end: u64,
+        activity: Activity,
+        replayed_folds: u64,
+        wasted_cycles: u64,
+    },
+    Deadline { dnn: DnnId, t: u64, met: bool },
+    Mem { dnn: DnnId, stats: MemStats },
+}
 
 /// Execution details of an in-flight layer, keyed by its allocation.
 #[derive(Debug, Clone, Copy)]
@@ -55,7 +95,7 @@ pub struct Engine<'p> {
     pool: &'p WorkloadPool,
     queue: TaskQueue<'p>,
     partitions: PartitionManager,
-    events: BinaryHeap<Reverse<Event>>,
+    events: EventQueue,
     pending: BTreeMap<AllocId, Pending>,
     /// `(dnn, absolute deadline cycle)` pairs to turn into events.
     deadlines: Vec<(DnnId, u64)>,
@@ -77,6 +117,10 @@ pub struct Engine<'p> {
     /// checkpoint ledger behind [`SystemState::k_done`].  Empty (and
     /// never touched) unless the scheduler preempts.
     progress: BTreeMap<(DnnId, LayerId), u64>,
+    /// FIFO buffer of observer callbacks for the cycle batch in flight,
+    /// drained (in order) once per batch — see [`obs_ring_enabled`].  The
+    /// vector is reused across batches, so steady state allocates nothing.
+    obs_ring: Vec<ObsEvent>,
     now: u64,
 }
 
@@ -94,7 +138,7 @@ impl<'p> Engine<'p> {
             pool,
             queue: TaskQueue::new(pool),
             partitions: PartitionManager::new(geom),
-            events: BinaryHeap::new(),
+            events: EventQueue::new(),
             pending: BTreeMap::new(),
             deadlines: Vec::new(),
             arrivals_pending: pool.dnns.len(),
@@ -102,6 +146,7 @@ impl<'p> Engine<'p> {
             mem: None,
             mem_release_at: None,
             progress: BTreeMap::new(),
+            obs_ring: Vec::new(),
             now: 0,
         }
     }
@@ -122,6 +167,71 @@ impl<'p> Engine<'p> {
         let mut metrics = RunMetrics::default();
         Engine::new(pool, geom).run(sched, &mut metrics);
         metrics
+    }
+
+    /// Queue one observer callback for this cycle batch (or deliver it on
+    /// the spot when the ring is opted out).
+    fn emit(&mut self, obs: &mut dyn Observer, ev: ObsEvent) {
+        if obs_ring_enabled() {
+            self.obs_ring.push(ev);
+        } else {
+            Self::deliver(self.pool, obs, ev);
+        }
+    }
+
+    /// Deliver this batch's buffered callbacks, in emission order.
+    fn flush_obs(&mut self, obs: &mut dyn Observer) {
+        if self.obs_ring.is_empty() {
+            return;
+        }
+        let mut buf = std::mem::take(&mut self.obs_ring);
+        for ev in buf.drain(..) {
+            Self::deliver(self.pool, obs, ev);
+        }
+        self.obs_ring = buf; // keep the capacity for the next batch
+    }
+
+    fn deliver(pool: &WorkloadPool, obs: &mut dyn Observer, ev: ObsEvent) {
+        match ev {
+            ObsEvent::Dispatch { t, dnn, layer, tile } => obs.on_dispatch(t, dnn, layer, tile),
+            ObsEvent::LayerComplete { dnn, layer, tile, t_start, t_end, activity } => {
+                let rec = DispatchRecord {
+                    dnn,
+                    dnn_name: pool.dnns[dnn].name.clone(),
+                    layer,
+                    layer_name: pool.dnns[dnn].layers[layer].name.clone(),
+                    tile,
+                    t_start,
+                    t_end,
+                    activity,
+                };
+                obs.on_layer_complete(&rec);
+            }
+            ObsEvent::Preempt {
+                dnn,
+                layer,
+                tile,
+                t_start,
+                t_end,
+                activity,
+                replayed_folds,
+                wasted_cycles,
+            } => {
+                let rec = DispatchRecord {
+                    dnn,
+                    dnn_name: pool.dnns[dnn].name.clone(),
+                    layer,
+                    layer_name: pool.dnns[dnn].layers[layer].name.clone(),
+                    tile,
+                    t_start,
+                    t_end,
+                    activity,
+                };
+                obs.on_preempt(&rec, replayed_folds, wasted_cycles);
+            }
+            ObsEvent::Deadline { dnn, t, met } => obs.on_deadline(dnn, t, met),
+            ObsEvent::Mem { dnn, stats } => obs.on_mem(dnn, &pool.dnns[dnn].name, &stats),
+        }
     }
 
     fn state(&self) -> SystemState<'_> {
@@ -151,7 +261,7 @@ impl<'p> Engine<'p> {
             // point against the corrected timing.
             p.preempt = None;
             let (dnn, layer) = (p.dnn, p.layer);
-            self.events.push(Reverse(Event::LayerComplete { t, dnn, layer, alloc }));
+            self.events.push(Event::LayerComplete { t, dnn, layer, alloc });
         }
         if let Some(t) = upd.next_release {
             // One pending rescale is enough: if an earlier one is already
@@ -162,7 +272,7 @@ impl<'p> Engine<'p> {
             };
             if !earlier_pending {
                 self.mem_release_at = Some(t);
-                self.events.push(Reverse(Event::MemRescale { t }));
+                self.events.push(Event::MemRescale { t });
             }
         }
     }
@@ -173,13 +283,13 @@ impl<'p> Engine<'p> {
     pub fn run(mut self, sched: &mut dyn Scheduler, obs: &mut dyn Observer) {
         self.mem = sched.mem_spec().map(MemSystem::new);
         for (di, d) in self.pool.dnns.iter().enumerate() {
-            self.events.push(Reverse(Event::Arrival { t: d.arrival_cycles, dnn: di }));
+            self.events.push(Event::Arrival { t: d.arrival_cycles, dnn: di });
         }
         for &(dnn, t) in &self.deadlines {
-            self.events.push(Reverse(Event::Deadline { t, dnn }));
+            self.events.push(Event::Deadline { t, dnn });
         }
 
-        while let Some(Reverse(first)) = self.events.pop() {
+        while let Some(first) = self.events.pop() {
             let now = first.time();
             debug_assert!(now >= self.now, "event time went backwards");
             self.now = now;
@@ -189,8 +299,8 @@ impl<'p> Engine<'p> {
             let mut next = Some(first);
             while let Some(ev) = next {
                 self.handle(ev, sched, obs, &mut needs_plan);
-                next = if self.events.peek().is_some_and(|r| r.0.time() == now) {
-                    self.events.pop().map(|r| r.0)
+                next = if self.events.next_time() == Some(now) {
+                    self.events.pop()
                 } else {
                     None
                 };
@@ -207,17 +317,24 @@ impl<'p> Engine<'p> {
                 self.request_preemptions(sched);
             }
 
+            // Deliver this batch's observer callbacks in one sweep.
+            // Observers are passive, so deferring within the cycle cannot
+            // change engine behavior, and FIFO delivery reproduces the
+            // exact pre-ring callback sequence.
+            self.flush_obs(obs);
+
             if self.queue.all_done() {
                 // Only Deadline/Repartition (or stale Preempt) events can
                 // remain; report the deadlines (all met — the work
                 // finished first) and stop.
-                while let Some(Reverse(ev)) = self.events.pop() {
+                while let Some(ev) = self.events.pop() {
                     if let Event::Deadline { t, dnn } = ev {
                         self.now = t;
                         sched.on_deadline(&self.state(), dnn, true);
-                        obs.on_deadline(dnn, t, true);
+                        self.emit(obs, ObsEvent::Deadline { dnn, t, met: true });
                     }
                 }
+                self.flush_obs(obs);
                 break;
             }
         }
@@ -270,21 +387,20 @@ impl<'p> Engine<'p> {
                 self.queue.mark_done(dnn, layer);
                 let pend = self.pending.remove(&alloc).expect("pending entry for live alloc");
                 debug_assert_eq!((pend.dnn, pend.layer), (dnn, layer));
-                let l = &self.pool.dnns[dnn].layers[layer];
-                let rec = DispatchRecord {
-                    dnn,
-                    dnn_name: self.pool.dnns[dnn].name.clone(),
-                    layer,
-                    layer_name: l.name.clone(),
-                    tile,
-                    t_start: pend.t_start,
-                    t_end: t,
-                    activity: pend.activity,
-                };
                 sched.on_layer_complete(&self.state(), dnn, layer);
-                obs.on_layer_complete(&rec);
+                self.emit(
+                    obs,
+                    ObsEvent::LayerComplete {
+                        dnn,
+                        layer,
+                        tile,
+                        t_start: pend.t_start,
+                        t_end: t,
+                        activity: pend.activity,
+                    },
+                );
                 if let Some((stats, upd)) = mem_result {
-                    obs.on_mem(dnn, &self.pool.dnns[dnn].name, &stats);
+                    self.emit(obs, ObsEvent::Mem { dnn, stats });
                     self.apply_mem_update(upd);
                 }
                 *needs_plan = true;
@@ -307,23 +423,24 @@ impl<'p> Engine<'p> {
                 if ckpt.k_advance > 0 {
                     *self.progress.entry((dnn, layer)).or_insert(0) += ckpt.k_advance;
                 }
-                let l = &self.pool.dnns[dnn].layers[layer];
-                let rec = DispatchRecord {
-                    dnn,
-                    dnn_name: self.pool.dnns[dnn].name.clone(),
-                    layer,
-                    layer_name: l.name.clone(),
-                    tile,
-                    t_start: pend.t_start,
-                    t_end: t,
-                    activity: ckpt.activity,
-                };
-                obs.on_preempt(&rec, ckpt.replayed_folds, ckpt.wasted_cycles);
+                self.emit(
+                    obs,
+                    ObsEvent::Preempt {
+                        dnn,
+                        layer,
+                        tile,
+                        t_start: pend.t_start,
+                        t_end: t,
+                        activity: ckpt.activity,
+                        replayed_folds: ckpt.replayed_folds,
+                        wasted_cycles: ckpt.wasted_cycles,
+                    },
+                );
                 // Either way the segment's mem flight retires early:
                 // banks release, surviving co-runners' shares grow.
                 if let Some(mem) = self.mem.as_mut() {
                     let (stats, upd) = mem.preempt(t, alloc);
-                    obs.on_mem(dnn, &self.pool.dnns[dnn].name, &stats);
+                    self.emit(obs, ObsEvent::Mem { dnn, stats });
                     self.apply_mem_update(upd);
                 }
                 match ckpt.keep {
@@ -349,7 +466,7 @@ impl<'p> Engine<'p> {
             Event::Deadline { t, dnn } => {
                 let met = self.queue.dnn_done(dnn);
                 sched.on_deadline(&self.state(), dnn, met);
-                obs.on_deadline(dnn, t, met);
+                self.emit(obs, ObsEvent::Deadline { dnn, t, met });
                 // By default a deadline is a report, not a decision
                 // point (it changes neither ready set nor tiling);
                 // stateful SLA-aware policies opt into replanning via
@@ -420,7 +537,7 @@ impl<'p> Engine<'p> {
                 alloc,
                 Pending { dnn, layer, t_start: self.now, t_end, activity, preempt: None },
             );
-            self.events.push(Reverse(Event::LayerComplete { t: t_end, dnn, layer, alloc }));
+            self.events.push(Event::LayerComplete { t: t_end, dnn, layer, alloc });
         }
     }
 
@@ -463,12 +580,7 @@ impl<'p> Engine<'p> {
             if let Some(p) = self.pending.get_mut(&alloc) {
                 p.preempt = Some((t_b, ckpt));
             }
-            self.events.push(Reverse(Event::Preempt {
-                t: t_b,
-                dnn: run.dnn,
-                layer: run.layer,
-                alloc,
-            }));
+            self.events.push(Event::Preempt { t: t_b, dnn: run.dnn, layer: run.layer, alloc });
         }
     }
 
@@ -489,7 +601,7 @@ impl<'p> Engine<'p> {
             self.queue.mark_running(a.dnn, a.layer);
             let coresident = self.partitions.allocated_count() as u64;
             let exec = sched.exec(&self.state(), a.dnn, a.layer, tile, coresident);
-            obs.on_dispatch(self.now, a.dnn, a.layer, tile);
+            self.emit(obs, ObsEvent::Dispatch { t: self.now, dnn: a.dnn, layer: a.layer, tile });
             // Under [mem], `exec.cycles` is the compute path; the mem
             // system grants banks, re-prices the DRAM traffic under the
             // banked share and predicts the contended completion.
@@ -518,7 +630,7 @@ impl<'p> Engine<'p> {
                 );
             }
             let t = self.now.saturating_add(dt.max(1));
-            self.events.push(Reverse(Event::Repartition { t }));
+            self.events.push(Event::Repartition { t });
         }
     }
 }

@@ -45,9 +45,10 @@
 mod engine;
 mod event;
 mod observer;
+pub mod queue;
 mod scheduler;
 
-pub use engine::Engine;
+pub use engine::{obs_ring_enabled, Engine};
 pub use event::Event;
 pub use observer::Observer;
 pub use scheduler::{Allocation, Checkpoint, LayerExec, RunningLayer, Scheduler, SystemState};

@@ -1,0 +1,314 @@
+//! The engine's pending-event queue — a calendar/bucket queue with a
+//! binary-heap reference implementation.
+//!
+//! The engine pops events in batches: everything at the earliest pending
+//! cycle, then one `plan`.  A [`BinaryHeap`] pays `O(log n)` sift per
+//! push/pop and scatters same-cycle events through the tree; the
+//! [`BucketQueue`] instead keeps one sorted bucket for the cycle being
+//! drained plus a `BTreeMap` of future cycles, so a same-cycle batch pops
+//! by bumping a head index and a push is usually an append.
+//!
+//! **Ordering contract** (pinned by `bucket_queue_matches_binary_heap` in
+//! `rust/tests/engine_parity.rs`): events pop in [`Event`]'s total order
+//! `(time, kind, dnn, layer)`, with *insertion order* (FIFO) breaking
+//! exact key ties.  The pre-queue engine left equal-key order to
+//! `BinaryHeap`'s arbitrary sift order, which was observationally safe
+//! only because equal-key duplicates are stale husks (the engine's
+//! staleness checks make all but one a no-op); both implementations here
+//! are seq-stamped, so they agree with each other *exactly*, not just
+//! observationally.
+//!
+//! Opt out with `MTSA_NO_BUCKET_QUEUE` (any value) to run the engine on
+//! the reference heap — output is identical; the switch exists for A/B
+//! timing and bisecting.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+use std::sync::OnceLock;
+
+use super::event::Event;
+
+/// `(event, insertion seq)` — the seq stamp makes every entry's sort key
+/// unique and equal-key pops FIFO.
+type Entry = (Event, u64);
+
+/// The queue the engine actually runs on: bucket by default, heap when
+/// `MTSA_NO_BUCKET_QUEUE` is set.
+#[derive(Debug)]
+pub enum EventQueue {
+    Bucket(BucketQueue),
+    Heap(HeapQueue),
+}
+
+/// Whether the bucket queue is on (see the module doc for the opt-out).
+pub fn bucket_queue_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| std::env::var_os("MTSA_NO_BUCKET_QUEUE").is_none())
+}
+
+impl EventQueue {
+    /// The implementation selected by the environment.
+    pub fn new() -> EventQueue {
+        if bucket_queue_enabled() {
+            EventQueue::Bucket(BucketQueue::new())
+        } else {
+            EventQueue::Heap(HeapQueue::new())
+        }
+    }
+
+    pub fn push(&mut self, ev: Event) {
+        match self {
+            EventQueue::Bucket(q) => q.push(ev),
+            EventQueue::Heap(q) => q.push(ev),
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        match self {
+            EventQueue::Bucket(q) => q.pop(),
+            EventQueue::Heap(q) => q.pop(),
+        }
+    }
+
+    /// Cycle of the earliest pending event.
+    pub fn next_time(&self) -> Option<u64> {
+        match self {
+            EventQueue::Bucket(q) => q.next_time(),
+            EventQueue::Heap(q) => q.next_time(),
+        }
+    }
+}
+
+impl Default for EventQueue {
+    fn default() -> EventQueue {
+        EventQueue::new()
+    }
+}
+
+/// Reference implementation: a seq-stamped binary heap.  `(Event, u64)`
+/// tuples order lexicographically, so equal event keys pop in insertion
+/// order — the exact contract the bucket queue is checked against.
+#[derive(Debug, Default)]
+pub struct HeapQueue {
+    heap: BinaryHeap<Reverse<Entry>>,
+    seq: u64,
+}
+
+impl HeapQueue {
+    pub fn new() -> HeapQueue {
+        HeapQueue::default()
+    }
+
+    pub fn push(&mut self, ev: Event) {
+        self.heap.push(Reverse((ev, self.seq)));
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse((ev, _))| ev)
+    }
+
+    pub fn next_time(&self) -> Option<u64> {
+        self.heap.peek().map(|Reverse((ev, _))| ev.time())
+    }
+}
+
+/// The calendar queue: one sorted bucket for the cycle currently being
+/// drained (`current[head..]` is the undrained remainder) and a
+/// time-indexed map of unsorted future buckets.
+///
+/// The engine's access pattern makes this fast:
+/// - a push to a future cycle is a `BTreeMap` probe + `Vec` append (no
+///   per-element sift);
+/// - draining a same-cycle batch is a head-index bump per event;
+/// - a push *at* the cycle being drained (preemptions armed mid-batch,
+///   mem reposts) binary-searches only the undrained remainder, matching
+///   the heap's pop-min-of-remaining semantics.
+///
+/// Future buckets are sorted once, when they become current — `O(b log b)`
+/// per bucket instead of `O(b log n)` heap sifts.  Drained bucket vectors
+/// are recycled through a free pool, so a steady-state run allocates
+/// nothing per event.
+#[derive(Debug, Default)]
+pub struct BucketQueue {
+    /// Events at `cur_time`; `current[head..]` is sorted ascending and
+    /// not yet popped.
+    current: Vec<Entry>,
+    head: usize,
+    cur_time: u64,
+    /// Future buckets, unsorted until they become current.
+    future: BTreeMap<u64, Vec<Entry>>,
+    /// Recycled bucket storage.
+    pool: Vec<Vec<Entry>>,
+    seq: u64,
+}
+
+impl BucketQueue {
+    pub fn new() -> BucketQueue {
+        BucketQueue::default()
+    }
+
+    pub fn push(&mut self, ev: Event) {
+        let entry = (ev, self.seq);
+        self.seq += 1;
+        let t = ev.time();
+        if t == self.cur_time {
+            // Same-cycle push while the bucket drains (or a reopen after
+            // it fully drained): keep the undrained remainder sorted so
+            // pops stay min-first.  Time never moves backwards, so the
+            // current cycle can never also have a future bucket.
+            let pos = self.current[self.head..].partition_point(|e| e <= &entry);
+            self.current.insert(self.head + pos, entry);
+            return;
+        }
+        let bucket = self.future.entry(t).or_insert_with(|| self.pool.pop().unwrap_or_default());
+        bucket.push(entry);
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        loop {
+            if self.head < self.current.len() {
+                let ev = self.current[self.head].0;
+                self.head += 1;
+                if self.head == self.current.len() {
+                    self.current.clear();
+                    self.head = 0;
+                }
+                return Some(ev);
+            }
+            // Advance to the earliest future bucket.
+            let (t, mut bucket) = self.future.pop_first()?;
+            bucket.sort_unstable();
+            self.cur_time = t;
+            self.head = 0;
+            self.pool.push(std::mem::replace(&mut self.current, bucket));
+        }
+    }
+
+    pub fn next_time(&self) -> Option<u64> {
+        if self.head < self.current.len() {
+            return Some(self.cur_time);
+        }
+        self.future.keys().next().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arr(t: u64, dnn: usize) -> Event {
+        Event::Arrival { t, dnn }
+    }
+
+    fn drain(q: &mut BucketQueue) -> Vec<Event> {
+        let mut out = Vec::new();
+        while let Some(e) = q.pop() {
+            out.push(e);
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_event_order_across_buckets() {
+        let mut q = BucketQueue::new();
+        q.push(Event::Repartition { t: 30 });
+        q.push(arr(10, 1));
+        q.push(Event::Deadline { t: 20, dnn: 0 });
+        q.push(arr(10, 0));
+        q.push(Event::LayerComplete { t: 10, dnn: 0, layer: 0, alloc: 0 });
+        assert_eq!(q.next_time(), Some(10));
+        assert_eq!(
+            drain(&mut q),
+            vec![
+                arr(10, 0),
+                arr(10, 1),
+                Event::LayerComplete { t: 10, dnn: 0, layer: 0, alloc: 0 },
+                Event::Deadline { t: 20, dnn: 0 },
+                Event::Repartition { t: 30 },
+            ]
+        );
+        assert_eq!(q.next_time(), None);
+    }
+
+    #[test]
+    fn equal_keys_pop_fifo() {
+        // Duplicate events (same total-order key) must come back in
+        // insertion order.  Track identity via interleaved distinct keys.
+        let mut q = BucketQueue::new();
+        let mut h = HeapQueue::new();
+        let evs = [arr(5, 0), arr(5, 0), arr(5, 0), arr(5, 1), arr(5, 0)];
+        for e in evs {
+            q.push(e);
+            h.push(e);
+        }
+        let want = vec![arr(5, 0), arr(5, 0), arr(5, 0), arr(5, 0), arr(5, 1)];
+        assert_eq!(drain(&mut q), want);
+        let mut hout = Vec::new();
+        while let Some(e) = h.pop() {
+            hout.push(e);
+        }
+        assert_eq!(hout, want);
+    }
+
+    #[test]
+    fn same_cycle_push_mid_drain_pops_in_key_order() {
+        // The engine arms preemptions and reposts completions while a
+        // batch drains: a push at the cycle being drained must slot into
+        // the undrained remainder in key order.
+        let mut q = BucketQueue::new();
+        q.push(arr(10, 0));
+        q.push(Event::Repartition { t: 10 });
+        assert_eq!(q.pop(), Some(arr(10, 0)));
+        q.push(Event::Deadline { t: 10, dnn: 2 });
+        assert_eq!(q.pop(), Some(Event::Deadline { t: 10, dnn: 2 }));
+        assert_eq!(q.pop(), Some(Event::Repartition { t: 10 }));
+        // Bucket fully drained, time unchanged: a same-cycle push reopens it.
+        q.push(Event::MemRescale { t: 10 });
+        assert_eq!(q.pop(), Some(Event::MemRescale { t: 10 }));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn reopened_cycle_beats_future_buckets() {
+        let mut q = BucketQueue::new();
+        q.push(arr(10, 0));
+        q.push(arr(20, 1));
+        assert_eq!(q.pop(), Some(arr(10, 0)));
+        // t=10 drained; a push back at 10 must still pop before 20.
+        q.push(Event::Preempt { t: 10, dnn: 0, layer: 0, alloc: 1 });
+        assert_eq!(q.next_time(), Some(10));
+        assert_eq!(q.pop(), Some(Event::Preempt { t: 10, dnn: 0, layer: 0, alloc: 1 }));
+        assert_eq!(q.pop(), Some(arr(20, 1)));
+    }
+
+    #[test]
+    fn initial_pushes_at_cycle_zero() {
+        // cur_time starts at 0; t=0 pushes must work before any pop.
+        let mut q = BucketQueue::new();
+        q.push(arr(0, 1));
+        q.push(arr(0, 0));
+        q.push(arr(3, 2));
+        assert_eq!(drain(&mut q), vec![arr(0, 0), arr(0, 1), arr(3, 2)]);
+    }
+
+    #[test]
+    fn bucket_vectors_are_recycled() {
+        let mut q = BucketQueue::new();
+        for round in 0..4u64 {
+            q.push(arr(10 * (round + 1), 0));
+            q.push(arr(10 * (round + 1), 1));
+            assert_eq!(q.pop(), Some(arr(10 * (round + 1), 0)));
+            assert_eq!(q.pop(), Some(arr(10 * (round + 1), 1)));
+        }
+        assert!(!q.pool.is_empty(), "drained buckets return to the pool");
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn default_selection_is_bucket() {
+        // The env opt-out is process-wide; in the test process it is not
+        // set, so the engine runs on the bucket implementation.
+        assert!(matches!(EventQueue::new(), EventQueue::Bucket(_)));
+    }
+}

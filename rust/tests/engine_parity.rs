@@ -616,3 +616,77 @@ fn columns_mode_sweep_json_carries_no_2d_keys() {
     assert!(json_2d.contains("\"partition_mode\""));
     assert!(json_2d.contains("\"modes\""));
 }
+
+#[test]
+fn bucket_queue_matches_binary_heap() {
+    // The calendar/bucket event queue (PR 6 hot-path attack #2) must pop
+    // the exact same event sequence as the seq-stamped `BinaryHeap`
+    // reference — including FIFO order among *equal-key* duplicates,
+    // which the engine relies on for stale-husk semantics.
+    //
+    // The generator respects the one contract the engine guarantees and
+    // the bucket queue requires: no push at a time earlier than the last
+    // popped event (simulated time never moves backwards).
+    use mtsa::sim_core::queue::{BucketQueue, HeapQueue};
+    use mtsa::sim_core::Event;
+
+    fn random_event(rng: &mut mtsa::util::rng::Rng, low: u64) -> Event {
+        let t = low + rng.gen_range_inclusive(0, 12);
+        let dnn = rng.gen_range(4) as DnnId;
+        let layer = rng.gen_range(3) as LayerId;
+        let alloc = rng.gen_range(5) as AllocId;
+        match rng.gen_range(6) {
+            0 => Event::Arrival { t, dnn },
+            1 => Event::LayerComplete { t, dnn, layer, alloc },
+            2 => Event::Preempt { t, dnn, layer, alloc },
+            3 => Event::Deadline { t, dnn },
+            4 => Event::Repartition { t },
+            _ => Event::MemRescale { t },
+        }
+    }
+
+    prop::check("bucket queue == binary heap", 200, |rng| {
+        let mut bucket = BucketQueue::new();
+        let mut heap = HeapQueue::new();
+        let mut low = 0u64; // time of the last popped event
+        let mut live = 0usize;
+        for step in 0..rng.gen_range_inclusive(20, 400) {
+            prop::ensure_eq(
+                bucket.next_time(),
+                heap.next_time(),
+                &format!("next_time before step {step}"),
+            )?;
+            if live == 0 || rng.gen_bool(0.6) {
+                let ev = random_event(rng, low);
+                bucket.push(ev);
+                heap.push(ev);
+                live += 1;
+                // Same-cycle FIFO ties: re-push the identical event so
+                // only insertion order can distinguish the copies.
+                if rng.gen_bool(0.25) {
+                    bucket.push(ev);
+                    heap.push(ev);
+                    live += 1;
+                }
+            } else {
+                let a = bucket.pop();
+                let b = heap.pop();
+                prop::ensure_eq(a, b, &format!("pop at step {step}"))?;
+                let ev = a.expect("live > 0 implies non-empty");
+                prop::ensure(ev.time() >= low, "pops are time-monotonic")?;
+                low = ev.time();
+                live -= 1;
+            }
+        }
+        // Full drain: both queues must empty in the identical order.
+        loop {
+            let a = bucket.pop();
+            let b = heap.pop();
+            prop::ensure_eq(a, b, "pop during final drain")?;
+            if a.is_none() {
+                break;
+            }
+        }
+        prop::ensure_eq(bucket.next_time(), None, "bucket empty after drain")
+    });
+}

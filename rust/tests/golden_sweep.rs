@@ -1,0 +1,142 @@
+//! Golden-snapshot regression corpus: sweep JSON fixtures under
+//! `tests/golden/`, byte-diffed against live output.
+//!
+//! These snapshots pin the *entire* observable surface of the sweep
+//! pipeline — scenario generation, the event engine (all four hot-path
+//! optimizations enabled), SLA statistics, and the deterministic JSON
+//! renderer — across every axis: the full policy set (widest / equal /
+//! mem-aware) × partition mode (columns / 2d) × preemption (off /
+//! arrival) × shared memory (off / on).
+//!
+//! Lifecycle:
+//! - missing fixture → the test *bootstraps* it (writes the live bytes
+//!   and passes), so a fresh checkout is green and the first CI run
+//!   self-seeds;
+//! - `UPDATE_GOLDEN=1 cargo test --test golden_sweep` → rewrite all
+//!   fixtures (do this only for an intended behavior change, and commit
+//!   the diff);
+//! - otherwise → byte-equality, with the first divergence reported.
+
+use std::path::PathBuf;
+
+use mtsa::coordinator::scheduler::{
+    AllocPolicy, FeedModel, PartitionMode, PreemptMode, SchedulerConfig,
+};
+use mtsa::mem::ArbitrationMode;
+use mtsa::report;
+use mtsa::sweep::{run_sweep, SweepGrid};
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+/// Byte-compare the live sweep JSON for `grid` against `tests/golden/<name>.json`,
+/// bootstrapping (or refreshing under `UPDATE_GOLDEN=1`) the fixture.
+fn check_golden(name: &str, grid: &SweepGrid) {
+    let rows = run_sweep(grid, &SchedulerConfig::default(), 2).expect("sweep runs");
+    let live = report::sweep_json(grid, &rows).render();
+    let path = golden_dir().join(format!("{name}.json"));
+    let update = std::env::var_os("UPDATE_GOLDEN").is_some();
+    if update || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).expect("create tests/golden");
+        std::fs::write(&path, &live).expect("write fixture");
+        eprintln!(
+            "golden: wrote {} ({} bytes){}",
+            path.display(),
+            live.len(),
+            if update { "" } else { " [bootstrap — commit this file]" },
+        );
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("read fixture");
+    if live != want {
+        let at = live
+            .bytes()
+            .zip(want.bytes())
+            .position(|(a, b)| a != b)
+            .unwrap_or_else(|| live.len().min(want.len()));
+        let ctx = |s: &str| {
+            let lo = at.saturating_sub(60);
+            let hi = (at + 60).min(s.len());
+            s.get(lo..hi).unwrap_or("<non-utf8 boundary>").to_string()
+        };
+        panic!(
+            "golden snapshot `{name}` diverged at byte {at} \
+             (live {} bytes, fixture {} bytes).\n  live:    …{}…\n  fixture: …{}…\n\
+             If this change is intended, refresh with \
+             `UPDATE_GOLDEN=1 cargo test --test golden_sweep` and commit.",
+            live.len(),
+            want.len(),
+            ctx(&live),
+            ctx(&want),
+        );
+    }
+}
+
+/// Small, fast base: one mix, batch arrivals, one feed.
+fn base_grid() -> SweepGrid {
+    SweepGrid {
+        mixes: vec!["NCF".to_string()],
+        rates: vec![0.0],
+        policies: vec![
+            AllocPolicy::WidestToHeaviest,
+            AllocPolicy::EqualShare,
+            AllocPolicy::MemAware,
+        ],
+        feeds: vec![FeedModel::Independent],
+        requests: 3,
+        ..SweepGrid::default()
+    }
+}
+
+#[test]
+fn golden_columns_all_policies() {
+    check_golden("columns_policies", &base_grid());
+}
+
+#[test]
+fn golden_2d_all_policies() {
+    let grid = SweepGrid { modes: vec![PartitionMode::TwoD], ..base_grid() };
+    check_golden("2d_policies", &grid);
+}
+
+#[test]
+fn golden_preempt_axis() {
+    let grid = SweepGrid {
+        mixes: vec!["light".to_string()],
+        rates: vec![30_000.0],
+        policies: vec![AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare],
+        preempts: vec![PreemptMode::Off, PreemptMode::Arrival],
+        requests: 4,
+        ..base_grid()
+    };
+    check_golden("preempt_axis", &grid);
+}
+
+#[test]
+fn golden_mem_axis() {
+    let grid = SweepGrid {
+        policies: vec![AllocPolicy::WidestToHeaviest, AllocPolicy::MemAware],
+        bandwidths: vec![8.0],
+        arbitrations: vec![ArbitrationMode::FairShare],
+        ..base_grid()
+    };
+    check_golden("mem_axis", &grid);
+}
+
+#[test]
+fn golden_mem_preempt_2d_cross() {
+    // The full cross on one policy: {columns, 2d} × {off, arrival} × mem
+    // on — the interaction corner none of the single-axis fixtures pins.
+    let grid = SweepGrid {
+        mixes: vec!["light".to_string()],
+        rates: vec![30_000.0],
+        policies: vec![AllocPolicy::MemAware],
+        modes: vec![PartitionMode::Columns, PartitionMode::TwoD],
+        preempts: vec![PreemptMode::Off, PreemptMode::Arrival],
+        bandwidths: vec![8.0],
+        requests: 3,
+        ..base_grid()
+    };
+    check_golden("mem_preempt_2d_cross", &grid);
+}

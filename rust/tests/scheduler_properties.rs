@@ -564,3 +564,59 @@ fn two_d_mode_executes_every_layer_once_like_columns() {
         )
     });
 }
+
+#[test]
+fn timing_cache_is_transparent() {
+    // The memoized timing model (PR 6 hot-path attack #1) must be
+    // observationally identical to the uncached computation for every
+    // (geometry, gemm, tile, buffer share, interleave) key — both on the
+    // first call (miss path) and on an immediate repeat (hit path).
+    use mtsa::sim::buffers::BufferConfig;
+    use mtsa::sim::dataflow::{
+        layer_timing_tile_with_share, layer_timing_tile_with_share_uncached, timing_cache_enabled,
+    };
+    use mtsa::sim::partitioned::Tile;
+    use mtsa::workloads::shapes::GemmDims;
+
+    assert!(
+        timing_cache_enabled(),
+        "run this test without MTSA_NO_TIMING_CACHE: it exercises the memo"
+    );
+    prop::check("timing memo == uncached", 300, |rng| {
+        let geom = ArrayGeometry::new(
+            *rng.choose(&[16u64, 32, 64, 128]),
+            *rng.choose(&[16u64, 32, 64, 128, 256]),
+        );
+        let rows = rng.gen_range_inclusive(1, geom.rows);
+        let cols = rng.gen_range_inclusive(1, geom.cols);
+        let tile = Tile::new(
+            rng.gen_range_inclusive(0, geom.rows - rows),
+            rng.gen_range_inclusive(0, geom.cols - cols),
+            rows,
+            cols,
+        );
+        let gemm = GemmDims {
+            sr: rng.gen_range_inclusive(1, 4096),
+            k: rng.gen_range_inclusive(1, 2048),
+            m: rng.gen_range_inclusive(1, 2048),
+        };
+        // Mostly realistic shares (what the scheduler hands out), plus
+        // the occasional full-array config to vary the key's buffer arm.
+        let share = if rng.gen_bool(0.8) {
+            BufferConfig::default().share(tile.cols.max(1), geom.cols)
+        } else {
+            BufferConfig::default()
+        };
+        let interleave = if rng.gen_bool(0.5) {
+            let parties = rng.gen_range_inclusive(1, 4);
+            Some((parties, rng.gen_range_inclusive(0, parties - 1)))
+        } else {
+            None
+        };
+        let miss = layer_timing_tile_with_share(geom, gemm, tile, &share, interleave);
+        let hit = layer_timing_tile_with_share(geom, gemm, tile, &share, interleave);
+        let raw = layer_timing_tile_with_share_uncached(geom, gemm, tile, &share, interleave);
+        prop::ensure_eq(miss, raw, "memoized (miss path) == uncached")?;
+        prop::ensure_eq(hit, raw, "memoized (hit path) == uncached")
+    });
+}
