@@ -1,40 +1,23 @@
 //! Cloud INFaaS scenario (paper §1): an inference-as-a-service endpoint
-//! receives a Poisson stream of mixed DNN jobs (zoo networks) and serves
-//! them on one 128×128 array.  Compares dynamic partitioning against the
-//! sequential baseline on tail latency and throughput.
+//! receives a Poisson stream of mixed DNN jobs (zoo networks) — now served
+//! by the fleet tier ([`mtsa::fleet`]): a small cluster of 128×128 arrays
+//! behind a batching router with SLO classes.  Compares a cluster of
+//! dynamically partitioned instances against the same silicon running the
+//! sequential baseline on SLO attainment, tail latency and cost per query.
 //!
 //! ```bash
 //! cargo run --release --example cloud_infaas [seed] [num_jobs]
 //! ```
 
-use mtsa::coordinator::baseline::SequentialBaseline;
-use mtsa::coordinator::scheduler::AllocPolicy;
-use mtsa::coordinator::{DynamicScheduler, RunMetrics, SchedulerConfig};
+use mtsa::coordinator::scheduler::SchedulerConfig;
+use mtsa::fleet::{run_fleet, FleetConfig, FleetPolicy, FleetReport, Placement, SloClass};
 use mtsa::report;
-use mtsa::util::rng::Rng;
-use mtsa::util::stats::Summary;
-use mtsa::util::tablefmt::Table;
-use mtsa::workloads::dnng::WorkloadPool;
-use mtsa::workloads::models;
+use mtsa::workloads::generator::{ArrivalProcess, ModelMix};
 
-fn turnaround_summary(pool: &WorkloadPool, m: &RunMetrics) -> Summary {
-    let samples: Vec<f64> = pool
-        .dnns
-        .iter()
-        .map(|d| (m.completion[&d.name] - d.arrival_cycles) as f64)
-        .collect();
-    Summary::from_samples(&samples).unwrap()
-}
-
-fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let seed: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(7);
-    let num_jobs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(24);
-    let mut rng = Rng::new(seed);
-
-    // A job mix skewed toward small models (the INFaaS reality): NCF and
-    // the RNNs dominate request counts; the big CNNs appear occasionally.
-    let mix: &[(&str, f64)] = &[
+/// A job mix skewed toward small models (the INFaaS reality): NCF and
+/// the RNNs dominate request counts; the big CNNs appear occasionally.
+fn infaas_mix() -> ModelMix {
+    ModelMix::new(&[
         ("NCF", 0.30),
         ("HandwritingLSTM", 0.15),
         ("DeepVoice", 0.15),
@@ -44,77 +27,66 @@ fn main() {
         ("AlphaGoZero", 0.05),
         ("Transformer", 0.03),
         ("AlexNet", 0.02),
-    ];
+    ])
+}
 
-    // Poisson arrivals, mean gap 40k cycles (~57 µs at 0.7 GHz).
-    let mut dnns = Vec::new();
-    let mut t = 0.0f64;
-    for i in 0..num_jobs {
-        let roll = rng.gen_f64();
-        let mut acc = 0.0;
-        let mut pick = mix[0].0;
-        for (name, p) in mix {
-            acc += p;
-            if roll < acc {
-                pick = name;
-                break;
-            }
-        }
-        let entry = models::by_name(pick).unwrap();
-        let mut dnn = (entry.build)();
-        dnn.name = format!("{}#{i}", entry.name);
-        t += rng.gen_exp(1.0 / 40_000.0);
-        dnns.push(dnn.arriving_at(t as u64));
+fn endpoint(policy: FleetPolicy, requests: usize, seed: u64) -> FleetConfig {
+    let sched = SchedulerConfig::default();
+    FleetConfig {
+        instances: FleetConfig::uniform(4, &sched, policy),
+        placement: Placement::LeastLoaded,
+        random_k: 2,
+        classes: FleetConfig::default_classes(40_000.0),
+        slots: 8,
+        queue_cap: 64,
+        mix: infaas_mix(),
+        // Poisson arrivals, mean gap 40k cycles (~57 µs at 0.7 GHz).
+        arrival: ArrivalProcess::Poisson { mean_interarrival: 40_000.0 },
+        diurnal: None,
+        requests,
+        seed,
+        chunk: 2048,
     }
-    let pool = WorkloadPool::new("infaas", dnns);
+}
 
-    let cfg = SchedulerConfig::default();
-    let equal_cfg =
-        SchedulerConfig { alloc_policy: AllocPolicy::EqualShare, ..cfg.clone() };
-    let dynamic = DynamicScheduler::new(cfg.clone()).run(&pool);
-    let dynamic_eq = DynamicScheduler::new(equal_cfg).run(&pool);
-    let sequential = SequentialBaseline::new(cfg.clone()).run(&pool);
+fn class(r: &FleetReport, c: SloClass) -> &mtsa::fleet::ClassReport {
+    r.classes.iter().find(|cr| cr.class == c).expect("all classes reported")
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let seed: u64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(7);
+    let num_jobs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2_000);
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+
+    let dynamic = run_fleet(&endpoint(FleetPolicy::Dynamic, num_jobs, seed), threads)
+        .expect("dynamic fleet");
+    let sequential = run_fleet(&endpoint(FleetPolicy::Sequential, num_jobs, seed), threads)
+        .expect("sequential fleet");
 
     println!(
-        "INFaaS stream: {} jobs over {:.1}M cycles (seed {seed})\n",
-        num_jobs,
-        pool.dnns.last().unwrap().arrival_cycles as f64 / 1e6
+        "INFaaS endpoint: {num_jobs} jobs ({} batches) on 4x 128x128 (seed {seed})\n",
+        dynamic.batches
     );
+    println!("dynamic partitioning per instance:");
+    println!("{}", report::fleet_table(&dynamic).render());
+    println!("sequential FIFO per instance (same silicon, same arrivals):");
+    println!("{}", report::fleet_table(&sequential).render());
 
-    let ds = turnaround_summary(&pool, &dynamic);
-    let de = turnaround_summary(&pool, &dynamic_eq);
-    let ss = turnaround_summary(&pool, &sequential);
-    let mut table =
-        Table::new(&["turnaround (cycles)", "sequential FIFO", "dyn widest", "dyn equal-share", "best saving"]);
-    let to_c = |c: f64| format!("{:.0}", c);
-    for (label, s, d, e) in [
-        ("mean", ss.mean, ds.mean, de.mean),
-        ("p50", ss.p50, ds.p50, de.p50),
-        ("p95", ss.p95, ds.p95, de.p95),
-        ("p99", ss.p99, ds.p99, de.p99),
-        ("max", ss.max, ds.max, de.max),
-    ] {
-        table.row(&[
-            label.to_string(),
-            to_c(s),
-            to_c(d),
-            to_c(e),
-            format!("{:+.1}%", report::saving_pct(s, d.min(e))),
-        ]);
-    }
-    println!("{}", table.render());
-
-    let thru = |m: &RunMetrics| num_jobs as f64 / m.makespan as f64 * 1e6;
+    let dl = class(&dynamic, SloClass::LatencyCritical);
+    let sl = class(&sequential, SloClass::LatencyCritical);
     println!(
-        "throughput: sequential {:.2} vs dynamic {:.2} jobs/Mcycle ({:+.1}%)",
-        thru(&sequential),
-        thru(&dynamic),
-        report::saving_pct(thru(&sequential), thru(&dynamic)) * -1.0
+        "latency-critical: attainment {:.1}% vs {:.1}%, p99 {} vs {} cycles",
+        dl.attainment * 100.0,
+        sl.attainment * 100.0,
+        dl.p99,
+        sl.p99,
     );
     println!(
-        "makespan:   {} -> {} cycles ({:+.1}%)",
-        sequential.makespan,
-        dynamic.makespan,
-        report::saving_pct(sequential.makespan as f64, dynamic.makespan as f64)
+        "fleet: util {:.1}% vs {:.1}%, cost {:.6} vs {:.6} J/query",
+        dynamic.utilization * 100.0,
+        sequential.utilization * 100.0,
+        dynamic.cost_j_per_query,
+        sequential.cost_j_per_query,
     );
 }

@@ -20,6 +20,10 @@
 //! - `sweep_point_light` — one full sweep point (scenario generation +
 //!   dynamic/sequential runs + SLA stats); `points_per_sec` is the
 //!   sweep-grid throughput unit.
+//! - `fleet_events_per_sec` — a small serving-tier run ([`crate::fleet`]):
+//!   streaming generation + routing + batched multi-instance simulation;
+//!   `events_per_sec` counts engine events retired across the cluster per
+//!   wall-clock second.  Informational (not gated).
 
 use std::time::{Duration, Instant};
 
@@ -29,6 +33,7 @@ use super::args::ParsedArgs;
 use crate::benchkit::{Bench, BenchOpts};
 use crate::coordinator::partition::alloc_index_enabled;
 use crate::coordinator::scheduler::{AllocPolicy, DynamicScheduler, FeedModel, SchedulerConfig};
+use crate::fleet::{run_fleet, FleetConfig, FleetPolicy, Placement};
 use crate::sim::buffers::BufferConfig;
 use crate::sim::dataflow::{timing_cache_enabled, ArrayGeometry};
 use crate::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
@@ -36,6 +41,7 @@ use crate::sim_core::obs_ring_enabled;
 use crate::sim_core::queue::bucket_queue_enabled;
 use crate::sweep::{run_sweep, SweepGrid};
 use crate::util::json::Json;
+use crate::workloads::generator::{ArrivalProcess, Diurnal, ModelMix};
 use crate::workloads::models::heavy_pool;
 use crate::workloads::shapes::GemmDims;
 
@@ -59,6 +65,10 @@ struct Measured {
     sweep_requests: usize,
     sweep_wall_s: f64,
     sweep_points_per_sec: f64,
+    fleet_requests: usize,
+    fleet_events: u64,
+    fleet_wall_s: f64,
+    fleet_events_per_sec: f64,
 }
 
 fn measure(quick: bool, threads: usize) -> Result<Measured> {
@@ -116,6 +126,26 @@ fn measure(quick: bool, threads: usize) -> Result<Measured> {
     let t0 = Instant::now();
     let rows = run_sweep(&grid, &SchedulerConfig::default(), threads)?;
     let sweep_wall_s = t0.elapsed().as_secs_f64();
+
+    // One small serving-tier run, end to end (generation + routing +
+    // batched multi-instance simulation).
+    let fleet_cfg = FleetConfig {
+        instances: FleetConfig::uniform(4, &SchedulerConfig::default(), FleetPolicy::Dynamic),
+        placement: Placement::LeastLoaded,
+        random_k: 2,
+        classes: FleetConfig::default_classes(30_000.0),
+        slots: 8,
+        queue_cap: 64,
+        mix: ModelMix::new(&[("NCF", 2.0), ("MelodyLSTM", 1.0)]),
+        arrival: ArrivalProcess::Poisson { mean_interarrival: 30_000.0 },
+        diurnal: Some(Diurnal { period: 10_000_000.0, amplitude: 0.5, phase: 0.0 }),
+        requests: if quick { 300 } else { 2_000 },
+        seed: 42,
+        chunk: 1024,
+    };
+    let t0 = Instant::now();
+    let fleet = run_fleet(&fleet_cfg, threads)?;
+    let fleet_wall_s = t0.elapsed().as_secs_f64();
     b.finish();
 
     Ok(Measured {
@@ -127,13 +157,17 @@ fn measure(quick: bool, threads: usize) -> Result<Measured> {
         sweep_requests: grid.requests,
         sweep_wall_s,
         sweep_points_per_sec: rows.len() as f64 / sweep_wall_s,
+        fleet_requests: fleet_cfg.requests,
+        fleet_events: fleet.events,
+        fleet_wall_s,
+        fleet_events_per_sec: fleet.events as f64 / fleet_wall_s,
     })
 }
 
 fn record_json(m: &Measured) -> Json {
     obj(vec![
         ("schema", Json::Num(BENCH_SCHEMA as f64)),
-        ("pr", Json::Num(6.0)),
+        ("pr", Json::Num(7.0)),
         ("provenance", Json::Str("measured".into())),
         ("tolerance_pct", Json::Num(100.0 * REGRESSION_TOLERANCE)),
         (
@@ -169,9 +203,35 @@ fn record_json(m: &Measured) -> Json {
                         ("points_per_sec", Json::Num(m.sweep_points_per_sec)),
                     ]),
                 ),
+                (
+                    "fleet_events_per_sec",
+                    obj(vec![
+                        ("requests", Json::Num(m.fleet_requests as f64)),
+                        ("events", Json::Num(m.fleet_events as f64)),
+                        ("wall_s", Json::Num(m.fleet_wall_s)),
+                        ("events_per_sec", Json::Num(m.fleet_events_per_sec)),
+                    ]),
+                ),
             ]),
         ),
     ])
+}
+
+/// `--record` reruns must not lose history: a prior output file's
+/// `pre_pr` block (the before-this-PR snapshot) is carried forward
+/// verbatim into the fresh record.
+fn carry_forward_pre_pr(out: &str, fresh: Json) -> Json {
+    let prior = std::fs::read_to_string(out)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| j.get("pre_pr").cloned());
+    match (prior, fresh) {
+        (Some(p), Json::Obj(mut map)) => {
+            map.insert("pre_pr".to_string(), p);
+            Json::Obj(map)
+        }
+        (_, fresh) => fresh,
+    }
 }
 
 /// Gate a fresh measurement against a committed baseline file.  Returns
@@ -229,13 +289,13 @@ pub fn cmd_bench(args: &ParsedArgs) -> Result<()> {
     );
 
     if args.has("check") {
-        let baseline = args.opt("baseline").unwrap_or("BENCH_6.json");
+        let baseline = args.opt("baseline").unwrap_or("BENCH_7.json");
         check_against(baseline, &m)?;
     }
 
     if args.has("record") {
-        let out = args.opt("out").unwrap_or("BENCH_6.json");
-        let json = record_json(&m).render();
+        let out = args.opt("out").unwrap_or("BENCH_7.json");
+        let json = carry_forward_pre_pr(out, record_json(&m)).render();
         std::fs::write(out, &json).with_context(|| format!("writing {out}"))?;
         println!("wrote {out} ({} bytes, provenance \"measured\")", json.len());
     }
@@ -269,7 +329,49 @@ mod tests {
         assert!(eng.get("events_per_run").unwrap().as_u64().unwrap() > 0);
         let sweep = parsed.get("scenarios").unwrap().get("sweep_point_light").unwrap();
         assert!(sweep.get("points_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(parsed.get("pr").and_then(Json::as_u64), Some(7));
+        let fleet = parsed.get("scenarios").unwrap().get("fleet_events_per_sec").unwrap();
+        assert!(fleet.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert!(fleet.get("events").unwrap().as_u64().unwrap() > 0);
         let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn record_rerun_preserves_prior_pre_pr_block() {
+        // The satellite bugfix: rerunning `--record` on an existing file
+        // must carry the before-this-PR snapshot forward, not drop it.
+        let out = tmp("prepr.json");
+        std::fs::write(
+            &out,
+            r#"{"pr":7,"pre_pr":{"engine_run_heavy":{"events_per_sec":123.0}},"scenarios":{}}"#,
+        )
+        .unwrap();
+        let args = ParsedArgs::parse(&[
+            "bench".into(),
+            "--quick".into(),
+            "--record".into(),
+            "--out".into(),
+            out.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        cmd_bench(&args).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let kept = parsed
+            .get("pre_pr")
+            .and_then(|p| p.get("engine_run_heavy"))
+            .and_then(|e| e.get("events_per_sec"))
+            .and_then(Json::as_f64);
+        assert_eq!(kept, Some(123.0));
+        // The fresh measurement is still there alongside the history.
+        assert!(parsed.get("scenarios").unwrap().get("engine_run_heavy").is_some());
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn carry_forward_is_identity_without_prior_file() {
+        let fresh = obj(vec![("pr", Json::Num(7.0))]);
+        let kept = carry_forward_pre_pr("/nonexistent/BENCH_7.json", fresh.clone());
+        assert_eq!(kept.render(), fresh.render());
     }
 
     #[test]
@@ -291,6 +393,10 @@ mod tests {
             sweep_requests: 4,
             sweep_wall_s: 1.0,
             sweep_points_per_sec: 1.0,
+            fleet_requests: 300,
+            fleet_events: 1,
+            fleet_wall_s: 1.0,
+            fleet_events_per_sec: 1.0,
         };
         assert!(!check_against(base.to_str().unwrap(), &m).unwrap());
         let _ = std::fs::remove_file(&base);
@@ -313,6 +419,10 @@ mod tests {
             sweep_requests: 4,
             sweep_wall_s: 1.0,
             sweep_points_per_sec: 1.0,
+            fleet_requests: 300,
+            fleet_events: 1,
+            fleet_wall_s: 1.0,
+            fleet_events_per_sec: 1.0,
         };
         assert!(check_against(base.to_str().unwrap(), &m).unwrap());
         m.events_per_sec = 800.0; // >15% below
@@ -332,6 +442,10 @@ mod tests {
             sweep_requests: 4,
             sweep_wall_s: 1.0,
             sweep_points_per_sec: 1.0,
+            fleet_requests: 300,
+            fleet_events: 1,
+            fleet_wall_s: 1.0,
+            fleet_events_per_sec: 1.0,
         };
         assert!(check_against("/nonexistent/BENCH_6.json", &m).is_err());
     }

@@ -33,7 +33,14 @@ USAGE:
        [--preempts off,arrival,deadline]
        [--bandwidths 8,32,128] [--arbitrations fair,weighted,priority]
        [--requests 12] [--slack 3.0] [--burst <size>]
-       [--seed 42] [--threads N] [--json <file>]
+       [--fleet 4,8] [--seed 42] [--threads N] [--json <file>]
+  mtsa fleet                             serve a request stream on a cluster
+       [--config <file>] [--instances 8] [--requests 1000000]
+       [--mix heavy|light|model,...] [--mean <cycles>]
+       [--policy dynamic|sequential|static|multi-array[:N]]
+       [--placement least-loaded|affinity|random-k] [--slots 8] [--queue 64]
+       [--amplitude 0.6] [--period <cycles>] [--seed 42]
+       [--threads N] [--json <file>]
   mtsa trace <heavy|light|model,...>     write Scale-Sim/Accelergy CSVs
        [--config <file>] [--out <dir>]
   mtsa area [--config <file>]            45nm area breakdown (Accelergy-style)
@@ -50,6 +57,7 @@ pub fn dispatch(args: &ParsedArgs) -> Result<()> {
         "zoo" => cmd_zoo(args),
         "run" => cmd_run(args),
         "sweep" => cmd_sweep(args),
+        "fleet" => cmd_fleet(args),
         "trace" => cmd_trace(args),
         "area" => cmd_area(args),
         "verify" => cmd_verify(args),
@@ -222,8 +230,8 @@ fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
     args.ensure_known(
         &[
             "config", "mixes", "rates", "policies", "feeds", "geoms", "modes", "preempts",
-            "bandwidths", "arbitrations", "requests", "slack", "burst", "burst-within", "seed",
-            "threads", "json",
+            "bandwidths", "arbitrations", "requests", "slack", "burst", "burst-within", "fleet",
+            "seed", "threads", "json",
         ],
         &[],
     )?;
@@ -286,6 +294,12 @@ fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
             bail!("--arbitrations requires --bandwidths (the contention axis)");
         }
     }
+    if let Some(v) = args.opt("fleet") {
+        grid.fleet = parse_list::<usize>(v, "fleet")?;
+        if grid.fleet.iter().any(|&n| n == 0) {
+            bail!("--fleet cluster sizes must be >= 1, got {:?}", grid.fleet);
+        }
+    }
     grid.requests = args.opt_u64("requests", grid.requests as u64)?.max(1) as usize;
     grid.seed = args.opt_u64("seed", grid.seed)?;
     if let Some(v) = args.opt("slack") {
@@ -338,13 +352,154 @@ fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
     );
     println!("{}", report::sweep_table(&grid, &rows).render());
 
-    let json = report::sweep_json(&grid, &rows).render();
+    let fleet_rows = crate::sweep::run_fleet_axis(&grid, &cfg.scheduler, threads)?;
+    for fr in &fleet_rows {
+        println!(
+            "fleet {}x @ {}@{:.0}: util {:.1}%, {}/{} served, {:.4} J/query",
+            fr.instances,
+            fr.mix,
+            fr.mean_interarrival,
+            fr.report.utilization * 100.0,
+            fr.report.completed,
+            fr.report.generated,
+            fr.report.cost_j_per_query,
+        );
+    }
+
+    let json = report::sweep_json_with_fleet(&grid, &rows, &fleet_rows).render();
     match args.opt("json") {
         Some(path) => {
             std::fs::write(path, &json).with_context(|| format!("writing {path}"))?;
             println!("wrote {path} ({} bytes; same seed => identical bytes)", json.len());
         }
         None => println!("{json}"),
+    }
+    Ok(())
+}
+
+fn cmd_fleet(args: &ParsedArgs) -> Result<()> {
+    use crate::fleet::{run_fleet, FleetConfig, FleetPolicy, Placement};
+    use crate::workloads::generator::{ArrivalProcess, Diurnal, ModelMix};
+
+    args.ensure_known(
+        &[
+            "config", "instances", "requests", "mix", "mean", "policy", "placement", "slots",
+            "queue", "amplitude", "period", "seed", "threads", "json",
+        ],
+        &[],
+    )?;
+    let cfg = load_config(args)?;
+    let d = &cfg.fleet;
+
+    let instances = args.opt_u64("instances", d.instances)?.max(1) as usize;
+    let requests = args.opt_u64("requests", d.requests)?.max(1) as usize;
+    let slots = args.opt_u64("slots", d.slots)?.max(1) as usize;
+    let queue_cap = args.opt_u64("queue", d.queue_cap)?.max(1) as usize;
+    let seed = args.opt_u64("seed", d.seed)?;
+    let policy = match args.opt("policy") {
+        Some(v) => v.parse::<FleetPolicy>().map_err(|e| anyhow!("--policy: {e}"))?,
+        None => d.policy,
+    };
+    let placement = match args.opt("placement") {
+        Some(v) => v.parse::<Placement>().map_err(|e| anyhow!("--placement: {e}"))?,
+        None => d.placement,
+    };
+    let mean = match args.opt("mean") {
+        Some(v) => v
+            .parse::<f64>()
+            .ok()
+            .filter(|m| m.is_finite() && *m > 0.0)
+            .with_context(|| format!("--mean expects cycles > 0, got {v:?}"))?,
+        None => cfg.scenario.mean_interarrival,
+    };
+    let amplitude = match args.opt("amplitude") {
+        Some(v) => v
+            .parse::<f64>()
+            .ok()
+            .filter(|a| (0.0..1.0).contains(a))
+            .with_context(|| format!("--amplitude expects a value in [0, 1), got {v:?}"))?,
+        None => d.diurnal_amplitude,
+    };
+    let period = match args.opt("period") {
+        Some(v) => v
+            .parse::<f64>()
+            .ok()
+            .filter(|p| p.is_finite() && *p >= 0.0)
+            .with_context(|| format!("--period expects cycles >= 0, got {v:?}"))?,
+        None => d.diurnal_period,
+    };
+
+    let spec = args.opt("mix").unwrap_or("light");
+    let pool = resolve_pool(spec)?;
+    let weights: Vec<(&str, f64)> = pool.dnns.iter().map(|m| (m.name.as_str(), 1.0)).collect();
+
+    // Batch "everything at t=0" is not a serving workload: the fleet
+    // always streams, Poisson by default, bursty when configured.
+    let arrival = match cfg.scenario.arrival {
+        ArrivalKind::Bursty => ArrivalProcess::Bursty {
+            burst_size: cfg.scenario.burst_size as usize,
+            within_gap: cfg.scenario.burst_within,
+            between_gap: mean,
+        },
+        _ => ArrivalProcess::Poisson { mean_interarrival: mean },
+    };
+    // Period 0 = one diurnal day spanning the whole trace.
+    let diurnal = (amplitude > 0.0).then(|| Diurnal {
+        period: if period > 0.0 { period } else { requests as f64 * mean },
+        amplitude,
+        phase: 0.0,
+    });
+    let mut classes = FleetConfig::default_classes(mean);
+    if cfg.scenario.qos_slack > 0.0 {
+        classes[0].slack = Some(cfg.scenario.qos_slack);
+    }
+
+    let fleet_cfg = FleetConfig {
+        instances: FleetConfig::uniform(instances, &cfg.scheduler, policy),
+        placement,
+        random_k: d.random_k.max(1) as usize,
+        classes,
+        slots,
+        queue_cap,
+        mix: ModelMix::new(&weights),
+        arrival,
+        diurnal,
+        requests,
+        seed,
+        chunk: 8192,
+    };
+
+    let threads = match args.opt_u64("threads", 0)? {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        n => n as usize,
+    };
+    let r = run_fleet(&fleet_cfg, threads)?;
+
+    println!(
+        "fleet: {} x {} ({}), {} requests ({} batches) over {} cycles, {} threads",
+        instances,
+        policy.label(),
+        spec,
+        fmt_si(r.generated as f64),
+        r.batches,
+        fmt_si(r.makespan as f64),
+        threads,
+    );
+    println!(
+        "served {} / dropped {} | fleet util {:.1}% | {:.3} J total, {:.6} J/query",
+        r.completed,
+        r.dropped,
+        r.utilization * 100.0,
+        r.energy_j,
+        r.cost_j_per_query,
+    );
+    println!("{}", report::fleet_table(&r).render());
+    println!("{}", report::fleet_instance_table(&r).render());
+
+    if let Some(path) = args.opt("json") {
+        let json = report::fleet_json(&r).render();
+        std::fs::write(path, &json).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path} ({} bytes; same seed => identical bytes)", json.len());
     }
     Ok(())
 }

@@ -57,6 +57,7 @@ use crate::coordinator::scheduler::{
 use crate::mem::{ArbitrationMode, MemConfig};
 use crate::util::UnknownTag;
 use crate::energy::components::{EnergyModel, Precision};
+use crate::fleet::{FleetPolicy, Placement};
 use crate::sim::dataflow::ArrayGeometry;
 use crate::sim::dram::DramConfig;
 use crate::workloads::generator::ArrivalProcess;
@@ -151,12 +152,60 @@ impl ScenarioDefaults {
     }
 }
 
+/// `[fleet]` — cluster-tier defaults for `mtsa fleet` (CLI flags
+/// override these; see `docs/fleet.md`).  Per-instance geometry/buffers
+/// come from the same `[array]`/`[buffers]`/`[mem]` sections every
+/// instance of a homogeneous fleet shares; heterogeneous fleets are
+/// built through the library API.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetDefaults {
+    /// Accelerator instances in the fleet.
+    pub instances: u64,
+    /// Per-instance scheduling policy (`dynamic`, `sequential`,
+    /// `static`, `multi-array[:N]`).
+    pub policy: FleetPolicy,
+    /// Router placement (`least-loaded`, `affinity`, `random-k`).
+    pub placement: Placement,
+    /// Candidate count for `random-k`.
+    pub random_k: u64,
+    /// Concurrent tenant slots per instance.
+    pub slots: u64,
+    /// Admission queue depth per instance.
+    pub queue_cap: u64,
+    /// Requests per fleet run.
+    pub requests: u64,
+    pub seed: u64,
+    /// Diurnal "day" length in cycles; 0 = one day spanning the whole
+    /// trace (`requests × mean_interarrival`).
+    pub diurnal_period: f64,
+    /// Diurnal swing in `[0, 1)`; 0 disables the modulation.
+    pub diurnal_amplitude: f64,
+}
+
+impl Default for FleetDefaults {
+    fn default() -> Self {
+        FleetDefaults {
+            instances: 8,
+            policy: FleetPolicy::Dynamic,
+            placement: Placement::LeastLoaded,
+            random_k: 2,
+            slots: 8,
+            queue_cap: 64,
+            requests: 1_000_000,
+            seed: 42,
+            diurnal_period: 0.0,
+            diurnal_amplitude: 0.6,
+        }
+    }
+}
+
 /// Fully-resolved run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub scheduler: SchedulerConfig,
     pub precision: Precision,
     pub scenario: ScenarioDefaults,
+    pub fleet: FleetDefaults,
 }
 
 impl Default for RunConfig {
@@ -165,6 +214,7 @@ impl Default for RunConfig {
             scheduler: SchedulerConfig::default(),
             precision: Precision::Int8,
             scenario: ScenarioDefaults::default(),
+            fleet: FleetDefaults::default(),
         }
     }
 }
@@ -175,8 +225,10 @@ impl RunConfig {
         let doc = TomlDoc::parse(text).context("parsing config")?;
         let mut cfg = RunConfig::default();
 
-        let known =
-            ["array", "buffers", "scheduler", "partition", "dram", "mem", "energy", "scenario"];
+        let known = [
+            "array", "buffers", "scheduler", "partition", "dram", "mem", "energy", "scenario",
+            "fleet",
+        ];
         for s in doc.section_names() {
             if !known.contains(&s) {
                 bail!("unknown config section [{s}] (known: {known:?})");
@@ -333,6 +385,61 @@ impl RunConfig {
             sc.qos_slack = q;
         }
 
+        let fl = &mut cfg.fleet;
+        if let Some(n) = u64_of("fleet", "instances") {
+            if n == 0 {
+                bail!("fleet.instances must be >= 1");
+            }
+            fl.instances = n;
+        }
+        if let Some(p) = doc.get("fleet", "policy").and_then(|v| v.as_str()) {
+            fl.policy = p
+                .parse::<FleetPolicy>()
+                .map_err(|e| anyhow::anyhow!("in [fleet] policy: {e}"))?;
+        }
+        if let Some(p) = doc.get("fleet", "placement").and_then(|v| v.as_str()) {
+            fl.placement = p.parse::<Placement>().context("in [fleet] placement")?;
+        }
+        if let Some(k) = u64_of("fleet", "random_k") {
+            if k == 0 {
+                bail!("fleet.random_k must be >= 1");
+            }
+            fl.random_k = k;
+        }
+        if let Some(s) = u64_of("fleet", "slots") {
+            if s == 0 {
+                bail!("fleet.slots must be >= 1");
+            }
+            fl.slots = s;
+        }
+        if let Some(q) = u64_of("fleet", "queue_cap") {
+            if q == 0 {
+                bail!("fleet.queue_cap must be >= 1");
+            }
+            fl.queue_cap = q;
+        }
+        if let Some(r) = u64_of("fleet", "requests") {
+            if r == 0 {
+                bail!("fleet.requests must be >= 1");
+            }
+            fl.requests = r;
+        }
+        if let Some(s) = u64_of("fleet", "seed") {
+            fl.seed = s;
+        }
+        if let Some(p) = f64_of("fleet", "diurnal_period") {
+            if p < 0.0 {
+                bail!("fleet.diurnal_period must be >= 0 (0 = auto)");
+            }
+            fl.diurnal_period = p;
+        }
+        if let Some(a) = f64_of("fleet", "diurnal_amplitude") {
+            if !(0.0..1.0).contains(&a) {
+                bail!("fleet.diurnal_amplitude must be in [0, 1)");
+            }
+            fl.diurnal_amplitude = a;
+        }
+
         Ok(cfg)
     }
 
@@ -480,9 +587,52 @@ mod tests {
             "[scenario]\nburst_size = 0",
             "[scenario]\nrequests = 0",
             "[scenario]\nqos_slack = -1.0",
+            "[fleet]\ninstances = 0",
+            "[fleet]\npolicy = \"roundrobin\"",
+            "[fleet]\npolicy = \"multi-array:0\"",
+            "[fleet]\nplacement = \"psychic\"",
+            "[fleet]\nrandom_k = 0",
+            "[fleet]\nslots = 0",
+            "[fleet]\nqueue_cap = 0",
+            "[fleet]\nrequests = 0",
+            "[fleet]\ndiurnal_period = -1.0",
+            "[fleet]\ndiurnal_amplitude = 1.0",
         ] {
             assert!(RunConfig::from_toml(bad).is_err(), "should reject {bad:?}");
         }
+    }
+
+    #[test]
+    fn fleet_section_round_trip() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            [fleet]
+            instances = 16
+            policy = "multi-array:2"
+            placement = "affinity"
+            random_k = 3
+            slots = 6
+            queue_cap = 128
+            requests = 5000
+            seed = 9
+            diurnal_period = 1e9
+            diurnal_amplitude = 0.4
+            "#,
+        )
+        .unwrap();
+        let fl = &cfg.fleet;
+        assert_eq!(fl.instances, 16);
+        assert_eq!(fl.policy, FleetPolicy::MultiArray(2));
+        assert_eq!(fl.placement, Placement::Affinity);
+        assert_eq!(fl.random_k, 3);
+        assert_eq!(fl.slots, 6);
+        assert_eq!(fl.queue_cap, 128);
+        assert_eq!(fl.requests, 5000);
+        assert_eq!(fl.seed, 9);
+        assert_eq!(fl.diurnal_period, 1e9);
+        assert_eq!(fl.diurnal_amplitude, 0.4);
+        // Absent section keeps the serving-scale defaults.
+        assert_eq!(RunConfig::from_toml("").unwrap().fleet, FleetDefaults::default());
     }
 
     #[test]

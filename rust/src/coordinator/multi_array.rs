@@ -66,6 +66,9 @@ pub struct MultiArrayPolicy {
     fifo: Vec<Vec<DnnId>>,
     /// Accumulated assigned MACs per chip.
     load: Vec<u64>,
+    /// MACs each live DNN contributed to its chip's load (so a recycled
+    /// slot's contribution can be subtracted when it retires).
+    macs: BTreeMap<DnnId, u64>,
 }
 
 impl MultiArrayPolicy {
@@ -79,6 +82,7 @@ impl MultiArrayPolicy {
             assignment: BTreeMap::new(),
             fifo: vec![Vec::new(); bank.num_arrays],
             load: vec![0; bank.num_arrays],
+            macs: BTreeMap::new(),
         }
     }
 
@@ -106,9 +110,21 @@ impl Scheduler for MultiArrayPolicy {
             return;
         }
         let a = (0..self.num_arrays).min_by_key(|&i| (self.load[i], i)).expect(">=1 array");
-        self.load[a] += s.pool.dnns[dnn].total_macs();
+        let macs = s.pool.dnns[dnn].total_macs();
+        self.load[a] += macs;
         self.assignment.insert(dnn, a);
+        self.macs.insert(dnn, macs);
         self.fifo[a].push(dnn);
+    }
+
+    /// Slot recycling: forget the retired DNN so the id can be reassigned
+    /// fresh (otherwise `on_arrival`'s dedup would pin the recycled id to
+    /// the old chip and the stale MACs would skew least-loaded forever).
+    fn on_dnn_retired(&mut self, dnn: DnnId) {
+        if let Some(a) = self.assignment.remove(&dnn) {
+            self.load[a] -= self.macs.remove(&dnn).unwrap_or(0);
+            self.fifo[a].retain(|&d| d != dnn);
+        }
     }
 
     fn plan(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {

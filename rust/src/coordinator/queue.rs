@@ -5,7 +5,7 @@
 //! chain-topology networks of the zoo this reduces to "the next layer",
 //! but the tracker honors arbitrary forward edges.
 
-use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
+use crate::workloads::dnng::{Dnn, DnnId, LayerId, WorkloadPool};
 
 /// Execution state of one layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,13 +30,23 @@ pub struct ReadyLayer {
 /// edges) — `ready_at` is called at every scheduling point and a full
 /// layers×edges rescan dominated the scheduler's profile (see
 /// EXPERIMENTS.md §Perf).
+///
+/// The queue copies the two pool facts it consults per decision point
+/// (arrival cycles and per-layer `Opr` keys) instead of borrowing the
+/// pool, so the engine can own a *mutable* pool: the fleet tier admits
+/// new DNNs and recycles finished slots at runtime
+/// ([`TaskQueue::reset_slot`] / [`TaskQueue::push_slot`]) without a
+/// self-referential borrow.
 #[derive(Debug, Clone)]
-pub struct TaskQueue<'a> {
-    pool: &'a WorkloadPool,
+pub struct TaskQueue {
+    /// Per-DNN arrival cycle `A_t` (copied from the pool).
+    arrival: Vec<u64>,
+    /// Per-layer `Opr` sort keys (copied from the pool).
+    opr: Vec<Vec<u64>>,
     state: Vec<Vec<LayerState>>,
     /// Unsatisfied-predecessor counts.
     indeg: Vec<Vec<usize>>,
-    /// Successor adjacency (from the edge lists, built once).
+    /// Successor adjacency (from the edge lists, built once per slot).
     succs: Vec<Vec<Vec<LayerId>>>,
     /// Layers with indeg 0 that are still Waiting (arrival NOT yet
     /// checked — `ready_at` filters by the DNN arrival time).
@@ -44,28 +54,74 @@ pub struct TaskQueue<'a> {
     remaining: usize,
 }
 
-impl<'a> TaskQueue<'a> {
-    pub fn new(pool: &'a WorkloadPool) -> TaskQueue<'a> {
-        let state: Vec<Vec<LayerState>> =
-            pool.dnns.iter().map(|d| vec![LayerState::Waiting; d.layers.len()]).collect();
-        let mut indeg: Vec<Vec<usize>> =
-            pool.dnns.iter().map(|d| vec![0; d.layers.len()]).collect();
-        let mut succs: Vec<Vec<Vec<LayerId>>> =
-            pool.dnns.iter().map(|d| vec![Vec::new(); d.layers.len()]).collect();
-        let mut frontier = Vec::new();
-        for (di, dnn) in pool.dnns.iter().enumerate() {
-            for &(f, t) in &dnn.edges {
-                indeg[di][t] += 1;
-                succs[di][f].push(t);
-            }
-            for li in 0..dnn.layers.len() {
-                if indeg[di][li] == 0 {
-                    frontier.push((di, li));
-                }
+impl TaskQueue {
+    pub fn new(pool: &WorkloadPool) -> TaskQueue {
+        let mut q = TaskQueue {
+            arrival: Vec::new(),
+            opr: Vec::new(),
+            state: Vec::new(),
+            indeg: Vec::new(),
+            succs: Vec::new(),
+            frontier: Vec::new(),
+            remaining: 0,
+        };
+        for d in &pool.dnns {
+            q.push_slot(d);
+        }
+        q
+    }
+
+    /// Append a fresh DNN slot (the fleet tier's admission path when no
+    /// freed slot is available for reuse); returns its id.
+    pub fn push_slot(&mut self, d: &Dnn) -> DnnId {
+        let dnn = self.state.len();
+        self.arrival.push(d.arrival_cycles);
+        self.opr.push(d.layers.iter().map(|l| l.shape.opr()).collect());
+        self.state.push(vec![LayerState::Waiting; d.layers.len()]);
+        let (indeg, succs) = Self::dag_of(d);
+        for (li, &deg) in indeg.iter().enumerate() {
+            if deg == 0 {
+                self.frontier.push((dnn, li));
             }
         }
-        let remaining = pool.total_layers();
-        TaskQueue { pool, state, indeg, succs, frontier, remaining }
+        self.indeg.push(indeg);
+        self.succs.push(succs);
+        self.remaining += d.layers.len();
+        dnn
+    }
+
+    /// Reload a *fully completed* slot with a new DNN, reusing its id —
+    /// the fleet tier's slot recycling (peak state stays bounded by the
+    /// live-tenant cap, not the arrival count).  Panics if any layer of
+    /// the slot is still waiting or running.
+    pub fn reset_slot(&mut self, dnn: DnnId, d: &Dnn) {
+        assert!(
+            self.state[dnn].iter().all(|s| *s == LayerState::Done),
+            "recycling slot {dnn} with live layers"
+        );
+        self.frontier.retain(|&(di, _)| di != dnn);
+        self.arrival[dnn] = d.arrival_cycles;
+        self.opr[dnn] = d.layers.iter().map(|l| l.shape.opr()).collect();
+        self.state[dnn] = vec![LayerState::Waiting; d.layers.len()];
+        let (indeg, succs) = Self::dag_of(d);
+        for (li, &deg) in indeg.iter().enumerate() {
+            if deg == 0 {
+                self.frontier.push((dnn, li));
+            }
+        }
+        self.indeg[dnn] = indeg;
+        self.succs[dnn] = succs;
+        self.remaining += d.layers.len();
+    }
+
+    fn dag_of(d: &Dnn) -> (Vec<usize>, Vec<Vec<LayerId>>) {
+        let mut indeg = vec![0usize; d.layers.len()];
+        let mut succs = vec![Vec::new(); d.layers.len()];
+        for &(f, t) in &d.edges {
+            indeg[t] += 1;
+            succs[f].push(t);
+        }
+        (indeg, succs)
     }
 
     /// Layers runnable at time `now`, sorted by `Opr` descending (the
@@ -76,14 +132,9 @@ impl<'a> TaskQueue<'a> {
             .frontier
             .iter()
             .filter(|&&(di, li)| {
-                self.pool.dnns[di].arrival_cycles <= now
-                    && self.state[di][li] == LayerState::Waiting
+                self.arrival[di] <= now && self.state[di][li] == LayerState::Waiting
             })
-            .map(|&(di, li)| ReadyLayer {
-                dnn: di,
-                layer: li,
-                opr: self.pool.dnns[di].layers[li].shape.opr(),
-            })
+            .map(|&(di, li)| ReadyLayer { dnn: di, layer: li, opr: self.opr[di][li] })
             .collect();
         ready.sort_by(|a, b| b.opr.cmp(&a.opr).then(a.dnn.cmp(&b.dnn)).then(a.layer.cmp(&b.layer)));
         ready
@@ -91,15 +142,13 @@ impl<'a> TaskQueue<'a> {
 
     /// Earliest future arrival after `now`, if any (for event scheduling).
     pub fn next_arrival_after(&self, now: u64) -> Option<u64> {
-        self.pool
-            .dnns
+        self.arrival
             .iter()
             .enumerate()
-            .filter(|(di, d)| {
-                d.arrival_cycles > now
-                    && self.state[*di].iter().any(|s| *s == LayerState::Waiting)
+            .filter(|(di, &at)| {
+                at > now && self.state[*di].iter().any(|s| *s == LayerState::Waiting)
             })
-            .map(|(_, d)| d.arrival_cycles)
+            .map(|(_, &at)| at)
             .min()
     }
 
@@ -266,5 +315,64 @@ mod tests {
         q.mark_running(0, 2);
         q.mark_done(0, 2);
         assert_eq!(q.ready_at(0)[0].layer, 3);
+    }
+
+    #[test]
+    fn slot_recycling_round_trips() {
+        let p = pool();
+        let mut q = TaskQueue::new(&p);
+        // Retire dnn 0 entirely, then reload its slot with a fresh
+        // two-layer DNN arriving later.
+        q.mark_running(0, 0);
+        q.mark_done(0, 0);
+        q.mark_running(0, 1);
+        q.mark_done(0, 1);
+        assert!(q.dnn_done(0));
+        let fresh = Dnn::chain(
+            "fresh",
+            vec![
+                Layer::new("l0", LayerKind::Fc, LayerShape::fc(1, 64, 300)),
+                Layer::new("l1", LayerKind::Fc, LayerShape::fc(1, 64, 10)),
+            ],
+        )
+        .arriving_at(500);
+        q.reset_slot(0, &fresh);
+        assert!(!q.dnn_done(0));
+        assert_eq!(q.remaining(), 3, "1 (dnn b) + 2 reloaded");
+        assert!(q.ready_at(499).iter().all(|r| r.dnn != 0), "not arrived yet");
+        let r = q.ready_at(500);
+        assert_eq!((r[0].dnn, r[0].layer, r[0].opr), (0, 0, 64 * 300));
+        assert_eq!(q.next_arrival_after(10), Some(500));
+        // The reloaded chain runs to completion normally.
+        q.mark_running(0, 0);
+        q.mark_done(0, 0);
+        q.mark_running(0, 1);
+        q.mark_done(0, 1);
+        assert!(q.dnn_done(0));
+    }
+
+    #[test]
+    fn push_slot_appends_new_dnn() {
+        let p = pool();
+        let mut q = TaskQueue::new(&p);
+        let extra = Dnn::chain(
+            "extra",
+            vec![Layer::new("l0", LayerKind::Fc, LayerShape::fc(1, 64, 400))],
+        )
+        .arriving_at(20);
+        let id = q.push_slot(&extra);
+        assert_eq!(id, 2);
+        assert_eq!(q.remaining(), 4);
+        let r = q.ready_at(20);
+        assert_eq!((r[0].dnn, r[0].opr), (2, 64 * 400), "heaviest new layer sorts first");
+    }
+
+    #[test]
+    #[should_panic(expected = "recycling slot")]
+    fn recycling_live_slot_panics() {
+        let p = pool();
+        let mut q = TaskQueue::new(&p);
+        let d = p.dnns[0].clone();
+        q.reset_slot(0, &d);
     }
 }

@@ -56,7 +56,7 @@ use crate::workloads::generator::ArrivalProcess;
 /// slack at any cycle count, and every overflow path saturates (an
 /// absurd slack degrades to "never misses", not to a bogus early
 /// deadline).
-fn deadline_cycle(arrival: u64, isolated_cycles: u64, slack: f64) -> u64 {
+pub(crate) fn deadline_cycle(arrival: u64, isolated_cycles: u64, slack: f64) -> u64 {
     if isolated_cycles == 0 || slack <= 0.0 {
         return arrival;
     }

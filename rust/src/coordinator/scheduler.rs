@@ -403,6 +403,12 @@ impl Scheduler for DynamicScheduler {
         self.cfg.preempt == PreemptMode::Deadline
     }
 
+    /// Slot recycling: the id's miss verdict belongs to the retired
+    /// tenant, not whoever is admitted under the id next.
+    fn on_dnn_retired(&mut self, dnn: DnnId) {
+        self.missed.remove(&dnn);
+    }
+
     fn preempts(&self) -> bool {
         self.cfg.preempt != PreemptMode::Off
     }

@@ -1,0 +1,312 @@
+//! The fleet run loop: streaming generation → routing → parallel
+//! instance waves → merged report.
+//!
+//! Arrivals are generated in bounded chunks (peak memory is independent
+//! of the request count).  Each chunk is routed single-threaded (all
+//! randomness lives here), then every instance advances to the chunk's
+//! last arrival cycle on a deterministic worker pool — the same
+//! claim-by-atomic-index pattern as [`sweep::run_sweep`](crate::sweep::run_sweep).
+//! Because routing never reads simulated state, the per-instance
+//! admission sequences (and therefore every simulated byte) are
+//! identical at any worker-thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::rng::Rng;
+use crate::workloads::generator::ArrivalStream;
+use crate::workloads::models;
+
+use super::instance::Instance;
+use super::metrics::{ClassAccum, ClassReport, FleetReport};
+use super::router::{Assignment, Router};
+use super::{FleetConfig, SloClass, SloSpec};
+
+/// Roll a request's SLO class from the configured shares (one RNG draw
+/// per arrival, so the stream's draw order is fixed).
+fn pick_class(classes: &[SloSpec; 3], rng: &mut Rng) -> SloClass {
+    let total: f64 = classes.iter().map(|c| c.share).sum();
+    let mut roll = rng.gen_f64() * total;
+    for (i, c) in classes.iter().enumerate() {
+        roll -= c.share;
+        if roll < 0.0 {
+            return SloClass::ALL[i];
+        }
+    }
+    SloClass::Batch
+}
+
+/// Hand each routed batch to its instance (driver thread, in emission
+/// order — per-instance delivery stays time-monotone).
+fn deliver(instances: &[Mutex<Instance>], out: &mut Vec<Assignment>) {
+    for a in out.drain(..) {
+        instances[a.instance].lock().unwrap().deliver(a);
+    }
+}
+
+/// Advance every instance to `horizon` on up to `threads` workers.
+fn run_wave(instances: &[Mutex<Instance>], horizon: u64, threads: usize) {
+    let workers = threads.clamp(1, instances.len());
+    if workers == 1 {
+        for inst in instances {
+            inst.lock().unwrap().run_until(horizon);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= instances.len() {
+                    break;
+                }
+                instances[i].lock().unwrap().run_until(horizon);
+            });
+        }
+    });
+}
+
+/// Run a fleet to completion and report.  `threads` only sets the worker
+/// count for instance waves — the report is byte-identical for any value.
+pub fn run_fleet(cfg: &FleetConfig, threads: usize) -> Result<FleetReport> {
+    cfg.validate().map_err(|e| anyhow!("invalid fleet config: {e}"))?;
+
+    // Resolve the mix's model templates once.
+    let mut templates = Vec::with_capacity(cfg.mix.len());
+    for i in 0..cfg.mix.len() {
+        let name = cfg.mix.name(i);
+        let entry = models::by_name(name)
+            .ok_or_else(|| anyhow!("unknown model {name:?} in fleet mix"))?;
+        templates.push((entry.build)());
+    }
+
+    // Independent RNG streams forked from the fleet seed in a fixed
+    // order: arrival gaps, model/class picks, router candidate draws.
+    let mut master = Rng::new(cfg.seed);
+    let stream_rng = master.fork();
+    let mut pick_rng = master.fork();
+    let router_rng = master.fork();
+
+    let arrays = cfg.instances.iter().map(|ic| (ic.sched.geom, ic.sched.buffers)).collect();
+    let mut router = Router::new(
+        templates,
+        arrays,
+        cfg.placement,
+        cfg.random_k,
+        cfg.classes.clone(),
+        router_rng,
+    );
+    let instances: Vec<Mutex<Instance>> = cfg
+        .instances
+        .iter()
+        .map(|ic| Mutex::new(Instance::new(ic, cfg.slots, cfg.queue_cap)))
+        .collect();
+
+    let mut stream =
+        ArrivalStream::new(cfg.arrival.clone(), cfg.diurnal.clone(), stream_rng, cfg.requests);
+    let mut generated = [0u64; 3];
+    let mut out: Vec<Assignment> = Vec::new();
+    let chunk = cfg.chunk.max(1);
+    loop {
+        let mut last_t = 0u64;
+        let mut got = 0usize;
+        for t in stream.by_ref().take(chunk) {
+            let model = cfg.mix.sample_index(&mut pick_rng);
+            let class = pick_class(&cfg.classes, &mut pick_rng);
+            generated[class.index()] += 1;
+            router.offer(t, model, class, &mut out);
+            last_t = t;
+            got += 1;
+        }
+        if got == 0 {
+            break;
+        }
+        // Close every window expiring inside this chunk so the next
+        // chunk's emissions cannot land in an instance's past.
+        router.close_due(last_t, &mut out);
+        deliver(&instances, &mut out);
+        run_wave(&instances, last_t, threads);
+    }
+    router.finish(&mut out);
+    deliver(&instances, &mut out);
+    run_wave(&instances, u64::MAX, threads);
+
+    // Merge (in instance-index order — not that order matters: every
+    // accumulator is integer-only).
+    let insts: Vec<Instance> =
+        instances.into_iter().map(|m| m.into_inner().unwrap()).collect();
+    let mut class_accums: [ClassAccum; 3] = Default::default();
+    let mut makespan = 0u64;
+    let mut busy: u128 = 0;
+    let mut energy_j = 0.0;
+    let mut events = 0u64;
+    let mut inst_reports = Vec::with_capacity(insts.len());
+    for inst in &insts {
+        if !inst.drained() {
+            bail!("fleet instance {} finished with work in flight", inst.name);
+        }
+        for (acc, other) in class_accums.iter_mut().zip(&inst.accum) {
+            acc.merge(other);
+        }
+        makespan = makespan.max(inst.makespan());
+        busy += inst.busy_pe_cycles();
+        let r = inst.report();
+        energy_j += r.energy_j;
+        events += r.events;
+        inst_reports.push(r);
+    }
+    let total_pes: u128 = cfg
+        .instances
+        .iter()
+        .map(|ic| u128::from(ic.sched.geom.rows) * u128::from(ic.sched.geom.cols))
+        .sum();
+
+    let classes: Vec<ClassReport> = SloClass::ALL
+        .iter()
+        .zip(&cfg.classes)
+        .zip(&class_accums)
+        .map(|((&class, spec), acc)| {
+            let gen = generated[class.index()];
+            ClassReport {
+                class,
+                share: spec.share,
+                slack: spec.slack,
+                generated: gen,
+                completed: acc.completed,
+                dropped: acc.dropped,
+                slo_ok: acc.slo_ok,
+                attainment: if gen > 0 { acc.slo_ok as f64 / gen as f64 } else { 1.0 },
+                p50: acc.latency.percentile(0.50),
+                p95: acc.latency.percentile(0.95),
+                p99: acc.latency.percentile(0.99),
+                mean_queue_cycles: if acc.completed > 0 {
+                    acc.queue_cycles as f64 / acc.completed as f64
+                } else {
+                    0.0
+                },
+                mean_service_cycles: if acc.completed > 0 {
+                    acc.service_cycles as f64 / acc.completed as f64
+                } else {
+                    0.0
+                },
+            }
+        })
+        .collect();
+
+    let completed: u64 = classes.iter().map(|c| c.completed).sum();
+    let dropped: u64 = classes.iter().map(|c| c.dropped).sum();
+    let total_generated: u64 = generated.iter().sum();
+    let report = FleetReport {
+        classes,
+        instances: inst_reports,
+        generated: total_generated,
+        completed,
+        dropped,
+        batches: router.batches,
+        makespan,
+        utilization: if makespan > 0 && total_pes > 0 {
+            busy as f64 / (makespan as f64 * total_pes as f64)
+        } else {
+            0.0
+        },
+        energy_j,
+        cost_j_per_query: if completed > 0 { energy_j / completed as f64 } else { 0.0 },
+        events,
+        seed: cfg.seed,
+    };
+    if !report.conserved() {
+        bail!(
+            "fleet conservation violated: generated {} != completed {} + dropped {}",
+            report.generated,
+            report.completed,
+            report.dropped
+        );
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::SchedulerConfig;
+    use crate::fleet::{FleetPolicy, InstanceConfig, Placement};
+    use crate::workloads::generator::{ArrivalProcess, Diurnal, ModelMix};
+
+    fn small_cfg(requests: usize, seed: u64) -> FleetConfig {
+        let sched = SchedulerConfig::default();
+        FleetConfig {
+            instances: FleetConfig::uniform(4, &sched, FleetPolicy::Dynamic),
+            placement: Placement::LeastLoaded,
+            random_k: 2,
+            classes: FleetConfig::default_classes(30_000.0),
+            slots: 4,
+            queue_cap: 32,
+            mix: ModelMix::new(&[("NCF", 2.0), ("MelodyLSTM", 1.0)]),
+            arrival: ArrivalProcess::Poisson { mean_interarrival: 30_000.0 },
+            diurnal: Some(Diurnal { period: 2_000_000.0, amplitude: 0.5, phase: 0.0 }),
+            requests,
+            seed,
+            chunk: 64,
+        }
+    }
+
+    #[test]
+    fn fleet_conserves_and_reports() {
+        let r = run_fleet(&small_cfg(200, 42), 2).unwrap();
+        assert!(r.conserved());
+        assert_eq!(r.generated, 200);
+        assert!(r.completed > 0);
+        assert!(r.makespan > 0);
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+        assert!(r.energy_j > 0.0 && r.cost_j_per_query > 0.0);
+        assert_eq!(r.instances.len(), 4);
+        assert_eq!(r.classes.len(), 3);
+        // Batching actually coalesces: fewer batches than requests once
+        // the best-effort/batch classes see traffic.
+        assert!(r.batches < r.generated);
+    }
+
+    #[test]
+    fn chunk_size_does_not_change_results() {
+        let base = run_fleet(&small_cfg(150, 7), 1).unwrap();
+        for chunk in [1usize, 13, 1000] {
+            let mut cfg = small_cfg(150, 7);
+            cfg.chunk = chunk;
+            let r = run_fleet(&cfg, 3).unwrap();
+            assert_eq!(r.completed, base.completed, "chunk {chunk}");
+            assert_eq!(r.dropped, base.dropped, "chunk {chunk}");
+            assert_eq!(r.makespan, base.makespan, "chunk {chunk}");
+            assert_eq!(r.batches, base.batches, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn mixed_policies_run_side_by_side() {
+        let sched = SchedulerConfig::default();
+        let mut cfg = small_cfg(80, 3);
+        cfg.instances = vec![
+            InstanceConfig {
+                name: "dyn".into(),
+                sched: sched.clone(),
+                policy: FleetPolicy::Dynamic,
+            },
+            InstanceConfig {
+                name: "seq".into(),
+                sched: sched.clone(),
+                policy: FleetPolicy::Sequential,
+            },
+            InstanceConfig {
+                name: "stat".into(),
+                sched: sched.clone(),
+                policy: FleetPolicy::Static,
+            },
+            InstanceConfig { name: "chips".into(), sched, policy: FleetPolicy::MultiArray(4) },
+        ];
+        let r = run_fleet(&cfg, 4).unwrap();
+        assert!(r.conserved());
+        assert_eq!(r.instances[3].policy, "multi-array:4");
+    }
+}

@@ -1,0 +1,339 @@
+//! One accelerator of the fleet: an owned [`Engine`] + scheduler pair
+//! with an admission queue, tenant-slot management, and streaming
+//! accounting.
+//!
+//! The driver feeds each instance its (router-fixed) admission sequence
+//! and advances it wave-by-wave to a cycle horizon; between waves the
+//! router never consults instance state, so instances are free to run on
+//! any worker thread.  Slot recycling ([`Engine::release`]) keeps the
+//! engine's pool bounded by the live-tenant cap however many requests
+//! stream through.
+
+use std::collections::VecDeque;
+
+use crate::energy::components::{EnergyModel, Precision};
+use crate::energy::Estimator;
+use crate::sim_core::{Engine, Scheduler};
+use crate::workloads::dnng::{DnnId, WorkloadPool};
+
+use super::metrics::{ClassAccum, FleetObserver, InstanceReport};
+use super::router::{Assignment, BatchInfo};
+use super::InstanceConfig;
+
+/// A batch waiting to enter its instance.
+#[derive(Debug)]
+struct Queued {
+    t: u64,
+    dnn: crate::workloads::dnng::Dnn,
+    batch: BatchInfo,
+}
+
+/// One fleet member: engine + policy + queues + tallies.
+pub struct Instance {
+    pub name: String,
+    policy_label: String,
+    engine: Engine,
+    sched: Box<dyn Scheduler + Send>,
+    obs: FleetObserver,
+    /// Admissions delivered by the driver, time-ordered, not yet offered
+    /// to the engine.
+    incoming: VecDeque<Queued>,
+    /// Admitted-but-waiting batches (all tenant slots busy).
+    waiting: VecDeque<Queued>,
+    /// Live tenants: engine id → batch bookkeeping.
+    live: Vec<(DnnId, BatchInfo)>,
+    slots: usize,
+    queue_cap: usize,
+    pes: u64,
+    energy_model: EnergyModel,
+    /// Per-class tallies, merged fleet-wide at the end.
+    pub accum: [ClassAccum; 3],
+    pub admitted_batches: u64,
+    pub completed_batches: u64,
+    pub dropped_batches: u64,
+}
+
+impl Instance {
+    pub fn new(cfg: &InstanceConfig, slots: usize, queue_cap: usize) -> Instance {
+        let mut sched = cfg.policy.build(&cfg.sched);
+        // An empty pool is valid: every tenant arrives via admit().
+        let mut engine = Engine::new(&WorkloadPool::new(&cfg.name, vec![]), cfg.sched.geom);
+        engine.start(&mut *sched);
+        let precision = match cfg.sched.buffers.dtype_bytes {
+            1 => Precision::Int8,
+            2 => Precision::Fp16,
+            _ => Precision::Fp32,
+        };
+        let energy_model = EnergyModel::build(cfg.sched.geom, &cfg.sched.buffers, precision);
+        Instance {
+            name: cfg.name.clone(),
+            policy_label: cfg.policy.label(),
+            engine,
+            sched,
+            obs: FleetObserver::default(),
+            incoming: VecDeque::new(),
+            waiting: VecDeque::new(),
+            live: Vec::new(),
+            slots: slots.max(1),
+            queue_cap: queue_cap.max(1),
+            pes: cfg.sched.geom.rows * cfg.sched.geom.cols,
+            energy_model,
+            accum: Default::default(),
+            admitted_batches: 0,
+            completed_batches: 0,
+            dropped_batches: 0,
+        }
+    }
+
+    /// Accept one routed batch (driver thread, between waves).  Admission
+    /// times must arrive nondecreasing — the router guarantees it.
+    /// `incoming` is a staging area bounded by the driver's chunk size;
+    /// the admission-queue cap is enforced at *simulated* time (see
+    /// [`Instance::run_until`]) so drop behavior cannot depend on how
+    /// the stream is chunked.
+    pub fn deliver(&mut self, a: Assignment) {
+        debug_assert!(
+            self.incoming.back().map_or(true, |q| q.t <= a.t),
+            "router emissions must be time-monotone per instance"
+        );
+        self.incoming.push_back(Queued { t: a.t, dnn: a.dnn, batch: a.batch });
+    }
+
+    /// Queue overflow: every member of the batch is dropped with reason
+    /// `queue_full`, counted against its class's SLO attainment.
+    fn drop_batch(&mut self, q: Queued) {
+        self.accum[q.batch.class.index()].dropped += q.batch.members.len() as u64;
+        self.dropped_batches += 1;
+    }
+
+    /// Admit `q` into a free tenant slot at `t` (or the engine frontier,
+    /// whichever is later) and arm its tightest member deadline.
+    fn admit_now(&mut self, q: Queued) {
+        let t = q.t.max(self.engine.now());
+        let id = self.engine.admit(q.dnn, t);
+        if let Some(d) = q.batch.engine_deadline {
+            self.engine.push_deadline(id, d.max(t));
+        }
+        self.live.push((id, q.batch));
+        self.admitted_batches += 1;
+    }
+
+    /// Reap finished tenants: record their members' latencies, release
+    /// the engine slot, and backfill from the waiting queue.
+    fn reap(&mut self) {
+        let mut i = 0;
+        while i < self.live.len() {
+            if self.engine.dnn_done(self.live[i].0) {
+                let (id, batch) = self.live.swap_remove(i);
+                let (first, done) = self.obs.take_done(id);
+                self.finish_batch(batch, first, done);
+                self.engine.release(id, &mut *self.sched);
+            } else {
+                i += 1;
+            }
+        }
+        while self.live.len() < self.slots {
+            let Some(q) = self.waiting.pop_front() else { break };
+            self.admit_now(q);
+        }
+    }
+
+    fn finish_batch(&mut self, batch: BatchInfo, first: u64, done: u64) {
+        let acc = &mut self.accum[batch.class.index()];
+        for &(arrival, deadline) in &batch.members {
+            acc.completed += 1;
+            acc.latency.record(done.saturating_sub(arrival));
+            acc.queue_cycles += u128::from(first.saturating_sub(arrival));
+            acc.service_cycles += u128::from(done.saturating_sub(first));
+            if deadline.map_or(true, |d| done <= d) {
+                acc.slo_ok += 1;
+            }
+        }
+        self.completed_batches += 1;
+    }
+
+    /// Advance the instance to cycle `horizon`: interleave queued
+    /// admissions with engine steps in time order, reaping completed
+    /// tenants as slots free up.  `u64::MAX` drains everything.
+    pub fn run_until(&mut self, horizon: u64) {
+        loop {
+            // Admissions waiting on a free slot gate later arrivals too
+            // (FIFO admission): only pull from `incoming` when the slot
+            // queue is empty or capacity exists.
+            if self.live.len() < self.slots && self.waiting.is_empty() {
+                if let Some(q) = self.incoming.front() {
+                    let ta = q.t.max(self.engine.now());
+                    let admit_first = match self.engine.next_event_time() {
+                        Some(te) => ta <= te && ta <= horizon,
+                        None => ta <= horizon,
+                    };
+                    if admit_first {
+                        let q = self.incoming.pop_front().expect("peeked");
+                        self.admit_now(q);
+                        continue;
+                    }
+                }
+            } else if let Some(q) = self.incoming.front() {
+                // All slots busy (or FIFO blocked): stage arrivals that
+                // have "happened" by the engine frontier into the waiting
+                // queue so reap() can backfill them in order; arrivals
+                // beyond the cap are dropped at their own (simulated)
+                // arrival instant.
+                let staged = q.t <= self.engine.now().min(horizon);
+                if staged {
+                    let q = self.incoming.pop_front().expect("peeked");
+                    if self.waiting.len() >= self.queue_cap {
+                        self.drop_batch(q);
+                    } else {
+                        self.waiting.push_back(q);
+                    }
+                    continue;
+                }
+            }
+            match self.engine.next_event_time() {
+                Some(te) if te <= horizon => {
+                    self.engine.step(&mut *self.sched, &mut self.obs);
+                    self.reap();
+                }
+                _ => {
+                    // No engine work inside the horizon; a queued arrival
+                    // beyond the frontier may still be admissible.
+                    if self.live.len() < self.slots
+                        && self.waiting.is_empty()
+                        && self.incoming.front().map_or(false, |q| q.t <= horizon)
+                    {
+                        let q = self.incoming.pop_front().expect("peeked");
+                        self.admit_now(q);
+                        continue;
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Engine events processed (admissions + layers + preemptions) — the
+    /// bench throughput numerator.
+    pub fn events(&self) -> u64 {
+        self.admitted_batches + self.obs.layers_completed + self.obs.preemptions
+    }
+
+    pub fn makespan(&self) -> u64 {
+        self.obs.makespan
+    }
+
+    pub fn busy_pe_cycles(&self) -> u128 {
+        self.obs.busy_pe_cycles
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        self.obs.preemptions
+    }
+
+    /// Nothing queued, nothing live — the stream has fully drained.
+    pub fn drained(&self) -> bool {
+        self.incoming.is_empty() && self.waiting.is_empty() && self.live.is_empty()
+    }
+
+    /// Final per-instance report (energy priced over this instance's own
+    /// makespan via the shared estimator).
+    pub fn report(&self) -> InstanceReport {
+        let mut est = Estimator::new(self.energy_model.clone());
+        est.record("fleet", &self.obs.activity);
+        let energy = est.finish(self.obs.makespan);
+        let denom = self.obs.makespan as f64 * self.pes as f64;
+        InstanceReport {
+            name: self.name.clone(),
+            policy: self.policy_label.clone(),
+            admitted_batches: self.admitted_batches,
+            completed_batches: self.completed_batches,
+            dropped_batches: self.dropped_batches,
+            preemptions: self.obs.preemptions,
+            makespan: self.obs.makespan,
+            utilization: if denom > 0.0 { self.obs.busy_pe_cycles as f64 / denom } else { 0.0 },
+            energy_j: energy.total_j(),
+            events: self.events(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::SchedulerConfig;
+    use crate::fleet::{FleetPolicy, SloClass};
+    use crate::workloads::models;
+
+    fn assignment(t: u64, seq: u64) -> Assignment {
+        let mut dnn = (models::by_name("NCF").unwrap().build)();
+        dnn.name = format!("NCF#b{seq}");
+        Assignment {
+            instance: 0,
+            t,
+            dnn,
+            batch: BatchInfo {
+                class: SloClass::BestEffort,
+                model: 0,
+                members: vec![(t, None)],
+                engine_deadline: None,
+            },
+        }
+    }
+
+    fn instance(slots: usize, queue_cap: usize) -> Instance {
+        let cfg = InstanceConfig {
+            name: "acc0".to_string(),
+            sched: SchedulerConfig::default(),
+            policy: FleetPolicy::Dynamic,
+        };
+        Instance::new(&cfg, slots, queue_cap)
+    }
+
+    #[test]
+    fn streams_requests_through_bounded_slots() {
+        let mut inst = instance(2, 64);
+        for i in 0..6u64 {
+            inst.deliver(assignment(i * 1_000, i));
+        }
+        inst.run_until(u64::MAX);
+        assert!(inst.drained());
+        assert_eq!(inst.admitted_batches, 6);
+        assert_eq!(inst.completed_batches, 6);
+        assert_eq!(inst.accum[SloClass::BestEffort.index()].completed, 6);
+        assert_eq!(inst.dropped_batches, 0);
+        assert!(inst.makespan() > 0);
+        let r = inst.report();
+        assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+        assert!(r.energy_j > 0.0);
+    }
+
+    #[test]
+    fn horizon_waves_accumulate_like_one_big_run() {
+        let run = |horizons: &[u64]| {
+            let mut inst = instance(2, 64);
+            for i in 0..8u64 {
+                inst.deliver(assignment(i * 2_000, i));
+            }
+            for &h in horizons {
+                inst.run_until(h);
+            }
+            inst.run_until(u64::MAX);
+            (inst.completed_batches, inst.makespan(), inst.busy_pe_cycles())
+        };
+        assert_eq!(run(&[]), run(&[1_000, 5_000, 9_000, 100_000]));
+    }
+
+    #[test]
+    fn queue_overflow_drops_with_members_counted() {
+        let mut inst = instance(1, 2);
+        // Deliver far more than slots+queue can hold at one instant.
+        for i in 0..10u64 {
+            inst.deliver(assignment(i, i));
+        }
+        inst.run_until(u64::MAX);
+        assert!(inst.dropped_batches > 0);
+        let acc = &inst.accum[SloClass::BestEffort.index()];
+        assert_eq!(acc.completed + acc.dropped, 10);
+        assert!(inst.drained());
+    }
+}

@@ -1,0 +1,300 @@
+//! Fleet-side accounting: streaming latency histograms, per-class SLO
+//! tallies, per-instance observers, and the final [`FleetReport`].
+//!
+//! Everything here is O(1) per event and O(instances + buckets) in
+//! memory — nothing grows with the request count, which is what lets
+//! `mtsa fleet` stream millions of arrivals.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::DispatchRecord;
+use crate::sim::activity::Activity;
+use crate::sim::partitioned::Tile;
+use crate::sim_core::Observer;
+use crate::workloads::dnng::{DnnId, LayerId};
+
+use super::SloClass;
+
+/// Linear-then-geometric cycle histogram (4 fraction bits): exact below
+/// 32 cycles, ≤ ~6% relative bucket width above, 976 buckets covering
+/// all of `u64`.  Merging and recording are integer-only, so per-class
+/// percentiles are deterministic and order-independent.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CycleHistogram {
+    counts: Vec<u64>,
+    n: u64,
+}
+
+/// 32 exact buckets + 59 octaves × 16 sub-buckets.
+const LINEAR: usize = 32;
+const SUB: usize = 16;
+const NBUCKETS: usize = LINEAR + 59 * SUB;
+
+impl Default for CycleHistogram {
+    fn default() -> CycleHistogram {
+        CycleHistogram { counts: vec![0; NBUCKETS], n: 0 }
+    }
+}
+
+impl CycleHistogram {
+    fn bucket_of(v: u64) -> usize {
+        if v < LINEAR as u64 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros() as usize; // >= 5
+        let frac = ((v >> (msb - 4)) & 0xF) as usize;
+        LINEAR + (msb - 5) * SUB + frac
+    }
+
+    /// Smallest value landing in bucket `b` — the value percentiles
+    /// report (a conservative lower bound of the true order statistic).
+    fn lower_bound(b: usize) -> u64 {
+        if b < LINEAR {
+            return b as u64;
+        }
+        let msb = 5 + (b - LINEAR) / SUB;
+        let frac = ((b - LINEAR) % SUB) as u64;
+        (1u64 << msb) + (frac << (msb - 4))
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.n += 1;
+    }
+
+    pub fn merge(&mut self, other: &CycleHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// The `p`-quantile (`0 < p <= 1`) as the lower bound of the bucket
+    /// holding the rank-`ceil(p·n)` sample; 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.n == 0 {
+            return 0;
+        }
+        let rank = ((p * self.n as f64).ceil() as u64).clamp(1, self.n);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::lower_bound(b);
+            }
+        }
+        Self::lower_bound(NBUCKETS - 1)
+    }
+}
+
+/// Running per-class tallies, accumulated per instance then merged.
+#[derive(Debug, Clone, Default)]
+pub struct ClassAccum {
+    pub completed: u64,
+    pub dropped: u64,
+    /// Completed requests that met their deadline (deadline-free classes
+    /// count every completion).
+    pub slo_ok: u64,
+    pub latency: CycleHistogram,
+    /// Σ cycles between arrival and first dispatch of the batch.
+    pub queue_cycles: u128,
+    /// Σ cycles between first dispatch and completion.
+    pub service_cycles: u128,
+}
+
+impl ClassAccum {
+    pub fn merge(&mut self, other: &ClassAccum) {
+        self.completed += other.completed;
+        self.dropped += other.dropped;
+        self.slo_ok += other.slo_ok;
+        self.latency.merge(&other.latency);
+        self.queue_cycles += other.queue_cycles;
+        self.service_cycles += other.service_cycles;
+    }
+}
+
+/// Final per-class section of the fleet report.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub class: SloClass,
+    pub share: f64,
+    pub slack: Option<f64>,
+    pub generated: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub slo_ok: u64,
+    /// `slo_ok / generated` — drops count as misses, so attainment is
+    /// judged against offered load, not survivors.
+    pub attainment: f64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub mean_queue_cycles: f64,
+    pub mean_service_cycles: f64,
+}
+
+/// Final per-instance section of the fleet report.
+#[derive(Debug, Clone)]
+pub struct InstanceReport {
+    pub name: String,
+    pub policy: String,
+    pub admitted_batches: u64,
+    pub completed_batches: u64,
+    pub dropped_batches: u64,
+    pub preemptions: u64,
+    pub makespan: u64,
+    /// busy-PE-cycles / (makespan × PEs) of this instance.
+    pub utilization: f64,
+    pub energy_j: f64,
+    /// Engine events this instance processed (admissions + layer
+    /// completions + preemptions) — the bench throughput denominator.
+    pub events: u64,
+}
+
+/// Everything `mtsa fleet` reports (rendered by
+/// [`report::fleet_table`](crate::report::fleet_table) /
+/// [`report::fleet_json`](crate::report::fleet_json)).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub classes: Vec<ClassReport>,
+    pub instances: Vec<InstanceReport>,
+    pub generated: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Batches dispatched by the router (each occupies one tenant slot).
+    pub batches: u64,
+    /// Latest completion cycle across the fleet.
+    pub makespan: u64,
+    /// busy-PE-cycles / (makespan × total PEs).
+    pub utilization: f64,
+    pub energy_j: f64,
+    /// `energy_j / completed` — the cost-per-query figure.
+    pub cost_j_per_query: f64,
+    pub events: u64,
+    pub seed: u64,
+}
+
+impl FleetReport {
+    /// Conservation invariant: every generated request is accounted for
+    /// exactly once (completed or dropped-with-reason) in its class.
+    pub fn conserved(&self) -> bool {
+        self.generated == self.completed + self.dropped
+            && self
+                .classes
+                .iter()
+                .all(|c| c.generated == c.completed + c.dropped)
+    }
+}
+
+/// Streaming per-instance observer: first-dispatch/completion cycles per
+/// live DNN (bounded by the slot count — entries are removed on
+/// [`FleetObserver::take_done`]), plus order-independent integer totals.
+#[derive(Debug, Default)]
+pub struct FleetObserver {
+    first_dispatch: BTreeMap<DnnId, u64>,
+    done_at: BTreeMap<DnnId, u64>,
+    pub dispatches: u64,
+    pub layers_completed: u64,
+    pub preemptions: u64,
+    pub wasted_refill_cycles: u64,
+    pub busy_pe_cycles: u128,
+    pub activity: Activity,
+    pub makespan: u64,
+}
+
+impl FleetObserver {
+    /// Consume a finished DNN's `(first_dispatch, completion)` cycles,
+    /// clearing its entries so the recycled id starts clean.
+    pub fn take_done(&mut self, dnn: DnnId) -> (u64, u64) {
+        let done = self.done_at.remove(&dnn).unwrap_or(0);
+        let first = self.first_dispatch.remove(&dnn).unwrap_or(done);
+        (first, done)
+    }
+}
+
+impl Observer for FleetObserver {
+    fn on_dispatch(&mut self, t: u64, dnn: DnnId, _layer: LayerId, _tile: Tile) {
+        self.dispatches += 1;
+        self.first_dispatch.entry(dnn).or_insert(t);
+    }
+
+    fn on_layer_complete(&mut self, rec: &DispatchRecord) {
+        self.layers_completed += 1;
+        self.busy_pe_cycles +=
+            u128::from(rec.tile.pes()) * u128::from(rec.t_end - rec.t_start);
+        self.activity.add(&rec.activity);
+        let d = self.done_at.entry(rec.dnn).or_insert(0);
+        *d = (*d).max(rec.t_end);
+        self.makespan = self.makespan.max(rec.t_end);
+    }
+
+    fn on_preempt(&mut self, rec: &DispatchRecord, _replayed_folds: u64, wasted_cycles: u64) {
+        self.preemptions += 1;
+        self.wasted_refill_cycles += wasted_cycles;
+        self.busy_pe_cycles +=
+            u128::from(rec.tile.pes()) * u128::from(rec.t_end - rec.t_start);
+        self.activity.add(&rec.activity);
+        self.makespan = self.makespan.max(rec.t_end);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_exact_low_and_tight_high() {
+        // Exact below the linear cutoff.
+        for v in 0..32 {
+            assert_eq!(CycleHistogram::bucket_of(v), v as usize);
+            assert_eq!(CycleHistogram::lower_bound(v as usize), v);
+        }
+        // Boundary values land on buckets whose lower bound is themselves.
+        for v in [32u64, 33, 63, 64, 1 << 20, u64::MAX >> 1] {
+            let b = CycleHistogram::bucket_of(v);
+            let lo = CycleHistogram::lower_bound(b);
+            assert!(lo <= v, "lower bound {lo} above {v}");
+            // Bucket width is < 1/16 of the value's octave.
+            assert!((v - lo) as f64 <= v as f64 / 16.0 + 1.0, "{v} -> {lo}");
+        }
+        assert!(CycleHistogram::bucket_of(u64::MAX) < NBUCKETS);
+    }
+
+    #[test]
+    fn percentiles_track_known_distributions() {
+        let mut h = CycleHistogram::default();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile(0.50);
+        let p99 = h.percentile(0.99);
+        assert!((470..=500).contains(&p50), "p50 = {p50}");
+        assert!((930..=990).contains(&p99), "p99 = {p99}");
+        assert_eq!(h.percentile(1.0), h.percentile(0.9999));
+        assert_eq!(CycleHistogram::default().percentile(0.5), 0);
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_recording() {
+        let mut a = CycleHistogram::default();
+        let mut b = CycleHistogram::default();
+        let mut both = CycleHistogram::default();
+        for v in 0..500u64 {
+            let x = v * v % 7919;
+            if v % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            both.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a, both);
+        assert_eq!(a.percentile(0.95), both.percentile(0.95));
+    }
+}

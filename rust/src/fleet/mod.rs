@@ -1,0 +1,383 @@
+//! Fleet-scale serving tier: route millions of requests across many
+//! partitioned accelerators.
+//!
+//! One simulated accelerator (PRs 1–6) is a single [`Engine`] plus a
+//! partitioning [`Scheduler`].  This module lifts that to a *cluster*: a
+//! [`Router`](router::Router) with per-model batching queues fronts `N`
+//! independent [`Instance`](instance::Instance)s, each wrapping its own
+//! engine and any of the four shipped policies with its own geometry and
+//! `[mem]` config.  Requests carry an SLO class
+//! ([`SloClass`]) that maps onto the existing slack-relative deadlines
+//! (and, through them, the deadline-driven preemption trigger).
+//!
+//! # Determinism
+//!
+//! The driver ([`driver::run_fleet`]) is built so the report is
+//! byte-identical at any worker-thread count:
+//!
+//! * All randomness (arrival gaps, model picks, class rolls, random-k
+//!   candidate draws) happens in the single-threaded router/generator
+//!   front end, on [`Rng`](crate::util::rng::Rng) streams forked from the
+//!   one fleet seed in a fixed order.
+//! * Placement is *estimate-based*: the router tracks a per-instance
+//!   `busy_until` horizon priced from isolated layer timings, never from
+//!   simulated state.  Routing therefore depends only on the arrival
+//!   stream — so the per-instance request sequences are fixed before any
+//!   engine steps, and the instances can be simulated embarrassingly
+//!   parallel (the sweep thread-pool pattern) with no cross-thread
+//!   ordering to leak into the results.
+//! * Arrivals stream through in bounded chunks — peak memory is set by
+//!   the chunk size and the live-tenant caps, not the arrival count.
+//!
+//! [`Engine`]: crate::sim_core::Engine
+//! [`Scheduler`]: crate::sim_core::Scheduler
+
+pub mod driver;
+pub mod instance;
+pub mod metrics;
+pub mod router;
+
+pub use driver::run_fleet;
+pub use metrics::{ClassReport, CycleHistogram, FleetReport, InstanceReport};
+
+use crate::coordinator::baseline::SequentialBaseline;
+use crate::coordinator::multi_array::{MultiArrayBank, MultiArrayPolicy};
+use crate::coordinator::scheduler::SchedulerConfig;
+use crate::coordinator::static_part::StaticPartitioning;
+use crate::coordinator::DynamicScheduler;
+use crate::sim_core::Scheduler;
+use crate::util::UnknownTag;
+use crate::workloads::generator::{ArrivalProcess, Diurnal, ModelMix};
+
+/// Service-level objective class of a request — decides its deadline
+/// slack and how aggressively the router batches it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloClass {
+    /// Interactive serving: tight slack, no batching.
+    LatencyCritical,
+    /// Default tier: moderate slack, small batches.
+    BestEffort,
+    /// Offline/bulk: no deadline, large batches.
+    Batch,
+}
+
+impl SloClass {
+    pub const ALL: [SloClass; 3] =
+        [SloClass::LatencyCritical, SloClass::BestEffort, SloClass::Batch];
+    pub const TAGS: [&'static str; 3] = ["latency-critical", "best-effort", "batch"];
+
+    pub fn tag(&self) -> &'static str {
+        Self::TAGS[self.index()]
+    }
+
+    /// Position in [`SloClass::ALL`] — the per-class array index used
+    /// throughout the fleet accounting.
+    pub fn index(&self) -> usize {
+        match self {
+            SloClass::LatencyCritical => 0,
+            SloClass::BestEffort => 1,
+            SloClass::Batch => 2,
+        }
+    }
+}
+
+impl std::str::FromStr for SloClass {
+    type Err = UnknownTag;
+
+    fn from_str(s: &str) -> Result<SloClass, UnknownTag> {
+        SloClass::ALL.into_iter().find(|c| c.tag() == s).ok_or_else(|| UnknownTag {
+            what: "SLO class",
+            got: s.to_string(),
+            valid: &SloClass::TAGS,
+        })
+    }
+}
+
+/// Router placement policy: which instance a (batched) request lands on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Minimize the estimated completion horizon across all instances.
+    LeastLoaded,
+    /// Prefer an instance whose weights for this model are already warm
+    /// (last request it received was the same model), tolerating up to
+    /// one extra batch-service of queueing before falling back cold.
+    Affinity,
+    /// Power-of-k-choices: least-loaded among `k` random candidates.
+    RandomK,
+}
+
+impl Placement {
+    pub const ALL: [Placement; 3] =
+        [Placement::LeastLoaded, Placement::Affinity, Placement::RandomK];
+    pub const TAGS: [&'static str; 3] = ["least-loaded", "affinity", "random-k"];
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Placement::LeastLoaded => "least-loaded",
+            Placement::Affinity => "affinity",
+            Placement::RandomK => "random-k",
+        }
+    }
+}
+
+impl std::str::FromStr for Placement {
+    type Err = UnknownTag;
+
+    fn from_str(s: &str) -> Result<Placement, UnknownTag> {
+        Placement::ALL.into_iter().find(|p| p.tag() == s).ok_or_else(|| UnknownTag {
+            what: "placement policy",
+            got: s.to_string(),
+            valid: &Placement::TAGS,
+        })
+    }
+}
+
+/// Which single-accelerator scheduling policy an instance runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetPolicy {
+    /// The paper's dynamic partitioning (plus preemption if configured).
+    Dynamic,
+    /// Whole-array FIFO (the sequential baseline).
+    Sequential,
+    /// Fixed equal-width partitions.
+    Static,
+    /// `n` fixed chips at whole-DNN granularity.
+    MultiArray(usize),
+}
+
+impl FleetPolicy {
+    /// Display label (`multi-array` carries its chip count).
+    pub fn label(&self) -> String {
+        match self {
+            FleetPolicy::Dynamic => "dynamic".to_string(),
+            FleetPolicy::Sequential => "sequential".to_string(),
+            FleetPolicy::Static => "static".to_string(),
+            FleetPolicy::MultiArray(n) => format!("multi-array:{n}"),
+        }
+    }
+
+    /// Instantiate the per-instance scheduler this policy names.
+    pub fn build(&self, cfg: &SchedulerConfig) -> Box<dyn Scheduler + Send> {
+        match self {
+            FleetPolicy::Dynamic => Box::new(DynamicScheduler::new(cfg.clone())),
+            FleetPolicy::Sequential => Box::new(SequentialBaseline::new(cfg.clone())),
+            FleetPolicy::Static => Box::new(StaticPartitioning::new(cfg.clone())),
+            FleetPolicy::MultiArray(n) => {
+                Box::new(MultiArrayPolicy::new(&MultiArrayBank::split_of(cfg, *n)))
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for FleetPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<FleetPolicy, String> {
+        match s {
+            "dynamic" => return Ok(FleetPolicy::Dynamic),
+            "sequential" => return Ok(FleetPolicy::Sequential),
+            "static" => return Ok(FleetPolicy::Static),
+            "multi-array" => return Ok(FleetPolicy::MultiArray(4)),
+            _ => {}
+        }
+        if let Some(n) = s.strip_prefix("multi-array:") {
+            let n: usize = n
+                .parse()
+                .map_err(|_| format!("multi-array chip count must be a number, got {s:?}"))?;
+            if n == 0 {
+                return Err("multi-array chip count must be >= 1".to_string());
+            }
+            return Ok(FleetPolicy::MultiArray(n));
+        }
+        Err(format!(
+            "unknown fleet policy {s:?} (valid: dynamic|sequential|static|multi-array[:N])"
+        ))
+    }
+}
+
+/// Per-class serving policy: traffic share, deadline slack, and batching.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSpec {
+    /// Relative traffic share (normalized across the three classes).
+    pub share: f64,
+    /// Deadline = arrival + slack × isolated latency (single request on
+    /// the chosen instance); `None` = no deadline (bulk work).
+    pub slack: Option<f64>,
+    /// Requests coalesced into one tenant slot (1 = no batching).
+    pub max_batch: usize,
+    /// Cycles an open batch waits for co-batchable arrivals before it is
+    /// dispatched anyway.
+    pub window: u64,
+}
+
+impl SloSpec {
+    /// Validate one class spec (`tag` names it in errors).
+    pub fn validate(&self, tag: &str) -> Result<(), String> {
+        if !self.share.is_finite() || self.share < 0.0 {
+            return Err(format!("[{tag}] share must be a finite number >= 0"));
+        }
+        if let Some(s) = self.slack {
+            if !s.is_finite() || s <= 0.0 {
+                return Err(format!("[{tag}] slack must be > 0 when set"));
+            }
+        }
+        if self.max_batch == 0 {
+            return Err(format!("[{tag}] max_batch must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
+/// One accelerator of the fleet: its display name, its full
+/// single-accelerator config (geometry, buffers, `[mem]`, preemption…)
+/// and the policy run on it.  Instances may be heterogeneous.
+#[derive(Debug, Clone)]
+pub struct InstanceConfig {
+    pub name: String,
+    pub sched: SchedulerConfig,
+    pub policy: FleetPolicy,
+}
+
+/// The whole fleet-run description: instances, routing, traffic.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub instances: Vec<InstanceConfig>,
+    pub placement: Placement,
+    /// Candidate count for [`Placement::RandomK`] (clamped to the fleet).
+    pub random_k: usize,
+    /// Per-class policy, indexed by [`SloClass::index`].
+    pub classes: [SloSpec; 3],
+    /// Concurrent tenant slots per instance (live DNNs on one engine).
+    pub slots: usize,
+    /// Admission queue depth per instance; batches arriving beyond it are
+    /// dropped (every member counted, reason `queue_full`).
+    pub queue_cap: usize,
+    /// Model mix sampled per request.
+    pub mix: ModelMix,
+    /// Arrival process of the aggregate request stream.
+    pub arrival: ArrivalProcess,
+    /// Day-length rate modulation over the stream (`None` = flat).
+    pub diurnal: Option<Diurnal>,
+    /// Total requests to generate.
+    pub requests: usize,
+    pub seed: u64,
+    /// Arrivals generated per streaming chunk — bounds peak memory
+    /// independent of `requests`.
+    pub chunk: usize,
+}
+
+impl FleetConfig {
+    /// Default SLO classes scaled to a mean interarrival gap:
+    /// latency-critical (30%, tight slack, unbatched), best-effort (50%,
+    /// loose slack, small batches), batch (20%, no deadline, big batches).
+    pub fn default_classes(mean_interarrival: f64) -> [SloSpec; 3] {
+        let gap = mean_interarrival.max(1.0);
+        [
+            SloSpec { share: 0.3, slack: Some(4.0), max_batch: 1, window: 0 },
+            SloSpec { share: 0.5, slack: Some(12.0), max_batch: 4, window: (4.0 * gap) as u64 },
+            SloSpec { share: 0.2, slack: None, max_batch: 16, window: (16.0 * gap) as u64 },
+        ]
+    }
+
+    /// A homogeneous fleet of `n` instances running one policy.
+    pub fn uniform(n: usize, sched: &SchedulerConfig, policy: FleetPolicy) -> Vec<InstanceConfig> {
+        (0..n)
+            .map(|i| InstanceConfig {
+                name: format!("acc{i}"),
+                sched: sched.clone(),
+                policy,
+            })
+            .collect()
+    }
+
+    /// Reject configs the driver cannot run (empty fleet/mix, zero
+    /// capacity, degenerate class table).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.instances.is_empty() {
+            return Err("fleet needs at least one instance".to_string());
+        }
+        if self.mix.is_empty() {
+            return Err("fleet model mix is empty".to_string());
+        }
+        if self.requests == 0 {
+            return Err("fleet requests must be >= 1".to_string());
+        }
+        if self.slots == 0 || self.queue_cap == 0 {
+            return Err("fleet slots and queue_cap must be >= 1".to_string());
+        }
+        if self.chunk == 0 {
+            return Err("fleet chunk must be >= 1".to_string());
+        }
+        let mut total = 0.0;
+        for (c, spec) in SloClass::ALL.iter().zip(&self.classes) {
+            spec.validate(c.tag())?;
+            total += spec.share;
+        }
+        if total <= 0.0 {
+            return Err("SLO class shares must sum to > 0".to_string());
+        }
+        if self.placement == Placement::RandomK && self.random_k == 0 {
+            return Err("random-k placement needs k >= 1".to_string());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_round_trip() {
+        for c in SloClass::ALL {
+            assert_eq!(c.tag().parse::<SloClass>().unwrap(), c);
+        }
+        for p in Placement::ALL {
+            assert_eq!(p.tag().parse::<Placement>().unwrap(), p);
+        }
+        assert!("interactive".parse::<SloClass>().is_err());
+        assert!("round-robin".parse::<Placement>().is_err());
+    }
+
+    #[test]
+    fn fleet_policy_parses_chip_counts() {
+        assert_eq!("dynamic".parse::<FleetPolicy>().unwrap(), FleetPolicy::Dynamic);
+        assert_eq!("multi-array".parse::<FleetPolicy>().unwrap(), FleetPolicy::MultiArray(4));
+        assert_eq!("multi-array:2".parse::<FleetPolicy>().unwrap(), FleetPolicy::MultiArray(2));
+        assert!("multi-array:0".parse::<FleetPolicy>().is_err());
+        assert!("multi-array:x".parse::<FleetPolicy>().is_err());
+        assert!("roundrobin".parse::<FleetPolicy>().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        let sched = SchedulerConfig::default();
+        let mut cfg = FleetConfig {
+            instances: FleetConfig::uniform(2, &sched, FleetPolicy::Dynamic),
+            placement: Placement::LeastLoaded,
+            random_k: 2,
+            classes: FleetConfig::default_classes(50_000.0),
+            slots: 4,
+            queue_cap: 16,
+            mix: ModelMix::new(&[("NCF", 1.0)]),
+            arrival: ArrivalProcess::Poisson { mean_interarrival: 50_000.0 },
+            diurnal: None,
+            requests: 100,
+            seed: 1,
+            chunk: 64,
+        };
+        assert!(cfg.validate().is_ok());
+        cfg.requests = 0;
+        assert!(cfg.validate().is_err());
+        cfg.requests = 100;
+        cfg.instances.clear();
+        assert!(cfg.validate().is_err());
+        cfg.instances = FleetConfig::uniform(1, &sched, FleetPolicy::Dynamic);
+        cfg.classes[0].share = -1.0;
+        assert!(cfg.validate().is_err());
+        cfg.classes[0].share = 0.0;
+        cfg.classes[1].share = 0.0;
+        cfg.classes[2].share = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,416 @@
+//! The fleet front end: per-model batching queues and estimate-based
+//! placement.
+//!
+//! The router is strictly single-threaded and processes arrivals in time
+//! order; every decision (batch membership, close times, placement,
+//! random-k draws) is a pure function of the arrival stream and the
+//! router's own seeded RNG.  That is the determinism keystone — once the
+//! router has fixed each instance's admission sequence, the instances can
+//! be simulated on any number of worker threads without changing a byte
+//! of the report.
+//!
+//! This generalizes the least-loaded assignment the multi-array
+//! comparator performs *inside* one engine
+//! ([`MultiArrayPolicy::on_arrival`](crate::coordinator::multi_array::MultiArrayPolicy))
+//! to whole accelerators: instead of accumulated MACs per chip, the
+//! router scores instances by an estimated completion horizon
+//! (`busy_until`) priced from isolated layer timings on each instance's
+//! actual geometry — so heterogeneous fleets are scored fairly.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::scenario::deadline_cycle;
+use crate::sim::buffers::BufferConfig;
+use crate::sim::dataflow::{baseline_layer_timing, ArrayGeometry};
+use crate::util::rng::Rng;
+use crate::workloads::dnng::Dnn;
+
+use super::{Placement, SloClass, SloSpec};
+
+/// Per-member bookkeeping a batch carries to its instance: each member's
+/// arrival cycle and (optional) absolute deadline.
+#[derive(Debug, Clone)]
+pub struct BatchInfo {
+    pub class: SloClass,
+    pub model: usize,
+    /// `(arrival_cycle, deadline)` per member request.
+    pub members: Vec<(u64, Option<u64>)>,
+    /// Tightest member deadline — armed on the engine so the
+    /// deadline-driven preemption trigger sees the batch.
+    pub engine_deadline: Option<u64>,
+}
+
+/// A batch the router has dispatched: the batched DNN (member count
+/// folded into every layer's batch dimension), when it was emitted, and
+/// where it goes.
+#[derive(Debug, Clone)]
+pub struct Assignment {
+    pub instance: usize,
+    /// Emission cycle (close time) — admission time on the instance.
+    pub t: u64,
+    pub dnn: Dnn,
+    pub batch: BatchInfo,
+}
+
+/// An open (still collecting) batch of one `(model, class)` pair.
+#[derive(Debug)]
+struct OpenBatch {
+    close_at: u64,
+    /// Member arrival cycles.
+    members: Vec<u64>,
+}
+
+/// The fleet router: batching queues + placement state.
+pub struct Router {
+    templates: Vec<Dnn>,
+    /// Per-instance `(geometry, buffers)` used to price isolated runs.
+    arrays: Vec<(ArrayGeometry, BufferConfig)>,
+    placement: Placement,
+    random_k: usize,
+    classes: [SloSpec; 3],
+    rng: Rng,
+    /// Estimated completion horizon per instance.
+    busy_until: Vec<u64>,
+    /// Model whose weights are resident per instance (last placed).
+    warm: Vec<Option<usize>>,
+    /// Open batches keyed `(model, class index)`.
+    open: BTreeMap<(usize, usize), OpenBatch>,
+    /// Monotone batch sequence number (names stay unique under
+    /// slot recycling).
+    batch_seq: u64,
+    /// Isolated-cycles memo keyed `(model, batch_k, rows, cols)`.
+    iso_cache: BTreeMap<(usize, u64, u64, u64), u64>,
+    /// Batches dispatched so far.
+    pub batches: u64,
+}
+
+impl Router {
+    pub fn new(
+        templates: Vec<Dnn>,
+        arrays: Vec<(ArrayGeometry, BufferConfig)>,
+        placement: Placement,
+        random_k: usize,
+        classes: [SloSpec; 3],
+        rng: Rng,
+    ) -> Router {
+        assert!(!templates.is_empty() && !arrays.is_empty());
+        let n = arrays.len();
+        Router {
+            templates,
+            arrays,
+            placement,
+            random_k: random_k.clamp(1, n),
+            classes,
+            rng,
+            busy_until: vec![0; n],
+            warm: vec![None; n],
+            open: BTreeMap::new(),
+            batch_seq: 0,
+            iso_cache: BTreeMap::new(),
+            batches: 0,
+        }
+    }
+
+    /// Isolated cycles of model `model` at batch multiplier `k` on
+    /// instance `inst`'s geometry: Σ over layers of the baseline
+    /// (full-array) timing — the same price the scenario tier uses for
+    /// slack-relative deadlines.
+    fn isolated(&mut self, model: usize, k: u64, inst: usize) -> u64 {
+        let (geom, bufs) = self.arrays[inst];
+        let key = (model, k, geom.rows, geom.cols);
+        if let Some(&c) = self.iso_cache.get(&key) {
+            return c;
+        }
+        let mut cycles = 0u64;
+        for l in &self.templates[model].layers {
+            let mut shape = l.shape;
+            shape.n *= k;
+            cycles = cycles.saturating_add(baseline_layer_timing(geom, shape.gemm(), &bufs).cycles);
+        }
+        self.iso_cache.insert(key, cycles);
+        cycles
+    }
+
+    /// Estimated completion horizon if the batch were sent to `inst` now.
+    fn score(&mut self, t: u64, model: usize, k: u64, inst: usize) -> u64 {
+        let iso = self.isolated(model, k, inst);
+        self.busy_until[inst].max(t).saturating_add(iso)
+    }
+
+    /// Least-loaded over an explicit candidate list (ties by index).
+    fn least_loaded_of(&mut self, t: u64, model: usize, k: u64, cands: &[usize]) -> (u64, usize) {
+        let mut best: Option<(u64, usize)> = None;
+        for &i in cands {
+            let s = (self.score(t, model, k, i), i);
+            if best.map_or(true, |b| s < b) {
+                best = Some(s);
+            }
+        }
+        best.expect("non-empty candidate list")
+    }
+
+    fn place(&mut self, t: u64, model: usize, k: u64) -> usize {
+        let n = self.arrays.len();
+        let all: Vec<usize> = (0..n).collect();
+        match self.placement {
+            Placement::LeastLoaded => self.least_loaded_of(t, model, k, &all).1,
+            Placement::RandomK => {
+                let mut cands: Vec<usize> = Vec::with_capacity(self.random_k);
+                while cands.len() < self.random_k {
+                    let c = self.rng.gen_range(n as u64) as usize;
+                    if !cands.contains(&c) {
+                        cands.push(c);
+                    }
+                }
+                self.least_loaded_of(t, model, k, &cands).1
+            }
+            Placement::Affinity => {
+                let warm: Vec<usize> =
+                    (0..n).filter(|&i| self.warm[i] == Some(model)).collect();
+                let (cold_score, cold) = self.least_loaded_of(t, model, k, &all);
+                if warm.is_empty() {
+                    return cold;
+                }
+                let (warm_score, warm_best) = self.least_loaded_of(t, model, k, &warm);
+                // A warm hit skips the weight reload; tolerate queueing
+                // behind the warm instance up to one batch-service time.
+                let tolerance = self.isolated(model, k, warm_best);
+                if warm_score <= cold_score.saturating_add(tolerance) {
+                    warm_best
+                } else {
+                    cold
+                }
+            }
+        }
+    }
+
+    /// Close and dispatch one batch at cycle `t`.
+    fn dispatch(
+        &mut self,
+        model: usize,
+        class: SloClass,
+        t: u64,
+        arrivals: Vec<u64>,
+        out: &mut Vec<Assignment>,
+    ) {
+        let k = arrivals.len() as u64;
+        let inst = self.place(t, model, k);
+        // Batched requests share one tenant slot: one DNN with every
+        // layer's batch dimension scaled by the member count (the DAG
+        // edges are untouched — only the feed streams widen).
+        let mut dnn = self.templates[model].clone();
+        if k > 1 {
+            for l in &mut dnn.layers {
+                l.shape.n *= k;
+            }
+        }
+        dnn.name = format!("{}#b{}", dnn.name, self.batch_seq);
+        self.batch_seq += 1;
+        // Per-member deadline: the scenario tier's slack-relative rule,
+        // priced at single-request isolation on the *chosen* instance.
+        let spec = &self.classes[class.index()];
+        let slack = spec.slack;
+        let iso1 = self.isolated(model, 1, inst);
+        let members: Vec<(u64, Option<u64>)> = arrivals
+            .into_iter()
+            .map(|a| (a, slack.map(|s| deadline_cycle(a, iso1, s))))
+            .collect();
+        let engine_deadline = members.iter().filter_map(|&(_, d)| d).min();
+        let iso_k = self.isolated(model, k, inst);
+        self.busy_until[inst] = self.busy_until[inst].max(t).saturating_add(iso_k);
+        self.warm[inst] = Some(model);
+        self.batches += 1;
+        out.push(Assignment {
+            instance: inst,
+            t,
+            dnn,
+            batch: BatchInfo { class, model, members, engine_deadline },
+        });
+    }
+
+    /// Close every open batch whose window expired by cycle `t`, in
+    /// close-time order (ties by `(model, class)`), so emissions stay
+    /// time-monotone per instance regardless of map iteration order.
+    pub fn close_due(&mut self, t: u64, out: &mut Vec<Assignment>) {
+        let mut due: Vec<(u64, usize, usize)> = self
+            .open
+            .iter()
+            .filter(|(_, b)| b.close_at <= t)
+            .map(|(&(m, c), b)| (b.close_at, m, c))
+            .collect();
+        due.sort_unstable();
+        for (close_at, m, c) in due {
+            let b = self.open.remove(&(m, c)).expect("due batch present");
+            self.dispatch(m, SloClass::ALL[c], close_at, b.members, out);
+        }
+    }
+
+    /// Offer one arrival to the router.  Expired windows close first (so
+    /// emission times never run backwards), then the request joins or
+    /// opens its `(model, class)` batch — full batches dispatch
+    /// immediately, unbatched classes pass straight through.
+    pub fn offer(&mut self, t: u64, model: usize, class: SloClass, out: &mut Vec<Assignment>) {
+        self.close_due(t, out);
+        let spec = &self.classes[class.index()];
+        if spec.max_batch <= 1 {
+            self.dispatch(model, class, t, vec![t], out);
+            return;
+        }
+        let (max_batch, window) = (spec.max_batch, spec.window);
+        let key = (model, class.index());
+        let full = {
+            let b = self
+                .open
+                .entry(key)
+                .or_insert_with(|| OpenBatch {
+                    close_at: t.saturating_add(window),
+                    members: Vec::new(),
+                });
+            b.members.push(t);
+            b.members.len() >= max_batch
+        };
+        if full {
+            let b = self.open.remove(&key).expect("full batch present");
+            self.dispatch(model, class, t, b.members, out);
+        }
+    }
+
+    /// Flush every still-open batch after the stream ends (each at its
+    /// scheduled close time, which is past the final arrival).
+    pub fn finish(&mut self, out: &mut Vec<Assignment>) {
+        self.close_due(u64::MAX, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::models;
+
+    fn templates() -> Vec<Dnn> {
+        vec![
+            (models::by_name("NCF").unwrap().build)(),
+            (models::by_name("MelodyLSTM").unwrap().build)(),
+        ]
+    }
+
+    fn classes() -> [SloSpec; 3] {
+        [
+            SloSpec { share: 0.3, slack: Some(4.0), max_batch: 1, window: 0 },
+            SloSpec { share: 0.5, slack: Some(12.0), max_batch: 3, window: 10_000 },
+            SloSpec { share: 0.2, slack: None, max_batch: 4, window: 50_000 },
+        ]
+    }
+
+    fn router(placement: Placement) -> Router {
+        let geom = ArrayGeometry::new(128, 128);
+        let arrays = vec![(geom, BufferConfig::default()); 4];
+        Router::new(templates(), arrays, placement, 2, classes(), Rng::new(7))
+    }
+
+    #[test]
+    fn unbatched_class_passes_straight_through_least_loaded() {
+        let mut r = router(Placement::LeastLoaded);
+        let mut out = Vec::new();
+        for t in [0u64, 10, 20, 30] {
+            r.offer(t, 0, SloClass::LatencyCritical, &mut out);
+        }
+        assert_eq!(out.len(), 4);
+        // Equal instances, near-simultaneous equal requests: round-robin
+        // by index because each placement bumps the chosen horizon.
+        let insts: Vec<usize> = out.iter().map(|a| a.instance).collect();
+        assert_eq!(insts, vec![0, 1, 2, 3]);
+        for a in &out {
+            assert_eq!(a.batch.members.len(), 1);
+            assert!(a.batch.engine_deadline.is_some());
+            assert_eq!(a.dnn.layers[0].shape.n, r.templates[0].layers[0].shape.n);
+        }
+    }
+
+    #[test]
+    fn full_batch_dispatches_immediately_and_scales_feed_rows() {
+        let mut r = router(Placement::LeastLoaded);
+        let mut out = Vec::new();
+        r.offer(0, 1, SloClass::BestEffort, &mut out);
+        r.offer(5, 1, SloClass::BestEffort, &mut out);
+        assert!(out.is_empty(), "window still open");
+        r.offer(9, 1, SloClass::BestEffort, &mut out);
+        assert_eq!(out.len(), 1, "max_batch=3 reached");
+        let a = &out[0];
+        assert_eq!(a.t, 9);
+        assert_eq!(a.batch.members.len(), 3);
+        assert_eq!(a.dnn.layers[0].shape.n, 3 * r.templates[1].layers[0].shape.n);
+        // Tightest member deadline is the earliest arrival's.
+        let d0 = a.batch.members[0].1.unwrap();
+        assert_eq!(a.batch.engine_deadline, Some(d0));
+        assert!(a.dnn.name.starts_with("MelodyLSTM#b"));
+    }
+
+    #[test]
+    fn window_expiry_closes_partial_batches_in_time_order() {
+        let mut r = router(Placement::LeastLoaded);
+        let mut out = Vec::new();
+        r.offer(0, 0, SloClass::Batch, &mut out); // closes at 50_000
+        r.offer(100, 1, SloClass::BestEffort, &mut out); // closes at 10_100
+        assert!(out.is_empty());
+        // An arrival far in the future flushes both, earliest close first.
+        r.offer(60_000, 0, SloClass::LatencyCritical, &mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].t, 10_100);
+        assert_eq!(out[1].t, 50_000);
+        assert_eq!(out[2].t, 60_000);
+        let mut last_per_inst: std::collections::BTreeMap<usize, u64> = Default::default();
+        for a in &out {
+            let e = last_per_inst.entry(a.instance).or_insert(0);
+            assert!(a.t >= *e, "per-instance admission times must be monotone");
+            *e = a.t;
+        }
+        // Batch class carries no deadline.
+        assert_eq!(out[1].batch.engine_deadline, None);
+    }
+
+    #[test]
+    fn finish_flushes_every_open_batch() {
+        let mut r = router(Placement::Affinity);
+        let mut out = Vec::new();
+        r.offer(0, 0, SloClass::Batch, &mut out);
+        r.offer(1, 1, SloClass::BestEffort, &mut out);
+        assert!(out.is_empty());
+        r.finish(&mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(r.batches, 2);
+    }
+
+    #[test]
+    fn random_k_is_deterministic_per_seed() {
+        let run = |seed| {
+            let geom = ArrayGeometry::new(128, 128);
+            let arrays = vec![(geom, BufferConfig::default()); 8];
+            let mut r =
+                Router::new(templates(), arrays, Placement::RandomK, 3, classes(), Rng::new(seed));
+            let mut out = Vec::new();
+            for t in 0..20u64 {
+                r.offer(t * 1000, (t % 2) as usize, SloClass::LatencyCritical, &mut out);
+            }
+            out.iter().map(|a| a.instance).collect::<Vec<_>>()
+        };
+        assert_eq!(run(11), run(11), "same seed, same placements");
+        assert_ne!(run(11), run(12), "different seed explores differently");
+    }
+
+    #[test]
+    fn affinity_prefers_warm_instance_within_tolerance() {
+        let mut r = router(Placement::Affinity);
+        let mut out = Vec::new();
+        // First request warms some instance for model 0.
+        r.offer(0, 0, SloClass::LatencyCritical, &mut out);
+        let first = out[0].instance;
+        // A prompt same-model follow-up sticks to the warm instance even
+        // though idle cold instances exist.
+        r.offer(10, 0, SloClass::LatencyCritical, &mut out);
+        assert_eq!(out[1].instance, first, "warm reuse within tolerance");
+        // A different model goes elsewhere (cold least-loaded).
+        r.offer(20, 1, SloClass::LatencyCritical, &mut out);
+        assert_ne!(out[2].instance, first);
+    }
+}

@@ -37,6 +37,8 @@ pub mod sim_core;
 
 pub mod coordinator;
 
+pub mod fleet;
+
 pub mod report;
 
 pub mod sweep;

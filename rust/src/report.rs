@@ -13,8 +13,9 @@ use crate::coordinator::scheduler::{
 };
 use crate::coordinator::RunMetrics;
 use crate::energy::{EnergyBreakdown, EnergyModel, Estimator};
+use crate::fleet::FleetReport;
 use crate::mem::MemStats;
-use crate::sweep::{SweepGrid, SweepRow};
+use crate::sweep::{FleetAxisRow, SweepGrid, SweepRow};
 use crate::util::json::Json;
 use crate::util::tablefmt::Table;
 use crate::workloads::dnng::WorkloadPool;
@@ -410,6 +411,142 @@ pub fn sweep_json(grid: &SweepGrid, rows: &[SweepRow]) -> Json {
     Json::Obj(top)
 }
 
+/// Render the per-class SLO table of a fleet run (`mtsa fleet`).
+pub fn fleet_table(r: &FleetReport) -> Table {
+    let mut t = Table::new(&[
+        "class", "share", "gen", "done", "drop", "slo%", "p50", "p95", "p99", "queue", "service",
+    ]);
+    for c in &r.classes {
+        t.row(&[
+            c.class.tag().to_string(),
+            format!("{:.2}", c.share),
+            c.generated.to_string(),
+            c.completed.to_string(),
+            c.dropped.to_string(),
+            format!("{:.1}%", c.attainment * 100.0),
+            c.p50.to_string(),
+            c.p95.to_string(),
+            c.p99.to_string(),
+            format!("{:.0}", c.mean_queue_cycles),
+            format!("{:.0}", c.mean_service_cycles),
+        ]);
+    }
+    t
+}
+
+/// Render the per-instance table of a fleet run.
+pub fn fleet_instance_table(r: &FleetReport) -> Table {
+    let mut t = Table::new(&[
+        "instance", "policy", "admitted", "done", "dropped", "preempt", "util", "energy_j",
+    ]);
+    for i in &r.instances {
+        t.row(&[
+            i.name.clone(),
+            i.policy.clone(),
+            i.admitted_batches.to_string(),
+            i.completed_batches.to_string(),
+            i.dropped_batches.to_string(),
+            i.preemptions.to_string(),
+            format!("{:.1}%", i.utilization * 100.0),
+            format!("{:.3}", i.energy_j),
+        ]);
+    }
+    t
+}
+
+/// One fleet run as a JSON object (shared by `mtsa fleet --json` and the
+/// sweep's fleet axis).  Deterministic: BTreeMap key order, seeds as
+/// strings, and the `slack` key strictly opt-in per class.
+pub fn fleet_point_json(r: &FleetReport) -> Json {
+    let mut classes = Vec::with_capacity(r.classes.len());
+    for c in &r.classes {
+        let mut o = BTreeMap::new();
+        o.insert("class".to_string(), Json::Str(c.class.tag().to_string()));
+        o.insert("share".to_string(), Json::Num(c.share));
+        // Deadline-free classes emit no slack key at all.
+        if let Some(s) = c.slack {
+            o.insert("slack".to_string(), Json::Num(s));
+        }
+        o.insert("generated".to_string(), Json::Num(c.generated as f64));
+        o.insert("completed".to_string(), Json::Num(c.completed as f64));
+        o.insert("dropped".to_string(), Json::Num(c.dropped as f64));
+        o.insert("slo_ok".to_string(), Json::Num(c.slo_ok as f64));
+        o.insert("attainment".to_string(), Json::Num(c.attainment));
+        o.insert("p50_cycles".to_string(), Json::Num(c.p50 as f64));
+        o.insert("p95_cycles".to_string(), Json::Num(c.p95 as f64));
+        o.insert("p99_cycles".to_string(), Json::Num(c.p99 as f64));
+        o.insert("mean_queue_cycles".to_string(), Json::Num(c.mean_queue_cycles));
+        o.insert("mean_service_cycles".to_string(), Json::Num(c.mean_service_cycles));
+        classes.push(Json::Obj(o));
+    }
+    let mut instances = Vec::with_capacity(r.instances.len());
+    for i in &r.instances {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(i.name.clone()));
+        o.insert("policy".to_string(), Json::Str(i.policy.clone()));
+        o.insert("admitted_batches".to_string(), Json::Num(i.admitted_batches as f64));
+        o.insert("completed_batches".to_string(), Json::Num(i.completed_batches as f64));
+        o.insert("dropped_batches".to_string(), Json::Num(i.dropped_batches as f64));
+        o.insert("preemptions".to_string(), Json::Num(i.preemptions as f64));
+        o.insert("makespan".to_string(), Json::Num(i.makespan as f64));
+        o.insert("utilization".to_string(), Json::Num(i.utilization));
+        o.insert("energy_j".to_string(), Json::Num(i.energy_j));
+        o.insert("events".to_string(), Json::Num(i.events as f64));
+        instances.push(Json::Obj(o));
+    }
+    let mut o = BTreeMap::new();
+    o.insert("schema".to_string(), Json::Num(1.0));
+    o.insert("seed".to_string(), Json::Str(r.seed.to_string()));
+    o.insert("generated".to_string(), Json::Num(r.generated as f64));
+    o.insert("completed".to_string(), Json::Num(r.completed as f64));
+    o.insert("dropped".to_string(), Json::Num(r.dropped as f64));
+    o.insert("batches".to_string(), Json::Num(r.batches as f64));
+    o.insert("makespan".to_string(), Json::Num(r.makespan as f64));
+    o.insert("utilization".to_string(), Json::Num(r.utilization));
+    o.insert("energy_j".to_string(), Json::Num(r.energy_j));
+    o.insert("cost_j_per_query".to_string(), Json::Num(r.cost_j_per_query));
+    o.insert("events".to_string(), Json::Num(r.events as f64));
+    o.insert("classes".to_string(), Json::Arr(classes));
+    o.insert("instances".to_string(), Json::Arr(instances));
+    Json::Obj(o)
+}
+
+/// Top-level JSON of `mtsa fleet --json` (one fleet run).
+pub fn fleet_json(r: &FleetReport) -> Json {
+    fleet_point_json(r)
+}
+
+/// Sweep JSON with the fleet axis attached (see
+/// [`sweep::run_fleet_axis`](crate::sweep::run_fleet_axis)).  With an
+/// empty axis this renders byte-identically to [`sweep_json`], so
+/// existing goldens are untouched.
+pub fn sweep_json_with_fleet(
+    grid: &SweepGrid,
+    rows: &[SweepRow],
+    fleet_rows: &[FleetAxisRow],
+) -> Json {
+    let mut json = sweep_json(grid, rows);
+    if fleet_rows.is_empty() {
+        return json;
+    }
+    let points: Vec<Json> = fleet_rows
+        .iter()
+        .map(|fr| {
+            let mut o = BTreeMap::new();
+            o.insert("instances".to_string(), Json::Num(fr.instances as f64));
+            o.insert("mix".to_string(), Json::Str(fr.mix.clone()));
+            o.insert("mean_interarrival".to_string(), Json::Num(fr.mean_interarrival));
+            o.insert("scenario_seed".to_string(), Json::Str(fr.scenario_seed.to_string()));
+            o.insert("result".to_string(), fleet_point_json(&fr.report));
+            Json::Obj(o)
+        })
+        .collect();
+    if let Json::Obj(top) = &mut json {
+        top.insert("fleet".to_string(), Json::Arr(points));
+    }
+    json
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -493,5 +630,60 @@ mod tests {
         let h = headline(&g, &model);
         assert!(h.makespan_saving_pct >= 0.0);
         assert!(h.dyn_utilization >= h.seq_utilization);
+    }
+
+    fn tiny_fleet_report() -> FleetReport {
+        use crate::coordinator::scheduler::SchedulerConfig;
+        use crate::fleet::{run_fleet, FleetConfig, FleetPolicy, Placement};
+        use crate::workloads::generator::{ArrivalProcess, ModelMix};
+        let sched = SchedulerConfig::default();
+        let cfg = FleetConfig {
+            instances: FleetConfig::uniform(2, &sched, FleetPolicy::Dynamic),
+            placement: Placement::LeastLoaded,
+            random_k: 2,
+            classes: FleetConfig::default_classes(40_000.0),
+            slots: 4,
+            queue_cap: 16,
+            mix: ModelMix::new(&[("NCF", 1.0)]),
+            arrival: ArrivalProcess::Poisson { mean_interarrival: 40_000.0 },
+            diurnal: None,
+            requests: 40,
+            seed: 11,
+            chunk: 64,
+        };
+        run_fleet(&cfg, 2).unwrap()
+    }
+
+    #[test]
+    fn fleet_tables_render_every_class_and_instance() {
+        let r = tiny_fleet_report();
+        let text = fleet_table(&r).render();
+        for tag in ["latency-critical", "best-effort", "batch"] {
+            assert!(text.contains(tag), "{text}");
+        }
+        let itext = fleet_instance_table(&r).render();
+        assert!(itext.contains("acc0") && itext.contains("acc1"), "{itext}");
+        assert!(itext.contains("dynamic"), "{itext}");
+    }
+
+    #[test]
+    fn fleet_json_shape_and_slack_opt_in() {
+        let r = tiny_fleet_report();
+        let rendered = fleet_json(&r).render();
+        assert!(rendered.contains("\"schema\":1"), "{rendered}");
+        assert!(rendered.contains("\"seed\":\"11\""), "{rendered}");
+        assert!(rendered.contains("\"cost_j_per_query\""), "{rendered}");
+        // The batch class has no deadline, so exactly two classes carry
+        // a slack key (latency-critical + best-effort).
+        assert_eq!(rendered.matches("\"slack\"").count(), 2, "{rendered}");
+        assert_eq!(rendered.matches("\"class\"").count(), 3, "{rendered}");
+    }
+
+    #[test]
+    fn sweep_json_with_empty_fleet_axis_is_byte_identical() {
+        let grid = SweepGrid::default();
+        let a = sweep_json(&grid, &[]).render();
+        let b = sweep_json_with_fleet(&grid, &[], &[]).render();
+        assert_eq!(a, b);
     }
 }

@@ -14,7 +14,7 @@ use crate::mem::{MemStats, MemSystem, MemUpdate};
 use crate::sim::activity::Activity;
 use crate::sim::dataflow::ArrayGeometry;
 use crate::sim::partitioned::Tile;
-use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
+use crate::workloads::dnng::{Dnn, DnnId, LayerId, WorkloadPool};
 
 /// Whether [`Observer`] callbacks are batched through the engine's ring
 /// and delivered at cycle-batch boundaries.  Opt out with
@@ -91,14 +91,34 @@ struct Pending {
 /// Determinism: events are totally ordered (see [`Event`]), the scheduler
 /// contract is deterministic, and the engine adds no randomness — a fixed
 /// workload and policy reproduce byte-identical metrics anywhere.
-pub struct Engine<'p> {
-    pool: &'p WorkloadPool,
-    queue: TaskQueue<'p>,
+///
+/// The engine *owns* its pool (cloned at construction) and is steppable:
+/// [`Engine::run`] is exactly [`Engine::start`] followed by
+/// [`Engine::step`] until the queue drains.  The fleet tier drives the
+/// step API directly, interleaving event processing with runtime
+/// admissions ([`Engine::admit`]) and slot recycling
+/// ([`Engine::release`]) so one long-lived engine can serve an unbounded
+/// request stream in bounded memory.
+pub struct Engine {
+    pool: WorkloadPool,
+    queue: TaskQueue,
     partitions: PartitionManager,
     events: EventQueue,
     pending: BTreeMap<AllocId, Pending>,
     /// `(dnn, absolute deadline cycle)` pairs to turn into events.
     deadlines: Vec<(DnnId, u64)>,
+    /// Live runtime deadlines (`dnn → cycle`) armed via
+    /// [`Engine::push_deadline`].  Under slot recycling a released DNN's
+    /// still-queued Deadline event must not fire against the NEW tenant
+    /// occupying the recycled id; once any runtime deadline exists, a
+    /// Deadline event is real only while it matches this map exactly and
+    /// every mismatch is a husk to skip.
+    runtime_deadlines: BTreeMap<DnnId, u64>,
+    /// True once [`Engine::push_deadline`] has ever been called — flips
+    /// Deadline events into validate-against-the-map mode.  Kept separate
+    /// from the map's emptiness so a husk arriving after its entry was
+    /// removed is still recognized as a husk.
+    runtime_deadline_mode: bool,
     /// Arrival events not yet fired (progress can still come from outside).
     arrivals_pending: usize,
     /// Consecutive wake-ups scheduled while nothing else could change the
@@ -121,6 +141,10 @@ pub struct Engine<'p> {
     /// drained (in order) once per batch — see [`obs_ring_enabled`].  The
     /// vector is reused across batches, so steady state allocates nothing.
     obs_ring: Vec<ObsEvent>,
+    /// Pool slots freed by [`Engine::release`], reused (LIFO) by
+    /// [`Engine::admit`] — the recycling that bounds pool/queue memory by
+    /// the peak live-tenant count instead of the total arrival count.
+    free_dnn_slots: Vec<DnnId>,
     now: u64,
 }
 
@@ -131,31 +155,128 @@ pub struct Engine<'p> {
 /// that can never occur (state is unchanged and nothing else is pending).
 const MAX_IDLE_WAKES: u32 = 1_000;
 
-impl<'p> Engine<'p> {
-    /// An engine over `pool` on an array of the given geometry.
-    pub fn new(pool: &'p WorkloadPool, geom: ArrayGeometry) -> Engine<'p> {
+impl Engine {
+    /// An engine over a clone of `pool` on an array of the given geometry.
+    pub fn new(pool: &WorkloadPool, geom: ArrayGeometry) -> Engine {
         Engine {
-            pool,
+            pool: pool.clone(),
             queue: TaskQueue::new(pool),
             partitions: PartitionManager::new(geom),
             events: EventQueue::new(),
             pending: BTreeMap::new(),
             deadlines: Vec::new(),
+            runtime_deadlines: BTreeMap::new(),
+            runtime_deadline_mode: false,
             arrivals_pending: pool.dnns.len(),
             idle_wakes: 0,
             mem: None,
             mem_release_at: None,
             progress: BTreeMap::new(),
             obs_ring: Vec::new(),
+            free_dnn_slots: Vec::new(),
             now: 0,
         }
     }
 
     /// Attach absolute QoS deadlines; each becomes an
     /// [`Event::Deadline`] reported to the scheduler and observer.
-    pub fn with_deadlines(mut self, deadlines: Vec<(DnnId, u64)>) -> Engine<'p> {
+    pub fn with_deadlines(mut self, deadlines: Vec<(DnnId, u64)>) -> Engine {
         self.deadlines = deadlines;
         self
+    }
+
+    /// The engine clock (the cycle of the last processed event batch).
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Cycle of the earliest pending event, if any.
+    pub fn next_event_time(&self) -> Option<u64> {
+        self.events.next_time()
+    }
+
+    /// True when every layer of `dnn` has retired.
+    pub fn dnn_done(&self, dnn: DnnId) -> bool {
+        self.queue.dnn_done(dnn)
+    }
+
+    /// The engine's (owned, possibly recycled) workload pool.
+    pub fn pool(&self) -> &WorkloadPool {
+        &self.pool
+    }
+
+    /// Admit a new DNN at absolute cycle `t` (not before the engine
+    /// clock), reusing a slot freed by [`Engine::release`] when one is
+    /// available; returns the id the DNN runs under.  Only call between
+    /// [`Engine::step`]s — never from inside scheduler or observer hooks.
+    pub fn admit(&mut self, dnn: Dnn, t: u64) -> DnnId {
+        assert!(
+            t >= self.now,
+            "admission at cycle {t} is in the engine's past (now {})",
+            self.now
+        );
+        dnn.validate();
+        let d = dnn.arriving_at(t);
+        let id = match self.free_dnn_slots.pop() {
+            Some(slot) => {
+                self.pool.dnns[slot] = d;
+                self.queue.reset_slot(slot, &self.pool.dnns[slot]);
+                slot
+            }
+            None => {
+                self.pool.dnns.push(d);
+                let id = self.pool.dnns.len() - 1;
+                self.queue.push_slot(&self.pool.dnns[id]);
+                id
+            }
+        };
+        self.events.push(Event::Arrival { t, dnn: id });
+        self.arrivals_pending += 1;
+        self.idle_wakes = 0; // new work: the livelock detector restarts
+        id
+    }
+
+    /// Arm a runtime QoS deadline for a live (admitted) DNN; it fires as
+    /// an [`Event::Deadline`] exactly like [`Engine::with_deadlines`]
+    /// entries do.  Unlike construction-time deadlines these are
+    /// recycling-safe: releasing the DNN, or re-arming it at a different
+    /// cycle, turns the already-queued event into a husk that is skipped,
+    /// so a recycled slot never inherits its predecessor's verdict.  Not
+    /// composable with [`Engine::with_deadlines`] on the same engine.
+    pub fn push_deadline(&mut self, dnn: DnnId, t: u64) {
+        assert!(
+            t >= self.now,
+            "deadline at cycle {t} is in the engine's past (now {})",
+            self.now
+        );
+        assert!(
+            self.deadlines.is_empty(),
+            "push_deadline cannot be mixed with with_deadlines"
+        );
+        self.runtime_deadline_mode = true;
+        self.runtime_deadlines.insert(dnn, t);
+        self.events.push(Event::Deadline { t, dnn });
+    }
+
+    /// Retire a *finished* DNN's slot for reuse by a later
+    /// [`Engine::admit`]: its progress-ledger entries drop and the
+    /// scheduler's [`Scheduler::on_dnn_retired`] hook fires so policies
+    /// can shed their per-id state.  Only call between [`Engine::step`]s,
+    /// after the observer callbacks referencing this DNN have flushed.
+    pub fn release(&mut self, dnn: DnnId, sched: &mut dyn Scheduler) {
+        assert!(self.queue.dnn_done(dnn), "releasing unfinished dnn {dnn}");
+        debug_assert!(!self.free_dnn_slots.contains(&dnn), "double release of dnn {dnn}");
+        let stale: Vec<(DnnId, LayerId)> =
+            self.progress.range((dnn, 0)..=(dnn, usize::MAX)).map(|(&k, _)| k).collect();
+        for k in stale {
+            self.progress.remove(&k);
+        }
+        // Any still-pending runtime deadline of this DNN becomes a husk
+        // the moment the map entry drops (the queued event no longer
+        // matches anything).
+        self.runtime_deadlines.remove(&dnn);
+        self.free_dnn_slots.push(dnn);
+        sched.on_dnn_retired(dnn);
     }
 
     /// Convenience: run `pool` under `sched` and collect [`RunMetrics`].
@@ -175,7 +296,7 @@ impl<'p> Engine<'p> {
         if obs_ring_enabled() {
             self.obs_ring.push(ev);
         } else {
-            Self::deliver(self.pool, obs, ev);
+            Self::deliver(&self.pool, obs, ev);
         }
     }
 
@@ -186,7 +307,7 @@ impl<'p> Engine<'p> {
         }
         let mut buf = std::mem::take(&mut self.obs_ring);
         for ev in buf.drain(..) {
-            Self::deliver(self.pool, obs, ev);
+            Self::deliver(&self.pool, obs, ev);
         }
         self.obs_ring = buf; // keep the capacity for the next batch
     }
@@ -237,7 +358,7 @@ impl<'p> Engine<'p> {
     fn state(&self) -> SystemState<'_> {
         SystemState {
             now: self.now,
-            pool: self.pool,
+            pool: &self.pool,
             queue: &self.queue,
             partitions: &self.partitions,
             mem: self.mem.as_ref().map(|m| m.feedback()),
@@ -281,64 +402,8 @@ impl<'p> Engine<'p> {
     /// not done and no completion is in flight when the event queue
     /// drains) — a policy bug, not a recoverable condition.
     pub fn run(mut self, sched: &mut dyn Scheduler, obs: &mut dyn Observer) {
-        self.mem = sched.mem_spec().map(MemSystem::new);
-        for (di, d) in self.pool.dnns.iter().enumerate() {
-            self.events.push(Event::Arrival { t: d.arrival_cycles, dnn: di });
-        }
-        for &(dnn, t) in &self.deadlines {
-            self.events.push(Event::Deadline { t, dnn });
-        }
-
-        while let Some(first) = self.events.pop() {
-            let now = first.time();
-            debug_assert!(now >= self.now, "event time went backwards");
-            self.now = now;
-
-            // Process the whole batch of events at this cycle.
-            let mut needs_plan = false;
-            let mut next = Some(first);
-            while let Some(ev) = next {
-                self.handle(ev, sched, obs, &mut needs_plan);
-                next = if self.events.next_time() == Some(now) {
-                    self.events.pop()
-                } else {
-                    None
-                };
-            }
-
-            // One decision point over the settled state: plan dispatches
-            // into the free space first, then offer the policy its
-            // preemption check — starvation is judged against what the
-            // plan actually left free, so a layer dispatched this very
-            // cycle can itself become the victim (bounded to its first
-            // fold boundary).
-            if needs_plan && !self.queue.all_done() {
-                self.dispatch(sched, obs);
-                self.request_preemptions(sched);
-            }
-
-            // Deliver this batch's observer callbacks in one sweep.
-            // Observers are passive, so deferring within the cycle cannot
-            // change engine behavior, and FIFO delivery reproduces the
-            // exact pre-ring callback sequence.
-            self.flush_obs(obs);
-
-            if self.queue.all_done() {
-                // Only Deadline/Repartition (or stale Preempt) events can
-                // remain; report the deadlines (all met — the work
-                // finished first) and stop.
-                while let Some(ev) = self.events.pop() {
-                    if let Event::Deadline { t, dnn } = ev {
-                        self.now = t;
-                        sched.on_deadline(&self.state(), dnn, true);
-                        self.emit(obs, ObsEvent::Deadline { dnn, t, met: true });
-                    }
-                }
-                self.flush_obs(obs);
-                break;
-            }
-        }
-
+        self.start(sched);
+        while self.step(sched, obs) {}
         assert!(
             self.queue.all_done(),
             "engine drained its event queue with {} layer(s) never scheduled \
@@ -346,6 +411,88 @@ impl<'p> Engine<'p> {
             self.queue.remaining(),
             sched.name(),
         );
+    }
+
+    /// Seed the run: instantiate the memory system and post the pool's
+    /// arrival events plus any attached deadlines.  Call exactly once,
+    /// before the first [`Engine::step`].
+    pub fn start(&mut self, sched: &mut dyn Scheduler) {
+        self.mem = sched.mem_spec().map(MemSystem::new);
+        for (di, d) in self.pool.dnns.iter().enumerate() {
+            self.events.push(Event::Arrival { t: d.arrival_cycles, dnn: di });
+        }
+        for &(dnn, t) in &self.deadlines {
+            self.events.push(Event::Deadline { t, dnn });
+        }
+    }
+
+    /// Process one cycle batch: every event at the earliest pending
+    /// cycle, one plan over the settled state, the preemption check, and
+    /// the batched observer flush.  Returns `false` when there is nothing
+    /// left to do — the event queue is empty, or every admitted layer has
+    /// retired (remaining deadline events are then drained and reported
+    /// met).  A `false` return is *resumable*: a later [`Engine::admit`]
+    /// posts new work and stepping continues.
+    pub fn step(&mut self, sched: &mut dyn Scheduler, obs: &mut dyn Observer) -> bool {
+        let Some(first) = self.events.pop() else { return false };
+        let now = first.time();
+        debug_assert!(now >= self.now, "event time went backwards");
+        self.now = now;
+
+        // Process the whole batch of events at this cycle.
+        let mut needs_plan = false;
+        let mut next = Some(first);
+        while let Some(ev) = next {
+            self.handle(ev, sched, obs, &mut needs_plan);
+            next = if self.events.next_time() == Some(now) {
+                self.events.pop()
+            } else {
+                None
+            };
+        }
+
+        // One decision point over the settled state: plan dispatches
+        // into the free space first, then offer the policy its
+        // preemption check — starvation is judged against what the
+        // plan actually left free, so a layer dispatched this very
+        // cycle can itself become the victim (bounded to its first
+        // fold boundary).
+        if needs_plan && !self.queue.all_done() {
+            self.dispatch(sched, obs);
+            self.request_preemptions(sched);
+        }
+
+        // Deliver this batch's observer callbacks in one sweep.
+        // Observers are passive, so deferring within the cycle cannot
+        // change engine behavior, and FIFO delivery reproduces the
+        // exact pre-ring callback sequence.
+        self.flush_obs(obs);
+
+        if self.queue.all_done() {
+            // Only Deadline/Repartition (or stale Preempt) events can
+            // remain; report the deadlines (all met — the work
+            // finished first) and stop.  The clock is restored afterwards
+            // so a resumable driver can still admit work between the
+            // drained reports' (future) cycles and the real frontier.
+            let resume_now = self.now;
+            while let Some(ev) = self.events.pop() {
+                if let Event::Deadline { t, dnn } = ev {
+                    if self.runtime_deadline_mode {
+                        if self.runtime_deadlines.get(&dnn) != Some(&t) {
+                            continue; // husk: released or re-armed
+                        }
+                        self.runtime_deadlines.remove(&dnn);
+                    }
+                    self.now = t;
+                    sched.on_deadline(&self.state(), dnn, true);
+                    self.emit(obs, ObsEvent::Deadline { dnn, t, met: true });
+                }
+            }
+            self.flush_obs(obs);
+            self.now = resume_now;
+            return false;
+        }
+        true
     }
 
     fn handle(
@@ -464,6 +611,12 @@ impl<'p> Engine<'p> {
                 *needs_plan = true;
             }
             Event::Deadline { t, dnn } => {
+                if self.runtime_deadline_mode {
+                    if self.runtime_deadlines.get(&dnn) != Some(&t) {
+                        return; // husk: slot released/recycled or re-armed
+                    }
+                    self.runtime_deadlines.remove(&dnn);
+                }
                 let met = self.queue.dnn_done(dnn);
                 sched.on_deadline(&self.state(), dnn, met);
                 self.emit(obs, ObsEvent::Deadline { dnn, t, met });
@@ -765,6 +918,53 @@ mod tests {
         assert_eq!(tally.0.len(), 2);
         assert_eq!(tally.0[0], (0, 1, false), "in-flight at cycle 1 => missed");
         assert_eq!(tally.0[1], (0, u64::MAX, true), "drained after completion => met");
+    }
+
+    #[test]
+    fn runtime_deadlines_survive_slot_recycling_and_keep_the_clock_resumable() {
+        #[derive(Default)]
+        struct Tally(Vec<(DnnId, u64, bool)>);
+        impl Observer for Tally {
+            fn on_deadline(&mut self, dnn: DnnId, t: u64, met: bool) {
+                self.0.push((dnn, t, met));
+            }
+        }
+        let mk = |name: &str| {
+            Dnn::chain(
+                name,
+                vec![Layer::new("l0", LayerKind::Fc, LayerShape::fc(32, 64, 64))],
+            )
+        };
+        let mut sched = FullArrayFifo::new();
+        let mut tally = Tally::default();
+        let mut eng = Engine::new(&WorkloadPool::new("t", vec![]), GEOM);
+        eng.start(&mut sched);
+
+        // First tenant: a deadline far past its completion.  The drain
+        // reports it met but must NOT advance the resumable clock to it.
+        let a = eng.admit(mk("a"), 0);
+        eng.push_deadline(a, 1_000_000_000);
+        while eng.step(&mut sched, &mut tally) {}
+        assert!(eng.dnn_done(a));
+        assert_eq!(tally.0, vec![(a, 1_000_000_000, true)]);
+        let frontier = eng.now();
+        assert!(frontier < 1_000_000_000, "drain must restore the clock");
+        eng.release(a, &mut sched);
+
+        // Second tenant reuses the SAME slot; arm a far-future deadline
+        // AFTER its work completes, then release — the queued event
+        // outlives the tenant and becomes a husk.
+        let b = eng.admit(mk("b"), frontier + 10);
+        assert_eq!(b, a, "LIFO recycling reuses the slot");
+        while eng.step(&mut sched, &mut tally) {}
+        eng.push_deadline(b, eng.now() + 2_000_000);
+        eng.release(b, &mut sched); // husk: deadline event still queued
+        let c = eng.admit(mk("c"), eng.now() + 1);
+        assert_eq!(c, b);
+        while eng.step(&mut sched, &mut tally) {}
+        eng.release(c, &mut sched);
+        // b's orphaned deadline event must not have fired against c.
+        assert_eq!(tally.0.len(), 1, "husk deadline skipped: {:?}", tally.0);
     }
 
     #[test]

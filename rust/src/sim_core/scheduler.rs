@@ -22,7 +22,7 @@ use crate::workloads::shapes::GemmDims;
 pub struct SystemState<'e> {
     pub now: u64,
     pub pool: &'e WorkloadPool,
-    pub queue: &'e TaskQueue<'e>,
+    pub queue: &'e TaskQueue,
     pub partitions: &'e PartitionManager,
     /// Live memory-system feedback (stall fractions, in-flight
     /// memory-bound layers); `None` when `[mem]` is disabled.
@@ -171,6 +171,13 @@ pub trait Scheduler {
 
     /// A wake-up previously requested via [`Scheduler::wake_after`] fired.
     fn on_repartition(&mut self, _state: &SystemState<'_>) {}
+
+    /// A finished DNN's pool slot is being recycled (see
+    /// [`Engine::release`](super::Engine::release)): the id WILL be
+    /// reused for a future, unrelated admission, so a policy holding any
+    /// per-DNN state keyed by id must drop this DNN's entries here.
+    /// Default no-op — single-run policies never see a recycled id.
+    fn on_dnn_retired(&mut self, _dnn: DnnId) {}
 
     /// Capability flag: does this policy ever call for preemptions?
     ///

@@ -80,6 +80,11 @@ pub struct SweepGrid {
     /// Arbitration modes crossed with [`SweepGrid::bandwidths`]; empty
     /// defaults to fair-share when a bandwidth axis is present.
     pub arbitrations: Vec<ArbitrationMode>,
+    /// Fleet axis: cluster sizes to run each (mix, non-batch rate) cell
+    /// through the serving tier ([`crate::fleet`]).  Empty (default) =
+    /// no fleet points and the sweep JSON carries no `fleet` key —
+    /// today's bytes exactly.
+    pub fleet: Vec<usize>,
     pub seed: u64,
 }
 
@@ -101,6 +106,7 @@ impl Default for SweepGrid {
             bursty: None,
             bandwidths: Vec::new(),
             arbitrations: Vec::new(),
+            fleet: Vec::new(),
             seed: 42,
         }
     }
@@ -364,6 +370,85 @@ pub fn run_sweep(
         .collect())
 }
 
+/// One finished fleet-axis point ([`SweepGrid::fleet`]).
+#[derive(Debug, Clone)]
+pub struct FleetAxisRow {
+    /// Cluster size this point ran at.
+    pub instances: usize,
+    pub mix: String,
+    pub mean_interarrival: f64,
+    /// Same per-(mix, rate)-cell derivation as [`expand`], so a fleet
+    /// point shares its arrival seed with the single-array points of the
+    /// same cell.
+    pub scenario_seed: u64,
+    pub report: crate::fleet::FleetReport,
+}
+
+/// Run the grid's fleet axis: every (mix, non-batch rate) cell through a
+/// uniform dynamic-partitioned cluster of each size in
+/// [`SweepGrid::fleet`].  Batch-arrival cells are skipped — "everything
+/// at t=0" is not a serving workload.  `threads` parallelizes instances
+/// inside each fleet run; the rows are byte-stable for any value.
+pub fn run_fleet_axis(
+    grid: &SweepGrid,
+    base: &SchedulerConfig,
+    threads: usize,
+) -> Result<Vec<FleetAxisRow>> {
+    use crate::fleet::{run_fleet, FleetConfig, FleetPolicy, Placement};
+    use crate::workloads::generator::ModelMix;
+
+    let mut rows = Vec::new();
+    if grid.fleet.is_empty() {
+        return Ok(rows);
+    }
+    for (mi, mix) in grid.mixes.iter().enumerate() {
+        let pool = models::by_spec(mix)
+            .map_err(anyhow::Error::msg)
+            .with_context(|| format!("resolving fleet mix {mix:?}"))?;
+        let weights: Vec<(&str, f64)> =
+            pool.dnns.iter().map(|d| (d.name.as_str(), 1.0)).collect();
+        for (ri, &rate) in grid.rates.iter().enumerate() {
+            if rate <= 0.0 {
+                continue;
+            }
+            let scenario_seed = grid
+                .seed
+                .wrapping_add((mi as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+                .wrapping_add((ri as u64 + 1).wrapping_mul(0xD1B5_4A32_D192_ED03));
+            for &n in &grid.fleet {
+                let mut classes = FleetConfig::default_classes(rate);
+                if grid.qos_slack > 0.0 {
+                    classes[0].slack = Some(grid.qos_slack);
+                }
+                let cfg = FleetConfig {
+                    instances: FleetConfig::uniform(n, base, FleetPolicy::Dynamic),
+                    placement: Placement::LeastLoaded,
+                    random_k: 2,
+                    classes,
+                    slots: 8,
+                    queue_cap: 64,
+                    mix: ModelMix::new(&weights),
+                    arrival: arrival_for(grid, rate),
+                    diurnal: None,
+                    requests: grid.requests,
+                    seed: scenario_seed,
+                    chunk: 4096,
+                };
+                let report = run_fleet(&cfg, threads)
+                    .with_context(|| format!("fleet axis point {mix}@{rate}x{n}"))?;
+                rows.push(FleetAxisRow {
+                    instances: n,
+                    mix: mix.clone(),
+                    mean_interarrival: rate,
+                    scenario_seed,
+                    report,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -525,5 +610,29 @@ mod tests {
             assert_eq!(row.outcome.overall.requests, 4);
             assert!((0.0..=1.0).contains(&row.outcome.miss_rate()));
         }
+    }
+
+    #[test]
+    fn fleet_axis_skips_batch_cells_and_is_thread_stable() {
+        let grid = SweepGrid {
+            mixes: vec!["NCF".to_string()],
+            rates: vec![0.0, 40_000.0],
+            requests: 30,
+            fleet: vec![2],
+            ..Default::default()
+        };
+        let base = SchedulerConfig::default();
+        let a = run_fleet_axis(&grid, &base, 1).unwrap();
+        let b = run_fleet_axis(&grid, &base, 4).unwrap();
+        // The batch (rate 0) cell is skipped: one point remains.
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].instances, 2);
+        assert_eq!(a[0].report.generated, 30);
+        assert_eq!(a[0].report.completed, b[0].report.completed);
+        assert_eq!(a[0].report.makespan, b[0].report.makespan);
+        // Fleet points share the cell's arrival seed with expand().
+        let points = expand(&grid, &base);
+        let cell = points.iter().find(|p| p.mean_interarrival > 0.0).unwrap();
+        assert_eq!(a[0].scenario_seed, cell.scenario_seed);
     }
 }

@@ -133,6 +133,239 @@ impl ArrivalProcess {
     }
 }
 
+/// A weighted model mix — THE one cumulative-probability roll shared by
+/// the INFaaS example and the fleet trace generator (both previously
+/// hand-rolled the same loop).
+///
+/// Weights are arbitrary positive numbers; sampling normalizes by their
+/// sum, so `[("a", 3.0), ("b", 1.0)]` picks `a` 75% of the time.  One
+/// [`Rng::gen_f64`] draw per sample, so a mix inside a streaming
+/// generator costs exactly one RNG call per request — the property the
+/// fleet's determinism contract leans on.
+#[derive(Debug, Clone)]
+pub struct ModelMix {
+    entries: Vec<(String, f64)>,
+    total: f64,
+}
+
+impl ModelMix {
+    /// Build a mix; panics (with the offending entry) on a non-positive
+    /// or non-finite weight, or an empty mix.
+    pub fn new(entries: &[(&str, f64)]) -> ModelMix {
+        assert!(!entries.is_empty(), "model mix is empty");
+        for (name, w) in entries {
+            assert!(
+                w.is_finite() && *w > 0.0,
+                "model mix weight for `{name}` must be positive and finite, got {w}"
+            );
+        }
+        let total = entries.iter().map(|(_, w)| w).sum();
+        ModelMix {
+            entries: entries.iter().map(|(n, w)| (n.to_string(), *w)).collect(),
+            total,
+        }
+    }
+
+    /// Number of models in the mix.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The `i`-th model name (mix order is definition order).
+    pub fn name(&self, i: usize) -> &str {
+        &self.entries[i].0
+    }
+
+    /// The `i`-th model's normalized probability.
+    pub fn probability(&self, i: usize) -> f64 {
+        self.entries[i].1 / self.total
+    }
+
+    /// Sample a model index: one uniform roll against the cumulative
+    /// weights (first entry whose cumulative sum exceeds the roll; the
+    /// last entry absorbs any floating-point residue).
+    pub fn sample_index(&self, rng: &mut Rng) -> usize {
+        let roll = rng.gen_f64() * self.total;
+        let mut acc = 0.0;
+        for (i, (_, w)) in self.entries.iter().enumerate() {
+            acc += w;
+            if roll < acc {
+                return i;
+            }
+        }
+        self.entries.len() - 1
+    }
+
+    /// Sample a model name (see [`ModelMix::sample_index`]).
+    pub fn sample(&self, rng: &mut Rng) -> &str {
+        &self.entries[self.sample_index(rng)].0
+    }
+}
+
+/// Diurnal modulation over an arrival process: the instantaneous rate is
+/// scaled by `1 + amplitude·sin(2π·t/period + phase)`, so a day-length
+/// `period` yields the classic peak/trough serving curve (cf. the
+/// production traces in "No DNN Left Behind").  Applied by
+/// [`ArrivalStream`] as inverse-rate gap scaling: each sampled gap is
+/// divided by the factor at the gap's *start*, which keeps generation
+/// streaming (one RNG draw per arrival, no thinning rejections) and
+/// monotone.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diurnal {
+    /// Cycles per full sine period (the "day" length).
+    pub period: f64,
+    /// Peak-to-mean rate swing, in `[0, 1)` — 0 disables, 0.9 means the
+    /// trough serves 10% of the mean rate and the peak 190%.
+    pub amplitude: f64,
+    /// Phase offset in radians (0 starts at the mean, rising).
+    pub phase: f64,
+}
+
+impl Diurnal {
+    /// Validate the modulation parameters, naming the offending value.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.period.is_finite() || self.period <= 0.0 {
+            return Err(format!(
+                "diurnal period must be a positive, finite cycle count, got {}",
+                self.period
+            ));
+        }
+        if !self.amplitude.is_finite() || !(0.0..1.0).contains(&self.amplitude) {
+            return Err(format!(
+                "diurnal amplitude must be in [0, 1) so the rate stays positive, got {}",
+                self.amplitude
+            ));
+        }
+        if !self.phase.is_finite() {
+            return Err(format!("diurnal phase must be finite, got {}", self.phase));
+        }
+        Ok(())
+    }
+
+    /// Instantaneous rate multiplier at cycle `t` (always > 0 for a
+    /// validated modulation).
+    pub fn rate_factor(&self, t: f64) -> f64 {
+        1.0 + self.amplitude * (std::f64::consts::TAU * t / self.period + self.phase).sin()
+    }
+}
+
+/// A streaming arrival-time generator: the lazy, unbounded-trace twin of
+/// [`ArrivalProcess::sample`], with optional [`Diurnal`] modulation.
+///
+/// Yields exactly the cycles `sample` would return for the same seed when
+/// no modulation is attached (pinned by a property test) — but one at a
+/// time, so a fleet run can stream millions of arrivals with O(1) memory
+/// instead of materializing the trace up front.  Diurnal modulation
+/// divides each stochastic gap by [`Diurnal::rate_factor`] at the gap's
+/// start; `Batch` and `Trace` processes have no stochastic gaps and pass
+/// through unmodulated.
+#[derive(Debug, Clone)]
+pub struct ArrivalStream {
+    process: ArrivalProcess,
+    diurnal: Option<Diurnal>,
+    rng: Rng,
+    /// Continuous clock (pre-rounding, so rounding never accumulates).
+    t: f64,
+    /// Index of the next arrival to yield.
+    i: usize,
+    /// Total arrivals to yield.
+    n: usize,
+}
+
+impl ArrivalStream {
+    /// A stream of `n` arrivals; panics with the
+    /// [`ArrivalProcess::validate`]/[`Diurnal::validate`] message on
+    /// invalid parameters.  `Trace` processes are sorted once here.
+    pub fn new(
+        process: ArrivalProcess,
+        diurnal: Option<Diurnal>,
+        rng: Rng,
+        n: usize,
+    ) -> ArrivalStream {
+        if let Err(e) = process.validate() {
+            panic!("invalid arrival process: {e}");
+        }
+        if let Some(d) = &diurnal {
+            if let Err(e) = d.validate() {
+                panic!("invalid diurnal modulation: {e}");
+            }
+        }
+        let process = match process {
+            ArrivalProcess::Trace(mut times) => {
+                times.sort_unstable();
+                ArrivalProcess::Trace(times)
+            }
+            p => p,
+        };
+        ArrivalStream { process, diurnal, rng, t: 0.0, i: 0, n }
+    }
+
+    /// Arrivals still to come.
+    pub fn remaining(&self) -> usize {
+        self.n - self.i
+    }
+
+    /// Advance the continuous clock by a stochastic gap, shrunk (or
+    /// stretched) by the diurnal rate at the gap's start.
+    fn advance(&mut self, gap: f64) {
+        let factor = match &self.diurnal {
+            Some(d) => d.rate_factor(self.t),
+            None => 1.0,
+        };
+        self.t += gap / factor;
+    }
+}
+
+impl Iterator for ArrivalStream {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        if self.i >= self.n {
+            return None;
+        }
+        let i = self.i;
+        self.i += 1;
+        // Scalar fields are copied out of the process so the stochastic
+        // arms can borrow `rng`/`t` mutably; only the trace arm (which
+        // draws nothing) keeps a borrow.
+        let at = match self.process {
+            ArrivalProcess::Batch => 0,
+            ArrivalProcess::Poisson { mean_interarrival } => {
+                if i > 0 {
+                    let gap = self.rng.gen_exp(1.0 / mean_interarrival);
+                    self.advance(gap);
+                }
+                to_cycles(self.t)
+            }
+            ArrivalProcess::Bursty { burst_size, within_gap, between_gap } => {
+                if i > 0 {
+                    let gap = if i % burst_size == 0 {
+                        self.rng.gen_exp(1.0 / between_gap) // OFF period
+                    } else {
+                        within_gap // inside the ON burst
+                    };
+                    self.advance(gap);
+                }
+                to_cycles(self.t)
+            }
+            ArrivalProcess::Trace(ref times) => {
+                let period = times.last().unwrap() + 1;
+                times[i % times.len()] + (i / times.len()) as u64 * period
+            }
+        };
+        Some(at)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = self.remaining();
+        (rem, Some(rem))
+    }
+}
+
 /// Knobs for the synthetic generator.
 #[derive(Debug, Clone)]
 pub struct GeneratorCfg {
@@ -372,5 +605,140 @@ mod tests {
         // First pass sorted, second pass shifted by last+1 = 501.
         assert_eq!(p.sample(&mut rng, 6), vec![0, 100, 500, 501, 601, 1001]);
         assert_eq!(p.sample(&mut rng, 2), vec![0, 100]);
+    }
+
+    #[test]
+    fn stream_matches_batch_sample_exactly() {
+        // The streaming generator is the lazy twin of `sample`: same
+        // seed, same process, same RNG call order ⇒ the same cycles,
+        // element for element — over every process variant.
+        prop::check("stream == sample", 40, |rng| {
+            let seed = rng.next_u64();
+            let n = rng.gen_range_inclusive(1, 200) as usize;
+            let p = match rng.gen_range(4) {
+                0 => ArrivalProcess::Batch,
+                1 => ArrivalProcess::Poisson {
+                    mean_interarrival: 100.0 + rng.gen_f64() * 50_000.0,
+                },
+                2 => ArrivalProcess::Bursty {
+                    burst_size: rng.gen_range_inclusive(1, 8) as usize,
+                    within_gap: rng.gen_f64() * 500.0,
+                    between_gap: 100.0 + rng.gen_f64() * 50_000.0,
+                },
+                _ => ArrivalProcess::Trace(
+                    (0..rng.gen_range_inclusive(1, 10)).map(|_| rng.gen_range(10_000)).collect(),
+                ),
+            };
+            let eager = p.sample(&mut Rng::new(seed), n);
+            let lazy: Vec<u64> =
+                ArrivalStream::new(p, None, Rng::new(seed), n).collect();
+            prop::ensure_eq(lazy, eager, "streamed arrivals")
+        });
+    }
+
+    #[test]
+    fn stream_is_monotone_under_diurnal() {
+        prop::check("diurnal stream monotone", 20, |rng| {
+            let d = Diurnal {
+                period: 1e5 + rng.gen_f64() * 1e7,
+                amplitude: rng.gen_f64() * 0.99,
+                phase: rng.gen_f64() * std::f64::consts::TAU,
+            };
+            let p = ArrivalProcess::Poisson { mean_interarrival: 5_000.0 };
+            let a: Vec<u64> =
+                ArrivalStream::new(p, Some(d), Rng::new(rng.next_u64()), 500).collect();
+            prop::ensure_eq(a.len(), 500, "stream length")?;
+            for w in a.windows(2) {
+                prop::ensure(w[0] <= w[1], "monotone under modulation")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn diurnal_peak_runs_faster_than_trough() {
+        // Phase π/2 starts the stream at the rate peak (factor 1+a);
+        // phase 3π/2 at the trough (factor 1-a).  Early in the stream
+        // (well inside the first quarter-period) the peak-phase clock
+        // must advance slower per arrival — i.e. arrivals are denser.
+        let p = ArrivalProcess::Poisson { mean_interarrival: 1_000.0 };
+        let period = 1e9; // so 200 arrivals stay near t≈0 phase
+        let mk = |phase: f64| {
+            let d = Diurnal { period, amplitude: 0.8, phase };
+            ArrivalStream::new(p.clone(), Some(d), Rng::new(11), 200)
+                .last()
+                .unwrap()
+        };
+        let peak_end = mk(std::f64::consts::FRAC_PI_2);
+        let trough_end = mk(1.5 * std::f64::consts::PI);
+        // Identical seeds ⇒ identical gap draws; only the factor differs:
+        // (1-a)/(1+a) = 0.111..., so the spread is wide and stable.
+        assert!(
+            (peak_end as f64) < 0.2 * trough_end as f64,
+            "peak {peak_end} !<< trough {trough_end}"
+        );
+    }
+
+    #[test]
+    fn diurnal_validate_names_the_offending_value() {
+        let ok = Diurnal { period: 1e6, amplitude: 0.5, phase: 0.0 };
+        assert!(ok.validate().is_ok());
+        let e = Diurnal { period: 0.0, ..ok.clone() }.validate().unwrap_err();
+        assert!(e.contains("period"), "{e}");
+        let e = Diurnal { amplitude: 1.0, ..ok.clone() }.validate().unwrap_err();
+        assert!(e.contains("amplitude") && e.contains('1'), "{e}");
+        let e = Diurnal { amplitude: -0.1, ..ok.clone() }.validate().unwrap_err();
+        assert!(e.contains("-0.1"), "{e}");
+        let e = Diurnal { phase: f64::INFINITY, ..ok }.validate().unwrap_err();
+        assert!(e.contains("phase"), "{e}");
+    }
+
+    #[test]
+    fn model_mix_frequencies_match_weights() {
+        // Chi-square goodness of fit: X² = Σ (obs-exp)²/exp over the
+        // categories is ~χ²(k-1) under the null; 40 is far beyond the
+        // 99.9th percentile for k ≤ 6, so a correct sampler essentially
+        // never trips while a biased one (e.g. unnormalized weights)
+        // blows through it immediately.
+        prop::check("mix chi-square", 10, |rng| {
+            let k = rng.gen_range_inclusive(2, 6) as usize;
+            let entries: Vec<(String, f64)> =
+                (0..k).map(|i| (format!("m{i}"), 0.25 + rng.gen_f64() * 4.0)).collect();
+            let refs: Vec<(&str, f64)> =
+                entries.iter().map(|(n, w)| (n.as_str(), *w)).collect();
+            let mix = ModelMix::new(&refs);
+            let n = 8_000usize;
+            let mut counts = vec![0usize; k];
+            for _ in 0..n {
+                counts[mix.sample_index(rng)] += 1;
+            }
+            let chi2: f64 = (0..k)
+                .map(|i| {
+                    let exp = mix.probability(i) * n as f64;
+                    let d = counts[i] as f64 - exp;
+                    d * d / exp
+                })
+                .sum();
+            prop::ensure(chi2 < 40.0, &format!("chi-square {chi2:.1} (counts {counts:?})"))
+        });
+    }
+
+    #[test]
+    fn model_mix_sample_returns_names() {
+        let mix = ModelMix::new(&[("a", 1.0), ("b", 3.0)]);
+        assert_eq!(mix.len(), 2);
+        assert_eq!(mix.name(1), "b");
+        assert!((mix.probability(1) - 0.75).abs() < 1e-12);
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let s = mix.sample(&mut rng);
+            assert!(s == "a" || s == "b");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "weight for `bad`")]
+    fn model_mix_rejects_bad_weight() {
+        ModelMix::new(&[("ok", 1.0), ("bad", 0.0)]);
     }
 }

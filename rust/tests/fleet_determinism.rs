@@ -1,0 +1,111 @@
+//! Fleet serving-tier invariants: thread-count byte-identity of the
+//! rendered JSON, chunk-size independence, and exactly-once request
+//! conservation under randomized (including overloaded) configurations.
+
+use mtsa::coordinator::scheduler::SchedulerConfig;
+use mtsa::fleet::{run_fleet, FleetConfig, FleetPolicy, Placement};
+use mtsa::report;
+use mtsa::util::prop;
+use mtsa::workloads::generator::{ArrivalProcess, Diurnal, ModelMix};
+
+fn serving_cfg(requests: usize, seed: u64) -> FleetConfig {
+    let sched = SchedulerConfig::default();
+    FleetConfig {
+        instances: FleetConfig::uniform(8, &sched, FleetPolicy::Dynamic),
+        placement: Placement::LeastLoaded,
+        random_k: 2,
+        classes: FleetConfig::default_classes(25_000.0),
+        slots: 6,
+        queue_cap: 48,
+        mix: ModelMix::new(&[("NCF", 3.0), ("MelodyLSTM", 2.0), ("AlexNet", 1.0)]),
+        arrival: ArrivalProcess::Poisson { mean_interarrival: 25_000.0 },
+        diurnal: Some(Diurnal { period: 8_000_000.0, amplitude: 0.6, phase: 0.0 }),
+        requests,
+        seed,
+        chunk: 256,
+    }
+}
+
+/// The headline determinism contract: the rendered fleet JSON is
+/// byte-identical at any worker-thread count.
+#[test]
+fn fleet_json_is_byte_identical_across_thread_counts() {
+    let cfg = serving_cfg(1_500, 0xF1EE7);
+    let base = report::fleet_json(&run_fleet(&cfg, 1).unwrap()).render();
+    for threads in [4usize, 8] {
+        let json = report::fleet_json(&run_fleet(&cfg, threads).unwrap()).render();
+        assert_eq!(json, base, "thread count {threads} changed the report bytes");
+    }
+}
+
+/// Placement and batching draws live in the router, not the workers: the
+/// other placements are thread-stable too.
+#[test]
+fn every_placement_is_thread_stable() {
+    for placement in [Placement::Affinity, Placement::RandomK] {
+        let mut cfg = serving_cfg(400, 99);
+        cfg.placement = placement;
+        let a = report::fleet_json(&run_fleet(&cfg, 1).unwrap()).render();
+        let b = report::fleet_json(&run_fleet(&cfg, 8).unwrap()).render();
+        assert_eq!(a, b, "{placement:?}");
+    }
+}
+
+/// Every generated request is accounted for exactly once — completed or
+/// dropped with a reason — for random capacities, placements and seeds,
+/// including overloaded fleets that must shed load.
+#[test]
+fn requests_are_conserved_exactly_once() {
+    prop::check("fleet conservation", 12, |rng| {
+        let sched = SchedulerConfig::default();
+        let overload = rng.gen_bool(0.5);
+        // Overloaded fleets get a single near-capacityless instance fed
+        // back-to-back arrivals, so shedding is structurally forced.
+        let n = if overload { 1 } else { rng.gen_range_inclusive(1, 4) as usize };
+        let mean = if overload { 500.0 } else { 30_000.0 };
+        let cfg = FleetConfig {
+            instances: FleetConfig::uniform(n, &sched, FleetPolicy::Dynamic),
+            placement: *rng.choose(&[
+                Placement::LeastLoaded,
+                Placement::Affinity,
+                Placement::RandomK,
+            ]),
+            random_k: rng.gen_range_inclusive(1, 3) as usize,
+            classes: FleetConfig::default_classes(mean),
+            slots: if overload { 1 } else { rng.gen_range_inclusive(1, 4) as usize },
+            queue_cap: if overload { 1 } else { rng.gen_range_inclusive(1, 8) as usize },
+            mix: ModelMix::new(&[("NCF", 1.0), ("MelodyLSTM", 1.0)]),
+            arrival: ArrivalProcess::Poisson { mean_interarrival: mean },
+            diurnal: None,
+            requests: rng.gen_range_inclusive(100, 200) as usize,
+            seed: rng.gen_range_inclusive(0, u64::MAX - 1),
+            chunk: 64,
+        };
+        let r = run_fleet(&cfg, 2).map_err(|e| format!("run_fleet: {e}"))?;
+        prop::ensure(r.conserved(), "generated != completed + dropped")?;
+        prop::ensure_eq(r.generated, cfg.requests as u64, "generated count")?;
+        let mut by_class = 0u64;
+        for c in &r.classes {
+            prop::ensure_eq(c.generated, c.completed + c.dropped, "per-class conservation")?;
+            by_class += c.generated;
+        }
+        prop::ensure_eq(by_class, r.generated, "class totals cover the stream")?;
+        if overload {
+            prop::ensure(r.dropped > 0, "overloaded fleet must shed load")?;
+        }
+        Ok(())
+    });
+}
+
+/// Peak memory is bounded by the chunk size, never the request count —
+/// pinned by results being independent of how the stream is chunked.
+#[test]
+fn chunking_is_invisible_in_the_report() {
+    let mut cfg = serving_cfg(600, 31);
+    let base = report::fleet_json(&run_fleet(&cfg, 2).unwrap()).render();
+    for chunk in [1usize, 7, 4096] {
+        cfg.chunk = chunk;
+        let json = report::fleet_json(&run_fleet(&cfg, 2).unwrap()).render();
+        assert_eq!(json, base, "chunk {chunk} changed the report bytes");
+    }
+}
