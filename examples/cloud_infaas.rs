@@ -46,6 +46,7 @@ fn endpoint(policy: FleetPolicy, requests: usize, seed: u64) -> FleetConfig {
         requests,
         seed,
         chunk: 2048,
+        tables: None,
     }
 }
 

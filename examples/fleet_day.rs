@@ -70,6 +70,7 @@ fn day(policy: FleetPolicy, requests: usize, seed: u64, mean_gap: f64) -> FleetC
         requests,
         seed,
         chunk: 4096,
+        tables: None,
     }
 }
 

@@ -24,6 +24,10 @@
 //!   streaming generation + routing + batched multi-instance simulation;
 //!   `events_per_sec` counts engine events retired across the cluster per
 //!   wall-clock second.  Informational (not gated).
+//! - `profiler_tables_per_sec` — the offline fission profiler
+//!   ([`crate::profiler::build_tables`]): the exhaustive closed-form tile
+//!   search over two zoo models on the base geometry; `tables_per_sec` is
+//!   the `mtsa profile` throughput unit.  Informational (not gated).
 
 use std::time::{Duration, Instant};
 
@@ -69,6 +73,9 @@ struct Measured {
     fleet_events: u64,
     fleet_wall_s: f64,
     fleet_events_per_sec: f64,
+    profile_tables: usize,
+    profile_wall_s: f64,
+    profile_tables_per_sec: f64,
 }
 
 fn measure(quick: bool, threads: usize) -> Result<Measured> {
@@ -142,10 +149,23 @@ fn measure(quick: bool, threads: usize) -> Result<Measured> {
         requests: if quick { 300 } else { 2_000 },
         seed: 42,
         chunk: 1024,
+        tables: None,
     };
     let t0 = Instant::now();
     let fleet = run_fleet(&fleet_cfg, threads)?;
     let fleet_wall_s = t0.elapsed().as_secs_f64();
+
+    // The offline fission profiler: exhaustive closed-form tile search
+    // over two zoo models on the base geometry (`mtsa profile`).
+    let profile_jobs = vec![
+        ("NCF".to_string(), geom),
+        ("MelodyLSTM".to_string(), geom),
+    ];
+    let t0 = Instant::now();
+    let profile_tables = crate::profiler::build_tables(&profile_jobs, &bufs, threads)
+        .map_err(anyhow::Error::msg)?
+        .len();
+    let profile_wall_s = t0.elapsed().as_secs_f64();
     b.finish();
 
     Ok(Measured {
@@ -161,13 +181,16 @@ fn measure(quick: bool, threads: usize) -> Result<Measured> {
         fleet_events: fleet.events,
         fleet_wall_s,
         fleet_events_per_sec: fleet.events as f64 / fleet_wall_s,
+        profile_tables,
+        profile_wall_s,
+        profile_tables_per_sec: profile_tables as f64 / profile_wall_s.max(1e-9),
     })
 }
 
 fn record_json(m: &Measured) -> Json {
     obj(vec![
         ("schema", Json::Num(BENCH_SCHEMA as f64)),
-        ("pr", Json::Num(7.0)),
+        ("pr", Json::Num(8.0)),
         ("provenance", Json::Str("measured".into())),
         ("tolerance_pct", Json::Num(100.0 * REGRESSION_TOLERANCE)),
         (
@@ -210,6 +233,14 @@ fn record_json(m: &Measured) -> Json {
                         ("events", Json::Num(m.fleet_events as f64)),
                         ("wall_s", Json::Num(m.fleet_wall_s)),
                         ("events_per_sec", Json::Num(m.fleet_events_per_sec)),
+                    ]),
+                ),
+                (
+                    "profiler_tables_per_sec",
+                    obj(vec![
+                        ("tables", Json::Num(m.profile_tables as f64)),
+                        ("wall_s", Json::Num(m.profile_wall_s)),
+                        ("tables_per_sec", Json::Num(m.profile_tables_per_sec)),
                     ]),
                 ),
             ]),
@@ -289,12 +320,12 @@ pub fn cmd_bench(args: &ParsedArgs) -> Result<()> {
     );
 
     if args.has("check") {
-        let baseline = args.opt("baseline").unwrap_or("BENCH_7.json");
+        let baseline = args.opt("baseline").unwrap_or("BENCH_8.json");
         check_against(baseline, &m)?;
     }
 
     if args.has("record") {
-        let out = args.opt("out").unwrap_or("BENCH_7.json");
+        let out = args.opt("out").unwrap_or("BENCH_8.json");
         let json = carry_forward_pre_pr(out, record_json(&m)).render();
         std::fs::write(out, &json).with_context(|| format!("writing {out}"))?;
         println!("wrote {out} ({} bytes, provenance \"measured\")", json.len());
@@ -329,10 +360,13 @@ mod tests {
         assert!(eng.get("events_per_run").unwrap().as_u64().unwrap() > 0);
         let sweep = parsed.get("scenarios").unwrap().get("sweep_point_light").unwrap();
         assert!(sweep.get("points_per_sec").unwrap().as_f64().unwrap() > 0.0);
-        assert_eq!(parsed.get("pr").and_then(Json::as_u64), Some(7));
+        assert_eq!(parsed.get("pr").and_then(Json::as_u64), Some(8));
         let fleet = parsed.get("scenarios").unwrap().get("fleet_events_per_sec").unwrap();
         assert!(fleet.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert!(fleet.get("events").unwrap().as_u64().unwrap() > 0);
+        let prof = parsed.get("scenarios").unwrap().get("profiler_tables_per_sec").unwrap();
+        assert_eq!(prof.get("tables").unwrap().as_u64(), Some(2));
+        assert!(prof.get("tables_per_sec").unwrap().as_f64().unwrap() > 0.0);
         let _ = std::fs::remove_file(&out);
     }
 
@@ -397,6 +431,9 @@ mod tests {
             fleet_events: 1,
             fleet_wall_s: 1.0,
             fleet_events_per_sec: 1.0,
+            profile_tables: 2,
+            profile_wall_s: 1.0,
+            profile_tables_per_sec: 2.0,
         };
         assert!(!check_against(base.to_str().unwrap(), &m).unwrap());
         let _ = std::fs::remove_file(&base);
@@ -423,6 +460,9 @@ mod tests {
             fleet_events: 1,
             fleet_wall_s: 1.0,
             fleet_events_per_sec: 1.0,
+            profile_tables: 2,
+            profile_wall_s: 1.0,
+            profile_tables_per_sec: 2.0,
         };
         assert!(check_against(base.to_str().unwrap(), &m).unwrap());
         m.events_per_sec = 800.0; // >15% below
@@ -446,6 +486,9 @@ mod tests {
             fleet_events: 1,
             fleet_wall_s: 1.0,
             fleet_events_per_sec: 1.0,
+            profile_tables: 2,
+            profile_wall_s: 1.0,
+            profile_tables_per_sec: 2.0,
         };
         assert!(check_against("/nonexistent/BENCH_6.json", &m).is_err());
     }

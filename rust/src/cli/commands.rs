@@ -33,14 +33,18 @@ USAGE:
        [--preempts off,arrival,deadline]
        [--bandwidths 8,32,128] [--arbitrations fair,weighted,priority]
        [--requests 12] [--slack 3.0] [--burst <size>]
-       [--fleet 4,8] [--seed 42] [--threads N] [--json <file>]
+       [--fleet 4,8] [--tables <dir>] [--seed 42] [--threads N]
+       [--json <file>]
   mtsa fleet                             serve a request stream on a cluster
        [--config <file>] [--instances 8] [--requests 1000000]
        [--mix heavy|light|model,...] [--mean <cycles>]
        [--policy dynamic|sequential|static|multi-array[:N]]
        [--placement least-loaded|affinity|random-k] [--slots 8] [--queue 64]
        [--amplitude 0.6] [--period <cycles>] [--seed 42]
-       [--threads N] [--json <file>]
+       [--tables <dir>] [--threads N] [--json <file>]
+  mtsa profile                           offline fission profiler (tables)
+       [--config <file>] [--models all|name,...] [--geoms 128,96x64]
+       [--out profiles] [--threads N]
   mtsa trace <heavy|light|model,...>     write Scale-Sim/Accelergy CSVs
        [--config <file>] [--out <dir>]
   mtsa area [--config <file>]            45nm area breakdown (Accelergy-style)
@@ -58,6 +62,7 @@ pub fn dispatch(args: &ParsedArgs) -> Result<()> {
         "run" => cmd_run(args),
         "sweep" => cmd_sweep(args),
         "fleet" => cmd_fleet(args),
+        "profile" => cmd_profile(args),
         "trace" => cmd_trace(args),
         "area" => cmd_area(args),
         "verify" => cmd_verify(args),
@@ -231,7 +236,7 @@ fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
         &[
             "config", "mixes", "rates", "policies", "feeds", "geoms", "modes", "preempts",
             "bandwidths", "arbitrations", "requests", "slack", "burst", "burst-within", "fleet",
-            "seed", "threads", "json",
+            "tables", "seed", "threads", "json",
         ],
         &[],
     )?;
@@ -299,6 +304,16 @@ fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
         if grid.fleet.iter().any(|&n| n == 0) {
             bail!("--fleet cluster sizes must be >= 1, got {:?}", grid.fleet);
         }
+    }
+    if let Some(dir) = args.opt("tables") {
+        // Profiled-vs-ladder comparison axis: every point runs once with
+        // the tables off and once consulting them.
+        grid.tables_store = Some(
+            crate::profiler::ProfileStore::load_arc(dir)
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("--tables {dir}"))?,
+        );
+        grid.tables = vec![false, true];
     }
     grid.requests = args.opt_u64("requests", grid.requests as u64)?.max(1) as usize;
     grid.seed = args.opt_u64("seed", grid.seed)?;
@@ -384,7 +399,7 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<()> {
     args.ensure_known(
         &[
             "config", "instances", "requests", "mix", "mean", "policy", "placement", "slots",
-            "queue", "amplitude", "period", "seed", "threads", "json",
+            "queue", "amplitude", "period", "seed", "tables", "threads", "json",
         ],
         &[],
     )?;
@@ -454,6 +469,17 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<()> {
         classes[0].slack = Some(cfg.scenario.qos_slack);
     }
 
+    // `--tables <dir>` / `[fleet] tables`: router horizon estimates come
+    // from the profiled totals (coverage-checked by the driver).
+    let tables = match args.opt("tables").map(str::to_string).or_else(|| d.tables.clone()) {
+        Some(dir) => Some(
+            crate::profiler::ProfileStore::load_arc(&dir)
+                .map_err(anyhow::Error::msg)
+                .with_context(|| format!("loading fleet tables from {dir}"))?,
+        ),
+        None => None,
+    };
+
     let fleet_cfg = FleetConfig {
         instances: FleetConfig::uniform(instances, &cfg.scheduler, policy),
         placement,
@@ -467,6 +493,7 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<()> {
         requests,
         seed,
         chunk: 8192,
+        tables,
     };
 
     let threads = match args.opt_u64("threads", 0)? {
@@ -501,6 +528,61 @@ fn cmd_fleet(args: &ParsedArgs) -> Result<()> {
         std::fs::write(path, &json).with_context(|| format!("writing {path}"))?;
         println!("wrote {path} ({} bytes; same seed => identical bytes)", json.len());
     }
+    Ok(())
+}
+
+/// `mtsa profile` — build offline fission tables: exhaustively search
+/// tile shapes per layer (closed-form pricing, no simulation) for each
+/// requested (model, geometry) pair and persist the summary table +
+/// per-candidate report under `--out`.
+fn cmd_profile(args: &ParsedArgs) -> Result<()> {
+    args.ensure_known(&["config", "models", "geoms", "out", "threads"], &[])?;
+    let cfg = load_config(args)?;
+    let names: Vec<String> = match args.opt("models").unwrap_or("all") {
+        "all" => models::ZOO.iter().map(|e| e.name.to_string()).collect(),
+        list => parse_list::<String>(list, "models")?,
+    };
+    let geoms: Vec<ArrayGeometry> = match args.opt("geoms") {
+        Some(v) => parse_list::<ArrayGeometry>(v, "geoms")?,
+        None => vec![cfg.scheduler.geom],
+    };
+    let out = PathBuf::from(args.opt("out").unwrap_or("profiles"));
+    let threads = match args.opt_u64("threads", 0)? {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        n => n as usize,
+    };
+
+    let jobs: Vec<(String, ArrayGeometry)> = names
+        .iter()
+        .flat_map(|n| geoms.iter().map(move |&g| (n.clone(), g)))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let tables = crate::profiler::build_tables(&jobs, &cfg.scheduler.buffers, threads)
+        .map_err(anyhow::Error::msg)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(&["model", "geom", "layers", "hash", "table"]);
+    for table in &tables {
+        let file = crate::profiler::write_artifacts(table, &cfg.scheduler.buffers, &out)
+            .map_err(anyhow::Error::msg)?;
+        t.row(&[
+            table.model.clone(),
+            format!("{}x{}", table.geom.rows, table.geom.cols),
+            table.layers.len().to_string(),
+            table.hash.clone(),
+            file,
+        ]);
+    }
+    println!(
+        "profiled {} (model, geometry) pairs in {:.2}s ({:.1} tables/s, {} threads) -> {}",
+        tables.len(),
+        wall_s,
+        tables.len() as f64 / wall_s.max(1e-9),
+        threads,
+        out.display(),
+    );
+    println!("{}", t.render());
+    println!("use with: [partition] tables / [fleet] tables, or --tables {}", out.display());
     Ok(())
 }
 
@@ -815,5 +897,56 @@ mod tests {
         assert_eq!(points.len(), 2 * 2 * 2, "policies x bandwidths x arbitrations");
         assert!(points.iter().all(|p| p.get("mem").is_some()));
         let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn profile_writes_tables_the_sweep_can_consume() {
+        let dir = std::env::temp_dir().join(format!("mtsa-profcli-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let args = ParsedArgs::parse(&[
+            "profile".into(),
+            "--models".into(),
+            "NCF".into(),
+            "--out".into(),
+            dir.to_string_lossy().into_owned(),
+            "--threads".into(),
+            "2".into(),
+        ])
+        .unwrap();
+        dispatch(&args).unwrap();
+        assert!(dir.join("ncf_128x128.table.json").is_file());
+        assert!(dir.join("ncf_128x128.report.csv").is_file());
+        // The written directory round-trips through the sweep flag.
+        let out = std::env::temp_dir().join(format!("mtsa-profcli-{}.json", std::process::id()));
+        let sweep = ParsedArgs::parse(&[
+            "sweep".into(),
+            "--mixes".into(),
+            "NCF".into(),
+            "--rates".into(),
+            "0".into(),
+            "--policies".into(),
+            "widest".into(),
+            "--feeds".into(),
+            "independent".into(),
+            "--modes".into(),
+            "2d".into(),
+            "--requests".into(),
+            "3".into(),
+            "--tables".into(),
+            dir.to_string_lossy().into_owned(),
+            "--threads".into(),
+            "2".into(),
+            "--json".into(),
+            out.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        dispatch(&sweep).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let points = parsed.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(points.len(), 2, "off/on pair");
+        assert!(text.contains("\"tables_axis\":[false,true]"), "{text}");
+        let _ = std::fs::remove_file(&out);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

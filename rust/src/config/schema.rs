@@ -25,6 +25,9 @@
 //! min_rows = 16            # shortest tile 2d mode will create
 //! preempt = "off"          # off | arrival | deadline — fold-boundary
 //!                          # drain-and-reshape, see docs/preemption.md
+//! # tables = "profiles/"   # optional `mtsa profile` output dir: 2d mode
+//!                          # unions the profiled shapes with its ladder
+//!                          # (see docs/profiling.md)
 //!
 //! [dram]
 //! enabled = false
@@ -180,6 +183,9 @@ pub struct FleetDefaults {
     pub diurnal_period: f64,
     /// Diurnal swing in `[0, 1)`; 0 disables the modulation.
     pub diurnal_amplitude: f64,
+    /// `mtsa profile` output dir the router prices isolated-run horizons
+    /// from (loaded per `mtsa fleet` invocation; `None` = compute live).
+    pub tables: Option<String>,
 }
 
 impl Default for FleetDefaults {
@@ -195,6 +201,7 @@ impl Default for FleetDefaults {
             seed: 42,
             diurnal_period: 0.0,
             diurnal_amplitude: 0.6,
+            tables: None,
         }
     }
 }
@@ -302,6 +309,13 @@ impl RunConfig {
         }
         if let Some(p) = doc.get("partition", "preempt").and_then(|v| v.as_str()) {
             cfg.scheduler.preempt = p.parse::<PreemptMode>().context("in [partition] preempt")?;
+        }
+        if let Some(dir) = doc.get("partition", "tables").and_then(|v| v.as_str()) {
+            cfg.scheduler.tables = Some(
+                crate::profiler::ProfileStore::load_arc(dir)
+                    .map_err(anyhow::Error::msg)
+                    .context("in [partition] tables")?,
+            );
         }
 
         if doc.get("dram", "enabled").and_then(|v| v.as_bool()).unwrap_or(false) {
@@ -439,6 +453,12 @@ impl RunConfig {
             }
             fl.diurnal_amplitude = a;
         }
+        if let Some(dir) = doc.get("fleet", "tables").and_then(|v| v.as_str()) {
+            // Kept as a path: `mtsa fleet` loads (and coverage-checks) the
+            // store per invocation, so a config can reference a tables dir
+            // that is rebuilt between runs.
+            fl.tables = Some(dir.to_string());
+        }
 
         Ok(cfg)
     }
@@ -531,6 +551,29 @@ mod tests {
     }
 
     #[test]
+    fn partition_tables_load_from_a_profile_dir() {
+        use crate::profiler::{build_tables, write_artifacts};
+        use crate::sim::dataflow::ArrayGeometry;
+        let dir = std::env::temp_dir().join(format!("mtsa-cfg-prof-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let bufs = crate::sim::buffers::BufferConfig::default();
+        let tables =
+            build_tables(&[("NCF".into(), ArrayGeometry::new(128, 128))], &bufs, 1).unwrap();
+        write_artifacts(&tables[0], &bufs, &dir).unwrap();
+        let toml = format!("[partition]\nmode = \"2d\"\ntables = {:?}", dir.display().to_string());
+        let cfg = RunConfig::from_toml(&toml).unwrap();
+        let store = cfg.scheduler.tables.expect("tables loaded");
+        assert!(store.has_geometry(ArrayGeometry::new(128, 128)));
+        let _ = std::fs::remove_dir_all(&dir);
+        // A missing dir is rejected at parse time, naming the knob.
+        let e = RunConfig::from_toml("[partition]\ntables = \"/nonexistent-mtsa-tables\"")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("[partition] tables"), "{e:#}");
+        // Unset keeps the scheduler table-free (byte-stability contract).
+        assert!(RunConfig::from_toml("").unwrap().scheduler.tables.is_none());
+    }
+
+    #[test]
     fn mem_section_round_trip() {
         let cfg = RunConfig::from_toml(
             r#"
@@ -617,10 +660,12 @@ mod tests {
             seed = 9
             diurnal_period = 1e9
             diurnal_amplitude = 0.4
+            tables = "profiles"
             "#,
         )
         .unwrap();
         let fl = &cfg.fleet;
+        assert_eq!(fl.tables.as_deref(), Some("profiles"));
         assert_eq!(fl.instances, 16);
         assert_eq!(fl.policy, FleetPolicy::MultiArray(2));
         assert_eq!(fl.placement, Placement::Affinity);

@@ -30,6 +30,7 @@ use std::str::FromStr;
 use super::metrics::RunMetrics;
 use super::partition::AllocId;
 use crate::mem::{MemConfig, MemSpec};
+use crate::profiler::ProfileStore;
 use crate::sim::activity::Activity;
 use crate::sim::buffers::BufferConfig;
 use crate::sim::dataflow::{next_fold_boundary, ArrayGeometry};
@@ -258,6 +259,12 @@ pub struct SchedulerConfig {
     /// cross-tenant bandwidth arbitration + banked buffer allocation on
     /// the engine.  Subsumes `dram`.
     pub mem: Option<MemConfig>,
+    /// Offline profile tables (`[partition] tables = <dir>` /
+    /// `mtsa profile`): the `2d` planner unions each layer's profiled
+    /// exact-fit shapes with its online pow-2 height ladder, so it can
+    /// fill non-pow-2 free rectangles the ladder must round down from.
+    /// `None` (the default) keeps the ladder-only planner bit for bit.
+    pub tables: Option<std::sync::Arc<ProfileStore>>,
 }
 
 impl Default for SchedulerConfig {
@@ -275,6 +282,7 @@ impl Default for SchedulerConfig {
             patience_divisor: 4,
             dram: None,
             mem: None,
+            tables: None,
         }
     }
 }
@@ -745,6 +753,7 @@ impl DynamicScheduler {
         let (min_width, min_rows) = (self.cfg.min_width, self.cfg.min_rows);
         let patience = self.cfg.patience_divisor;
         let alloc_policy = self.cfg.alloc_policy;
+        let tables = self.cfg.tables.clone();
         let n_avail = ready.len() as u64 + pm.allocated_count() as u64;
         let target = floor_pow2((geom.cols / n_avail).max(1)).clamp(min_width, geom.cols);
 
@@ -799,6 +808,30 @@ impl DynamicScheduler {
                         break;
                     }
                     h /= 2;
+                }
+                // Offline profile tables: union the layer's profiled
+                // exact-fit shapes with the pow-2 ladder above.  Same
+                // pricing call, same best key, so the plan can only
+                // improve; anything the table lacks (preempted remnants
+                // hash to a different K) falls back to the ladder.
+                let Some(store) = tables.as_deref() else { continue };
+                for c in store.candidates(geom, gemm.k, gemm.m) {
+                    if c.rows < min_rows
+                        || c.cols < min_width
+                        || c.rows > rect.rows
+                        || c.cols > rect.cols
+                        || c.cols > demand_w
+                    {
+                        continue;
+                    }
+                    let tile = Tile::new(rect.row0, rect.col0, c.rows, c.cols);
+                    let cycles =
+                        tile_layer_timing(geom, gemm, tile, FeedPolicy::Independent, &buffers)
+                            .cycles;
+                    let key = (cycles, tile.pes(), tile.row0, tile.col0);
+                    if best.map(|(bk, _)| key < bk).unwrap_or(true) {
+                        best = Some((key, tile));
+                    }
                 }
             }
             let Some(((cycles, ..), want)) = best else { continue };
@@ -1304,6 +1337,74 @@ mod tests {
         assert_eq!(widest.makespan, aware.makespan);
         assert_eq!(widest.dispatches, aware.dispatches);
         assert!(aware.mem.is_empty(), "no [mem] => no mem stats");
+    }
+
+    #[test]
+    fn profile_tables_without_matching_shapes_change_nothing() {
+        // A store that covers a *different* geometry contributes zero
+        // candidates, so the 2d plan must stay bitwise identical to the
+        // ladder-only plan (the `tables = None` byte-stability contract,
+        // exercised through the union path rather than around it).
+        use crate::profiler::{ProfileStore, ProfileTable};
+        let pool = WorkloadPool::new(
+            "t",
+            vec![fc_dnn("a", &[64, 300, 64], 0), fc_dnn("b", &[256, 80], 1_500)],
+        );
+        let other_geom = ArrayGeometry::new(64, 64);
+        let table =
+            ProfileTable::build("a", &fc_dnn("a", &[64, 300, 64], 0), other_geom, &BufferConfig::default());
+        let store = std::sync::Arc::new(ProfileStore::from_tables("test", vec![table]));
+        let base_cfg = SchedulerConfig {
+            partition_mode: PartitionMode::TwoD,
+            ..Default::default()
+        };
+        let with_tables =
+            SchedulerConfig { tables: Some(store), ..base_cfg.clone() };
+        let plain = DynamicScheduler::new(base_cfg).run(&pool);
+        let tabled = DynamicScheduler::new(with_tables).run(&pool);
+        assert_eq!(plain.makespan, tabled.makespan);
+        assert_eq!(plain.dispatches, tabled.dispatches);
+    }
+
+    #[test]
+    fn profile_tables_beat_the_pow2_ladder_on_a_non_pow2_array() {
+        // 96 array rows, K = 1152: the ladder rounds every free rectangle
+        // down to 64 rows (FK = 18); the profiled exact-fit 96-row shape
+        // reaches FK = 12.  Two equal-share tenants side by side, so the
+        // full-array fast path never hides the ladder.
+        use crate::profiler::{ProfileStore, ProfileTable};
+        let geom = ArrayGeometry::new(96, 128);
+        let mk = |name: &str| {
+            let layers = (0..3)
+                .map(|i| {
+                    Layer::new(&format!("l{i}"), LayerKind::Fc, LayerShape::fc(2_000, 1_152, 384))
+                })
+                .collect();
+            Dnn::chain(name, layers).arriving_at(0)
+        };
+        let pool = WorkloadPool::new("t", vec![mk("a"), mk("b")]);
+        let bufs = BufferConfig::default();
+        let table = ProfileTable::build("a", &mk("a"), geom, &bufs);
+        let store = std::sync::Arc::new(ProfileStore::from_tables("test", vec![table]));
+        let base_cfg = SchedulerConfig {
+            geom,
+            partition_mode: PartitionMode::TwoD,
+            alloc_policy: AllocPolicy::EqualShare,
+            ..Default::default()
+        };
+        let with_tables =
+            SchedulerConfig { tables: Some(store), ..base_cfg.clone() };
+        let ladder = DynamicScheduler::new(base_cfg).run(&pool);
+        let tabled = DynamicScheduler::new(with_tables).run(&pool);
+        assert!(
+            tabled.makespan < ladder.makespan,
+            "tables {} should beat ladder {}",
+            tabled.makespan,
+            ladder.makespan
+        );
+        // The win comes from a shape the pow-2 ladder cannot express.
+        assert!(tabled.dispatches.iter().any(|d| d.tile.rows == 96), "{:?}", tabled.dispatches);
+        assert!(ladder.dispatches.iter().all(|d| d.tile.rows.is_power_of_two()));
     }
 
     #[test]

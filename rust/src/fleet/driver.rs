@@ -90,6 +90,37 @@ pub fn run_fleet(cfg: &FleetConfig, threads: usize) -> Result<FleetReport> {
     let mut pick_rng = master.fork();
     let router_rng = master.fork();
 
+    // Profile tables must cover the whole fleet before any simulation:
+    // a partial store would silently fall back mid-run, so reject it
+    // here with the missing (geometry, model) named.
+    if let Some(store) = &cfg.tables {
+        for ic in &cfg.instances {
+            let geom = ic.sched.geom;
+            if !store.has_geometry(geom) {
+                bail!(
+                    "fleet tables ({}) have no profile for instance {:?} geometry {}x{} \
+                     — run `mtsa profile` for that geometry",
+                    store.origin,
+                    ic.name,
+                    geom.rows,
+                    geom.cols
+                );
+            }
+            for i in 0..cfg.mix.len() {
+                let name = cfg.mix.name(i);
+                if store.totals(geom, name).is_none() {
+                    bail!(
+                        "fleet tables ({}) cover geometry {}x{} but not mix model {name:?} \
+                         — run `mtsa profile` for that model",
+                        store.origin,
+                        geom.rows,
+                        geom.cols
+                    );
+                }
+            }
+        }
+    }
+
     let arrays = cfg.instances.iter().map(|ic| (ic.sched.geom, ic.sched.buffers)).collect();
     let mut router = Router::new(
         templates,
@@ -99,6 +130,9 @@ pub fn run_fleet(cfg: &FleetConfig, threads: usize) -> Result<FleetReport> {
         cfg.classes.clone(),
         router_rng,
     );
+    if let Some(store) = &cfg.tables {
+        router = router.with_tables(store.clone());
+    }
     let instances: Vec<Mutex<Instance>> = cfg
         .instances
         .iter()
@@ -250,6 +284,7 @@ mod tests {
             requests,
             seed,
             chunk: 64,
+            tables: None,
         }
     }
 
@@ -281,6 +316,54 @@ mod tests {
             assert_eq!(r.makespan, base.makespan, "chunk {chunk}");
             assert_eq!(r.batches, base.batches, "chunk {chunk}");
         }
+    }
+
+    fn mix_store(
+        geoms: &[crate::sim::dataflow::ArrayGeometry],
+    ) -> std::sync::Arc<crate::profiler::ProfileStore> {
+        use crate::profiler::{ProfileStore, ProfileTable};
+        let bufs = crate::sim::buffers::BufferConfig::default();
+        let mut tables = Vec::new();
+        for &geom in geoms {
+            for name in ["NCF", "MelodyLSTM"] {
+                let dnn = (models::by_name(name).unwrap().build)();
+                tables.push(ProfileTable::build(name, &dnn, geom, &bufs));
+            }
+        }
+        std::sync::Arc::new(ProfileStore::from_tables("test", tables))
+    }
+
+    #[test]
+    fn tables_leave_every_fleet_byte_unchanged() {
+        let base = run_fleet(&small_cfg(150, 7), 2).unwrap();
+        let mut cfg = small_cfg(150, 7);
+        cfg.tables = Some(mix_store(&[SchedulerConfig::default().geom]));
+        let tabled = run_fleet(&cfg, 2).unwrap();
+        assert_eq!(tabled.completed, base.completed);
+        assert_eq!(tabled.dropped, base.dropped);
+        assert_eq!(tabled.makespan, base.makespan);
+        assert_eq!(tabled.batches, base.batches);
+        assert_eq!(
+            crate::report::fleet_json(&tabled).render(),
+            crate::report::fleet_json(&base).render(),
+            "table-priced routing must be byte-identical"
+        );
+    }
+
+    #[test]
+    fn tables_missing_coverage_fail_fast_and_name_the_gap() {
+        // Wrong geometry: named per instance.
+        let mut cfg = small_cfg(10, 1);
+        cfg.tables = Some(mix_store(&[crate::sim::dataflow::ArrayGeometry::new(64, 64)]));
+        let err = run_fleet(&cfg, 1).unwrap_err().to_string();
+        assert!(err.contains("geometry 128x128"), "{err}");
+        assert!(err.contains("mtsa profile"), "{err}");
+        // Right geometry, missing mix model: named too.
+        let mut cfg = small_cfg(10, 1);
+        cfg.mix = ModelMix::new(&[("NCF", 1.0), ("AlexNet", 1.0)]);
+        cfg.tables = Some(mix_store(&[SchedulerConfig::default().geom]));
+        let err = run_fleet(&cfg, 1).unwrap_err().to_string();
+        assert!(err.contains("AlexNet"), "{err}");
     }
 
     #[test]

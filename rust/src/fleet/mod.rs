@@ -264,6 +264,12 @@ pub struct FleetConfig {
     /// Arrivals generated per streaming chunk — bounds peak memory
     /// independent of `requests`.
     pub chunk: usize,
+    /// Offline profile tables (`[fleet] tables = <dir>`): the router
+    /// prices isolated-run horizons from table totals instead of
+    /// re-summing layer timings.  Exactly equal by construction, so the
+    /// report bytes do not change; the driver rejects stores missing an
+    /// instance's geometry or a mix model up front.
+    pub tables: Option<std::sync::Arc<crate::profiler::ProfileStore>>,
 }
 
 impl FleetConfig {
@@ -365,6 +371,7 @@ mod tests {
             requests: 100,
             seed: 1,
             chunk: 64,
+            tables: None,
         };
         assert!(cfg.validate().is_ok());
         cfg.requests = 0;

@@ -18,10 +18,12 @@
 //! actual geometry — so heterogeneous fleets are scored fairly.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::coordinator::scenario::deadline_cycle;
+use crate::profiler::{isolated_cycles, ProfileStore};
 use crate::sim::buffers::BufferConfig;
-use crate::sim::dataflow::{baseline_layer_timing, ArrayGeometry};
+use crate::sim::dataflow::ArrayGeometry;
 use crate::util::rng::Rng;
 use crate::workloads::dnng::Dnn;
 
@@ -80,6 +82,9 @@ pub struct Router {
     batch_seq: u64,
     /// Isolated-cycles memo keyed `(model, batch_k, rows, cols)`.
     iso_cache: BTreeMap<(usize, u64, u64, u64), u64>,
+    /// Offline profile tables: cache misses read the precomputed
+    /// `iso_a + batch·iso_b` totals instead of re-summing layer timings.
+    tables: Option<Arc<ProfileStore>>,
     /// Batches dispatched so far.
     pub batches: u64,
 }
@@ -107,8 +112,18 @@ impl Router {
             open: BTreeMap::new(),
             batch_seq: 0,
             iso_cache: BTreeMap::new(),
+            tables: None,
             batches: 0,
         }
+    }
+
+    /// Consult profile tables for isolated-run totals.  The table total
+    /// equals the closed-form loop exactly (pinned in
+    /// [`crate::profiler::table`]'s tests), so routing bytes do not
+    /// change — only the per-miss cost does.
+    pub fn with_tables(mut self, tables: Arc<ProfileStore>) -> Router {
+        self.tables = Some(tables);
+        self
     }
 
     /// Isolated cycles of model `model` at batch multiplier `k` on
@@ -121,12 +136,15 @@ impl Router {
         if let Some(&c) = self.iso_cache.get(&key) {
             return c;
         }
-        let mut cycles = 0u64;
-        for l in &self.templates[model].layers {
-            let mut shape = l.shape;
-            shape.n *= k;
-            cycles = cycles.saturating_add(baseline_layer_timing(geom, shape.gemm(), &bufs).cycles);
-        }
+        // One pricing path for every miss: profiled totals when a table
+        // covers this (model, geometry), the shared closed-form loop in
+        // [`isolated_cycles`] otherwise.
+        let cycles = self
+            .tables
+            .as_deref()
+            .and_then(|s| s.totals(geom, &self.templates[model].name))
+            .map(|(a, b)| a.saturating_add(b.saturating_mul(k)))
+            .unwrap_or_else(|| isolated_cycles(geom, &bufs, &self.templates[model], k));
         self.iso_cache.insert(key, cycles);
         cycles
     }
@@ -396,6 +414,29 @@ mod tests {
         };
         assert_eq!(run(11), run(11), "same seed, same placements");
         assert_ne!(run(11), run(12), "different seed explores differently");
+    }
+
+    #[test]
+    fn tables_price_isolated_runs_identically() {
+        use crate::profiler::{ProfileStore, ProfileTable};
+        let geom = ArrayGeometry::new(128, 128);
+        let bufs = BufferConfig::default();
+        let tabs: Vec<ProfileTable> = ["NCF", "MelodyLSTM"]
+            .iter()
+            .map(|n| ProfileTable::build(n, &(models::by_name(n).unwrap().build)(), geom, &bufs))
+            .collect();
+        let store = Arc::new(ProfileStore::from_tables("test", tabs));
+        let drive = |mut r: Router| {
+            let mut out = Vec::new();
+            for t in 0..30u64 {
+                r.offer(t * 2_000, (t % 2) as usize, SloClass::ALL[(t % 3) as usize], &mut out);
+            }
+            r.finish(&mut out);
+            out.iter().map(|a| (a.instance, a.t, a.batch.engine_deadline)).collect::<Vec<_>>()
+        };
+        let plain = drive(router(Placement::Affinity));
+        let tabled = drive(router(Placement::Affinity).with_tables(store));
+        assert_eq!(plain, tabled, "table totals must not change a single routing decision");
     }
 
     #[test]

@@ -39,6 +39,8 @@ pub mod coordinator;
 
 pub mod fleet;
 
+pub mod profiler;
+
 pub mod report;
 
 pub mod sweep;

@@ -1,0 +1,156 @@
+//! Offline fission profiler — the `mtsa profile` subsystem.
+//!
+//! Planaria (MICRO'20) profiles each layer's optimal fission *offline*
+//! and schedules from the resulting tables; this module does the same for
+//! the closed-form weight-stationary model.  For every (model, geometry)
+//! pair it exhaustively searches tile shapes × bank grants per layer
+//! using the analytic pricing (`layer_timing_tile_with_share` — no
+//! simulation), and persists:
+//!
+//! - a compact summary table ([`ProfileTable`], `*.table.json`) the
+//!   schedulers consult at plan time, and
+//! - a comprehensive per-candidate report (`*.report.csv`) with the
+//!   bank-grant sensitivity sweep (cycles, refetch words, stall proxy,
+//!   energy).
+//!
+//! Consumers:
+//!
+//! - the dynamic policy's `2d` mode ([`SchedulerConfig::tables`]) unions
+//!   the table's exact-fit shapes with its online pow-2 ladder — never
+//!   worse than the ladder, and byte-identical to it when unset;
+//! - the fleet router ([`FleetConfig::tables`]) reads isolated-run
+//!   horizon estimates from the table totals (`iso_a + batch·iso_b`)
+//!   instead of re-summing per-layer baselines — exactly equal by
+//!   construction, so fleet output bytes do not change.
+//!
+//! Tables are versioned and carry a content hash of (model, geometry,
+//! layer GEMMs); [`ProfileStore::load`] rejects stale tables with an
+//! error naming the model.
+//!
+//! [`SchedulerConfig::tables`]: crate::coordinator::scheduler::SchedulerConfig
+//! [`FleetConfig::tables`]: crate::fleet::FleetConfig
+
+pub mod search;
+pub mod table;
+
+pub use search::{enumerate_candidates, TileCandidate, CANDIDATE_CAP};
+pub use table::{
+    content_hash, isolated_cycles, LayerProfile, ProfileStore, ProfileTable, GRANT_LEVELS,
+    PROFILE_SCHEMA,
+};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::sim::buffers::BufferConfig;
+use crate::sim::dataflow::ArrayGeometry;
+use crate::workloads::models;
+
+/// Build profile tables for `model × geometry` jobs on up to `threads`
+/// workers.  Table construction is pure per job and results are returned
+/// in job order, so the output (and any file written from it) is
+/// byte-identical at every thread count — the same claim-by-atomic-index
+/// pattern as the sweep runner.
+pub fn build_tables(
+    jobs: &[(String, ArrayGeometry)],
+    bufs: &BufferConfig,
+    threads: usize,
+) -> Result<Vec<ProfileTable>, String> {
+    // Resolve names up front so a typo fails before any work.
+    let mut resolved = Vec::with_capacity(jobs.len());
+    for (name, geom) in jobs {
+        let entry = models::by_name(name)
+            .ok_or_else(|| format!("unknown model {name:?} (see `mtsa zoo`)"))?;
+        resolved.push((entry, *geom));
+    }
+    let slots: Mutex<Vec<Option<ProfileTable>>> = Mutex::new(vec![None; resolved.len()]);
+    let next = AtomicUsize::new(0);
+    let workers = threads.clamp(1, resolved.len().max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= resolved.len() {
+                    break;
+                }
+                let (entry, geom) = resolved[i];
+                let table = ProfileTable::build(entry.name, &(entry.build)(), geom, bufs);
+                slots.lock().unwrap()[i] = Some(table);
+            });
+        }
+    });
+    Ok(slots.into_inner().unwrap().into_iter().map(|t| t.expect("worker filled slot")).collect())
+}
+
+/// Write a table's two artifacts under `dir`; returns the summary-table
+/// file name.
+pub fn write_artifacts(
+    table: &ProfileTable,
+    bufs: &BufferConfig,
+    dir: &std::path::Path,
+) -> Result<String, String> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| format!("cannot create profile dir {}: {e}", dir.display()))?;
+    let stem = table.stem();
+    let json_path = dir.join(format!("{stem}.table.json"));
+    std::fs::write(&json_path, table.to_json().render() + "\n")
+        .map_err(|e| format!("cannot write {}: {e}", json_path.display()))?;
+    let csv_path = dir.join(format!("{stem}.report.csv"));
+    std::fs::write(&csv_path, table.report_csv(bufs))
+        .map_err(|e| format!("cannot write {}: {e}", csv_path.display()))?;
+    Ok(format!("{stem}.table.json"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_tables_rejects_unknown_models_by_name() {
+        let jobs = vec![("Nonesuch".to_string(), ArrayGeometry::new(128, 128))];
+        let err = build_tables(&jobs, &BufferConfig::default(), 2).unwrap_err();
+        assert!(err.contains("Nonesuch"), "{err}");
+    }
+
+    #[test]
+    fn build_tables_is_thread_count_invariant() {
+        let jobs: Vec<(String, ArrayGeometry)> = ["NCF", "MelodyLSTM", "AlexNet"]
+            .iter()
+            .flat_map(|m| {
+                [ArrayGeometry::new(128, 128), ArrayGeometry::new(96, 64)]
+                    .map(|g| (m.to_string(), g))
+            })
+            .collect();
+        let bufs = BufferConfig::default();
+        let one = build_tables(&jobs, &bufs, 1).unwrap();
+        let four = build_tables(&jobs, &bufs, 4).unwrap();
+        assert_eq!(one.len(), jobs.len());
+        let render = |ts: &[ProfileTable]| -> Vec<String> {
+            ts.iter().map(|t| t.to_json().render()).collect()
+        };
+        assert_eq!(render(&one), render(&four));
+    }
+
+    #[test]
+    fn artifacts_round_trip_through_the_store() {
+        let dir = std::env::temp_dir().join(format!("mtsa-prof-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let bufs = BufferConfig::default();
+        let tables =
+            build_tables(&[("NCF".into(), ArrayGeometry::new(128, 128))], &bufs, 1).unwrap();
+        write_artifacts(&tables[0], &bufs, &dir).unwrap();
+        let store = ProfileStore::load(&dir).unwrap();
+        assert_eq!(store.tables().len(), 1);
+        assert_eq!(store.tables()[0], tables[0]);
+        // Tampering with the stored hash is caught at load, naming the model.
+        let path = dir.join(format!("{}.table.json", tables[0].stem()));
+        let tampered = std::fs::read_to_string(&path)
+            .unwrap()
+            .replace(&tables[0].hash, "0000000000000000");
+        std::fs::write(&path, tampered).unwrap();
+        let err = ProfileStore::load(&dir).unwrap_err();
+        assert!(err.contains("stale profile table"), "{err}");
+        assert!(err.contains("NCF"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

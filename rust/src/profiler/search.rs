@@ -1,0 +1,200 @@
+//! The offline fission search: enumerate the useful tile shapes of one
+//! lowered GEMM on one array geometry.
+//!
+//! The closed-form timing of a tile at the array origin is *linear in the
+//! stream length*: for a `[Sr, K] × [K, M]` GEMM on a `rows × cols` tile
+//! placed at `(row0, col0)`,
+//!
+//! ```text
+//! cycles = FM·K + FK·M + FK·FM·(row0 + Sr + H + col0 − 1)
+//!        = a + b·(Sr + row0 + col0)
+//! a      = FM·K + FK·M + FK·FM·(H − 1)      (H = physical array rows)
+//! b      = FK·FM
+//! ```
+//!
+//! so a candidate is fully described by `(rows, cols, a, b)` and stays
+//! valid for *any* batch size (fleet batching multiplies `N`, hence `Sr`,
+//! leaving `FK`/`FM` untouched) and any placement offset.  The search
+//! space collapses accordingly: only tile heights that change `FK` and
+//! widths that change `FM` matter, and the minimal height per `FK` (resp.
+//! width per `FM`) dominates every taller/wider tile with the same fold
+//! count.  That is `O(√K · √M)` shapes instead of `rows × cols`.
+//!
+//! The equality `cycles == a + b·(sr + row0 + col0)` against the real
+//! pricing function [`layer_timing_tile_with_share`] is pinned by
+//! `tests::candidates_match_closed_form_pricing` — the table never
+//! disagrees with what the scheduler would compute online.
+//!
+//! [`layer_timing_tile_with_share`]: crate::sim::dataflow::layer_timing_tile_with_share
+
+use crate::sim::dataflow::ArrayGeometry;
+use crate::util::ceil_div;
+
+/// Candidates kept per layer after ranking.  The scheduler unions the
+/// table with its pow-2 ladder at plan time, so the cap trades table size
+/// against coverage of small free rectangles — the ladder backstops
+/// whatever the cap drops.
+pub const CANDIDATE_CAP: usize = 64;
+
+/// One profiled tile shape: a `rows × cols` tile whose origin-placed
+/// cycle count is `a + b·sr` (see the module doc for the offset form).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileCandidate {
+    pub rows: u64,
+    pub cols: u64,
+    /// Stream-independent cycle intercept.
+    pub a: u64,
+    /// Cycles per stream row (`FK·FM`).
+    pub b: u64,
+}
+
+impl TileCandidate {
+    /// Cycles of this shape placed at `(row0, col0)` for stream length
+    /// `sr` — the exact closed form, reusable without re-deriving folds.
+    pub fn cycles(&self, sr: u64, row0: u64, col0: u64) -> u64 {
+        self.a.saturating_add(self.b.saturating_mul(sr.saturating_add(row0).saturating_add(col0)))
+    }
+}
+
+/// Distinct values of `min(⌈dim/f⌉, cap)` for `f = 1, 2, …`, descending —
+/// the only tile extents that change the fold count along one axis.
+/// Classic divisor-jump enumeration: `O(√dim)` values, no scan.
+fn fold_extents(dim: u64, cap: u64) -> Vec<u64> {
+    debug_assert!(dim > 0 && cap > 0);
+    let mut out = Vec::new();
+    let mut f = 1u64;
+    loop {
+        let v = ceil_div(dim, f).min(cap);
+        out.push(v);
+        if v == 1 {
+            break;
+        }
+        // Smallest f' with ⌈dim/f'⌉ ≤ v − 1.
+        f = ceil_div(dim, v - 1);
+    }
+    out
+}
+
+/// Enumerate the candidate tile shapes of a `[*, K] × [K, M]` GEMM on
+/// `geom`: every (minimal-height per `FK`) × (minimal-width per `FM`)
+/// pair, ranked by origin-placed cycles at reference stream length
+/// `ref_sr` and capped at [`CANDIDATE_CAP`].  The result is sorted by
+/// `(rows, cols)` — a deterministic storage order independent of the
+/// ranking's tie behaviour.
+pub fn enumerate_candidates(geom: ArrayGeometry, k: u64, m: u64, ref_sr: u64) -> Vec<TileCandidate> {
+    assert!(k > 0 && m > 0, "degenerate GEMM [{k} x {m}]");
+    let heights = fold_extents(k, geom.rows);
+    let widths = fold_extents(m, geom.cols);
+    let mut cands = Vec::with_capacity(heights.len() * widths.len());
+    for &h in &heights {
+        let fk = ceil_div(k, h);
+        for &w in &widths {
+            let fm = ceil_div(m, w);
+            let b = fk * fm;
+            let a = fm * k + fk * m + b * (geom.rows - 1);
+            cands.push(TileCandidate { rows: h, cols: w, a, b });
+        }
+    }
+    // Keep the shapes that price fastest at the profiled batch size
+    // (ties: fewest PEs, then smallest dims — all integer, fully
+    // deterministic).  Larger tiles are never slower than smaller ones,
+    // so this keeps a usable spread of footprints, not just one winner.
+    cands.sort_by_key(|c| (c.cycles(ref_sr, 0, 0), c.rows * c.cols, c.rows, c.cols));
+    cands.truncate(CANDIDATE_CAP);
+    cands.sort_by_key(|c| (c.rows, c.cols, c.a, c.b));
+    cands
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::buffers::BufferConfig;
+    use crate::sim::dataflow::layer_timing_tile_with_share;
+    use crate::sim::partitioned::Tile;
+    use crate::util::prop;
+    use crate::workloads::shapes::GemmDims;
+
+    #[test]
+    fn fold_extents_are_distinct_and_descending() {
+        assert_eq!(fold_extents(10, 128), vec![10, 5, 4, 3, 2, 1]);
+        assert_eq!(fold_extents(1, 128), vec![1]);
+        // Values above the cap collapse to it exactly once.
+        assert_eq!(fold_extents(10, 4), vec![4, 3, 2, 1]);
+        prop::check("fold extents distinct + cover every fold count", 50, |rng| {
+            let dim = rng.gen_range_inclusive(1, 10_000);
+            let cap = rng.gen_range_inclusive(1, 256);
+            let ext = fold_extents(dim, cap);
+            for w in ext.windows(2) {
+                prop::ensure(w[0] > w[1], "descending distinct")?;
+            }
+            // Minimality: shrinking any extent by one changes the fold count.
+            for &v in &ext {
+                if v > 1 {
+                    prop::ensure(ceil_div(dim, v - 1) > ceil_div(dim, v), "minimal per fold count")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn candidates_match_closed_form_pricing() {
+        // (rows, cols, a, b) must reproduce the real pricing function for
+        // any placement and any batch-scaled stream length.
+        prop::check("candidate a + b·sr == layer_timing_tile_with_share", 60, |rng| {
+            let geom = ArrayGeometry::new(
+                rng.gen_range_inclusive(1, 160),
+                rng.gen_range_inclusive(1, 160),
+            );
+            let k = rng.gen_range_inclusive(1, 2048);
+            let m = rng.gen_range_inclusive(1, 2048);
+            let sr = rng.gen_range_inclusive(1, 8000);
+            for c in enumerate_candidates(geom, k, m, sr) {
+                let row0 = rng.gen_range_inclusive(0, geom.rows - c.rows);
+                let col0 = rng.gen_range_inclusive(0, geom.cols - c.cols);
+                let tile = Tile::new(row0, col0, c.rows, c.cols);
+                let share = BufferConfig::default().share(tile.pes(), geom.pes());
+                let t = layer_timing_tile_with_share(geom, GemmDims { sr, k, m }, tile, &share, None);
+                prop::ensure_eq(c.cycles(sr, row0, col0), t.cycles, "cycles")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn candidates_include_exact_fit_shapes() {
+        // 1152 on 96 rows divides exactly: the non-pow-2 height 96 must be
+        // offered (the shape the pow-2 ladder can never reach).
+        let geom = ArrayGeometry::new(96, 128);
+        let cands = enumerate_candidates(geom, 1152, 384, 4000);
+        assert!(cands.iter().any(|c| c.rows == 96), "{cands:?}");
+        assert!(cands.iter().any(|c| c.cols == 96));
+        // And each candidate's extents are minimal for their fold count.
+        for c in &cands {
+            let fk = ceil_div(1152, c.rows);
+            assert_eq!(c.b % fk, 0);
+            assert_eq!(c.rows, ceil_div(1152, fk).min(geom.rows));
+        }
+    }
+
+    #[test]
+    fn candidate_count_is_capped_and_sorted() {
+        let geom = ArrayGeometry::new(128, 128);
+        let cands = enumerate_candidates(geom, 8192, 8192, 3025);
+        assert!(cands.len() <= CANDIDATE_CAP);
+        assert!(!cands.is_empty());
+        for w in cands.windows(2) {
+            assert!((w[0].rows, w[0].cols) < (w[1].rows, w[1].cols), "sorted, distinct shapes");
+        }
+    }
+
+    #[test]
+    fn bigger_tiles_never_price_slower() {
+        let geom = ArrayGeometry::new(128, 128);
+        let cands = enumerate_candidates(geom, 1024, 512, 1000);
+        let full = cands.iter().max_by_key(|c| c.rows * c.cols).unwrap();
+        for c in &cands {
+            assert!(c.cycles(1000, 0, 0) >= full.cycles(1000, 0, 0));
+        }
+    }
+}

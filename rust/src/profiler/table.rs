@@ -1,0 +1,552 @@
+//! Profile tables: the persisted artifacts of `mtsa profile` and their
+//! loader.
+//!
+//! Per (model, geometry) pair the profiler emits two files under the
+//! `--out` directory:
+//!
+//! - `<model>_<rows>x<cols>.table.json` — the compact summary
+//!   ([`ProfileTable`]): per-layer candidate shapes `(rows, cols, a, b)`,
+//!   the batch-1 optimum, and the isolated-run totals `(iso_a, iso_b)`
+//!   with `isolated(batch) = iso_a + batch·iso_b` (exact — see
+//!   [`isolated_cycles`]);
+//! - `<model>_<rows>x<cols>.report.csv` — the comprehensive per-layer
+//!   report: every candidate × bank-grant level with cycles, DRAM words,
+//!   refetch words beyond the compulsory traffic, a stall-cycle proxy
+//!   (refetch words at a 1 word/cycle interface), and dynamic energy.
+//!
+//! Every table carries a content hash over (schema, model name, geometry,
+//! per-layer GEMM dims).  [`ProfileStore::load`] recomputes the hash from
+//! the *live* zoo model and rejects stale tables with an error naming the
+//! model, so a zoo edit can never silently pair with old tables.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use crate::energy::components::{EnergyModel, Precision};
+use crate::sim::buffers::BufferConfig;
+use crate::sim::dataflow::{baseline_layer_timing, layer_timing_tile_with_share, ArrayGeometry};
+use crate::sim::partitioned::Tile;
+use crate::util::ceil_div;
+use crate::util::json::Json;
+use crate::workloads::dnng::Dnn;
+use crate::workloads::models;
+use crate::workloads::shapes::GemmDims;
+
+use super::search::{enumerate_candidates, TileCandidate};
+
+/// Artifact schema version (bumped on any layout change; loaders reject
+/// other versions).
+pub const PROFILE_SCHEMA: u64 = 1;
+
+/// Bank-grant levels (percent of the proportional SRAM share) the
+/// comprehensive report sweeps — the MoCA-style sensitivity axis.
+pub const GRANT_LEVELS: &[u64] = &[100, 75, 50, 25];
+
+/// The profile of one layer: its lowered GEMM and the ranked candidate
+/// tile shapes (see [`super::search`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerProfile {
+    pub name: String,
+    pub sr: u64,
+    pub k: u64,
+    pub m: u64,
+    /// Candidate shapes, sorted by `(rows, cols)`.
+    pub candidates: Vec<TileCandidate>,
+    /// Batch-1 optimum among the candidates (origin placement).
+    pub best_rows: u64,
+    pub best_cols: u64,
+    pub best_cycles: u64,
+    /// Full-array single-tenant cycles at batch 1, for reference.
+    pub baseline_cycles: u64,
+}
+
+/// The compact summary table for one (model, geometry) pair.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileTable {
+    pub model: String,
+    pub geom: ArrayGeometry,
+    /// Content hash over (schema, model, geometry, layer GEMMs).
+    pub hash: String,
+    pub layers: Vec<LayerProfile>,
+    /// Isolated-run intercept: `Σ_l FM·K + FK·M + FK·FM·(H−1)` on the full
+    /// array.
+    pub iso_a: u64,
+    /// Isolated-run slope per batched request: `Σ_l FK·FM·Sr₁`.
+    pub iso_b: u64,
+}
+
+/// FNV-1a 64-bit over a canonical description of (model, geometry, layer
+/// GEMMs) — stable across platforms, rendered as 16 hex chars.
+pub fn content_hash(model: &str, geom: ArrayGeometry, gemms: &[GemmDims]) -> String {
+    let mut text = format!("mtsa-profile-v{PROFILE_SCHEMA}|{model}|{}x{}", geom.rows, geom.cols);
+    for g in gemms {
+        let _ = write!(text, "|{},{},{}", g.sr, g.k, g.m);
+    }
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+/// Single-tenant whole-model cycles at batch multiplier `batch` — the one
+/// pricing path for isolated-run horizon estimates (the fleet router's
+/// `iso_cache` misses and the table totals both come through here, so
+/// they can never drift apart).
+pub fn isolated_cycles(geom: ArrayGeometry, bufs: &BufferConfig, dnn: &Dnn, batch: u64) -> u64 {
+    let mut cycles = 0u64;
+    for l in &dnn.layers {
+        let mut shape = l.shape;
+        shape.n *= batch;
+        cycles = cycles.saturating_add(baseline_layer_timing(geom, shape.gemm(), bufs).cycles);
+    }
+    cycles
+}
+
+impl ProfileTable {
+    /// Profile one model on one geometry: enumerate candidates per layer,
+    /// pick the batch-1 optimum, and fold the isolated-run totals.
+    pub fn build(model: &str, dnn: &Dnn, geom: ArrayGeometry, bufs: &BufferConfig) -> ProfileTable {
+        let mut layers = Vec::with_capacity(dnn.layers.len());
+        let mut gemms = Vec::with_capacity(dnn.layers.len());
+        let (mut iso_a, mut iso_b) = (0u64, 0u64);
+        for l in &dnn.layers {
+            let g = l.shape.gemm();
+            gemms.push(g);
+            let candidates = enumerate_candidates(geom, g.k, g.m, g.sr);
+            let best = candidates
+                .iter()
+                .min_by_key(|c| (c.cycles(g.sr, 0, 0), c.rows * c.cols, c.rows, c.cols))
+                .copied()
+                .expect("enumerate_candidates is never empty");
+            // Full-array fold counts give the isolated-run linearization
+            // cycles(batch) = A + B·batch (FK/FM are batch-independent:
+            // batching scales N, hence Sr, not K or M).
+            let fk = ceil_div(g.k, geom.rows);
+            let fm = ceil_div(g.m, geom.cols);
+            iso_a = iso_a
+                .saturating_add(fm * g.k + fk * g.m + fk * fm * (geom.rows - 1));
+            iso_b = iso_b.saturating_add(fk * fm * g.sr);
+            layers.push(LayerProfile {
+                name: l.name.clone(),
+                sr: g.sr,
+                k: g.k,
+                m: g.m,
+                candidates,
+                best_rows: best.rows,
+                best_cols: best.cols,
+                best_cycles: best.cycles(g.sr, 0, 0),
+                baseline_cycles: baseline_layer_timing(geom, g, bufs).cycles,
+            });
+        }
+        ProfileTable {
+            model: model.to_string(),
+            geom,
+            hash: content_hash(model, geom, &gemms),
+            layers,
+            iso_a,
+            iso_b,
+        }
+    }
+
+    /// `isolated_cycles` from the table totals alone (no per-layer work).
+    pub fn isolated(&self, batch: u64) -> u64 {
+        self.iso_a.saturating_add(self.iso_b.saturating_mul(batch))
+    }
+
+    /// Basename stem of this table's artifacts
+    /// (`<model>_<rows>x<cols>`, model lowercased).
+    pub fn stem(&self) -> String {
+        format!("{}_{}x{}", self.model.to_lowercase(), self.geom.rows, self.geom.cols)
+    }
+
+    /// Serialize the summary table (deterministic bytes: sorted object
+    /// keys, fixed number formatting).
+    pub fn to_json(&self) -> Json {
+        let num = |v: u64| Json::Num(v as f64);
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                let cands = l
+                    .candidates
+                    .iter()
+                    .map(|c| Json::Arr(vec![num(c.rows), num(c.cols), num(c.a), num(c.b)]))
+                    .collect();
+                Json::Obj(BTreeMap::from([
+                    ("name".into(), Json::Str(l.name.clone())),
+                    ("sr".into(), num(l.sr)),
+                    ("k".into(), num(l.k)),
+                    ("m".into(), num(l.m)),
+                    ("best_rows".into(), num(l.best_rows)),
+                    ("best_cols".into(), num(l.best_cols)),
+                    ("best_cycles".into(), num(l.best_cycles)),
+                    ("baseline_cycles".into(), num(l.baseline_cycles)),
+                    ("candidates".into(), Json::Arr(cands)),
+                ]))
+            })
+            .collect();
+        Json::Obj(BTreeMap::from([
+            ("schema".into(), num(PROFILE_SCHEMA)),
+            ("model".into(), Json::Str(self.model.clone())),
+            ("rows".into(), num(self.geom.rows)),
+            ("cols".into(), num(self.geom.cols)),
+            ("hash".into(), Json::Str(self.hash.clone())),
+            ("iso_a".into(), num(self.iso_a)),
+            ("iso_b".into(), num(self.iso_b)),
+            ("layers".into(), Json::Arr(layers)),
+        ]))
+    }
+
+    /// Parse a summary table; errors name the missing/ill-typed field.
+    pub fn from_json(doc: &Json) -> Result<ProfileTable, String> {
+        fn field_u64(doc: &Json, key: &str) -> Result<u64, String> {
+            doc.get(key)
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| format!("profile table missing integer field {key:?}"))
+        }
+        fn field_str<'a>(doc: &'a Json, key: &str) -> Result<&'a str, String> {
+            doc.get(key)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("profile table missing string field {key:?}"))
+        }
+        let schema = field_u64(doc, "schema")?;
+        if schema != PROFILE_SCHEMA {
+            return Err(format!(
+                "profile table schema {schema} unsupported (expected {PROFILE_SCHEMA})"
+            ));
+        }
+        let model = field_str(doc, "model")?.to_string();
+        let geom = ArrayGeometry::try_new(field_u64(doc, "rows")?, field_u64(doc, "cols")?)?;
+        let hash = field_str(doc, "hash")?.to_string();
+        let mut layers = Vec::new();
+        for l in doc
+            .get("layers")
+            .and_then(|v| v.as_arr())
+            .ok_or("profile table missing \"layers\" array")?
+        {
+            let mut candidates = Vec::new();
+            for c in l
+                .get("candidates")
+                .and_then(|v| v.as_arr())
+                .ok_or("profile layer missing \"candidates\" array")?
+            {
+                let quad = c.as_arr().filter(|q| q.len() == 4).ok_or("candidate must be [rows, cols, a, b]")?;
+                let at = |i: usize| {
+                    quad[i].as_u64().ok_or_else(|| format!("candidate field {i} not an integer"))
+                };
+                let (rows, cols) = (at(0)?, at(1)?);
+                if rows == 0 || cols == 0 {
+                    return Err("candidate with zero extent".into());
+                }
+                candidates.push(TileCandidate { rows, cols, a: at(2)?, b: at(3)? });
+            }
+            layers.push(LayerProfile {
+                name: field_str(l, "name")?.to_string(),
+                sr: field_u64(l, "sr")?,
+                k: field_u64(l, "k")?,
+                m: field_u64(l, "m")?,
+                candidates,
+                best_rows: field_u64(l, "best_rows")?,
+                best_cols: field_u64(l, "best_cols")?,
+                best_cycles: field_u64(l, "best_cycles")?,
+                baseline_cycles: field_u64(l, "baseline_cycles")?,
+            });
+        }
+        Ok(ProfileTable {
+            model,
+            geom,
+            hash,
+            layers,
+            iso_a: field_u64(doc, "iso_a")?,
+            iso_b: field_u64(doc, "iso_b")?,
+        })
+    }
+
+    /// The comprehensive per-layer report: every candidate × bank-grant
+    /// level, priced by the real timing/energy models.  `refetch_words`
+    /// is DRAM traffic beyond the compulsory (weights + one IFMap pass +
+    /// one OFMap write); `stall_cycles` prices it at a 1 word/cycle DRAM
+    /// interface — an upper-bound proxy, not a simulated stall.
+    pub fn report_csv(&self, bufs: &BufferConfig) -> String {
+        let energy = EnergyModel::build(self.geom, bufs, Precision::Int8);
+        let mut out = String::from(
+            "model,geom,layer,sr,k,m,rows,cols,grant_pct,cycles,dram_words,refetch_words,stall_cycles,energy_j\n",
+        );
+        for l in &self.layers {
+            let gemm = GemmDims { sr: l.sr, k: l.k, m: l.m };
+            let compulsory = l.k * l.m + l.sr * l.k + l.sr * l.m;
+            for c in &l.candidates {
+                let tile = Tile::new(0, 0, c.rows, c.cols);
+                let share = bufs.share(tile.pes(), self.geom.pes());
+                for &pct in GRANT_LEVELS {
+                    let granted = BufferConfig {
+                        weight_bytes: (share.weight_bytes * pct / 100).max(share.dtype_bytes),
+                        ifmap_bytes: (share.ifmap_bytes * pct / 100).max(share.dtype_bytes),
+                        ofmap_bytes: (share.ofmap_bytes * pct / 100).max(share.dtype_bytes),
+                        dtype_bytes: share.dtype_bytes,
+                    };
+                    let t = layer_timing_tile_with_share(self.geom, gemm, tile, &granted, None);
+                    let dram = t.activity.dram_accesses();
+                    let refetch = dram.saturating_sub(compulsory);
+                    let _ = writeln!(
+                        out,
+                        "{},{}x{},{},{},{},{},{},{},{},{},{},{},{},{:.6e}",
+                        self.model,
+                        self.geom.rows,
+                        self.geom.cols,
+                        l.name,
+                        l.sr,
+                        l.k,
+                        l.m,
+                        c.rows,
+                        c.cols,
+                        pct,
+                        t.cycles,
+                        dram,
+                        refetch,
+                        refetch,
+                        energy.dynamic_j(&t.activity),
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A directory of validated [`ProfileTable`]s with merged lookups —
+/// what the schedulers consult at plan time.  Wrapped in an [`Arc`] by
+/// its consumers ([`SchedulerConfig`](crate::coordinator::scheduler::SchedulerConfig),
+/// [`FleetConfig`](crate::fleet::FleetConfig)); all lookups are
+/// read-only.
+#[derive(Debug)]
+pub struct ProfileStore {
+    /// Where the tables came from (a directory, or `"<memory>"`).
+    pub origin: String,
+    tables: Vec<ProfileTable>,
+    /// `(geom.rows, geom.cols, k, m)` → merged candidates.
+    by_shape: BTreeMap<(u64, u64, u64, u64), Vec<TileCandidate>>,
+    /// `(geom.rows, geom.cols, model lowercased)` → `(iso_a, iso_b)`.
+    totals: BTreeMap<(u64, u64, String), (u64, u64)>,
+}
+
+impl ProfileStore {
+    /// Index a set of already-validated tables (the in-memory path used
+    /// by examples and tests; no zoo check — the caller built them).
+    pub fn from_tables(origin: &str, tables: Vec<ProfileTable>) -> ProfileStore {
+        let mut by_shape: BTreeMap<(u64, u64, u64, u64), Vec<TileCandidate>> = BTreeMap::new();
+        let mut totals = BTreeMap::new();
+        for t in &tables {
+            totals.insert(
+                (t.geom.rows, t.geom.cols, t.model.to_lowercase()),
+                (t.iso_a, t.iso_b),
+            );
+            for l in &t.layers {
+                let merged = by_shape.entry((t.geom.rows, t.geom.cols, l.k, l.m)).or_default();
+                for c in &l.candidates {
+                    if !merged.contains(c) {
+                        merged.push(*c);
+                    }
+                }
+                merged.sort_by_key(|c| (c.rows, c.cols, c.a, c.b));
+            }
+        }
+        ProfileStore { origin: origin.to_string(), tables, by_shape, totals }
+    }
+
+    /// Load every `*.table.json` under `dir`, verifying each table's
+    /// content hash against the live zoo: a table whose model was edited
+    /// (or renamed away) since profiling is rejected, naming the model.
+    pub fn load(dir: &std::path::Path) -> Result<ProfileStore, String> {
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| format!("cannot read profile tables dir {}: {e}", dir.display()))?;
+        let mut files: Vec<std::path::PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.ends_with(".table.json")))
+            .collect();
+        files.sort();
+        if files.is_empty() {
+            return Err(format!("no *.table.json files in {} (run `mtsa profile` first)", dir.display()));
+        }
+        let mut tables = Vec::with_capacity(files.len());
+        for path in files {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+            let doc = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+            let table = ProfileTable::from_json(&doc).map_err(|e| format!("{}: {e}", path.display()))?;
+            let entry = models::by_name(&table.model).ok_or_else(|| {
+                format!(
+                    "{}: profile table names unknown model {:?} (see `mtsa zoo`)",
+                    path.display(),
+                    table.model
+                )
+            })?;
+            let live = (entry.build)();
+            let gemms: Vec<GemmDims> = live.layers.iter().map(|l| l.shape.gemm()).collect();
+            let expect = content_hash(&table.model, table.geom, &gemms);
+            if expect != table.hash {
+                return Err(format!(
+                    "{}: stale profile table for model {:?}: content hash {} != current {} \
+                     (the model changed since profiling; re-run `mtsa profile`)",
+                    path.display(),
+                    table.model,
+                    table.hash,
+                    expect
+                ));
+            }
+            tables.push(table);
+        }
+        Ok(ProfileStore::from_tables(&dir.display().to_string(), tables))
+    }
+
+    /// Convenience: [`ProfileStore::load`] wrapped for config knobs.
+    pub fn load_arc(dir: &str) -> Result<Arc<ProfileStore>, String> {
+        ProfileStore::load(std::path::Path::new(dir)).map(Arc::new)
+    }
+
+    /// Candidate shapes for a `[*, k] × [k, m]` GEMM on `geom` (empty
+    /// when the geometry or shape was never profiled — callers fall back
+    /// to their online ladder).
+    pub fn candidates(&self, geom: ArrayGeometry, k: u64, m: u64) -> &[TileCandidate] {
+        self.by_shape.get(&(geom.rows, geom.cols, k, m)).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Isolated-run totals `(iso_a, iso_b)` for a model on `geom`
+    /// (case-insensitive model lookup, like the zoo's).
+    pub fn totals(&self, geom: ArrayGeometry, model: &str) -> Option<(u64, u64)> {
+        self.totals.get(&(geom.rows, geom.cols, model.to_lowercase())).copied()
+    }
+
+    /// Whether any table covers `geom`.
+    pub fn has_geometry(&self, geom: ArrayGeometry) -> bool {
+        self.tables.iter().any(|t| t.geom == geom)
+    }
+
+    pub fn tables(&self) -> &[ProfileTable] {
+        &self.tables
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn ncf_table(geom: ArrayGeometry) -> ProfileTable {
+        let dnn = (models::by_name("NCF").unwrap().build)();
+        ProfileTable::build("NCF", &dnn, geom, &BufferConfig::default())
+    }
+
+    #[test]
+    fn totals_equal_the_isolated_loop_exactly() {
+        // The table's (iso_a, iso_b) linearization must reproduce the
+        // per-layer baseline sum for every model and any batch size —
+        // the property that lets the fleet router swap loops for tables
+        // without changing a byte.
+        let bufs = BufferConfig::default();
+        let mut rng = Rng::new(99);
+        for geom in [ArrayGeometry::new(128, 128), ArrayGeometry::new(96, 64)] {
+            for e in models::ZOO {
+                let dnn = (e.build)();
+                let t = ProfileTable::build(e.name, &dnn, geom, &bufs);
+                for _ in 0..4 {
+                    let batch = rng.gen_range_inclusive(1, 64);
+                    assert_eq!(
+                        t.isolated(batch),
+                        isolated_cycles(geom, &bufs, &dnn, batch),
+                        "{} batch {batch} on {}x{}",
+                        e.name,
+                        geom.rows,
+                        geom.cols
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn json_round_trips_byte_identically() {
+        let t = ncf_table(ArrayGeometry::new(128, 128));
+        let rendered = t.to_json().render();
+        let back = ProfileTable::from_json(&Json::parse(&rendered).unwrap()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.to_json().render(), rendered);
+    }
+
+    #[test]
+    fn best_never_loses_to_full_array_baseline() {
+        // The profiled optimum searches a superset of the full-array
+        // shape whenever the array fits one, so best ≤ baseline there;
+        // it is exactly the baseline when K and M overfill the array.
+        for e in models::ZOO {
+            let dnn = (e.build)();
+            let t = ProfileTable::build(e.name, &dnn, ArrayGeometry::new(128, 128), &BufferConfig::default());
+            for l in &t.layers {
+                assert!(
+                    l.best_cycles <= l.baseline_cycles,
+                    "{}/{}: best {} > baseline {}",
+                    e.name,
+                    l.name,
+                    l.best_cycles,
+                    l.baseline_cycles
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn content_hash_tracks_model_and_geometry() {
+        let g = |sr, k, m| GemmDims { sr, k, m };
+        let base = content_hash("NCF", ArrayGeometry::new(128, 128), &[g(1, 2, 3)]);
+        assert_eq!(base.len(), 16);
+        assert_ne!(base, content_hash("GNMT", ArrayGeometry::new(128, 128), &[g(1, 2, 3)]));
+        assert_ne!(base, content_hash("NCF", ArrayGeometry::new(64, 128), &[g(1, 2, 3)]));
+        assert_ne!(base, content_hash("NCF", ArrayGeometry::new(128, 128), &[g(1, 2, 4)]));
+        assert_eq!(base, content_hash("NCF", ArrayGeometry::new(128, 128), &[g(1, 2, 3)]));
+    }
+
+    #[test]
+    fn store_lookups_merge_and_miss_cleanly() {
+        let geom = ArrayGeometry::new(128, 128);
+        let store = ProfileStore::from_tables("<memory>", vec![ncf_table(geom)]);
+        assert!(store.has_geometry(geom));
+        assert!(!store.has_geometry(ArrayGeometry::new(64, 64)));
+        assert!(store.totals(geom, "ncf").is_some());
+        assert!(store.totals(geom, "NCF").is_some());
+        assert!(store.totals(geom, "GNMT").is_none());
+        let l = &store.tables()[0].layers[0];
+        assert!(!store.candidates(geom, l.k, l.m).is_empty());
+        assert!(store.candidates(geom, 7, 11).is_empty());
+        assert!(store.candidates(ArrayGeometry::new(64, 64), l.k, l.m).is_empty());
+    }
+
+    #[test]
+    fn report_csv_shape_and_determinism() {
+        let t = ncf_table(ArrayGeometry::new(128, 128));
+        let bufs = BufferConfig::default();
+        let csv = t.report_csv(&bufs);
+        assert_eq!(csv, t.report_csv(&bufs), "deterministic bytes");
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[0].starts_with("model,geom,layer"));
+        let expect: usize =
+            t.layers.iter().map(|l| l.candidates.len() * GRANT_LEVELS.len()).sum();
+        assert_eq!(lines.len(), 1 + expect);
+        // Starving the grant only ever adds refetch traffic.
+        prop::check("grant monotonicity within a candidate row group", 1, |_| {
+            for group in lines[1..].chunks(GRANT_LEVELS.len()) {
+                let refetch: Vec<u64> = group
+                    .iter()
+                    .map(|l| l.split(',').nth(11).unwrap().parse().unwrap())
+                    .collect();
+                for w in refetch.windows(2) {
+                    prop::ensure(w[0] <= w[1], "refetch grows as the grant shrinks")?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

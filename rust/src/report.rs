@@ -202,17 +202,22 @@ fn geom_label(geom: crate::sim::dataflow::ArrayGeometry) -> String {
 /// column appears only when some point ran 2D fission, and three
 /// preemption columns (mode, count, wasted refill cycles) only when some
 /// point ran with preemption on — so column-only non-preemptive sweeps
-/// render exactly as before.
+/// render exactly as before.  A `tables` column appears only when the
+/// grid has a profile-table axis.
 pub fn sweep_table(grid: &SweepGrid, rows: &[SweepRow]) -> Table {
     let with_mem = rows.iter().any(|r| r.mem.is_some());
     let with_mode = rows.iter().any(|r| r.point.mode == PartitionMode::TwoD);
     let with_preempt = rows.iter().any(|r| r.point.preempt != PreemptMode::Off);
+    let with_tables = !grid.tables.is_empty();
     let mut headers = vec![
         "mix", "arrival", "policy", "feed", "cols", "makespan", "vs seq", "util", "p50 lat",
         "p99 lat", "miss",
     ];
     if with_mode {
         headers.insert(5, "mode");
+    }
+    if with_tables {
+        headers.insert(if with_mode { 6 } else { 5 }, "tables");
     }
     if with_preempt {
         headers.extend(["preempt", "npre", "wasted"]);
@@ -237,6 +242,12 @@ pub fn sweep_table(grid: &SweepGrid, rows: &[SweepRow]) -> Table {
         ];
         if with_mode {
             cells.insert(5, r.point.mode.tag().to_string());
+        }
+        if with_tables {
+            cells.insert(
+                if with_mode { 6 } else { 5 },
+                if r.point.tables { "on" } else { "off" }.to_string(),
+            );
         }
         if with_preempt {
             cells.extend([
@@ -311,6 +322,11 @@ pub fn sweep_json(grid: &SweepGrid, rows: &[SweepRow]) -> Json {
                 "partition_mode".to_string(),
                 Json::Str(r.point.mode.tag().to_string()),
             );
+        }
+        // The tables key is strictly opt-in on the grid axis: a sweep
+        // without `--tables` emits nothing, keeping goldens byte-stable.
+        if !grid.tables.is_empty() {
+            o.insert("tables".to_string(), Json::Bool(r.point.tables));
         }
         // Preemption keys are strictly opt-in: a `preempt = off` point
         // emits none of them, keeping non-preemptive sweeps byte-stable.
@@ -391,6 +407,15 @@ pub fn sweep_json(grid: &SweepGrid, rows: &[SweepRow]) -> Json {
                 grid.preempts.iter().map(|p| Json::Str(p.tag().to_string())).collect(),
             ),
         );
+    }
+    if !grid.tables.is_empty() {
+        top.insert(
+            "tables_axis".to_string(),
+            Json::Arr(grid.tables.iter().map(|&t| Json::Bool(t)).collect()),
+        );
+        if let Some(store) = &grid.tables_store {
+            top.insert("tables_origin".to_string(), Json::Str(store.origin.clone()));
+        }
     }
     if !grid.bandwidths.is_empty() {
         top.insert(
@@ -650,6 +675,7 @@ mod tests {
             requests: 40,
             seed: 11,
             chunk: 64,
+            tables: None,
         };
         run_fleet(&cfg, 2).unwrap()
     }
@@ -685,5 +711,18 @@ mod tests {
         let a = sweep_json(&grid, &[]).render();
         let b = sweep_json_with_fleet(&grid, &[], &[]).render();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sweep_tables_keys_are_strictly_opt_in() {
+        // No tables axis: not a byte of the header mentions tables.
+        let plain = sweep_json(&SweepGrid::default(), &[]).render();
+        assert!(!plain.contains("tables"), "{plain}");
+        // Axis on: the header names it, plus the store's origin when
+        // one is loaded.
+        let grid = SweepGrid { tables: vec![false, true], ..Default::default() };
+        let on = sweep_json(&grid, &[]).render();
+        assert!(on.contains("\"tables_axis\":[false,true]"), "{on}");
+        assert!(!on.contains("tables_origin"), "no store loaded: {on}");
     }
 }

@@ -85,6 +85,15 @@ pub struct SweepGrid {
     /// no fleet points and the sweep JSON carries no `fleet` key —
     /// today's bytes exactly.
     pub fleet: Vec<usize>,
+    /// Profile-table axis (`mtsa sweep --tables <dir>`): each entry runs
+    /// every point with offline fission tables off (`false`) or on
+    /// (`true`, consulting [`SweepGrid::tables_store`]).  Empty (default)
+    /// = inherit the base config's tables and the report carries no
+    /// `tables` fields — today's bytes exactly.
+    pub tables: Vec<bool>,
+    /// The [`crate::profiler::ProfileStore`] the `tables = true` points
+    /// consult; falls back to the base config's store when `None`.
+    pub tables_store: Option<std::sync::Arc<crate::profiler::ProfileStore>>,
     pub seed: u64,
 }
 
@@ -107,6 +116,8 @@ impl Default for SweepGrid {
             bandwidths: Vec::new(),
             arbitrations: Vec::new(),
             fleet: Vec::new(),
+            tables: Vec::new(),
+            tables_store: None,
             seed: 42,
         }
     }
@@ -144,6 +155,10 @@ pub struct SweepPoint {
     /// `(interface words/cycle, arbitration)` when this point runs under
     /// the shared memory hierarchy; `None` inherits the base config.
     pub mem: Option<(f64, ArbitrationMode)>,
+    /// Whether this point's dynamic scheduler consults the offline
+    /// profile tables (the base config's setting when the grid has no
+    /// tables axis).
+    pub tables: bool,
     /// Scenario seed — shared across policy/feed/geometry/mode/mem so
     /// every contender in a (mix, rate) cell sees the same arrival trace.
     pub scenario_seed: u64,
@@ -187,7 +202,8 @@ pub struct MemSummary {
 }
 
 /// Expand a grid into its points (row-major over mix, rate, policy, feed,
-/// geometry, partition mode, mem, preempt — the JSON/table row order).
+/// geometry, partition mode, mem, preempt, tables — the JSON/table row
+/// order).
 pub fn expand(grid: &SweepGrid, base: &SchedulerConfig) -> Vec<SweepPoint> {
     let geoms: Vec<ArrayGeometry> =
         if grid.geoms.is_empty() { vec![base.geom] } else { grid.geoms.clone() };
@@ -205,6 +221,8 @@ pub fn expand(grid: &SweepGrid, base: &SchedulerConfig) -> Vec<SweepPoint> {
             .flat_map(|&bw| arbs.iter().map(move |&arb| Some((bw, arb))))
             .collect()
     };
+    let tabs: Vec<bool> =
+        if grid.tables.is_empty() { vec![base.tables.is_some()] } else { grid.tables.clone() };
     let mut points = Vec::new();
     for (mi, mix) in grid.mixes.iter().enumerate() {
         for (ri, &rate) in grid.rates.iter().enumerate() {
@@ -218,18 +236,21 @@ pub fn expand(grid: &SweepGrid, base: &SchedulerConfig) -> Vec<SweepPoint> {
                         for &mode in &modes {
                             for &mem in &mems {
                                 for &preempt in &preempts {
-                                    points.push(SweepPoint {
-                                        index: points.len(),
-                                        mix: mix.clone(),
-                                        mean_interarrival: rate,
-                                        policy,
-                                        feed,
-                                        geom,
-                                        mode,
-                                        preempt,
-                                        mem,
-                                        scenario_seed,
-                                    });
+                                    for &tables in &tabs {
+                                        points.push(SweepPoint {
+                                            index: points.len(),
+                                            mix: mix.clone(),
+                                            mean_interarrival: rate,
+                                            policy,
+                                            feed,
+                                            geom,
+                                            mode,
+                                            preempt,
+                                            mem,
+                                            tables,
+                                            scenario_seed,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -289,6 +310,11 @@ fn run_point(
         });
         cfg.dram = None;
     }
+    cfg.tables = if point.tables {
+        grid.tables_store.clone().or_else(|| base.tables.clone())
+    } else {
+        None
+    };
     let spec = ScenarioSpec {
         name: format!("{}@{}", point.mix, point.mean_interarrival),
         arrival: arrival_for(grid, point.mean_interarrival),
@@ -338,6 +364,15 @@ pub fn run_sweep(
     }
 
     let points = expand(grid, base);
+    if points.iter().any(|p| p.tables)
+        && grid.tables_store.is_none()
+        && base.tables.is_none()
+    {
+        anyhow::bail!(
+            "sweep tables axis is on but no profile tables are loaded — \
+             pass `--tables <dir>` or set `[partition] tables`"
+        );
+    }
     let point_templates: Vec<&[Dnn]> = points
         .iter()
         .map(|p| {
@@ -433,6 +468,7 @@ pub fn run_fleet_axis(
                     requests: grid.requests,
                     seed: scenario_seed,
                     chunk: 4096,
+                    tables: None,
                 };
                 let report = run_fleet(&cfg, threads)
                     .with_context(|| format!("fleet axis point {mix}@{rate}x{n}"))?;
@@ -609,6 +645,62 @@ mod tests {
             assert!(row.occupancy.iter().all(|&o| (0.0..=1.0 + 1e-9).contains(&o)));
             assert_eq!(row.outcome.overall.requests, 4);
             assert!((0.0..=1.0).contains(&row.outcome.miss_rate()));
+        }
+    }
+
+    #[test]
+    fn tables_axis_expands_and_requires_a_store() {
+        let grid = SweepGrid {
+            mixes: vec!["light".into()],
+            rates: vec![0.0],
+            policies: vec![AllocPolicy::WidestToHeaviest],
+            feeds: vec![FeedModel::Independent],
+            tables: vec![false, true],
+            ..Default::default()
+        };
+        let base = SchedulerConfig::default();
+        let points = expand(&grid, &base);
+        assert_eq!(points.len(), 2);
+        assert!(!points[0].tables);
+        assert!(points[1].tables);
+        // No tables axis: the coordinate inherits the base config (off).
+        let plain = expand(&SweepGrid::default(), &base);
+        assert!(plain.iter().all(|p| !p.tables));
+        // Turning the axis on with no store loaded anywhere is an error,
+        // not 24 silently table-less points.
+        let err = run_sweep(&grid, &base, 1).unwrap_err();
+        assert!(format!("{err}").contains("--tables"), "{err}");
+    }
+
+    #[test]
+    fn tables_axis_pairs_rows_and_keeps_2d_plans_sound() {
+        use crate::profiler::{ProfileStore, ProfileTable};
+        use crate::sim::buffers::BufferConfig;
+        let geom = ArrayGeometry::new(128, 128);
+        let bufs = BufferConfig::default();
+        let dnn = (models::by_name("NCF").unwrap().build)();
+        let table = ProfileTable::build("NCF", &dnn, geom, &bufs);
+        let grid = SweepGrid {
+            mixes: vec!["NCF".into()],
+            rates: vec![0.0],
+            policies: vec![AllocPolicy::WidestToHeaviest],
+            feeds: vec![FeedModel::Independent],
+            modes: vec![PartitionMode::TwoD],
+            requests: 4,
+            tables: vec![false, true],
+            tables_store: Some(std::sync::Arc::new(ProfileStore::from_tables(
+                "test",
+                vec![table],
+            ))),
+            ..Default::default()
+        };
+        let rows = run_sweep(&grid, &SchedulerConfig::default(), 2).unwrap();
+        assert_eq!(rows.len(), 2, "off/on pair per cell");
+        assert!(!rows[0].point.tables);
+        assert!(rows[1].point.tables);
+        for row in &rows {
+            assert!(row.makespan > 0);
+            assert_eq!(row.outcome.overall.requests, 4);
         }
     }
 

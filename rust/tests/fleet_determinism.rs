@@ -23,6 +23,7 @@ fn serving_cfg(requests: usize, seed: u64) -> FleetConfig {
         requests,
         seed,
         chunk: 256,
+        tables: None,
     }
 }
 
@@ -80,6 +81,7 @@ fn requests_are_conserved_exactly_once() {
             requests: rng.gen_range_inclusive(100, 200) as usize,
             seed: rng.gen_range_inclusive(0, u64::MAX - 1),
             chunk: 64,
+            tables: None,
         };
         let r = run_fleet(&cfg, 2).map_err(|e| format!("run_fleet: {e}"))?;
         prop::ensure(r.conserved(), "generated != completed + dropped")?;

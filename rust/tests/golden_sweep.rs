@@ -34,7 +34,12 @@ fn golden_dir() -> PathBuf {
 /// bootstrapping (or refreshing under `UPDATE_GOLDEN=1`) the fixture.
 fn check_golden(name: &str, grid: &SweepGrid) {
     let rows = run_sweep(grid, &SchedulerConfig::default(), 2).expect("sweep runs");
-    let live = report::sweep_json(grid, &rows).render();
+    check_golden_bytes(name, report::sweep_json(grid, &rows).render());
+}
+
+/// The byte-diff half of [`check_golden`], for callers that render the
+/// live JSON themselves (fleet axis, profile tables).
+fn check_golden_bytes(name: &str, live: String) {
     let path = golden_dir().join(format!("{name}.json"));
     let update = std::env::var_os("UPDATE_GOLDEN").is_some();
     if update || !path.exists() {
@@ -122,6 +127,53 @@ fn golden_mem_axis() {
         ..base_grid()
     };
     check_golden("mem_axis", &grid);
+}
+
+#[test]
+fn golden_fleet_axis() {
+    // The serving-tier corner: one (mix, rate) cell fanned across a
+    // two-instance cluster, attached to the sweep JSON as its `fleet`
+    // key (PR 7 added the axis; this pins its bytes).
+    let grid = SweepGrid {
+        mixes: vec!["NCF".to_string()],
+        rates: vec![40_000.0],
+        policies: vec![AllocPolicy::WidestToHeaviest],
+        requests: 20,
+        fleet: vec![2],
+        ..base_grid()
+    };
+    let base = SchedulerConfig::default();
+    let rows = run_sweep(&grid, &base, 2).expect("sweep runs");
+    let fleet_rows = mtsa::sweep::run_fleet_axis(&grid, &base, 2).expect("fleet axis runs");
+    assert_eq!(fleet_rows.len(), 1, "one non-batch cell x one cluster size");
+    check_golden_bytes(
+        "fleet_axis",
+        report::sweep_json_with_fleet(&grid, &rows, &fleet_rows).render(),
+    );
+}
+
+#[test]
+fn golden_tables_axis() {
+    // The profile-table corner: every point paired off/on against an
+    // in-memory NCF table, pinning both the per-row `tables` key and the
+    // table-driven 2D plans themselves.
+    use mtsa::profiler::{ProfileStore, ProfileTable};
+    use mtsa::sim::buffers::BufferConfig;
+    use mtsa::sim::dataflow::ArrayGeometry;
+    let geom = ArrayGeometry::new(128, 128);
+    let dnn = (mtsa::workloads::models::by_name("NCF").expect("zoo model").build)();
+    let table = ProfileTable::build("NCF", &dnn, geom, &BufferConfig::default());
+    let grid = SweepGrid {
+        policies: vec![AllocPolicy::WidestToHeaviest],
+        modes: vec![PartitionMode::TwoD],
+        tables: vec![false, true],
+        tables_store: Some(std::sync::Arc::new(ProfileStore::from_tables(
+            "golden",
+            vec![table],
+        ))),
+        ..base_grid()
+    };
+    check_golden("tables_axis", &grid);
 }
 
 #[test]

@@ -1,0 +1,147 @@
+//! Offline fission profiler invariants, integration level: the
+//! table-driven plan never projects worse than the online pow-2 ladder,
+//! table bytes are thread-count invariant, and stale artifacts are
+//! rejected by name.
+
+use mtsa::profiler::{build_tables, write_artifacts, ProfileStore, ProfileTable};
+use mtsa::sim::buffers::BufferConfig;
+use mtsa::sim::dataflow::ArrayGeometry;
+use mtsa::sim::partitioned::{tile_layer_timing, FeedPolicy, Tile};
+use mtsa::util::prop;
+use mtsa::workloads::dnng::{Dnn, Layer};
+use mtsa::workloads::shapes::{GemmDims, LayerKind, LayerShape};
+
+/// The best plan key (mirrors `plan_2d`: cycles, then fewest PEs) over a
+/// set of tile shapes at the origin of a full free array.
+fn best_over(
+    geom: ArrayGeometry,
+    gemm: GemmDims,
+    bufs: &BufferConfig,
+    shapes: impl Iterator<Item = (u64, u64)>,
+) -> Option<(u64, u64)> {
+    shapes
+        .filter(|&(h, w)| h >= 1 && w >= 1 && h <= geom.rows && w <= geom.cols)
+        .map(|(h, w)| {
+            let tile = Tile::new(0, 0, h, w);
+            let t = tile_layer_timing(geom, gemm, tile, FeedPolicy::Independent, bufs);
+            (t.cycles, tile.pes())
+        })
+        .min()
+}
+
+/// The scheduler's online candidate set: pow-2 heights × pow-2 widths
+/// (plus the full extents), what `plan_2d` tries without tables.
+fn ladder(geom: ArrayGeometry) -> Vec<(u64, u64)> {
+    let mut hs: Vec<u64> = (0..)
+        .map(|i| 1u64 << i)
+        .take_while(|&h| h <= geom.rows)
+        .collect();
+    hs.push(geom.rows);
+    let mut ws: Vec<u64> = (0..)
+        .map(|i| 1u64 << i)
+        .take_while(|&w| w <= geom.cols)
+        .collect();
+    ws.push(geom.cols);
+    hs.iter().flat_map(|&h| ws.iter().map(move |&w| (h, w))).collect()
+}
+
+/// Unioning the profiled candidates with the ladder can only improve the
+/// projected per-layer completion — for random layers and geometries.
+#[test]
+fn table_candidates_never_worsen_the_projected_plan() {
+    let bufs = BufferConfig::default();
+    prop::check("tables vs ladder projection", 24, |rng| {
+        let geom = ArrayGeometry::new(
+            rng.gen_range_inclusive(16, 160),
+            rng.gen_range_inclusive(16, 160),
+        );
+        let layers: Vec<Layer> = (0..rng.gen_range_inclusive(1, 3))
+            .map(|i| {
+                let shape = LayerShape::fc(
+                    rng.gen_range_inclusive(64, 4_000),
+                    rng.gen_range_inclusive(16, 2_048),
+                    rng.gen_range_inclusive(16, 1_024),
+                );
+                Layer::new(&format!("l{i}"), LayerKind::Fc, shape)
+            })
+            .collect();
+        let dnn = Dnn::chain("rand", layers);
+        let table = ProfileTable::build("rand", &dnn, geom, &bufs);
+        let store = ProfileStore::from_tables("<memory>", vec![table]);
+        let (mut with_tables, mut ladder_only) = (0u64, 0u64);
+        for l in &dnn.layers {
+            let gemm = l.shape.gemm();
+            let base = best_over(geom, gemm, &bufs, ladder(geom).into_iter())
+                .expect("ladder is never empty");
+            let shapes = ladder(geom).into_iter().chain(
+                store.candidates(geom, gemm.k, gemm.m).iter().map(|c| (c.rows, c.cols)),
+            );
+            let union = best_over(geom, gemm, &bufs, shapes).expect("union is never empty");
+            prop::ensure(
+                union.0 <= base.0,
+                &format!(
+                    "union best {} > ladder best {} for {:?} on {}x{}",
+                    union.0, base.0, gemm, geom.rows, geom.cols
+                ),
+            )?;
+            with_tables += union.0;
+            ladder_only += base.0;
+        }
+        prop::ensure(
+            with_tables <= ladder_only,
+            "projected completion with tables exceeds the ladder plan",
+        )?;
+        Ok(())
+    });
+}
+
+/// `mtsa profile` output is a pure function of (models, geometries):
+/// byte-identical JSON and CSV at any worker-thread count.
+#[test]
+fn table_bytes_are_thread_count_invariant() {
+    let bufs = BufferConfig::default();
+    let jobs: Vec<(String, ArrayGeometry)> = vec![
+        ("NCF".into(), ArrayGeometry::new(128, 128)),
+        ("NCF".into(), ArrayGeometry::new(96, 64)),
+        ("MelodyLSTM".into(), ArrayGeometry::new(128, 128)),
+        ("AlexNet".into(), ArrayGeometry::new(128, 128)),
+    ];
+    let base = build_tables(&jobs, &bufs, 1).unwrap();
+    for threads in [2usize, 8] {
+        let other = build_tables(&jobs, &bufs, threads).unwrap();
+        assert_eq!(base.len(), other.len());
+        for (a, b) in base.iter().zip(&other) {
+            assert_eq!(
+                a.to_json().render(),
+                b.to_json().render(),
+                "{} at {threads} threads",
+                a.stem()
+            );
+            assert_eq!(a.report_csv(&bufs), b.report_csv(&bufs), "{}", a.stem());
+        }
+    }
+}
+
+/// A persisted table whose model has since changed (here: a tampered
+/// hash standing in for a zoo edit) is rejected at load, naming the
+/// model so the fix — re-running `mtsa profile` — is obvious.
+#[test]
+fn stale_tables_are_rejected_naming_the_model() {
+    let dir = std::env::temp_dir().join(format!("mtsa-stale-int-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let bufs = BufferConfig::default();
+    let jobs = vec![("NCF".to_string(), ArrayGeometry::new(128, 128))];
+    let tables = build_tables(&jobs, &bufs, 1).unwrap();
+    write_artifacts(&tables[0], &bufs, &dir).unwrap();
+    assert!(ProfileStore::load(&dir).is_ok(), "fresh artifacts load cleanly");
+    let path = dir.join("ncf_128x128.table.json");
+    let tampered = std::fs::read_to_string(&path)
+        .unwrap()
+        .replace(&format!("\"hash\":\"{}\"", tables[0].hash), "\"hash\":\"deadbeefdeadbeef\"");
+    std::fs::write(&path, tampered).unwrap();
+    let err = ProfileStore::load(&dir).unwrap_err();
+    assert!(err.contains("stale profile table"), "{err}");
+    assert!(err.contains("NCF"), "names the model: {err}");
+    assert!(err.contains("mtsa profile"), "says how to fix it: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
