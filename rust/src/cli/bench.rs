@@ -28,6 +28,13 @@
 //!   ([`crate::profiler::build_tables`]): the exhaustive closed-form tile
 //!   search over two zoo models on the base geometry; `tables_per_sec` is
 //!   the `mtsa profile` throughput unit.  Informational (not gated).
+//! - `planner_plans_per_sec` — one `DynamicScheduler::plan` decision over
+//!   the heavy pool's ready queue (a memo replay when the plan cache is
+//!   enabled — the planner campaign's steady-state cost).  Informational
+//!   (not gated).
+//! - `coalesce_burst` — `DynamicScheduler::run` over a pool of same-cycle
+//!   arrival bursts, the shape the event-coalescing fast path batches
+//!   into single plan passes.  Informational (not gated).
 
 use std::time::{Duration, Instant};
 
@@ -35,19 +42,24 @@ use anyhow::{bail, Context, Result};
 
 use super::args::ParsedArgs;
 use crate::benchkit::{Bench, BenchOpts};
-use crate::coordinator::partition::alloc_index_enabled;
-use crate::coordinator::scheduler::{AllocPolicy, DynamicScheduler, FeedModel, SchedulerConfig};
+use crate::coordinator::partition::{alloc_index_enabled, PartitionManager};
+use crate::coordinator::queue::TaskQueue;
+use crate::coordinator::scheduler::{
+    plan_arena_enabled, plan_cache_enabled, AllocPolicy, DynamicScheduler, FeedModel,
+    SchedulerConfig,
+};
 use crate::fleet::{run_fleet, FleetConfig, FleetPolicy, Placement};
 use crate::sim::buffers::BufferConfig;
 use crate::sim::dataflow::{timing_cache_enabled, ArrayGeometry};
 use crate::sim::partitioned::{slice_layer_timing, FeedPolicy, PartitionSlice};
-use crate::sim_core::obs_ring_enabled;
 use crate::sim_core::queue::bucket_queue_enabled;
+use crate::sim_core::{event_coalesce_enabled, obs_ring_enabled, Scheduler, SystemState};
 use crate::sweep::{run_sweep, SweepGrid};
 use crate::util::json::Json;
+use crate::workloads::dnng::{Dnn, Layer, WorkloadPool};
 use crate::workloads::generator::{ArrivalProcess, Diurnal, ModelMix};
 use crate::workloads::models::heavy_pool;
-use crate::workloads::shapes::GemmDims;
+use crate::workloads::shapes::{GemmDims, LayerKind, LayerShape};
 
 /// Layout version of the `BENCH_*.json` files.
 pub const BENCH_SCHEMA: u64 = 1;
@@ -76,6 +88,11 @@ struct Measured {
     profile_tables: usize,
     profile_wall_s: f64,
     profile_tables_per_sec: f64,
+    plan_ns_per_call: f64,
+    plans_per_sec: f64,
+    burst_events_per_run: u64,
+    burst_wall_s_per_run: f64,
+    burst_events_per_sec: f64,
 }
 
 fn measure(quick: bool, threads: usize) -> Result<Measured> {
@@ -166,6 +183,53 @@ fn measure(quick: bool, threads: usize) -> Result<Measured> {
         .map_err(anyhow::Error::msg)?
         .len();
     let profile_wall_s = t0.elapsed().as_secs_f64();
+
+    // The planner hot path in isolation: one plan() decision over the
+    // heavy pool's initial ready queue.  With the plan cache on this is
+    // the steady-state memo replay; with MTSA_NO_PLAN_CACHE it is a full
+    // candidate search + pricing pass.
+    let plan_queue = TaskQueue::new(&pool);
+    let plan_pm = PartitionManager::new(SchedulerConfig::default().geom);
+    let plan_progress = std::collections::BTreeMap::new();
+    let plan_state = SystemState {
+        now: 0,
+        pool: &pool,
+        queue: &plan_queue,
+        partitions: &plan_pm,
+        mem: None,
+        progress: &plan_progress,
+    };
+    let mut planner = DynamicScheduler::new(SchedulerConfig::default());
+    let plan = b.measure("DynamicScheduler::plan (heavy ready queue)", || {
+        std::hint::black_box(planner.plan(&plan_state));
+    });
+
+    // Same-cycle arrival bursts: the shape the event-coalescing fast
+    // path turns into one batch drain + one plan pass per burst cycle.
+    let burst_pool = {
+        let mut dnns = Vec::new();
+        for burst in 0..4u64 {
+            for i in 0..8 {
+                let layers = (0..3)
+                    .map(|l| {
+                        Layer::new(&format!("l{l}"), LayerKind::Fc, LayerShape::fc(32, 64, 64))
+                    })
+                    .collect();
+                dnns.push(
+                    Dnn::chain(&format!("b{burst}-{i}"), layers).arriving_at(burst * 50_000),
+                );
+            }
+        }
+        WorkloadPool::new("bursts", dnns)
+    };
+    let burst_sched = DynamicScheduler::new(SchedulerConfig::default());
+    let bm = burst_sched.run(&burst_pool);
+    let burst_events_per_run =
+        burst_pool.dnns.len() as u64 + bm.dispatches.len() as u64 + bm.preemptions;
+    let burst = b.measure("coalesce_burst (8-wide same-cycle arrivals)", || {
+        std::hint::black_box(burst_sched.run(&burst_pool));
+    });
+    let burst_wall_s = burst.mean / 1e9;
     b.finish();
 
     Ok(Measured {
@@ -184,13 +248,18 @@ fn measure(quick: bool, threads: usize) -> Result<Measured> {
         profile_tables,
         profile_wall_s,
         profile_tables_per_sec: profile_tables as f64 / profile_wall_s.max(1e-9),
+        plan_ns_per_call: plan.mean,
+        plans_per_sec: 1e9 / plan.mean.max(1e-9),
+        burst_events_per_run,
+        burst_wall_s_per_run: burst_wall_s,
+        burst_events_per_sec: burst_events_per_run as f64 / burst_wall_s.max(1e-12),
     })
 }
 
 fn record_json(m: &Measured) -> Json {
     obj(vec![
         ("schema", Json::Num(BENCH_SCHEMA as f64)),
-        ("pr", Json::Num(8.0)),
+        ("pr", Json::Num(9.0)),
         ("provenance", Json::Str("measured".into())),
         ("tolerance_pct", Json::Num(100.0 * REGRESSION_TOLERANCE)),
         (
@@ -200,6 +269,9 @@ fn record_json(m: &Measured) -> Json {
                 ("bucket_queue", Json::Bool(bucket_queue_enabled())),
                 ("alloc_index", Json::Bool(alloc_index_enabled())),
                 ("obs_ring", Json::Bool(obs_ring_enabled())),
+                ("plan_cache", Json::Bool(plan_cache_enabled())),
+                ("event_coalesce", Json::Bool(event_coalesce_enabled())),
+                ("plan_arena", Json::Bool(plan_arena_enabled())),
             ]),
         ),
         (
@@ -241,6 +313,21 @@ fn record_json(m: &Measured) -> Json {
                         ("tables", Json::Num(m.profile_tables as f64)),
                         ("wall_s", Json::Num(m.profile_wall_s)),
                         ("tables_per_sec", Json::Num(m.profile_tables_per_sec)),
+                    ]),
+                ),
+                (
+                    "planner_plans_per_sec",
+                    obj(vec![
+                        ("ns_per_plan", Json::Num(m.plan_ns_per_call)),
+                        ("plans_per_sec", Json::Num(m.plans_per_sec)),
+                    ]),
+                ),
+                (
+                    "coalesce_burst",
+                    obj(vec![
+                        ("events_per_run", Json::Num(m.burst_events_per_run as f64)),
+                        ("wall_s_per_run", Json::Num(m.burst_wall_s_per_run)),
+                        ("events_per_sec", Json::Num(m.burst_events_per_sec)),
                     ]),
                 ),
             ]),
@@ -320,12 +407,12 @@ pub fn cmd_bench(args: &ParsedArgs) -> Result<()> {
     );
 
     if args.has("check") {
-        let baseline = args.opt("baseline").unwrap_or("BENCH_8.json");
+        let baseline = args.opt("baseline").unwrap_or("BENCH_9.json");
         check_against(baseline, &m)?;
     }
 
     if args.has("record") {
-        let out = args.opt("out").unwrap_or("BENCH_8.json");
+        let out = args.opt("out").unwrap_or("BENCH_9.json");
         let json = carry_forward_pre_pr(out, record_json(&m)).render();
         std::fs::write(out, &json).with_context(|| format!("writing {out}"))?;
         println!("wrote {out} ({} bytes, provenance \"measured\")", json.len());
@@ -339,6 +426,33 @@ mod tests {
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("mtsa-bench-{}-{name}", std::process::id()))
+    }
+
+    /// A placeholder measurement for the `check_against` tests — only
+    /// `events_per_sec` participates in gating.
+    fn fake_measured(events_per_sec: f64) -> Measured {
+        Measured {
+            events_per_run: 100,
+            events_per_sec,
+            engine_wall_s_per_run: 1.0,
+            timing_ns_per_call: 1.0,
+            sweep_points: 1,
+            sweep_requests: 4,
+            sweep_wall_s: 1.0,
+            sweep_points_per_sec: 1.0,
+            fleet_requests: 300,
+            fleet_events: 1,
+            fleet_wall_s: 1.0,
+            fleet_events_per_sec: 1.0,
+            profile_tables: 2,
+            profile_wall_s: 1.0,
+            profile_tables_per_sec: 2.0,
+            plan_ns_per_call: 1.0,
+            plans_per_sec: 1e9,
+            burst_events_per_run: 1,
+            burst_wall_s_per_run: 1.0,
+            burst_events_per_sec: 1.0,
+        }
     }
 
     #[test]
@@ -360,13 +474,18 @@ mod tests {
         assert!(eng.get("events_per_run").unwrap().as_u64().unwrap() > 0);
         let sweep = parsed.get("scenarios").unwrap().get("sweep_point_light").unwrap();
         assert!(sweep.get("points_per_sec").unwrap().as_f64().unwrap() > 0.0);
-        assert_eq!(parsed.get("pr").and_then(Json::as_u64), Some(8));
+        assert_eq!(parsed.get("pr").and_then(Json::as_u64), Some(9));
         let fleet = parsed.get("scenarios").unwrap().get("fleet_events_per_sec").unwrap();
         assert!(fleet.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert!(fleet.get("events").unwrap().as_u64().unwrap() > 0);
         let prof = parsed.get("scenarios").unwrap().get("profiler_tables_per_sec").unwrap();
         assert_eq!(prof.get("tables").unwrap().as_u64(), Some(2));
         assert!(prof.get("tables_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        let plan = parsed.get("scenarios").unwrap().get("planner_plans_per_sec").unwrap();
+        assert!(plan.get("plans_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        let burst = parsed.get("scenarios").unwrap().get("coalesce_burst").unwrap();
+        assert!(burst.get("events_per_run").unwrap().as_u64().unwrap() >= 32);
+        assert!(burst.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
         let _ = std::fs::remove_file(&out);
     }
 
@@ -418,23 +537,7 @@ mod tests {
             r#"{"provenance":"projected","scenarios":{"engine_run_heavy":{"events_per_sec":1e18}}}"#,
         )
         .unwrap();
-        let m = Measured {
-            events_per_run: 100,
-            events_per_sec: 1.0,
-            engine_wall_s_per_run: 1.0,
-            timing_ns_per_call: 1.0,
-            sweep_points: 1,
-            sweep_requests: 4,
-            sweep_wall_s: 1.0,
-            sweep_points_per_sec: 1.0,
-            fleet_requests: 300,
-            fleet_events: 1,
-            fleet_wall_s: 1.0,
-            fleet_events_per_sec: 1.0,
-            profile_tables: 2,
-            profile_wall_s: 1.0,
-            profile_tables_per_sec: 2.0,
-        };
+        let m = fake_measured(1.0);
         assert!(!check_against(base.to_str().unwrap(), &m).unwrap());
         let _ = std::fs::remove_file(&base);
     }
@@ -447,23 +550,7 @@ mod tests {
             r#"{"provenance":"measured","scenarios":{"engine_run_heavy":{"events_per_sec":1000.0}}}"#,
         )
         .unwrap();
-        let mut m = Measured {
-            events_per_run: 100,
-            events_per_sec: 900.0, // within 15%
-            engine_wall_s_per_run: 1.0,
-            timing_ns_per_call: 1.0,
-            sweep_points: 1,
-            sweep_requests: 4,
-            sweep_wall_s: 1.0,
-            sweep_points_per_sec: 1.0,
-            fleet_requests: 300,
-            fleet_events: 1,
-            fleet_wall_s: 1.0,
-            fleet_events_per_sec: 1.0,
-            profile_tables: 2,
-            profile_wall_s: 1.0,
-            profile_tables_per_sec: 2.0,
-        };
+        let mut m = fake_measured(900.0); // within 15%
         assert!(check_against(base.to_str().unwrap(), &m).unwrap());
         m.events_per_sec = 800.0; // >15% below
         let err = check_against(base.to_str().unwrap(), &m).unwrap_err();
@@ -473,23 +560,7 @@ mod tests {
 
     #[test]
     fn missing_baseline_is_an_error() {
-        let m = Measured {
-            events_per_run: 1,
-            events_per_sec: 1.0,
-            engine_wall_s_per_run: 1.0,
-            timing_ns_per_call: 1.0,
-            sweep_points: 1,
-            sweep_requests: 4,
-            sweep_wall_s: 1.0,
-            sweep_points_per_sec: 1.0,
-            fleet_requests: 300,
-            fleet_events: 1,
-            fleet_wall_s: 1.0,
-            fleet_events_per_sec: 1.0,
-            profile_tables: 2,
-            profile_wall_s: 1.0,
-            profile_tables_per_sec: 2.0,
-        };
+        let m = fake_measured(1.0);
         assert!(check_against("/nonexistent/BENCH_6.json", &m).is_err());
     }
 }

@@ -8,6 +8,7 @@
 //! takes all columns; otherwise wait.
 
 use super::metrics::RunMetrics;
+use super::queue::ReadyLayer;
 use crate::sim::dataflow::baseline_layer_timing;
 use crate::sim::partitioned::Tile;
 use crate::sim_core::{Allocation, Engine, LayerExec, Scheduler, SystemState};
@@ -19,11 +20,14 @@ use super::scheduler::SchedulerConfig;
 #[derive(Debug, Clone)]
 pub struct SequentialBaseline {
     cfg: SchedulerConfig,
+    /// Recycled ready-layer scratch: `plan` runs once per event batch, so
+    /// the buffer keeps its high-water capacity instead of reallocating.
+    ready_buf: Vec<ReadyLayer>,
 }
 
 impl SequentialBaseline {
     pub fn new(cfg: SchedulerConfig) -> SequentialBaseline {
-        SequentialBaseline { cfg }
+        SequentialBaseline { cfg, ready_buf: Vec::new() }
     }
 
     /// Run the pool on the shared engine: DNNs in arrival order, layers
@@ -47,8 +51,10 @@ impl Scheduler for SequentialBaseline {
         if !s.partitions.fully_free() {
             return Vec::new();
         }
-        let ready = s.queue.ready_at(s.now);
+        let mut ready = std::mem::take(&mut self.ready_buf);
+        s.queue.ready_into(s.now, &mut ready);
         if ready.is_empty() {
+            self.ready_buf = ready;
             return Vec::new();
         }
         // The earliest-arriving unfinished DNN holds the array; later
@@ -66,12 +72,18 @@ impl Scheduler for SequentialBaseline {
                 current = Some(key);
             }
         }
-        let Some((_, di)) = current else { return Vec::new() };
-        match ready.iter().filter(|r| r.dnn == di).map(|r| r.layer).min() {
-            Some(layer) => vec![Allocation { dnn: di, layer, tile: Tile::full(self.cfg.geom) }],
-            // Current DNN not arrived yet: idle until its arrival.
+        let out = match current {
+            Some((_, di)) => match ready.iter().filter(|r| r.dnn == di).map(|r| r.layer).min() {
+                Some(layer) => {
+                    vec![Allocation { dnn: di, layer, tile: Tile::full(self.cfg.geom) }]
+                }
+                // Current DNN not arrived yet: idle until its arrival.
+                None => Vec::new(),
+            },
             None => Vec::new(),
-        }
+        };
+        self.ready_buf = ready;
+        out
     }
 
     fn exec(

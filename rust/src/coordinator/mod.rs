@@ -49,4 +49,7 @@ pub mod static_part;
 pub use metrics::{DispatchRecord, RunMetrics, TenantStats};
 pub use partition::PartitionManager;
 pub use scenario::{Scenario, ScenarioObserver, ScenarioSpec};
-pub use scheduler::{DynamicScheduler, PartitionMode, PreemptMode, SchedulerConfig, UnknownTag};
+pub use scheduler::{
+    plan_arena_enabled, plan_cache_enabled, DynamicScheduler, PartitionMode, PreemptMode,
+    SchedulerConfig, UnknownTag,
+};

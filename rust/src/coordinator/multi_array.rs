@@ -17,6 +17,7 @@
 use std::collections::BTreeMap;
 
 use super::metrics::RunMetrics;
+use super::queue::ReadyLayer;
 use super::scheduler::SchedulerConfig;
 use crate::sim::buffers::BufferConfig;
 use crate::sim::dataflow::{baseline_layer_timing, ArrayGeometry};
@@ -69,6 +70,8 @@ pub struct MultiArrayPolicy {
     /// MACs each live DNN contributed to its chip's load (so a recycled
     /// slot's contribution can be subtracted when it retires).
     macs: BTreeMap<DnnId, u64>,
+    /// Recycled ready-layer scratch — see `SequentialBaseline::ready_buf`.
+    ready_buf: Vec<ReadyLayer>,
 }
 
 impl MultiArrayPolicy {
@@ -83,6 +86,7 @@ impl MultiArrayPolicy {
             fifo: vec![Vec::new(); bank.num_arrays],
             load: vec![0; bank.num_arrays],
             macs: BTreeMap::new(),
+            ready_buf: Vec::new(),
         }
     }
 
@@ -128,8 +132,10 @@ impl Scheduler for MultiArrayPolicy {
     }
 
     fn plan(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
-        let ready = s.queue.ready_at(s.now);
+        let mut ready = std::mem::take(&mut self.ready_buf);
+        s.queue.ready_into(s.now, &mut ready);
         if ready.is_empty() {
+            self.ready_buf = ready;
             return Vec::new();
         }
         let mut out = Vec::new();
@@ -148,6 +154,7 @@ impl Scheduler for MultiArrayPolicy {
             };
             out.push(Allocation { dnn, layer, tile: chip });
         }
+        self.ready_buf = ready;
         out
     }
 

@@ -23,6 +23,7 @@
 //! the original 1D slice manager (merging is only ever horizontal, and
 //! the guillotine split leaves only left/right strips).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
 
 use crate::sim::dataflow::ArrayGeometry;
@@ -30,6 +31,13 @@ use crate::sim::partitioned::{PartitionSlice, Tile};
 
 /// Allocation handle: index into the live allocation table.
 pub type AllocId = usize;
+
+/// Process-global source of manager identities: every
+/// [`PartitionManager::new`] draws a fresh nonce, and clones keep their
+/// original's, so `(nonce, epoch)` names one concrete free-rectangle set
+/// across a manager and all its rehearse clones without ever influencing
+/// allocation behavior.
+static PM_NONCE: AtomicU64 = AtomicU64::new(1);
 
 /// Whether the sorted free-region index is consulted by the allocator
 /// lookups ([`PartitionManager::allocate_tile`],
@@ -51,7 +59,7 @@ struct Region {
 }
 
 /// Manages the rectangular partitioning of an `ArrayGeometry`.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct PartitionManager {
     geom: ArrayGeometry,
     /// Sorted by `(row0, col0)` — the deterministic scan order.
@@ -63,6 +71,40 @@ pub struct PartitionManager {
     /// region set changes (every mutation ends in [`Self::merge_free`]).
     free_index: Vec<usize>,
     next_id: AllocId,
+    /// Identity of this manager lineage (shared by rehearse clones),
+    /// drawn from [`PM_NONCE`].  Purely observational.
+    nonce: u64,
+    /// Bumped once per mutating call (allocate / allocate_at / free /
+    /// shrink — every mutation path runs [`Self::merge_free`] exactly
+    /// once).  `(nonce, epoch)` therefore uniquely names a free set:
+    /// planners key memoized candidate searches on it.
+    epoch: u64,
+}
+
+/// Clone is manual so `clone_from` can reuse the destination's existing
+/// `regions`/`free_index` capacity — the rehearse path clones the live
+/// manager on every plan call, and with the plan arena it clones into a
+/// recycled scratch manager instead of allocating fresh vectors.
+impl Clone for PartitionManager {
+    fn clone(&self) -> PartitionManager {
+        PartitionManager {
+            geom: self.geom,
+            regions: self.regions.clone(),
+            free_index: self.free_index.clone(),
+            next_id: self.next_id,
+            nonce: self.nonce,
+            epoch: self.epoch,
+        }
+    }
+
+    fn clone_from(&mut self, src: &PartitionManager) {
+        self.geom = src.geom;
+        self.regions.clone_from(&src.regions);
+        self.free_index.clone_from(&src.free_index);
+        self.next_id = src.next_id;
+        self.nonce = src.nonce;
+        self.epoch = src.epoch;
+    }
 }
 
 impl PartitionManager {
@@ -72,7 +114,17 @@ impl PartitionManager {
             regions: vec![Region { tile: Tile::full(geom), owner: None }],
             free_index: vec![0],
             next_id: 0,
+            nonce: PM_NONCE.fetch_add(1, Ordering::Relaxed),
+            epoch: 0,
         }
+    }
+
+    /// `(nonce, epoch)` — a stable name for the current free-rectangle
+    /// set.  The nonce identifies the manager lineage (rehearse clones
+    /// share it), the epoch bumps on every mutation, so two equal keys
+    /// within one lineage always mean an identical free set.
+    pub fn plan_key(&self) -> (u64, u64) {
+        (self.nonce, self.epoch)
     }
 
     pub fn geom(&self) -> ArrayGeometry {
@@ -130,12 +182,24 @@ impl PartitionManager {
 
     /// Free regions, in `(row0, col0)` order.
     pub fn free_tiles(&self) -> Vec<Tile> {
-        self.regions.iter().filter(|r| r.owner.is_none()).map(|r| r.tile).collect()
+        self.free_tiles_iter().collect()
+    }
+
+    /// Allocation-free view of [`Self::free_tiles`], in the same
+    /// `(row0, col0)` order — the planner hot path iterates this without
+    /// materializing a vector.
+    pub fn free_tiles_iter(&self) -> impl Iterator<Item = Tile> + '_ {
+        self.regions.iter().filter(|r| r.owner.is_none()).map(|r| r.tile)
     }
 
     /// Live allocated tiles, in `(row0, col0)` order.
     pub fn allocated_tiles(&self) -> Vec<Tile> {
-        self.regions.iter().filter(|r| r.owner.is_some()).map(|r| r.tile).collect()
+        self.allocated_tiles_iter().collect()
+    }
+
+    /// Allocation-free view of [`Self::allocated_tiles`].
+    pub fn allocated_tiles_iter(&self) -> impl Iterator<Item = Tile> + '_ {
+        self.regions.iter().filter(|r| r.owner.is_some()).map(|r| r.tile)
     }
 
     /// Widest free *full-height* slice, if any (leftmost on width ties —
@@ -288,6 +352,13 @@ impl PartitionManager {
     /// Merge free regions sharing a full edge, to fixpoint, in
     /// deterministic `(row0, col0)` scan order.
     fn merge_free(&mut self) {
+        // Every mutating entry point (allocate → allocate_at, allocate_at,
+        // free, shrink) lands here exactly once, and failed allocations
+        // return before any mutation — so the epoch counts mutations.
+        // `free`'s all-free pinwheel reset below runs *within* the same
+        // `free` call, after this bump: it is a deterministic function of
+        // the post-merge state, so one epoch still names one free set.
+        self.epoch += 1;
         // Sort once, outside the fixpoint loop: a merge replaces region
         // `i`'s tile with the merged rectangle — whose top-left corner is
         // exactly region `i`'s corner, because `j > i` in `(row0, col0)`
@@ -438,6 +509,34 @@ mod tests {
     /// Full-height tile shorthand (the columns-mode shape).
     fn fh(col0: u64, width: u64) -> Tile {
         Tile::full_height(GEOM, col0, width)
+    }
+
+    #[test]
+    fn plan_key_tracks_mutations_and_clone_lineage() {
+        let mut pm = PartitionManager::new(GEOM);
+        let (n0, e0) = pm.plan_key();
+        // A failed allocation mutates nothing: the key must not move.
+        assert!(pm.allocate(1024).is_none());
+        assert_eq!(pm.plan_key(), (n0, e0));
+        let (a, _) = pm.allocate(32).unwrap();
+        assert_eq!(pm.plan_key(), (n0, e0 + 1));
+        // Rehearse clones share the lineage nonce and replaying the same
+        // mutation sequence lands both on the same key + free set.
+        let mut clone = pm.clone();
+        assert_eq!(clone.plan_key(), pm.plan_key());
+        let (_, t) = clone.allocate(16).unwrap();
+        pm.allocate_at(t).unwrap();
+        assert_eq!(clone.plan_key(), pm.plan_key());
+        assert_eq!(clone.free_tiles(), pm.free_tiles());
+        pm.free(a);
+        assert_ne!(pm.plan_key(), clone.plan_key());
+        // Fresh managers are distinct lineages.
+        assert_ne!(PartitionManager::new(GEOM).plan_key().0, n0);
+        // clone_from reuses capacity but must copy the key too.
+        let mut dst = PartitionManager::new(GEOM);
+        dst.clone_from(&pm);
+        assert_eq!(dst.plan_key(), pm.plan_key());
+        assert_eq!(dst.free_tiles(), pm.free_tiles());
     }
 
     #[test]

@@ -128,16 +128,25 @@ impl TaskQueue {
     /// paper's `Task_Assignment` order; ties broken by (dnn, layer) for
     /// determinism).
     pub fn ready_at(&self, now: u64) -> Vec<ReadyLayer> {
-        let mut ready: Vec<ReadyLayer> = self
-            .frontier
-            .iter()
-            .filter(|&&(di, li)| {
-                self.arrival[di] <= now && self.state[di][li] == LayerState::Waiting
-            })
-            .map(|&(di, li)| ReadyLayer { dnn: di, layer: li, opr: self.opr[di][li] })
-            .collect();
-        ready.sort_by(|a, b| b.opr.cmp(&a.opr).then(a.dnn.cmp(&b.dnn)).then(a.layer.cmp(&b.layer)));
+        let mut ready = Vec::new();
+        self.ready_into(now, &mut ready);
         ready
+    }
+
+    /// [`Self::ready_at`] into a caller-recycled buffer (cleared first) —
+    /// the planner hot path calls this at every scheduling point, so the
+    /// recycled form avoids one heap allocation per decision.
+    pub fn ready_into(&self, now: u64, out: &mut Vec<ReadyLayer>) {
+        out.clear();
+        out.extend(
+            self.frontier
+                .iter()
+                .filter(|&&(di, li)| {
+                    self.arrival[di] <= now && self.state[di][li] == LayerState::Waiting
+                })
+                .map(|&(di, li)| ReadyLayer { dnn: di, layer: li, opr: self.opr[di][li] }),
+        );
+        out.sort_by(|a, b| b.opr.cmp(&a.opr).then(a.dnn.cmp(&b.dnn)).then(a.layer.cmp(&b.layer)));
     }
 
     /// Earliest future arrival after `now`, if any (for event scheduling).

@@ -26,9 +26,11 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::str::FromStr;
+use std::sync::OnceLock;
 
 use super::metrics::RunMetrics;
-use super::partition::AllocId;
+use super::partition::{AllocId, PartitionManager};
+use super::queue::ReadyLayer;
 use crate::mem::{MemConfig, MemSpec};
 use crate::profiler::ProfileStore;
 use crate::sim::activity::Activity;
@@ -317,6 +319,53 @@ fn ceil_pow2(x: u64) -> u64 {
     x.next_power_of_two()
 }
 
+/// Whether the dynamic policy memoizes its priced plan per
+/// `(partition plan-key, ready-set signature)` so back-to-back decision
+/// points that change neither the free rectangles nor the ready set
+/// replay the previous plan instead of re-running the candidate search.
+/// Opt out with `MTSA_NO_PLAN_CACHE` (any value).  Both modes produce
+/// byte-identical plans — the memo key covers every input the search
+/// reads — so the switch exists for A/B timing and bisecting.
+pub fn plan_cache_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| std::env::var_os("MTSA_NO_PLAN_CACHE").is_none())
+}
+
+/// Whether the dynamic policy recycles its planning scratch (ready
+/// buffer, rehearsal manager, candidate and output vectors) across
+/// decision points, making the steady-state plan path allocation-free.
+/// Opt out with `MTSA_NO_PLAN_ARENA` (any value) to allocate fresh
+/// buffers per call, as the pre-arena planner did; the buffers carry no
+/// state between calls, so both modes are byte-identical.
+pub fn plan_arena_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| std::env::var_os("MTSA_NO_PLAN_ARENA").is_none())
+}
+
+/// Single-slot plan memo: the last computed plan and the signature of
+/// the state it was computed from.  One slot is exactly the hot case —
+/// consecutive decision points with an unchanged world (wake-ups,
+/// deadline replans, patience waits) — and needs no eviction policy.
+#[derive(Debug, Clone, Default)]
+struct PlanMemo {
+    valid: bool,
+    sig: Vec<u64>,
+    plan: Vec<Allocation>,
+    hits: u64,
+}
+
+/// Recycled scratch buffers for the zero-allocation plan path.  Contents
+/// are cleared (or overwritten via `clone_from`) before every use, so the
+/// arena carries capacity between decision points, never state.
+#[derive(Debug, Clone, Default)]
+struct PlanArena {
+    ready: Vec<ReadyLayer>,
+    cand: Vec<Tile>,
+    out: Vec<Vec<Allocation>>,
+    pm: Option<PartitionManager>,
+    sig: Vec<u64>,
+}
+
 /// The dynamic partitioning policy (with `preempt = off`, stateless
 /// between decision points: every plan is a pure function of the
 /// observable [`SystemState`] — the one cache below memoizes a
@@ -338,6 +387,14 @@ pub struct DynamicScheduler {
     /// Tenants whose deadline has already passed unmet (deadline mode's
     /// first-choice eviction victims).
     missed: BTreeSet<DnnId>,
+    /// Plan memoization on (process default [`plan_cache_enabled`];
+    /// per-instance override [`DynamicScheduler::with_plan_cache`]).
+    use_cache: bool,
+    /// Arena recycling on (process default [`plan_arena_enabled`];
+    /// per-instance override [`DynamicScheduler::with_plan_arena`]).
+    use_arena: bool,
+    memo: PlanMemo,
+    arena: PlanArena,
 }
 
 /// True when the layer would be memory-bound on a `width` slice even
@@ -368,11 +425,39 @@ impl DynamicScheduler {
             bound_cache: BTreeMap::new(),
             preempt_armed: false,
             missed: BTreeSet::new(),
+            use_cache: plan_cache_enabled(),
+            use_arena: plan_arena_enabled(),
+            memo: PlanMemo::default(),
+            arena: PlanArena::default(),
         }
     }
 
     pub fn config(&self) -> &SchedulerConfig {
         &self.cfg
+    }
+
+    /// Toggle the plan memo for THIS instance, overriding the
+    /// process-wide [`plan_cache_enabled`] default (in-process A/B tests
+    /// can't re-latch the env flag).  Resets the memo so a toggle never
+    /// replays stale state.
+    pub fn with_plan_cache(mut self, on: bool) -> DynamicScheduler {
+        self.use_cache = on;
+        self.memo = PlanMemo::default();
+        self
+    }
+
+    /// Toggle arena recycling for THIS instance, overriding the
+    /// process-wide [`plan_arena_enabled`] default.
+    pub fn with_plan_arena(mut self, on: bool) -> DynamicScheduler {
+        self.use_arena = on;
+        self
+    }
+
+    /// How many [`Scheduler::plan`] calls were answered from the memo
+    /// (always 0 with the cache off).  [`DynamicScheduler::run`] clones
+    /// the scheduler, so drive an [`Engine`] directly to observe this.
+    pub fn plan_cache_hits(&self) -> u64 {
+        self.memo.hits
     }
 
     /// Run a pool to completion on the shared engine; returns the full
@@ -553,10 +638,70 @@ impl Scheduler for DynamicScheduler {
     /// rehearsed on a clone of the live partition tiling.  `columns` mode
     /// is the paper's Algorithm 1 verbatim; `2d` mode additionally
     /// considers row splits per decision point.
+    ///
+    /// Hot-path structure: the ready set is computed once into a
+    /// recycled buffer, and — when the plan cache is on and `[mem]` is
+    /// off — the priced plan is memoized against the partition
+    /// [`plan_key`](PartitionManager::plan_key) plus a signature of
+    /// everything else the search reads (ready identities, `Opr` order,
+    /// remaining GEMMs, tables-on).  Decision points that change neither
+    /// the free rectangles nor the ready set replay the memo instead of
+    /// re-enumerating free-rects × ladder × table shapes.  `[mem]` runs
+    /// never memoize: the arbiter's live feedback steers the mem-aware
+    /// throttle without bumping the partition epoch, so the signature
+    /// could not see it change.
     fn plan(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
-        match self.cfg.partition_mode {
-            PartitionMode::Columns => self.plan_columns(s),
-            PartitionMode::TwoD => self.plan_2d(s),
+        let mut ready = std::mem::take(&mut self.arena.ready);
+        s.queue.ready_into(s.now, &mut ready);
+        if ready.is_empty() {
+            self.arena.ready = ready;
+            return Vec::new();
+        }
+
+        let cacheable = self.use_cache && s.mem.is_none();
+        if cacheable {
+            let mut sig = std::mem::take(&mut self.arena.sig);
+            sig.clear();
+            let (nonce, epoch) = s.partitions.plan_key();
+            sig.push(nonce);
+            sig.push(epoch);
+            sig.push(self.cfg.tables.is_some() as u64);
+            for r in &ready {
+                let g = s.remaining_gemm(r.dnn, r.layer);
+                sig.extend_from_slice(&[r.dnn as u64, r.layer as u64, r.opr, g.sr, g.k, g.m]);
+            }
+            if self.memo.valid && self.memo.sig == sig {
+                self.memo.hits += 1;
+                let mut out = self.take_out();
+                out.extend_from_slice(&self.memo.plan);
+                self.arena.sig = sig;
+                self.arena.ready = ready;
+                return out;
+            }
+            self.arena.sig = sig;
+        }
+        let out = match self.cfg.partition_mode {
+            PartitionMode::Columns => self.plan_columns(s, &ready),
+            PartitionMode::TwoD => self.plan_2d(s, &ready),
+        };
+        if cacheable {
+            // Adopt the just-built signature (the memo's old buffer
+            // becomes the next call's scratch) and copy the plan.
+            std::mem::swap(&mut self.memo.sig, &mut self.arena.sig);
+            self.memo.plan.clear();
+            self.memo.plan.extend_from_slice(&out);
+            self.memo.valid = true;
+        }
+        self.arena.ready = ready;
+        out
+    }
+
+    /// Arena recycling: a consumed plan vector returns to the pool
+    /// (bounded — the engine hands back one per decision point).
+    fn recycle_plan(&mut self, mut plan: Vec<Allocation>) {
+        if self.use_arena && self.arena.out.len() < 4 {
+            plan.clear();
+            self.arena.out.push(plan);
         }
     }
 
@@ -585,8 +730,7 @@ impl Scheduler for DynamicScheduler {
                     PartitionMode::Columns => coresident.max(1),
                     PartitionMode::TwoD => (s
                         .partitions
-                        .allocated_tiles()
-                        .iter()
+                        .allocated_tiles_iter()
                         .filter(|t| t.overlaps_rows(&tile))
                         .count() as u64)
                         .max(1),
@@ -637,23 +781,23 @@ impl DynamicScheduler {
 
     /// The paper's Algorithm 1 over full-height column slices — kept
     /// verbatim from the pre-2D scheduler (the `columns`-mode parity rail
-    /// pinned by `rust/tests/engine_parity.rs`).
-    fn plan_columns(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
-        let ready = s.queue.ready_at(s.now);
-        if ready.is_empty() {
-            return Vec::new();
-        }
-        let mut pm = s.partitions.clone();
-        let mut out = Vec::new();
+    /// pinned by `rust/tests/engine_parity.rs`).  The caller
+    /// ([`Scheduler::plan`]) computes `ready` (non-empty) once per
+    /// decision point; the rehearsal manager and the output vector come
+    /// from the recycled per-scheduler arena.
+    fn plan_columns(&mut self, s: &SystemState<'_>, ready: &[ReadyLayer]) -> Vec<Allocation> {
+        let mut pm = self.take_pm(s.partitions);
+        let mut out = self.take_out();
 
         // Partition_Calculation (Lines 15-19): divide the array by the
         // number of available layers (running partitions keep their
         // slices), on the power-of-two ladder.
-        let cfg_snapshot = self.cfg.clone();
-        let cfg = &cfg_snapshot;
+        let cols = self.cfg.geom.cols;
+        let min_width = self.cfg.min_width;
+        let alloc_policy = self.cfg.alloc_policy;
+        let patience = self.cfg.patience_divisor;
         let n_avail = ready.len() as u64 + pm.allocated_count() as u64;
-        let target =
-            floor_pow2((cfg.geom.cols / n_avail).max(1)).clamp(cfg.min_width, cfg.geom.cols);
+        let target = floor_pow2((cols / n_avail).max(1)).clamp(min_width, cols);
 
         let mut dispatched_any = false;
         // mem-aware throttle state: a memory-bound layer dispatched this
@@ -665,7 +809,7 @@ impl DynamicScheduler {
             // to partitions with higher resources").  A preempted
             // remainder is priced on what it has left.
             let gemm = self.gemm_remaining(s, r.dnn, r.layer);
-            let demand = ceil_pow2(gemm.m).clamp(cfg.min_width, cfg.geom.cols);
+            let demand = ceil_pow2(gemm.m).clamp(min_width, cols);
 
             // MoCA-style throttle (mem-aware policy): a layer headed for
             // the DRAM wall is deferred while another memory-bound layer
@@ -684,7 +828,7 @@ impl DynamicScheduler {
 
             // First layer on a fully idle array: all PEs (Line 6).
             if pm.fully_free() && n_avail == 1 {
-                let (_, tile) = pm.allocate(cfg.geom.cols).expect("full array free");
+                let (_, tile) = pm.allocate(cols).expect("full array free");
                 out.push(Allocation { dnn: r.dnn, layer: r.layer, tile });
                 dispatched_any = true;
                 bound_in_plan |= bound;
@@ -692,10 +836,10 @@ impl DynamicScheduler {
             }
 
             let widest = pm.widest_free().map(|s| s.width).unwrap_or(0);
-            if widest < cfg.min_width {
+            if widest < min_width {
                 continue; // nothing usable free right now
             }
-            let width = match cfg.alloc_policy {
+            let width = match alloc_policy {
                 // Paper-literal Partition_Calculation: take the equal
                 // share (capped by demand), no waiting.
                 AllocPolicy::EqualShare => demand.min(target).min(floor_pow2(widest)),
@@ -708,7 +852,7 @@ impl DynamicScheduler {
                 // identically; its throttle already ran above.
                 AllocPolicy::WidestToHeaviest | AllocPolicy::MemAware => {
                     let width = demand.min(floor_pow2(widest));
-                    let acceptable = (demand / cfg.patience_divisor).max(cfg.min_width);
+                    let acceptable = (demand / patience).max(min_width);
                     if width >= acceptable {
                         width
                     } else if pm.allocated_count() == 0 && !dispatched_any {
@@ -723,6 +867,7 @@ impl DynamicScheduler {
             dispatched_any = true;
             bound_in_plan |= bound;
         }
+        self.give_pm(pm);
         out
     }
 
@@ -741,13 +886,10 @@ impl DynamicScheduler {
     /// additionally caps the width demand at the `Partition_Calculation`
     /// equal share (`cols / n_available`, pow-2 ladder) and never waits
     /// on patience; `widest`/`mem-aware` carve demand-first.
-    fn plan_2d(&mut self, s: &SystemState<'_>) -> Vec<Allocation> {
-        let ready = s.queue.ready_at(s.now);
-        if ready.is_empty() {
-            return Vec::new();
-        }
-        let mut pm = s.partitions.clone();
-        let mut out = Vec::new();
+    fn plan_2d(&mut self, s: &SystemState<'_>, ready: &[ReadyLayer]) -> Vec<Allocation> {
+        let mut pm = self.take_pm(s.partitions);
+        let mut out = self.take_out();
+        let mut cand = std::mem::take(&mut self.arena.cand);
         let geom = self.cfg.geom;
         let buffers = self.cfg.buffers;
         let (min_width, min_rows) = (self.cfg.min_width, self.cfg.min_rows);
@@ -789,42 +931,20 @@ impl DynamicScheduler {
             }
 
             let mut best: Option<((u64, u64, u64, u64), Tile)> = None;
-            for rect in pm.free_tiles() {
-                let w = demand_w.min(floor_pow2(rect.cols));
-                if w < min_width {
-                    continue;
-                }
-                let mut h = demand_h.min(floor_pow2(rect.rows));
-                while h >= min_rows {
-                    let tile = Tile::new(rect.row0, rect.col0, h, w);
-                    let cycles =
-                        tile_layer_timing(geom, gemm, tile, FeedPolicy::Independent, &buffers)
-                            .cycles;
-                    let key = (cycles, tile.pes(), tile.row0, tile.col0);
-                    if best.map(|(bk, _)| key < bk).unwrap_or(true) {
-                        best = Some((key, tile));
-                    }
-                    if h == 1 {
-                        break;
-                    }
-                    h /= 2;
-                }
-                // Offline profile tables: union the layer's profiled
-                // exact-fit shapes with the pow-2 ladder above.  Same
-                // pricing call, same best key, so the plan can only
-                // improve; anything the table lacks (preempted remnants
-                // hash to a different K) falls back to the ladder.
-                let Some(store) = tables.as_deref() else { continue };
-                for c in store.candidates(geom, gemm.k, gemm.m) {
-                    if c.rows < min_rows
-                        || c.cols < min_width
-                        || c.rows > rect.rows
-                        || c.cols > rect.cols
-                        || c.cols > demand_w
-                    {
-                        continue;
-                    }
-                    let tile = Tile::new(rect.row0, rect.col0, c.rows, c.cols);
+            for rect in pm.free_tiles_iter() {
+                cand.clear();
+                push_rect_candidates(
+                    rect,
+                    demand_w,
+                    demand_h,
+                    min_width,
+                    min_rows,
+                    tables.as_deref(),
+                    geom,
+                    gemm,
+                    &mut cand,
+                );
+                for &tile in &cand {
                     let cycles =
                         tile_layer_timing(geom, gemm, tile, FeedPolicy::Independent, &buffers)
                             .cycles;
@@ -855,7 +975,94 @@ impl DynamicScheduler {
             dispatched_any = true;
             bound_in_plan |= bound;
         }
+        self.arena.cand = cand;
+        self.give_pm(pm);
         out
+    }
+
+    /// A rehearsal manager primed from the live tiling: recycled from the
+    /// arena (capacity reuse via `clone_from`) when arenas are on.
+    fn take_pm(&mut self, live: &PartitionManager) -> PartitionManager {
+        match self.arena.pm.take() {
+            Some(mut pm) if self.use_arena => {
+                pm.clone_from(live);
+                pm
+            }
+            _ => live.clone(),
+        }
+    }
+
+    fn give_pm(&mut self, pm: PartitionManager) {
+        if self.use_arena {
+            self.arena.pm = Some(pm);
+        }
+    }
+
+    /// An empty allocation vector, recycled from the arena when one is
+    /// pooled ([`Scheduler::recycle_plan`] returns them).
+    fn take_out(&mut self) -> Vec<Allocation> {
+        let mut v = self.arena.out.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+}
+
+/// Enumerate one free rectangle's candidate tiles for a layer: the pow-2
+/// height ladder at the layer's width demand, unioned with the layer's
+/// profiled exact-fit shapes (when tables are on).  The union is deduped
+/// on `(row0, col0, rows, cols)` — a profiled shape that coincides with a
+/// ladder rung used to be enumerated and priced twice; since the planner
+/// takes a strict minimum over `(cycles, pes, row0, col0)`, pricing a
+/// duplicate can never change the chosen tile, only waste a timing call.
+/// Ladder candidates precede table candidates, preserving the original
+/// evaluation (and therefore tie-breaking) order exactly.
+#[allow(clippy::too_many_arguments)]
+fn push_rect_candidates(
+    rect: Tile,
+    demand_w: u64,
+    demand_h: u64,
+    min_width: u64,
+    min_rows: u64,
+    tables: Option<&ProfileStore>,
+    geom: ArrayGeometry,
+    gemm: GemmDims,
+    out: &mut Vec<Tile>,
+) {
+    let w = demand_w.min(floor_pow2(rect.cols));
+    if w < min_width {
+        return;
+    }
+    let h0 = demand_h.min(floor_pow2(rect.rows));
+    let mut h = h0;
+    while h >= min_rows {
+        out.push(Tile::new(rect.row0, rect.col0, h, w));
+        if h == 1 {
+            break;
+        }
+        h /= 2;
+    }
+    // Offline profile tables: union the layer's profiled exact-fit
+    // shapes with the pow-2 ladder above.  Same pricing call, same best
+    // key, so the plan can only improve; anything the table lacks
+    // (preempted remnants hash to a different K) falls back to the
+    // ladder.
+    let Some(store) = tables else { return };
+    for c in store.candidates(geom, gemm.k, gemm.m) {
+        if c.rows < min_rows
+            || c.cols < min_width
+            || c.rows > rect.rows
+            || c.cols > rect.cols
+            || c.cols > demand_w
+        {
+            continue;
+        }
+        // Ladder-duplicate check: the rungs are exactly {h0 / 2^i ≥
+        // min_rows} at width `w`, so membership is divisibility by a
+        // power of two (exact even for non-pow-2 h0).
+        if c.cols == w && c.rows <= h0 && h0 % c.rows == 0 && (h0 / c.rows).is_power_of_two() {
+            continue;
+        }
+        out.push(Tile::new(rect.row0, rect.col0, c.rows, c.cols));
     }
 }
 
@@ -1418,5 +1625,125 @@ mod tests {
             ..Default::default()
         };
         let _ = cfg.mem_spec();
+    }
+
+    #[test]
+    fn plan_cache_replays_identical_plans_and_counts_hits() {
+        // Two plan calls over an unchanged world: the second must come
+        // from the memo (hit counted) and be byte-identical to the first
+        // — and to what the cache-off scheduler computes.
+        use crate::coordinator::queue::TaskQueue;
+        let pool = WorkloadPool::new("t", vec![fc_dnn("a", &[64, 64], 0), fc_dnn("b", &[64], 0)]);
+        let queue = TaskQueue::new(&pool);
+        let pm = PartitionManager::new(SchedulerConfig::default().geom);
+        let progress = BTreeMap::new();
+        let s = SystemState {
+            now: 0,
+            pool: &pool,
+            queue: &queue,
+            partitions: &pm,
+            mem: None,
+            progress: &progress,
+        };
+        let mut cached = DynamicScheduler::new(SchedulerConfig::default()).with_plan_cache(true);
+        let p1 = cached.plan(&s);
+        let p2 = cached.plan(&s);
+        assert_eq!(p1, p2, "memo replay must be byte-identical");
+        assert_eq!(cached.plan_cache_hits(), 1);
+        let mut plain = DynamicScheduler::new(SchedulerConfig::default()).with_plan_cache(false);
+        assert_eq!(plain.plan(&s), p1, "cache off computes the same plan");
+        assert_eq!(plain.plan(&s), p1);
+        assert_eq!(plain.plan_cache_hits(), 0);
+    }
+
+    #[test]
+    fn plan_cache_and_arena_toggles_are_transparent() {
+        // Full engine runs with every toggle combination must produce
+        // identical dispatch streams in both partition modes.
+        let mut rng = Rng::new(41);
+        let pool = random_pool(
+            &mut rng,
+            &GeneratorCfg { num_dnns: 5, layers_min: 2, layers_max: 6, ..Default::default() },
+        );
+        for mode in PartitionMode::ALL {
+            let cfg = SchedulerConfig { partition_mode: mode, ..Default::default() };
+            let base = DynamicScheduler::new(cfg.clone())
+                .with_plan_cache(false)
+                .with_plan_arena(false)
+                .run(&pool);
+            let tuned = DynamicScheduler::new(cfg.clone())
+                .with_plan_cache(true)
+                .with_plan_arena(true)
+                .run(&pool);
+            let mixed = DynamicScheduler::new(cfg)
+                .with_plan_cache(true)
+                .with_plan_arena(false)
+                .run(&pool);
+            assert_eq!(base.dispatches, tuned.dispatches, "{mode:?}");
+            assert_eq!(base.makespan, tuned.makespan, "{mode:?}");
+            assert_eq!(base.dispatches, mixed.dispatches, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn rect_candidates_price_each_shape_once() {
+        // Satellite: the ladder ∪ table union is deduped on
+        // (row0, col0, rows, cols) — one price per distinct shape.
+        use crate::profiler::{ProfileStore, ProfileTable};
+        let geom = ArrayGeometry::new(128, 128);
+        let bufs = BufferConfig::default();
+        let dnn = fc_dnn("a", &[128], 0);
+        let gemm = dnn.layers[0].shape.gemm();
+        let table = ProfileTable::build("a", &dnn, geom, &bufs);
+        let store = ProfileStore::from_tables("<memory>", vec![table]);
+        let rect = Tile::full(geom);
+        let (min_width, min_rows) = (16, 16);
+        let demand_w = ceil_pow2(gemm.m).clamp(min_width, geom.cols);
+        let demand_h = ceil_pow2(gemm.k).clamp(min_rows, geom.rows);
+        let mut cand = Vec::new();
+        push_rect_candidates(
+            rect,
+            demand_w,
+            demand_h,
+            min_width,
+            min_rows,
+            Some(&store),
+            geom,
+            gemm,
+            &mut cand,
+        );
+        let mut seen = BTreeSet::new();
+        for t in &cand {
+            assert!(seen.insert((t.row0, t.col0, t.rows, t.cols)), "shape priced twice: {t:?}");
+        }
+        // And the dedupe is not vacuous: the raw ladder ∪ table union
+        // enumerates the profiled full-width rungs twice.
+        let w = demand_w.min(floor_pow2(rect.cols));
+        assert!(w >= min_width);
+        let mut ladder = 0u64;
+        let mut h = demand_h.min(floor_pow2(rect.rows));
+        while h >= min_rows {
+            ladder += 1;
+            if h == 1 {
+                break;
+            }
+            h /= 2;
+        }
+        let tabled = store
+            .candidates(geom, gemm.k, gemm.m)
+            .iter()
+            .filter(|c| {
+                c.rows >= min_rows
+                    && c.cols >= min_width
+                    && c.rows <= rect.rows
+                    && c.cols <= rect.cols
+                    && c.cols <= demand_w
+            })
+            .count() as u64;
+        assert!(
+            (cand.len() as u64) < ladder + tabled,
+            "deduped {} must shrink below ladder {ladder} + table {tabled}",
+            cand.len()
+        );
     }
 }

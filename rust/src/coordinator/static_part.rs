@@ -10,6 +10,7 @@
 use std::collections::BTreeMap;
 
 use super::metrics::RunMetrics;
+use super::queue::ReadyLayer;
 use super::scheduler::SchedulerConfig;
 use crate::sim::partitioned::{tile_layer_timing, FeedPolicy, Tile};
 use crate::sim_core::{Allocation, Engine, LayerExec, Scheduler, SystemState};
@@ -19,11 +20,13 @@ use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 #[derive(Debug, Clone)]
 pub struct StaticPartitioning {
     cfg: SchedulerConfig,
+    /// Recycled ready-layer scratch — see `SequentialBaseline::ready_buf`.
+    ready_buf: Vec<ReadyLayer>,
 }
 
 impl StaticPartitioning {
     pub fn new(cfg: SchedulerConfig) -> StaticPartitioning {
-        StaticPartitioning { cfg }
+        StaticPartitioning { cfg, ready_buf: Vec::new() }
     }
 
     /// Each DNN's fixed partition width for `pool`.
@@ -68,13 +71,16 @@ impl Scheduler for StaticPartitioning {
         // At most one layer per DNN (the lowest-index ready one), into
         // its pinned slice — which is free exactly when the DNN has no
         // layer in flight.
+        let mut ready = std::mem::take(&mut self.ready_buf);
+        s.queue.ready_into(s.now, &mut ready);
         let mut next: BTreeMap<DnnId, LayerId> = BTreeMap::new();
-        for r in s.queue.ready_at(s.now) {
+        for r in &ready {
             let e = next.entry(r.dnn).or_insert(r.layer);
             if r.layer < *e {
                 *e = r.layer;
             }
         }
+        self.ready_buf = ready;
         next.into_iter()
             .filter_map(|(dnn, layer)| {
                 let tile = Tile::full_height(self.cfg.geom, dnn as u64 * width, width);

@@ -15,6 +15,9 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::sim::dataflow::{
+    timing_cache_enabled, timing_cache_snapshot, timing_cache_warm, TimingSnapshot,
+};
 use crate::util::rng::Rng;
 use crate::workloads::generator::ArrivalStream;
 use crate::workloads::models;
@@ -47,23 +50,48 @@ fn deliver(instances: &[Mutex<Instance>], out: &mut Vec<Assignment>) {
 }
 
 /// Advance every instance to `horizon` on up to `threads` workers.
-fn run_wave(instances: &[Mutex<Instance>], horizon: u64, threads: usize) {
+///
+/// `memo` is the fleet-wide timing-memo relay: the worker pool is
+/// respawned at every chunk barrier, so each wave's fresh OS threads
+/// start with cold thread-local timing caches.  Workers re-warm from the
+/// merged snapshot on entry and contribute their memo back on exit —
+/// repeated (layer, tile, share) shapes stay cache hits across waves.
+/// The memo is a pure-function cache, so the relay cannot change any
+/// simulated byte.
+fn run_wave(
+    instances: &[Mutex<Instance>],
+    horizon: u64,
+    threads: usize,
+    memo: &Mutex<TimingSnapshot>,
+) {
     let workers = threads.clamp(1, instances.len());
     if workers == 1 {
+        // Single worker = the driver thread itself, whose thread-local
+        // memo already persists across waves — no relay needed.
         for inst in instances {
             inst.lock().unwrap().run_until(horizon);
         }
         return;
     }
+    let share = timing_cache_enabled();
     let next = AtomicUsize::new(0);
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= instances.len() {
-                    break;
+            scope.spawn(|| {
+                if share {
+                    timing_cache_warm(&memo.lock().unwrap());
                 }
-                instances[i].lock().unwrap().run_until(horizon);
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= instances.len() {
+                        break;
+                    }
+                    instances[i].lock().unwrap().run_until(horizon);
+                }
+                if share {
+                    let snap = timing_cache_snapshot();
+                    memo.lock().unwrap().merge(snap);
+                }
             });
         }
     });
@@ -141,6 +169,7 @@ pub fn run_fleet(cfg: &FleetConfig, threads: usize) -> Result<FleetReport> {
 
     let mut stream =
         ArrivalStream::new(cfg.arrival.clone(), cfg.diurnal.clone(), stream_rng, cfg.requests);
+    let timing_memo = Mutex::new(TimingSnapshot::default());
     let mut generated = [0u64; 3];
     let mut out: Vec<Assignment> = Vec::new();
     let chunk = cfg.chunk.max(1);
@@ -162,11 +191,11 @@ pub fn run_fleet(cfg: &FleetConfig, threads: usize) -> Result<FleetReport> {
         // chunk's emissions cannot land in an instance's past.
         router.close_due(last_t, &mut out);
         deliver(&instances, &mut out);
-        run_wave(&instances, last_t, threads);
+        run_wave(&instances, last_t, threads, &timing_memo);
     }
     router.finish(&mut out);
     deliver(&instances, &mut out);
-    run_wave(&instances, u64::MAX, threads);
+    run_wave(&instances, u64::MAX, threads, &timing_memo);
 
     // Merge (in instance-index order — not that order matters: every
     // accumulator is integer-only).

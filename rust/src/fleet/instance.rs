@@ -170,6 +170,23 @@ impl Instance {
                     if admit_first {
                         let q = self.incoming.pop_front().expect("peeked");
                         self.admit_now(q);
+                        // Coalesce same-cycle admissions: each admission
+                        // posts an Arrival at `ta`, so the outer loop would
+                        // re-admit every same-cycle follower one iteration
+                        // (and one event-queue probe) at a time anyway.
+                        // Draining them here preserves that exact order
+                        // while skipping the per-admission round trips.
+                        if crate::sim_core::event_coalesce_enabled() {
+                            while self.live.len() < self.slots {
+                                match self.incoming.front() {
+                                    Some(n) if n.t.max(self.engine.now()) == ta => {
+                                        let n = self.incoming.pop_front().expect("peeked");
+                                        self.admit_now(n);
+                                    }
+                                    _ => break,
+                                }
+                            }
+                        }
                         continue;
                     }
                 }

@@ -18,7 +18,7 @@
 //! cannot start until the previous drain finishes — the paper's motivation
 //! for separate load/calculate steps).
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
 use std::sync::OnceLock;
@@ -357,6 +357,75 @@ type TimingCache = HashMap<TimingKey, LayerTiming, BuildHasherDefault<TimingHash
 
 thread_local! {
     static TIMING_CACHE: RefCell<TimingCache> = RefCell::new(HashMap::default());
+    /// Uncached timing computations this thread has performed — the
+    /// observable half of the memo hand-off protocol below (a warmed
+    /// thread replaying known keys performs none).
+    static UNCACHED_CALLS: Cell<u64> = Cell::new(0);
+}
+
+/// Uncached timing computations performed by the *calling thread* so far.
+/// Fresh OS threads start at zero, so a fleet worker warmed from a
+/// [`TimingSnapshot`] can prove its chunk was fully memo-served.
+pub fn timing_uncached_calls() -> u64 {
+    UNCACHED_CALLS.with(|c| c.get())
+}
+
+/// A portable copy of a thread's timing memo.
+///
+/// The fleet driver respawns its worker pool at every chunk barrier, and
+/// each fresh OS thread starts with a cold thread-local [`TimingCache`] —
+/// so without help, every wave re-prices the same (layer, tile, share)
+/// shapes from scratch.  Workers export a snapshot when a wave ends and
+/// re-warm from the merged snapshot when the next wave starts; the memo
+/// is a pure-function cache, so sharing it cannot change any simulated
+/// byte.
+#[derive(Debug, Clone, Default)]
+pub struct TimingSnapshot {
+    map: TimingCache,
+}
+
+impl TimingSnapshot {
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Absorb `other`.  Keys are the full input tuple of a pure function,
+    /// so colliding entries carry equal values — which side wins is
+    /// immaterial.
+    pub fn merge(&mut self, other: TimingSnapshot) {
+        if self.map.is_empty() {
+            self.map = other.map;
+        } else {
+            self.map.extend(other.map);
+        }
+    }
+}
+
+/// Export a copy of the calling thread's timing memo.
+pub fn timing_cache_snapshot() -> TimingSnapshot {
+    TIMING_CACHE.with(|c| TimingSnapshot { map: c.borrow().clone() })
+}
+
+/// Pre-warm the calling thread's timing memo from `snap`.  A no-op when
+/// the memo is disabled (`MTSA_NO_TIMING_CACHE`) or warming would blow
+/// the [`TIMING_CACHE_CAP`] backstop.
+pub fn timing_cache_warm(snap: &TimingSnapshot) {
+    if !timing_cache_enabled() || snap.map.is_empty() {
+        return;
+    }
+    TIMING_CACHE.with(|c| {
+        let mut cache = c.borrow_mut();
+        if cache.len() + snap.map.len() >= TIMING_CACHE_CAP {
+            return;
+        }
+        for (k, v) in &snap.map {
+            cache.insert(*k, *v);
+        }
+    });
 }
 
 /// Whether the layer-timing memo is on.  Set `MTSA_NO_TIMING_CACHE` (to
@@ -412,6 +481,7 @@ pub fn layer_timing_tile_with_share_uncached(
     share: &BufferConfig,
     interleave: Option<(u64, u64)>,
 ) -> LayerTiming {
+    UNCACHED_CALLS.with(|c| c.set(c.get() + 1));
     assert!(
         tile.col_end() <= geom.cols && tile.row_end() <= geom.rows,
         "tile {tile:?} out of range for a {}x{} array",
@@ -672,6 +742,50 @@ mod tests {
             };
             prop::ensure_eq(next_fold_boundary(geom, gemm, tile, elapsed), expect, "boundary")
         });
+    }
+
+    #[test]
+    fn warmed_thread_replays_timings_without_uncached_calls() {
+        // The fleet's chunk-barrier hand-off in miniature: wave 1 runs on
+        // a fresh OS thread (cold memo), computes a set of shapes, and
+        // exports its memo; wave 2 runs on ANOTHER fresh thread, re-warms
+        // from the snapshot, and must serve the same shapes without a
+        // single uncached computation.
+        if !timing_cache_enabled() {
+            return; // opted out via MTSA_NO_TIMING_CACHE: nothing to share
+        }
+        let geom = ArrayGeometry::new(64, 64);
+        let bufs = BufferConfig::default();
+        let shapes: Vec<GemmDims> = (1..6)
+            .map(|i| GemmDims { sr: 8 * i, k: 32 * i, m: 16 * i })
+            .collect();
+        let (snap, cold, timings) = std::thread::scope(|s| {
+            s.spawn(|| {
+                let timings: Vec<LayerTiming> = shapes
+                    .iter()
+                    .map(|&g| layer_timing_tile(geom, g, Tile::full(geom), &bufs, None))
+                    .collect();
+                (timing_cache_snapshot(), timing_uncached_calls(), timings)
+            })
+            .join()
+            .unwrap()
+        });
+        assert!(cold >= shapes.len() as u64, "wave 1 started cold");
+        assert!(snap.len() >= shapes.len());
+        let (warm_calls, replayed) = std::thread::scope(|s| {
+            s.spawn(|| {
+                timing_cache_warm(&snap);
+                let replayed: Vec<LayerTiming> = shapes
+                    .iter()
+                    .map(|&g| layer_timing_tile(geom, g, Tile::full(geom), &bufs, None))
+                    .collect();
+                (timing_uncached_calls(), replayed)
+            })
+            .join()
+            .unwrap()
+        });
+        assert_eq!(warm_calls, 0, "wave 2 must be fully memo-served");
+        assert_eq!(replayed, timings, "memo hand-off must not change results");
     }
 
     #[test]

@@ -27,6 +27,21 @@ pub fn obs_ring_enabled() -> bool {
     *ENABLED.get_or_init(|| std::env::var_os("MTSA_NO_OBS_RING").is_none())
 }
 
+/// Whether the engine bulk-drains each same-cycle event batch from the
+/// queue in one operation (see
+/// [`EventQueue::pop_batch_into`](super::queue::EventQueue::pop_batch_into))
+/// instead of popping and re-probing `next_time` per event.  FIFO order
+/// within the batch is preserved exactly, so both modes process the
+/// identical event sequence; opt out with `MTSA_NO_EVENT_COALESCE` (any
+/// value) for A/B timing and bisecting.  Runs with the shared `[mem]`
+/// hierarchy never take the bulk path regardless of the flag: a
+/// bandwidth rescale can post new events *at the current cycle*
+/// mid-batch, and those must interleave into the batch in key order.
+pub fn event_coalesce_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| std::env::var_os("MTSA_NO_EVENT_COALESCE").is_none())
+}
+
 /// A buffered observer callback: the `Copy` payload of one notification,
 /// with the `DispatchRecord` (and its name `String` clones) built only at
 /// delivery time, out of the event hot path.
@@ -145,6 +160,11 @@ pub struct Engine {
     /// [`Engine::admit`] — the recycling that bounds pool/queue memory by
     /// the peak live-tenant count instead of the total arrival count.
     free_dnn_slots: Vec<DnnId>,
+    /// Recycled buffer for the coalesced same-cycle event drain — see
+    /// [`event_coalesce_enabled`].  Steady state allocates nothing.
+    batch_buf: Vec<Event>,
+    /// Recycled running-layer view handed to [`Scheduler::preempt`].
+    preempt_scratch: Vec<RunningLayer>,
     now: u64,
 }
 
@@ -174,6 +194,8 @@ impl Engine {
             progress: BTreeMap::new(),
             obs_ring: Vec::new(),
             free_dnn_slots: Vec::new(),
+            batch_buf: Vec::new(),
+            preempt_scratch: Vec::new(),
             now: 0,
         }
     }
@@ -434,21 +456,40 @@ impl Engine {
     /// met).  A `false` return is *resumable*: a later [`Engine::admit`]
     /// posts new work and stepping continues.
     pub fn step(&mut self, sched: &mut dyn Scheduler, obs: &mut dyn Observer) -> bool {
-        let Some(first) = self.events.pop() else { return false };
-        let now = first.time();
-        debug_assert!(now >= self.now, "event time went backwards");
-        self.now = now;
-
         // Process the whole batch of events at this cycle.
         let mut needs_plan = false;
-        let mut next = Some(first);
-        while let Some(ev) = next {
-            self.handle(ev, sched, obs, &mut needs_plan);
-            next = if self.events.next_time() == Some(now) {
-                self.events.pop()
-            } else {
-                None
+        if event_coalesce_enabled() && self.mem.is_none() {
+            // Bulk drain: without `[mem]`, handling an event never posts
+            // another event at the *current* cycle (completions and
+            // shrink remainders schedule at `now + cycles.max(1)`), so
+            // the batch is closed the moment it is popped and one queue
+            // operation replaces the pop/re-probe-per-event loop.
+            let mut batch = std::mem::take(&mut self.batch_buf);
+            batch.clear();
+            let Some(now) = self.events.pop_batch_into(&mut batch) else {
+                self.batch_buf = batch;
+                return false;
             };
+            debug_assert!(now >= self.now, "event time went backwards");
+            self.now = now;
+            for ev in batch.drain(..) {
+                self.handle(ev, sched, obs, &mut needs_plan);
+            }
+            self.batch_buf = batch; // keep the capacity for the next batch
+        } else {
+            let Some(first) = self.events.pop() else { return false };
+            let now = first.time();
+            debug_assert!(now >= self.now, "event time went backwards");
+            self.now = now;
+            let mut next = Some(first);
+            while let Some(ev) = next {
+                self.handle(ev, sched, obs, &mut needs_plan);
+                next = if self.events.next_time() == Some(now) {
+                    self.events.pop()
+                } else {
+                    None
+                };
+            }
         }
 
         // One decision point over the settled state: plan dispatches
@@ -698,20 +739,23 @@ impl Engine {
         if self.pending.is_empty() || !sched.preempts() {
             return;
         }
-        let running: Vec<RunningLayer> = self
-            .pending
-            .iter()
-            .filter(|(_, p)| p.preempt.is_none())
-            .map(|(&alloc, p)| RunningLayer {
-                alloc,
-                dnn: p.dnn,
-                layer: p.layer,
-                tile: self.partitions.tile_of(alloc).expect("live alloc has a tile"),
-                t_start: p.t_start,
-                t_end: p.t_end,
-            })
-            .collect();
+        let mut running = std::mem::take(&mut self.preempt_scratch);
+        running.clear();
+        running.extend(
+            self.pending
+                .iter()
+                .filter(|(_, p)| p.preempt.is_none())
+                .map(|(&alloc, p)| RunningLayer {
+                    alloc,
+                    dnn: p.dnn,
+                    layer: p.layer,
+                    tile: self.partitions.tile_of(alloc).expect("live alloc has a tile"),
+                    t_start: p.t_start,
+                    t_end: p.t_end,
+                }),
+        );
         if running.is_empty() {
+            self.preempt_scratch = running;
             return;
         }
         let mut requests = sched.preempt(&self.state(), &running);
@@ -735,6 +779,7 @@ impl Engine {
             }
             self.events.push(Event::Preempt { t: t_b, dnn: run.dnn, layer: run.layer, alloc });
         }
+        self.preempt_scratch = running; // keep the capacity for the next round
     }
 
     fn dispatch(&mut self, sched: &mut dyn Scheduler, obs: &mut dyn Observer) {
@@ -742,7 +787,7 @@ impl Engine {
         if !allocs.is_empty() {
             self.idle_wakes = 0; // progress: the livelock detector restarts
         }
-        for a in allocs {
+        for &a in &allocs {
             let (alloc, tile) = self.partitions.allocate_at(a.tile).unwrap_or_else(|| {
                 panic!(
                     "policy `{}` allocated unavailable tile {:?} at cycle {}",
@@ -760,6 +805,7 @@ impl Engine {
             // banked share and predicts the contended completion.
             self.schedule_segment(alloc, a.dnn, a.layer, tile, exec);
         }
+        sched.recycle_plan(allocs);
         if let Some(dt) = sched.wake_after(&self.state()) {
             // Livelock detector: a wake-up scheduled while nothing else
             // can change the state (no layer in flight, no future

@@ -48,7 +48,7 @@ mod observer;
 pub mod queue;
 mod scheduler;
 
-pub use engine::{obs_ring_enabled, Engine};
+pub use engine::{event_coalesce_enabled, obs_ring_enabled, Engine};
 pub use event::Event;
 pub use observer::Observer;
 pub use scheduler::{Allocation, Checkpoint, LayerExec, RunningLayer, Scheduler, SystemState};

@@ -77,6 +77,23 @@ impl EventQueue {
             EventQueue::Heap(q) => q.next_time(),
         }
     }
+
+    /// Pop *every* event pending at the earliest cycle, appending them to
+    /// `out` in exactly [`Self::pop`] order, and return that cycle
+    /// (`None` when the queue is empty).
+    ///
+    /// Equivalent to `pop`-ing while `next_time()` stays on the same
+    /// cycle — but only if nothing is pushed between those pops: a push
+    /// *at* the drained cycle (mem reposts, `MemRescale`) would have
+    /// interleaved into the remainder in key order.  The engine therefore
+    /// uses the coalesced drain only when the shared memory hierarchy is
+    /// off (see [`event_coalesce_enabled`](super::Engine)).
+    pub fn pop_batch_into(&mut self, out: &mut Vec<Event>) -> Option<u64> {
+        match self {
+            EventQueue::Bucket(q) => q.pop_batch_into(out),
+            EventQueue::Heap(q) => q.pop_batch_into(out),
+        }
+    }
 }
 
 impl Default for EventQueue {
@@ -110,6 +127,15 @@ impl HeapQueue {
 
     pub fn next_time(&self) -> Option<u64> {
         self.heap.peek().map(|Reverse((ev, _))| ev.time())
+    }
+
+    /// See [`EventQueue::pop_batch_into`].
+    pub fn pop_batch_into(&mut self, out: &mut Vec<Event>) -> Option<u64> {
+        let t = self.next_time()?;
+        while self.next_time() == Some(t) {
+            out.push(self.pop().expect("peeked event pops"));
+        }
+        Some(t)
     }
 }
 
@@ -190,6 +216,25 @@ impl BucketQueue {
             return Some(self.cur_time);
         }
         self.future.keys().next().copied()
+    }
+
+    /// See [`EventQueue::pop_batch_into`].  The bucket layout makes this
+    /// the fast path the whole queue exists for: the undrained remainder
+    /// of the current bucket *is* the same-cycle batch (future buckets
+    /// are strictly later), so the drain is one `extend` — no per-event
+    /// head bump, comparison, or map probe.
+    pub fn pop_batch_into(&mut self, out: &mut Vec<Event>) -> Option<u64> {
+        if self.head >= self.current.len() {
+            let (t, mut bucket) = self.future.pop_first()?;
+            bucket.sort_unstable();
+            self.cur_time = t;
+            self.head = 0;
+            self.pool.push(std::mem::replace(&mut self.current, bucket));
+        }
+        out.extend(self.current[self.head..].iter().map(|&(ev, _)| ev));
+        self.current.clear();
+        self.head = 0;
+        Some(self.cur_time)
     }
 }
 
@@ -303,6 +348,69 @@ mod tests {
         }
         assert!(!q.pool.is_empty(), "drained buckets return to the pool");
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn batch_pop_matches_pop_sequence() {
+        // pop_batch_into must return exactly the events pop would have
+        // returned while next_time() stayed put, in the same order —
+        // for both implementations, including a mid-cycle resume (some
+        // events of the cycle already popped singly).
+        let evs = [
+            arr(5, 1),
+            arr(5, 0),
+            Event::Deadline { t: 5, dnn: 0 },
+            arr(5, 0),
+            arr(9, 2),
+            Event::Repartition { t: 9 },
+        ];
+        let mut b = BucketQueue::new();
+        let mut h = HeapQueue::new();
+        let mut reference = BucketQueue::new();
+        for e in evs {
+            b.push(e);
+            h.push(e);
+            reference.push(e);
+        }
+        // Reference: pop singly while the cycle holds.
+        let mut want = Vec::new();
+        let t0 = reference.next_time().unwrap();
+        while reference.next_time() == Some(t0) {
+            want.push(reference.pop().unwrap());
+        }
+        let mut got_b = Vec::new();
+        assert_eq!(b.pop_batch_into(&mut got_b), Some(5));
+        assert_eq!(got_b, want);
+        let mut got_h = Vec::new();
+        assert_eq!(h.pop_batch_into(&mut got_h), Some(5));
+        assert_eq!(got_h, want);
+        // Second batch: the t=9 pair, after popping one of them singly
+        // (the engine's step may mix modes across cycles).
+        assert_eq!(b.pop(), Some(arr(9, 2)));
+        got_b.clear();
+        assert_eq!(b.pop_batch_into(&mut got_b), Some(9));
+        assert_eq!(got_b, vec![Event::Repartition { t: 9 }]);
+        assert_eq!(b.pop_batch_into(&mut got_b), None, "drained queue");
+        got_h.clear();
+        assert_eq!(h.pop_batch_into(&mut got_h), Some(9));
+        assert_eq!(got_h, vec![arr(9, 2), Event::Repartition { t: 9 }]);
+    }
+
+    #[test]
+    fn batch_pop_preserves_fifo_on_equal_keys() {
+        let mut q = BucketQueue::new();
+        let mut h = HeapQueue::new();
+        for e in [arr(5, 0), arr(5, 0), arr(5, 1), arr(5, 0)] {
+            q.push(e);
+            h.push(e);
+        }
+        let want = vec![arr(5, 0), arr(5, 0), arr(5, 0), arr(5, 1)];
+        let mut got = Vec::new();
+        q.pop_batch_into(&mut got);
+        assert_eq!(got, want);
+        got.clear();
+        h.pop_batch_into(&mut got);
+        assert_eq!(got, want);
     }
 
     #[test]

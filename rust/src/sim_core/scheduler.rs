@@ -235,6 +235,14 @@ pub trait Scheduler {
     /// event.
     fn plan(&mut self, state: &SystemState<'_>) -> Vec<Allocation>;
 
+    /// Return a consumed [`Scheduler::plan`] vector for reuse.  The
+    /// engine calls this after replaying every allocation of a plan, so
+    /// a policy keeping a scratch arena (the dynamic scheduler under
+    /// `MTSA_NO_PLAN_ARENA`-off) can hand out recycled vectors from
+    /// `plan` and take them back here — steady-state planning then
+    /// performs no heap allocation.  Default: drop it.
+    fn recycle_plan(&mut self, _plan: Vec<Allocation>) {}
+
     /// Price one planned layer: cycles until completion and the activity
     /// to bill.  `coresident` counts live partitions *including* this one
     /// at dispatch (feeds the interleaved feed-bus model).

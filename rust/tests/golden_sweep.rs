@@ -177,6 +177,26 @@ fn golden_tables_axis() {
 }
 
 #[test]
+fn golden_bursty_same_cycle() {
+    // The coalescing corner: batch arrivals (rate 0) land every request
+    // of a multi-model mix at the same cycle, so nearly every event
+    // batch the engine drains is same-cycle-heavy — exactly the shape
+    // the PR 9 coalesced drain + plan memo fast path serves.  Both
+    // partition modes and arrival preemption keep the batch contents
+    // diverse (arrivals, completions and preemptions colliding).
+    let grid = SweepGrid {
+        mixes: vec!["NCF,MelodyLSTM,NCF".to_string()],
+        rates: vec![0.0],
+        policies: vec![AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare],
+        modes: vec![PartitionMode::Columns, PartitionMode::TwoD],
+        preempts: vec![PreemptMode::Arrival],
+        requests: 6,
+        ..base_grid()
+    };
+    check_golden("bursty_same_cycle", &grid);
+}
+
+#[test]
 fn golden_mem_preempt_2d_cross() {
     // The full cross on one policy: {columns, 2d} × {off, arrival} × mem
     // on — the interaction corner none of the single-axis fixtures pins.

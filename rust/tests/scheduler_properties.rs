@@ -620,3 +620,111 @@ fn timing_cache_is_transparent() {
         prop::ensure_eq(hit, raw, "memoized (hit path) == uncached")
     });
 }
+
+#[test]
+fn plan_cache_is_transparent() {
+    // The epoch-tagged plan memo and the dispatch arenas (the PR 9
+    // planner campaign) must be observationally invisible: cache+arena on
+    // must equal both off for random configs — across partition modes,
+    // preempting modes, and table-driven candidate pricing.
+    use std::sync::Arc;
+
+    use mtsa::profiler::{ProfileStore, ProfileTable};
+
+    prop::check("plan cache/arena on == off", 12, |rng| {
+        let gcfg = GeneratorCfg {
+            num_dnns: rng.gen_range_inclusive(2, 6) as usize,
+            layers_min: 1,
+            layers_max: 6,
+            mean_interarrival: *rng.choose(&[0.0, 20_000.0]),
+            dim_scale: 0.4 + rng.gen_f64() * 0.8,
+        };
+        let pool = random_pool(rng, &gcfg);
+        let mut cfg = random_cfg(rng);
+        cfg.preempt =
+            *rng.choose(&[PreemptMode::Off, PreemptMode::Arrival, PreemptMode::Deadline]);
+        if rng.gen_bool(0.5) {
+            let tables: Vec<ProfileTable> = pool
+                .dnns
+                .iter()
+                .map(|d| ProfileTable::build(&d.name, d, cfg.geom, &cfg.buffers))
+                .collect();
+            cfg.tables = Some(Arc::new(ProfileStore::from_tables("<prop>", tables)));
+        }
+        let base = DynamicScheduler::new(cfg.clone())
+            .with_plan_cache(false)
+            .with_plan_arena(false)
+            .run(&pool);
+        let tuned = DynamicScheduler::new(cfg.clone())
+            .with_plan_cache(true)
+            .with_plan_arena(true)
+            .run(&pool);
+        let cache_only = DynamicScheduler::new(cfg)
+            .with_plan_cache(true)
+            .with_plan_arena(false)
+            .run(&pool);
+        prop::ensure_eq(base.makespan, tuned.makespan, "makespan (cache+arena)")?;
+        prop::ensure_eq(base.makespan, cache_only.makespan, "makespan (cache only)")?;
+        prop::ensure_eq(base.dispatches.len(), tuned.dispatches.len(), "record count")?;
+        prop::ensure(base.dispatches == tuned.dispatches, "dispatch stream (cache+arena)")?;
+        prop::ensure(base.dispatches == cache_only.dispatches, "dispatch stream (cache only)")
+    });
+}
+
+#[test]
+fn coalescing_preserves_fifo() {
+    // The engine's same-cycle batch drain rides on pop_batch_into: for
+    // BOTH queue backends, the batch must replay the exact sequence an
+    // un-coalesced pop loop would produce at that cycle — including the
+    // FIFO order of key-equal events.
+    use mtsa::sim_core::queue::{BucketQueue, HeapQueue};
+    use mtsa::sim_core::Event;
+
+    prop::check("batched drain == un-coalesced pop order", 100, |rng| {
+        // Few distinct cycles => dense same-cycle collisions.
+        let n = rng.gen_range_inclusive(1, 48) as usize;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = rng.gen_range(4);
+            let dnn = rng.gen_range(3) as usize;
+            let layer = rng.gen_range(3) as usize;
+            events.push(match rng.gen_range(4) {
+                0 => Event::Arrival { t, dnn },
+                1 => Event::LayerComplete { t, dnn, layer, alloc: 0 },
+                2 => Event::Preempt { t, dnn, layer, alloc: 0 },
+                _ => Event::Deadline { t, dnn },
+            });
+        }
+        let mut heap_batched = HeapQueue::new();
+        let mut heap_popped = HeapQueue::new();
+        let mut bucket_batched = BucketQueue::new();
+        let mut bucket_popped = BucketQueue::new();
+        for &ev in &events {
+            heap_batched.push(ev);
+            heap_popped.push(ev);
+            bucket_batched.push(ev);
+            bucket_popped.push(ev);
+        }
+        let mut batch = Vec::new();
+        loop {
+            batch.clear();
+            let Some(t) = heap_batched.pop_batch_into(&mut batch) else { break };
+            let mut reference = Vec::new();
+            while heap_popped.next_time() == Some(t) {
+                reference.push(heap_popped.pop().unwrap());
+            }
+            prop::ensure(batch == reference, "heap: batch == pop sequence")?;
+        }
+        prop::ensure(heap_popped.pop().is_none(), "heap reference drained")?;
+        loop {
+            batch.clear();
+            let Some(t) = bucket_batched.pop_batch_into(&mut batch) else { break };
+            let mut reference = Vec::new();
+            while bucket_popped.next_time() == Some(t) {
+                reference.push(bucket_popped.pop().unwrap());
+            }
+            prop::ensure(batch == reference, "bucket: batch == pop sequence")?;
+        }
+        prop::ensure(bucket_popped.pop().is_none(), "bucket reference drained")
+    });
+}
