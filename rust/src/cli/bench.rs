@@ -35,6 +35,10 @@
 //! - `coalesce_burst` — `DynamicScheduler::run` over a pool of same-cycle
 //!   arrival bursts, the shape the event-coalescing fast path batches
 //!   into single plan passes.  Informational (not gated).
+//! - `vector_layers_per_sec` — heterogeneous co-tenancy: a dynamic run
+//!   with a 128-lane vector engine over a memory-bound pool; counts the
+//!   layer segments the planner offloads to lanes per wall-clock second.
+//!   Informational (not gated).
 
 use std::time::{Duration, Instant};
 
@@ -93,6 +97,9 @@ struct Measured {
     burst_events_per_run: u64,
     burst_wall_s_per_run: f64,
     burst_events_per_sec: f64,
+    vector_layers_per_run: u64,
+    vector_wall_s_per_run: f64,
+    vector_layers_per_sec: f64,
 }
 
 fn measure(quick: bool, threads: usize) -> Result<Measured> {
@@ -196,6 +203,7 @@ fn measure(quick: bool, threads: usize) -> Result<Measured> {
         pool: &pool,
         queue: &plan_queue,
         partitions: &plan_pm,
+        lanes: None,
         mem: None,
         progress: &plan_progress,
     };
@@ -230,6 +238,22 @@ fn measure(quick: bool, threads: usize) -> Result<Measured> {
         std::hint::black_box(burst_sched.run(&burst_pool));
     });
     let burst_wall_s = burst.mean / 1e9;
+
+    // Heterogeneous co-tenancy: a dynamic run with a 128-lane vector
+    // engine over a memory-bound pool; the planner offloads the
+    // embedding/recurrent layers to lanes while FC stages keep the array.
+    let vec_pool = crate::workloads::models::by_spec("NCF,MelodyLSTM")
+        .map_err(anyhow::Error::msg)?;
+    let vec_sched = DynamicScheduler::new(SchedulerConfig {
+        vector: Some(crate::sim::dataflow::VectorUnit::new(128)),
+        ..SchedulerConfig::default()
+    });
+    let vm = vec_sched.run(&vec_pool);
+    let vector_layers_per_run = vm.vector_dispatches;
+    let vector = b.measure("vector co-tenancy (NCF+MelodyLSTM, 128 lanes)", || {
+        std::hint::black_box(vec_sched.run(&vec_pool));
+    });
+    let vector_wall_s = vector.mean / 1e9;
     b.finish();
 
     Ok(Measured {
@@ -253,13 +277,16 @@ fn measure(quick: bool, threads: usize) -> Result<Measured> {
         burst_events_per_run,
         burst_wall_s_per_run: burst_wall_s,
         burst_events_per_sec: burst_events_per_run as f64 / burst_wall_s.max(1e-12),
+        vector_layers_per_run,
+        vector_wall_s_per_run: vector_wall_s,
+        vector_layers_per_sec: vector_layers_per_run as f64 / vector_wall_s.max(1e-12),
     })
 }
 
 fn record_json(m: &Measured) -> Json {
     obj(vec![
         ("schema", Json::Num(BENCH_SCHEMA as f64)),
-        ("pr", Json::Num(9.0)),
+        ("pr", Json::Num(10.0)),
         ("provenance", Json::Str("measured".into())),
         ("tolerance_pct", Json::Num(100.0 * REGRESSION_TOLERANCE)),
         (
@@ -330,6 +357,14 @@ fn record_json(m: &Measured) -> Json {
                         ("events_per_sec", Json::Num(m.burst_events_per_sec)),
                     ]),
                 ),
+                (
+                    "vector_layers_per_sec",
+                    obj(vec![
+                        ("layers_per_run", Json::Num(m.vector_layers_per_run as f64)),
+                        ("wall_s_per_run", Json::Num(m.vector_wall_s_per_run)),
+                        ("layers_per_sec", Json::Num(m.vector_layers_per_sec)),
+                    ]),
+                ),
             ]),
         ),
     ])
@@ -350,6 +385,20 @@ fn carry_forward_pre_pr(out: &str, fresh: Json) -> Json {
         }
         (_, fresh) => fresh,
     }
+}
+
+/// The one-line warning `--check` prints when the committed baseline
+/// carries provenance `"projected"` — the trajectory file was written on
+/// a host without a toolchain, so its numbers never gate.  Returns `None`
+/// for any other provenance (the generic not-measured note covers those).
+fn projected_baseline_warning(baseline_path: &str, provenance: &str) -> Option<String> {
+    (provenance == "projected").then(|| {
+        format!(
+            "warning: baseline {baseline_path} has provenance \"projected\" (numbers derived \
+             without measurement) — the regression gate is DISARMED; run `mtsa bench --record` \
+             on a measuring host to arm it"
+        )
+    })
 }
 
 /// Gate a fresh measurement against a committed baseline file.  Returns
@@ -386,10 +435,13 @@ fn check_against(baseline_path: &str, m: &Measured) -> Result<bool> {
             Ok(true)
         }
         _ => {
-            println!(
-                "check: baseline {baseline_path} has provenance {provenance:?} \
-                 (not \"measured\") — informational only, not gating"
-            );
+            match projected_baseline_warning(baseline_path, provenance) {
+                Some(w) => println!("{w}"),
+                None => println!(
+                    "check: baseline {baseline_path} has provenance {provenance:?} \
+                     (not \"measured\") — informational only, not gating"
+                ),
+            }
             Ok(false)
         }
     }
@@ -407,12 +459,12 @@ pub fn cmd_bench(args: &ParsedArgs) -> Result<()> {
     );
 
     if args.has("check") {
-        let baseline = args.opt("baseline").unwrap_or("BENCH_9.json");
+        let baseline = args.opt("baseline").unwrap_or("BENCH_10.json");
         check_against(baseline, &m)?;
     }
 
     if args.has("record") {
-        let out = args.opt("out").unwrap_or("BENCH_9.json");
+        let out = args.opt("out").unwrap_or("BENCH_10.json");
         let json = carry_forward_pre_pr(out, record_json(&m)).render();
         std::fs::write(out, &json).with_context(|| format!("writing {out}"))?;
         println!("wrote {out} ({} bytes, provenance \"measured\")", json.len());
@@ -452,6 +504,9 @@ mod tests {
             burst_events_per_run: 1,
             burst_wall_s_per_run: 1.0,
             burst_events_per_sec: 1.0,
+            vector_layers_per_run: 1,
+            vector_wall_s_per_run: 1.0,
+            vector_layers_per_sec: 1.0,
         }
     }
 
@@ -474,7 +529,7 @@ mod tests {
         assert!(eng.get("events_per_run").unwrap().as_u64().unwrap() > 0);
         let sweep = parsed.get("scenarios").unwrap().get("sweep_point_light").unwrap();
         assert!(sweep.get("points_per_sec").unwrap().as_f64().unwrap() > 0.0);
-        assert_eq!(parsed.get("pr").and_then(Json::as_u64), Some(9));
+        assert_eq!(parsed.get("pr").and_then(Json::as_u64), Some(10));
         let fleet = parsed.get("scenarios").unwrap().get("fleet_events_per_sec").unwrap();
         assert!(fleet.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert!(fleet.get("events").unwrap().as_u64().unwrap() > 0);
@@ -486,6 +541,12 @@ mod tests {
         let burst = parsed.get("scenarios").unwrap().get("coalesce_burst").unwrap();
         assert!(burst.get("events_per_run").unwrap().as_u64().unwrap() >= 32);
         assert!(burst.get("events_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        let vector = parsed.get("scenarios").unwrap().get("vector_layers_per_sec").unwrap();
+        assert!(
+            vector.get("layers_per_run").unwrap().as_u64().unwrap() > 0,
+            "NCF+MelodyLSTM must offload at least one memory-bound layer"
+        );
+        assert!(vector.get("layers_per_sec").unwrap().as_f64().unwrap() > 0.0);
         let _ = std::fs::remove_file(&out);
     }
 
@@ -525,6 +586,19 @@ mod tests {
         let fresh = obj(vec![("pr", Json::Num(7.0))]);
         let kept = carry_forward_pre_pr("/nonexistent/BENCH_7.json", fresh.clone());
         assert_eq!(kept.render(), fresh.render());
+    }
+
+    #[test]
+    fn projected_warning_names_baseline_and_arm_command() {
+        // The satellite contract: one explicit line naming the baseline
+        // file and how to arm the gate.
+        let w = projected_baseline_warning("BENCH_10.json", "projected").unwrap();
+        assert!(w.starts_with("warning:"), "{w}");
+        assert!(w.contains("BENCH_10.json"), "{w}");
+        assert!(w.contains("mtsa bench --record"), "{w}");
+        assert!(!w.contains('\n'), "one line: {w}");
+        assert!(projected_baseline_warning("BENCH_10.json", "measured").is_none());
+        assert!(projected_baseline_warning("BENCH_10.json", "unknown").is_none());
     }
 
     #[test]

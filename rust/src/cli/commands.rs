@@ -25,7 +25,7 @@ USAGE:
   mtsa run <heavy|light|model,...>       run dynamic vs sequential
        [--config <file>] [--policy widest|equal|mem-aware] [--mem]
        [--mode columns|2d] [--preempt off|arrival|deadline]
-       [--static] [--detail]
+       [--lanes N] [--static] [--detail]
   mtsa sweep                             parallel scenario sweep (SLA report)
        [--config <file>] [--mixes heavy,light] [--rates 0,20000,100000]
        [--policies widest,equal,mem-aware] [--feeds independent,interleaved]
@@ -33,8 +33,8 @@ USAGE:
        [--preempts off,arrival,deadline]
        [--bandwidths 8,32,128] [--arbitrations fair,weighted,priority]
        [--requests 12] [--slack 3.0] [--burst <size>]
-       [--fleet 4,8] [--tables <dir>] [--seed 42] [--threads N]
-       [--json <file>]
+       [--fleet 4,8] [--tables <dir>] [--lanes 0,128] [--seed 42]
+       [--threads N] [--json <file>]
   mtsa fleet                             serve a request stream on a cluster
        [--config <file>] [--instances 8] [--requests 1000000]
        [--mix heavy|light|model,...] [--mean <cycles>]
@@ -106,7 +106,10 @@ fn load_config(args: &ParsedArgs) -> Result<RunConfig> {
 }
 
 fn cmd_run(args: &ParsedArgs) -> Result<()> {
-    args.ensure_known(&["config", "policy", "mode", "preempt"], &["static", "detail", "mem"])?;
+    args.ensure_known(
+        &["config", "policy", "mode", "preempt", "lanes"],
+        &["static", "detail", "mem"],
+    )?;
     let spec = args.positionals.first().map(String::as_str).unwrap_or("heavy");
     let pool = resolve_pool(spec)?;
     let mut cfg = load_config(args)?;
@@ -120,6 +123,13 @@ fn cmd_run(args: &ParsedArgs) -> Result<()> {
     }
     if let Some(p) = args.opt("preempt") {
         cfg.scheduler.preempt = p.parse::<PreemptMode>().map_err(|e| anyhow!("--preempt: {e}"))?;
+    }
+    if let Some(l) = args.opt("lanes") {
+        // Heterogeneous shorthand: an l-lane vector engine at default
+        // rates ([vector] config section for the full knobs); 0 = off.
+        let l: u64 = l.parse().map_err(|_| anyhow!("--lanes expects an integer, got {l:?}"))?;
+        cfg.scheduler.vector =
+            if l == 0 { None } else { Some(crate::sim::dataflow::VectorUnit::new(l)) };
     }
     if args.has("mem") && cfg.scheduler.mem.is_none() {
         // Shorthand: shared memory hierarchy at defaults ([mem] config
@@ -182,6 +192,13 @@ fn cmd_run(args: &ParsedArgs) -> Result<()> {
         );
     }
 
+    if let Some(v) = cfg.scheduler.vector {
+        println!(
+            "vector engine ({} lanes): {} memory-bound layer segment(s) offloaded",
+            v.lanes, g.dynamic.vector_dispatches,
+        );
+    }
+
     if cfg.scheduler.mem.is_some() {
         println!("shared memory hierarchy (dynamic run):");
         println!("{}", report::mem_table(&g.dynamic, &model).render());
@@ -236,7 +253,7 @@ fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
         &[
             "config", "mixes", "rates", "policies", "feeds", "geoms", "modes", "preempts",
             "bandwidths", "arbitrations", "requests", "slack", "burst", "burst-within", "fleet",
-            "tables", "seed", "threads", "json",
+            "tables", "lanes", "seed", "threads", "json",
         ],
         &[],
     )?;
@@ -314,6 +331,11 @@ fn cmd_sweep(args: &ParsedArgs) -> Result<()> {
                 .with_context(|| format!("--tables {dir}"))?,
         );
         grid.tables = vec![false, true];
+    }
+    if let Some(v) = args.opt("lanes") {
+        // Heterogeneous-compute axis: vector-engine lane counts per point
+        // (0 = array-only, for off/on pairs in one sweep).
+        grid.lanes = parse_list::<u64>(v, "lanes")?;
     }
     grid.requests = args.opt_u64("requests", grid.requests as u64)?.max(1) as usize;
     grid.seed = args.opt_u64("seed", grid.seed)?;

@@ -41,6 +41,13 @@
 //! arbitration = "fair"     # fair | weighted | priority
 //! banks = 8
 //!
+//! [vector]                 # SIMD lane pool, see docs/heterogeneous.md
+//! enabled = false          # off = pre-heterogeneous model, byte for byte
+//! lanes = 128              # default: cols
+//! ops_per_lane = 1
+//! words_per_lane = 1
+//! startup = 64             # per-layer dispatch/drain overhead (cycles)
+//!
 //! [scenario]              # arrival/QoS defaults, see docs/scenarios.md
 //! arrival = "poisson"     # batch | poisson | bursty
 //! mean_interarrival = 50000.0
@@ -61,7 +68,7 @@ use crate::mem::{ArbitrationMode, MemConfig};
 use crate::util::UnknownTag;
 use crate::energy::components::{EnergyModel, Precision};
 use crate::fleet::{FleetPolicy, Placement};
-use crate::sim::dataflow::ArrayGeometry;
+use crate::sim::dataflow::{ArrayGeometry, VectorUnit, DEFAULT_VECTOR_STARTUP};
 use crate::sim::dram::DramConfig;
 use crate::workloads::generator::ArrivalProcess;
 
@@ -233,8 +240,8 @@ impl RunConfig {
         let mut cfg = RunConfig::default();
 
         let known = [
-            "array", "buffers", "scheduler", "partition", "dram", "mem", "energy", "scenario",
-            "fleet",
+            "array", "buffers", "scheduler", "partition", "dram", "mem", "vector", "energy",
+            "scenario", "fleet",
         ];
         for s in doc.section_names() {
             if !known.contains(&s) {
@@ -359,6 +366,17 @@ impl RunConfig {
                 m.banks = b;
             }
             cfg.scheduler.mem = Some(m);
+        }
+
+        if doc.get("vector", "enabled").and_then(|v| v.as_bool()).unwrap_or(false) {
+            let lanes = u64_of("vector", "lanes").unwrap_or(cols);
+            let ops = u64_of("vector", "ops_per_lane").unwrap_or(1);
+            let words = u64_of("vector", "words_per_lane").unwrap_or(1);
+            let startup = u64_of("vector", "startup").unwrap_or(DEFAULT_VECTOR_STARTUP);
+            cfg.scheduler.vector = Some(
+                VectorUnit::try_new(lanes, ops, words, startup)
+                    .map_err(|e| anyhow::anyhow!("in [vector]: {e}"))?,
+            );
         }
 
         let sc = &mut cfg.scenario;
@@ -600,6 +618,47 @@ mod tests {
     }
 
     #[test]
+    fn vector_section_round_trip() {
+        let cfg = RunConfig::from_toml(
+            r#"
+            [vector]
+            enabled = true
+            lanes = 256
+            ops_per_lane = 4
+            words_per_lane = 2
+            startup = 32
+            "#,
+        )
+        .unwrap();
+        let v = cfg.scheduler.vector.unwrap();
+        assert_eq!(v.lanes, 256);
+        assert_eq!(v.ops_per_lane, 4);
+        assert_eq!(v.words_per_lane, 2);
+        assert_eq!(v.startup, 32);
+
+        // Lane count defaults to the array's column count.
+        let d = RunConfig::from_toml("[array]\ncols = 64\n[vector]\nenabled = true").unwrap();
+        assert_eq!(
+            d.scheduler.vector.unwrap(),
+            VectorUnit::try_new(64, 1, 1, DEFAULT_VECTOR_STARTUP).unwrap()
+        );
+
+        // Disabled (the default): no lane pool, bit-for-bit today's runs.
+        let off = RunConfig::from_toml("[vector]\nenabled = false\nlanes = 64").unwrap();
+        assert!(off.scheduler.vector.is_none());
+        assert!(RunConfig::from_toml("").unwrap().scheduler.vector.is_none());
+    }
+
+    #[test]
+    fn vector_error_names_the_offending_value() {
+        let e = RunConfig::from_toml("[vector]\nenabled = true\nlanes = 0").unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("[vector]") && msg.contains("`lanes = 0`"), "{msg}");
+        let e = RunConfig::from_toml("[vector]\nenabled = true\nops_per_lane = 0").unwrap_err();
+        assert!(format!("{e:#}").contains("`ops_per_lane = 0`"), "{e:#}");
+    }
+
+    #[test]
     fn mem_and_dram_are_mutually_exclusive() {
         let e = RunConfig::from_toml(
             "[dram]\nenabled = true\n[mem]\nenabled = true",
@@ -625,6 +684,9 @@ mod tests {
             "[mem]\nenabled = true\nwords_per_cycle = -2.0",
             "[mem]\nenabled = true\nbanks = 0",
             "[mem]\nenabled = true\narbitration = \"psychic\"",
+            "[vector]\nenabled = true\nlanes = 0",
+            "[vector]\nenabled = true\nops_per_lane = 0",
+            "[vector]\nenabled = true\nwords_per_lane = 0",
             "[scenario]\narrival = \"fractal\"",
             "[scenario]\nmean_interarrival = 0",
             "[scenario]\nburst_size = 0",

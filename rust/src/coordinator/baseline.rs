@@ -75,7 +75,7 @@ impl Scheduler for SequentialBaseline {
         let out = match current {
             Some((_, di)) => match ready.iter().filter(|r| r.dnn == di).map(|r| r.layer).min() {
                 Some(layer) => {
-                    vec![Allocation { dnn: di, layer, tile: Tile::full(self.cfg.geom) }]
+                    vec![Allocation::array(di, layer, Tile::full(self.cfg.geom))]
                 }
                 // Current DNN not arrived yet: idle until its arrival.
                 None => Vec::new(),

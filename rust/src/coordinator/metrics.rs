@@ -8,7 +8,7 @@ use std::collections::BTreeMap;
 use crate::mem::MemStats;
 use crate::sim::activity::Activity;
 use crate::sim::dataflow::ArrayGeometry;
-use crate::sim::partitioned::Tile;
+use crate::sim::partitioned::{LaneSpan, Tile};
 use crate::util::stats::{deadline_misses, Summary};
 use crate::workloads::dnng::{DnnId, LayerId};
 
@@ -23,6 +23,9 @@ pub struct DispatchRecord {
     pub layer: LayerId,
     pub layer_name: String,
     pub tile: Tile,
+    /// `Some(span)` when the layer ran on the vector engine instead of
+    /// the systolic array (`tile` is then the span's 1-row shadow).
+    pub lanes: Option<LaneSpan>,
     pub t_start: u64,
     pub t_end: u64,
     pub activity: Activity,
@@ -61,6 +64,12 @@ pub struct RunMetrics {
     /// Cycles spent on folds that were later replayed — the total
     /// refill overhead preemption paid for its latency wins.
     pub wasted_refill_cycles: u64,
+    /// Layers that ran on the vector engine (0 unless lanes are on).
+    pub vector_dispatches: u64,
+    /// Aggregate activity of vector-engine layers, kept out of
+    /// [`RunMetrics::total_activity`] so array utilization and the
+    /// array's energy bill stay array-only.
+    pub vector_activity: Activity,
 }
 
 impl RunMetrics {
@@ -86,7 +95,12 @@ impl RunMetrics {
         let done = self.completion.entry(rec.dnn_name.clone()).or_insert(0);
         *done = (*done).max(rec.t_end);
         self.makespan = self.makespan.max(rec.t_end);
-        self.total_activity.add(&rec.activity);
+        if rec.lanes.is_some() {
+            self.vector_dispatches += 1;
+            self.vector_activity.add(&rec.activity);
+        } else {
+            self.total_activity.add(&rec.activity);
+        }
         self.dispatches.push(rec);
     }
 
@@ -141,6 +155,9 @@ impl RunMetrics {
         let window = span / buckets as f64;
         let mut busy = vec![0.0f64; buckets]; // column-equivalent-cycles per window
         for d in &self.dispatches {
+            if d.lanes.is_some() {
+                continue; // vector-engine residency is not array occupancy
+            }
             // Column-equivalents of the tile (== its width for full-height
             // tiles — both divisions are exact, keeping columns-mode
             // output bit-identical to the pre-2D accounting).
@@ -232,6 +249,7 @@ mod tests {
             layer,
             layer_name: format!("l{layer}"),
             tile,
+            lanes: None,
             t_start: t0,
             t_end: t1,
             activity: Activity { macs: 100, ..Default::default() },
@@ -372,6 +390,23 @@ mod tests {
         assert_eq!(m.mem["a"].layers, 2);
         assert_eq!(m.mem_total.xfer_words, 1900);
         assert_eq!(m.mem_total.layers, 3);
+    }
+
+    #[test]
+    fn vector_records_stay_out_of_array_accounting() {
+        let mut m = RunMetrics::default();
+        m.record_dispatch(rec("a", 0, 128, 0, 500));
+        let mut v = rec_tile("b", 0, Tile::new(0, 0, 1, 256), 0, 1000);
+        v.lanes = Some(LaneSpan::new(0, 256));
+        m.record_dispatch(v);
+        assert_eq!(m.vector_dispatches, 1);
+        assert_eq!(m.vector_activity.macs, 100);
+        assert_eq!(m.total_activity.macs, 100, "array bill excludes the lane record");
+        assert_eq!(m.makespan, 1000, "but the lane record still sets the makespan");
+        assert_eq!(m.completion["b"], 1000);
+        // Occupancy stays array-only: the second half (lane-only) is idle.
+        let tl = m.occupancy_timeline(GEOM, 2);
+        assert!((tl[1] - 0.0).abs() < 1e-9, "{tl:?}");
     }
 
     #[test]

@@ -152,7 +152,7 @@ impl Scheduler for MultiArrayPolicy {
             let Some(layer) = ready.iter().filter(|r| r.dnn == dnn).map(|r| r.layer).min() else {
                 continue;
             };
-            out.push(Allocation { dnn, layer, tile: chip });
+            out.push(Allocation::array(dnn, layer, chip));
         }
         self.ready_buf = ready;
         out

@@ -27,7 +27,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
 
 use crate::sim::dataflow::ArrayGeometry;
-use crate::sim::partitioned::{PartitionSlice, Tile};
+use crate::sim::partitioned::{LaneSpan, PartitionSlice, Tile};
 
 /// Allocation handle: index into the live allocation table.
 pub type AllocId = usize;
@@ -499,6 +499,85 @@ impl PartitionManager {
     }
 }
 
+/// The vector-lane allocation pool: contiguous 1D lane spans, carved and
+/// merged exactly like column slices.
+///
+/// Internally this *is* a [`PartitionManager`] over the degenerate
+/// `1 × lanes` geometry — every allocation is "full height" by
+/// construction, so the allocator runs the proven columns-mode code
+/// (left-edge widest-fit carving, pairwise merge, epoch-on-mutation) and
+/// the rehearse/replay + `(nonce, epoch)` plan-key contract that keeps
+/// the plan cache sound carries over verbatim.  The wrapper only
+/// translates between [`LaneSpan`]s and the 1-row [`Tile`]s the inner
+/// manager stores, so lane handles can never be mistaken for array tiles.
+#[derive(Debug, Clone)]
+pub struct LaneManager {
+    pm: PartitionManager,
+}
+
+impl LaneManager {
+    pub fn new(lanes: u64) -> LaneManager {
+        assert!(lanes > 0, "a lane pool needs at least one lane");
+        LaneManager { pm: PartitionManager::new(ArrayGeometry::new(1, lanes)) }
+    }
+
+    /// Total lanes in the pool.
+    pub fn lanes(&self) -> u64 {
+        self.pm.cols()
+    }
+
+    /// `(nonce, epoch)` of the underlying free-set — see
+    /// [`PartitionManager::plan_key`].  Plan memos hash this alongside
+    /// the array pool's key so a lane mutation invalidates cached plans.
+    pub fn plan_key(&self) -> (u64, u64) {
+        self.pm.plan_key()
+    }
+
+    /// Free lanes in total (across all free spans).
+    pub fn free_lanes(&self) -> u64 {
+        self.pm.free_pes()
+    }
+
+    /// Width of the widest free span, 0 when the pool is exhausted.
+    pub fn widest_free(&self) -> u64 {
+        self.pm.widest_free().map_or(0, |s| s.width)
+    }
+
+    /// Live lane allocations.
+    pub fn allocated_count(&self) -> usize {
+        self.pm.allocated_count()
+    }
+
+    /// True when every lane is free (single free span).
+    pub fn fully_free(&self) -> bool {
+        self.pm.fully_free()
+    }
+
+    /// Allocate `width` lanes from the widest free span (leftmost on
+    /// ties), like the columns-mode array allocator.
+    pub fn allocate(&mut self, width: u64) -> Option<(AllocId, LaneSpan)> {
+        let (id, tile) = self.pm.allocate(width)?;
+        Some((id, LaneSpan::from_tile(tile)))
+    }
+
+    /// Replay an exact rehearsed span on the live pool.
+    pub fn allocate_at(&mut self, span: LaneSpan) -> Option<(AllocId, LaneSpan)> {
+        let (id, tile) = self.pm.allocate_at(span.as_tile())?;
+        Some((id, LaneSpan::from_tile(tile)))
+    }
+
+    /// Release a lane allocation (panics on unknown ids, like the array
+    /// pool).
+    pub fn free(&mut self, id: AllocId) {
+        self.pm.free(id);
+    }
+
+    /// The span of a live lane allocation.
+    pub fn span_of(&self, id: AllocId) -> Option<LaneSpan> {
+        self.pm.tile_of(id).map(LaneSpan::from_tile)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -856,6 +935,52 @@ mod tests {
             }
             prop::ensure(pm.fully_free(), "all freed -> fully free")
         });
+    }
+
+    #[test]
+    fn lane_manager_carve_merge_and_plan_key() {
+        let mut lm = LaneManager::new(256);
+        assert_eq!(lm.lanes(), 256);
+        assert!(lm.fully_free());
+        assert_eq!(lm.widest_free(), 256);
+        let (n0, e0) = lm.plan_key();
+        let (a, sa) = lm.allocate(64).unwrap();
+        assert_eq!(sa, LaneSpan::new(0, 64));
+        assert_eq!(lm.plan_key(), (n0, e0 + 1));
+        let (b, sb) = lm.allocate(128).unwrap();
+        assert_eq!(sb, LaneSpan::new(64, 128));
+        assert_eq!(lm.free_lanes(), 64);
+        assert_eq!(lm.allocated_count(), 2);
+        assert_eq!(lm.span_of(a), Some(sa));
+        // Oversized request fails without mutating (epoch unchanged).
+        let key = lm.plan_key();
+        assert!(lm.allocate(65).is_none());
+        assert_eq!(lm.plan_key(), key);
+        lm.free(a);
+        // [0, 64) freed; widest span is now the left gap + nothing merged
+        // with the tail yet (b occupies the middle).
+        assert_eq!(lm.widest_free(), 64);
+        lm.free(b);
+        assert!(lm.fully_free());
+        assert_eq!(lm.free_lanes(), 256);
+    }
+
+    #[test]
+    fn lane_manager_rehearse_replay_parity() {
+        // The policy rehearses on a clone with `allocate`; the engine
+        // replays the returned spans with `allocate_at` — both must land
+        // on the identical free set and plan key (the PR 9 cache
+        // contract, carried to the second pool).
+        let mut live = LaneManager::new(128);
+        let mut rehearsal = live.clone();
+        for w in [32u64, 64, 16] {
+            let (_, span) = rehearsal.allocate(w).unwrap();
+            let (_, replayed) = live.allocate_at(span).unwrap();
+            assert_eq!(span, replayed);
+        }
+        assert_eq!(live.plan_key(), rehearsal.plan_key());
+        assert_eq!(live.free_lanes(), rehearsal.free_lanes());
+        assert_eq!(live.widest_free(), rehearsal.widest_free());
     }
 
     #[test]

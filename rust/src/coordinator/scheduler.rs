@@ -29,20 +29,22 @@ use std::str::FromStr;
 use std::sync::OnceLock;
 
 use super::metrics::RunMetrics;
-use super::partition::{AllocId, PartitionManager};
+use super::partition::{AllocId, LaneManager, PartitionManager};
 use super::queue::ReadyLayer;
 use crate::mem::{MemConfig, MemSpec};
 use crate::profiler::ProfileStore;
 use crate::sim::activity::Activity;
 use crate::sim::buffers::BufferConfig;
-use crate::sim::dataflow::{next_fold_boundary, ArrayGeometry};
+use crate::sim::dataflow::{
+    layer_timing_vector, next_fold_boundary, vector_compute_cycles, ArrayGeometry, VectorUnit,
+};
 use crate::sim::dram::DramConfig;
-use crate::sim::partitioned::{tile_layer_timing, FeedPolicy, Tile};
+use crate::sim::partitioned::{tile_layer_timing, FeedPolicy, LaneSpan, Tile};
 use crate::sim_core::{
     Allocation, Checkpoint, Engine, LayerExec, RunningLayer, Scheduler, SystemState,
 };
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
-use crate::workloads::shapes::GemmDims;
+use crate::workloads::shapes::{GemmDims, OpClass};
 
 pub use crate::util::UnknownTag;
 
@@ -267,6 +269,13 @@ pub struct SchedulerConfig {
     /// fill non-pow-2 free rectangles the ladder must round down from.
     /// `None` (the default) keeps the ladder-only planner bit for bit.
     pub tables: Option<std::sync::Arc<ProfileStore>>,
+    /// The machine's vector engine (`[vector]` config section): when
+    /// set, the planner places memory-bound ready layers (low
+    /// arithmetic intensity — see
+    /// [`op_class`](crate::workloads::shapes::op_class)) on lane spans
+    /// while compute-bound tenants keep the systolic array.  `None`
+    /// (the default) keeps the array-only machine bit for bit.
+    pub vector: Option<VectorUnit>,
 }
 
 impl Default for SchedulerConfig {
@@ -285,6 +294,7 @@ impl Default for SchedulerConfig {
             dram: None,
             mem: None,
             tables: None,
+            vector: None,
         }
     }
 }
@@ -477,6 +487,10 @@ impl Scheduler for DynamicScheduler {
         self.cfg.mem_spec()
     }
 
+    fn vector_spec(&self) -> Option<VectorUnit> {
+        self.cfg.vector
+    }
+
     fn on_arrival(&mut self, _s: &SystemState<'_>, _dnn: DnnId) {
         if self.cfg.preempt != PreemptMode::Off {
             self.preempt_armed = true;
@@ -665,6 +679,16 @@ impl Scheduler for DynamicScheduler {
             let (nonce, epoch) = s.partitions.plan_key();
             sig.push(nonce);
             sig.push(epoch);
+            // The lane pool is a second allocation input: its plan key
+            // joins the signature so a memoized plan never replays lane
+            // spans the pool no longer has free.  Absent (no extra
+            // words) on array-only machines — the signature stays
+            // byte-identical to the pre-heterogeneous one.
+            if let Some(lm) = s.lanes {
+                let (ln, le) = lm.plan_key();
+                sig.push(ln);
+                sig.push(le);
+            }
             sig.push(self.cfg.tables.is_some() as u64);
             for r in &ready {
                 let g = s.remaining_gemm(r.dnn, r.layer);
@@ -680,10 +704,26 @@ impl Scheduler for DynamicScheduler {
             }
             self.arena.sig = sig;
         }
-        let out = match self.cfg.partition_mode {
-            PartitionMode::Columns => self.plan_columns(s, &ready),
-            PartitionMode::TwoD => self.plan_2d(s, &ready),
+        // Heterogeneous stage: memory-bound ready layers are carved
+        // lane spans first (and drop out of `ready`), so the array
+        // planner below shares PEs among the compute-bound layers only.
+        let mut vector_allocs = Vec::new();
+        if let Some(lm) = s.lanes {
+            if self.cfg.vector.is_some() {
+                plan_vector(s, lm, &mut ready, &mut vector_allocs);
+            }
+        }
+        let mut out = if ready.is_empty() {
+            // Everything went to the lanes: skip the array planner (its
+            // equal-share divisor would see zero available layers).
+            self.take_out()
+        } else {
+            match self.cfg.partition_mode {
+                PartitionMode::Columns => self.plan_columns(s, &ready),
+                PartitionMode::TwoD => self.plan_2d(s, &ready),
+            }
         };
+        out.extend_from_slice(&vector_allocs);
         if cacheable {
             // Adopt the just-built signature (the memo's old buffer
             // becomes the next call's scratch) and copy the plan.
@@ -751,6 +791,84 @@ impl Scheduler for DynamicScheduler {
         };
         LayerExec { cycles, activity: ind.activity }
     }
+
+    /// Cycles for one layer streamed through a lane span of the vector
+    /// engine — the closed form of
+    /// [`layer_timing_vector`](crate::sim::dataflow::layer_timing_vector).
+    /// Under `[mem]` only the compute path is priced here; the engine
+    /// admits the layer's ideal word stream to the bandwidth arbiter, so
+    /// pricing the stream again would double-count transfer time.
+    fn exec_vector(
+        &self,
+        s: &SystemState<'_>,
+        dnn: DnnId,
+        layer: LayerId,
+        span: LaneSpan,
+    ) -> LayerExec {
+        let vu = self.cfg.vector.expect("exec_vector without a configured vector engine");
+        let gemm = self.gemm_remaining(s, dnn, layer);
+        let t = layer_timing_vector(&vu, span.lanes, gemm);
+        if self.cfg.mem.is_some() {
+            let cycles = vector_compute_cycles(&vu, span.lanes, gemm);
+            return LayerExec { cycles, activity: t.activity };
+        }
+        let cycles = match &self.cfg.dram {
+            Some(d) => d.bound_cycles(t.cycles, &t.activity),
+            None => t.cycles,
+        };
+        LayerExec { cycles, activity: t.activity }
+    }
+}
+
+/// The heterogeneous placement stage: carve lane spans for the
+/// memory-bound ready layers (arithmetic intensity below the
+/// [`crate::workloads::shapes::INTENSITY_THRESHOLD`]), rehearsed on a
+/// clone of the live lane pool exactly like the array planner rehearses
+/// its tiling.  Placed layers are removed from `ready`; a layer the pool
+/// cannot host right now *stays* and competes for the array, so the
+/// progress guarantee is unchanged.  Sizing follows
+/// `Partition_Calculation`'s shape on the 1D pool: a lone memory-bound
+/// layer on an idle pool takes every lane, otherwise each takes the
+/// pow-2 equal share capped by the widest free span.
+fn plan_vector(
+    s: &SystemState<'_>,
+    live: &LaneManager,
+    ready: &mut Vec<ReadyLayer>,
+    out: &mut Vec<Allocation>,
+) {
+    let memory_bound = |r: &ReadyLayer| {
+        s.pool.dnns[r.dnn].layers[r.layer].op_class() == OpClass::MemoryBound
+    };
+    let mb = ready.iter().filter(|r| memory_bound(r)).count() as u64;
+    if mb == 0 {
+        return;
+    }
+    let mut lm = live.clone();
+    let total = lm.lanes();
+    let n_avail = mb + lm.allocated_count() as u64;
+    let target = floor_pow2((total / n_avail).max(1));
+    ready.retain(|r| {
+        if !memory_bound(r) {
+            return true;
+        }
+        // A lone memory-bound layer on an idle pool takes all lanes.
+        let width = if lm.fully_free() && n_avail == 1 {
+            total
+        } else {
+            let widest = lm.widest_free();
+            if widest == 0 {
+                return true; // pool exhausted: compete for the array
+            }
+            target.min(floor_pow2(widest))
+        };
+        match lm.allocate(width) {
+            Some((_, span)) => {
+                out.push(Allocation::vector(r.dnn, r.layer, span));
+                false
+            }
+            None => true,
+        }
+    });
 }
 
 impl DynamicScheduler {
@@ -829,7 +947,7 @@ impl DynamicScheduler {
             // First layer on a fully idle array: all PEs (Line 6).
             if pm.fully_free() && n_avail == 1 {
                 let (_, tile) = pm.allocate(cols).expect("full array free");
-                out.push(Allocation { dnn: r.dnn, layer: r.layer, tile });
+                out.push(Allocation::array(r.dnn, r.layer, tile));
                 dispatched_any = true;
                 bound_in_plan |= bound;
                 continue;
@@ -863,7 +981,7 @@ impl DynamicScheduler {
                 }
             };
             let Some((_, tile)) = pm.allocate(width) else { continue };
-            out.push(Allocation { dnn: r.dnn, layer: r.layer, tile });
+            out.push(Allocation::array(r.dnn, r.layer, tile));
             dispatched_any = true;
             bound_in_plan |= bound;
         }
@@ -924,7 +1042,7 @@ impl DynamicScheduler {
             // First layer on a fully idle array: all PEs (Line 6).
             if pm.fully_free() && n_avail == 1 {
                 let (_, tile) = pm.allocate(geom.cols).expect("full array free");
-                out.push(Allocation { dnn: r.dnn, layer: r.layer, tile });
+                out.push(Allocation::array(r.dnn, r.layer, tile));
                 dispatched_any = true;
                 bound_in_plan |= bound;
                 continue;
@@ -971,7 +1089,7 @@ impl DynamicScheduler {
                 continue; // wait for a completion to merge space
             }
             let Some((_, tile)) = pm.allocate_at(want) else { continue };
-            out.push(Allocation { dnn: r.dnn, layer: r.layer, tile });
+            out.push(Allocation::array(r.dnn, r.layer, tile));
             dispatched_any = true;
             bound_in_plan |= bound;
         }
@@ -1642,6 +1760,7 @@ mod tests {
             pool: &pool,
             queue: &queue,
             partitions: &pm,
+            lanes: None,
             mem: None,
             progress: &progress,
         };

@@ -84,7 +84,7 @@ impl Scheduler for StaticPartitioning {
         next.into_iter()
             .filter_map(|(dnn, layer)| {
                 let tile = Tile::full_height(self.cfg.geom, dnn as u64 * width, width);
-                s.partitions.is_free(tile).then_some(Allocation { dnn, layer, tile })
+                s.partitions.is_free(tile).then_some(Allocation::array(dnn, layer, tile))
             })
             .collect()
     }

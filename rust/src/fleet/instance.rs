@@ -268,6 +268,7 @@ impl Instance {
             preemptions: self.obs.preemptions,
             makespan: self.obs.makespan,
             utilization: if denom > 0.0 { self.obs.busy_pe_cycles as f64 / denom } else { 0.0 },
+            vector_layers: self.obs.vector_layers,
             energy_j: energy.total_j(),
             events: self.events(),
         }

@@ -147,8 +147,13 @@ pub struct InstanceReport {
     pub dropped_batches: u64,
     pub preemptions: u64,
     pub makespan: u64,
-    /// busy-PE-cycles / (makespan × PEs) of this instance.
+    /// busy-PE-cycles / (makespan × PEs) of this instance — array PEs
+    /// only; lane segments are billed to `vector_layers` instead.
     pub utilization: f64,
+    /// Layers served by this instance's vector engine (0 on array-only
+    /// instances).  Programmatic surface only: the fleet table/JSON stay
+    /// byte-identical, heterogeneous fleets read it via the library API.
+    pub vector_layers: u64,
     pub energy_j: f64,
     /// Engine events this instance processed (admissions + layer
     /// completions + preemptions) — the bench throughput denominator.
@@ -199,6 +204,13 @@ pub struct FleetObserver {
     done_at: BTreeMap<DnnId, u64>,
     pub dispatches: u64,
     pub layers_completed: u64,
+    /// Layers that ran on the instance's vector engine (0 unless its
+    /// config carries `[vector]` lanes).  Lane segments are kept out of
+    /// [`FleetObserver::busy_pe_cycles`] and
+    /// [`FleetObserver::activity`] so array utilization and the array
+    /// energy bill stay array-only, mirroring
+    /// [`RunMetrics`](crate::coordinator::metrics::RunMetrics).
+    pub vector_layers: u64,
     pub preemptions: u64,
     pub wasted_refill_cycles: u64,
     pub busy_pe_cycles: u128,
@@ -224,9 +236,13 @@ impl Observer for FleetObserver {
 
     fn on_layer_complete(&mut self, rec: &DispatchRecord) {
         self.layers_completed += 1;
-        self.busy_pe_cycles +=
-            u128::from(rec.tile.pes()) * u128::from(rec.t_end - rec.t_start);
-        self.activity.add(&rec.activity);
+        if rec.lanes.is_some() {
+            self.vector_layers += 1;
+        } else {
+            self.busy_pe_cycles +=
+                u128::from(rec.tile.pes()) * u128::from(rec.t_end - rec.t_start);
+            self.activity.add(&rec.activity);
+        }
         let d = self.done_at.entry(rec.dnn).or_insert(0);
         *d = (*d).max(rec.t_end);
         self.makespan = self.makespan.max(rec.t_end);

@@ -86,7 +86,7 @@ pub struct MemSpec {
 /// once, IFMap streamed once, OFMap out once.  Everything beyond this is
 /// refetch traffic.
 pub fn ideal_words(gemm: GemmDims) -> u64 {
-    gemm.k * gemm.m + gemm.sr * gemm.k + gemm.sr * gemm.m
+    gemm.ideal_words()
 }
 
 /// Per-flight bookkeeping the arbiter does not own.
@@ -166,6 +166,33 @@ impl MemSystem {
         let width = (tile.pes() / self.spec.geom.rows).max(1);
         let upd = self.arbiter.admit(now, alloc, dnn, width, compute_cycles, words);
         (t.activity, upd)
+    }
+
+    /// Admit a layer dispatched onto the *vector lanes*: lane flows are
+    /// first-class arbiter citizens, competing for the same DRAM
+    /// interface as every array partition.  Lanes stream operands
+    /// directly (no tiled refetch, no banked SRAM working set), so the
+    /// transfer is exactly [`ideal_words`] and no banks are granted; the
+    /// arbiter weight is one column-equivalent — a lane group occupies
+    /// one drain port's worth of the interface, matching the width-1
+    /// share the narrowest array slice gets.
+    pub fn admit_vector(
+        &mut self,
+        now: u64,
+        alloc: AllocId,
+        dnn: DnnId,
+        gemm: GemmDims,
+        compute_cycles: u64,
+        activity: Activity,
+    ) -> (Activity, MemUpdate) {
+        let words = ideal_words(gemm);
+        let bound = self.spec.cfg.dram.transfer_cycles(&activity) > compute_cycles;
+        if bound {
+            *self.feedback.inflight_bound.entry(dnn).or_insert(0) += 1;
+        }
+        self.meta.insert(alloc, FlightMeta { refetch_words: 0, bound });
+        let upd = self.arbiter.admit(now, alloc, dnn, 1, compute_cycles, words);
+        (activity, upd)
     }
 
     /// True when a `LayerComplete { t, alloc }` event was superseded by a

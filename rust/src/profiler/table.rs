@@ -25,7 +25,10 @@ use std::sync::Arc;
 
 use crate::energy::components::{EnergyModel, Precision};
 use crate::sim::buffers::BufferConfig;
-use crate::sim::dataflow::{baseline_layer_timing, layer_timing_tile_with_share, ArrayGeometry};
+use crate::sim::dataflow::{
+    baseline_layer_timing, layer_timing_tile_with_share, layer_timing_vector, ArrayGeometry,
+    VectorUnit,
+};
 use crate::sim::partitioned::Tile;
 use crate::util::ceil_div;
 use crate::util::json::Json;
@@ -59,6 +62,22 @@ pub struct LayerProfile {
     pub best_cycles: u64,
     /// Full-array single-tenant cycles at batch 1, for reference.
     pub baseline_cycles: u64,
+}
+
+impl LayerProfile {
+    /// The profiled GEMM, reassembled.
+    pub fn gemm(&self) -> GemmDims {
+        GemmDims { sr: self.sr, k: self.k, m: self.m }
+    }
+
+    /// Cycles this layer would take on `lanes` lanes of the vector engine
+    /// `vu` — the lane closed form priced from the profiled GEMM, so
+    /// offline tables can compare array candidates against a heterogeneous
+    /// machine's lanes without re-deriving shapes.  Purely additive: no
+    /// table artifact (JSON or CSV) changes.
+    pub fn vector_cycles(&self, vu: &VectorUnit, lanes: u64) -> u64 {
+        layer_timing_vector(vu, lanes, self.gemm()).cycles
+    }
 }
 
 /// The compact summary table for one (model, geometry) pair.
@@ -439,6 +458,24 @@ mod tests {
     fn ncf_table(geom: ArrayGeometry) -> ProfileTable {
         let dnn = (models::by_name("NCF").unwrap().build)();
         ProfileTable::build("NCF", &dnn, geom, &BufferConfig::default())
+    }
+
+    #[test]
+    fn layer_profile_prices_the_vector_closed_form() {
+        // NCF's embeddings are the canonical lane customers: the profile's
+        // vector pricing must be exactly the dataflow closed form on the
+        // reassembled GEMM.
+        let t = ncf_table(ArrayGeometry::new(128, 128));
+        let vu = VectorUnit::new(128);
+        for l in &t.layers {
+            assert_eq!(
+                l.vector_cycles(&vu, 128),
+                layer_timing_vector(&vu, 128, l.gemm()).cycles,
+                "layer {}",
+                l.name,
+            );
+            assert!(l.vector_cycles(&vu, 128) > vu.startup);
+        }
     }
 
     #[test]

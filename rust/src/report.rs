@@ -203,12 +203,14 @@ fn geom_label(geom: crate::sim::dataflow::ArrayGeometry) -> String {
 /// preemption columns (mode, count, wasted refill cycles) only when some
 /// point ran with preemption on — so column-only non-preemptive sweeps
 /// render exactly as before.  A `tables` column appears only when the
-/// grid has a profile-table axis.
+/// grid has a profile-table axis, and two lane columns (count, vector
+/// dispatches) only when some point ran with a vector engine.
 pub fn sweep_table(grid: &SweepGrid, rows: &[SweepRow]) -> Table {
     let with_mem = rows.iter().any(|r| r.mem.is_some());
     let with_mode = rows.iter().any(|r| r.point.mode == PartitionMode::TwoD);
     let with_preempt = rows.iter().any(|r| r.point.preempt != PreemptMode::Off);
     let with_tables = !grid.tables.is_empty();
+    let with_vector = rows.iter().any(|r| r.vector.is_some());
     let mut headers = vec![
         "mix", "arrival", "policy", "feed", "cols", "makespan", "vs seq", "util", "p50 lat",
         "p99 lat", "miss",
@@ -224,6 +226,9 @@ pub fn sweep_table(grid: &SweepGrid, rows: &[SweepRow]) -> Table {
     }
     if with_mem {
         headers.extend(["bw", "arb", "stall", "wpc"]);
+    }
+    if with_vector {
+        headers.extend(["lanes", "vdisp"]);
     }
     let mut t = Table::new(&headers);
     for r in rows {
@@ -265,6 +270,12 @@ pub fn sweep_table(grid: &SweepGrid, rows: &[SweepRow]) -> Table {
                     format!("{:.2}", m.stats.achieved_words_per_cycle()),
                 ]),
                 None => cells.extend(["-".into(), "-".into(), "-".into(), "-".into()]),
+            }
+        }
+        if with_vector {
+            match &r.vector {
+                Some(v) => cells.extend([v.lanes.to_string(), v.dispatches.to_string()]),
+                None => cells.extend(["-".into(), "-".into()]),
             }
         }
         t.row(&cells);
@@ -362,6 +373,15 @@ pub fn sweep_json(grid: &SweepGrid, rows: &[SweepRow]) -> Json {
             mo.insert("total".to_string(), mem_stats_json(&m.stats));
             o.insert("mem".to_string(), Json::Obj(mo));
         }
+        // Only emitted for points that ran with a vector engine — a sweep
+        // without the lanes axis (and no [vector] config) renders
+        // byte-identically to before.
+        if let Some(v) = &r.vector {
+            let mut vo = BTreeMap::new();
+            vo.insert("lanes".to_string(), Json::Num(v.lanes as f64));
+            vo.insert("dispatches".to_string(), Json::Num(v.dispatches as f64));
+            o.insert("vector".to_string(), Json::Obj(vo));
+        }
         o.insert("overall".to_string(), tenant_stats_json(&r.outcome.overall));
         o.insert("seq_overall".to_string(), tenant_stats_json(&r.seq_outcome.overall));
         o.insert(
@@ -416,6 +436,12 @@ pub fn sweep_json(grid: &SweepGrid, rows: &[SweepRow]) -> Json {
         if let Some(store) = &grid.tables_store {
             top.insert("tables_origin".to_string(), Json::Str(store.origin.clone()));
         }
+    }
+    if !grid.lanes.is_empty() {
+        top.insert(
+            "lanes_axis".to_string(),
+            Json::Arr(grid.lanes.iter().map(|&l| Json::Num(l as f64)).collect()),
+        );
     }
     if !grid.bandwidths.is_empty() {
         top.insert(
@@ -711,6 +737,18 @@ mod tests {
         let a = sweep_json(&grid, &[]).render();
         let b = sweep_json_with_fleet(&grid, &[], &[]).render();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sweep_lane_keys_are_strictly_opt_in() {
+        // No lanes axis: not a byte of the header mentions lanes.
+        let plain = sweep_json(&SweepGrid::default(), &[]).render();
+        assert!(!plain.contains("lanes"), "{plain}");
+        assert!(!plain.contains("vector"), "{plain}");
+        // Axis on: the header names the swept lane counts.
+        let grid = SweepGrid { lanes: vec![0, 128], ..Default::default() };
+        let on = sweep_json(&grid, &[]).render();
+        assert!(on.contains("\"lanes_axis\":[0,128]"), "{on}");
     }
 
     #[test]

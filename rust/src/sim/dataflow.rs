@@ -85,6 +85,128 @@ impl std::str::FromStr for ArrayGeometry {
     }
 }
 
+/// A SIMD vector engine paired with the array — the systolic-vector
+/// architecture (PAPERS.md, arXiv 2206.03060).  Lanes execute
+/// memory-bound layers (LSTM steps, embeddings, skinny projections) that
+/// waste array PEs no matter how they are tiled; the coordinator
+/// partitions them as a second, 1D allocation pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VectorUnit {
+    /// Total lanes.  Zero is rejected by [`VectorUnit::try_new`]; "no
+    /// vector engine at all" is [`Machine::vector`]` = None`.
+    pub lanes: u64,
+    /// MAC-equivalent operations each lane retires per cycle.
+    pub ops_per_lane: u64,
+    /// DRAM words each lane can stream per cycle (the lanes' aggregate
+    /// streaming bandwidth is `lanes × words_per_lane`).
+    pub words_per_lane: u64,
+    /// Fixed per-layer dispatch/drain overhead in cycles — lanes have no
+    /// fold structure, but issuing a kernel still costs a pipeline fill.
+    pub startup: u64,
+}
+
+/// Default per-layer vector dispatch overhead (cycles).
+pub const DEFAULT_VECTOR_STARTUP: u64 = 64;
+
+impl VectorUnit {
+    /// A vector engine with `lanes` lanes and default rates (1 op and
+    /// 1 word per lane per cycle, [`DEFAULT_VECTOR_STARTUP`] overhead).
+    pub fn new(lanes: u64) -> VectorUnit {
+        VectorUnit::try_new(lanes, 1, 1, DEFAULT_VECTOR_STARTUP).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Like [`VectorUnit::new`] but surfaces bad parameters as an error
+    /// naming the offending key and value — the `[vector]` config section
+    /// routes through this, mirroring [`ArrayGeometry::try_new`].
+    pub fn try_new(
+        lanes: u64,
+        ops_per_lane: u64,
+        words_per_lane: u64,
+        startup: u64,
+    ) -> Result<VectorUnit, String> {
+        if lanes == 0 {
+            return Err("vector config `lanes = 0` is invalid: a vector engine needs at least one lane (omit the [vector] section to model none)".to_string());
+        }
+        if ops_per_lane == 0 {
+            return Err("vector config `ops_per_lane = 0` is invalid: each lane must retire at least one op per cycle".to_string());
+        }
+        if words_per_lane == 0 {
+            return Err("vector config `words_per_lane = 0` is invalid: each lane must stream at least one word per cycle".to_string());
+        }
+        Ok(VectorUnit { lanes, ops_per_lane, words_per_lane, startup })
+    }
+}
+
+/// The whole machine: one systolic array plus an optional vector engine.
+/// `vector = None` (equivalently `vector_lanes() == 0`) is exactly the
+/// pre-heterogeneous resource model — every code path conditioned on it
+/// reproduces today's outputs byte for byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Machine {
+    pub geom: ArrayGeometry,
+    pub vector: Option<VectorUnit>,
+}
+
+impl Machine {
+    /// The classic single-resource machine.
+    pub fn array_only(geom: ArrayGeometry) -> Machine {
+        Machine { geom, vector: None }
+    }
+
+    /// Array + `lanes`-lane vector engine at default rates.
+    pub fn with_lanes(geom: ArrayGeometry, lanes: u64) -> Machine {
+        Machine { geom, vector: Some(VectorUnit::new(lanes)) }
+    }
+
+    /// Lane count of the vector engine, `0` when there is none.
+    pub fn vector_lanes(&self) -> u64 {
+        self.vector.map_or(0, |v| v.lanes)
+    }
+}
+
+/// Time a layer on `lanes` lanes of the vector engine `vu` — the vector
+/// analogue of the tile closed form.  Lanes have no fold structure: the
+/// GEMM's MACs divide across `lanes × ops_per_lane` and its ideal DRAM
+/// stream across `lanes × words_per_lane`, compute and streaming overlap
+/// (double-buffered operand queues), and a fixed `startup` covers kernel
+/// issue and pipeline drain:
+///
+/// ```text
+/// cycles = startup + max( ⌈MACs / (lanes·ops_per_lane)⌉,
+///                         ⌈words / (lanes·words_per_lane)⌉ )
+/// ```
+///
+/// All integer, so the result is exact and platform-independent.  The
+/// activity bills the MACs and the ideal DRAM traffic; lanes stream
+/// operands directly and never refetch, so every SRAM counter is zero.
+pub fn layer_timing_vector(vu: &VectorUnit, lanes: u64, gemm: GemmDims) -> LayerTiming {
+    let GemmDims { sr, k, m } = gemm;
+    assert!(sr > 0 && k > 0 && m > 0);
+    assert!(
+        lanes > 0 && lanes <= vu.lanes,
+        "lane span {lanes} out of range for a {}-lane vector engine",
+        vu.lanes
+    );
+    let compute = ceil_div(gemm.macs(), lanes * vu.ops_per_lane);
+    let stream = ceil_div(gemm.ideal_words(), lanes * vu.words_per_lane);
+    let activity = Activity {
+        macs: gemm.macs(),
+        dram_reads: k * m + sr * k,
+        dram_writes: sr * m,
+        ..Activity::default()
+    };
+    LayerTiming { cycles: vu.startup + compute.max(stream), fk: 1, fm: 1, activity }
+}
+
+/// The compute-only half of [`layer_timing_vector`] — what a lane layer
+/// costs when the shared memory system ([`crate::mem`]) owns the
+/// streaming side (the arbiter re-prices the transfer under contention,
+/// so baking the isolated stream bound in here would double-count it).
+pub fn vector_compute_cycles(vu: &VectorUnit, lanes: u64, gemm: GemmDims) -> u64 {
+    assert!(lanes > 0 && lanes <= vu.lanes);
+    vu.startup + ceil_div(gemm.macs(), lanes * vu.ops_per_lane)
+}
+
 /// Result of timing one layer on (a slice of) the array.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LayerTiming {
@@ -936,5 +1058,61 @@ mod tests {
         assert_eq!(t.activity.ifmap_sram_reads, 10 * 8 * 2); // FM = 2
         assert_eq!(t.activity.ofmap_sram_writes, 10 * 8 * 2); // FK = 2
         assert_eq!(t.activity.ofmap_sram_reads, 10 * 8); // FK-1 accumulation
+    }
+
+    #[test]
+    fn vector_unit_try_new_names_the_offending_value() {
+        assert!(VectorUnit::try_new(256, 1, 1, 64).is_ok());
+        let e = VectorUnit::try_new(0, 1, 1, 64).unwrap_err();
+        assert!(e.contains("lanes = 0"), "{e}");
+        assert!(VectorUnit::try_new(8, 0, 1, 0).unwrap_err().contains("ops_per_lane = 0"));
+        assert!(VectorUnit::try_new(8, 1, 0, 0).unwrap_err().contains("words_per_lane = 0"));
+    }
+
+    #[test]
+    fn machine_lane_accessors() {
+        let geom = ArrayGeometry::new(128, 128);
+        assert_eq!(Machine::array_only(geom).vector_lanes(), 0);
+        let m = Machine::with_lanes(geom, 256);
+        assert_eq!(m.vector_lanes(), 256);
+        assert_eq!(m.vector.unwrap().startup, DEFAULT_VECTOR_STARTUP);
+    }
+
+    #[test]
+    fn vector_timing_closed_form_pinned() {
+        // GNMT-ish LSTM step: [50, 1536] x [1536, 4096] on 256 lanes.
+        let vu = VectorUnit::new(256);
+        let g = GemmDims { sr: 50, k: 1536, m: 4096 };
+        let t = layer_timing_vector(&vu, 256, g);
+        let macs = 50 * 1536 * 4096u64;
+        let words = 1536 * 4096 + 50 * 1536 + 50 * 4096u64;
+        assert_eq!(t.cycles, 64 + ceil_div(macs, 256).max(ceil_div(words, 256)));
+        assert_eq!((t.fk, t.fm), (1, 1));
+        assert_eq!(t.activity.macs, macs);
+        assert_eq!(t.activity.dram_accesses(), words);
+        assert_eq!(t.activity.sram_accesses(), 0, "lanes stream directly, no SRAM traffic");
+        // This layer is compute-limited on equal rates; a narrower span
+        // is priced proportionally slower.
+        let half = layer_timing_vector(&vu, 128, g);
+        assert!(half.cycles > t.cycles);
+        assert_eq!(vector_compute_cycles(&vu, 256, g), 64 + ceil_div(macs, 256));
+    }
+
+    #[test]
+    fn vector_timing_stream_bound_when_words_dominate() {
+        // An embedding-style lookup: almost no re-use, the stream term
+        // wins and words_per_lane (not ops_per_lane) sets the cycles.
+        let vu = VectorUnit::try_new(64, 4, 1, 0).unwrap();
+        let g = GemmDims { sr: 1, k: 100_000, m: 8 };
+        let t = layer_timing_vector(&vu, 64, g);
+        assert_eq!(t.cycles, ceil_div(g.ideal_words(), 64));
+        assert!(ceil_div(g.macs(), 64 * 4) < t.cycles);
+    }
+
+    #[test]
+    #[should_panic(expected = "lane span 512 out of range")]
+    fn vector_timing_rejects_oversized_span() {
+        let vu = VectorUnit::new(256);
+        let _ = layer_timing_vector(&vu, 512, GemmDims { sr: 1, k: 1, m: 1 });
     }
 }

@@ -171,6 +171,41 @@ impl PartitionSlice {
     }
 }
 
+/// A contiguous group of vector lanes `[lane0, lane0 + lanes)` — the 1D
+/// partition shape of the second resource pool
+/// ([`LaneManager`](crate::coordinator::partition::LaneManager)).  Kept a
+/// distinct type from [`PartitionSlice`] so lane spans and array column
+/// slices can never be confused at a call site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct LaneSpan {
+    pub lane0: u64,
+    pub lanes: u64,
+}
+
+impl LaneSpan {
+    pub fn new(lane0: u64, lanes: u64) -> LaneSpan {
+        assert!(lanes > 0);
+        LaneSpan { lane0, lanes }
+    }
+
+    pub fn end(&self) -> u64 {
+        self.lane0 + self.lanes
+    }
+
+    /// The degenerate 1-row [`Tile`] this span occupies on the lane
+    /// pool's internal geometry — how the lane allocator stores it, and
+    /// the tile recorded on lane dispatches.
+    pub fn as_tile(&self) -> Tile {
+        Tile::new(0, self.lane0, 1, self.lanes)
+    }
+
+    /// The span a 1-row allocator tile denotes.
+    pub fn from_tile(tile: Tile) -> LaneSpan {
+        assert!(tile.row0 == 0 && tile.rows == 1, "lane tile must be 1 row high: {tile:?}");
+        LaneSpan { lane0: tile.col0, lanes: tile.cols }
+    }
+}
+
 /// Feed-bus sharing model for co-resident partitions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FeedPolicy {
@@ -262,6 +297,20 @@ mod tests {
         assert!(!t.overlaps(&Tile::new(48, 64, 16, 8)), "edge-adjacent is not overlap");
         assert!(t.overlaps_rows(&Tile::new(40, 0, 8, 4)));
         assert!(!t.overlaps_rows(&Tile::new(48, 64, 8, 8)));
+    }
+
+    #[test]
+    fn lane_span_tile_round_trip() {
+        let s = LaneSpan::new(64, 32);
+        assert_eq!(s.end(), 96);
+        assert_eq!(s.as_tile(), Tile::new(0, 64, 1, 32));
+        assert_eq!(LaneSpan::from_tile(s.as_tile()), s);
+    }
+
+    #[test]
+    #[should_panic(expected = "1 row high")]
+    fn lane_span_rejects_tall_tile() {
+        let _ = LaneSpan::from_tile(Tile::new(0, 0, 2, 8));
     }
 
     #[test]

@@ -8,12 +8,12 @@ use super::observer::Observer;
 use super::queue::EventQueue;
 use super::scheduler::{Checkpoint, LayerExec, RunningLayer, Scheduler, SystemState};
 use crate::coordinator::metrics::{DispatchRecord, RunMetrics};
-use crate::coordinator::partition::{AllocId, PartitionManager};
+use crate::coordinator::partition::{AllocId, LaneManager, PartitionManager};
 use crate::coordinator::queue::TaskQueue;
 use crate::mem::{MemStats, MemSystem, MemUpdate};
 use crate::sim::activity::Activity;
 use crate::sim::dataflow::ArrayGeometry;
-use crate::sim::partitioned::Tile;
+use crate::sim::partitioned::{LaneSpan, Tile};
 use crate::workloads::dnng::{Dnn, DnnId, LayerId, WorkloadPool};
 
 /// Whether [`Observer`] callbacks are batched through the engine's ring
@@ -52,6 +52,7 @@ enum ObsEvent {
         dnn: DnnId,
         layer: LayerId,
         tile: Tile,
+        lanes: Option<LaneSpan>,
         t_start: u64,
         t_end: u64,
         activity: Activity,
@@ -80,10 +81,20 @@ struct Pending {
     /// rescales; `u64::MAX` for a starved strict-priority flight).
     t_end: u64,
     activity: Activity,
+    /// The lane span this segment runs on when it was placed on the
+    /// vector engine; `None` for systolic-array segments.
+    lanes: Option<LaneSpan>,
     /// Armed preemption: the boundary cycle the segment drains at plus
     /// the checkpoint describing what it completes there.
     preempt: Option<(u64, Checkpoint)>,
 }
+
+/// Allocation-id offset marking vector-lane allocations: array ids come
+/// from the array's [`PartitionManager`] (dense from 0), lane ids from
+/// the [`LaneManager`]'s internal manager (also dense from 0) shifted by
+/// this base so the two pools share the engine's single `pending` map,
+/// event stream and memory arbiter without collision.
+const LANE_ID_BASE: AllocId = 1 << 60;
 
 /// The one simulation engine behind `mtsa run`, the scenario engine and
 /// the sweep runner.
@@ -144,6 +155,10 @@ pub struct Engine {
     /// instantiated from [`Scheduler::mem_spec`] at the start of
     /// [`Engine::run`]; `None` keeps the isolated DRAM pricing.
     mem: Option<MemSystem>,
+    /// The vector-lane pool, instantiated from
+    /// [`Scheduler::vector_spec`] at the start of [`Engine::run`];
+    /// `None` keeps the array-only machine (byte-identical behavior).
+    lanes: Option<LaneManager>,
     /// Earliest pending [`Event::MemRescale`] cycle — dedup: every
     /// rescale recomputes the next release anyway, so one pending event
     /// (the earliest) suffices and later/duplicate requests are dropped.
@@ -190,6 +205,7 @@ impl Engine {
             arrivals_pending: pool.dnns.len(),
             idle_wakes: 0,
             mem: None,
+            lanes: None,
             mem_release_at: None,
             progress: BTreeMap::new(),
             obs_ring: Vec::new(),
@@ -337,13 +353,14 @@ impl Engine {
     fn deliver(pool: &WorkloadPool, obs: &mut dyn Observer, ev: ObsEvent) {
         match ev {
             ObsEvent::Dispatch { t, dnn, layer, tile } => obs.on_dispatch(t, dnn, layer, tile),
-            ObsEvent::LayerComplete { dnn, layer, tile, t_start, t_end, activity } => {
+            ObsEvent::LayerComplete { dnn, layer, tile, lanes, t_start, t_end, activity } => {
                 let rec = DispatchRecord {
                     dnn,
                     dnn_name: pool.dnns[dnn].name.clone(),
                     layer,
                     layer_name: pool.dnns[dnn].layers[layer].name.clone(),
                     tile,
+                    lanes,
                     t_start,
                     t_end,
                     activity,
@@ -366,6 +383,7 @@ impl Engine {
                     layer,
                     layer_name: pool.dnns[dnn].layers[layer].name.clone(),
                     tile,
+                    lanes: None, // lane segments are never preempted
                     t_start,
                     t_end,
                     activity,
@@ -383,6 +401,7 @@ impl Engine {
             pool: &self.pool,
             queue: &self.queue,
             partitions: &self.partitions,
+            lanes: self.lanes.as_ref(),
             mem: self.mem.as_ref().map(|m| m.feedback()),
             progress: &self.progress,
         }
@@ -440,6 +459,7 @@ impl Engine {
     /// before the first [`Engine::step`].
     pub fn start(&mut self, sched: &mut dyn Scheduler) {
         self.mem = sched.mem_spec().map(MemSystem::new);
+        self.lanes = sched.vector_spec().map(|v| LaneManager::new(v.lanes));
         for (di, d) in self.pool.dnns.iter().enumerate() {
             self.events.push(Event::Arrival { t: d.arrival_cycles, dnn: di });
         }
@@ -570,8 +590,20 @@ impl Engine {
                     }
                     None => None,
                 };
-                let tile = self.partitions.tile_of(alloc).expect("completion of live alloc");
-                self.partitions.free(alloc);
+                let tile = if alloc >= LANE_ID_BASE {
+                    let lanes =
+                        self.lanes.as_mut().expect("lane completion without a lane pool");
+                    let span = lanes
+                        .span_of(alloc - LANE_ID_BASE)
+                        .expect("completion of live lane alloc");
+                    lanes.free(alloc - LANE_ID_BASE);
+                    span.as_tile()
+                } else {
+                    let tile =
+                        self.partitions.tile_of(alloc).expect("completion of live alloc");
+                    self.partitions.free(alloc);
+                    tile
+                };
                 self.queue.mark_done(dnn, layer);
                 let pend = self.pending.remove(&alloc).expect("pending entry for live alloc");
                 debug_assert_eq!((pend.dnn, pend.layer), (dnn, layer));
@@ -582,6 +614,7 @@ impl Engine {
                         dnn,
                         layer,
                         tile,
+                        lanes: pend.lanes,
                         t_start: pend.t_start,
                         t_end: t,
                         activity: pend.activity,
@@ -638,7 +671,7 @@ impl Engine {
                         self.partitions.shrink(alloc, keep);
                         let coresident = self.partitions.allocated_count() as u64;
                         let exec = sched.exec(&self.state(), dnn, layer, keep, coresident);
-                        self.schedule_segment(alloc, dnn, layer, keep, exec);
+                        self.schedule_segment(alloc, dnn, layer, keep, exec, None);
                     }
                     None => {
                         // Evict: the whole tile frees (and merges); the
@@ -707,12 +740,22 @@ impl Engine {
         layer: LayerId,
         tile: Tile,
         exec: LayerExec,
+        lanes: Option<LaneSpan>,
     ) {
         // A preempted remainder only moves its remaining GEMM's traffic
         // — the same discount the policy's `exec` priced compute with.
         let gemm = self.state().remaining_gemm(dnn, layer);
         if let Some(mem) = self.mem.as_mut() {
-            let (activity, upd) = mem.admit(self.now, alloc, dnn, gemm, tile, exec.cycles);
+            // A lane segment streams its ideal traffic once (no fold
+            // refetch, no banks); the arbiter prices the stream against
+            // the co-runners so the vector engine contends for the same
+            // DRAM bandwidth the array does.
+            let (activity, upd) = match lanes {
+                Some(_) => {
+                    mem.admit_vector(self.now, alloc, dnn, gemm, exec.cycles, exec.activity)
+                }
+                None => mem.admit(self.now, alloc, dnn, gemm, tile, exec.cycles),
+            };
             let t_end = upd
                 .reposts
                 .iter()
@@ -721,7 +764,7 @@ impl Engine {
                 .unwrap_or(u64::MAX);
             self.pending.insert(
                 alloc,
-                Pending { dnn, layer, t_start: self.now, t_end, activity, preempt: None },
+                Pending { dnn, layer, t_start: self.now, t_end, activity, lanes, preempt: None },
             );
             self.apply_mem_update(upd);
         } else {
@@ -729,7 +772,7 @@ impl Engine {
             let activity = exec.activity;
             self.pending.insert(
                 alloc,
-                Pending { dnn, layer, t_start: self.now, t_end, activity, preempt: None },
+                Pending { dnn, layer, t_start: self.now, t_end, activity, lanes, preempt: None },
             );
             self.events.push(Event::LayerComplete { t: t_end, dnn, layer, alloc });
         }
@@ -744,7 +787,10 @@ impl Engine {
         running.extend(
             self.pending
                 .iter()
-                .filter(|(_, p)| p.preempt.is_none())
+                // Lane segments never preempt: the vector engine has no
+                // fold boundaries to checkpoint at, and its segments are
+                // short by construction (memory-bound layers).
+                .filter(|(&alloc, p)| p.preempt.is_none() && alloc < LANE_ID_BASE)
                 .map(|(&alloc, p)| RunningLayer {
                     alloc,
                     dnn: p.dnn,
@@ -788,6 +834,39 @@ impl Engine {
             self.idle_wakes = 0; // progress: the livelock detector restarts
         }
         for &a in &allocs {
+            if let Some(span) = a.lanes {
+                // Vector placement: the span carves from the lane pool
+                // under its own id space; pricing comes from the
+                // policy's `exec_vector` closed form.
+                let id = {
+                    let lanes = self.lanes.as_mut().unwrap_or_else(|| {
+                        panic!(
+                            "policy `{}` returned a lane allocation without a vector_spec",
+                            sched.name()
+                        )
+                    });
+                    let (id, got) = lanes.allocate_at(span).unwrap_or_else(|| {
+                        panic!(
+                            "policy `{}` allocated unavailable lanes {:?} at cycle {}",
+                            sched.name(),
+                            span,
+                            self.now
+                        )
+                    });
+                    debug_assert_eq!(got, span);
+                    id
+                };
+                let alloc = LANE_ID_BASE + id;
+                self.queue.mark_running(a.dnn, a.layer);
+                let exec = sched.exec_vector(&self.state(), a.dnn, a.layer, span);
+                let tile = span.as_tile();
+                self.emit(
+                    obs,
+                    ObsEvent::Dispatch { t: self.now, dnn: a.dnn, layer: a.layer, tile },
+                );
+                self.schedule_segment(alloc, a.dnn, a.layer, tile, exec, Some(span));
+                continue;
+            }
             let (alloc, tile) = self.partitions.allocate_at(a.tile).unwrap_or_else(|| {
                 panic!(
                     "policy `{}` allocated unavailable tile {:?} at cycle {}",
@@ -803,7 +882,7 @@ impl Engine {
             // Under [mem], `exec.cycles` is the compute path; the mem
             // system grants banks, re-prices the DRAM traffic under the
             // banked share and predicts the contended completion.
-            self.schedule_segment(alloc, a.dnn, a.layer, tile, exec);
+            self.schedule_segment(alloc, a.dnn, a.layer, tile, exec, None);
         }
         sched.recycle_plan(allocs);
         if let Some(dt) = sched.wake_after(&self.state()) {
@@ -902,7 +981,7 @@ mod tests {
                 .iter()
                 .min_by_key(|r| (r.dnn, r.layer))
                 .map(|r| {
-                    vec![Allocation { dnn: r.dnn, layer: r.layer, tile: Tile::full(GEOM) }]
+                    vec![Allocation::array(r.dnn, r.layer, Tile::full(GEOM))]
                 })
                 .unwrap_or_default()
         }
@@ -1128,11 +1207,7 @@ mod tests {
                 s.queue
                     .ready_at(s.now)
                     .iter()
-                    .map(|r| Allocation {
-                        dnn: r.dnn,
-                        layer: r.layer,
-                        tile: Tile::full_height(GEOM, 0, 64),
-                    })
+                    .map(|r| Allocation::array(r.dnn, r.layer, Tile::full_height(GEOM, 0, 64)))
                     .collect()
             }
             fn exec(

@@ -2,11 +2,12 @@
 
 use std::collections::BTreeMap;
 
-use crate::coordinator::partition::{AllocId, PartitionManager};
+use crate::coordinator::partition::{AllocId, LaneManager, PartitionManager};
 use crate::coordinator::queue::TaskQueue;
 use crate::mem::{MemFeedback, MemSpec};
 use crate::sim::activity::Activity;
-use crate::sim::partitioned::Tile;
+use crate::sim::dataflow::VectorUnit;
+use crate::sim::partitioned::{LaneSpan, Tile};
 use crate::workloads::dnng::{DnnId, LayerId, WorkloadPool};
 use crate::workloads::shapes::GemmDims;
 
@@ -27,6 +28,10 @@ pub struct SystemState<'e> {
     /// Live memory-system feedback (stall fractions, in-flight
     /// memory-bound layers); `None` when `[mem]` is disabled.
     pub mem: Option<&'e MemFeedback>,
+    /// The vector-lane pool; `None` unless the policy declared a vector
+    /// engine via [`Scheduler::vector_spec`].  Policies rehearse lane
+    /// carving on a clone exactly like `partitions`.
+    pub lanes: Option<&'e LaneManager>,
     /// K rows already completed per `(dnn, layer)` by earlier preempted
     /// segments — empty unless a preempting policy ran.  A policy that
     /// supports preemption prices the *remaining* GEMM (`k -
@@ -109,6 +114,24 @@ pub struct Allocation {
     pub dnn: DnnId,
     pub layer: LayerId,
     pub tile: Tile,
+    /// `Some(span)`: this dispatch targets the vector lanes, not the
+    /// array — the engine carves `span` from the lane pool, prices it
+    /// via [`Scheduler::exec_vector`], and `tile` is the span's 1-row
+    /// shadow ([`LaneSpan::as_tile`]) kept for uniform records.  `None`:
+    /// a normal array dispatch.
+    pub lanes: Option<LaneSpan>,
+}
+
+impl Allocation {
+    /// An array dispatch — the shape every pre-heterogeneous policy emits.
+    pub fn array(dnn: DnnId, layer: LayerId, tile: Tile) -> Allocation {
+        Allocation { dnn, layer, tile, lanes: None }
+    }
+
+    /// A vector-lane dispatch.
+    pub fn vector(dnn: DnnId, layer: LayerId, span: LaneSpan) -> Allocation {
+        Allocation { dnn, layer, tile: span.as_tile(), lanes: Some(span) }
+    }
 }
 
 /// Execution price of one layer on one slice: how long the
@@ -144,6 +167,17 @@ pub trait Scheduler {
     /// only (a policy must not carry both `dram` and `mem` configs).
     /// Queried once per [`Engine::run`](super::Engine::run).
     fn mem_spec(&self) -> Option<MemSpec> {
+        None
+    }
+
+    /// The vector engine this policy schedules onto (`None`, the
+    /// default, is the pure-array machine — byte-identical to the
+    /// pre-heterogeneous model).  When `Some`, the engine instantiates a
+    /// [`LaneManager`] over its lanes as a second allocation pool and
+    /// accepts [`Allocation::vector`] dispatches priced through
+    /// [`Scheduler::exec_vector`].  Queried once per
+    /// [`Engine::run`](super::Engine::run), like [`Scheduler::mem_spec`].
+    fn vector_spec(&self) -> Option<VectorUnit> {
         None
     }
 
@@ -254,6 +288,26 @@ pub trait Scheduler {
         tile: Tile,
         coresident: u64,
     ) -> LayerExec;
+
+    /// Price one planned layer on a vector-lane span.  Under `[mem]` the
+    /// same contract as [`Scheduler::exec`] applies: return *compute*
+    /// cycles only (see
+    /// [`vector_compute_cycles`](crate::sim::dataflow::vector_compute_cycles))
+    /// and let the arbiter price the stream.  The default panics — only
+    /// a policy that emits [`Allocation::vector`] dispatches (and thus
+    /// declared a [`Scheduler::vector_spec`]) can ever be called here.
+    fn exec_vector(
+        &self,
+        _state: &SystemState<'_>,
+        _dnn: DnnId,
+        _layer: LayerId,
+        _span: LaneSpan,
+    ) -> LayerExec {
+        unimplemented!(
+            "policy `{}` returned a lane allocation but does not implement exec_vector",
+            self.name()
+        )
+    }
 
     /// Request a [`Repartition`](super::Event::Repartition) wake-up this
     /// many cycles from now (`None` = none).  Called once after each

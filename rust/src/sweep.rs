@@ -33,7 +33,7 @@ use crate::coordinator::scheduler::{
     AllocPolicy, DynamicScheduler, FeedModel, PartitionMode, PreemptMode, SchedulerConfig,
 };
 use crate::mem::{ArbitrationMode, MemConfig, MemStats};
-use crate::sim::dataflow::ArrayGeometry;
+use crate::sim::dataflow::{ArrayGeometry, VectorUnit};
 use crate::workloads::dnng::Dnn;
 use crate::workloads::generator::ArrivalProcess;
 use crate::workloads::models;
@@ -94,6 +94,11 @@ pub struct SweepGrid {
     /// The [`crate::profiler::ProfileStore`] the `tables = true` points
     /// consult; falls back to the base config's store when `None`.
     pub tables_store: Option<std::sync::Arc<crate::profiler::ProfileStore>>,
+    /// Heterogeneous-compute axis (`mtsa sweep --lanes`): vector-engine
+    /// lane counts to run each point under (`0` = explicitly no lanes).
+    /// Empty (default) = inherit the base config's `[vector]` setting and
+    /// the report carries no lane fields — today's bytes exactly.
+    pub lanes: Vec<u64>,
     pub seed: u64,
 }
 
@@ -118,6 +123,7 @@ impl Default for SweepGrid {
             fleet: Vec::new(),
             tables: Vec::new(),
             tables_store: None,
+            lanes: Vec::new(),
             seed: 42,
         }
     }
@@ -159,6 +165,10 @@ pub struct SweepPoint {
     /// profile tables (the base config's setting when the grid has no
     /// tables axis).
     pub tables: bool,
+    /// Vector-engine lane count this point runs under: `Some(0)` forces
+    /// the array-only model, `Some(n)` an `n`-lane engine at default
+    /// rates, `None` inherits the base config's `[vector]` setting.
+    pub lanes: Option<u64>,
     /// Scenario seed — shared across policy/feed/geometry/mode/mem so
     /// every contender in a (mix, rate) cell sees the same arrival trace.
     pub scenario_seed: u64,
@@ -189,6 +199,18 @@ pub struct SweepRow {
     pub preemptions: u64,
     /// Cycles the dynamic run spent on replayed folds.
     pub wasted_refill_cycles: u64,
+    /// Lane-pool summary of the dynamic run; `Some` exactly when the
+    /// point ran with a vector engine configured.
+    pub vector: Option<VectorSummary>,
+}
+
+/// Vector-engine summary of one grid point's dynamic run.
+#[derive(Debug, Clone)]
+pub struct VectorSummary {
+    /// Lane count the point's vector engine had.
+    pub lanes: u64,
+    /// Layer segments the dynamic run placed on lanes.
+    pub dispatches: u64,
 }
 
 /// Shared-memory summary of one grid point's dynamic run.
@@ -202,8 +224,8 @@ pub struct MemSummary {
 }
 
 /// Expand a grid into its points (row-major over mix, rate, policy, feed,
-/// geometry, partition mode, mem, preempt, tables — the JSON/table row
-/// order).
+/// geometry, partition mode, mem, preempt, tables, lanes — the JSON/table
+/// row order).
 pub fn expand(grid: &SweepGrid, base: &SchedulerConfig) -> Vec<SweepPoint> {
     let geoms: Vec<ArrayGeometry> =
         if grid.geoms.is_empty() { vec![base.geom] } else { grid.geoms.clone() };
@@ -223,6 +245,12 @@ pub fn expand(grid: &SweepGrid, base: &SchedulerConfig) -> Vec<SweepPoint> {
     };
     let tabs: Vec<bool> =
         if grid.tables.is_empty() { vec![base.tables.is_some()] } else { grid.tables.clone() };
+    // The heterogeneous axis: no lane counts = one inherit-the-base point.
+    let lane_axis: Vec<Option<u64>> = if grid.lanes.is_empty() {
+        vec![None]
+    } else {
+        grid.lanes.iter().map(|&l| Some(l)).collect()
+    };
     let mut points = Vec::new();
     for (mi, mix) in grid.mixes.iter().enumerate() {
         for (ri, &rate) in grid.rates.iter().enumerate() {
@@ -237,19 +265,22 @@ pub fn expand(grid: &SweepGrid, base: &SchedulerConfig) -> Vec<SweepPoint> {
                             for &mem in &mems {
                                 for &preempt in &preempts {
                                     for &tables in &tabs {
-                                        points.push(SweepPoint {
-                                            index: points.len(),
-                                            mix: mix.clone(),
-                                            mean_interarrival: rate,
-                                            policy,
-                                            feed,
-                                            geom,
-                                            mode,
-                                            preempt,
-                                            mem,
-                                            tables,
-                                            scenario_seed,
-                                        });
+                                        for &lanes in &lane_axis {
+                                            points.push(SweepPoint {
+                                                index: points.len(),
+                                                mix: mix.clone(),
+                                                mean_interarrival: rate,
+                                                policy,
+                                                feed,
+                                                geom,
+                                                mode,
+                                                preempt,
+                                                mem,
+                                                tables,
+                                                lanes,
+                                                scenario_seed,
+                                            });
+                                        }
                                     }
                                 }
                             }
@@ -315,6 +346,9 @@ fn run_point(
     } else {
         None
     };
+    if let Some(l) = point.lanes {
+        cfg.vector = if l == 0 { None } else { Some(VectorUnit::new(l)) };
+    }
     let spec = ScenarioSpec {
         name: format!("{}@{}", point.mix, point.mean_interarrival),
         arrival: arrival_for(grid, point.mean_interarrival),
@@ -331,6 +365,9 @@ fn run_point(
         arbitration: m.arbitration,
         stats: dynamic.mem_total,
     });
+    let vector = cfg
+        .vector
+        .map(|v| VectorSummary { lanes: v.lanes, dispatches: dynamic.vector_dispatches });
     SweepRow {
         point: point.clone(),
         requests: grid.requests,
@@ -344,6 +381,7 @@ fn run_point(
         seq_outcome,
         occupancy: dynamic.occupancy_timeline(geom, OCCUPANCY_BUCKETS),
         mem,
+        vector,
     }
 }
 
@@ -702,6 +740,33 @@ mod tests {
             assert!(row.makespan > 0);
             assert_eq!(row.outcome.overall.requests, 4);
         }
+    }
+
+    #[test]
+    fn lanes_axis_expands_and_places_memory_bound_layers() {
+        let grid = SweepGrid {
+            mixes: vec!["NCF".into()],
+            rates: vec![0.0],
+            policies: vec![AllocPolicy::WidestToHeaviest],
+            feeds: vec![FeedModel::Independent],
+            requests: 4,
+            lanes: vec![0, 128],
+            ..Default::default()
+        };
+        let base = SchedulerConfig::default();
+        let points = expand(&grid, &base);
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].lanes, Some(0));
+        assert_eq!(points[1].lanes, Some(128));
+        // No lanes axis: the coordinate inherits the base config (off).
+        let plain = expand(&SweepGrid::default(), &base);
+        assert!(plain.iter().all(|p| p.lanes.is_none()));
+        let rows = run_sweep(&grid, &base, 2).unwrap();
+        assert!(rows[0].vector.is_none(), "lanes = 0 forces the array-only model");
+        let v = rows[1].vector.as_ref().expect("lanes axis => vector summary");
+        assert_eq!(v.lanes, 128);
+        assert!(v.dispatches > 0, "NCF's embeddings are memory-bound and must land on lanes");
+        assert!(rows[1].makespan > 0);
     }
 
     #[test]

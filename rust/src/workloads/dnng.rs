@@ -6,7 +6,7 @@
 //! explicit dependency edge list to keep the general DAG form available to
 //! the scheduler (it only dispatches layers whose predecessors completed).
 
-use super::shapes::{LayerKind, LayerShape};
+use super::shapes::{op_class, LayerKind, LayerShape, OpClass};
 
 /// Identifies a DNN within a pool.
 pub type DnnId = usize;
@@ -25,6 +25,14 @@ pub struct Layer {
 impl Layer {
     pub fn new(name: &str, kind: LayerKind, shape: LayerShape) -> Layer {
         Layer { name: name.to_string(), kind, shape }
+    }
+
+    /// Resource-class of this layer (op kind × arithmetic intensity) —
+    /// what an intensity-aware policy reads to route the layer to the
+    /// systolic array or the vector lanes.  Derivable entirely from the
+    /// existing dims; no workload file carries any new field.
+    pub fn op_class(&self) -> OpClass {
+        op_class(self.kind, self.shape.gemm())
     }
 }
 
@@ -65,6 +73,15 @@ impl Dnn {
     /// Total true MACs over all layers.
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(|l| l.shape.macs()).sum()
+    }
+
+    /// True when the majority of this DNN's layers are memory-bound —
+    /// the tenant-granularity view of [`Layer::op_class`] that fleet
+    /// placement and reports use (a GNMT/LSTM tenant reads memory-bound;
+    /// a ResNet tenant reads compute-bound).
+    pub fn memory_bound(&self) -> bool {
+        let mb = self.layers.iter().filter(|l| l.op_class() == OpClass::MemoryBound).count();
+        2 * mb > self.layers.len()
     }
 
     /// Validate DAG-ness and edge bounds (panics on malformed graphs;
@@ -133,6 +150,29 @@ mod tests {
         let d = small_dnn("a", 3);
         assert_eq!(d.total_opr(), 3 * 64 * 64);
         assert_eq!(d.total_macs(), 3 * 64 * 64);
+    }
+
+    #[test]
+    fn tenant_memory_bound_majority() {
+        // Tiny FC layers at batch 1 are memory-bound; a chain of them
+        // reads as a memory-bound tenant.
+        let d = small_dnn("lstm-ish", 3);
+        assert_eq!(d.layers[0].op_class(), crate::workloads::shapes::OpClass::MemoryBound);
+        assert!(d.memory_bound());
+        // A conv chain is compute-bound by kind.
+        let conv = Dnn::chain(
+            "resnet-ish",
+            (0..3)
+                .map(|i| {
+                    Layer::new(
+                        &format!("c{i}"),
+                        LayerKind::Conv,
+                        LayerShape::conv(1, 64, 56, 56, 64, 3, 3, 1, 1),
+                    )
+                })
+                .collect(),
+        );
+        assert!(!conv.memory_bound());
     }
 
     #[test]

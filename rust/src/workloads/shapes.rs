@@ -79,6 +79,68 @@ impl GemmDims {
     pub fn macs(&self) -> u64 {
         self.sr * self.k * self.m
     }
+
+    /// DRAM words the GEMM moves with *unbounded* SRAM: weights in once,
+    /// IFMap streamed once, OFMap out once — the denominator of the
+    /// arithmetic-intensity classification and the no-refetch traffic a
+    /// vector engine streams (`crate::mem::ideal_words` delegates here).
+    pub fn ideal_words(&self) -> u64 {
+        self.k * self.m + self.sr * self.k + self.sr * self.m
+    }
+
+    /// Arithmetic intensity floor: MACs per ideal DRAM word, rounded
+    /// down.  Pure integer arithmetic so classification is exact and
+    /// portable across platforms.
+    pub fn intensity(&self) -> u64 {
+        self.macs() / self.ideal_words().max(1)
+    }
+}
+
+/// Which resource class a layer's computation wants (systolic-vector,
+/// PAPERS.md arXiv 2206.03060): high-arithmetic-intensity GEMMs earn
+/// their array fold overheads back; low-intensity layers (LSTM steps at
+/// small batch, embedding lookups, skinny projections) stream more words
+/// than they multiply and waste array PEs no matter how they are tiled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    /// Earns the systolic array: keep it on tile/column partitions.
+    ComputeBound,
+    /// Streaming-limited: a vector engine serves it with far fewer PEs.
+    MemoryBound,
+}
+
+impl OpClass {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            OpClass::ComputeBound => "compute",
+            OpClass::MemoryBound => "memory",
+        }
+    }
+}
+
+/// MACs-per-word threshold below which a GEMM is memory-bound.  Chosen at
+/// the array-row scale (a 128-high fold re-uses each streamed word ~K/FK
+/// times): layers that cannot re-use a word at least this often leave the
+/// array idle waiting on the stream.
+pub const INTENSITY_THRESHOLD: u64 = 64;
+
+/// Classify a layer by op kind and arithmetic intensity — derivable from
+/// the existing dims, no new workload metadata.  Embeddings are lookups
+/// and always memory-bound; convolutions re-use every word `R·S`-fold
+/// across spatial positions and always keep the array; everything else
+/// (FC / recurrent / attention projections) goes by measured intensity.
+pub fn op_class(kind: LayerKind, gemm: GemmDims) -> OpClass {
+    match kind {
+        LayerKind::Embedding => OpClass::MemoryBound,
+        LayerKind::Conv => OpClass::ComputeBound,
+        LayerKind::Fc | LayerKind::Recurrent | LayerKind::Attention => {
+            if gemm.intensity() < INTENSITY_THRESHOLD {
+                OpClass::MemoryBound
+            } else {
+                OpClass::ComputeBound
+            }
+        }
+    }
 }
 
 impl LayerShape {
@@ -192,6 +254,36 @@ mod tests {
         assert_eq!(g.k, 3 * 11 * 11);
         assert_eq!(g.m, 96);
         assert_eq!(l.macs(), 55 * 55 * 363 * 96);
+    }
+
+    #[test]
+    fn ideal_words_and_intensity() {
+        let g = GemmDims { sr: 10, k: 20, m: 30 };
+        assert_eq!(g.ideal_words(), 20 * 30 + 10 * 20 + 10 * 30);
+        assert_eq!(g.intensity(), g.macs() / g.ideal_words());
+    }
+
+    #[test]
+    fn op_class_by_kind_and_intensity() {
+        // ResNet-style conv: compute-bound by kind regardless of intensity.
+        let conv = LayerShape::conv(1, 64, 56, 56, 64, 3, 3, 1, 1);
+        assert_eq!(op_class(LayerKind::Conv, conv.gemm()), OpClass::ComputeBound);
+        // GNMT-style LSTM step at batch 1: streams far more words than it
+        // re-uses — memory-bound.
+        let lstm = LayerShape::recurrent(50, 1, 512, 1024, 4);
+        assert!(lstm.gemm().intensity() < INTENSITY_THRESHOLD);
+        assert_eq!(op_class(LayerKind::Recurrent, lstm.gemm()), OpClass::MemoryBound);
+        // The same cell at batch 128 amortizes the weight stream: compute-bound.
+        let batched = LayerShape::recurrent(50, 128, 512, 1024, 4);
+        assert_eq!(op_class(LayerKind::Recurrent, batched.gemm()), OpClass::ComputeBound);
+        // Embeddings are lookups — always memory-bound, even when skinny
+        // dims would pass the intensity bar.
+        assert_eq!(op_class(LayerKind::Embedding, batched.gemm()), OpClass::MemoryBound);
+        // Small-batch FC (AlexNet fc6 at N=4) is memory-bound.
+        let fc = LayerShape::fc(4, 9216, 4096);
+        assert_eq!(op_class(LayerKind::Fc, fc.gemm()), OpClass::MemoryBound);
+        assert_eq!(OpClass::MemoryBound.tag(), "memory");
+        assert_eq!(OpClass::ComputeBound.tag(), "compute");
     }
 
     #[test]

@@ -200,6 +200,7 @@ fn legacy_dynamic_run(cfg: &SchedulerConfig, pool: &WorkloadPool) -> RunMetrics 
                         layer: c.layer,
                         layer_name: layer.name.clone(),
                         tile,
+                        lanes: None,
                         t_start: c.t_start,
                         t_end: c.t_end,
                         activity: timing.activity,
@@ -342,7 +343,7 @@ impl Scheduler for TestFifo {
             .iter()
             .min_by_key(|r| (r.dnn, r.layer))
             .map(|r| {
-                vec![Allocation { dnn: r.dnn, layer: r.layer, tile: Tile::full(self.0.geom) }]
+                vec![Allocation::array(r.dnn, r.layer, Tile::full(self.0.geom))]
             })
             .unwrap_or_default()
     }

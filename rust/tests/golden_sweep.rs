@@ -212,3 +212,19 @@ fn golden_mem_preempt_2d_cross() {
     };
     check_golden("mem_preempt_2d_cross", &grid);
 }
+
+#[test]
+fn golden_lanes_axis() {
+    // The heterogeneous corner (PR 10): every point paired lanes-off
+    // (`0`, the pre-heterogeneous machine bit for bit) against a
+    // 128-lane vector engine, pinning both the `lanes_axis` header, the
+    // per-row `vector` summary, and the intensity-aware lane placement
+    // itself (NCF's embeddings offload; everything else stays on the
+    // array).
+    let grid = SweepGrid {
+        policies: vec![AllocPolicy::WidestToHeaviest, AllocPolicy::EqualShare],
+        lanes: vec![0, 128],
+        ..base_grid()
+    };
+    check_golden("lanes_axis", &grid);
+}

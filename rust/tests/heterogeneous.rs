@@ -1,0 +1,185 @@
+//! Heterogeneous co-tenancy end to end: a compute-bound tenant and a
+//! memory-bound tenant sharing one machine (systolic array + vector
+//! lane pool) versus the same pair on the array alone.
+//!
+//! The cycle counts asserted here are *exact* — every segment is checked
+//! against the closed-form timing model on the tile/span the scheduler
+//! actually recorded, and the lane segment is additionally pinned to a
+//! hand-computed literal so a silent change to the vector timing (or to
+//! intensity-aware placement) fails loudly with the arithmetic in view.
+//!
+//! Also home of the `vector_off_is_transparent` property: with no
+//! `[vector]` section (or `enabled = false`) the heterogeneous machinery
+//! must be invisible — bit-identical run metrics and sweep JSON with no
+//! vector/lane keys — across randomized configurations.
+
+use mtsa::config::schema::RunConfig;
+use mtsa::coordinator::scheduler::{AllocPolicy, DynamicScheduler, SchedulerConfig};
+use mtsa::report;
+use mtsa::sim::dataflow::{layer_timing_vector, VectorUnit};
+use mtsa::sim::partitioned::{tile_layer_timing, FeedPolicy, LaneSpan, Tile};
+use mtsa::sweep::{run_sweep, SweepGrid};
+use mtsa::util::prop::{self, ensure, ensure_eq};
+use mtsa::workloads::dnng::{Dnn, Layer, WorkloadPool};
+use mtsa::workloads::models;
+use mtsa::workloads::shapes::{LayerKind, LayerShape, OpClass};
+
+/// One compute-bound tenant (a 3×3 conv, high arithmetic intensity) and
+/// one memory-bound tenant (an embedding lookup lowered as a skinny
+/// GEMM) — the canonical pair heterogeneous placement exists for.
+fn colocate_pool() -> WorkloadPool {
+    let conv = Layer::new(
+        "conv3x3",
+        LayerKind::Conv,
+        LayerShape::conv(1, 64, 56, 56, 128, 3, 3, 1, 1),
+    );
+    let embed = Layer::new("embed", LayerKind::Embedding, LayerShape::fc(32, 1024, 64));
+    WorkloadPool::new(
+        "colocate",
+        vec![Dnn::chain("convnet", vec![conv]), Dnn::chain("embedder", vec![embed])],
+    )
+}
+
+#[test]
+fn lane_offload_beats_array_only_colocation() {
+    let pool = colocate_pool();
+    assert_eq!(pool.dnns[0].layers[0].op_class(), OpClass::ComputeBound);
+    assert_eq!(pool.dnns[1].layers[0].op_class(), OpClass::MemoryBound);
+
+    let cfg = SchedulerConfig::default();
+    let vu = VectorUnit::new(128);
+    let hetero_cfg = SchedulerConfig { vector: Some(vu), ..cfg.clone() };
+
+    let array_only = DynamicScheduler::new(cfg.clone()).run(&pool);
+    let hetero = DynamicScheduler::new(hetero_cfg).run(&pool);
+
+    // --- heterogeneous run: the embedding goes to the lanes ---
+    assert_eq!(hetero.vector_dispatches, 1);
+    let lane_rec = hetero
+        .dispatches
+        .iter()
+        .find(|d| d.lanes.is_some())
+        .expect("the memory-bound layer runs on the vector engine");
+    assert_eq!(lane_rec.dnn_name, "embedder");
+    // Sole memory-bound ready layer on an idle pool: it takes every lane.
+    assert_eq!(lane_rec.lanes, Some(LaneSpan::new(0, 128)));
+    assert_eq!(lane_rec.t_start, 0);
+    // Hand-pinned: macs = 32·1024·64 = 2_097_152; ideal words
+    // = k·m + sr·k + sr·m = 65_536 + 32_768 + 2_048 = 100_352.
+    // cycles = startup + max(⌈2_097_152/128⌉, ⌈100_352/128⌉)
+    //        = 64 + max(16_384, 784) = 16_448.
+    assert_eq!(lane_rec.duration(), 16_448);
+    let embed_gemm = pool.dnns[1].layers[0].shape.gemm();
+    assert_eq!(layer_timing_vector(&vu, 128, embed_gemm).cycles, 16_448);
+
+    // With the embedding off the array, the conv owns the full machine.
+    let conv_rec = hetero
+        .dispatches
+        .iter()
+        .find(|d| d.lanes.is_none())
+        .expect("the compute-bound layer stays on the array");
+    assert_eq!(conv_rec.dnn_name, "convnet");
+    assert_eq!(conv_rec.tile, Tile::full(cfg.geom));
+    assert_eq!(conv_rec.t_start, 0);
+    let conv_gemm = pool.dnns[0].layers[0].shape.gemm();
+    let conv_full = tile_layer_timing(
+        cfg.geom,
+        conv_gemm,
+        Tile::full(cfg.geom),
+        FeedPolicy::Independent,
+        &cfg.buffers,
+    )
+    .cycles;
+    assert_eq!(conv_rec.duration(), conv_full);
+    assert_eq!(hetero.makespan, conv_full.max(16_448));
+
+    // Lane work is billed to the vector ledger, not the array's.
+    assert_eq!(hetero.vector_activity.macs, 2_097_152);
+    assert_eq!(hetero.total_activity.macs, conv_gemm.macs());
+
+    // --- array-only run: both tenants split the columns ---
+    assert_eq!(array_only.vector_dispatches, 0);
+    assert_eq!(array_only.dispatches.len(), 2);
+    let mut array_completion = 0u64;
+    for d in &array_only.dispatches {
+        assert!(d.lanes.is_none());
+        // floor_pow2(128 cols / 2 ready) = a 64-wide slice each.
+        assert_eq!((d.tile.rows, d.tile.cols), (128, 64));
+        let gemm = if d.dnn_name == "convnet" { conv_gemm } else { embed_gemm };
+        let expect =
+            tile_layer_timing(cfg.geom, gemm, d.tile, FeedPolicy::Independent, &cfg.buffers)
+                .cycles;
+        assert_eq!(d.duration(), expect, "segment {} priced by the closed form", d.dnn_name);
+        array_completion = array_completion.max(d.t_end);
+    }
+    assert_eq!(array_only.makespan, array_completion);
+
+    // --- the measured co-location win ---
+    // Folding the 128-wide conv into a 64-column slice doubles its
+    // M-folds, while the embedding finishes early and strands its slice;
+    // the lane pool absorbs the embedding at full width instead, so the
+    // heterogeneous machine strictly beats array-only dynamic
+    // partitioning on makespan for this pair.
+    assert!(
+        hetero.makespan < array_only.makespan,
+        "hetero makespan {} must beat array-only {}",
+        hetero.makespan,
+        array_only.makespan,
+    );
+}
+
+/// With lanes off, the heterogeneous machinery must be invisible:
+/// a config with no `[vector]` section and one with `enabled = false`
+/// produce bit-identical run metrics (the full dispatch log, not just
+/// the makespan) and bit-identical sweep JSON that never mentions
+/// vector lanes — across randomized scheduler configurations.
+#[test]
+fn vector_off_is_transparent() {
+    prop::check("vector_off_is_transparent", 8, |rng| {
+        let policy = ["widest", "equal"][rng.gen_range(2) as usize];
+        let mode = ["columns", "2d"][rng.gen_range(2) as usize];
+        let preempt = ["off", "arrival"][rng.gen_range(2) as usize];
+        let feed = ["independent", "interleaved"][rng.gen_range(2) as usize];
+        let dram = rng.gen_bool(0.5);
+        let base_toml = format!(
+            "[array]\nrows = 128\ncols = 128\n\n\
+             [scheduler]\npolicy = \"{policy}\"\nfeed_model = \"{feed}\"\n\n\
+             [partition]\nmode = \"{mode}\"\npreempt = \"{preempt}\"\n\n\
+             [dram]\nenabled = {dram}\n",
+        );
+        let off_toml = format!("{base_toml}\n[vector]\nenabled = false\n");
+        let absent = RunConfig::from_toml(&base_toml).map_err(|e| e.to_string())?;
+        let off = RunConfig::from_toml(&off_toml).map_err(|e| e.to_string())?;
+        ensure(absent.scheduler.vector.is_none(), "no [vector] section parses to None")?;
+        ensure(off.scheduler.vector.is_none(), "enabled = false parses to None")?;
+
+        let pool = models::by_spec("NCF,MelodyLSTM").map_err(|e| e.to_string())?;
+        let ma = DynamicScheduler::new(absent.scheduler.clone()).run(&pool);
+        let mb = DynamicScheduler::new(off.scheduler.clone()).run(&pool);
+        ensure_eq(ma.makespan, mb.makespan, "makespan")?;
+        ensure_eq(&ma.dispatches, &mb.dispatches, "dispatch log")?;
+        ensure_eq(ma.vector_dispatches, 0, "no lane dispatches with lanes off")?;
+        ensure(
+            ma.dispatches.iter().all(|d| d.lanes.is_none()),
+            "no record carries a lane span with lanes off",
+        )?;
+
+        // JSON surface: one sweep point under each parse, byte-identical,
+        // and free of vector/lane keys.
+        let grid = SweepGrid {
+            mixes: vec!["NCF".to_string()],
+            rates: vec![0.0],
+            policies: vec![AllocPolicy::WidestToHeaviest],
+            requests: 2,
+            ..SweepGrid::default()
+        };
+        let rows_a = run_sweep(&grid, &absent.scheduler, 1).map_err(|e| e.to_string())?;
+        let rows_b = run_sweep(&grid, &off.scheduler, 1).map_err(|e| e.to_string())?;
+        let json_a = report::sweep_json(&grid, &rows_a).render();
+        let json_b = report::sweep_json(&grid, &rows_b).render();
+        ensure_eq(&json_a, &json_b, "sweep JSON bytes")?;
+        ensure(!json_a.contains("vector"), "sweep JSON has no vector key")?;
+        ensure(!json_a.contains("lanes"), "sweep JSON has no lanes key")?;
+        Ok(())
+    });
+}
